@@ -1,0 +1,50 @@
+//! Case study 1 (paper §V-A): **algorithm exploration** — should a tensor
+//! contraction run natively or be rewritten to GEMM via TTGT?
+//!
+//! Regenerates Fig. 8 (EDP for the three TCCG contractions at two tensor
+//! dimension sizes on the cloud accelerator) and Fig. 9 (the optimal
+//! Union mappings for intensli2 at TDS=16, native vs GEMM).
+//!
+//! Run: `cargo run --release --example algorithm_exploration`
+
+use union::experiments::{fig8_algorithm_exploration, fig9_mappings, Effort};
+use union::report::bar_chart;
+
+fn main() {
+    let effort = if std::env::args().any(|a| a == "--thorough") {
+        Effort::Thorough
+    } else {
+        Effort::Fast
+    };
+
+    let (table, points) = fig8_algorithm_exploration(effort);
+    print!("{}", table.render());
+
+    // the paper's observation: TTGT must win every TDS=16 case because
+    // native under-utilizes the 32x64 array when all extents are 16
+    let labels: Vec<String> = points
+        .iter()
+        .flat_map(|p| {
+            [
+                format!("{}/{} native", p.problem, p.tds),
+                format!("{}/{} TTGT", p.problem, p.tds),
+            ]
+        })
+        .collect();
+    let values: Vec<f64> = points
+        .iter()
+        .flat_map(|p| [p.native_edp, p.ttgt_edp])
+        .collect();
+    println!("\n{}", bar_chart("Fig 8: EDP (log scale)", &labels, &values, 48));
+
+    let small_tds_ttgt_wins = points
+        .iter()
+        .filter(|p| p.tds == 16)
+        .all(|p| p.ttgt_edp < p.native_edp);
+    println!(
+        "TTGT wins all TDS=16 cases (paper's observation): {}",
+        if small_tds_ttgt_wins { "YES" } else { "NO" }
+    );
+
+    println!("\n{}", fig9_mappings(effort));
+}

@@ -1,0 +1,60 @@
+//! Quickstart: evaluate a GEMM on the Table V edge accelerator with two
+//! different mappers × two different cost models — the plug-and-play
+//! interoperability that is Union's core claim.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use union::prelude::*;
+
+fn main() {
+    // 1. a workload, as the frontend would produce it
+    let workload = Workload::gemm("quickstart_gemm", 256, 256, 256);
+    let problem = workload.problem();
+    println!("{problem}");
+
+    // 2. a logical architecture (Table V edge: 256 PEs, 16x16)
+    let arch = presets::edge();
+    println!("{arch}");
+
+    // 3. the map space (no constraint file: fully-flexible accelerator)
+    let constraints = Constraints::default();
+    let space = MapSpace::new(&problem, &arch, &constraints);
+    println!("tiling space ≈ {:.2e} candidates\n", space.tiling_space_size());
+
+    // 4. any mapper × any cost model
+    let analytical = AnalyticalModel::new(EnergyTable::default_8bit());
+    let maestro = MaestroModel::new(EnergyTable::default_8bit());
+    let mappers: Vec<(&str, Box<dyn Mapper>)> = vec![
+        ("random", Box::new(RandomMapper::new(2_000, 42))),
+        ("genetic", Box::new(GeneticMapper::new(60, 10, 42))),
+    ];
+    let models: Vec<(&str, &dyn CostModel)> = vec![
+        ("analytical (Timeloop-style)", &analytical),
+        ("maestro    (MAESTRO-style) ", &maestro),
+    ];
+    for (mname, mapper) in &mappers {
+        for (cname, model) in &models {
+            let best = mapper
+                .search(&space, *model)
+                .expect("search found no legal mapping");
+            println!(
+                "mapper={mname:<8} cost={cname}  best EDP = {:.3e} J·s  \
+                 (util {:>5.1}%, {} mappings evaluated)",
+                best.score,
+                best.cost.utilization * 100.0,
+                best.evaluated
+            );
+        }
+    }
+
+    // 5. inspect the winner in the paper's loop-nest form
+    let best = RandomMapper::new(2_000, 42)
+        .search(&space, &analytical)
+        .unwrap();
+    println!(
+        "\nbest mapping ({} partitioned, {} PEs):\n{}",
+        best.mapping.partition_name(&problem),
+        best.mapping.pes_used(),
+        union::mapping::render_loop_nest(&best.mapping, &problem, &arch)
+    );
+}

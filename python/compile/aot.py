@@ -1,0 +1,78 @@
+"""AOT compilation: lower the L2 JAX models (and the L1 Pallas kernel
+inside them) to **HLO text** artifacts for the Rust runtime.
+
+HLO *text* — not ``lowered.compile().serialize()`` — is the interchange
+format: jax ≥ 0.5 emits HloModuleProto instruction ids above INT_MAX,
+which the xla_extension 0.5.1 behind the published ``xla`` crate rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and DESIGN.md).
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# name -> (fn, example arg specs); shapes chosen to exercise the paper's
+# workload classes at laptop scale and match rust/src/runtime validation
+ARTIFACTS = {
+    "gemm_128": (model.gemm_model, (spec(128, 128), spec(128, 128))),
+    "gemm_512x64x1024": (model.gemm_model, (spec(512, 1024), spec(1024, 64))),
+    "conv2d_direct": (model.conv2d_direct, (spec(2, 16, 16, 8), spec(16, 3, 3, 8))),
+    "conv2d_im2col": (model.conv2d_im2col, (spec(2, 16, 16, 8), spec(16, 3, 3, 8))),
+    "tc_intensli2_native": (
+        model.tc_intensli2_native,
+        (spec(16, 16, 16, 16), spec(16, 16)),
+    ),
+    "tc_intensli2_ttgt": (
+        model.tc_intensli2_ttgt,
+        (spec(16, 16, 16, 16), spec(16, 16)),
+    ),
+}
+
+
+def build(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, (fn, args) in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    ns = ap.parse_args()
+    build(ns.out, ns.only)
+
+
+if __name__ == "__main__":
+    main()

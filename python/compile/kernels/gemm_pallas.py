@@ -1,0 +1,90 @@
+"""Layer-1: the tiled GEMM Pallas kernel.
+
+This is the compute hot-spot of every workload Union evaluates (GEMM
+directly; CONV2D via im2col; tensor contractions via TTGT). The tiling
+mirrors a two-level Union mapping:
+
+* the Pallas **grid** `(M/bm, N/bn)` is the mapping's `spatial_for` pair —
+  each grid point is one logical cluster producing an output tile;
+* the **BlockSpec** block shapes `(bm, K)` / `(K, bn)` are the cluster's
+  `temporal_tile_sizes` — the VMEM-resident working set;
+* the kernel body is output-stationary: the `(bm, bn)` accumulator stays
+  in registers/VMEM while K streams through, exactly the `K`-innermost
+  temporal order the cost model rewards for GEMM.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): block shapes are
+chosen to keep the working set well under VMEM (bm=bn=128 at f32 needs
+(128·K + K·128 + 128·128)·4B ≈ 192 KiB at K=128) and to feed the 128×128
+MXU with full tiles. `interpret=True` is mandatory on CPU — real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute —
+so we optimize structure, not interpret-mode wall-clock.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of ``n`` that is ≤ ``target``.
+
+    Keeps the grid exact for the odd shapes hypothesis throws at the
+    kernel while defaulting to MXU-native 128 tiles for aligned shapes.
+    """
+    if n <= target:
+        return n
+    best = 1
+    for d in range(1, target + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _gemm_kernel(x_ref, y_ref, o_ref):
+    """Output-stationary tile kernel: o = x @ y for one (bm, bn) tile."""
+    acc = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def gemm(a: jax.Array, b: jax.Array, *, bm: int = 0, bn: int = 0) -> jax.Array:
+    """Tiled Pallas GEMM: ``a[M,K] @ b[K,N] -> [M,N]``.
+
+    ``bm``/``bn`` override the tile sizes (0 = auto via ``pick_block``).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    assert m % bm == 0 and n % bn == 0, "blocks must divide the problem"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int = 0, bn: int = 0,
+               dtype_bytes: int = 4) -> int:
+    """Estimated per-grid-point VMEM working set of :func:`gemm`.
+
+    Used by DESIGN.md / EXPERIMENTS.md §Perf to check the block shapes
+    against the 16 MiB VMEM budget of a TPU core.
+    """
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    return dtype_bytes * (bm * k + k * bn + bm * bn)

@@ -1,0 +1,36 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the L2 models.
+
+Everything here is deliberately written with plain ``jnp`` primitives
+(``@``, ``einsum``, explicit padding arithmetic) so the kernels and model
+graphs are checked against an independent implementation.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def ref_gemm(a, b):
+    """Oracle for the Pallas GEMM: plain jnp matmul in f32."""
+    return jnp.matmul(
+        a.astype(jnp.float32), b.astype(jnp.float32)
+    ).astype(a.dtype)
+
+
+def ref_conv2d(x, w, stride: int = 1):
+    """Oracle CONV2D: NHWC input, KRSC weight, valid padding.
+
+    Uses lax.conv_general_dilated with explicit dimension numbers — an
+    implementation path fully independent of the im2col+GEMM model.
+    """
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "OHWI", "NHWC"),
+    )
+
+
+def ref_tc_intensli2(a, b):
+    """Oracle for the intensli2 contraction: C[a,b,c,d] = A[d,b,e,a]·B[e,c]."""
+    return jnp.einsum("dbea,ec->abcd", a, b)

@@ -1,0 +1,75 @@
+"""Layer-2: the JAX compute graphs Union's runtime executes.
+
+Each function here is a jit-able graph that calls the Layer-1 Pallas GEMM
+kernel (``kernels.gemm_pallas.gemm``) as its compute hot-spot, realizing
+the frontend's algorithm choices:
+
+* :func:`gemm_model`       — GEMM directly on the kernel;
+* :func:`conv2d_direct`    — reference convolution (lax path);
+* :func:`conv2d_im2col`    — CONV2D rewritten to GEMM (im2col, §II-A);
+* :func:`tc_intensli2_native` — the TCCG intensli2 contraction natively;
+* :func:`tc_intensli2_ttgt`   — the same contraction via the COMET TTGT
+  rewrite: transpose → reshape → (Pallas) GEMM → reshape → transpose.
+
+All are AOT-lowered to HLO text by ``compile.aot`` — Python never runs at
+request time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gemm_pallas import gemm
+from .kernels.ref import ref_conv2d
+
+
+def gemm_model(a, b):
+    """GEMM on the Pallas kernel. Returns a 1-tuple (AOT convention)."""
+    return (gemm(a, b),)
+
+
+def conv2d_direct(x, w, stride: int = 1):
+    """Direct CONV2D (NHWC · KRSC), the non-rewritten algorithm."""
+    return (ref_conv2d(x, w, stride),)
+
+
+def conv2d_im2col(x, w, stride: int = 1):
+    """CONV2D as im2col + Pallas GEMM: M = N·X·Y, N = K, K = C·R·S.
+
+    Patch extraction is unrolled over (r, s) at trace time; the heavy
+    compute lands in the Pallas kernel.
+    """
+    n, h, wd, c = x.shape
+    k, r, s, c2 = w.shape
+    assert c == c2, "channel mismatch"
+    x_out = (h - r) // stride + 1
+    y_out = (wd - s) // stride + 1
+    patches = []
+    for dr in range(r):
+        for ds in range(s):
+            sl = x[:, dr : dr + stride * x_out : stride, ds : ds + stride * y_out : stride, :]
+            patches.append(sl)  # [N, X, Y, C]
+    # [N, X, Y, R*S, C] -> [N*X*Y, R*S*C]
+    pat = jnp.stack(patches, axis=3).reshape(n * x_out * y_out, r * s * c)
+    # weight [K, R, S, C] -> [R*S*C, K]
+    wmat = w.reshape(k, r * s * c).T
+    out = gemm(pat, wmat)  # [N*X*Y, K]
+    return (out.reshape(n, x_out, y_out, k),)
+
+
+def tc_intensli2_native(a, b):
+    """intensli2 natively: C[a,b,c,d] = A[d,b,e,a] × B[e,c]."""
+    return (jnp.einsum("dbea,ec->abcd", a, b),)
+
+
+def tc_intensli2_ttgt(a, b):
+    """intensli2 via TTGT (§II-A): flatten to matrices, Pallas GEMM, fold
+    back. free_A = (a,b,d), free_B = (c), contracted = (e) — the Table III
+    GEMM is (M, N, K) = (TDS³, TDS, TDS)."""
+    d, b_, e, a_ = a.shape
+    e2, c = b.shape
+    assert e == e2
+    # A[d,b,e,a] -> [a, b, d, e] -> [(a·b·d), e]
+    a_mat = jnp.transpose(a, (3, 1, 0, 2)).reshape(a_ * b_ * d, e)
+    # B[e,c] is already [e, c]
+    out = gemm(a_mat, b)  # [(a,b,d), c]
+    # -> [a, b, d, c] -> [a, b, c, d]
+    return (jnp.transpose(out.reshape(a_, b_, d, c), (0, 1, 3, 2)),)

@@ -1,0 +1,38 @@
+"""AOT path: every registered artifact lowers to parseable HLO text with
+the expected entry signature, without touching the filesystem beyond tmp.
+"""
+
+import jax
+import pytest
+
+from compile import aot
+
+
+@pytest.mark.parametrize("name", sorted(aot.ARTIFACTS))
+def test_artifact_lowers_to_hlo_text(name):
+    fn, args = aot.ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*args)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    assert "ENTRY" in text
+    # return_tuple=True: the root is a tuple
+    assert "tuple" in text
+
+
+def test_build_writes_files(tmp_path):
+    aot.build(str(tmp_path), only=["gemm_128"])
+    out = tmp_path / "gemm_128.hlo.txt"
+    assert out.exists()
+    assert out.read_text().startswith("HloModule")
+
+
+def test_artifact_registry_covers_runtime_contract():
+    # rust/src/runtime/validate_artifacts expects exactly these names
+    needed = {
+        "gemm_128",
+        "conv2d_direct",
+        "conv2d_im2col",
+        "tc_intensli2_native",
+        "tc_intensli2_ttgt",
+    }
+    assert needed.issubset(set(aot.ARTIFACTS))

@@ -1,0 +1,105 @@
+"""L1 correctness: the Pallas GEMM kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes; fixed cases pin the MXU-aligned
+configurations the artifacts use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gemm_pallas import gemm, pick_block, vmem_bytes
+from compile.kernels.ref import ref_gemm
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(-1, 1, size=shape), dtype=dtype)
+
+
+@pytest.mark.parametrize("m,n,k", [(128, 128, 128), (64, 32, 16), (8, 8, 8), (1, 1, 1)])
+def test_gemm_matches_ref_fixed(m, n, k):
+    a = rand((m, k), jnp.float32, 0)
+    b = rand((k, n), jnp.float32, 1)
+    np.testing.assert_allclose(gemm(a, b), ref_gemm(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=96),
+    k=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gemm_matches_ref_hypothesis(m, n, k, seed):
+    a = rand((m, k), jnp.float32, seed % 1000)
+    b = rand((k, n), jnp.float32, (seed + 1) % 1000)
+    np.testing.assert_allclose(gemm(a, b), ref_gemm(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32, 64]),
+    n=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([8, 16]),
+)
+def test_gemm_bf16_inputs(m, n, k):
+    a = rand((m, k), jnp.bfloat16, 7)
+    b = rand((k, n), jnp.bfloat16, 8)
+    out = gemm(a, b)
+    assert out.dtype == jnp.bfloat16
+    ref = ref_gemm(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32),
+        np.asarray(ref, dtype=np.float32),
+        rtol=5e-2,
+        atol=5e-2,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=1024),
+    bm=st.integers(min_value=2, max_value=48),
+)
+def test_explicit_blocks(m, bm):
+    # any divisor pair is a legal tiling
+    if m % bm != 0:
+        bm = pick_block(m, bm)
+    a = rand((m, 8), jnp.float32, 3)
+    b = rand((8, 16), jnp.float32, 4)
+    np.testing.assert_allclose(
+        gemm(a, b, bm=bm, bn=16), ref_gemm(a, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(n=st.integers(min_value=1, max_value=4096), t=st.integers(min_value=1, max_value=256))
+@settings(max_examples=100, deadline=None)
+def test_pick_block_invariants(n, t):
+    b = pick_block(n, t)
+    assert 1 <= b <= max(t, n if n <= t else t)
+    assert n % b == 0
+    assert b <= t or n <= t
+
+
+def test_pick_block_prefers_mxu_tiles():
+    assert pick_block(1024) == 128
+    assert pick_block(4096) == 128
+    assert pick_block(96) == 96
+    assert pick_block(100, 64) == 50
+
+
+def test_vmem_budget_for_shipped_blocks():
+    # DESIGN.md §Perf: all shipped artifact shapes stay far below 16 MiB
+    assert vmem_bytes(128, 128, 128) < 16 * 2**20
+    assert vmem_bytes(512, 64, 1024) < 16 * 2**20
+    assert vmem_bytes(4096, 16, 16) < 16 * 2**20
+
+
+def test_gemm_is_jittable_and_stable():
+    a = rand((32, 16), jnp.float32, 5)
+    b = rand((16, 24), jnp.float32, 6)
+    f = jax.jit(lambda x, y: gemm(x, y))
+    np.testing.assert_allclose(f(a, b), gemm(a, b), rtol=0, atol=0)

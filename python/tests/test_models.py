@@ -1,0 +1,101 @@
+"""L2 correctness: the algorithm-rewrite model graphs agree numerically —
+the property Union's frontend relies on when choosing algorithms (§V-A).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import ref_conv2d, ref_tc_intensli2
+
+
+def rand(shape, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.uniform(-1, 1, size=shape), dtype=jnp.float32)
+
+
+class TestConv2d:
+    @pytest.mark.parametrize(
+        "n,h,w,c,k,r,stride",
+        [
+            (2, 16, 16, 8, 16, 3, 1),
+            (1, 8, 8, 4, 8, 1, 1),
+            (1, 9, 9, 2, 4, 3, 2),
+        ],
+    )
+    def test_im2col_equals_direct(self, n, h, w, c, k, r, stride):
+        x = rand((n, h, w, c), 0)
+        wt = rand((k, r, r, c), 1)
+        (direct,) = model.conv2d_direct(x, wt, stride)
+        (im2col,) = model.conv2d_im2col(x, wt, stride)
+        assert direct.shape == im2col.shape
+        np.testing.assert_allclose(direct, im2col, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 3),
+        hw=st.integers(4, 12),
+        c=st.sampled_from([1, 2, 4]),
+        k=st.sampled_from([2, 4, 8]),
+        r=st.sampled_from([1, 2, 3]),
+        stride=st.sampled_from([1, 2]),
+    )
+    def test_im2col_hypothesis(self, n, hw, c, k, r, stride):
+        if hw < r:
+            return
+        x = rand((n, hw, hw, c), 2)
+        wt = rand((k, r, r, c), 3)
+        (direct,) = model.conv2d_direct(x, wt, stride)
+        (im2col,) = model.conv2d_im2col(x, wt, stride)
+        np.testing.assert_allclose(direct, im2col, rtol=1e-4, atol=1e-4)
+
+    def test_output_shape_matches_algorithm1(self):
+        # X = (H - R)/stride + 1
+        x = rand((1, 16, 16, 2), 4)
+        wt = rand((4, 3, 3, 2), 5)
+        (out,) = model.conv2d_im2col(x, wt, 1)
+        assert out.shape == (1, 14, 14, 4)
+
+
+class TestTensorContraction:
+    @pytest.mark.parametrize("tds", [4, 8, 16])
+    def test_ttgt_equals_native(self, tds):
+        a = rand((tds, tds, tds, tds), 0)
+        b = rand((tds, tds), 1)
+        (native,) = model.tc_intensli2_native(a, b)
+        (ttgt,) = model.tc_intensli2_ttgt(a, b)
+        assert native.shape == ttgt.shape == (tds, tds, tds, tds)
+        np.testing.assert_allclose(native, ttgt, rtol=1e-4, atol=1e-4)
+
+    def test_native_matches_oracle(self):
+        a = rand((8, 8, 8, 8), 2)
+        b = rand((8, 8), 3)
+        (native,) = model.tc_intensli2_native(a, b)
+        np.testing.assert_allclose(native, ref_tc_intensli2(a, b), rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(tds=st.sampled_from([2, 4, 6, 8]), seed=st.integers(0, 100))
+    def test_ttgt_hypothesis(self, tds, seed):
+        a = rand((tds, tds, tds, tds), seed)
+        b = rand((tds, tds), seed + 1)
+        (native,) = model.tc_intensli2_native(a, b)
+        (ttgt,) = model.tc_intensli2_ttgt(a, b)
+        np.testing.assert_allclose(native, ttgt, rtol=1e-4, atol=1e-4)
+
+
+class TestGemmModel:
+    def test_gemm_model_tuple_convention(self):
+        a = rand((16, 8), 0)
+        b = rand((8, 4), 1)
+        out = model.gemm_model(a, b)
+        assert isinstance(out, tuple) and len(out) == 1
+        np.testing.assert_allclose(out[0], a @ b, rtol=1e-5, atol=1e-5)
+
+    def test_conv_oracle_sanity(self):
+        # all-ones conv: each output = R*S*C
+        x = jnp.ones((1, 5, 5, 3))
+        w = jnp.ones((2, 3, 3, 3))
+        out = ref_conv2d(x, w)
+        np.testing.assert_allclose(out, np.full((1, 3, 3, 2), 27.0), rtol=1e-6)

@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Fig. 3 — normalized energy/latency/EDP across
+//! mappings of a DLRM layer on a 16×16 PE array — and time the driver.
+
+use union::experiments::{fig3_mapping_sweep, Effort};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(1, 5);
+    let (table, raw) = b.bench("fig03_mapping_sweep(fast)", || fig3_mapping_sweep(Effort::Fast));
+    print!("{}", table.render());
+    let edps: Vec<f64> = raw.iter().map(|r| r.2).collect();
+    let spread = edps.iter().copied().fold(f64::MIN, f64::max)
+        / edps.iter().copied().fold(f64::MAX, f64::min);
+    println!("EDP spread: {spread:.1}x across {} mappings", raw.len());
+    assert!(spread > 2.0, "paper shape: mappings must differ widely in EDP");
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate paper Fig. 8 (TC native vs TTGT EDP on the cloud
+//! accelerator) and Fig. 9 (optimal intensli2 mappings), timing the
+//! drivers.
+
+use union::experiments::{fig8_algorithm_exploration, fig9_mappings, Effort};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(1, 5);
+    let (table, points) =
+        b.bench("fig08_algorithm_exploration(fast)", || fig8_algorithm_exploration(Effort::Fast));
+    print!("{}", table.render());
+
+    // paper shape: TTGT wins every TDS=16 case
+    for p in points.iter().filter(|p| p.tds == 16) {
+        assert!(
+            p.ttgt_edp < p.native_edp,
+            "paper shape violated: {} TDS=16 native {:.3e} <= ttgt {:.3e}",
+            p.problem,
+            p.native_edp,
+            p.ttgt_edp
+        );
+    }
+    println!("shape check: TTGT wins all TDS=16 cases ✓");
+
+    let fig9 = b.bench("fig09_mappings(fast)", || fig9_mappings(Effort::Fast));
+    println!("{fig9}");
+}

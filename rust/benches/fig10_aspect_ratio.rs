@@ -1,0 +1,36 @@
+//! Bench: regenerate paper Fig. 10 — EDP vs flexible-accelerator aspect
+//! ratio for the Table IV DNN workloads (MAESTRO-style cost model).
+
+use union::experiments::{fig10_aspect_ratio, Effort};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(1, 3);
+    let (edge, cloud, series) =
+        b.bench("fig10_aspect_ratio(fast)", || fig10_aspect_ratio(Effort::Fast));
+    print!("{}", edge.render());
+    println!();
+    print!("{}", cloud.render());
+
+    // paper shape: the balanced ratio is best-or-tied for most cases
+    let mut ok = 0;
+    for (name, points) in &series {
+        let balanced = if name.starts_with("edge") { "16x16" } else { "32x64" };
+        let v = points
+            .iter()
+            .find(|(l, _)| l == balanced)
+            .map(|(_, v)| *v)
+            .unwrap_or(f64::INFINITY);
+        if v <= 1.25 {
+            ok += 1;
+        }
+    }
+    println!(
+        "shape check: balanced ratio within 25% of best for {ok}/{} cases",
+        series.len()
+    );
+    assert!(
+        ok * 2 > series.len(),
+        "paper shape: balanced aspect ratio should win or tie for most workloads"
+    );
+}

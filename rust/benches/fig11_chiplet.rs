@@ -1,0 +1,36 @@
+//! Bench: regenerate paper Fig. 11 — EDP vs per-chiplet fill bandwidth on
+//! the 16-chiplet (4096-PE) Simba-like package.
+
+use union::experiments::{fig11_chiplet_bandwidth, Effort, FIG11_FILL_BW};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(1, 3);
+    let (table, series) =
+        b.bench("fig11_chiplet_bandwidth(fast)", || fig11_chiplet_bandwidth(Effort::Fast));
+    print!("{}", table.render());
+
+    // paper shape: EDP falls (weakly) with bandwidth, then saturates
+    for (name, points) in &series {
+        let first = points.first().unwrap().1;
+        let last = points.last().unwrap().1;
+        assert!(
+            last <= first * 1.05,
+            "{name}: EDP should not increase with fill bandwidth ({first:.2} -> {last:.2})"
+        );
+    }
+    // and saturation exists: the last two bandwidth steps differ by <10%
+    let saturated = series
+        .iter()
+        .filter(|(_, pts)| {
+            let n = pts.len();
+            pts[n - 1].1 >= pts[n - 2].1 * 0.90
+        })
+        .count();
+    println!(
+        "shape check: EDP monotone-nonincreasing for all; saturated at 32 GB/s for \
+         {saturated}/{} workloads (bw sweep: {FIG11_FILL_BW:?})",
+        series.len()
+    );
+    assert!(saturated * 2 > series.len());
+}

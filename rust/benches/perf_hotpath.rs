@@ -1,0 +1,105 @@
+//! Perf bench: the L3 hot paths — cost-model evaluation throughput,
+//! map-space sampling, legality checking, full search, and (if artifacts
+//! are built) PJRT artifact execution. The EXPERIMENTS.md §Perf numbers
+//! come from this target.
+
+use union::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use union::frontend;
+use union::mappers::{Mapper, RandomMapper};
+use union::mapspace::{Constraints, MapSpace};
+use union::util::bench::Bencher;
+use union::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::with_iters(2, 10);
+
+    // --- cost model evaluation throughput (the innermost search loop) ---
+    let problem = frontend::dlrm_layers().remove(0).problem();
+    let arch = union::arch::presets::edge();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&problem, &arch, &cons);
+    let mut rng = Rng::new(1);
+    let mappings: Vec<_> = (0..256)
+        .filter_map(|_| space.sample_legal(&mut rng, 100))
+        .collect();
+    assert!(mappings.len() >= 100, "need a mapping corpus");
+    let analytical = AnalyticalModel::new(EnergyTable::default_8bit());
+    let maestro = MaestroModel::new(EnergyTable::default_8bit());
+
+    b.bench_throughput("analytical_evaluate (gemm, 4-level)", mappings.len() as u64, || {
+        mappings
+            .iter()
+            .map(|m| analytical.evaluate(&problem, &arch, m).unwrap().cycles)
+            .sum::<f64>()
+    });
+    b.bench_throughput("analytical_prechecked (gemm, 4-level)", mappings.len() as u64, || {
+        mappings
+            .iter()
+            .map(|m| analytical.evaluate_prechecked(&problem, &arch, m).unwrap().cycles)
+            .sum::<f64>()
+    });
+    b.bench_throughput("maestro_evaluate (gemm, 3-real-level)", mappings.len() as u64, || {
+        mappings
+            .iter()
+            .map(|m| maestro.evaluate(&problem, &arch, m).unwrap().cycles)
+            .sum::<f64>()
+    });
+
+    // conv (7 dims) stresses the tile analysis harder
+    let conv = frontend::resnet50_layers().remove(1).problem();
+    let conv_space = MapSpace::new(&conv, &arch, &cons);
+    let mut rng2 = Rng::new(2);
+    let conv_maps: Vec<_> = (0..128)
+        .filter_map(|_| conv_space.sample_legal(&mut rng2, 200))
+        .collect();
+    if !conv_maps.is_empty() {
+        b.bench_throughput("analytical_evaluate (conv2d, 7 dims)", conv_maps.len() as u64, || {
+            conv_maps
+                .iter()
+                .map(|m| analytical.evaluate(&conv, &arch, m).unwrap().cycles)
+                .sum::<f64>()
+        });
+    }
+
+    // --- sampling + legality ---
+    b.bench_throughput("mapspace_sample (gemm)", 1_000, || {
+        let mut r = Rng::new(3);
+        (0..1_000).map(|_| space.sample(&mut r).pes_used()).sum::<u64>()
+    });
+    b.bench_throughput("mapping_check (legality rules)", mappings.len() as u64, || {
+        mappings
+            .iter()
+            .filter(|m| m.check(&problem, &arch).is_ok())
+            .count()
+    });
+
+    // --- end-to-end search (parallel evaluate_batch inside) ---
+    b.bench("random_search_2000 (gemm, parallel)", || {
+        RandomMapper::new(2_000, 42)
+            .search(&space, &analytical)
+            .unwrap()
+            .score
+    });
+
+    // --- frontend lowering pipeline ---
+    b.bench_throughput("lower_tosa_to_affine (conv2d)", 1, || {
+        frontend::resnet50_layers().remove(1).lower(false).ops.len()
+    });
+
+    // --- PJRT artifact execution (requires `make artifacts`) ---
+    if union::runtime::artifacts_available() {
+        let rt = union::runtime::Runtime::cpu().expect("pjrt");
+        let dir = union::runtime::artifacts_dir();
+        let gemm = rt.load_artifact(&dir, "gemm_128").expect("artifact");
+        let a = union::runtime::random_tensor(128 * 128, 1);
+        let bb = union::runtime::random_tensor(128 * 128, 2);
+        let flops = 2u64 * 128 * 128 * 128;
+        b.bench_throughput("pjrt_gemm_128 (pallas artifact)", flops, || {
+            gemm.run_f32(&[(&a, &[128, 128]), (&bb, &[128, 128])])
+                .unwrap()
+                .output[0]
+        });
+    } else {
+        println!("(artifacts not built; skipping PJRT benches — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate paper Table III (TC problems + TTGT GEMM dims) and
+//! time the frontend transform pipeline (equation parse → plan).
+
+use union::frontend::{tc_workloads, ttgt_gemm};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(2, 10);
+    let table = b.bench("table3_ttgt_dims", union::experiments::table3_ttgt_dims);
+    print!("{}", table.render());
+
+    // exact values from the paper
+    let expect = [
+        ("intensli2", 16, (4096u64, 16u64, 16u64)),
+        ("intensli2", 64, (262144, 64, 64)),
+        ("ccsd7", 16, (256, 16, 256)),
+        ("ccsd7", 64, (4096, 64, 4096)),
+        ("ccsd-t4", 16, (4096, 4096, 16)),
+        ("ccsd-t4", 32, (32768, 32768, 32)),
+    ];
+    let all = tc_workloads();
+    for (name, tds, dims) in expect {
+        let (_, _, w) = all
+            .iter()
+            .find(|(s, t, _)| s.name == name && *t == tds)
+            .expect("workload present");
+        let plan = ttgt_gemm(w).unwrap();
+        assert_eq!((plan.m, plan.n, plan.k), dims, "{name} TDS={tds}");
+    }
+    println!("Table III exact-match check ✓ (6/6 rows)");
+
+    // throughput of the transform itself (frontend hot path)
+    b.bench_throughput("ttgt_transform_throughput", 6, || {
+        tc_workloads()
+            .iter()
+            .map(|(_, _, w)| ttgt_gemm(w).unwrap().m)
+            .sum::<u64>()
+    });
+}

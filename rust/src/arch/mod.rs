@@ -1,0 +1,273 @@
+//! **Second Union abstraction** (paper §IV-C): describing a *logical
+//! cluster-target* spatial architecture.
+//!
+//! An [`Arch`] is an ordered hierarchy of [`ClusterLevel`]s from the
+//! outermost cluster `C_n` (whose local memory is DRAM) down to the
+//! innermost `C_1` (a PE: L1 buffer + MAC unit). Each level declares how
+//! many sub-clusters of the next level it contains, which physical axis
+//! they are laid along (the `Dimension` attribute), and whether the level
+//! has a dedicated physical memory or is `Virtual` — a purely logical
+//! tiling level that is always bypassed (paper Fig. 5(b)/(c)).
+
+mod parse;
+pub mod presets;
+
+pub use parse::{arch_from_config, arch_from_str};
+
+/// Physical axis along which a level's sub-clusters are laid out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    X,
+    Y,
+    /// No physical extent (e.g. the singleton top level).
+    None,
+}
+
+impl Axis {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Axis::X => "X",
+            Axis::Y => "Y",
+            Axis::None => "-",
+        }
+    }
+}
+
+/// A memory at a cluster level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Memory {
+    /// Display name ("DRAM", "L2", "L1", "V2"...).
+    pub name: String,
+    /// Capacity in bytes; `u64::MAX` for DRAM (unbounded).
+    pub size_bytes: u64,
+    /// Read/fill bandwidth into this level, bytes per cycle **per
+    /// instance** of the level. This is the knob the Fig. 11 chiplet
+    /// study sweeps (fill bandwidth of each chiplet's global buffer).
+    pub fill_bw: f64,
+    /// Per-access energy override in pJ per word; `None` selects the
+    /// energy-table default for the level kind.
+    pub energy_pj: Option<f64>,
+}
+
+/// One level of the cluster hierarchy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterLevel {
+    /// Conventional name: `C4`, `C3`, ... outermost first.
+    pub name: String,
+    /// Local memory; `None` for a *virtual* cluster level (the paper's
+    /// `Virtual = True` — e.g. `V2` in Fig. 5(c)), which provides an
+    /// intermediate tiling point but stages no data.
+    pub memory: Option<Memory>,
+    /// Number of sub-cluster instances of the next-inner level.
+    pub sub_clusters: u64,
+    /// Physical axis the sub-clusters are laid along.
+    pub axis: Axis,
+    /// Whether the link from the parent level crosses a package boundary
+    /// (chiplet architectures, §V-C); affects link energy.
+    pub cross_package: bool,
+}
+
+impl ClusterLevel {
+    pub fn is_virtual(&self) -> bool {
+        self.memory.is_none()
+    }
+}
+
+/// A complete logical architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arch {
+    pub name: String,
+    /// Levels ordered outermost (`C_n`, DRAM) → innermost (`C_1`, PE).
+    pub levels: Vec<ClusterLevel>,
+    /// Clock frequency in GHz (paper §V uses 1 GHz).
+    pub clock_ghz: f64,
+    /// Word size in bytes (paper §V uses 8-bit / uint8).
+    pub word_bytes: u64,
+    /// NoC bandwidth in bytes/cycle available for distributing data from a
+    /// level to its sub-clusters (Table V "NoC Bandwidth").
+    pub noc_bw: f64,
+}
+
+impl Arch {
+    /// Number of cluster levels.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Total PE (MAC unit) count = product of sub-cluster counts.
+    pub fn num_pes(&self) -> u64 {
+        self.levels.iter().map(|l| l.sub_clusters).product()
+    }
+
+    /// Number of instances of level `i` in the whole machine (product of
+    /// sub-cluster counts of all *outer* levels). Level 0 is outermost and
+    /// always a singleton.
+    pub fn instances(&self, i: usize) -> u64 {
+        self.levels[..i].iter().map(|l| l.sub_clusters).product()
+    }
+
+    /// The physical (X, Y) extent of the PE array implied by the axis
+    /// attributes — e.g. Fig. 5(c)'s 2×(Y) by 4×(X) array reports (4, 2).
+    pub fn pe_array_shape(&self) -> (u64, u64) {
+        let mut x = 1u64;
+        let mut y = 1u64;
+        for l in &self.levels {
+            match l.axis {
+                Axis::X => x *= l.sub_clusters,
+                Axis::Y => y *= l.sub_clusters,
+                Axis::None => {}
+            }
+        }
+        (x, y)
+    }
+
+    /// Innermost (PE) level index.
+    pub fn pe_level(&self) -> usize {
+        self.levels.len() - 1
+    }
+
+    /// Validate structural invariants.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.len() < 2 {
+            return Err("architecture needs at least two cluster levels".into());
+        }
+        if self.levels[0].is_virtual() {
+            return Err("outermost level must have a memory (DRAM)".into());
+        }
+        if self.levels.last().unwrap().is_virtual() {
+            return Err("innermost (PE) level must have a memory (L1)".into());
+        }
+        if self.levels.last().unwrap().sub_clusters != 1 {
+            return Err("innermost level must have sub_clusters = 1 (the MAC unit)".into());
+        }
+        for l in &self.levels {
+            if l.sub_clusters == 0 {
+                return Err(format!("level {} has zero sub-clusters", l.name));
+            }
+            if let Some(m) = &l.memory {
+                if m.size_bytes == 0 {
+                    return Err(format!("memory {} has zero capacity", m.name));
+                }
+                if m.fill_bw <= 0.0 {
+                    return Err(format!("memory {} has non-positive bandwidth", m.name));
+                }
+            }
+        }
+        if self.word_bytes == 0 || self.clock_ghz <= 0.0 {
+            return Err("word size and clock must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "arch {} ({} PEs, {}x{} array, {} GHz)",
+            self.name,
+            self.num_pes(),
+            self.pe_array_shape().0,
+            self.pe_array_shape().1,
+            self.clock_ghz
+        )?;
+        for (i, l) in self.levels.iter().enumerate() {
+            let mem = match &l.memory {
+                Some(m) if m.size_bytes == u64::MAX => format!("{} (unbounded)", m.name),
+                Some(m) => format!("{} ({} B, {} B/cyc)", m.name, m.size_bytes, m.fill_bw),
+                None => "virtual".to_string(),
+            };
+            writeln!(
+                f,
+                "  C{} {:<4} mem={:<28} sub={}x axis={}{}",
+                self.levels.len() - i,
+                l.name,
+                mem,
+                l.sub_clusters,
+                l.axis.name(),
+                if l.cross_package { " [package-crossing]" } else { "" }
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_preset_matches_table_v() {
+        let a = presets::edge();
+        a.validate().unwrap();
+        assert_eq!(a.num_pes(), 256);
+        let (x, y) = a.pe_array_shape();
+        assert_eq!(x * y, 256);
+        // L1 0.5 KB, L2 100 KB
+        let l1 = a.levels.last().unwrap().memory.as_ref().unwrap();
+        assert_eq!(l1.size_bytes, 512);
+        let l2 = a
+            .levels
+            .iter()
+            .find(|l| l.memory.as_ref().map(|m| m.name == "L2").unwrap_or(false))
+            .unwrap();
+        assert_eq!(l2.memory.as_ref().unwrap().size_bytes, 100 * 1024);
+    }
+
+    #[test]
+    fn cloud_preset_matches_table_v() {
+        let a = presets::cloud(32, 64);
+        a.validate().unwrap();
+        assert_eq!(a.num_pes(), 2048);
+        assert_eq!(a.pe_array_shape(), (64, 32));
+        let l2 = a
+            .levels
+            .iter()
+            .find(|l| l.memory.as_ref().map(|m| m.name == "L2").unwrap_or(false))
+            .unwrap();
+        assert_eq!(l2.memory.as_ref().unwrap().size_bytes, 800 * 1024);
+    }
+
+    #[test]
+    fn instances_counts() {
+        let a = presets::cloud(32, 64);
+        // levels: C4 DRAM(1 sub) is index 0 -> instances(0) == 1
+        assert_eq!(a.instances(0), 1);
+        // innermost level instance count == total PEs
+        assert_eq!(a.instances(a.pe_level()), 2048);
+    }
+
+    #[test]
+    fn chiplet_preset_structure() {
+        let a = presets::chiplet16(2.0);
+        a.validate().unwrap();
+        assert_eq!(a.num_pes(), 4096);
+        // exactly one package-crossing level
+        assert_eq!(a.levels.iter().filter(|l| l.cross_package).count(), 1);
+    }
+
+    #[test]
+    fn validation_rejects_bad_archs() {
+        let mut a = presets::edge();
+        a.levels.last_mut().unwrap().memory = None;
+        assert!(a.validate().is_err());
+
+        let mut b = presets::edge();
+        b.levels[0].memory = None;
+        assert!(b.validate().is_err());
+
+        let mut c = presets::edge();
+        c.word_bytes = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn flexible_aspect_ratios_preserve_pe_count() {
+        for (r, c) in [(1u64, 256u64), (2, 128), (4, 64), (8, 32), (16, 16)] {
+            let a = presets::edge_flexible(r, c);
+            a.validate().unwrap();
+            assert_eq!(a.num_pes(), 256, "aspect {r}x{c}");
+            assert_eq!(a.pe_array_shape(), (c, r));
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! Parse an [`Arch`] from a `.uarch` config document (the paper's
+//! "architecture file" input, Fig. 2).
+//!
+//! ```text
+//! name: cloud_32x64
+//! clock_ghz: 1.0
+//! word_bytes: 1
+//! noc_bw: 256
+//! clusters:
+//!   - name: C4
+//!     memory: DRAM
+//!     fill_bw: 256
+//!     sub_clusters: 1
+//!   - name: C3
+//!     memory: L2
+//!     size_kb: 800
+//!     fill_bw: 256
+//!     sub_clusters: 32
+//!     axis: Y
+//!   - name: C2
+//!     virtual: true
+//!     sub_clusters: 64
+//!     axis: X
+//!   - name: C1
+//!     memory: L1
+//!     size_kb: 0.5
+//!     fill_bw: 256
+//!     sub_clusters: 1
+//! ```
+
+use crate::config::{parse, Value};
+
+use super::{Arch, Axis, ClusterLevel, Memory};
+
+/// Parse an architecture from config text.
+pub fn arch_from_str(src: &str) -> Result<Arch, String> {
+    let doc = parse(src).map_err(|e| e.to_string())?;
+    arch_from_config(&doc)
+}
+
+/// Build an architecture from a parsed config document.
+pub fn arch_from_config(doc: &Value) -> Result<Arch, String> {
+    let name = doc.get_str("name").unwrap_or("unnamed").to_string();
+    let clock_ghz = doc.get_f64("clock_ghz").unwrap_or(1.0);
+    let word_bytes = doc.get_int("word_bytes").unwrap_or(1) as u64;
+    let noc_bw = doc.get_f64("noc_bw").unwrap_or(32.0);
+    let clusters = doc
+        .get_list("clusters")
+        .ok_or("missing 'clusters' list")?;
+    if clusters.is_empty() {
+        return Err("'clusters' list is empty".into());
+    }
+    let mut levels = Vec::new();
+    for (i, c) in clusters.iter().enumerate() {
+        let cname = c
+            .get_str("name")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("C{}", clusters.len() - i));
+        let is_virtual = c.get_bool("virtual").unwrap_or(false);
+        let memory = if is_virtual {
+            None
+        } else {
+            let mname = c.get_str("memory").ok_or_else(|| {
+                format!("cluster {cname}: non-virtual level needs 'memory' (or set virtual: true)")
+            })?;
+            let size_bytes = if mname == "DRAM" {
+                u64::MAX
+            } else {
+                let kb = c
+                    .get_f64("size_kb")
+                    .ok_or_else(|| format!("cluster {cname}: memory {mname} needs size_kb"))?;
+                (kb * 1024.0) as u64
+            };
+            Some(Memory {
+                name: mname.to_string(),
+                size_bytes,
+                fill_bw: c.get_f64("fill_bw").unwrap_or(noc_bw),
+                energy_pj: c.get_f64("energy_pj"),
+            })
+        };
+        let axis = match c.get_str("axis") {
+            Some("X") | Some("x") => Axis::X,
+            Some("Y") | Some("y") => Axis::Y,
+            Some(other) => return Err(format!("cluster {cname}: unknown axis '{other}'")),
+            None => Axis::None,
+        };
+        levels.push(ClusterLevel {
+            name: cname,
+            memory,
+            sub_clusters: c.get_int("sub_clusters").unwrap_or(1) as u64,
+            axis,
+            cross_package: c.get_bool("cross_package").unwrap_or(false),
+        });
+    }
+    let arch = Arch {
+        name,
+        levels,
+        clock_ghz,
+        word_bytes,
+        noc_bw,
+    };
+    arch.validate()?;
+    Ok(arch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLOUD: &str = "\
+name: cloud_32x64
+clock_ghz: 1.0
+word_bytes: 1
+noc_bw: 256
+clusters:
+  - name: C4
+    memory: DRAM
+    sub_clusters: 1
+  - name: C3
+    memory: L2
+    size_kb: 800
+    sub_clusters: 32
+    axis: Y
+  - name: C2
+    virtual: true
+    sub_clusters: 64
+    axis: X
+  - name: C1
+    memory: L1
+    size_kb: 0.5
+    sub_clusters: 1
+";
+
+    #[test]
+    fn parse_cloud_equals_preset() {
+        let parsed = arch_from_str(CLOUD).unwrap();
+        let preset = super::super::presets::cloud(32, 64);
+        assert_eq!(parsed.num_pes(), preset.num_pes());
+        assert_eq!(parsed.pe_array_shape(), preset.pe_array_shape());
+        assert_eq!(parsed.levels.len(), preset.levels.len());
+        for (p, q) in parsed.levels.iter().zip(&preset.levels) {
+            assert_eq!(p.is_virtual(), q.is_virtual());
+            assert_eq!(p.sub_clusters, q.sub_clusters);
+            assert_eq!(
+                p.memory.as_ref().map(|m| m.size_bytes),
+                q.memory.as_ref().map(|m| m.size_bytes)
+            );
+        }
+    }
+
+    #[test]
+    fn missing_clusters_is_error() {
+        assert!(arch_from_str("name: x").is_err());
+    }
+
+    #[test]
+    fn non_virtual_without_memory_is_error() {
+        let bad = "\
+clusters:
+  - name: C2
+    memory: DRAM
+    sub_clusters: 1
+  - name: C1
+    sub_clusters: 1
+";
+        let e = arch_from_str(bad).unwrap_err();
+        assert!(e.contains("needs 'memory'"), "{e}");
+    }
+
+    #[test]
+    fn bad_axis_is_error() {
+        let bad = "\
+clusters:
+  - name: C2
+    memory: DRAM
+    sub_clusters: 1
+    axis: Z
+  - name: C1
+    memory: L1
+    size_kb: 1
+    sub_clusters: 1
+";
+        assert!(arch_from_str(bad).unwrap_err().contains("axis"));
+    }
+
+    #[test]
+    fn fractional_kb_sizes() {
+        let src = "\
+clusters:
+  - name: C2
+    memory: DRAM
+    sub_clusters: 1
+  - name: C1
+    memory: L1
+    size_kb: 0.5
+    sub_clusters: 1
+";
+        let a = arch_from_str(src).unwrap();
+        assert_eq!(a.levels[1].memory.as_ref().unwrap().size_bytes, 512);
+    }
+}

@@ -1,0 +1,240 @@
+//! Architecture presets: the paper's Table V accelerators (edge / cloud),
+//! their flexible-aspect-ratio variants (§V-B), the Fig. 5(c) toy, and the
+//! 16-chiplet Simba-like package (§V-C).
+
+use super::{Arch, Axis, ClusterLevel, Memory};
+
+const KB: u64 = 1024;
+
+fn dram(fill_bw: f64) -> Memory {
+    Memory {
+        name: "DRAM".into(),
+        size_bytes: u64::MAX,
+        fill_bw,
+        energy_pj: None,
+    }
+}
+
+fn sram(name: &str, size_bytes: u64, fill_bw: f64) -> Memory {
+    Memory {
+        name: name.into(),
+        size_bytes,
+        fill_bw,
+        energy_pj: None,
+    }
+}
+
+/// Generic 4-level R×C spatial accelerator:
+/// `C4` DRAM → `C3` shared L2 (rows along Y) → `C2` virtual (cols along X)
+/// → `C1` PE (private L1 + MAC). This is exactly the Fig. 5(c) topology
+/// scaled to the requested array.
+#[allow(clippy::too_many_arguments)]
+pub fn spatial_2d(
+    name: &str,
+    rows: u64,
+    cols: u64,
+    l1_bytes: u64,
+    l2_bytes: u64,
+    noc_bw: f64,
+    dram_bw: f64,
+    word_bytes: u64,
+) -> Arch {
+    Arch {
+        name: name.into(),
+        levels: vec![
+            ClusterLevel {
+                name: "C4".into(),
+                memory: Some(dram(dram_bw)),
+                sub_clusters: 1,
+                axis: Axis::None,
+                cross_package: false,
+            },
+            ClusterLevel {
+                name: "C3".into(),
+                memory: Some(sram("L2", l2_bytes, noc_bw)),
+                sub_clusters: rows,
+                axis: Axis::Y,
+                cross_package: false,
+            },
+            ClusterLevel {
+                name: "C2".into(),
+                memory: None, // virtual V2
+                sub_clusters: cols,
+                axis: Axis::X,
+                cross_package: false,
+            },
+            ClusterLevel {
+                name: "C1".into(),
+                memory: Some(sram("L1", l1_bytes, noc_bw)),
+                sub_clusters: 1,
+                axis: Axis::None,
+                cross_package: false,
+            },
+        ],
+        clock_ghz: 1.0,
+        word_bytes,
+        noc_bw,
+    }
+}
+
+/// Table V **edge** accelerator: 256 PEs (16×16), L1 0.5 KB, L2 100 KB,
+/// NoC 32 GB/s (= 32 B/cycle at 1 GHz), 8-bit words.
+pub fn edge() -> Arch {
+    edge_flexible(16, 16)
+}
+
+/// Edge accelerator reconfigured to an `rows×cols` aspect ratio
+/// (`rows*cols` must be 256) — the §V-B flexible-accelerator study.
+pub fn edge_flexible(rows: u64, cols: u64) -> Arch {
+    assert_eq!(rows * cols, 256, "edge accelerator has 256 PEs");
+    spatial_2d(
+        &format!("edge_{rows}x{cols}"),
+        rows,
+        cols,
+        KB / 2,
+        100 * KB,
+        32.0,
+        32.0,
+        1,
+    )
+}
+
+/// Table V **cloud** accelerator: 2048 PEs, L1 0.5 KB, L2 800 KB, NoC
+/// 256 GB/s, 8-bit words. `rows×cols` selects the aspect ratio (the paper
+/// uses 32×64 for the §V-A study).
+pub fn cloud(rows: u64, cols: u64) -> Arch {
+    assert_eq!(rows * cols, 2048, "cloud accelerator has 2048 PEs");
+    spatial_2d(
+        &format!("cloud_{rows}x{cols}"),
+        rows,
+        cols,
+        KB / 2,
+        800 * KB,
+        256.0,
+        256.0,
+        1,
+    )
+}
+
+/// The Fig. 5(c) walk-through toy: 2×4 array, 8 PEs.
+pub fn fig5_toy() -> Arch {
+    spatial_2d("fig5_toy", 2, 4, KB / 2, 4 * KB, 8.0, 8.0, 1)
+}
+
+/// §V-C **16-chiplet** package (Simba-like): 4096 PEs total. Each chiplet
+/// is an edge-config die (256 PEs, 16×16, 100 KB global buffer); the
+/// DRAM→chiplet *fill bandwidth* (GB/s == B/cycle at 1 GHz) is the swept
+/// parameter of Fig. 11. The DRAM→GLB link crosses the package.
+pub fn chiplet16(fill_bw_gbps: f64) -> Arch {
+    Arch {
+        name: format!("chiplet16_fill{fill_bw_gbps}"),
+        levels: vec![
+            ClusterLevel {
+                name: "C5".into(),
+                memory: Some(dram(fill_bw_gbps * 16.0)), // package-level DRAM
+                sub_clusters: 1,
+                axis: Axis::None,
+                cross_package: false,
+            },
+            ClusterLevel {
+                // the package: 16 chiplets in a 4×4 grid (Y major)
+                name: "C4".into(),
+                memory: None,
+                sub_clusters: 16,
+                axis: Axis::Y,
+                cross_package: true, // DRAM -> chiplet GLB crosses package
+            },
+            ClusterLevel {
+                // per-chiplet global buffer feeding a 16-row PE array;
+                // fill_bw is the per-chiplet DRAM->GLB bandwidth knob
+                name: "C3".into(),
+                memory: Some(sram("GLB", 100 * KB, fill_bw_gbps)),
+                sub_clusters: 16,
+                axis: Axis::Y,
+                cross_package: false,
+            },
+            ClusterLevel {
+                name: "C2".into(),
+                memory: None,
+                sub_clusters: 16,
+                axis: Axis::X,
+                cross_package: false,
+            },
+            ClusterLevel {
+                name: "C1".into(),
+                memory: Some(sram("L1", KB / 2, 32.0)),
+                sub_clusters: 1,
+                axis: Axis::None,
+                cross_package: false,
+            },
+        ],
+        clock_ghz: 1.0,
+        word_bytes: 1,
+        noc_bw: 32.0,
+    }
+}
+
+/// All edge aspect ratios evaluated in Fig. 10.
+pub fn edge_aspect_ratios() -> Vec<(u64, u64)> {
+    vec![(1, 256), (2, 128), (4, 64), (8, 32), (16, 16)]
+}
+
+/// All cloud aspect ratios evaluated in Fig. 10.
+pub fn cloud_aspect_ratios() -> Vec<(u64, u64)> {
+    vec![(1, 2048), (2, 1024), (4, 512), (8, 256), (16, 128), (32, 64)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_toy_is_8_pes() {
+        let a = fig5_toy();
+        a.validate().unwrap();
+        assert_eq!(a.num_pes(), 8);
+        assert_eq!(a.pe_array_shape(), (4, 2));
+        // C2 is the virtual level
+        assert!(a.levels[2].is_virtual());
+        assert!(!a.levels[1].is_virtual());
+    }
+
+    #[test]
+    fn aspect_ratio_lists_multiply_out() {
+        for (r, c) in edge_aspect_ratios() {
+            assert_eq!(r * c, 256);
+        }
+        for (r, c) in cloud_aspect_ratios() {
+            assert_eq!(r * c, 2048);
+        }
+    }
+
+    #[test]
+    fn chiplet_fill_bw_knob() {
+        let a = chiplet16(2.0);
+        let glb = a
+            .levels
+            .iter()
+            .find(|l| l.memory.as_ref().map(|m| m.name == "GLB").unwrap_or(false))
+            .unwrap();
+        assert_eq!(glb.memory.as_ref().unwrap().fill_bw, 2.0);
+        let b = chiplet16(12.0);
+        assert_eq!(
+            b.levels
+                .iter()
+                .find(|l| l.memory.as_ref().map(|m| m.name == "GLB").unwrap_or(false))
+                .unwrap()
+                .memory
+                .as_ref()
+                .unwrap()
+                .fill_bw,
+            12.0
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "256 PEs")]
+    fn edge_flexible_wrong_product_panics() {
+        edge_flexible(3, 100);
+    }
+}

@@ -1,0 +1,219 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `union <subcommand> [--flag value]... [--switch]...`
+//! Subcommands and flags are defined by the binary in `main.rs`; this
+//! module provides the generic parser plus typed accessors with helpful
+//! errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    /// `--key value` become flags, bare `--key` at the end or followed by
+    /// another `--` token become switches, the first bare token the
+    /// subcommand, remaining bare tokens positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare '--' is not supported".into());
+                }
+                // value present iff next token exists and is not --flag
+                match iter.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        if out.flags.insert(key.to_string(), v).is_some() {
+                            return Err(format!("flag --{key} given twice"));
+                        }
+                    }
+                    _ => out.switches.push(key.to_string()),
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Parse workload specs like `gemm:512x64x1024`, `conv:N,K,C,X,Y,R,S,stride`,
+/// `tc:intensli2:16`, or a Table IV layer name (`DLRM-2`).
+pub fn parse_workload(spec: &str) -> Result<crate::frontend::Workload, String> {
+    use crate::frontend::{dnn_workloads, tccg_problem, Workload, TCCG};
+    if let Some(w) = dnn_workloads().into_iter().find(|w| w.name == spec) {
+        return Ok(w);
+    }
+    if let Some(rest) = spec.strip_prefix("gemm:") {
+        let dims: Vec<u64> = rest
+            .split('x')
+            .map(|t| t.parse().map_err(|_| format!("bad gemm spec '{spec}'")))
+            .collect::<Result<_, _>>()?;
+        if dims.len() != 3 {
+            return Err(format!("gemm spec needs MxNxK, got '{rest}'"));
+        }
+        return Ok(Workload::gemm(spec, dims[0], dims[1], dims[2]));
+    }
+    if let Some(rest) = spec.strip_prefix("conv:") {
+        let v: Vec<u64> = rest
+            .split(',')
+            .map(|t| t.trim().parse().map_err(|_| format!("bad conv spec '{spec}'")))
+            .collect::<Result<_, _>>()?;
+        if v.len() != 8 {
+            return Err("conv spec needs N,K,C,X,Y,R,S,stride".into());
+        }
+        return Ok(Workload::conv2d(spec, v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]));
+    }
+    if let Some(rest) = spec.strip_prefix("tc:") {
+        let (name, tds) = rest
+            .split_once(':')
+            .ok_or("tc spec is tc:<name>:<tds>")?;
+        let tds: u64 = tds.parse().map_err(|_| format!("bad TDS in '{spec}'"))?;
+        let s = TCCG
+            .iter()
+            .find(|s| s.name == name)
+            .ok_or_else(|| format!("unknown TC '{name}' (have: intensli2, ccsd7, ccsd-t4)"))?;
+        return Ok(tccg_problem(s, tds));
+    }
+    Err(format!(
+        "unknown workload '{spec}' (try a Table IV name, gemm:MxNxK, conv:N,K,C,X,Y,R,S,st, tc:name:tds)"
+    ))
+}
+
+/// Parse arch specs: `edge`, `edge:RxC`, `cloud:RxC`, `chiplet:FILLBW`,
+/// `fig5`, or a `.uarch` file path.
+pub fn parse_arch(spec: &str) -> Result<crate::arch::Arch, String> {
+    use crate::arch::presets;
+    if spec == "edge" {
+        return Ok(presets::edge());
+    }
+    if spec == "fig5" {
+        return Ok(presets::fig5_toy());
+    }
+    if let Some(rc) = spec.strip_prefix("edge:") {
+        let (r, c) = parse_ratio(rc)?;
+        return Ok(presets::edge_flexible(r, c));
+    }
+    if let Some(rc) = spec.strip_prefix("cloud:") {
+        let (r, c) = parse_ratio(rc)?;
+        return Ok(presets::cloud(r, c));
+    }
+    if spec == "cloud" {
+        return Ok(presets::cloud(32, 64));
+    }
+    if let Some(bw) = spec.strip_prefix("chiplet:") {
+        let bw: f64 = bw.parse().map_err(|_| format!("bad fill bandwidth '{bw}'"))?;
+        return Ok(presets::chiplet16(bw));
+    }
+    if spec.ends_with(".uarch") {
+        let text = std::fs::read_to_string(spec)
+            .map_err(|e| format!("reading {spec}: {e}"))?;
+        return crate::arch::arch_from_str(&text);
+    }
+    Err(format!(
+        "unknown arch '{spec}' (try edge, edge:RxC, cloud:RxC, chiplet:BW, fig5, file.uarch)"
+    ))
+}
+
+fn parse_ratio(rc: &str) -> Result<(u64, u64), String> {
+    let (r, c) = rc.split_once('x').ok_or_else(|| format!("bad ratio '{rc}'"))?;
+    Ok((
+        r.parse().map_err(|_| format!("bad ratio '{rc}'"))?,
+        c.parse().map_err(|_| format!("bad ratio '{rc}'"))?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = args("search --workload DLRM-2 --samples 100 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("search"));
+        assert_eq!(a.flag("workload"), Some("DLRM-2"));
+        assert_eq!(a.usize_flag("samples", 0).unwrap(), 100);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+    }
+
+    #[test]
+    fn duplicate_flag_is_error() {
+        assert!(Args::parse(
+            "x --a 1 --a 2".split_whitespace().map(String::from)
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn workload_specs() {
+        assert_eq!(parse_workload("DLRM-2").unwrap().name, "DLRM-2");
+        let g = parse_workload("gemm:8x16x32").unwrap();
+        assert_eq!(g.macs(), 8 * 16 * 32);
+        let c = parse_workload("conv:1,8,4,7,7,3,3,1").unwrap();
+        assert!(c.macs() > 0);
+        let t = parse_workload("tc:ccsd7:16").unwrap();
+        assert_eq!(t.macs(), 16u64.pow(5));
+        assert!(parse_workload("nope").is_err());
+        assert!(parse_workload("gemm:8x16").is_err());
+    }
+
+    #[test]
+    fn arch_specs() {
+        assert_eq!(parse_arch("edge").unwrap().num_pes(), 256);
+        assert_eq!(parse_arch("cloud:32x64").unwrap().num_pes(), 2048);
+        assert_eq!(parse_arch("chiplet:2").unwrap().num_pes(), 4096);
+        assert_eq!(parse_arch("edge:4x64").unwrap().pe_array_shape(), (64, 4));
+        assert!(parse_arch("bogus").is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Text configuration format for Union architecture (`.uarch`) and
+//! constraint (`.ucon`) files.
+//!
+//! serde/serde_yaml are unavailable offline, so Union ships its own small
+//! indentation-based format — a strict subset of YAML covering what
+//! Timeloop-style architecture descriptions need: nested maps, lists of
+//! maps, lists of scalars, and `#` comments.
+//!
+//! ```text
+//! # cloud accelerator (Table V)
+//! name: cloud
+//! clock_ghz: 1.0
+//! clusters:
+//!   - name: C4
+//!     memory: DRAM
+//!     sub_clusters: 1
+//!   - name: C3
+//!     memory_kb: 800
+//!     sub_clusters: 32
+//!     dimension: Y
+//! ```
+
+mod parse;
+mod value;
+
+pub use parse::{parse, ParseError};
+pub use value::Value;

@@ -1,0 +1,391 @@
+//! Recursive-descent parser for the indentation-based config format.
+
+use std::fmt;
+
+use super::value::Value;
+
+/// Parse failure with line information.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// A logical (non-blank, non-comment) line.
+#[derive(Debug)]
+struct Line {
+    indent: usize,
+    text: String,
+    lineno: usize,
+}
+
+fn err<T>(line: usize, msg: impl Into<String>) -> Result<T, ParseError> {
+    Err(ParseError {
+        line,
+        msg: msg.into(),
+    })
+}
+
+/// Strip a trailing comment (a `#` that is not inside double quotes).
+fn strip_comment(s: &str) -> &str {
+    let mut in_quotes = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '#' if !in_quotes => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn logical_lines(src: &str) -> Result<Vec<Line>, ParseError> {
+    let mut out = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        if raw.contains('\t') {
+            return err(lineno, "tabs are not allowed; indent with spaces");
+        }
+        let stripped = strip_comment(raw);
+        let trimmed = stripped.trim_end();
+        let content = trimmed.trim_start();
+        if content.is_empty() {
+            continue;
+        }
+        out.push(Line {
+            indent: trimmed.len() - content.len(),
+            text: content.to_string(),
+            lineno,
+        });
+    }
+    Ok(out)
+}
+
+/// Parse a scalar token: bool, int, float, quoted string, inline list, or
+/// bare string (possibly comma-separated into a list).
+fn parse_scalar(tok: &str, lineno: usize) -> Result<Value, ParseError> {
+    let t = tok.trim();
+    if t.is_empty() {
+        return err(lineno, "empty scalar");
+    }
+    if let Some(stripped) = t.strip_prefix('[') {
+        let Some(inner) = stripped.strip_suffix(']') else {
+            return err(lineno, "unterminated inline list");
+        };
+        let items = split_top_level_commas(inner);
+        let mut vals = Vec::new();
+        for item in items {
+            let item = item.trim();
+            if !item.is_empty() {
+                vals.push(parse_scalar(item, lineno)?);
+            }
+        }
+        return Ok(Value::List(vals));
+    }
+    if let Some(stripped) = t.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            return err(lineno, "unterminated string");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match t {
+        "true" | "True" => return Ok(Value::Bool(true)),
+        "false" | "False" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare comma-separated scalars form a list ("16, 16, 1" in mappings)
+    if t.contains(',') {
+        let mut vals = Vec::new();
+        for item in split_top_level_commas(t) {
+            let item = item.trim();
+            if !item.is_empty() {
+                vals.push(parse_scalar(item, lineno)?);
+            }
+        }
+        return Ok(Value::List(vals));
+    }
+    Ok(Value::Str(t.to_string()))
+}
+
+fn split_top_level_commas(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_quotes = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            '[' if !in_quotes => depth += 1,
+            ']' if !in_quotes => depth = depth.saturating_sub(1),
+            ',' if !in_quotes && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// Split `key: value` at the first top-level colon.
+fn split_key(text: &str, lineno: usize) -> Result<(&str, &str), ParseError> {
+    let mut in_quotes = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_quotes = !in_quotes,
+            ':' if !in_quotes => return Ok((text[..i].trim(), text[i + 1..].trim())),
+            _ => {}
+        }
+    }
+    err(lineno, format!("expected 'key: value', got '{text}'"))
+}
+
+struct Parser {
+    lines: Vec<Line>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Line> {
+        self.lines.get(self.pos)
+    }
+
+    /// Parse a block (map or list) whose items sit at exactly `indent`.
+    fn parse_block(&mut self, indent: usize) -> Result<Value, ParseError> {
+        let Some(first) = self.peek() else {
+            return Ok(Value::Map(Vec::new()));
+        };
+        if first.text.starts_with("- ") || first.text == "-" {
+            self.parse_list(indent)
+        } else {
+            self.parse_map(indent)
+        }
+    }
+
+    fn parse_map(&mut self, indent: usize) -> Result<Value, ParseError> {
+        let mut entries: Vec<(String, Value)> = Vec::new();
+        while let Some(line) = self.peek() {
+            if line.indent < indent {
+                break;
+            }
+            if line.indent > indent {
+                return err(line.lineno, "unexpected indentation");
+            }
+            if line.text.starts_with("- ") {
+                return err(line.lineno, "list item inside a map block");
+            }
+            let lineno = line.lineno;
+            let text = line.text.clone();
+            let (key, rest) = split_key(&text, lineno)?;
+            let key = key.to_string();
+            if entries.iter().any(|(k, _)| *k == key) {
+                return err(lineno, format!("duplicate key '{key}'"));
+            }
+            self.pos += 1;
+            let value = if rest.is_empty() {
+                // nested block (or empty map if nothing deeper follows)
+                match self.peek() {
+                    Some(next) if next.indent > indent => {
+                        let child_indent = next.indent;
+                        self.parse_block(child_indent)?
+                    }
+                    _ => Value::Map(Vec::new()),
+                }
+            } else {
+                parse_scalar(rest, lineno)?
+            };
+            entries.push((key, value));
+        }
+        Ok(Value::Map(entries))
+    }
+
+    fn parse_list(&mut self, indent: usize) -> Result<Value, ParseError> {
+        let mut items = Vec::new();
+        while let Some(line) = self.peek() {
+            if line.indent < indent {
+                break;
+            }
+            if line.indent > indent {
+                return err(line.lineno, "unexpected indentation in list");
+            }
+            if !(line.text.starts_with("- ") || line.text == "-") {
+                break;
+            }
+            let lineno = line.lineno;
+            let inline = line.text[1..].trim().to_string();
+            // the `- ` marker consumes two columns: nested fields of this
+            // item live at indent + 2 (or deeper)
+            let item_indent = indent + 2;
+            self.pos += 1;
+            if inline.is_empty() {
+                // item body entirely on following lines
+                match self.peek() {
+                    Some(next) if next.indent >= item_indent => {
+                        let child = self.parse_block(next.indent)?;
+                        items.push(child);
+                    }
+                    _ => return err(lineno, "empty list item"),
+                }
+            } else if inline.contains(':') && split_key(&inline, lineno).is_ok() {
+                // map item with first entry inline: "- name: C4"
+                let (k, v) = split_key(&inline, lineno)?;
+                let mut entries = vec![(
+                    k.to_string(),
+                    if v.is_empty() {
+                        match self.peek() {
+                            Some(next) if next.indent > item_indent => {
+                                let ci = next.indent;
+                                self.parse_block(ci)?
+                            }
+                            _ => Value::Map(Vec::new()),
+                        }
+                    } else {
+                        parse_scalar(v, lineno)?
+                    },
+                )];
+                // remaining entries at item_indent
+                if let Some(next) = self.peek() {
+                    if next.indent == item_indent && !next.text.starts_with("- ") {
+                        let Value::Map(rest) = self.parse_map(item_indent)? else {
+                            unreachable!()
+                        };
+                        for (k, v) in rest {
+                            if entries.iter().any(|(e, _)| *e == k) {
+                                return err(lineno, format!("duplicate key '{k}' in list item"));
+                            }
+                            entries.push((k, v));
+                        }
+                    }
+                }
+                items.push(Value::Map(entries));
+            } else {
+                items.push(parse_scalar(&inline, lineno)?);
+            }
+        }
+        Ok(Value::List(items))
+    }
+}
+
+/// Parse a config document. The top level must be a map.
+pub fn parse(src: &str) -> Result<Value, ParseError> {
+    let lines = logical_lines(src)?;
+    if lines.is_empty() {
+        return Ok(Value::Map(Vec::new()));
+    }
+    let first_indent = lines[0].indent;
+    if first_indent != 0 {
+        return err(lines[0].lineno, "top level must not be indented");
+    }
+    let mut p = Parser { lines, pos: 0 };
+    let v = p.parse_block(0)?;
+    if let Some(line) = p.peek() {
+        return err(line.lineno, "trailing content after document");
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let v = parse("a: 1\nb: 2.5\nc: hello\nd: true\ne: \"x y\"").unwrap();
+        assert_eq!(v.get_int("a"), Some(1));
+        assert_eq!(v.get_f64("b"), Some(2.5));
+        assert_eq!(v.get_str("c"), Some("hello"));
+        assert_eq!(v.get_bool("d"), Some(true));
+        assert_eq!(v.get_str("e"), Some("x y"));
+    }
+
+    #[test]
+    fn nested_map() {
+        let v = parse("outer:\n  inner: 3\n  deep:\n    x: 4").unwrap();
+        let outer = v.get("outer").unwrap();
+        assert_eq!(outer.get_int("inner"), Some(3));
+        assert_eq!(outer.get("deep").unwrap().get_int("x"), Some(4));
+    }
+
+    #[test]
+    fn block_list_of_maps() {
+        let src = "clusters:\n  - name: C4\n    size: 1\n  - name: C3\n    size: 32\n";
+        let v = parse(src).unwrap();
+        let cs = v.get_list("clusters").unwrap();
+        assert_eq!(cs.len(), 2);
+        assert_eq!(cs[0].get_str("name"), Some("C4"));
+        assert_eq!(cs[1].get_int("size"), Some(32));
+    }
+
+    #[test]
+    fn inline_list() {
+        let v = parse("dims: [16, 16, 64]\nnames: [a, b]").unwrap();
+        let d = v.get_list("dims").unwrap();
+        assert_eq!(d.iter().filter_map(|x| x.as_int()).collect::<Vec<_>>(), vec![16, 16, 64]);
+        assert_eq!(v.get_list("names").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn bare_comma_list() {
+        let v = parse("tile_sizes: 16, 1, 16").unwrap();
+        let t = v.get_list("tile_sizes").unwrap();
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let v = parse("# header\n\na: 1 # trailing\n\n# done\n").unwrap();
+        assert_eq!(v.get_int("a"), Some(1));
+    }
+
+    #[test]
+    fn list_of_scalars() {
+        let v = parse("xs:\n  - 1\n  - 2\n  - 3").unwrap();
+        assert_eq!(v.get_list("xs").unwrap().len(), 3);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a: 1\na: 2").is_err());
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        assert!(parse("a:\n\tb: 1").is_err());
+    }
+
+    #[test]
+    fn error_carries_line() {
+        let e = parse("a: 1\nbroken line").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn roundtrip_display() {
+        let src = "name: edge\npes: 256\nclusters:\n  - name: C2\n    size: 16\n  - name: C1\n    size: 16\n";
+        let v = parse(src).unwrap();
+        let printed = v.to_string();
+        let v2 = parse(&printed).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn empty_doc() {
+        assert_eq!(parse("").unwrap(), Value::Map(vec![]));
+        assert_eq!(parse("# only comments\n").unwrap(), Value::Map(vec![]));
+    }
+}

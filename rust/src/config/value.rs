@@ -1,0 +1,147 @@
+//! The document object model for the config format.
+
+use std::fmt;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Bare or quoted string.
+    Str(String),
+    /// Integer scalar.
+    Int(i64),
+    /// Floating-point scalar.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// `[a, b, c]` inline or `- item` block list.
+    List(Vec<Value>),
+    /// Nested mapping; insertion-ordered.
+    Map(Vec<(String, Value)>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Numeric view: ints widen to f64.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&[(String, Value)]> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Look up a key in a map value.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_map()?
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v)
+    }
+
+    /// `get` + `as_str`.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key)?.as_str()
+    }
+
+    /// `get` + `as_int`.
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        self.get(key)?.as_int()
+    }
+
+    /// `get` + `as_f64`.
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key)?.as_f64()
+    }
+
+    /// `get` + `as_bool`.
+    pub fn get_bool(&self, key: &str) -> Option<bool> {
+        self.get(key)?.as_bool()
+    }
+
+    /// `get` + `as_list`.
+    pub fn get_list(&self, key: &str) -> Option<&[Value]> {
+        self.get(key)?.as_list()
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn emit(v: &Value, f: &mut fmt::Formatter<'_>, indent: usize) -> fmt::Result {
+            let pad = "  ".repeat(indent);
+            match v {
+                Value::Str(s) => write!(f, "{s}"),
+                Value::Int(i) => write!(f, "{i}"),
+                Value::Float(x) => write!(f, "{x}"),
+                Value::Bool(b) => write!(f, "{b}"),
+                Value::List(items) => {
+                    for item in items {
+                        match item {
+                            Value::Map(_) | Value::List(_) => {
+                                write!(f, "\n{pad}- ")?;
+                                emit(item, f, indent + 1)?;
+                            }
+                            _ => {
+                                write!(f, "\n{pad}- ")?;
+                                emit(item, f, indent)?;
+                            }
+                        }
+                    }
+                    Ok(())
+                }
+                Value::Map(entries) => {
+                    for (i, (k, val)) in entries.iter().enumerate() {
+                        if i > 0 {
+                            write!(f, "\n{pad}")?;
+                        }
+                        match val {
+                            Value::Map(_) | Value::List(_) => {
+                                write!(f, "{k}:")?;
+                                emit(val, f, indent + 1)?;
+                            }
+                            _ => {
+                                write!(f, "{k}: ")?;
+                                emit(val, f, indent)?;
+                            }
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        }
+        emit(self, f, 0)
+    }
+}

@@ -1,0 +1,115 @@
+//! Accelergy-style per-component energy table (paper §V-C uses Accelergy
+//! with Timeloop; constants documented in DESIGN.md §7).
+//!
+//! All values are picojoules per *word* access at the table's word size
+//! (the paper evaluates with 8-bit words and uint8 MACs). Per-byte NoC
+//! and package-link energies model on-chip vs on-package transfer cost —
+//! the distinction driving the §V-C chiplet study.
+
+use crate::arch::Memory;
+
+/// Per-access/transfer energy constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyTable {
+    /// One uint8 MAC operation.
+    pub mac_pj: f64,
+    /// Small private scratchpad (L1-class, ≤ 8 KB).
+    pub l1_pj: f64,
+    /// Large shared buffer (L2/GLB-class).
+    pub l2_pj: f64,
+    /// Off-chip DRAM access.
+    pub dram_pj: f64,
+    /// On-chip NoC transfer, per byte.
+    pub noc_pj_per_byte: f64,
+    /// On-package (chiplet-to-chiplet / package-crossing) transfer, per
+    /// byte. ~5× the on-chip cost, per Simba's GRS link numbers.
+    pub package_pj_per_byte: f64,
+    /// Word size the table is calibrated for (bytes).
+    pub word_bytes: u64,
+}
+
+impl EnergyTable {
+    /// The paper's evaluation setting: 8-bit words, uint8 MACs (see
+    /// DESIGN.md §7 for the derivation of each constant).
+    pub fn default_8bit() -> EnergyTable {
+        EnergyTable {
+            mac_pj: 0.2,
+            l1_pj: 1.0,
+            l2_pj: 18.0,
+            dram_pj: 200.0,
+            noc_pj_per_byte: 2.0,
+            package_pj_per_byte: 10.0,
+            word_bytes: 1,
+        }
+    }
+
+    /// Per-word access energy for a memory, honoring explicit overrides.
+    /// Classification: unbounded ⇒ DRAM; ≤ 8 KB ⇒ L1-class; else L2-class.
+    pub fn access_pj(&self, mem: &Memory) -> f64 {
+        if let Some(e) = mem.energy_pj {
+            return e;
+        }
+        if mem.size_bytes == u64::MAX {
+            self.dram_pj
+        } else if mem.size_bytes <= 8 * 1024 {
+            self.l1_pj
+        } else {
+            self.l2_pj
+        }
+    }
+
+    /// Transfer energy per word over a link.
+    pub fn link_pj(&self, cross_package: bool) -> f64 {
+        let per_byte = if cross_package {
+            self.package_pj_per_byte
+        } else {
+            self.noc_pj_per_byte
+        };
+        per_byte * self.word_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem(size: u64) -> Memory {
+        Memory {
+            name: "m".into(),
+            size_bytes: size,
+            fill_bw: 32.0,
+            energy_pj: None,
+        }
+    }
+
+    #[test]
+    fn classification() {
+        let t = EnergyTable::default_8bit();
+        assert_eq!(t.access_pj(&mem(u64::MAX)), t.dram_pj);
+        assert_eq!(t.access_pj(&mem(512)), t.l1_pj);
+        assert_eq!(t.access_pj(&mem(100 * 1024)), t.l2_pj);
+    }
+
+    #[test]
+    fn override_wins() {
+        let t = EnergyTable::default_8bit();
+        let mut m = mem(512);
+        m.energy_pj = Some(42.0);
+        assert_eq!(t.access_pj(&m), 42.0);
+    }
+
+    #[test]
+    fn energy_ordering_is_physical() {
+        let t = EnergyTable::default_8bit();
+        assert!(t.mac_pj < t.l1_pj);
+        assert!(t.l1_pj < t.l2_pj);
+        assert!(t.l2_pj < t.dram_pj);
+        assert!(t.noc_pj_per_byte < t.package_pj_per_byte);
+    }
+
+    #[test]
+    fn link_energy_scales_with_package() {
+        let t = EnergyTable::default_8bit();
+        assert!(t.link_pj(true) > t.link_pj(false));
+    }
+}

@@ -1,0 +1,233 @@
+//! The MAESTRO-style **operation-level cluster cost model**.
+//!
+//! Differences from the Timeloop-style [`super::AnalyticalModel`],
+//! mirroring the real tools (paper §III-B.2, §IV-A):
+//!
+//! * **operation-level conformability**: only CONV2D / GEMM / DWCONV
+//!   problems are accepted (a TC must be TTGT-rewritten to GEMM first);
+//! * **data-centric reuse**: temporal loop order is ignored — tiles are
+//!   assumed held across irrelevant iterations ([`ReuseModel::OrderAgnostic`]);
+//! * **fixed 3-level memory**: DRAM + shared L2 + private L1 (flexible
+//!   cluster sizes / aspect ratios within that shape — the §V-B study);
+//! * **per-step latency**: time steps = product of temporal trips; each
+//!   step costs max(compute, NoC delivery), modeling the delta-sized
+//!   transfers MAESTRO pipelines across steps.
+
+use crate::arch::Arch;
+use crate::mapping::Mapping;
+use crate::problem::{Operation, Problem};
+
+use super::tile::{ReuseModel, TileAnalysis};
+use super::{CostEstimate, CostModel, EnergyTable, LevelStats};
+
+/// MAESTRO-style cluster model.
+pub struct MaestroModel {
+    energy: EnergyTable,
+}
+
+impl MaestroModel {
+    pub fn new(energy: EnergyTable) -> MaestroModel {
+        MaestroModel { energy }
+    }
+
+    /// The operations MAESTRO natively supports.
+    pub fn supported_operations() -> &'static [Operation] {
+        &[Operation::Conv2d, Operation::Gemm, Operation::DwConv]
+    }
+}
+
+impl CostModel for MaestroModel {
+    fn name(&self) -> &str {
+        "maestro"
+    }
+
+    fn conformable(&self, problem: &Problem, arch: &Arch) -> Result<(), String> {
+        problem.validate()?;
+        if !Self::supported_operations().contains(&problem.operation) {
+            return Err(format!(
+                "maestro supports CONV2D/GEMM/DWCONV, not {} (rewrite via TTGT/im2col first)",
+                problem.operation.name()
+            ));
+        }
+        // fixed accelerator shape: exactly DRAM + one shared buffer +
+        // private PE buffers (virtual levels in between are fine)
+        let real: Vec<usize> = (0..arch.depth())
+            .filter(|&i| !arch.levels[i].is_virtual())
+            .collect();
+        if real.len() != 3 {
+            return Err(format!(
+                "maestro models 3-level accelerators (DRAM/L2/L1), arch has {} real levels",
+                real.len()
+            ));
+        }
+        Ok(())
+    }
+
+    fn evaluate(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+    ) -> Result<CostEstimate, String> {
+        self.conformable(problem, arch)?;
+        mapping.check(problem, arch).map_err(|e| e.to_string())?;
+        self.evaluate_prechecked(problem, arch, mapping)
+    }
+
+    fn evaluate_prechecked(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+    ) -> Result<CostEstimate, String> {
+        let ta = TileAnalysis::new(problem, arch, mapping);
+        let mv = ta.movement(ReuseModel::OrderAgnostic);
+
+        let word = arch.word_bytes as f64;
+        let mut levels = Vec::with_capacity(mv.levels.len());
+        let mut energy_pj = 0.0;
+        let mut interconnect_pj = 0.0;
+        for lm in &mv.levels {
+            let mem = arch.levels[lm.level].memory.as_ref().unwrap();
+            let e_access = self.energy.access_pj(mem);
+            let level_energy = (lm.reads + lm.writes) * e_access;
+            energy_pj += level_energy;
+            interconnect_pj += lm.link_words * self.energy.link_pj(lm.cross_package);
+            levels.push(LevelStats {
+                level_name: mem.name.clone(),
+                reads: lm.reads,
+                writes: lm.writes,
+                energy_pj: level_energy,
+                bw_cycles: 0.0,
+            });
+        }
+        energy_pj += interconnect_pj + mv.macs as f64 * self.energy.mac_pj;
+
+        // latency: per-time-step pipeline of compute and NoC delivery.
+        // steps = product of all temporal trips; per-step compute = MACs
+        // within one innermost tile across the active PEs; per-step NoC =
+        // delta words delivered to the PEs through the shared NoC.
+        let total_steps: f64 = (0..arch.depth())
+            .map(|i| {
+                (0..problem.dims.len())
+                    .map(|d| ta.trips[i][d] as f64)
+                    .product::<f64>()
+            })
+            .product();
+        let compute_per_step = mv.macs as f64 / mv.pes_used.max(1) as f64 / total_steps;
+        // words delivered from L2 to all PEs per step, through the NoC
+        let l1 = mv.levels.last().unwrap();
+        let noc_words_per_step = l1.link_words / total_steps;
+        let noc_per_step = noc_words_per_step * word / arch.noc_bw;
+        let steady = compute_per_step.max(noc_per_step);
+        // pipeline: first step pays both (fill), then steady-state
+        let cycles = (compute_per_step + noc_per_step) + steady * (total_steps - 1.0).max(0.0);
+        // DRAM feed can still dominate
+        let dram = arch.levels[ta.real_levels[0]].memory.as_ref().unwrap();
+        let top = &mv.levels[0];
+        let dram_cycles = (top.reads + top.writes) * word / dram.fill_bw;
+        let cycles = cycles.max(dram_cycles).max(mv.macs as f64 / mv.pes_used.max(1) as f64);
+
+        Ok(CostEstimate {
+            cycles,
+            energy_pj,
+            utilization: mapping.utilization(arch),
+            macs: mv.macs,
+            levels,
+            interconnect_pj,
+            clock_ghz: arch.clock_ghz,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::problem::{conv2d, gemm, tensor_contraction};
+
+    #[test]
+    fn gemm_and_conv_conformable_tc_not() {
+        let a = presets::edge();
+        let model = MaestroModel::new(EnergyTable::default_8bit());
+        assert!(model.conformable(&gemm(8, 8, 8), &a).is_ok());
+        assert!(model
+            .conformable(&conv2d(1, 8, 8, 8, 8, 3, 3, 1), &a)
+            .is_ok());
+        let tc = tensor_contraction(
+            "t",
+            &[("A", 8), ("B", 8), ("C", 8)],
+            &["A", "B"],
+            &["B", "C"],
+            &["A", "C"],
+        );
+        assert!(model.conformable(&tc, &a).is_err());
+    }
+
+    #[test]
+    fn rejects_deep_hierarchies() {
+        let a = presets::chiplet16(2.0); // 4 real levels? DRAM, GLB, L1 = 3... includes package
+        let model = MaestroModel::new(EnergyTable::default_8bit());
+        // chiplet16 real levels: C5 DRAM, C3 GLB, C1 L1 = 3 -> conformable!
+        // build a genuinely deeper arch to exercise the rejection
+        let mut deep = presets::edge();
+        deep.levels.insert(
+            2,
+            crate::arch::ClusterLevel {
+                name: "Cx".into(),
+                memory: Some(crate::arch::Memory {
+                    name: "L15".into(),
+                    size_bytes: 8 * 1024,
+                    fill_bw: 32.0,
+                    energy_pj: None,
+                }),
+                sub_clusters: 1,
+                axis: crate::arch::Axis::None,
+                cross_package: false,
+            },
+        );
+        assert!(model.conformable(&gemm(8, 8, 8), &deep).is_err());
+        // and the 3-real-level chiplet is fine
+        assert!(model.conformable(&gemm(8, 8, 8), &a).is_ok());
+    }
+
+    #[test]
+    fn evaluates_and_is_order_agnostic() {
+        let p = gemm(16, 16, 16);
+        let a = presets::edge();
+        let model = MaestroModel::new(EnergyTable::default_8bit());
+        let mut m1 = crate::mapping::Mapping::sequential(&p, &a);
+        let mut m2 = m1.clone();
+        m1.levels[1].temporal_order = vec![0, 1, 2];
+        m2.levels[1].temporal_order = vec![2, 1, 0];
+        let e1 = model.evaluate(&p, &a, &m1).unwrap();
+        let e2 = model.evaluate(&p, &a, &m2).unwrap();
+        assert_eq!(e1.energy_pj, e2.energy_pj, "data-centric model ignores order");
+        assert_eq!(e1.cycles, e2.cycles);
+    }
+
+    #[test]
+    fn aspect_ratio_changes_cost() {
+        // a skinny GEMM maps better onto a skinny array (the Fig. 10 logic)
+        let p = gemm(2048, 4, 4);
+        let model = MaestroModel::new(EnergyTable::default_8bit());
+        let mut best: Vec<(String, f64)> = Vec::new();
+        for (r, c) in presets::edge_aspect_ratios() {
+            let a = presets::edge_flexible(r, c);
+            // greedy: give M the full X axis if possible
+            let cons = crate::mapspace::Constraints::default();
+            let space = crate::mapspace::MapSpace::new(&p, &a, &cons);
+            let mut rng = crate::util::rng::Rng::new(42);
+            let mut best_edp = f64::INFINITY;
+            for _ in 0..200 {
+                if let Some(m) = space.sample_legal(&mut rng, 200) {
+                    if let Ok(e) = model.evaluate(&p, &a, &m) {
+                        best_edp = best_edp.min(e.edp());
+                    }
+                }
+            }
+            best.push((a.name.clone(), best_edp));
+        }
+        assert!(best.iter().any(|(_, e)| e.is_finite()));
+    }
+}

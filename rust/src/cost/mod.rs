@@ -1,0 +1,142 @@
+//! Plug-and-play accelerator **cost models** (paper §III-B.2).
+//!
+//! Two models ship with Union, mirroring the paper:
+//!
+//! * [`AnalyticalModel`] — a Timeloop-style *loop-level* hierarchical
+//!   model: order-aware per-level access counting over arbitrary memory
+//!   hierarchies (including chiplet packages), paired with an
+//!   Accelergy-style [`EnergyTable`];
+//! * [`MaestroModel`] — a MAESTRO-style *operation-level* cluster model:
+//!   data-centric reuse analysis (temporal-order agnostic), flexible
+//!   aspect ratios, fixed 3-level (DRAM/L2/L1) hierarchies.
+//!
+//! Both implement [`CostModel`] over the same Union abstractions, which is
+//! the paper's central interoperability claim: any mapper can drive any
+//! cost model.
+
+mod analytical;
+mod energy;
+mod maestro;
+mod sparse;
+mod tile;
+
+pub use analytical::AnalyticalModel;
+pub use energy::EnergyTable;
+pub use maestro::MaestroModel;
+pub use sparse::{Density, SparseModel};
+pub use tile::{DataMovement, ReuseModel, TileAnalysis};
+
+use crate::arch::Arch;
+use crate::mapping::Mapping;
+use crate::problem::Problem;
+
+/// Per-memory-level access statistics in a cost estimate.
+#[derive(Debug, Clone, Default)]
+pub struct LevelStats {
+    pub level_name: String,
+    /// Total word reads across all instances of this level.
+    pub reads: f64,
+    /// Total word writes across all instances.
+    pub writes: f64,
+    /// Energy attributed to this level (pJ).
+    pub energy_pj: f64,
+    /// Bandwidth-bound cycles implied by this level's fills.
+    pub bw_cycles: f64,
+}
+
+/// The result of evaluating one mapping on one architecture.
+#[derive(Debug, Clone)]
+pub struct CostEstimate {
+    /// Execution cycles (max of compute-bound and bandwidth-bound terms).
+    pub cycles: f64,
+    /// Total energy in picojoules.
+    pub energy_pj: f64,
+    /// Fraction of PEs used by the mapping.
+    pub utilization: f64,
+    /// Total multiply-accumulates.
+    pub macs: u64,
+    /// Per-level breakdown (outermost first; real memories only).
+    pub levels: Vec<LevelStats>,
+    /// NoC + package-link energy (pJ), separate from memory accesses.
+    pub interconnect_pj: f64,
+    /// Clock used to convert cycles to seconds.
+    pub clock_ghz: f64,
+}
+
+impl CostEstimate {
+    /// Latency in seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.cycles / (self.clock_ghz * 1e9)
+    }
+
+    /// Energy in joules.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_pj * 1e-12
+    }
+
+    /// Energy-delay product in joule-seconds — the paper's headline
+    /// comparison metric (Figs. 3, 8, 10, 11).
+    pub fn edp(&self) -> f64 {
+        self.energy_j() * self.latency_s()
+    }
+
+    /// Effective throughput in MACs/cycle.
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.cycles.max(1.0)
+    }
+}
+
+/// A cost model evaluates (problem, arch, mapping) triples.
+///
+/// `conformable` embodies the model's workload constraints (paper
+/// §III-A.3): callers run it before `evaluate` to route each problem to a
+/// compatible model.
+pub trait CostModel: Sync {
+    fn name(&self) -> &str;
+
+    /// Operation-level / loop-level conformability check.
+    fn conformable(&self, problem: &Problem, arch: &Arch) -> Result<(), String>;
+
+    /// Estimate cost, re-validating the mapping first.
+    fn evaluate(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+    ) -> Result<CostEstimate, String>;
+
+    /// Estimate cost for a mapping the caller has *already validated*
+    /// (e.g. via `MapSpace::admits`). The default re-validates; models
+    /// override to skip the duplicate legality pass — worth ~2x on the
+    /// search hot path (EXPERIMENTS.md §Perf).
+    fn evaluate_prechecked(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+    ) -> Result<CostEstimate, String> {
+        self.evaluate(problem, arch, mapping)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn estimate_derived_metrics() {
+        let e = CostEstimate {
+            cycles: 1e6,
+            energy_pj: 2e9, // 2 mJ
+            utilization: 0.5,
+            macs: 1_000_000,
+            levels: vec![],
+            interconnect_pj: 0.0,
+            clock_ghz: 1.0,
+        };
+        assert!((e.latency_s() - 1e-3).abs() < 1e-12);
+        assert!((e.energy_j() - 2e-3).abs() < 1e-12);
+        assert!((e.edp() - 2e-6).abs() < 1e-15);
+        assert!((e.macs_per_cycle() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,454 @@
+//! The shared **tile-analysis engine**: order-aware data-movement
+//! counting over a Union mapping.
+//!
+//! For every *real* (non-virtual) memory level it computes, per data
+//! space, the tile footprint, the refetch factor implied by the temporal
+//! loop structure above the level, the per-instance and machine-total
+//! fill volumes, and the multicast/spatial-reduction factors of the
+//! distributions in between. Both cost models are built on these
+//! quantities; the Timeloop-style model uses the order-aware refetch,
+//! the MAESTRO-style model the order-agnostic (best-case) variant.
+
+use crate::arch::Arch;
+use crate::mapping::Mapping;
+use crate::problem::{DataSpace, Problem};
+
+/// How refetch factors treat temporal loop order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReuseModel {
+    /// Irrelevant loops above a relevant loop force refetch (Timeloop-
+    /// style loop-nest semantics).
+    OrderAware,
+    /// Irrelevant loops never force refetch (MAESTRO-style data-centric
+    /// optimism: tiles are assumed held across irrelevant iterations).
+    OrderAgnostic,
+}
+
+/// Movement of one data space at one real memory level.
+#[derive(Debug, Clone)]
+pub struct DsLevelMovement {
+    /// Tile footprint in words at this level (one instance).
+    pub footprint: u64,
+    /// Refetch factor (installs of the tile over the execution).
+    pub refetch: f64,
+    /// Words filled into ONE instance over the execution.
+    pub fills: f64,
+    /// Words filled into ALL used instances.
+    pub total_fills: f64,
+    /// Multicast factor of the distribution from the parent real level
+    /// (1 = unicast).
+    pub multicast: f64,
+}
+
+/// Aggregated per-level movement across data spaces.
+#[derive(Debug, Clone)]
+pub struct LevelMovement {
+    /// Architecture level index.
+    pub level: usize,
+    /// Word reads out of this level (serving children + compute).
+    pub reads: f64,
+    /// Word writes into this level (fills + partial-sum updates).
+    pub writes: f64,
+    /// Per-instance incoming words (bandwidth accounting).
+    pub per_instance_in: f64,
+    /// Words crossing the link from the parent real level (NoC energy).
+    pub link_words: f64,
+    /// Whether that link crosses a package boundary.
+    pub cross_package: bool,
+}
+
+/// Full data-movement summary for a mapping.
+#[derive(Debug, Clone)]
+pub struct DataMovement {
+    /// One entry per real memory level, outermost first.
+    pub levels: Vec<LevelMovement>,
+    /// Per (data space, real level) detail, indexed `[ds][real_level]`.
+    pub detail: Vec<Vec<DsLevelMovement>>,
+    /// PEs used by the mapping.
+    pub pes_used: u64,
+    /// Total MACs.
+    pub macs: u64,
+}
+
+/// The analysis context.
+pub struct TileAnalysis<'a> {
+    pub problem: &'a Problem,
+    pub arch: &'a Arch,
+    pub mapping: &'a Mapping,
+    /// `w[level][dim]`: temporal trip count.
+    pub trips: Vec<Vec<u64>>,
+    /// `p[level][dim]`: spatial fan-out.
+    pub fanout: Vec<Vec<u64>>,
+    /// Indices of real (non-virtual) levels, outermost first.
+    pub real_levels: Vec<usize>,
+    /// Precomputed relevance masks, one per data space (hot-path cache:
+    /// `DataSpace::relevant_dims` allocates, and refetch() is called per
+    /// (data space, level) in the innermost search loop).
+    relevant: Vec<Vec<bool>>,
+    /// Cached total fan-out per level.
+    level_fanouts: Vec<u64>,
+    /// Cached used-instance counts per level (cumulative fan-out).
+    used_inst: Vec<u64>,
+}
+
+impl<'a> TileAnalysis<'a> {
+    pub fn new(problem: &'a Problem, arch: &'a Arch, mapping: &'a Mapping) -> Self {
+        let nl = arch.depth();
+        let nd = problem.dims.len();
+        let mut trips = vec![vec![1u64; nd]; nl];
+        let mut fanout = vec![vec![1u64; nd]; nl];
+        for i in 0..nl {
+            for d in 0..nd {
+                trips[i][d] = mapping.trips(problem, i, d);
+                fanout[i][d] = mapping.parallelism(i, d);
+            }
+        }
+        let real_levels = (0..nl).filter(|&i| !arch.levels[i].is_virtual()).collect();
+        let relevant: Vec<Vec<bool>> = problem
+            .data_spaces
+            .iter()
+            .map(|ds| ds.relevant_dims(nd))
+            .collect();
+        let level_fanouts: Vec<u64> =
+            (0..nl).map(|i| fanout[i].iter().product()).collect();
+        let mut used_inst = vec![1u64; nl];
+        for i in 1..nl {
+            used_inst[i] = used_inst[i - 1] * level_fanouts[i - 1];
+        }
+        TileAnalysis {
+            problem,
+            arch,
+            mapping,
+            trips,
+            fanout,
+            real_levels,
+            relevant,
+            level_fanouts,
+            used_inst,
+        }
+    }
+
+    /// Total fan-out at a level.
+    fn level_fanout(&self, level: usize) -> u64 {
+        self.level_fanouts[level]
+    }
+
+    /// Used instances of level `i` = product of outer fan-outs.
+    pub fn used_instances(&self, level: usize) -> u64 {
+        self.used_inst[level]
+    }
+
+    /// Distinct-tile children of the distribution at level `j` for a data
+    /// space: fan-out restricted to its relevant dims.
+    fn distinct_children(&self, j: usize, rel: &[bool]) -> u64 {
+        (0..rel.len())
+            .map(|d| if rel[d] { self.fanout[j][d] } else { 1 })
+            .product()
+    }
+
+    /// Refetch factor of a data space's tile at `level`, counting the
+    /// temporal loop blocks 0..=level above its memory.
+    pub fn refetch(&self, ds: &DataSpace, level: usize, model: ReuseModel) -> f64 {
+        let ds_index = self
+            .problem
+            .data_spaces
+            .iter()
+            .position(|d| std::ptr::eq(d, ds))
+            .unwrap_or_else(|| {
+                self.problem
+                    .data_spaces
+                    .iter()
+                    .position(|d| d.name == ds.name)
+                    .expect("data space not in problem")
+            });
+        self.refetch_idx(ds_index, level, model)
+    }
+
+    /// Internal refetch by data-space index (no per-call allocation).
+    fn refetch_idx(&self, ds_index: usize, level: usize, model: ReuseModel) -> f64 {
+        let rel = &self.relevant[ds_index];
+        let mut r = 1f64;
+        for j in 0..=level {
+            let order = &self.mapping.levels[j].temporal_order;
+            // does any deeper block (j+1..=level) iterate a relevant dim?
+            let rel_below_blocks = (j + 1..=level).any(|j2| {
+                (0..rel.len()).any(|d| rel[d] && self.trips[j2][d] > 1)
+            });
+            for (pos, &d) in order.iter().enumerate() {
+                let w = self.trips[j][d];
+                if w <= 1 {
+                    continue;
+                }
+                if rel[d] {
+                    r *= w as f64;
+                } else if model == ReuseModel::OrderAware {
+                    // an irrelevant loop forces refetch iff a relevant
+                    // loop iterates below it (same block, deeper position)
+                    // or in a deeper block
+                    let rel_below_here = order[pos + 1..]
+                        .iter()
+                        .any(|&d2| rel[d2] && self.trips[j][d2] > 1)
+                        || rel_below_blocks;
+                    if rel_below_here {
+                        r *= w as f64;
+                    }
+                }
+            }
+        }
+        r
+    }
+
+    /// Compute the full data-movement summary.
+    pub fn movement(&self, model: ReuseModel) -> DataMovement {
+        let nds = self.problem.data_spaces.len();
+        let nreal = self.real_levels.len();
+        let full_sizes: Vec<u64> = self
+            .problem
+            .data_spaces
+            .iter()
+            .map(|ds| ds.full_size(&self.problem.dims))
+            .collect();
+
+        // per-(ds, real level) volumes
+        let mut detail: Vec<Vec<DsLevelMovement>> = Vec::with_capacity(nds);
+        for (di, ds) in self.problem.data_spaces.iter().enumerate() {
+            let rel = &self.relevant[di];
+            let mut per_level = Vec::with_capacity(nreal);
+            for (ri, &li) in self.real_levels.iter().enumerate() {
+                let tt = &self.mapping.levels[li].temporal_tile;
+                let footprint = ds.tile_footprint(tt);
+                let refetch = if li == 0 { 1.0 } else { self.refetch_idx(di, li, model) };
+                let fills = footprint as f64 * refetch;
+                let total_fills = fills * self.used_instances(li) as f64;
+                // multicast across the distributions between the previous
+                // real level and this one
+                let multicast = if ri == 0 {
+                    1.0
+                } else {
+                    let prev = self.real_levels[ri - 1];
+                    (prev..li)
+                        .map(|j| {
+                            self.level_fanout(j) as f64
+                                / self.distinct_children(j, rel) as f64
+                        })
+                        .product()
+                };
+                per_level.push(DsLevelMovement {
+                    footprint,
+                    refetch,
+                    fills,
+                    total_fills,
+                    multicast,
+                });
+            }
+            // the outermost (DRAM) level holds the full tensor once
+            if let Some(l0) = per_level.first_mut() {
+                l0.footprint = full_sizes[di];
+                l0.refetch = 1.0;
+                l0.fills = full_sizes[di] as f64;
+                l0.total_fills = full_sizes[di] as f64;
+            }
+            detail.push(per_level);
+        }
+
+        // aggregate per level: reads serve the next real level below;
+        // writes are the fills arriving from the level above
+        let mut levels: Vec<LevelMovement> = self
+            .real_levels
+            .iter()
+            .map(|&li| LevelMovement {
+                level: li,
+                reads: 0.0,
+                writes: 0.0,
+                per_instance_in: 0.0,
+                link_words: 0.0,
+                cross_package: false,
+            })
+            .collect();
+
+        for (di, ds) in self.problem.data_spaces.iter().enumerate() {
+            for ri in 1..nreal {
+                let parent_ri = ri - 1;
+                let mv = &detail[di][ri];
+                let t_total = mv.total_fills;
+                let parent_traffic = t_total / mv.multicast;
+                let li = self.real_levels[ri];
+                let cross = (self.real_levels[parent_ri]..li)
+                    .any(|j| self.arch.levels[j].cross_package)
+                    || self.arch.levels[li].cross_package;
+                if !ds.is_output {
+                    levels[parent_ri].reads += parent_traffic;
+                    levels[ri].writes += t_total;
+                } else {
+                    // outputs flow upward; spatial "multicast" becomes a
+                    // NoC reduction of partial sums
+                    levels[ri].reads += t_total; // send up / RMW source
+                    levels[ri].writes += t_total; // partial updates landing
+                    levels[parent_ri].writes += parent_traffic;
+                    // partial tiles beyond the final result are read back
+                    let excess = (parent_traffic - full_sizes[di] as f64).max(0.0);
+                    levels[parent_ri].reads += excess;
+                }
+                levels[ri].per_instance_in += mv.fills;
+                levels[ri].link_words += t_total;
+                levels[ri].cross_package |= cross;
+            }
+        }
+
+        // innermost level additionally serves the MACs: every compute
+        // reads its operands and read-modify-writes the partial sum
+        let macs = self.problem.total_macs();
+        let pes_used = self.mapping.pes_used();
+        if let Some(inner) = levels.last_mut() {
+            let n_inputs = (self.problem.data_spaces.len() - 1) as f64;
+            inner.reads += macs as f64 * n_inputs; // operand reads
+            inner.reads += macs as f64; // accumulator read
+            inner.writes += macs as f64; // accumulator write
+        }
+
+        DataMovement { levels, detail, pes_used, macs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mapping::{LevelMapping, Mapping};
+    use crate::problem::gemm;
+
+    /// All-temporal GEMM on the toy arch with an A-stationary order at
+    /// the L2->L1 block: A should be fetched exactly once per element.
+    #[test]
+    fn stationary_order_gives_full_reuse() {
+        let p = gemm(8, 8, 8); // dims M=0 N=1 K=2
+        let a = presets::fig5_toy();
+        // order M,K outer then N inner at every level: A (M,K) stationary
+        let order = vec![0usize, 2, 1];
+        let mk_level = |tt: Vec<u64>, st: Vec<u64>| LevelMapping {
+            temporal_order: order.clone(),
+            temporal_tile: tt,
+            spatial_tile: st,
+        };
+        let m = Mapping {
+            levels: vec![
+                mk_level(vec![8, 8, 8], vec![8, 8, 8]),
+                mk_level(vec![8, 8, 8], vec![8, 8, 8]),
+                mk_level(vec![1, 1, 1], vec![1, 1, 1]),
+                mk_level(vec![1, 1, 1], vec![1, 1, 1]),
+            ],
+        };
+        m.check(&p, &a).unwrap();
+        let ta = TileAnalysis::new(&p, &a, &m);
+        let mv = ta.movement(ReuseModel::OrderAware);
+        // A tile at L1 (1x1), refetch: block3 loops (within L2 tile ST=8,8,8 ... wait
+        // L1 fills for A: N innermost and irrelevant to A -> A reused
+        let a_detail = &mv.detail[0]; // A
+        let l1 = a_detail.last().unwrap();
+        // A footprint 1 word; loops above L1: M(8), K(8) relevant, N(8)
+        // irrelevant innermost -> refetch = 64, fills = 64 = |A| exactly
+        assert_eq!(l1.footprint, 1);
+        assert!((l1.fills - 64.0).abs() < 1e-9, "fills={}", l1.fills);
+    }
+
+    #[test]
+    fn bad_order_forces_refetch() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        // N outermost... A irrelevant loop N above relevant M,K -> refetch x8
+        let order_bad = vec![1usize, 0, 2]; // N, M, K
+        let mk = |tt: Vec<u64>, st: Vec<u64>| LevelMapping {
+            temporal_order: order_bad.clone(),
+            temporal_tile: tt,
+            spatial_tile: st,
+        };
+        let m = Mapping {
+            levels: vec![
+                mk(vec![8, 8, 8], vec![8, 8, 8]),
+                mk(vec![8, 8, 8], vec![8, 8, 8]),
+                mk(vec![1, 1, 1], vec![1, 1, 1]),
+                mk(vec![1, 1, 1], vec![1, 1, 1]),
+            ],
+        };
+        let ta = TileAnalysis::new(&p, &a, &m);
+        let aware = ta.movement(ReuseModel::OrderAware);
+        let agnostic = ta.movement(ReuseModel::OrderAgnostic);
+        let a_aware = aware.detail[0].last().unwrap().fills;
+        let a_agnostic = agnostic.detail[0].last().unwrap().fills;
+        assert!((a_aware - 512.0).abs() < 1e-9, "N above M,K refetches A: {a_aware}");
+        assert!((a_agnostic - 64.0).abs() < 1e-9, "data-centric model assumes reuse");
+    }
+
+    #[test]
+    fn multicast_counts_spatial_sharing() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        // parallelize N 4-way at the C2 (virtual, X-axis) level:
+        // A (M,K) is irrelevant to N -> multicast to 4 children
+        let order = vec![0usize, 1, 2];
+        let m = Mapping {
+            levels: vec![
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 2, 8] },
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 2, 8], spatial_tile: vec![8, 2, 8] },
+            ],
+        };
+        m.check(&p, &a).unwrap();
+        let ta = TileAnalysis::new(&p, &a, &m);
+        let mv = ta.movement(ReuseModel::OrderAware);
+        // detail[0] = A; last real level is L1 (index 3 in arch, 2 in real)
+        let a_l1 = mv.detail[0].last().unwrap();
+        assert!((a_l1.multicast - 4.0).abs() < 1e-9, "multicast={}", a_l1.multicast);
+        // B (K,N) has N relevant -> no multicast
+        let b_l1 = mv.detail[1].last().unwrap();
+        assert!((b_l1.multicast - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compute_reads_present_at_innermost() {
+        let p = gemm(4, 4, 4);
+        let a = presets::fig5_toy();
+        let m = Mapping::sequential(&p, &a);
+        let ta = TileAnalysis::new(&p, &a, &m);
+        let mv = ta.movement(ReuseModel::OrderAware);
+        let inner = mv.levels.last().unwrap();
+        // 64 MACs: >= 2*64 operand reads + 64 accum reads
+        assert!(inner.reads >= 192.0);
+        assert!(inner.writes >= 64.0);
+    }
+
+    #[test]
+    fn dram_level_holds_full_tensors() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let m = Mapping::sequential(&p, &a);
+        let ta = TileAnalysis::new(&p, &a, &m);
+        let mv = ta.movement(ReuseModel::OrderAware);
+        for (di, _) in p.data_spaces.iter().enumerate() {
+            assert_eq!(mv.detail[di][0].footprint, 64);
+            assert_eq!(mv.detail[di][0].refetch, 1.0);
+        }
+    }
+
+    #[test]
+    fn used_instances_track_fanout() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let order = vec![0usize, 1, 2];
+        let m = Mapping {
+            levels: vec![
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![4, 8, 8] }, // M 2-way
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![4, 8, 8], spatial_tile: vec![4, 2, 8] }, // N 4-way
+                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![4, 2, 8], spatial_tile: vec![4, 2, 8] },
+            ],
+        };
+        m.check(&p, &a).unwrap();
+        let ta = TileAnalysis::new(&p, &a, &m);
+        assert_eq!(ta.used_instances(0), 1);
+        assert_eq!(ta.used_instances(2), 2);
+        assert_eq!(ta.used_instances(3), 8);
+        assert_eq!(ta.movement(ReuseModel::OrderAware).pes_used, 8);
+    }
+}

@@ -1,0 +1,431 @@
+//! **Experiment drivers**: one function per figure/table of the paper's
+//! evaluation (§V), shared by `cargo bench` targets, the examples and the
+//! CLI so every consumer regenerates exactly the same rows.
+//!
+//! | paper artifact | driver |
+//! |---|---|
+//! | Fig. 3 (mapping sweep, DLRM layer, 16×16) | [`fig3_mapping_sweep`] |
+//! | Fig. 8 (TC native vs TTGT EDP, cloud)     | [`fig8_algorithm_exploration`] |
+//! | Fig. 9 (optimal intensli2 mappings)       | [`fig9_mappings`] |
+//! | Fig. 10 (EDP vs aspect ratio, flexible)   | [`fig10_aspect_ratio`] |
+//! | Fig. 11 (EDP vs fill bandwidth, chiplets) | [`fig11_chiplet_bandwidth`] |
+//! | Table III (TTGT GEMM dims)                | [`table3_ttgt_dims`] |
+
+use crate::arch::presets;
+use crate::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use crate::frontend::{self, ttgt_gemm, Workload};
+use crate::mappers::{HeuristicMapper, Mapper, RandomMapper, SearchResult};
+use crate::mapping::render_loop_nest;
+use crate::mapspace::{Constraints, MapSpace};
+use crate::report::{normalize_to_min, Table};
+use crate::util::rng::Rng;
+
+/// Search effort knob for the drivers (benches use `fast`, examples can
+/// afford `thorough`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effort {
+    Fast,
+    Thorough,
+}
+
+impl Effort {
+    fn samples(&self) -> usize {
+        match self {
+            Effort::Fast => 600,
+            Effort::Thorough => 4_000,
+        }
+    }
+}
+
+/// Run the standard two-mapper portfolio (random sampling + heuristic,
+/// §V-A uses "a mapper based on both heuristic and random sampling") and
+/// keep the better result.
+pub fn portfolio_search(
+    space: &MapSpace,
+    model: &dyn CostModel,
+    effort: Effort,
+    seed: u64,
+) -> Option<SearchResult> {
+    let rnd = RandomMapper::new(effort.samples(), seed).search(space, model);
+    let heu = HeuristicMapper::new(effort.samples() / 2, 60, seed ^ 0xABCD).search(space, model);
+    match (rnd, heu) {
+        (Some(a), Some(b)) => Some(if a.score <= b.score { a } else { b }),
+        (a, b) => a.or(b),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fig. 3
+// ---------------------------------------------------------------------
+
+/// Fig. 3: normalized energy and latency (with EDP) for a spread of
+/// mappings of a DLRM layer on the 16×16 edge accelerator.
+///
+/// Returns the table plus the raw (energy, latency, edp) triples.
+pub fn fig3_mapping_sweep(effort: Effort) -> (Table, Vec<(f64, f64, f64)>) {
+    let workload = frontend::dlrm_layers().remove(1); // DLRM-2, fits on edge
+    let problem = workload.problem();
+    let arch = presets::edge(); // 16x16, 3-level (DRAM/L2(+virtual)/L1)
+    let cons = Constraints::default();
+    let space = MapSpace::new(&problem, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+
+    // a diverse sample of legal mappings
+    let mut rng = Rng::new(2021);
+    let want = match effort {
+        Effort::Fast => 12,
+        Effort::Thorough => 24,
+    };
+    let mut picks: Vec<(String, f64, f64, f64)> = Vec::new();
+    let mut seen_partitions: Vec<String> = Vec::new();
+    let mut tries = 0;
+    while picks.len() < want && tries < effort.samples() * 20 {
+        tries += 1;
+        let Some(m) = space.sample_legal(&mut rng, 50) else { continue };
+        let name = m.partition_name(&problem);
+        // prefer distinct dataflows; allow duplicates once variety dries up
+        if seen_partitions.iter().filter(|p| **p == name).count() >= 2 {
+            continue;
+        }
+        if let Ok(e) = model.evaluate(&problem, &arch, &m) {
+            seen_partitions.push(name.clone());
+            picks.push((name, e.energy_j(), e.latency_s(), e.edp()));
+        }
+    }
+    // include the searched optimum as the reference point
+    if let Some(best) = portfolio_search(&space, &model, effort, 99) {
+        picks.push((
+            format!("best({})", best.mapping.partition_name(&problem)),
+            best.cost.energy_j(),
+            best.cost.latency_s(),
+            best.cost.edp(),
+        ));
+    }
+    picks.sort_by(|a, b| a.3.partial_cmp(&b.3).unwrap());
+
+    let energies: Vec<f64> = picks.iter().map(|p| p.1).collect();
+    let latencies: Vec<f64> = picks.iter().map(|p| p.2).collect();
+    let edps: Vec<f64> = picks.iter().map(|p| p.3).collect();
+    let (ne, nl, nd) = (
+        normalize_to_min(&energies),
+        normalize_to_min(&latencies),
+        normalize_to_min(&edps),
+    );
+    let mut table = Table::new(
+        "Fig 3: DLRM layer on 16x16 edge accelerator — mapping sweep",
+        &["mapping", "norm energy", "norm latency", "norm EDP"],
+    );
+    let mut raw = Vec::new();
+    for (i, (name, e, l, d)) in picks.iter().enumerate() {
+        table.row(vec![
+            name.clone(),
+            format!("{:.3}", ne[i]),
+            format!("{:.3}", nl[i]),
+            format!("{:.3}", nd[i]),
+        ]);
+        raw.push((*e, *l, *d));
+    }
+    (table, raw)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 8 / Fig. 9
+// ---------------------------------------------------------------------
+
+/// One Fig. 8 data point.
+#[derive(Debug, Clone)]
+pub struct Fig8Point {
+    pub problem: String,
+    pub tds: u64,
+    pub native_edp: f64,
+    pub ttgt_edp: f64,
+    pub native_util: f64,
+    pub ttgt_util: f64,
+    pub native: Option<SearchResult>,
+    pub ttgt: Option<SearchResult>,
+}
+
+/// Fig. 8: EDP of running each TCCG contraction natively vs via TTGT on
+/// the cloud accelerator (32×64 aspect ratio), Timeloop-style cost model.
+pub fn fig8_algorithm_exploration(effort: Effort) -> (Table, Vec<Fig8Point>) {
+    let arch = presets::cloud(32, 64);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    // the paper drives this study through the Timeloop cost model, whose
+    // memory-target abstraction parallelizes one dim per spatial level
+    let cons = Constraints::memory_target_style();
+    let mut table = Table::new(
+        "Fig 8: TC native vs TTGT on cloud (32x64) — EDP (J*s)",
+        &["problem", "TDS", "native EDP", "TTGT EDP", "winner", "native util", "TTGT util"],
+    );
+    let mut points = Vec::new();
+    for (spec, tds, workload) in frontend::tc_workloads() {
+        let native_p = workload.problem();
+        let native_space = MapSpace::new(&native_p, &arch, &cons);
+        let native = portfolio_search(&native_space, &model, effort, 7 + tds);
+
+        let plan = ttgt_gemm(&workload).expect("TC workload");
+        let gemm_w = plan.gemm_workload(&format!("{}_ttgt", workload.name));
+        let gemm_p = gemm_w.problem();
+        let gemm_space = MapSpace::new(&gemm_p, &arch, &cons);
+        let ttgt = portfolio_search(&gemm_space, &model, effort, 13 + tds);
+
+        let ne = native.as_ref().map(|r| r.score).unwrap_or(f64::INFINITY);
+        let te = ttgt.as_ref().map(|r| r.score).unwrap_or(f64::INFINITY);
+        let nu = native.as_ref().map(|r| r.cost.utilization).unwrap_or(0.0);
+        let tu = ttgt.as_ref().map(|r| r.cost.utilization).unwrap_or(0.0);
+        table.row(vec![
+            spec.name.to_string(),
+            tds.to_string(),
+            format!("{ne:.3e}"),
+            format!("{te:.3e}"),
+            if te < ne { "TTGT" } else { "native" }.to_string(),
+            format!("{nu:.2}"),
+            format!("{tu:.2}"),
+        ]);
+        points.push(Fig8Point {
+            problem: spec.name.to_string(),
+            tds,
+            native_edp: ne,
+            ttgt_edp: te,
+            native_util: nu,
+            ttgt_util: tu,
+            native,
+            ttgt,
+        });
+    }
+    (table, points)
+}
+
+/// Fig. 9: the optimal Union mappings found for intensli2 at TDS=16,
+/// native and via GEMM, rendered in the paper's loop-nest form.
+pub fn fig9_mappings(effort: Effort) -> String {
+    let arch = presets::cloud(32, 64);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::memory_target_style();
+    let spec = &frontend::TCCG[0];
+    let workload = frontend::tccg_problem(spec, 16);
+    let mut out = String::new();
+
+    let native_p = workload.problem();
+    let native_space = MapSpace::new(&native_p, &arch, &cons);
+    if let Some(best) = portfolio_search(&native_space, &model, effort, 23) {
+        out.push_str(&format!(
+            "(a) optimal Union mapping, intensli2 native, TDS=16 ({} partitioned, {} PEs)\n",
+            best.mapping.partition_name(&native_p),
+            best.mapping.pes_used()
+        ));
+        out.push_str(&best.mapping.to_string());
+        out.push_str(&render_loop_nest(&best.mapping, &native_p, &arch));
+    }
+    let plan = ttgt_gemm(&workload).unwrap();
+    let gemm_p = plan.gemm_workload("intensli2_ttgt").problem();
+    let gemm_space = MapSpace::new(&gemm_p, &arch, &cons);
+    if let Some(best) = portfolio_search(&gemm_space, &model, effort, 29) {
+        out.push_str(&format!(
+            "\n(b) optimal Union mapping, intensli2 via GEMM, TDS=16 ({} partitioned, {} PEs)\n",
+            best.mapping.partition_name(&gemm_p),
+            best.mapping.pes_used()
+        ));
+        out.push_str(&best.mapping.to_string());
+        out.push_str(&render_loop_nest(&best.mapping, &gemm_p, &arch));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Fig. 10
+// ---------------------------------------------------------------------
+
+/// Fig. 10: EDP of the Table IV DNN workloads across flexible-accelerator
+/// aspect ratios (MAESTRO-style cost model), edge and cloud. Returns one
+/// table per accelerator class and the normalized series
+/// `[(workload, Vec<(aspect label, norm EDP)>)]`.
+pub type Fig10Series = Vec<(String, Vec<(String, f64)>)>;
+
+pub fn fig10_aspect_ratio(effort: Effort) -> (Table, Table, Fig10Series) {
+    let model = MaestroModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let workloads = frontend::dnn_workloads();
+    let mut series: Fig10Series = Vec::new();
+
+    let mut edge_table = Table::new(
+        "Fig 10(a): EDP vs aspect ratio, edge (256 PEs), normalized per workload",
+        &["workload", "1x256", "2x128", "4x64", "8x32", "16x16"],
+    );
+    let mut cloud_table = Table::new(
+        "Fig 10(b): EDP vs aspect ratio, cloud (2048 PEs), normalized per workload",
+        &["workload", "1x2048", "2x1024", "4x512", "8x256", "16x128", "32x64"],
+    );
+
+    for (class, ratios, table) in [
+        ("edge", presets::edge_aspect_ratios(), &mut edge_table),
+        ("cloud", presets::cloud_aspect_ratios(), &mut cloud_table),
+    ] {
+        for w in &workloads {
+            let problem = w.problem();
+            // search per ratio, then cross-evaluate every candidate on
+            // every ratio (evaluate() rejects fan-outs the ratio cannot
+            // host) so search noise does not masquerade as a hardware
+            // preference
+            let mut candidates: Vec<crate::mapping::Mapping> = Vec::new();
+            let archs: Vec<crate::arch::Arch> = ratios
+                .iter()
+                .map(|&(r, c)| {
+                    if class == "edge" {
+                        presets::edge_flexible(r, c)
+                    } else {
+                        presets::cloud(r, c)
+                    }
+                })
+                .collect();
+            for (i, arch) in archs.iter().enumerate() {
+                let space = MapSpace::new(&problem, arch, &cons);
+                if let Some(best) = portfolio_search(&space, &model, effort, 31 + i as u64) {
+                    candidates.push(best.mapping);
+                }
+            }
+            let mut edps = Vec::new();
+            let mut labels = Vec::new();
+            for (arch, &(r, c)) in archs.iter().zip(&ratios) {
+                let best = candidates
+                    .iter()
+                    .filter_map(|m| model.evaluate(&problem, arch, m).ok())
+                    .map(|e| e.edp())
+                    .fold(f64::INFINITY, f64::min);
+                edps.push(best);
+                labels.push(format!("{r}x{c}"));
+            }
+            let norm = normalize_to_min(&edps);
+            let mut row = vec![w.name.clone()];
+            row.extend(norm.iter().map(|v| format!("{v:.2}")));
+            table.row(row);
+            series.push((
+                format!("{}:{}", class, w.name),
+                labels.into_iter().zip(norm).collect(),
+            ));
+        }
+    }
+    (edge_table, cloud_table, series)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 11
+// ---------------------------------------------------------------------
+
+/// The fill bandwidths (GB/s) swept in Fig. 11.
+pub const FIG11_FILL_BW: [f64; 8] = [1.0, 2.0, 4.0, 6.0, 8.0, 12.0, 16.0, 32.0];
+
+/// Fig. 11: EDP on the 16-chiplet (4096-PE) package as a function of the
+/// per-chiplet DRAM→GLB fill bandwidth, Timeloop-style model + Accelergy
+/// energies. Returns the table and per-workload normalized EDP series.
+pub fn fig11_chiplet_bandwidth(effort: Effort) -> (Table, Fig10Series) {
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    // Timeloop-style model drives the chiplet study (§V-C)
+    let cons = Constraints::memory_target_style();
+    // representative subset across the three model families
+    let workloads: Vec<Workload> = {
+        let mut v = frontend::resnet50_layers();
+        v.push(frontend::dlrm_layers().remove(0));
+        v.push(frontend::bert_layers().remove(0));
+        v
+    };
+    let mut header = vec!["workload".to_string()];
+    header.extend(FIG11_FILL_BW.iter().map(|b| format!("{b} GB/s")));
+    let mut table = Table::new(
+        "Fig 11: EDP vs per-chiplet fill bandwidth (16 chiplets, 4096 PEs), normalized per workload",
+        &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut series: Fig10Series = Vec::new();
+    for w in &workloads {
+        let problem = w.problem();
+        // the sweep only changes fill bandwidth, so mapping legality is
+        // bandwidth-independent: search at anchor bandwidths (bw-bound,
+        // mid, compute-bound regimes), then evaluate the candidate pool
+        // at every point and keep the best — the per-point optimum is at
+        // least as good as any fixed candidate, and the series is free
+        // of search noise
+        let mut candidates: Vec<crate::mapping::Mapping> = Vec::new();
+        for (i, &bw) in [1.0, 8.0, 32.0].iter().enumerate() {
+            let arch = presets::chiplet16(bw);
+            let space = MapSpace::new(&problem, &arch, &cons);
+            if let Some(best) = portfolio_search(&space, &model, effort, 41 + i as u64) {
+                candidates.push(best.mapping);
+            }
+        }
+        let mut edps = Vec::new();
+        let mut labels = Vec::new();
+        for &bw in &FIG11_FILL_BW {
+            let arch = presets::chiplet16(bw);
+            let best = candidates
+                .iter()
+                .filter_map(|m| model.evaluate(&problem, &arch, m).ok())
+                .map(|e| e.edp())
+                .fold(f64::INFINITY, f64::min);
+            edps.push(best);
+            labels.push(format!("{bw}"));
+        }
+        let norm = normalize_to_min(&edps);
+        let mut row = vec![w.name.clone()];
+        row.extend(norm.iter().map(|v| format!("{v:.2}")));
+        table.row(row);
+        series.push((w.name.clone(), labels.into_iter().zip(norm).collect()));
+    }
+    (table, series)
+}
+
+// ---------------------------------------------------------------------
+// Table III
+// ---------------------------------------------------------------------
+
+/// Table III: the TC problems and their TTGT GEMM dimension sizes.
+pub fn table3_ttgt_dims() -> Table {
+    let mut t = Table::new(
+        "Table III: TC problems and TTGT GEMM dimension sizes",
+        &["name", "equation", "TDS", "M", "N", "K"],
+    );
+    for (spec, tds, w) in frontend::tc_workloads() {
+        let plan = ttgt_gemm(&w).unwrap();
+        t.row(vec![
+            spec.name.to_string(),
+            spec.equation.to_string(),
+            tds.to_string(),
+            plan.m.to_string(),
+            plan.n.to_string(),
+            plan.k.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_matches_paper_exactly() {
+        let t = table3_ttgt_dims();
+        assert_eq!(t.rows.len(), 6);
+        let find = |name: &str, tds: &str| -> Vec<String> {
+            t.rows
+                .iter()
+                .find(|r| r[0] == name && r[2] == tds)
+                .unwrap()
+                .clone()
+        };
+        assert_eq!(find("intensli2", "64")[3..6], ["262144", "64", "64"]);
+        assert_eq!(find("ccsd7", "64")[3..6], ["4096", "64", "4096"]);
+        assert_eq!(find("ccsd-t4", "32")[3..6], ["32768", "32768", "32"]);
+    }
+
+    #[test]
+    fn fig3_produces_spread() {
+        let (table, raw) = fig3_mapping_sweep(Effort::Fast);
+        assert!(raw.len() >= 5, "need a spread of mappings, got {}", raw.len());
+        assert_eq!(table.rows.len(), raw.len());
+        // EDP spread across mappings must be large (paper's point)
+        let edps: Vec<f64> = raw.iter().map(|r| r.2).collect();
+        let max = edps.iter().copied().fold(f64::MIN, f64::max);
+        let min = edps.iter().copied().fold(f64::MAX, f64::min);
+        assert!(max / min > 2.0, "EDP spread {max}/{min} too small");
+    }
+}

@@ -1,0 +1,225 @@
+//! Union **frontend**: the workload zoo used in the paper's evaluation
+//! (Tables III & IV) and the algorithm transforms the frontend can apply
+//! before handing a problem to the optimizer (im2col, TTGT — §II-A, §V-A).
+//!
+//! A [`Workload`] is the frontend-level description (what TensorFlow or
+//! the COMET DSL would provide). It can be turned into a mini-MLIR module
+//! ([`Workload::to_ir`]), lowered through the dialect pipeline
+//! ([`Workload::lower`]) and extracted as a Union [`Problem`] — or, for
+//! convenience, converted to a [`Problem`] directly via builders that are
+//! *tested equal* to the full IR path.
+
+mod transforms;
+mod zoo;
+
+pub use transforms::{im2col_gemm, ttgt_gemm, TtgtPlan};
+pub use zoo::{
+    bert_layers, dlrm_layers, dnn_workloads, resnet50_layers, tc_workloads, tccg_problem,
+    TcSpec, TCCG,
+};
+
+use crate::ir::core::{DType, Module, Type};
+use crate::ir::dialects::{ta, tosa};
+use crate::ir::lower::{linalg_to_affine, lower_to_linalg};
+use crate::problem::{self, Problem};
+
+/// A frontend-level tensor workload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    pub name: String,
+    pub kind: WorkloadKind,
+}
+
+/// The supported workload shapes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadKind {
+    /// CONV2D with output-size semantics (Algorithm 1).
+    Conv2d { n: u64, k: u64, c: u64, x: u64, y: u64, r: u64, s: u64, stride: u64 },
+    /// GEMM `M×K · K×N` (fully-connected layers lower to this).
+    Gemm { m: u64, n: u64, k: u64 },
+    /// Tensor contraction: einsum equation + per-index extents.
+    Tc { equation: String, extents: Vec<(char, u64)> },
+}
+
+impl Workload {
+    pub fn conv2d(name: &str, n: u64, k: u64, c: u64, x: u64, y: u64, r: u64, s: u64, stride: u64) -> Workload {
+        Workload { name: name.into(), kind: WorkloadKind::Conv2d { n, k, c, x, y, r, s, stride } }
+    }
+
+    pub fn gemm(name: &str, m: u64, n: u64, k: u64) -> Workload {
+        Workload { name: name.into(), kind: WorkloadKind::Gemm { m, n, k } }
+    }
+
+    pub fn tc(name: &str, equation: &str, extents: &[(char, u64)]) -> Workload {
+        Workload {
+            name: name.into(),
+            kind: WorkloadKind::Tc { equation: equation.into(), extents: extents.to_vec() },
+        }
+    }
+
+    /// Build the frontend IR module (tosa ops for ML workloads, ta ops for
+    /// HPC workloads) — what the TF/COMET importers would emit.
+    pub fn to_ir(&self) -> Module {
+        let mut m = Module::new(&self.name);
+        match &self.kind {
+            WorkloadKind::Conv2d { n, k, c, x, y, r, s, stride } => {
+                // input H = (X-1)*stride + R (output-size semantics)
+                let h = (x - 1) * stride + r;
+                let w = (y - 1) * stride + s;
+                let input = m.new_value("I", Type::tensor(&[*n, h, w, *c], DType::F32));
+                let weight = m.new_value("W", Type::tensor(&[*k, *r, *s, *c], DType::F32));
+                let (op, _) = tosa::conv2d(&mut m, input, weight, (*stride, *stride));
+                m.ops.push(op);
+            }
+            WorkloadKind::Gemm { m: mm, n, k } => {
+                let a = m.new_value("A", Type::tensor(&[*mm, *k], DType::F32));
+                let b = m.new_value("B", Type::tensor(&[*k, *n], DType::F32));
+                let (op, _) = tosa::matmul(&mut m, a, b);
+                m.ops.push(op);
+            }
+            WorkloadKind::Tc { equation, extents } => {
+                let (ain, bin, _) = ta::parse_equation(equation);
+                let extent = |c: char| -> u64 {
+                    extents
+                        .iter()
+                        .find(|(e, _)| *e == c)
+                        .unwrap_or_else(|| panic!("extent for index {c} missing"))
+                        .1
+                };
+                let ashape: Vec<u64> = ain.iter().map(|&c| extent(c)).collect();
+                let bshape: Vec<u64> = bin.iter().map(|&c| extent(c)).collect();
+                let a = m.new_value("A", Type::tensor(&ashape, DType::F32));
+                let b = m.new_value("B", Type::tensor(&bshape, DType::F32));
+                let (op, _) = ta::contract(&mut m, equation, a, b);
+                m.ops.push(op);
+            }
+        }
+        m
+    }
+
+    /// Lower through the full dialect pipeline to an affine module.
+    /// `use_ttgt` selects the COMET TTGT rewrite for TC workloads.
+    pub fn lower(&self, use_ttgt: bool) -> Module {
+        linalg_to_affine(&lower_to_linalg(&self.to_ir(), use_ttgt))
+    }
+
+    /// Extract the Union problem via the IR pipeline.
+    pub fn problem_via_ir(&self, use_ttgt: bool) -> Result<Problem, String> {
+        let mut p = crate::problem::problem_from_affine(&self.lower(use_ttgt))?;
+        p.name = self.name.clone();
+        Ok(p)
+    }
+
+    /// Direct problem construction (no IR round trip) — tested equivalent
+    /// to [`Workload::problem_via_ir`].
+    pub fn problem(&self) -> Problem {
+        let mut p = match &self.kind {
+            WorkloadKind::Conv2d { n, k, c, x, y, r, s, stride } => {
+                problem::conv2d(*n, *k, *c, *x, *y, *r, *s, *stride)
+            }
+            WorkloadKind::Gemm { m, n, k } => problem::gemm(*m, *n, *k),
+            WorkloadKind::Tc { equation, extents } => {
+                let (ain, bin, cout) = ta::parse_equation(equation);
+                let dims: Vec<(String, u64)> = {
+                    // output indices then contracted, matching ta_to_linalg
+                    let mut order: Vec<char> = cout.clone();
+                    order.extend(ain.iter().filter(|c| bin.contains(c) && !cout.contains(c)));
+                    order
+                        .iter()
+                        .map(|c| {
+                            let e = extents
+                                .iter()
+                                .find(|(x, _)| x == c)
+                                .unwrap_or_else(|| panic!("extent for {c} missing"))
+                                .1;
+                            (c.to_uppercase().to_string(), e)
+                        })
+                        .collect()
+                };
+                let dims_ref: Vec<(&str, u64)> =
+                    dims.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+                let names = |cs: &[char]| -> Vec<String> {
+                    cs.iter().map(|c| c.to_uppercase().to_string()).collect()
+                };
+                let a_names = names(&ain);
+                let b_names = names(&bin);
+                let c_names = names(&cout);
+                problem::tensor_contraction(
+                    &self.name,
+                    &dims_ref,
+                    &a_names.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                    &b_names.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                    &c_names.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                )
+            }
+        };
+        p.name = self.name.clone();
+        p
+    }
+
+    /// Total MACs of this workload.
+    pub fn macs(&self) -> u64 {
+        self.problem().total_macs()
+    }
+}
+
+/// Convenience: a GEMM problem without going through a workload.
+pub fn gemm_problem(m: u64, n: u64, k: u64) -> Problem {
+    problem::gemm(m, n, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_problem_matches_ir_path() {
+        let w = Workload::gemm("g", 32, 16, 8);
+        let direct = w.problem();
+        let via_ir = w.problem_via_ir(false).unwrap();
+        assert_eq!(direct.dim_sizes(), via_ir.dim_sizes());
+        assert_eq!(direct.total_macs(), via_ir.total_macs());
+        assert_eq!(direct.operation, via_ir.operation);
+        assert_eq!(direct.reduction_dims(), via_ir.reduction_dims());
+    }
+
+    #[test]
+    fn conv_problem_matches_ir_path() {
+        let w = Workload::conv2d("c", 2, 8, 4, 14, 14, 3, 3, 1);
+        let direct = w.problem();
+        let via_ir = w.problem_via_ir(false).unwrap();
+        assert_eq!(direct.total_macs(), via_ir.total_macs());
+        assert_eq!(direct.dims.len(), via_ir.dims.len());
+        // footprints agree for the full problem
+        for (d_ds, i_ds) in direct.data_spaces.iter().zip(&via_ir.data_spaces) {
+            assert_eq!(
+                d_ds.full_size(&direct.dims),
+                i_ds.full_size(&via_ir.dims),
+                "{} vs {}",
+                d_ds.name,
+                i_ds.name
+            );
+        }
+    }
+
+    #[test]
+    fn tc_problem_matches_ir_path() {
+        let w = Workload::tc(
+            "intensli2",
+            "dbea,ec->abcd",
+            &[('a', 16), ('b', 16), ('c', 16), ('d', 16), ('e', 16)],
+        );
+        let direct = w.problem();
+        let via_ir = w.problem_via_ir(false).unwrap();
+        assert_eq!(direct.total_macs(), via_ir.total_macs());
+        assert_eq!(direct.dims.len(), via_ir.dims.len());
+    }
+
+    #[test]
+    fn conv_strided_input_roundtrip() {
+        // output-size semantics: X=28, stride 2, R=3 -> H = 57
+        let w = Workload::conv2d("c", 1, 8, 4, 28, 28, 3, 3, 2);
+        let p = w.problem_via_ir(false).unwrap();
+        assert_eq!(p.dims[p.dim_index("X").unwrap()].size, 28);
+    }
+}

@@ -1,0 +1,148 @@
+//! Frontend **algorithm transforms** (paper §II-A, §V-A): the frontend
+//! decides whether to run an operation natively or rewrite it — im2col
+//! turns CONV2D into GEMM (the TPU route), TTGT turns a tensor
+//! contraction into transpose–transpose–GEMM–transpose (the COMET route).
+
+use super::{Workload, WorkloadKind};
+use crate::ir::dialects::ta;
+
+/// A TTGT rewrite plan: the GEMM the contraction collapses to, plus the
+/// index groups of each transpose/reshape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TtgtPlan {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Output indices drawn from A (row group).
+    pub free_a: Vec<char>,
+    /// Output indices drawn from B (column group).
+    pub free_b: Vec<char>,
+    /// Contracted indices.
+    pub contracted: Vec<char>,
+}
+
+impl TtgtPlan {
+    /// The GEMM workload realizing this plan.
+    pub fn gemm_workload(&self, name: &str) -> Workload {
+        Workload::gemm(name, self.m, self.n, self.k)
+    }
+
+    /// Memory footprint in words of the matricized operands + result —
+    /// equal to the native footprint, as the paper notes ("TTGT does not
+    /// incur duplicated elements").
+    pub fn footprint_words(&self) -> u64 {
+        self.m * self.k + self.k * self.n + self.m * self.n
+    }
+}
+
+/// Compute the TTGT plan of a TC workload (Table III's "GEMM Dimension
+/// Sizes"). Errors for non-TC workloads.
+pub fn ttgt_gemm(w: &Workload) -> Result<TtgtPlan, String> {
+    let WorkloadKind::Tc { equation, extents } = &w.kind else {
+        return Err(format!("{} is not a tensor contraction", w.name));
+    };
+    let (ain, bin, cout) = ta::parse_equation(equation);
+    let extent = |c: char| -> Result<u64, String> {
+        extents
+            .iter()
+            .find(|(e, _)| *e == c)
+            .map(|(_, s)| *s)
+            .ok_or_else(|| format!("missing extent for index {c}"))
+    };
+    let free_a: Vec<char> = cout.iter().filter(|c| ain.contains(c)).copied().collect();
+    let free_b: Vec<char> = cout
+        .iter()
+        .filter(|c| bin.contains(c) && !free_a.contains(c))
+        .copied()
+        .collect();
+    let contracted: Vec<char> = ain
+        .iter()
+        .filter(|c| bin.contains(c) && !cout.contains(c))
+        .copied()
+        .collect();
+    if contracted.is_empty() {
+        return Err("no contracted index (outer product not supported)".into());
+    }
+    let prod = |cs: &[char]| -> Result<u64, String> {
+        cs.iter().map(|&c| extent(c)).product()
+    };
+    Ok(TtgtPlan {
+        m: prod(&free_a)?,
+        n: prod(&free_b)?,
+        k: prod(&contracted)?,
+        free_a,
+        free_b,
+        contracted,
+    })
+}
+
+/// im2col rewrite of a CONV2D workload to GEMM: `M = N·X·Y`, `N = K`,
+/// `K = C·R·S` (§II-A: how TPU-class accelerators run convolutions).
+pub fn im2col_gemm(w: &Workload) -> Result<Workload, String> {
+    let WorkloadKind::Conv2d { n, k, c, x, y, r, s, .. } = &w.kind else {
+        return Err(format!("{} is not a CONV2D", w.name));
+    };
+    Ok(Workload::gemm(
+        &format!("{}_im2col", w.name),
+        n * x * y,
+        *k,
+        c * r * s,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttgt_preserves_mac_count() {
+        for (_, _, w) in crate::frontend::tc_workloads() {
+            let plan = ttgt_gemm(&w).unwrap();
+            let gemm = plan.gemm_workload("g");
+            assert_eq!(gemm.macs(), w.macs(), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn ttgt_preserves_footprint() {
+        // "the memory footprint for both running TC natively and running
+        // TC with TTGT have the same memory footprint" (§V-A)
+        for (_, _, w) in crate::frontend::tc_workloads() {
+            let plan = ttgt_gemm(&w).unwrap();
+            let p = w.problem();
+            let native: u64 = p
+                .data_spaces
+                .iter()
+                .map(|ds| ds.full_size(&p.dims))
+                .sum();
+            assert_eq!(plan.footprint_words(), native, "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn im2col_preserves_mac_count() {
+        for w in crate::frontend::resnet50_layers() {
+            let g = im2col_gemm(&w).unwrap();
+            assert_eq!(g.macs(), w.macs(), "{}", w.name);
+        }
+    }
+
+    #[test]
+    fn im2col_rejects_gemm() {
+        assert!(im2col_gemm(&Workload::gemm("g", 2, 2, 2)).is_err());
+    }
+
+    #[test]
+    fn ttgt_rejects_conv() {
+        assert!(ttgt_gemm(&Workload::conv2d("c", 1, 1, 1, 2, 2, 1, 1, 1)).is_err());
+    }
+
+    #[test]
+    fn ttgt_groups_partition_indices() {
+        let w = crate::frontend::tccg_problem(&crate::frontend::TCCG[2], 16); // ccsd-t4
+        let plan = ttgt_gemm(&w).unwrap();
+        assert_eq!(plan.free_a, vec!['b', 'd', 'f']);
+        assert_eq!(plan.free_b, vec!['a', 'c', 'e']);
+        assert_eq!(plan.contracted, vec!['g']);
+    }
+}

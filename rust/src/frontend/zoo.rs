@@ -1,0 +1,168 @@
+//! The paper's evaluation workloads: Table IV DNN layers (ResNet50, DLRM,
+//! BERT from MLPerf) and Table III tensor contractions (TCCG benchmark
+//! suite: intensli2, ccsd7, ccsd-t4).
+
+use super::Workload;
+
+/// Table IV — ResNet50 representative layers (CONV2D).
+///
+/// * ResNet50-1: N=32 K=C=64 X=Y=56 R=S=1
+/// * ResNet50-2: N=32 K=C=64 X=Y=56 R=S=3
+/// * ResNet50-3: N=32 K=512 C=1024 X=Y=14 R=S=1
+pub fn resnet50_layers() -> Vec<Workload> {
+    vec![
+        Workload::conv2d("ResNet50-1", 32, 64, 64, 56, 56, 1, 1, 1),
+        Workload::conv2d("ResNet50-2", 32, 64, 64, 56, 56, 3, 3, 1),
+        Workload::conv2d("ResNet50-3", 32, 512, 1024, 14, 14, 1, 1, 1),
+    ]
+}
+
+/// Table IV — DLRM fully-connected layers (GEMM: M=N batch, K=NIN, N=NON).
+///
+/// * DLRM-1: N=512 NIN=1024 NON=1024
+/// * DLRM-2: N=512 NIN=1024 NON=64
+/// * DLRM-3: N=512 NIN=2048 NON=2048
+pub fn dlrm_layers() -> Vec<Workload> {
+    vec![
+        Workload::gemm("DLRM-1", 512, 1024, 1024),
+        Workload::gemm("DLRM-2", 512, 64, 1024),
+        Workload::gemm("DLRM-3", 512, 2048, 2048),
+    ]
+}
+
+/// Table IV — BERT fully-connected layers.
+///
+/// * BERT-1: N=256 NIN=768 NON=768
+/// * BERT-2: N=256 NIN=3072 NON=768
+/// * BERT-3: N=256 NIN=768 NON=3072
+pub fn bert_layers() -> Vec<Workload> {
+    vec![
+        Workload::gemm("BERT-1", 256, 768, 768),
+        Workload::gemm("BERT-2", 256, 768, 3072),
+        Workload::gemm("BERT-3", 256, 3072, 768),
+    ]
+}
+
+/// All nine Table IV DNN workloads, in the paper's order.
+pub fn dnn_workloads() -> Vec<Workload> {
+    let mut v = resnet50_layers();
+    v.extend(dlrm_layers());
+    v.extend(bert_layers());
+    v
+}
+
+/// One Table III TCCG problem family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TcSpec {
+    pub name: &'static str,
+    pub equation: &'static str,
+    pub indices: &'static str,
+    /// The Tensor Dimension Sizes the paper evaluates for this problem
+    /// (Fig. 8: 16/64 for intensli2 and ccsd7, 16/32 for ccsd-t4).
+    pub tds_values: [u64; 2],
+}
+
+/// Table III — the three TCCG tensor contractions.
+pub const TCCG: [TcSpec; 3] = [
+    TcSpec {
+        name: "intensli2",
+        // C[a,b,c,d] = A[d,b,e,a] * B[e,c]
+        equation: "dbea,ec->abcd",
+        indices: "abcde",
+        tds_values: [16, 64],
+    },
+    TcSpec {
+        name: "ccsd7",
+        // C[a,b,c] = A[a,d,e,c] * B[e,b,d]
+        equation: "adec,ebd->abc",
+        indices: "abcde",
+        tds_values: [16, 64],
+    },
+    TcSpec {
+        name: "ccsd-t4",
+        // C[a,b,c,d,e,f] = A[d,f,g,b] * B[g,e,a,c]
+        equation: "dfgb,geac->abcdef",
+        indices: "abcdefg",
+        tds_values: [16, 32],
+    },
+];
+
+/// Build a Table III TC workload at a given Tensor Dimension Size (every
+/// index gets extent `tds`, per §V).
+pub fn tccg_problem(spec: &TcSpec, tds: u64) -> Workload {
+    let extents: Vec<(char, u64)> = spec.indices.chars().map(|c| (c, tds)).collect();
+    Workload::tc(&format!("{}_tds{}", spec.name, tds), spec.equation, &extents)
+}
+
+/// All Fig. 8 TC workload instances: (spec, tds, workload).
+pub fn tc_workloads() -> Vec<(&'static TcSpec, u64, Workload)> {
+    TCCG.iter()
+        .flat_map(|spec| {
+            spec.tds_values
+                .iter()
+                .map(move |&tds| (spec, tds, tccg_problem(spec, tds)))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::ttgt_gemm;
+
+    #[test]
+    fn table_iv_has_nine_workloads() {
+        let w = dnn_workloads();
+        assert_eq!(w.len(), 9);
+        assert_eq!(w[0].name, "ResNet50-1");
+        assert_eq!(w[8].name, "BERT-3");
+    }
+
+    #[test]
+    fn dlrm2_dimensions_match_table_iv() {
+        let p = dlrm_layers()[1].problem();
+        // N=512 NIN=1024 NON=64 -> GEMM M=512 N=64 K=1024
+        assert_eq!(p.dims[p.dim_index("M").unwrap()].size, 512);
+        assert_eq!(p.dims[p.dim_index("N").unwrap()].size, 64);
+        assert_eq!(p.dims[p.dim_index("K").unwrap()].size, 1024);
+    }
+
+    #[test]
+    fn resnet_macs_are_plausible() {
+        let layers = resnet50_layers();
+        // ResNet50-2 (3x3) has 9x the MACs of ResNet50-1 (1x1)
+        assert_eq!(layers[1].macs(), layers[0].macs() * 9);
+    }
+
+    /// The Table III TTGT GEMM dimension sizes, exactly as printed.
+    #[test]
+    fn table_iii_gemm_dims_exact() {
+        let cases: [(&str, u64, (u64, u64, u64)); 6] = [
+            ("intensli2", 64, (262144, 64, 64)),
+            ("intensli2", 16, (4096, 16, 16)),
+            ("ccsd7", 64, (4096, 64, 4096)),
+            ("ccsd7", 16, (256, 16, 256)),
+            ("ccsd-t4", 32, (32768, 32768, 32)),
+            ("ccsd-t4", 16, (4096, 4096, 16)),
+        ];
+        for (name, tds, (m, n, k)) in cases {
+            let spec = TCCG.iter().find(|s| s.name == name).unwrap();
+            let w = tccg_problem(spec, tds);
+            let plan = ttgt_gemm(&w).unwrap();
+            assert_eq!((plan.m, plan.n, plan.k), (m, n, k), "{name} TDS={tds}");
+        }
+    }
+
+    #[test]
+    fn tc_workloads_cover_fig8() {
+        let all = tc_workloads();
+        assert_eq!(all.len(), 6);
+    }
+
+    #[test]
+    fn tccg_problems_validate() {
+        for (_, _, w) in tc_workloads() {
+            w.problem().validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Affine expressions and maps — the index arithmetic MLIR's `affine` and
+//! `linalg` dialects use, restricted to the non-negative linear forms that
+//! spatial-accelerator cost models accept (`Σ coefᵢ·dᵢ + c`).
+
+use std::fmt;
+
+/// `Σ terms(coef · dim) + konst` over iteration dimensions `d0..dn`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AffineExpr {
+    /// (dimension index, coefficient) pairs; no duplicate dims.
+    pub terms: Vec<(usize, i64)>,
+    pub konst: i64,
+}
+
+impl AffineExpr {
+    /// `dᵢ`
+    pub fn dim(i: usize) -> AffineExpr {
+        AffineExpr { terms: vec![(i, 1)], konst: 0 }
+    }
+
+    /// `c·dᵢ`
+    pub fn scaled(i: usize, c: i64) -> AffineExpr {
+        AffineExpr { terms: vec![(i, c)], konst: 0 }
+    }
+
+    /// constant
+    pub fn konst(c: i64) -> AffineExpr {
+        AffineExpr { terms: vec![], konst: c }
+    }
+
+    /// Sum of two expressions, merging duplicate dims.
+    pub fn add(&self, other: &AffineExpr) -> AffineExpr {
+        let mut terms = self.terms.clone();
+        for &(d, c) in &other.terms {
+            if let Some(t) = terms.iter_mut().find(|(td, _)| *td == d) {
+                t.1 += c;
+            } else {
+                terms.push((d, c));
+            }
+        }
+        terms.retain(|&(_, c)| c != 0);
+        terms.sort_by_key(|&(d, _)| d);
+        AffineExpr { terms, konst: self.konst + other.konst }
+    }
+
+    /// Evaluate at a point of the iteration space.
+    pub fn eval(&self, point: &[i64]) -> i64 {
+        self.terms.iter().map(|&(d, c)| c * point[d]).sum::<i64>() + self.konst
+    }
+
+    /// True if the expression is a single dim with coefficient 1.
+    pub fn is_identity_dim(&self) -> Option<usize> {
+        if self.konst == 0 && self.terms.len() == 1 && self.terms[0].1 == 1 {
+            Some(self.terms[0].0)
+        } else {
+            None
+        }
+    }
+
+    /// Dims referenced by this expression.
+    pub fn dims(&self) -> impl Iterator<Item = usize> + '_ {
+        self.terms.iter().map(|&(d, _)| d)
+    }
+}
+
+impl fmt::Display for AffineExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.terms.is_empty() {
+            return write!(f, "{}", self.konst);
+        }
+        for (i, &(d, c)) in self.terms.iter().enumerate() {
+            if i > 0 {
+                write!(f, " + ")?;
+            }
+            if c == 1 {
+                write!(f, "d{d}")?;
+            } else {
+                write!(f, "{c}*d{d}")?;
+            }
+        }
+        if self.konst != 0 {
+            write!(f, " + {}", self.konst)?;
+        }
+        Ok(())
+    }
+}
+
+/// `(d0, ..., dn) -> (e0, ..., em)`: one result expression per tensor rank.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct AffineMap {
+    pub num_dims: usize,
+    pub results: Vec<AffineExpr>,
+}
+
+impl AffineMap {
+    /// Identity map over `n` dims.
+    pub fn identity(n: usize) -> AffineMap {
+        AffineMap {
+            num_dims: n,
+            results: (0..n).map(AffineExpr::dim).collect(),
+        }
+    }
+
+    /// Projection map selecting the given dims (each coef 1).
+    pub fn select(num_dims: usize, dims: &[usize]) -> AffineMap {
+        AffineMap {
+            num_dims,
+            results: dims.iter().map(|&d| AffineExpr::dim(d)).collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.results.len()
+    }
+
+    /// True if every result is a distinct plain dim (a permutation-style
+    /// projection) — what the loop-level conformability pass checks for
+    /// "every loop re-ordering does not change the result".
+    pub fn is_projected_permutation(&self) -> bool {
+        let mut seen = vec![false; self.num_dims];
+        for r in &self.results {
+            match r.is_identity_dim() {
+                Some(d) if !seen[d] => seen[d] = true,
+                _ => return false,
+            }
+        }
+        true
+    }
+
+    /// Evaluate the map at an iteration point.
+    pub fn eval(&self, point: &[i64]) -> Vec<i64> {
+        self.results.iter().map(|e| e.eval(point)).collect()
+    }
+}
+
+impl fmt::Display for AffineMap {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "(")?;
+        for i in 0..self.num_dims {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "d{i}")?;
+        }
+        write!(f, ") -> (")?;
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{r}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_add_merges_dims() {
+        let a = AffineExpr::scaled(0, 2);
+        let b = AffineExpr::dim(0).add(&AffineExpr::dim(1));
+        let sum = a.add(&b);
+        assert_eq!(sum.terms, vec![(0, 3), (1, 1)]);
+    }
+
+    #[test]
+    fn expr_eval() {
+        // 2*d0 + d1 + 3 at (4, 5) = 16
+        let e = AffineExpr::scaled(0, 2)
+            .add(&AffineExpr::dim(1))
+            .add(&AffineExpr::konst(3));
+        assert_eq!(e.eval(&[4, 5]), 16);
+    }
+
+    #[test]
+    fn identity_map_is_projected_permutation() {
+        assert!(AffineMap::identity(4).is_projected_permutation());
+        assert!(AffineMap::select(5, &[2, 0, 4]).is_projected_permutation());
+    }
+
+    #[test]
+    fn conv_window_is_not_permutation() {
+        // x*2 + r
+        let e = AffineExpr::scaled(0, 2).add(&AffineExpr::dim(1));
+        let m = AffineMap { num_dims: 2, results: vec![e] };
+        assert!(!m.is_projected_permutation());
+    }
+
+    #[test]
+    fn duplicate_dim_not_permutation() {
+        let m = AffineMap::select(3, &[0, 0]);
+        assert!(!m.is_projected_permutation());
+    }
+
+    #[test]
+    fn display_forms() {
+        let m = AffineMap::identity(2);
+        assert_eq!(m.to_string(), "(d0, d1) -> (d0, d1)");
+    }
+}

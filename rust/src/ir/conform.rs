@@ -1,0 +1,258 @@
+//! Cost-model-dependent **conformability passes** (paper §III-A.3).
+//!
+//! Different cost models constrain which workloads they can evaluate:
+//! MAESTRO-style models accept a fixed set of high-level operations
+//! (CONV2D / GEMM / DWCONV), while Timeloop-style models accept any
+//! *perfectly-nested affine* loop nest with no conditionals whose loop
+//! re-orderings are semantics-preserving. These passes embody those
+//! checks so Union can route a problem to a compatible cost model.
+
+use super::core::{Module, Op};
+use crate::problem::Operation;
+
+/// Result of a conformability analysis.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Conformability {
+    /// The workload can be evaluated; carries the detected operation.
+    Conformable(Operation),
+    /// It cannot; carries a human-readable reason.
+    NotConformable(String),
+}
+
+impl Conformability {
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Conformability::Conformable(_))
+    }
+}
+
+fn parse_hint(hint: &str) -> Operation {
+    match hint {
+        "CONV2D" => Operation::Conv2d,
+        "GEMM" => Operation::Gemm,
+        "DWCONV" => Operation::DwConv,
+        "TC" => Operation::TensorContraction,
+        "MTTKRP" => Operation::Mttkrp,
+        _ => Operation::Generic,
+    }
+}
+
+/// **Operation-level** conformability: does the module contain exactly one
+/// tensor op whose high-level operation annotation is in `supported`?
+/// This is the check MAESTRO-style cost models need (§III-B.2).
+pub fn check_operation_level(m: &Module, supported: &[Operation]) -> Conformability {
+    let mut found: Option<Operation> = None;
+    let mut count = 0usize;
+    m.walk(|op| {
+        let hint = match op.opcode.as_str() {
+            "linalg.generic" | "affine.for" => {
+                op.attr("op_hint").and_then(|a| a.as_str()).map(parse_hint)
+            }
+            "tosa.conv2d" => Some(Operation::Conv2d),
+            "tosa.matmul" | "tosa.fully_connected" => Some(Operation::Gemm),
+            "ta.contract" => Some(Operation::TensorContraction),
+            _ => None,
+        };
+        if let Some(h) = hint {
+            // nested affine.for ops repeat the root hint; count roots only
+            if op.opcode != "affine.for" || op.attr("op_hint").is_some() {
+                if op.opcode == "affine.for" {
+                    // only the root for carries op_hint
+                    count += 1;
+                    found = Some(h);
+                } else if op.opcode != "affine.for" {
+                    count += 1;
+                    found = Some(h);
+                }
+            }
+        }
+    });
+    match (found, count) {
+        (None, _) => Conformability::NotConformable("no tensor operation found".into()),
+        (Some(op), 1) => {
+            if supported.contains(&op) {
+                Conformability::Conformable(op)
+            } else {
+                Conformability::NotConformable(format!(
+                    "operation {} not in the cost model's supported set",
+                    op.name()
+                ))
+            }
+        }
+        (Some(_), n) => Conformability::NotConformable(format!(
+            "expected a single tensor operation, found {n} (fuse or split first)"
+        )),
+    }
+}
+
+/// **Loop-level** conformability: is the module a perfectly-nested affine
+/// loop nest with affine indices, no conditionals, a single multiply-
+/// accumulate statement, and full reorderability? This is the check
+/// Timeloop-style cost models need (§III-B.2).
+pub fn check_loop_level(m: &Module) -> Conformability {
+    let root = match m.ops.iter().find(|o| o.opcode == "affine.for") {
+        Some(r) => r,
+        None => {
+            return Conformability::NotConformable("no affine loop nest found".into())
+        }
+    };
+    // collect the nest spine: each level must hold exactly one op which is
+    // either the next for or the start of the body
+    let mut cur = root;
+    loop {
+        if cur.regions.len() != 1 || cur.regions[0].blocks.len() != 1 {
+            return Conformability::NotConformable("malformed loop region".into());
+        }
+        let block = &cur.regions[0].blocks[0];
+        if block.ops.iter().any(|o| o.opcode.starts_with("scf.if") || o.opcode.starts_with("cf.")) {
+            return Conformability::NotConformable("conditionals are not allowed".into());
+        }
+        let inner_fors: Vec<&Op> =
+            block.ops.iter().filter(|o| o.opcode == "affine.for").collect();
+        match inner_fors.len() {
+            0 => break, // cur is the innermost loop; block.ops is the body
+            1 => {
+                if block.ops.len() != 1 {
+                    return Conformability::NotConformable(
+                        "imperfect nesting: statements alongside an inner loop".into(),
+                    );
+                }
+                cur = inner_fors[0];
+            }
+            _ => {
+                return Conformability::NotConformable(
+                    "imperfect nesting: multiple inner loops".into(),
+                )
+            }
+        }
+    }
+    // body checks: loads with affine maps, one store, mul/add chain
+    let body = &cur.regions[0].blocks[0].ops;
+    let loads = body.iter().filter(|o| o.opcode == "affine.load").count();
+    let stores: Vec<&Op> = body.iter().filter(|o| o.opcode == "affine.store").collect();
+    if loads < 2 {
+        return Conformability::NotConformable("body must read at least two tensors".into());
+    }
+    if stores.len() != 1 {
+        return Conformability::NotConformable(format!(
+            "body must have exactly one store, found {}",
+            stores.len()
+        ));
+    }
+    for op in body {
+        match op.opcode.as_str() {
+            "affine.load" | "affine.store" => {
+                let map = match op.attr("map") {
+                    Some(super::core::Attr::Map(m)) => m,
+                    _ => {
+                        return Conformability::NotConformable(
+                            "memory access without an affine map".into(),
+                        )
+                    }
+                };
+                // non-negative coefficients keep projections monotone
+                if map.results.iter().any(|e| e.terms.iter().any(|&(_, c)| c < 0)) {
+                    return Conformability::NotConformable(
+                        "negative affine coefficients are not supported".into(),
+                    );
+                }
+            }
+            "arith.mulf" | "arith.addf" | "arith.muli" | "arith.addi" => {}
+            other => {
+                return Conformability::NotConformable(format!(
+                    "unsupported op {other} in loop body"
+                ))
+            }
+        }
+    }
+    // reorderability: the output access map must be a projected permutation
+    // (pure accumulation), so any loop interchange preserves the result
+    if let Some(super::core::Attr::Map(out_map)) = stores[0].attr("map") {
+        if !out_map.is_projected_permutation() {
+            return Conformability::NotConformable(
+                "output access is not a projected permutation; reordering is unsafe".into(),
+            );
+        }
+    }
+    let hint = root
+        .attr("op_hint")
+        .and_then(|a| a.as_str())
+        .map(parse_hint)
+        .unwrap_or(Operation::Generic);
+    Conformability::Conformable(hint)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::{DType, Module, Type};
+    use crate::ir::dialects::tosa;
+    use crate::ir::lower::{linalg_to_affine, tosa_to_linalg};
+
+    fn gemm_affine() -> Module {
+        let mut m = Module::new("t");
+        let a = m.new_value("a", Type::tensor(&[8, 4], DType::F32));
+        let b = m.new_value("b", Type::tensor(&[4, 6], DType::F32));
+        let (op, _) = tosa::matmul(&mut m, a, b);
+        m.ops.push(op);
+        linalg_to_affine(&tosa_to_linalg(&m))
+    }
+
+    #[test]
+    fn gemm_is_loop_level_conformable() {
+        let m = gemm_affine();
+        let c = check_loop_level(&m);
+        assert_eq!(c, Conformability::Conformable(Operation::Gemm));
+    }
+
+    #[test]
+    fn gemm_is_operation_level_conformable_for_maestro() {
+        let m = gemm_affine();
+        let maestro_ops = [Operation::Conv2d, Operation::Gemm, Operation::DwConv];
+        assert!(check_operation_level(&m, &maestro_ops).is_ok());
+    }
+
+    #[test]
+    fn tc_not_operation_conformable_for_maestro() {
+        let mut m = Module::new("t");
+        let a = m.new_value("A", Type::tensor(&[4, 4, 4, 4], DType::F32));
+        let b = m.new_value("B", Type::tensor(&[4, 4], DType::F32));
+        let (op, _) = crate::ir::dialects::ta::contract(&mut m, "dbea,ec->abcd", a, b);
+        m.ops.push(op);
+        let maestro_ops = [Operation::Conv2d, Operation::Gemm, Operation::DwConv];
+        let c = check_operation_level(&m, &maestro_ops);
+        assert!(!c.is_ok());
+        // ... but its TTGT-lowered GEMM form is
+        let g = crate::ir::lower::ta_to_linalg(&m, true);
+        assert!(check_operation_level(&g, &maestro_ops).is_ok());
+    }
+
+    #[test]
+    fn conditional_rejected() {
+        let mut m = gemm_affine();
+        // splice an scf.if into the innermost body
+        fn innermost(op: &mut crate::ir::core::Op) -> &mut crate::ir::core::Op {
+            if op.regions[0].blocks[0].ops.iter().any(|o| o.opcode == "affine.for") {
+                let idx = op.regions[0].blocks[0]
+                    .ops
+                    .iter()
+                    .position(|o| o.opcode == "affine.for")
+                    .unwrap();
+                innermost(&mut op.regions[0].blocks[0].ops[idx])
+            } else {
+                op
+            }
+        }
+        let root = m.ops.iter_mut().find(|o| o.opcode == "affine.for").unwrap();
+        innermost(root).regions[0].blocks[0]
+            .ops
+            .push(crate::ir::core::Op::new("scf.if"));
+        assert!(!check_loop_level(&m).is_ok());
+    }
+
+    #[test]
+    fn empty_module_not_conformable() {
+        let m = Module::new("empty");
+        assert!(!check_loop_level(&m).is_ok());
+        assert!(!check_operation_level(&m, &[Operation::Gemm]).is_ok());
+    }
+}

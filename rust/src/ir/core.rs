@@ -1,0 +1,323 @@
+//! Core IR structures: modules, operations, attributes, values, regions —
+//! the "minimal fundamental concepts" of MLIR (paper §II-B).
+
+use std::fmt;
+
+use super::affine_map::AffineMap;
+
+/// Element type of tensor values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    BF16,
+    I32,
+    U8,
+}
+
+impl DType {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 => 2,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::I32 => "i32",
+            DType::U8 => "u8",
+        }
+    }
+}
+
+/// Compile-time type of an SSA value.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Type {
+    /// Ranked tensor with static shape.
+    Tensor { shape: Vec<u64>, dtype: DType },
+    /// Loop induction variable / index.
+    Index,
+    /// Scalar element.
+    Scalar(DType),
+}
+
+impl Type {
+    pub fn tensor(shape: &[u64], dtype: DType) -> Type {
+        Type::Tensor { shape: shape.to_vec(), dtype }
+    }
+
+    pub fn shape(&self) -> Option<&[u64]> {
+        match self {
+            Type::Tensor { shape, .. } => Some(shape),
+            _ => None,
+        }
+    }
+
+    pub fn dtype(&self) -> Option<DType> {
+        match self {
+            Type::Tensor { dtype, .. } => Some(*dtype),
+            Type::Scalar(d) => Some(*d),
+            Type::Index => None,
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Tensor { shape, dtype } => {
+                write!(f, "tensor<")?;
+                for s in shape {
+                    write!(f, "{s}x")?;
+                }
+                write!(f, "{}>", dtype.name())
+            }
+            Type::Index => write!(f, "index"),
+            Type::Scalar(d) => write!(f, "{}", d.name()),
+        }
+    }
+}
+
+/// Compile-time static information attached to an op (paper §II-B).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    Int(i64),
+    Ints(Vec<i64>),
+    F64(f64),
+    Str(String),
+    Strs(Vec<String>),
+    Bool(bool),
+    Map(AffineMap),
+    Maps(Vec<AffineMap>),
+}
+
+impl Attr {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Attr::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_ints(&self) -> Option<&[i64]> {
+        match self {
+            Attr::Ints(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Attr::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_strs(&self) -> Option<&[String]> {
+        match self {
+            Attr::Strs(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_maps(&self) -> Option<&[AffineMap]> {
+        match self {
+            Attr::Maps(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Handle to an SSA value stored in the module's value table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ValueId(pub usize);
+
+/// Handle identifying an op within its parent block (for diagnostics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpId(pub usize);
+
+/// A region: a list of blocks attached to an op (loop bodies, generic
+/// payloads).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Region {
+    pub blocks: Vec<Block>,
+}
+
+/// A block: arguments (e.g. induction variables) plus an op list.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Block {
+    pub args: Vec<ValueId>,
+    pub ops: Vec<Op>,
+}
+
+/// An operation: the unit of semantics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Op {
+    /// Fully-qualified opcode, `dialect.name` (e.g. `tosa.conv2d`).
+    pub opcode: String,
+    pub operands: Vec<ValueId>,
+    pub results: Vec<ValueId>,
+    pub attrs: Vec<(String, Attr)>,
+    pub regions: Vec<Region>,
+}
+
+impl Op {
+    pub fn new(opcode: &str) -> Op {
+        Op {
+            opcode: opcode.to_string(),
+            operands: Vec::new(),
+            results: Vec::new(),
+            attrs: Vec::new(),
+            regions: Vec::new(),
+        }
+    }
+
+    pub fn dialect(&self) -> &str {
+        self.opcode.split('.').next().unwrap_or("")
+    }
+
+    pub fn name(&self) -> &str {
+        self.opcode.split('.').nth(1).unwrap_or(&self.opcode)
+    }
+
+    pub fn attr(&self, key: &str) -> Option<&Attr> {
+        self.attrs.iter().find(|(k, _)| k == key).map(|(_, a)| a)
+    }
+
+    pub fn set_attr(&mut self, key: &str, a: Attr) {
+        if let Some(slot) = self.attrs.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = a;
+        } else {
+            self.attrs.push((key.to_string(), a));
+        }
+    }
+
+    /// Walk this op and all nested ops, depth-first.
+    pub fn walk<'a>(&'a self, f: &mut impl FnMut(&'a Op)) {
+        f(self);
+        for r in &self.regions {
+            for b in &r.blocks {
+                for op in &b.ops {
+                    op.walk(f);
+                }
+            }
+        }
+    }
+}
+
+/// A module: the top-level container, owning the value table.
+#[derive(Debug, Clone, Default)]
+pub struct Module {
+    pub name: String,
+    pub ops: Vec<Op>,
+    value_types: Vec<Type>,
+    value_names: Vec<String>,
+}
+
+impl Module {
+    pub fn new(name: &str) -> Module {
+        Module {
+            name: name.to_string(),
+            ops: Vec::new(),
+            value_types: Vec::new(),
+            value_names: Vec::new(),
+        }
+    }
+
+    /// Create a new SSA value of the given type.
+    pub fn new_value(&mut self, name: &str, ty: Type) -> ValueId {
+        let id = ValueId(self.value_types.len());
+        self.value_types.push(ty);
+        self.value_names.push(name.to_string());
+        id
+    }
+
+    pub fn value_type(&self, v: ValueId) -> &Type {
+        &self.value_types[v.0]
+    }
+
+    pub fn value_name(&self, v: ValueId) -> &str {
+        &self.value_names[v.0]
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.value_types.len()
+    }
+
+    /// Walk every op in the module, depth-first.
+    pub fn walk<'a>(&'a self, mut f: impl FnMut(&'a Op)) {
+        for op in &self.ops {
+            op.walk(&mut f);
+        }
+    }
+
+    /// Find the first op with the given opcode anywhere in the module.
+    pub fn find_op(&self, opcode: &str) -> Option<&Op> {
+        let mut found = None;
+        self.walk(|op| {
+            if found.is_none() && op.opcode == opcode {
+                found = Some(op as *const Op);
+            }
+        });
+        // SAFETY: pointer derived from &self borrow that is still live.
+        found.map(|p| unsafe { &*p })
+    }
+
+    /// Count ops with the given opcode.
+    pub fn count_ops(&self, opcode: &str) -> usize {
+        let mut n = 0;
+        self.walk(|op| {
+            if op.opcode == opcode {
+                n += 1;
+            }
+        });
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_values() {
+        let mut m = Module::new("t");
+        let v = m.new_value("x", Type::tensor(&[2, 3], DType::F32));
+        assert_eq!(m.value_type(v).shape(), Some(&[2u64, 3][..]));
+        assert_eq!(m.value_name(v), "x");
+    }
+
+    #[test]
+    fn op_attrs() {
+        let mut op = Op::new("tosa.conv2d");
+        op.set_attr("stride", Attr::Ints(vec![1, 1]));
+        assert_eq!(op.attr("stride").unwrap().as_ints(), Some(&[1i64, 1][..]));
+        op.set_attr("stride", Attr::Ints(vec![2, 2]));
+        assert_eq!(op.attr("stride").unwrap().as_ints(), Some(&[2i64, 2][..]));
+        assert_eq!(op.dialect(), "tosa");
+        assert_eq!(op.name(), "conv2d");
+    }
+
+    #[test]
+    fn walk_visits_nested() {
+        let mut outer = Op::new("affine.for");
+        let inner = Op::new("affine.load");
+        let mut region = Region::default();
+        region.blocks.push(Block { args: vec![], ops: vec![inner] });
+        outer.regions.push(region);
+        let mut m = Module::new("w");
+        m.ops.push(outer);
+        assert_eq!(m.count_ops("affine.load"), 1);
+        assert!(m.find_op("affine.for").is_some());
+        assert!(m.find_op("affine.store").is_none());
+    }
+
+    #[test]
+    fn type_display() {
+        assert_eq!(Type::tensor(&[4, 8], DType::F32).to_string(), "tensor<4x8xf32>");
+        assert_eq!(Type::Index.to_string(), "index");
+    }
+}

@@ -1,0 +1,351 @@
+//! Dialect op builders: `tosa` (ML frontend ops), `ta` (COMET tensor
+//! algebra), `linalg` (structured ops with indexing maps), `affine`
+//! (loop nests), `arith` (scalar compute).
+//!
+//! Only the ops Union's flow needs are modeled; each builder constructs a
+//! well-typed op and registers result values in the module's value table.
+
+use super::affine_map::{AffineExpr, AffineMap};
+use super::core::{Attr, Block, Module, Op, Region, Type, ValueId};
+
+/// Builders for the TOSA dialect (TensorFlow lowering target, §III-A.1).
+pub mod tosa {
+    use super::*;
+
+    /// `tosa.conv2d`: NHWC input `[N, H, W, C]`, weight `[K, R, S, C]`,
+    /// stride `[sh, sw]`, zero padding → output `[N, X, Y, K]`.
+    pub fn conv2d(
+        m: &mut Module,
+        input: ValueId,
+        weight: ValueId,
+        stride: (u64, u64),
+    ) -> (Op, ValueId) {
+        let ishape = m.value_type(input).shape().expect("conv2d input not a tensor").to_vec();
+        let wshape = m.value_type(weight).shape().expect("conv2d weight not a tensor").to_vec();
+        let dtype = m.value_type(input).dtype().unwrap();
+        assert_eq!(ishape.len(), 4, "conv2d input must be rank 4 (NHWC)");
+        assert_eq!(wshape.len(), 4, "conv2d weight must be rank 4 (KRSC)");
+        assert_eq!(ishape[3], wshape[3], "channel mismatch");
+        let (n, h, w) = (ishape[0], ishape[1], ishape[2]);
+        let (k, r, s) = (wshape[0], wshape[1], wshape[2]);
+        assert!(h >= r && w >= s, "filter larger than input");
+        let x = (h - r) / stride.0 + 1;
+        let y = (w - s) / stride.1 + 1;
+        let out = m.new_value("conv_out", Type::tensor(&[n, x, y, k], dtype));
+        let mut op = Op::new("tosa.conv2d");
+        op.operands = vec![input, weight];
+        op.results = vec![out];
+        op.set_attr("stride", Attr::Ints(vec![stride.0 as i64, stride.1 as i64]));
+        op.set_attr("pad", Attr::Ints(vec![0, 0, 0, 0]));
+        op.set_attr("dilation", Attr::Ints(vec![1, 1]));
+        (op, out)
+    }
+
+    /// `tosa.matmul`: `[M, K] × [K, N] → [M, N]`.
+    pub fn matmul(m: &mut Module, a: ValueId, b: ValueId) -> (Op, ValueId) {
+        let ashape = m.value_type(a).shape().expect("matmul lhs not a tensor").to_vec();
+        let bshape = m.value_type(b).shape().expect("matmul rhs not a tensor").to_vec();
+        let dtype = m.value_type(a).dtype().unwrap();
+        assert_eq!(ashape.len(), 2);
+        assert_eq!(bshape.len(), 2);
+        assert_eq!(ashape[1], bshape[0], "contraction mismatch");
+        let out = m.new_value("mm_out", Type::tensor(&[ashape[0], bshape[1]], dtype));
+        let mut op = Op::new("tosa.matmul");
+        op.operands = vec![a, b];
+        op.results = vec![out];
+        (op, out)
+    }
+
+    /// `tosa.fully_connected`: input `[N, IC]`, weight `[OC, IC]` → `[N, OC]`.
+    pub fn fully_connected(m: &mut Module, input: ValueId, weight: ValueId) -> (Op, ValueId) {
+        let ishape = m.value_type(input).shape().unwrap().to_vec();
+        let wshape = m.value_type(weight).shape().unwrap().to_vec();
+        let dtype = m.value_type(input).dtype().unwrap();
+        assert_eq!(ishape.len(), 2);
+        assert_eq!(wshape.len(), 2);
+        assert_eq!(ishape[1], wshape[1], "input-channel mismatch");
+        let out = m.new_value("fc_out", Type::tensor(&[ishape[0], wshape[0]], dtype));
+        let mut op = Op::new("tosa.fully_connected");
+        op.operands = vec![input, weight];
+        op.results = vec![out];
+        (op, out)
+    }
+}
+
+/// Builders for the COMET Tensor Algebra dialect (§III-A.2).
+pub mod ta {
+    use super::*;
+
+    /// `ta.contract`: einsum-style single contraction, e.g.
+    /// `"dfgb,geac->abcdef"`. Index extents are inferred from operand
+    /// shapes and validated for consistency.
+    pub fn contract(
+        m: &mut Module,
+        equation: &str,
+        a: ValueId,
+        b: ValueId,
+    ) -> (Op, ValueId) {
+        let (ain, bin, cout) = parse_equation(equation);
+        let ashape = m.value_type(a).shape().expect("contract lhs not a tensor").to_vec();
+        let bshape = m.value_type(b).shape().expect("contract rhs not a tensor").to_vec();
+        let dtype = m.value_type(a).dtype().unwrap();
+        assert_eq!(ain.len(), ashape.len(), "equation/operand rank mismatch (lhs)");
+        assert_eq!(bin.len(), bshape.len(), "equation/operand rank mismatch (rhs)");
+        // infer index extents
+        let mut extents: Vec<(char, u64)> = Vec::new();
+        let mut bind = |idx: char, size: u64| {
+            if let Some(e) = extents.iter().find(|(c, _)| *c == idx) {
+                assert_eq!(e.1, size, "inconsistent extent for index {idx}");
+            } else {
+                extents.push((idx, size));
+            }
+        };
+        for (c, s) in ain.iter().zip(&ashape) {
+            bind(*c, *s);
+        }
+        for (c, s) in bin.iter().zip(&bshape) {
+            bind(*c, *s);
+        }
+        let oshape: Vec<u64> = cout
+            .iter()
+            .map(|c| {
+                extents
+                    .iter()
+                    .find(|(e, _)| e == c)
+                    .unwrap_or_else(|| panic!("output index {c} not in inputs"))
+                    .1
+            })
+            .collect();
+        let out = m.new_value("tc_out", Type::tensor(&oshape, dtype));
+        let mut op = Op::new("ta.contract");
+        op.operands = vec![a, b];
+        op.results = vec![out];
+        op.set_attr("equation", Attr::Str(equation.to_string()));
+        (op, out)
+    }
+
+    /// Split `"ab,bc->ac"` into index-name vectors.
+    pub fn parse_equation(eq: &str) -> (Vec<char>, Vec<char>, Vec<char>) {
+        let (lhs, out) = eq.split_once("->").expect("equation missing '->'");
+        let (a, b) = lhs.split_once(',').expect("equation missing ','");
+        let chars = |s: &str| s.chars().filter(|c| !c.is_whitespace()).collect::<Vec<_>>();
+        (chars(a), chars(b), chars(out))
+    }
+}
+
+/// Builders for the Linalg dialect — the language-independent level where
+/// the frontends converge (§III-A.3).
+pub mod linalg {
+    use super::*;
+
+    /// `linalg.generic`: `dims` are (name, size) iteration dims;
+    /// `maps` give one indexing map per operand (inputs… then output);
+    /// `iterator_types` marks each dim `parallel` or `reduction`.
+    /// `op_hint` preserves the high-level operation annotation so
+    /// operation-level cost models stay usable after lowering.
+    pub fn generic(
+        m: &mut Module,
+        dims: &[(String, u64)],
+        inputs: &[ValueId],
+        output_shape: &[u64],
+        maps: Vec<AffineMap>,
+        iterator_types: Vec<String>,
+        op_hint: &str,
+    ) -> (Op, ValueId) {
+        assert_eq!(maps.len(), inputs.len() + 1, "one map per operand + output");
+        assert_eq!(iterator_types.len(), dims.len());
+        let dtype = m.value_type(inputs[0]).dtype().unwrap();
+        let out = m.new_value("generic_out", Type::tensor(output_shape, dtype));
+        let mut op = Op::new("linalg.generic");
+        op.operands = inputs.to_vec();
+        op.results = vec![out];
+        op.set_attr(
+            "dim_names",
+            Attr::Strs(dims.iter().map(|(n, _)| n.clone()).collect()),
+        );
+        op.set_attr(
+            "dim_sizes",
+            Attr::Ints(dims.iter().map(|(_, s)| *s as i64).collect()),
+        );
+        op.set_attr("indexing_maps", Attr::Maps(maps));
+        op.set_attr("iterator_types", Attr::Strs(iterator_types));
+        op.set_attr("op_hint", Attr::Str(op_hint.to_string()));
+        // payload: (a, b, acc) -> acc + a*b
+        let mut body = Block::default();
+        let sa = m.new_value("a", Type::Scalar(dtype));
+        let sb = m.new_value("b", Type::Scalar(dtype));
+        let sacc = m.new_value("acc", Type::Scalar(dtype));
+        body.args = vec![sa, sb, sacc];
+        let smul = m.new_value("mul", Type::Scalar(dtype));
+        let mut mul = Op::new("arith.mulf");
+        mul.operands = vec![sa, sb];
+        mul.results = vec![smul];
+        let sadd = m.new_value("add", Type::Scalar(dtype));
+        let mut add = Op::new("arith.addf");
+        add.operands = vec![sacc, smul];
+        add.results = vec![sadd];
+        let mut yld = Op::new("linalg.yield");
+        yld.operands = vec![sadd];
+        body.ops = vec![mul, add, yld];
+        op.regions = vec![Region { blocks: vec![body] }];
+        (op, out)
+    }
+}
+
+/// Builders for the Affine dialect loop-nest form.
+pub mod affine {
+    use super::*;
+
+    /// `affine.for %iv = lb to ub step s { body }`. The region's single
+    /// block takes the induction variable as its argument.
+    pub fn for_op(m: &mut Module, iv_name: &str, ub: u64, body: Vec<Op>) -> Op {
+        let iv = m.new_value(iv_name, Type::Index);
+        let mut op = Op::new("affine.for");
+        op.set_attr("lb", Attr::Int(0));
+        op.set_attr("ub", Attr::Int(ub as i64));
+        op.set_attr("step", Attr::Int(1));
+        op.set_attr("iv_name", Attr::Str(iv_name.to_string()));
+        op.regions = vec![Region {
+            blocks: vec![Block { args: vec![iv], ops: body }],
+        }];
+        op
+    }
+
+    /// `affine.load %tensor[map(ivs)]`.
+    pub fn load(m: &mut Module, tensor: ValueId, map: AffineMap, name: &str) -> (Op, ValueId) {
+        let dtype = m.value_type(tensor).dtype().unwrap();
+        let v = m.new_value(name, Type::Scalar(dtype));
+        let mut op = Op::new("affine.load");
+        op.operands = vec![tensor];
+        op.results = vec![v];
+        op.set_attr("map", Attr::Map(map));
+        (op, v)
+    }
+
+    /// `affine.store %val, %tensor[map(ivs)]`.
+    pub fn store(tensor: ValueId, value: ValueId, map: AffineMap) -> Op {
+        let mut op = Op::new("affine.store");
+        op.operands = vec![value, tensor];
+        op.set_attr("map", Attr::Map(map));
+        op
+    }
+}
+
+/// Scalar arithmetic helpers.
+pub mod arith {
+    use super::*;
+
+    pub fn mulf(m: &mut Module, a: ValueId, b: ValueId) -> (Op, ValueId) {
+        let dtype = m.value_type(a).dtype().unwrap();
+        let v = m.new_value("mul", Type::Scalar(dtype));
+        let mut op = Op::new("arith.mulf");
+        op.operands = vec![a, b];
+        op.results = vec![v];
+        (op, v)
+    }
+
+    pub fn addf(m: &mut Module, a: ValueId, b: ValueId) -> (Op, ValueId) {
+        let dtype = m.value_type(a).dtype().unwrap();
+        let v = m.new_value("add", Type::Scalar(dtype));
+        let mut op = Op::new("arith.addf");
+        op.operands = vec![a, b];
+        op.results = vec![v];
+        (op, v)
+    }
+}
+
+/// Helper to build a conv2d sliding-window expression `stride·x + r`.
+pub fn window_expr(x_dim: usize, r_dim: usize, stride: u64) -> AffineExpr {
+    AffineExpr::scaled(x_dim, stride as i64).add(&AffineExpr::dim(r_dim))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::core::DType;
+
+    fn module_with_tensors() -> (Module, ValueId, ValueId) {
+        let mut m = Module::new("t");
+        let a = m.new_value("a", Type::tensor(&[8, 4], DType::F32));
+        let b = m.new_value("b", Type::tensor(&[4, 6], DType::F32));
+        (m, a, b)
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        let (mut m, a, b) = module_with_tensors();
+        let (_, out) = tosa::matmul(&mut m, a, b);
+        assert_eq!(m.value_type(out).shape(), Some(&[8u64, 6][..]));
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction mismatch")]
+    fn matmul_bad_shapes() {
+        let mut m = Module::new("t");
+        let a = m.new_value("a", Type::tensor(&[8, 4], DType::F32));
+        let b = m.new_value("b", Type::tensor(&[5, 6], DType::F32));
+        tosa::matmul(&mut m, a, b);
+    }
+
+    #[test]
+    fn conv2d_output_shape() {
+        let mut m = Module::new("t");
+        let input = m.new_value("i", Type::tensor(&[1, 58, 58, 64], DType::F32));
+        let weight = m.new_value("w", Type::tensor(&[128, 3, 3, 64], DType::F32));
+        let (_, out) = tosa::conv2d(&mut m, input, weight, (1, 1));
+        assert_eq!(m.value_type(out).shape(), Some(&[1u64, 56, 56, 128][..]));
+    }
+
+    #[test]
+    fn conv2d_strided_output_shape() {
+        let mut m = Module::new("t");
+        let input = m.new_value("i", Type::tensor(&[1, 57, 57, 8], DType::F32));
+        let weight = m.new_value("w", Type::tensor(&[16, 3, 3, 8], DType::F32));
+        let (_, out) = tosa::conv2d(&mut m, input, weight, (2, 2));
+        assert_eq!(m.value_type(out).shape(), Some(&[1u64, 28, 28, 16][..]));
+    }
+
+    #[test]
+    fn ta_contract_infers_output() {
+        let mut m = Module::new("t");
+        let a = m.new_value("A", Type::tensor(&[16, 16, 16, 16], DType::F32));
+        let b = m.new_value("B", Type::tensor(&[16, 16], DType::F32));
+        // intensli2: C[a,b,c,d] = A[d,b,e,a] * B[e,c]
+        let (op, out) = ta::contract(&mut m, "dbea,ec->abcd", a, b);
+        assert_eq!(m.value_type(out).shape(), Some(&[16u64, 16, 16, 16][..]));
+        assert_eq!(op.attr("equation").unwrap().as_str(), Some("dbea,ec->abcd"));
+    }
+
+    #[test]
+    #[should_panic(expected = "output index")]
+    fn ta_contract_rejects_unknown_output_index() {
+        let mut m = Module::new("t");
+        let a = m.new_value("A", Type::tensor(&[4], DType::F32));
+        let b = m.new_value("B", Type::tensor(&[4], DType::F32));
+        ta::contract(&mut m, "a,a->z", a, b);
+    }
+
+    #[test]
+    fn equation_parse() {
+        let (a, b, c) = ta::parse_equation("dfgb,geac->abcdef");
+        assert_eq!(a, vec!['d', 'f', 'g', 'b']);
+        assert_eq!(b, vec!['g', 'e', 'a', 'c']);
+        assert_eq!(c.len(), 6);
+    }
+
+    #[test]
+    fn generic_has_payload() {
+        let (mut m, a, b) = module_with_tensors();
+        let dims = vec![("M".to_string(), 8), ("N".to_string(), 6), ("K".to_string(), 4)];
+        let maps = vec![
+            AffineMap::select(3, &[0, 2]),
+            AffineMap::select(3, &[2, 1]),
+            AffineMap::select(3, &[0, 1]),
+        ];
+        let its = vec!["parallel".into(), "parallel".into(), "reduction".into()];
+        let (op, out) = linalg::generic(&mut m, &dims, &[a, b], &[8, 6], maps, its, "GEMM");
+        assert_eq!(m.value_type(out).shape(), Some(&[8u64, 6][..]));
+        assert_eq!(op.regions[0].blocks[0].ops.len(), 3); // mul, add, yield
+        assert_eq!(op.attr("op_hint").unwrap().as_str(), Some("GEMM"));
+    }
+}

@@ -1,0 +1,381 @@
+//! Progressive lowering passes (paper Fig. 2): frontend dialects (`tosa`,
+//! `ta`) → `linalg.generic` → `affine` loop nests.
+//!
+//! Each pass produces a *new* module (the mini-IR is immutable-by-
+//! convention), carrying the `op_hint` operation annotation along so the
+//! Union problem abstraction can retain both the operation-level and
+//! loop-level views (§IV-B).
+
+use super::affine_map::{AffineExpr, AffineMap};
+use super::core::{Attr, Module, Op, ValueId};
+use super::dialects::{affine, arith, linalg, ta, window_expr};
+
+/// Lower every `tosa.*` op in `src` to `linalg.generic`.
+///
+/// The returned module contains one generic per tensor op, with iteration
+/// dims named per the paper's conventions (N,K,C,X,Y,R,S for CONV2D and
+/// M,N,K for GEMM).
+pub fn tosa_to_linalg(src: &Module) -> Module {
+    let mut dst = clone_values(src);
+    for op in &src.ops {
+        match op.opcode.as_str() {
+            "tosa.conv2d" => {
+                let input = op.operands[0];
+                let weight = op.operands[1];
+                let ishape = src.value_type(input).shape().unwrap().to_vec();
+                let wshape = src.value_type(weight).shape().unwrap().to_vec();
+                let stride = op.attr("stride").unwrap().as_ints().unwrap().to_vec();
+                let (sh, sw) = (stride[0] as u64, stride[1] as u64);
+                let n = ishape[0];
+                let (k, r, s, c) = (wshape[0], wshape[1], wshape[2], wshape[3]);
+                let x = (ishape[1] - r) / sh + 1;
+                let y = (ishape[2] - s) / sw + 1;
+                // dim order: N K C X Y R S (Algorithm 1)
+                let dims: Vec<(String, u64)> = [
+                    ("N", n), ("K", k), ("C", c), ("X", x), ("Y", y), ("R", r), ("S", s),
+                ]
+                .iter()
+                .map(|(a, b)| (a.to_string(), *b))
+                .collect();
+                let (dn, dk, dc, dx, dy, dr, ds) = (0, 1, 2, 3, 4, 5, 6);
+                // NHWC input, KRSC weight, NXYK output
+                let maps = vec![
+                    AffineMap {
+                        num_dims: 7,
+                        results: vec![
+                            AffineExpr::dim(dn),
+                            window_expr(dx, dr, sh),
+                            window_expr(dy, ds, sw),
+                            AffineExpr::dim(dc),
+                        ],
+                    },
+                    AffineMap::select(7, &[dk, dr, ds, dc]),
+                    AffineMap::select(7, &[dn, dx, dy, dk]),
+                ];
+                let its = vec![
+                    "parallel".into(), "parallel".into(), "reduction".into(),
+                    "parallel".into(), "parallel".into(), "reduction".into(),
+                    "reduction".into(),
+                ];
+                let (gop, _) = linalg::generic(
+                    &mut dst, &dims, &[input, weight], &[n, x, y, k], maps, its, "CONV2D",
+                );
+                dst.ops.push(gop);
+            }
+            "tosa.matmul" | "tosa.fully_connected" => {
+                let a = op.operands[0];
+                let b = op.operands[1];
+                let ashape = src.value_type(a).shape().unwrap().to_vec();
+                let bshape = src.value_type(b).shape().unwrap().to_vec();
+                // fully_connected weight is [OC, IC]: GEMM B = Wᵀ
+                let fc = op.opcode == "tosa.fully_connected";
+                let (m_, n_, k_) = if fc {
+                    (ashape[0], bshape[0], ashape[1])
+                } else {
+                    (ashape[0], bshape[1], ashape[1])
+                };
+                let dims: Vec<(String, u64)> = [("M", m_), ("N", n_), ("K", k_)]
+                    .iter()
+                    .map(|(x, y)| (x.to_string(), *y))
+                    .collect();
+                let maps = vec![
+                    AffineMap::select(3, &[0, 2]),
+                    if fc {
+                        AffineMap::select(3, &[1, 2])
+                    } else {
+                        AffineMap::select(3, &[2, 1])
+                    },
+                    AffineMap::select(3, &[0, 1]),
+                ];
+                let its = vec!["parallel".into(), "parallel".into(), "reduction".into()];
+                let (gop, _) =
+                    linalg::generic(&mut dst, &dims, &[a, b], &[m_, n_], maps, its, "GEMM");
+                dst.ops.push(gop);
+            }
+            _ => dst.ops.push(op.clone()),
+        }
+    }
+    dst
+}
+
+/// Lower every `ta.contract` to `linalg.generic`, either **natively**
+/// (one generic with all contraction indices) or via **TTGT** (§II-A):
+/// rewrite as transpose–transpose–GEMM–transpose, emitting a GEMM generic
+/// whose M/N/K collapse the free/contracted index groups.
+pub fn ta_to_linalg(src: &Module, use_ttgt: bool) -> Module {
+    let mut dst = clone_values(src);
+    for op in &src.ops {
+        if op.opcode != "ta.contract" {
+            dst.ops.push(op.clone());
+            continue;
+        }
+        let eq = op.attr("equation").unwrap().as_str().unwrap().to_string();
+        let (ain, bin, cout) = ta::parse_equation(&eq);
+        let a = op.operands[0];
+        let b = op.operands[1];
+        let ashape = src.value_type(a).shape().unwrap().to_vec();
+        let bshape = src.value_type(b).shape().unwrap().to_vec();
+        let extent = |c: char| -> u64 {
+            if let Some(i) = ain.iter().position(|&x| x == c) {
+                ashape[i]
+            } else {
+                let i = bin.iter().position(|&x| x == c).expect("index not found");
+                bshape[i]
+            }
+        };
+        // contracted = in both inputs, not in output
+        let contracted: Vec<char> = ain
+            .iter()
+            .filter(|c| bin.contains(c) && !cout.contains(c))
+            .copied()
+            .collect();
+        if use_ttgt {
+            // free-A = output indices from A, free-B = output indices from B
+            let free_a: Vec<char> = cout.iter().filter(|c| ain.contains(c)).copied().collect();
+            let free_b: Vec<char> = cout.iter().filter(|c| bin.contains(c) && !free_a.contains(c)).copied().collect();
+            let m_: u64 = free_a.iter().map(|&c| extent(c)).product();
+            let n_: u64 = free_b.iter().map(|&c| extent(c)).product();
+            let k_: u64 = contracted.iter().map(|&c| extent(c)).product();
+            // document the transposes/reshapes as attribute metadata on
+            // reshape ops so the pipeline records the TTGT structure
+            let a2 = dst.new_value("a_mat", super::core::Type::tensor(&[m_, k_], src.value_type(a).dtype().unwrap()));
+            let mut t1 = Op::new("ta.reshape");
+            t1.operands = vec![a];
+            t1.results = vec![a2];
+            t1.set_attr("perm_group", Attr::Str(format!("{}|{}", collect(&free_a), collect(&contracted))));
+            dst.ops.push(t1);
+            let b2 = dst.new_value("b_mat", super::core::Type::tensor(&[k_, n_], src.value_type(b).dtype().unwrap()));
+            let mut t2 = Op::new("ta.reshape");
+            t2.operands = vec![b];
+            t2.results = vec![b2];
+            t2.set_attr("perm_group", Attr::Str(format!("{}|{}", collect(&contracted), collect(&free_b))));
+            dst.ops.push(t2);
+            let dims: Vec<(String, u64)> = [("M", m_), ("N", n_), ("K", k_)]
+                .iter()
+                .map(|(x, y)| (x.to_string(), *y))
+                .collect();
+            let maps = vec![
+                AffineMap::select(3, &[0, 2]),
+                AffineMap::select(3, &[2, 1]),
+                AffineMap::select(3, &[0, 1]),
+            ];
+            let its = vec!["parallel".into(), "parallel".into(), "reduction".into()];
+            let (gop, gout) =
+                linalg::generic(&mut dst, &dims, &[a2, b2], &[m_, n_], maps, its, "GEMM");
+            dst.ops.push(gop);
+            // fold back
+            let oshape: Vec<u64> = cout.iter().map(|&c| extent(c)).collect();
+            let final_out = dst.new_value("tc_out", super::core::Type::tensor(&oshape, src.value_type(a).dtype().unwrap()));
+            let mut t3 = Op::new("ta.reshape");
+            t3.operands = vec![gout];
+            t3.results = vec![final_out];
+            t3.set_attr("perm_group", Attr::Str(collect(&cout)));
+            dst.ops.push(t3);
+        } else {
+            // native: dims = output indices then contracted indices
+            let mut order: Vec<char> = cout.clone();
+            order.extend(contracted.iter().copied());
+            let dims: Vec<(String, u64)> = order
+                .iter()
+                .map(|&c| (c.to_uppercase().to_string(), extent(c)))
+                .collect();
+            let pos = |c: char| order.iter().position(|&x| x == c).unwrap();
+            let map_for = |idxs: &[char]| AffineMap::select(order.len(), &idxs.iter().map(|&c| pos(c)).collect::<Vec<_>>());
+            let maps = vec![map_for(&ain), map_for(&bin), map_for(&cout)];
+            let its: Vec<String> = order
+                .iter()
+                .map(|c| {
+                    if cout.contains(c) {
+                        "parallel".to_string()
+                    } else {
+                        "reduction".to_string()
+                    }
+                })
+                .collect();
+            let oshape: Vec<u64> = cout.iter().map(|&c| extent(c)).collect();
+            let (gop, _) =
+                linalg::generic(&mut dst, &dims, &[a, b], &oshape, maps, its, "TC");
+            dst.ops.push(gop);
+        }
+    }
+    dst
+}
+
+fn collect(cs: &[char]) -> String {
+    cs.iter().collect()
+}
+
+/// Lower every `linalg.generic` to a perfectly-nested `affine.for` loop
+/// nest with loads, a multiply-accumulate body, and a store — the loop
+/// nest representation of Algorithm 1/2.
+pub fn linalg_to_affine(src: &Module) -> Module {
+    let mut dst = clone_values(src);
+    for op in &src.ops {
+        if op.opcode != "linalg.generic" {
+            dst.ops.push(op.clone());
+            continue;
+        }
+        let dim_names = op.attr("dim_names").unwrap().as_strs().unwrap().to_vec();
+        let dim_sizes: Vec<u64> = op
+            .attr("dim_sizes")
+            .unwrap()
+            .as_ints()
+            .unwrap()
+            .iter()
+            .map(|&x| x as u64)
+            .collect();
+        let maps = op.attr("indexing_maps").unwrap().as_maps().unwrap().to_vec();
+        let op_hint = op
+            .attr("op_hint")
+            .and_then(|a| a.as_str())
+            .unwrap_or("GENERIC")
+            .to_string();
+        let out_tensor = op.results[0];
+
+        // innermost body: load inputs + output, mac, store
+        let out_map = maps.last().unwrap().clone();
+        let mut body: Vec<Op> = Vec::new();
+        let mut loaded: Vec<ValueId> = Vec::new();
+        for (i, &input) in op.operands.iter().enumerate() {
+            let (lop, v) = affine::load(&mut dst, input, maps[i].clone(), &format!("in{i}"));
+            body.push(lop);
+            loaded.push(v);
+        }
+        let (oload, oval) = affine::load(&mut dst, out_tensor, out_map.clone(), "out");
+        body.push(oload);
+        // product of all inputs (supports 3-operand MTTKRP-style bodies)
+        let mut prod = loaded[0];
+        for &v in &loaded[1..] {
+            let (mop, mv) = arith::mulf(&mut dst, prod, v);
+            body.push(mop);
+            prod = mv;
+        }
+        let (aop, av) = arith::addf(&mut dst, oval, prod);
+        body.push(aop);
+        body.push(affine::store(out_tensor, av, out_map));
+
+        // wrap loops innermost-out, preserving declared dim order
+        let mut nest = body;
+        for (name, size) in dim_names.iter().zip(&dim_sizes).rev() {
+            nest = vec![affine::for_op(&mut dst, name, *size, nest)];
+        }
+        let mut root = nest.pop().unwrap();
+        root.set_attr("op_hint", Attr::Str(op_hint));
+        root.set_attr("dim_names", Attr::Strs(dim_names));
+        root.set_attr(
+            "dim_sizes",
+            Attr::Ints(dim_sizes.iter().map(|&x| x as i64).collect()),
+        );
+        dst.ops.push(root);
+    }
+    dst
+}
+
+/// Convenience dispatcher: lower a frontend module (tosa or ta ops) down
+/// to linalg in one call.
+pub fn lower_to_linalg(src: &Module, use_ttgt: bool) -> Module {
+    let has_ta = src.ops.iter().any(|o| o.dialect() == "ta");
+    if has_ta {
+        ta_to_linalg(src, use_ttgt)
+    } else {
+        tosa_to_linalg(src)
+    }
+}
+
+/// Copy the value table (lowering passes share value ids with the source).
+fn clone_values(src: &Module) -> Module {
+    let mut dst = Module::new(&src.name);
+    for i in 0..src.num_values() {
+        let v = ValueId(i);
+        dst.new_value(src.value_name(v), src.value_type(v).clone());
+    }
+    dst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::core::{DType, Type};
+    use super::super::dialects::tosa;
+
+    #[test]
+    fn matmul_lowers_to_generic() {
+        let mut m = Module::new("t");
+        let a = m.new_value("a", Type::tensor(&[8, 4], DType::F32));
+        let b = m.new_value("b", Type::tensor(&[4, 6], DType::F32));
+        let (op, _) = tosa::matmul(&mut m, a, b);
+        m.ops.push(op);
+        let lowered = tosa_to_linalg(&m);
+        assert_eq!(lowered.count_ops("linalg.generic"), 1);
+        let g = lowered.find_op("linalg.generic").unwrap();
+        assert_eq!(g.attr("op_hint").unwrap().as_str(), Some("GEMM"));
+        let sizes = g.attr("dim_sizes").unwrap().as_ints().unwrap();
+        assert_eq!(sizes, &[8, 6, 4]);
+    }
+
+    #[test]
+    fn conv_lowers_with_window_maps() {
+        let mut m = Module::new("t");
+        let input = m.new_value("i", Type::tensor(&[1, 6, 6, 3], DType::F32));
+        let weight = m.new_value("w", Type::tensor(&[8, 3, 3, 3], DType::F32));
+        let (op, _) = tosa::conv2d(&mut m, input, weight, (1, 1));
+        m.ops.push(op);
+        let lowered = tosa_to_linalg(&m);
+        let g = lowered.find_op("linalg.generic").unwrap();
+        let maps = g.attr("indexing_maps").unwrap().as_maps().unwrap();
+        // input map rank 4, with compound window exprs in positions 1 and 2
+        assert_eq!(maps[0].rank(), 4);
+        assert!(maps[0].results[1].is_identity_dim().is_none());
+        assert!(maps[2].is_projected_permutation()); // output map
+        // X = Y = 4
+        let sizes = g.attr("dim_sizes").unwrap().as_ints().unwrap();
+        assert_eq!(sizes, &[1, 8, 3, 4, 4, 3, 3]);
+    }
+
+    #[test]
+    fn ta_native_lowering_keeps_all_indices() {
+        let mut m = Module::new("t");
+        let a = m.new_value("A", Type::tensor(&[16, 16, 16, 16], DType::F32));
+        let b = m.new_value("B", Type::tensor(&[16, 16], DType::F32));
+        let (op, _) = super::super::dialects::ta::contract(&mut m, "dbea,ec->abcd", a, b);
+        m.ops.push(op);
+        let lowered = ta_to_linalg(&m, false);
+        let g = lowered.find_op("linalg.generic").unwrap();
+        assert_eq!(g.attr("op_hint").unwrap().as_str(), Some("TC"));
+        // 4 output + 1 contracted = 5 dims
+        assert_eq!(g.attr("dim_names").unwrap().as_strs().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn ta_ttgt_lowering_produces_gemm() {
+        let mut m = Module::new("t");
+        let a = m.new_value("A", Type::tensor(&[16, 16, 16, 16], DType::F32));
+        let b = m.new_value("B", Type::tensor(&[16, 16], DType::F32));
+        // intensli2: C[a,b,c,d] = A[d,b,e,a] B[e,c] -> M=a*b*d? no: free_a = out∩A = {a,b,d}, free_b={c}, contracted={e}
+        let (op, _) = super::super::dialects::ta::contract(&mut m, "dbea,ec->abcd", a, b);
+        m.ops.push(op);
+        let lowered = ta_to_linalg(&m, true);
+        let g = lowered.find_op("linalg.generic").unwrap();
+        assert_eq!(g.attr("op_hint").unwrap().as_str(), Some("GEMM"));
+        let sizes = g.attr("dim_sizes").unwrap().as_ints().unwrap();
+        // M = 16^3 = 4096, N = 16, K = 16 (Table III, intensli2 TDS=16)
+        assert_eq!(sizes, &[4096, 16, 16]);
+        assert_eq!(lowered.count_ops("ta.reshape"), 3);
+    }
+
+    #[test]
+    fn generic_lowers_to_perfect_nest() {
+        let mut m = Module::new("t");
+        let a = m.new_value("a", Type::tensor(&[8, 4], DType::F32));
+        let b = m.new_value("b", Type::tensor(&[4, 6], DType::F32));
+        let (op, _) = tosa::matmul(&mut m, a, b);
+        m.ops.push(op);
+        let affine_mod = linalg_to_affine(&tosa_to_linalg(&m));
+        assert_eq!(affine_mod.count_ops("affine.for"), 3);
+        assert_eq!(affine_mod.count_ops("affine.load"), 3); // a, b, c
+        assert_eq!(affine_mod.count_ops("affine.store"), 1);
+        assert_eq!(affine_mod.count_ops("arith.mulf"), 1);
+        let root = affine_mod.find_op("affine.for").unwrap();
+        assert_eq!(root.attr("op_hint").unwrap().as_str(), Some("GEMM"));
+    }
+}

@@ -1,0 +1,31 @@
+//! Miniature MLIR infrastructure (paper §II-B, §III-A).
+//!
+//! Union uses MLIR as the bridge between high-level frontends (TensorFlow
+//! → TOSA, COMET DSL → TA) and the Union problem abstraction. The real
+//! LLVM/MLIR stack is unavailable in this environment, so this module is a
+//! faithful miniature implementing the concepts the paper relies on:
+//!
+//! * **Operations** with opcode, SSA operands/results, **attributes**,
+//!   and **regions** of **blocks** ([`core`]);
+//! * **Dialects**: `tosa` (ML frontend), `ta` (COMET tensor algebra),
+//!   `linalg` (language-independent structured ops with indexing maps),
+//!   `affine` (loop-nest form) ([`dialects`]);
+//! * **Progressive lowering**: tosa→linalg, ta→linalg (with the COMET
+//!   TTGT rewrite as an option), linalg→affine ([`lower`]);
+//! * **Conformability passes** (paper §III-A.3): operation-level checks
+//!   for MAESTRO-style cost models and loop-level checks (perfect nesting,
+//!   affine indices, no conditionals, reorderability) for Timeloop-style
+//!   cost models ([`conform`]).
+
+pub mod affine_map;
+pub mod conform;
+pub mod core;
+pub mod dialects;
+pub mod lower;
+pub mod print;
+
+pub use affine_map::{AffineExpr, AffineMap};
+pub use conform::{check_loop_level, check_operation_level, Conformability};
+pub use core::{Attr, Block, DType, Module, Op, OpId, Region, Type, ValueId};
+pub use lower::{linalg_to_affine, lower_to_linalg, ta_to_linalg, tosa_to_linalg};
+pub use print::print_module;

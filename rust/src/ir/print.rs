@@ -1,0 +1,122 @@
+//! MLIR-like textual printer for the mini-IR (debugging / golden tests).
+
+use std::fmt::Write as _;
+
+use super::core::{Attr, Module, Op};
+
+/// Render a module in an MLIR-inspired textual form.
+pub fn print_module(m: &Module) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "module @{} {{", m.name);
+    for op in &m.ops {
+        print_op(m, op, 1, &mut out);
+    }
+    let _ = writeln!(out, "}}");
+    out
+}
+
+fn fmt_attr(a: &Attr) -> String {
+    match a {
+        Attr::Int(i) => i.to_string(),
+        Attr::Ints(v) => format!("[{}]", v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")),
+        Attr::F64(f) => format!("{f}"),
+        Attr::Str(s) => format!("\"{s}\""),
+        Attr::Strs(v) => format!("[{}]", v.iter().map(|s| format!("\"{s}\"")).collect::<Vec<_>>().join(", ")),
+        Attr::Bool(b) => b.to_string(),
+        Attr::Map(m) => format!("affine_map<{m}>"),
+        Attr::Maps(v) => format!(
+            "[{}]",
+            v.iter().map(|m| format!("affine_map<{m}>")).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+fn print_op(m: &Module, op: &Op, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    let _ = write!(out, "{pad}");
+    if !op.results.is_empty() {
+        let rs: Vec<String> = op
+            .results
+            .iter()
+            .map(|r| format!("%{}", m.value_name(*r)))
+            .collect();
+        let _ = write!(out, "{} = ", rs.join(", "));
+    }
+    let _ = write!(out, "\"{}\"", op.opcode);
+    if !op.operands.is_empty() {
+        let os: Vec<String> = op
+            .operands
+            .iter()
+            .map(|o| format!("%{}", m.value_name(*o)))
+            .collect();
+        let _ = write!(out, "({})", os.join(", "));
+    } else {
+        let _ = write!(out, "()");
+    }
+    if !op.attrs.is_empty() {
+        let attrs: Vec<String> = op
+            .attrs
+            .iter()
+            .map(|(k, a)| format!("{k} = {}", fmt_attr(a)))
+            .collect();
+        let _ = write!(out, " {{{}}}", attrs.join(", "));
+    }
+    if op.regions.is_empty() {
+        let _ = writeln!(out);
+        return;
+    }
+    let _ = writeln!(out, " {{");
+    for region in &op.regions {
+        for block in &region.blocks {
+            if !block.args.is_empty() {
+                let args: Vec<String> = block
+                    .args
+                    .iter()
+                    .map(|a| format!("%{}: {}", m.value_name(*a), m.value_type(*a)))
+                    .collect();
+                let _ = writeln!(out, "{pad}^bb({}):", args.join(", "));
+            }
+            for inner in &block.ops {
+                print_op(m, inner, indent + 1, out);
+            }
+        }
+    }
+    let _ = writeln!(out, "{pad}}}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::{DType, Module, Type};
+    use crate::ir::dialects::tosa;
+    use crate::ir::lower::{linalg_to_affine, tosa_to_linalg};
+
+    #[test]
+    fn printed_nest_mentions_all_levels() {
+        let mut m = Module::new("t");
+        let a = m.new_value("a", Type::tensor(&[8, 4], DType::F32));
+        let b = m.new_value("b", Type::tensor(&[4, 6], DType::F32));
+        let (op, _) = tosa::matmul(&mut m, a, b);
+        m.ops.push(op);
+        let lowered = linalg_to_affine(&tosa_to_linalg(&m));
+        let text = print_module(&lowered);
+        assert!(text.contains("affine.for"));
+        assert!(text.contains("affine.load"));
+        assert!(text.contains("affine.store"));
+        assert!(text.contains("module @t"));
+        // three nested loops -> op appears three times
+        assert_eq!(text.matches("affine.for").count(), 3);
+    }
+
+    #[test]
+    fn printed_tosa_shows_attrs() {
+        let mut m = Module::new("c");
+        let input = m.new_value("i", Type::tensor(&[1, 6, 6, 3], DType::F32));
+        let weight = m.new_value("w", Type::tensor(&[8, 3, 3, 3], DType::F32));
+        let (op, _) = tosa::conv2d(&mut m, input, weight, (2, 2));
+        m.ops.push(op);
+        let text = print_module(&m);
+        assert!(text.contains("tosa.conv2d"));
+        assert!(text.contains("stride = [2, 2]"));
+    }
+}

@@ -1,0 +1,72 @@
+//! # Union — a unified HW-SW co-design ecosystem for spatial accelerators
+//!
+//! Reproduction of *"Union: A Unified HW-SW Co-Design Ecosystem in MLIR for
+//! Evaluating Tensor Operations on Spatial Accelerators"* (Jeong et al.,
+//! cs.AR 2021).
+//!
+//! Union evaluates tensor operations (CONV2D / GEMM / tensor contraction)
+//! on analytically-modeled spatial accelerators through three *unified
+//! abstractions*:
+//!
+//! * [`problem`] — a cost-model-independent description of a tensor
+//!   operation (dimensions, data spaces, affine projections);
+//! * [`arch`] — a logical *cluster-target* hierarchy describing the
+//!   accelerator (buffers, PE arrays, virtual levels, chiplets);
+//! * [`mapping`] — a cluster-target loop-centric mapping (temporal order +
+//!   temporal/spatial tile sizes per cluster level) with legality rules.
+//!
+//! On top of the abstractions sit a plug-and-play library of
+//! [`cost`] models (Timeloop-style hierarchical, MAESTRO-style cluster)
+//! and [`mappers`] (exhaustive, random, decoupled, heuristic, genetic),
+//! all interchangeable. The [`ir`] module is a miniature MLIR: TOSA / TA /
+//! Linalg / Affine dialects with progressive lowering and conformability
+//! analysis, fed by the [`frontend`] workload zoo. The [`runtime`] module
+//! executes AOT-compiled JAX/Pallas artifacts via PJRT to numerically
+//! validate algorithm transforms (native TC vs TTGT vs im2col).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use union::prelude::*;
+//!
+//! // GEMM M=N=K=64 on the Table V edge accelerator
+//! let problem = union::frontend::gemm_problem(64, 64, 64);
+//! let arch = union::arch::presets::edge();
+//! let constraints = Constraints::default();
+//! let space = MapSpace::new(&problem, &arch, &constraints);
+//! let model = AnalyticalModel::new(EnergyTable::default_8bit());
+//! let mapper = RandomMapper::new(2_000, 42);
+//! let best = mapper.search(&space, &model).expect("found a mapping");
+//! println!("EDP = {:.3e}", best.cost.edp());
+//! ```
+
+pub mod arch;
+pub mod cli;
+pub mod config;
+pub mod cost;
+pub mod experiments;
+pub mod frontend;
+pub mod ir;
+pub mod mappers;
+pub mod mapping;
+pub mod mapspace;
+pub mod problem;
+pub mod report;
+pub mod runtime;
+pub mod util;
+
+/// Most-used types, for `use union::prelude::*`.
+pub mod prelude {
+    pub use crate::arch::{presets, Arch, ClusterLevel};
+    pub use crate::cost::{
+        AnalyticalModel, CostEstimate, CostModel, EnergyTable, MaestroModel,
+    };
+    pub use crate::frontend::{self, Workload};
+    pub use crate::mappers::{
+        DecoupledMapper, ExhaustiveMapper, GeneticMapper, HeuristicMapper, Mapper, Objective,
+        RandomMapper, SearchResult,
+    };
+    pub use crate::mapping::Mapping;
+    pub use crate::mapspace::{Constraints, MapSpace};
+    pub use crate::problem::{DataSpace, Operation, Problem};
+}

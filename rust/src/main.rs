@@ -1,0 +1,225 @@
+//! `union` — the Union co-design CLI.
+//!
+//! ```text
+//! union lower     --workload <spec> [--ttgt] [--print-ir]
+//! union search    --workload <spec> --arch <spec> [--mapper M] [--cost C]
+//!                 [--objective edp|energy|latency] [--samples N]
+//!                 [--constraints file.ucon] [--render]
+//! union casestudy <fig3|fig8|fig9|fig10|fig11|table3> [--thorough]
+//! union validate  [--artifacts DIR]
+//! union info      --arch <spec>
+//! ```
+
+use union::cli::{parse_arch, parse_workload, Args};
+use union::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use union::experiments::{self, Effort};
+use union::ir::{check_loop_level, check_operation_level, print_module};
+use union::mappers::{
+    DecoupledMapper, ExhaustiveMapper, GeneticMapper, HeuristicMapper, Mapper, Objective,
+    RandomMapper,
+};
+use union::mapping::render_loop_nest;
+use union::mapspace::{constraints_from_str, Constraints, MapSpace};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_deref() {
+        Some("lower") => cmd_lower(&args),
+        Some("search") => cmd_search(&args),
+        Some("casestudy") => cmd_casestudy(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => Err(format!("unknown subcommand '{other}'\n{USAGE}")),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+union — unified HW-SW co-design ecosystem for spatial accelerators
+
+subcommands:
+  lower     --workload <spec> [--ttgt] [--print-ir]
+  search    --workload <spec> --arch <spec> [--mapper exhaustive|random|decoupled|heuristic|genetic]
+            [--cost analytical|maestro] [--objective edp|energy|latency]
+            [--samples N] [--constraints file.ucon] [--render]
+  casestudy fig3|fig8|fig9|fig10|fig11|table3 [--thorough]
+  validate  [--artifacts DIR]
+  info      --arch <spec>
+
+workload specs: Table IV names (DLRM-2, ResNet50-1, BERT-3, ...),
+  gemm:MxNxK, conv:N,K,C,X,Y,R,S,stride, tc:<name>:<tds>
+arch specs: edge, edge:RxC, cloud, cloud:RxC, chiplet:FILLBW, fig5, file.uarch";
+
+fn cmd_lower(args: &Args) -> Result<(), String> {
+    let spec = args.flag("workload").ok_or("lower needs --workload")?;
+    let w = parse_workload(spec)?;
+    let use_ttgt = args.switch("ttgt");
+    let affine = w.lower(use_ttgt);
+    if args.switch("print-ir") {
+        println!("--- frontend IR ---");
+        println!("{}", print_module(&w.to_ir()));
+        println!("--- affine IR ---");
+        println!("{}", print_module(&affine));
+    }
+    let problem = w.problem_via_ir(use_ttgt)?;
+    println!("{problem}");
+    println!("total MACs: {}", problem.total_macs());
+    println!(
+        "loop-level conformability:      {:?}",
+        check_loop_level(&affine)
+    );
+    println!(
+        "operation-level (MAESTRO set):  {:?}",
+        check_operation_level(&affine, MaestroModel::supported_operations())
+    );
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<(), String> {
+    let w = parse_workload(args.flag("workload").ok_or("search needs --workload")?)?;
+    let arch = parse_arch(args.flag("arch").ok_or("search needs --arch")?)?;
+    let use_ttgt = args.switch("ttgt");
+    let problem = if use_ttgt {
+        union::frontend::ttgt_gemm(&w)?.gemm_workload(&w.name).problem()
+    } else {
+        w.problem()
+    };
+    let constraints = match args.flag("constraints") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading {path}: {e}"))?;
+            constraints_from_str(&text)?
+        }
+        None => Constraints::default(),
+    };
+    let samples = args.usize_flag("samples", 2_000)?;
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let objective = match args.flag_or("objective", "edp") {
+        "edp" => Objective::Edp,
+        "energy" => Objective::Energy,
+        "latency" => Objective::Latency,
+        other => return Err(format!("unknown objective '{other}'")),
+    };
+    let model: Box<dyn CostModel> = match args.flag_or("cost", "analytical") {
+        "analytical" => Box::new(AnalyticalModel::new(EnergyTable::default_8bit())),
+        "maestro" => Box::new(MaestroModel::new(EnergyTable::default_8bit())),
+        other => return Err(format!("unknown cost model '{other}'")),
+    };
+    model
+        .conformable(&problem, &arch)
+        .map_err(|e| format!("workload not conformable to {}: {e}", model.name()))?;
+
+    let mapper: Box<dyn Mapper> = match args.flag_or("mapper", "random") {
+        "exhaustive" => Box::new(ExhaustiveMapper::new(samples.max(10_000))),
+        "random" => Box::new(RandomMapper::new(samples, seed)),
+        "decoupled" => Box::new(DecoupledMapper::new(samples / 4, samples / 8, seed)),
+        "heuristic" => Box::new(HeuristicMapper::new(samples / 2, 100, seed)),
+        "genetic" => Box::new(GeneticMapper::new(60, (samples / 60).max(1), seed)),
+        other => return Err(format!("unknown mapper '{other}'")),
+    };
+
+    let space = MapSpace::new(&problem, &arch, &constraints);
+    println!(
+        "searching: {} on {} | mapper={} cost={} objective={} (tiling space ~{:.2e})",
+        problem.name,
+        arch.name,
+        mapper.name(),
+        model.name(),
+        objective.name(),
+        space.tiling_space_size()
+    );
+    let best = mapper
+        .search_with(&space, model.as_ref(), objective)
+        .ok_or("no legal mapping found")?;
+    println!(
+        "evaluated {} mappings; best {} = {:.4e}",
+        best.evaluated,
+        objective.name(),
+        best.score
+    );
+    let c = &best.cost;
+    println!(
+        "cycles={:.3e}  latency={:.3e}s  energy={:.3e}J  EDP={:.3e}Js  util={:.1}%  ({} partitioned, {} PEs)",
+        c.cycles,
+        c.latency_s(),
+        c.energy_j(),
+        c.edp(),
+        c.utilization * 100.0,
+        best.mapping.partition_name(&problem),
+        best.mapping.pes_used()
+    );
+    for l in &c.levels {
+        println!(
+            "  {:<6} reads={:.3e} writes={:.3e} energy={:.3e}pJ bw_cycles={:.3e}",
+            l.level_name, l.reads, l.writes, l.energy_pj, l.bw_cycles
+        );
+    }
+    println!("\nUnion mapping:\n{}", best.mapping);
+    if args.switch("render") {
+        println!("loop nest:\n{}", render_loop_nest(&best.mapping, &problem, &arch));
+    }
+    Ok(())
+}
+
+fn cmd_casestudy(args: &Args) -> Result<(), String> {
+    let which = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .ok_or("casestudy needs a figure id (fig3|fig8|fig9|fig10|fig11|table3)")?;
+    let effort = if args.switch("thorough") {
+        Effort::Thorough
+    } else {
+        Effort::Fast
+    };
+    match which {
+        "fig3" => {
+            let (table, _) = experiments::fig3_mapping_sweep(effort);
+            print!("{}", table.render());
+        }
+        "fig8" => {
+            let (table, _) = experiments::fig8_algorithm_exploration(effort);
+            print!("{}", table.render());
+        }
+        "fig9" => print!("{}", experiments::fig9_mappings(effort)),
+        "fig10" => {
+            let (edge, cloud, _) = experiments::fig10_aspect_ratio(effort);
+            print!("{}\n{}", edge.render(), cloud.render());
+        }
+        "fig11" => {
+            let (table, _) = experiments::fig11_chiplet_bandwidth(effort);
+            print!("{}", table.render());
+        }
+        "table3" => print!("{}", experiments::table3_ttgt_dims().render()),
+        other => return Err(format!("unknown case study '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> Result<(), String> {
+    let dir = args
+        .flag("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(union::runtime::artifacts_dir);
+    union::runtime::validate_artifacts(&dir).map_err(|e| e.to_string())
+}
+
+fn cmd_info(args: &Args) -> Result<(), String> {
+    let arch = parse_arch(args.flag("arch").ok_or("info needs --arch")?)?;
+    print!("{arch}");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Marvel-style **decoupled** mapper (paper §II-C.3): decouple the
+//! *off-chip* map-space from the *on-chip* one.
+//!
+//! Phase 1 fixes the outermost (DRAM-facing) tiling by minimizing
+//! off-chip traffic — a proxy objective evaluated without the full cost
+//! model, exactly Marvel's insight that DRAM traffic dominates and can be
+//! optimized independently. Phase 2 searches the remaining inner levels
+//! with the real cost model, holding the off-chip split fixed.
+
+use crate::cost::CostModel;
+use crate::mapping::Mapping;
+use crate::mapspace::MapSpace;
+use crate::util::rng::Rng;
+
+use super::{evaluate_batch, Mapper, Objective, SearchResult};
+
+/// Two-phase decoupled search.
+pub struct DecoupledMapper {
+    /// Candidate off-chip splits scored in phase 1.
+    pub offchip_candidates: usize,
+    /// On-chip random samples per retained off-chip split in phase 2.
+    pub onchip_samples: usize,
+    /// Off-chip splits retained into phase 2.
+    pub keep: usize,
+    pub seed: u64,
+}
+
+impl DecoupledMapper {
+    pub fn new(offchip_candidates: usize, onchip_samples: usize, seed: u64) -> Self {
+        DecoupledMapper { offchip_candidates, onchip_samples, keep: 4, seed }
+    }
+
+    /// Off-chip traffic proxy for a mapping: words moved between DRAM and
+    /// the first on-chip level, from the tile-analysis engine.
+    fn offchip_traffic(space: &MapSpace, m: &Mapping) -> f64 {
+        let ta = crate::cost::TileAnalysis::new(space.problem, space.arch, m);
+        let mv = ta.movement(crate::cost::ReuseModel::OrderAware);
+        // reads+writes at the outermost (DRAM) level
+        mv.levels
+            .first()
+            .map(|l| l.reads + l.writes)
+            .unwrap_or(f64::INFINITY)
+    }
+}
+
+impl Mapper for DecoupledMapper {
+    fn name(&self) -> &str {
+        "decoupled"
+    }
+
+    fn search_with(
+        &self,
+        space: &MapSpace,
+        model: &dyn CostModel,
+        objective: Objective,
+    ) -> Option<SearchResult> {
+        let mut rng = Rng::new(self.seed);
+
+        // ---- phase 1: score off-chip splits by DRAM traffic ----
+        let mut splits: Vec<(Mapping, f64)> = Vec::new();
+        for _ in 0..self.offchip_candidates {
+            let m = space.sample(&mut rng);
+            if !space.admits(&m) {
+                continue;
+            }
+            let traffic = Self::offchip_traffic(space, &m);
+            splits.push((m, traffic));
+        }
+        if splits.is_empty() {
+            return None;
+        }
+        splits.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // keep distinct off-chip signatures (level-1 temporal tiles)
+        let mut kept: Vec<Mapping> = Vec::new();
+        let mut seen: Vec<Vec<u64>> = Vec::new();
+        for (m, _) in &splits {
+            let sig = if m.levels.len() > 1 {
+                m.levels[1].temporal_tile.clone()
+            } else {
+                m.levels[0].temporal_tile.clone()
+            };
+            if !seen.contains(&sig) {
+                seen.push(sig);
+                kept.push(m.clone());
+                if kept.len() >= self.keep {
+                    break;
+                }
+            }
+        }
+
+        // ---- phase 2: for each kept split, search the on-chip levels ----
+        let mut candidates: Vec<Mapping> = Vec::new();
+        for base in &kept {
+            candidates.push(base.clone());
+            for _ in 0..self.onchip_samples {
+                let fresh = space.sample(&mut rng);
+                // graft: keep the off-chip (levels 0..=1) tiling of `base`,
+                // take inner levels from `fresh` where the chain allows
+                let mut child = fresh.clone();
+                let keep_levels = 2.min(child.levels.len());
+                for l in 0..keep_levels {
+                    child.levels[l] = base.levels[l].clone();
+                }
+                // repair chain: inner temporal tiles must divide the kept
+                // spatial tiles (rule 1); clamp where violated
+                for d in 0..space.problem.dims.len() {
+                    let mut prev = child.levels[keep_levels - 1].spatial_tile[d];
+                    for l in keep_levels..child.levels.len() {
+                        let lv = &mut child.levels[l];
+                        if lv.temporal_tile[d] > prev || prev % lv.temporal_tile[d] != 0 {
+                            lv.temporal_tile[d] = prev;
+                        }
+                        if lv.spatial_tile[d] > lv.temporal_tile[d]
+                            || lv.temporal_tile[d] % lv.spatial_tile[d] != 0
+                        {
+                            lv.spatial_tile[d] = lv.temporal_tile[d];
+                        }
+                        prev = lv.spatial_tile[d];
+                    }
+                }
+                candidates.push(child);
+            }
+        }
+        let (best, _) = evaluate_batch(space, model, objective, candidates);
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::mapspace::Constraints;
+    use crate::problem::gemm;
+
+    #[test]
+    fn finds_legal_mapping() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let r = DecoupledMapper::new(200, 50, 13)
+            .search(&space, &model)
+            .expect("decoupled found nothing");
+        assert!(space.admits(&r.mapping));
+        assert!(r.score.is_finite());
+    }
+
+    #[test]
+    fn competitive_with_random_at_equal_budget() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let dec = DecoupledMapper::new(200, 100, 7).search(&space, &model).unwrap();
+        let rnd = super::super::RandomMapper::new(600, 7).search(&space, &model).unwrap();
+        // decoupling should land within 10x of random (usually better on
+        // memory-bound shapes); this guards against pathological grafts
+        assert!(dec.score <= rnd.score * 10.0);
+    }
+}

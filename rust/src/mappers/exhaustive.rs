@@ -1,0 +1,84 @@
+//! Brute-force mapper: enumerate the (order-restricted) map space and
+//! evaluate everything. Only tractable for small problems; the paper
+//! motivates smarter mappers by the infeasibility of this one (§III-B).
+
+use crate::cost::CostModel;
+use crate::mapspace::MapSpace;
+
+use super::{evaluate_batch, Mapper, Objective, SearchResult};
+
+/// Exhaustive search, capped at `limit` enumerated mappings.
+pub struct ExhaustiveMapper {
+    pub limit: usize,
+}
+
+impl ExhaustiveMapper {
+    pub fn new(limit: usize) -> ExhaustiveMapper {
+        ExhaustiveMapper { limit }
+    }
+}
+
+impl Default for ExhaustiveMapper {
+    fn default() -> Self {
+        ExhaustiveMapper::new(200_000)
+    }
+}
+
+impl Mapper for ExhaustiveMapper {
+    fn name(&self) -> &str {
+        "exhaustive"
+    }
+
+    fn search_with(
+        &self,
+        space: &MapSpace,
+        model: &dyn CostModel,
+        objective: Objective,
+    ) -> Option<SearchResult> {
+        let candidates = space.enumerate(self.limit);
+        let (best, _) = evaluate_batch(space, model, objective, candidates);
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::mapspace::Constraints;
+    use crate::problem::gemm;
+
+    #[test]
+    fn finds_optimum_on_toy_space() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let best = ExhaustiveMapper::new(100_000)
+            .search(&space, &model)
+            .expect("exhaustive found nothing");
+        assert!(best.evaluated > 10);
+        // the optimum must beat the sequential baseline
+        let seq = crate::mapping::Mapping::sequential(&p, &a);
+        let seq_cost = model.evaluate(&p, &a, &seq).unwrap();
+        assert!(best.score <= seq_cost.edp());
+    }
+
+    #[test]
+    fn respects_objective() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let m = ExhaustiveMapper::new(50_000);
+        let lat = m.search_with(&space, &model, Objective::Latency).unwrap();
+        let nrg = m.search_with(&space, &model, Objective::Energy).unwrap();
+        // the latency-optimal mapping is at least as fast as the
+        // energy-optimal one
+        assert!(lat.cost.latency_s() <= nrg.cost.latency_s() + 1e-12);
+        assert!(nrg.cost.energy_j() <= lat.cost.energy_j() + 1e-12);
+    }
+}

@@ -1,0 +1,174 @@
+//! Plug-and-play **mappers** (paper §III-B.1): search algorithms that find
+//! efficient mappings in a [`MapSpace`] using any [`CostModel`] — the
+//! interoperability the paper's unified abstractions enable.
+//!
+//! Shipped mappers, mirroring the set Union integrates:
+//!
+//! * [`ExhaustiveMapper`] — brute force over the enumerable space;
+//! * [`RandomMapper`] — random-sampling search (Timeloop-style);
+//! * [`DecoupledMapper`] — Marvel-style two-phase search: optimize the
+//!   off-chip (DRAM-traffic) subspace first, then the on-chip subspace;
+//! * [`HeuristicMapper`] — utilization-greedy beam search with local
+//!   refinement;
+//! * [`GeneticMapper`] — GAMMA-style genetic algorithm (crossover over
+//!   per-dimension tiling genes, mutation, elitism).
+//!
+//! All mappers optimize a configurable [`Objective`] (EDP by default,
+//! matching the paper's case studies).
+
+mod decoupled;
+mod exhaustive;
+mod genetic;
+mod heuristic;
+mod random;
+
+pub use decoupled::DecoupledMapper;
+pub use exhaustive::ExhaustiveMapper;
+pub use genetic::GeneticMapper;
+pub use heuristic::HeuristicMapper;
+pub use random::RandomMapper;
+
+use crate::cost::{CostEstimate, CostModel};
+use crate::mapping::Mapping;
+use crate::mapspace::MapSpace;
+
+/// The target metric a mapper minimizes (paper §III-B: latency, energy or
+/// EDP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Objective {
+    Latency,
+    Energy,
+    #[default]
+    Edp,
+}
+
+impl Objective {
+    pub fn score(&self, e: &CostEstimate) -> f64 {
+        match self {
+            Objective::Latency => e.latency_s(),
+            Objective::Energy => e.energy_j(),
+            Objective::Edp => e.edp(),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Latency => "latency",
+            Objective::Energy => "energy",
+            Objective::Edp => "EDP",
+        }
+    }
+}
+
+/// The best mapping a search found, with its cost and search statistics.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub mapping: Mapping,
+    pub cost: CostEstimate,
+    /// Mappings evaluated during the search.
+    pub evaluated: usize,
+    /// Objective value of `mapping`.
+    pub score: f64,
+}
+
+/// A mapper searches a map space for a good mapping under a cost model.
+pub trait Mapper {
+    fn name(&self) -> &str;
+
+    /// Search with an explicit objective.
+    fn search_with(
+        &self,
+        space: &MapSpace,
+        model: &dyn CostModel,
+        objective: Objective,
+    ) -> Option<SearchResult>;
+
+    /// Search minimizing EDP (the paper's default metric).
+    fn search(&self, space: &MapSpace, model: &dyn CostModel) -> Option<SearchResult> {
+        self.search_with(space, model, Objective::Edp)
+    }
+}
+
+/// Evaluate a batch of candidate mappings in parallel and fold the best.
+/// Shared by the concrete mappers.
+pub(crate) fn evaluate_batch(
+    space: &MapSpace,
+    model: &dyn CostModel,
+    objective: Objective,
+    candidates: Vec<Mapping>,
+) -> (Option<SearchResult>, Vec<(Mapping, f64)>) {
+    let scored: Vec<Option<(Mapping, CostEstimate, f64)>> = crate::util::par::par_map(
+        candidates,
+        |m| -> Option<(Mapping, CostEstimate, f64)> {
+            if !space.admits(m) {
+                return None;
+            }
+            // admits() already ran the full legality rules
+            let est = model.evaluate_prechecked(space.problem, space.arch, m).ok()?;
+            let score = objective.score(&est);
+            Some((m.clone(), est, score))
+        },
+    );
+    let mut best: Option<SearchResult> = None;
+    let mut all = Vec::new();
+    let mut evaluated = 0usize;
+    for item in scored.into_iter().flatten() {
+        evaluated += 1;
+        let (m, est, score) = item;
+        all.push((m.clone(), score));
+        let better = best.as_ref().map(|b| score < b.score).unwrap_or(true);
+        if better {
+            best = Some(SearchResult { mapping: m, cost: est, evaluated: 0, score });
+        }
+    }
+    if let Some(b) = &mut best {
+        b.evaluated = evaluated;
+    }
+    (best, all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::mapspace::Constraints;
+    use crate::problem::gemm;
+
+    #[test]
+    fn objective_scoring() {
+        let e = CostEstimate {
+            cycles: 1e6,
+            energy_pj: 1e9,
+            utilization: 1.0,
+            macs: 1,
+            levels: vec![],
+            interconnect_pj: 0.0,
+            clock_ghz: 1.0,
+        };
+        assert!(Objective::Latency.score(&e) > 0.0);
+        assert!(Objective::Energy.score(&e) > 0.0);
+        assert!(
+            (Objective::Edp.score(&e)
+                - Objective::Latency.score(&e) * Objective::Energy.score(&e))
+            .abs()
+                < 1e-18
+        );
+    }
+
+    #[test]
+    fn evaluate_batch_finds_best() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let candidates = space.enumerate(200);
+        let n = candidates.len();
+        assert!(n > 1);
+        let (best, all) = evaluate_batch(&space, &model, Objective::Edp, candidates);
+        let best = best.unwrap();
+        assert_eq!(best.evaluated, n);
+        assert!(all.iter().all(|(_, s)| *s >= best.score));
+    }
+}

@@ -1,0 +1,92 @@
+//! Random-sampling mapper (the search strategy Timeloop ships, §II-C.3):
+//! draw N random candidates from the map space, evaluate in parallel,
+//! keep the best.
+
+use crate::cost::CostModel;
+use crate::mapspace::MapSpace;
+use crate::util::rng::Rng;
+
+use super::{evaluate_batch, Mapper, Objective, SearchResult};
+
+/// Random-sampling search.
+pub struct RandomMapper {
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl RandomMapper {
+    pub fn new(samples: usize, seed: u64) -> RandomMapper {
+        RandomMapper { samples, seed }
+    }
+}
+
+impl Mapper for RandomMapper {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn search_with(
+        &self,
+        space: &MapSpace,
+        model: &dyn CostModel,
+        objective: Objective,
+    ) -> Option<SearchResult> {
+        // draw candidates in parallel with per-candidate split seeds —
+        // sampling is ~half the wall time of a search otherwise
+        // (EXPERIMENTS.md §Perf iteration 3)
+        let mut rng = Rng::new(self.seed);
+        let seeds: Vec<u64> = (0..self.samples).map(|_| rng.next_u64()).collect();
+        let candidates = crate::util::par::par_map(seeds, |&s| {
+            let mut r = Rng::new(s);
+            space.sample(&mut r)
+        });
+        let (best, _) = evaluate_batch(space, model, objective, candidates);
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{AnalyticalModel, EnergyTable, MaestroModel};
+    use crate::mapspace::Constraints;
+    use crate::problem::gemm;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let r1 = RandomMapper::new(500, 7).search(&space, &model).unwrap();
+        let r2 = RandomMapper::new(500, 7).search(&space, &model).unwrap();
+        assert_eq!(r1.score, r2.score);
+        assert_eq!(r1.mapping, r2.mapping);
+    }
+
+    #[test]
+    fn more_samples_do_not_hurt() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let small = RandomMapper::new(100, 3).search(&space, &model).unwrap();
+        let large = RandomMapper::new(2_000, 3).search(&space, &model).unwrap();
+        assert!(large.score <= small.score);
+    }
+
+    #[test]
+    fn works_with_maestro_cost_model_too() {
+        // the paper's point: the same mapper drives a different cost model
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = MaestroModel::new(EnergyTable::default_8bit());
+        let r = RandomMapper::new(500, 11).search(&space, &model);
+        assert!(r.is_some());
+    }
+}

@@ -1,0 +1,436 @@
+//! **Third Union abstraction** (paper §IV-D): a *cluster-target
+//! loop-centric* mapping between a problem instance and a logical
+//! architecture.
+//!
+//! A [`Mapping`] holds one [`LevelMapping`] per cluster level, outermost
+//! first, each carrying the paper's three directives:
+//!
+//! * `temporal_order` — dimension ordering of the temporal loops at this
+//!   cluster level (outermost loop first);
+//! * `temporal_tile` — `TTᵈᵢ`: the chunk of dimension `d` a level-`i`
+//!   cluster holds/processes across its local schedule;
+//! * `spatial_tile` — `STᵈᵢ`: the chunk handed to one sub-cluster per
+//!   time step. The *parallelism* of dim `d` at level `i` is
+//!   `TTᵈᵢ / STᵈᵢ`, and — following MAESTRO's concurrent-iterator
+//!   semantics — several dims may be parallelized at the same level with
+//!   multiplicative fan-out, with no ordering among the `spatial_for`s.
+//!
+//! Per dimension the tile sizes form a divisor chain
+//! `D ≥ TT⁰ ≥ ST⁰ ≥ TT¹ ≥ ST¹ ≥ … ≥ TTᴸ⁻¹ ≥ STᴸ⁻¹` (outermost level 0),
+//! which encodes both Fig. 5(d)-style mappings and the Fig. 9 optimal
+//! mappings verbatim. The module implements the paper's four legality
+//! rules plus divisibility, and the Fig. 5(e)/Fig. 7 loop-nest rendering.
+
+mod render;
+
+pub use render::render_loop_nest;
+
+use crate::arch::Arch;
+use crate::problem::Problem;
+
+/// The tiling directives targeting one cluster level (paper Fig. 5(d)).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LevelMapping {
+    /// Permutation of problem-dimension indices; outermost temporal loop
+    /// first.
+    pub temporal_order: Vec<usize>,
+    /// `TTᵈ` per problem dimension.
+    pub temporal_tile: Vec<u64>,
+    /// `STᵈ` per problem dimension.
+    pub spatial_tile: Vec<u64>,
+}
+
+/// A full mapping: one [`LevelMapping`] per architecture level, outermost
+/// (DRAM cluster) first.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    pub levels: Vec<LevelMapping>,
+}
+
+/// Why a mapping is illegal (paper §IV-D rules).
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum IllegalMapping {
+    #[error("mapping has {got} levels, architecture has {want}")]
+    LevelCount { got: usize, want: usize },
+    #[error("level {level} tile vectors have wrong dimensionality")]
+    DimCount { level: usize },
+    #[error("level {level} temporal_order is not a permutation of the dims")]
+    BadOrder { level: usize },
+    #[error("rule 4 (coverage): outermost temporal tile of dim {dim} is {tt}, problem needs {need}")]
+    Coverage { dim: String, tt: u64, need: u64 },
+    #[error("spatial tile must divide temporal tile: level {level} dim {dim} TT={tt} ST={st}")]
+    SpatialDivides { level: usize, dim: String, tt: u64, st: u64 },
+    #[error("rule 1: spatial tile of dim {dim} at level {level} ({st}) smaller than temporal tile at level {inner} ({tt_inner})")]
+    Rule1 { level: usize, inner: usize, dim: String, st: u64, tt_inner: u64 },
+    #[error("inner temporal tile must divide outer spatial tile: level {level} dim {dim}")]
+    TripDivides { level: usize, dim: String },
+    #[error("rule 2: parallelism {par} at level {level} exceeds {subs} sub-clusters")]
+    Rule2 { level: usize, par: u64, subs: u64 },
+    #[error("rule 3: level {level} ({mem}) needs {need} B but has {cap} B")]
+    Rule3 { level: usize, mem: String, need: u64, cap: u64 },
+    #[error("innermost level must not parallelize (PE is a single MAC): dim {dim}")]
+    PeParallel { dim: String },
+}
+
+impl Mapping {
+    /// The trivial mapping: everything temporal at the outermost level,
+    /// tiles of 1 inside — always legal w.r.t. rules 1/2/4 (rule 3 may
+    /// still fail on tiny L1s; callers check). Useful as a search seed.
+    pub fn sequential(problem: &Problem, arch: &Arch) -> Mapping {
+        let n = problem.dims.len();
+        let sizes = problem.dim_sizes();
+        let mut levels = Vec::with_capacity(arch.depth());
+        for i in 0..arch.depth() {
+            let tile = if i == 0 { sizes.clone() } else { vec![1; n] };
+            levels.push(LevelMapping {
+                temporal_order: (0..n).collect(),
+                temporal_tile: tile.clone(),
+                spatial_tile: tile,
+            });
+        }
+        Mapping { levels }
+    }
+
+    /// Parallelism of dim `d` at level `i`: `TTᵈᵢ / STᵈᵢ`.
+    pub fn parallelism(&self, level: usize, dim: usize) -> u64 {
+        let l = &self.levels[level];
+        l.temporal_tile[dim] / l.spatial_tile[dim].max(1)
+    }
+
+    /// Total spatial fan-out at level `i` (product over dims).
+    pub fn level_fanout(&self, level: usize) -> u64 {
+        (0..self.levels[level].temporal_tile.len())
+            .map(|d| self.parallelism(level, d))
+            .product()
+    }
+
+    /// Number of PEs actually used = product of all level fan-outs.
+    pub fn pes_used(&self) -> u64 {
+        (0..self.levels.len()).map(|i| self.level_fanout(i)).product()
+    }
+
+    /// PE utilization against an architecture.
+    pub fn utilization(&self, arch: &Arch) -> f64 {
+        self.pes_used() as f64 / arch.num_pes() as f64
+    }
+
+    /// Temporal trip count of dim `d` at level `i`: how many temporal
+    /// steps the level-`i` schedule takes along `d`
+    /// (`STᵈᵢ₋₁ / TTᵈᵢ`, with the problem bound above the top level).
+    pub fn trips(&self, problem: &Problem, level: usize, dim: usize) -> u64 {
+        let outer = if level == 0 {
+            problem.dims[dim].size
+        } else {
+            self.levels[level - 1].spatial_tile[dim]
+        };
+        outer / self.levels[level].temporal_tile[dim].max(1)
+    }
+
+    /// Short dataflow label (e.g. `K_YR_XS` from Fig. 6): per level with
+    /// fan-out > 1, the names of the parallelized dims, joined by `_`.
+    pub fn partition_name(&self, problem: &Problem) -> String {
+        let mut parts = Vec::new();
+        for i in 0..self.levels.len() {
+            let dims: String = (0..problem.dims.len())
+                .filter(|&d| self.parallelism(i, d) > 1)
+                .map(|d| problem.dims[d].name.clone())
+                .collect();
+            if !dims.is_empty() {
+                parts.push(dims);
+            }
+        }
+        if parts.is_empty() {
+            "sequential".to_string()
+        } else {
+            parts.join("_")
+        }
+    }
+
+    /// Validate this mapping against the paper's §IV-D legality rules.
+    pub fn check(&self, problem: &Problem, arch: &Arch) -> Result<(), IllegalMapping> {
+        let nlev = arch.depth();
+        let ndim = problem.dims.len();
+        if self.levels.len() != nlev {
+            return Err(IllegalMapping::LevelCount { got: self.levels.len(), want: nlev });
+        }
+        for (i, l) in self.levels.iter().enumerate() {
+            if l.temporal_tile.len() != ndim
+                || l.spatial_tile.len() != ndim
+                || l.temporal_order.len() != ndim
+            {
+                return Err(IllegalMapping::DimCount { level: i });
+            }
+            let mut seen = vec![false; ndim];
+            for &d in &l.temporal_order {
+                if d >= ndim || seen[d] {
+                    return Err(IllegalMapping::BadOrder { level: i });
+                }
+                seen[d] = true;
+            }
+        }
+        // rule 4 (coverage): top temporal tile spans the problem
+        for d in 0..ndim {
+            let need = problem.dims[d].size;
+            let tt = self.levels[0].temporal_tile[d];
+            if tt != need {
+                return Err(IllegalMapping::Coverage {
+                    dim: problem.dims[d].name.clone(),
+                    tt,
+                    need,
+                });
+            }
+        }
+        for i in 0..nlev {
+            let l = &self.levels[i];
+            let mut fanout = 1u64;
+            for d in 0..ndim {
+                let (tt, st) = (l.temporal_tile[d], l.spatial_tile[d]);
+                if st == 0 || tt == 0 || st > tt || tt % st != 0 {
+                    return Err(IllegalMapping::SpatialDivides {
+                        level: i,
+                        dim: problem.dims[d].name.clone(),
+                        tt,
+                        st,
+                    });
+                }
+                fanout *= tt / st;
+                if i + 1 < nlev {
+                    let tt_inner = self.levels[i + 1].temporal_tile[d];
+                    // rule 1
+                    if st < tt_inner {
+                        return Err(IllegalMapping::Rule1 {
+                            level: i,
+                            inner: i + 1,
+                            dim: problem.dims[d].name.clone(),
+                            st,
+                            tt_inner,
+                        });
+                    }
+                    if st % tt_inner != 0 {
+                        return Err(IllegalMapping::TripDivides {
+                            level: i,
+                            dim: problem.dims[d].name.clone(),
+                        });
+                    }
+                }
+            }
+            // rule 2: fan-out fits the sub-cluster count
+            let subs = arch.levels[i].sub_clusters;
+            if fanout > subs {
+                return Err(IllegalMapping::Rule2 { level: i, par: fanout, subs });
+            }
+            if i == nlev - 1 && fanout > 1 {
+                let d = (0..ndim).find(|&d| self.parallelism(i, d) > 1).unwrap();
+                return Err(IllegalMapping::PeParallel {
+                    dim: problem.dims[d].name.clone(),
+                });
+            }
+            // rule 3: non-virtual levels hold their temporal tiles
+            if let Some(mem) = &arch.levels[i].memory {
+                if mem.size_bytes != u64::MAX {
+                    let need: u64 = problem
+                        .data_spaces
+                        .iter()
+                        .map(|ds| ds.tile_footprint(&l.temporal_tile))
+                        .sum::<u64>()
+                        * arch.word_bytes;
+                    if need > mem.size_bytes {
+                        return Err(IllegalMapping::Rule3 {
+                            level: i,
+                            mem: mem.name.clone(),
+                            need,
+                            cap: mem.size_bytes,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Mapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, l) in self.levels.iter().enumerate() {
+            writeln!(f, "target_cluster: L{i}")?;
+            writeln!(
+                f,
+                "  temporal_order: {}",
+                l.temporal_order
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",")
+            )?;
+            writeln!(
+                f,
+                "  temporal_tile_sizes: {}",
+                l.temporal_tile
+                    .iter()
+                    .map(|t| t.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )?;
+            writeln!(
+                f,
+                "  spatial_tile_sizes:  {}",
+                l.spatial_tile
+                    .iter()
+                    .map(|t| t.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::problem::gemm;
+
+    /// Hand-build the Fig. 9(b)-style mapping: GEMM 4096×16×16 on the
+    /// cloud 32×64, K across C2s (16-way), M across C1s (64-way).
+    fn fig9b_mapping() -> (Problem, Arch, Mapping) {
+        let p = gemm(4096, 16, 16);
+        let a = presets::cloud(32, 64);
+        // dims: M=0 N=1 K=2; levels: C4(DRAM) C3(L2,32 sub) C2(V,64 sub) C1(L1)
+        let m = Mapping {
+            levels: vec![
+                LevelMapping {
+                    temporal_order: vec![0, 2, 1], // M K N
+                    temporal_tile: vec![4096, 16, 16],
+                    spatial_tile: vec![4096, 16, 16],
+                },
+                LevelMapping {
+                    temporal_order: vec![2, 0, 1], // K M N
+                    temporal_tile: vec![4096, 16, 16],
+                    spatial_tile: vec![4096, 16, 1], // K 16-way across C2s
+                },
+                LevelMapping {
+                    temporal_order: vec![2, 0, 1],
+                    temporal_tile: vec![4096, 1, 1],
+                    spatial_tile: vec![64, 1, 1], // M 64-way across C1s
+                },
+                LevelMapping {
+                    temporal_order: vec![2, 0, 1],
+                    temporal_tile: vec![1, 1, 1],
+                    spatial_tile: vec![1, 1, 1],
+                },
+            ],
+        };
+        (p, a, m)
+    }
+
+    use crate::arch::Arch;
+
+    #[test]
+    fn fig9b_is_legal_and_uses_1024_pes() {
+        let (p, a, m) = fig9b_mapping();
+        m.check(&p, &a).unwrap();
+        assert_eq!(m.pes_used(), 1024); // paper: K_M partitioned, 1024 PEs
+        assert!((m.utilization(&a) - 0.5).abs() < 1e-12);
+        assert_eq!(m.partition_name(&p), "K_M");
+    }
+
+    #[test]
+    fn sequential_mapping_is_rule124_legal() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let m = Mapping::sequential(&p, &a);
+        // rule 3 may fail on L2/L1 for big problems; use a small one
+        let p_small = gemm(8, 8, 8);
+        let m_small = Mapping::sequential(&p_small, &a);
+        m_small.check(&p_small, &a).unwrap();
+        assert_eq!(m_small.pes_used(), 1);
+        // rule 3 violation reported for the big problem at the L2 level
+        match m.check(&p, &a) {
+            Err(IllegalMapping::Rule3 { .. }) | Ok(()) => {}
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn coverage_violation_detected() {
+        let (p, a, mut m) = fig9b_mapping();
+        m.levels[0].temporal_tile[0] = 2048;
+        m.levels[0].spatial_tile[0] = 2048;
+        assert!(matches!(
+            m.check(&p, &a),
+            Err(IllegalMapping::Coverage { .. })
+        ));
+    }
+
+    #[test]
+    fn rule1_violation_detected() {
+        let (p, a, mut m) = fig9b_mapping();
+        // make C2's temporal tile larger than C1... i.e. violate at level 1:
+        // ST at level1 (K)=1 but TT at level2 (K)=16
+        m.levels[2].temporal_tile[2] = 16;
+        m.levels[2].spatial_tile[2] = 16;
+        let r = m.check(&p, &a);
+        assert!(
+            matches!(r, Err(IllegalMapping::Rule1 { .. })),
+            "got {r:?}"
+        );
+    }
+
+    #[test]
+    fn rule2_violation_detected() {
+        let (p, a, mut m) = fig9b_mapping();
+        // fan out M 128-way at level 2 but C2 has only 64 sub-clusters
+        m.levels[2].spatial_tile[0] = 32; // 4096/32 = 128-way
+        assert!(matches!(m.check(&p, &a), Err(IllegalMapping::Rule2 { .. })));
+    }
+
+    #[test]
+    fn rule3_violation_detected() {
+        let (p, a, mut m) = fig9b_mapping();
+        // L1 (C1, 512 B) asked to hold a 4096-element M tile
+        m.levels[3].temporal_tile = vec![4096, 1, 1];
+        m.levels[3].spatial_tile = vec![4096, 1, 1];
+        // fix chain: level2 ST_M must be >= 4096
+        m.levels[2].temporal_tile = vec![4096, 1, 1];
+        m.levels[2].spatial_tile = vec![4096, 1, 1];
+        let r = m.check(&p, &a);
+        assert!(matches!(r, Err(IllegalMapping::Rule3 { .. })), "got {r:?}");
+    }
+
+    #[test]
+    fn pe_level_cannot_parallelize() {
+        let (p, a, mut m) = fig9b_mapping();
+        m.levels[3].temporal_tile = vec![64, 1, 1];
+        m.levels[3].spatial_tile = vec![1, 1, 1];
+        // chain fix
+        m.levels[2].temporal_tile = vec![4096, 1, 1];
+        m.levels[2].spatial_tile = vec![64, 1, 1];
+        let r = m.check(&p, &a);
+        // fan-out 64 at PE level: rule2 triggers first (sub_clusters=1)
+        assert!(
+            matches!(r, Err(IllegalMapping::Rule2 { .. }) | Err(IllegalMapping::PeParallel { .. })),
+            "got {r:?}"
+        );
+    }
+
+    #[test]
+    fn trips_chain_multiplies_to_problem() {
+        let (p, _a, m) = fig9b_mapping();
+        for d in 0..3 {
+            let total: u64 = (0..4)
+                .map(|i| m.trips(&p, i, d) * m.parallelism(i, d))
+                .product();
+            assert_eq!(total, p.dims[d].size, "dim {d}");
+        }
+    }
+
+    #[test]
+    fn display_mentions_directives() {
+        let (_p, _a, m) = fig9b_mapping();
+        let s = m.to_string();
+        assert!(s.contains("target_cluster"));
+        assert!(s.contains("temporal_order"));
+        assert!(s.contains("spatial_tile_sizes"));
+    }
+}

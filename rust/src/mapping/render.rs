@@ -1,0 +1,140 @@
+//! Loop-nest rendering of a Union mapping (paper Fig. 5(e) / Fig. 7):
+//! per cluster level, `for` loops for the temporal trips in
+//! `temporal_order`, then unordered `spatial_for`s for the fan-out.
+
+use crate::arch::Arch;
+use crate::problem::Problem;
+
+use super::Mapping;
+
+/// Render the mapping as the paper's annotated loop-nest form.
+pub fn render_loop_nest(mapping: &Mapping, problem: &Problem, arch: &Arch) -> String {
+    let mut out = String::new();
+    let mut indent = 0usize;
+    let n_levels = mapping.levels.len();
+    for i in 0..n_levels {
+        let level = &mapping.levels[i];
+        let src = arch.levels[i]
+            .memory
+            .as_ref()
+            .map(|m| m.name.clone())
+            .unwrap_or_else(|| format!("V{}", n_levels - i));
+        let dst = if i + 1 < n_levels {
+            arch.levels[i + 1]
+                .memory
+                .as_ref()
+                .map(|m| m.name.clone())
+                .unwrap_or_else(|| format!("V{}", n_levels - i - 1))
+        } else {
+            "MAC".to_string()
+        };
+        out.push_str(&format!(
+            "{}// C{}: {} to {}\n",
+            "  ".repeat(indent),
+            n_levels - i,
+            src,
+            dst
+        ));
+        // temporal loops in declared order
+        for &d in &level.temporal_order {
+            let trips = mapping.trips(problem, i, d);
+            if trips > 1 {
+                out.push_str(&format!(
+                    "{}for {}{} in 0..{} {{\n",
+                    "  ".repeat(indent),
+                    problem.dims[d].name.to_lowercase(),
+                    n_levels - i,
+                    trips
+                ));
+                indent += 1;
+            }
+        }
+        // spatial fan-out: no ordering among spatial_fors (concurrent)
+        for d in 0..problem.dims.len() {
+            let par = mapping.parallelism(i, d);
+            if par > 1 {
+                out.push_str(&format!(
+                    "{}spatial_for {}{}' in 0..{} {{  // across {} sub-clusters\n",
+                    "  ".repeat(indent),
+                    problem.dims[d].name.to_lowercase(),
+                    n_levels - i,
+                    par,
+                    arch.levels[i].sub_clusters
+                ));
+                indent += 1;
+            }
+        }
+    }
+    out.push_str(&format!(
+        "{}compute: {};\n",
+        "  ".repeat(indent),
+        problem.operation.name()
+    ));
+    for _ in 0..indent {
+        indent -= 1;
+        out.push_str(&format!("{}}}\n", "  ".repeat(indent)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mapping::LevelMapping;
+    use crate::problem::gemm;
+
+    #[test]
+    fn renders_balanced_braces_and_annotations() {
+        let p = gemm(4096, 16, 16);
+        let a = presets::cloud(32, 64);
+        let m = Mapping {
+            levels: vec![
+                LevelMapping {
+                    temporal_order: vec![0, 2, 1],
+                    temporal_tile: vec![4096, 16, 16],
+                    spatial_tile: vec![4096, 16, 16],
+                },
+                LevelMapping {
+                    temporal_order: vec![2, 0, 1],
+                    temporal_tile: vec![4096, 16, 16],
+                    spatial_tile: vec![4096, 16, 1],
+                },
+                LevelMapping {
+                    temporal_order: vec![2, 0, 1],
+                    temporal_tile: vec![4096, 1, 1],
+                    spatial_tile: vec![64, 1, 1],
+                },
+                LevelMapping {
+                    temporal_order: vec![2, 0, 1],
+                    temporal_tile: vec![1, 1, 1],
+                    spatial_tile: vec![1, 1, 1],
+                },
+            ],
+        };
+        m.check(&p, &a).unwrap();
+        let text = render_loop_nest(&m, &p, &a);
+        assert_eq!(
+            text.matches('{').count(),
+            text.matches('}').count(),
+            "unbalanced braces in:\n{text}"
+        );
+        assert!(text.contains("// C4: DRAM to L2"));
+        assert!(text.contains("spatial_for"));
+        assert!(text.contains("compute: GEMM"));
+        // K fanned out 16-way at C3 (level index 1)
+        assert!(text.contains("k3' in 0..16"));
+        // M fanned out 64-way at C2 (level index 2)
+        assert!(text.contains("m2' in 0..64"));
+    }
+
+    #[test]
+    fn sequential_mapping_renders_temporal_only() {
+        let p = gemm(8, 8, 8);
+        let a = presets::edge();
+        let m = Mapping::sequential(&p, &a);
+        let text = render_loop_nest(&m, &p, &a);
+        assert!(!text.contains("spatial_for"));
+        assert!(text.contains("compute: GEMM"));
+    }
+}

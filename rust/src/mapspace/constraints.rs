@@ -1,0 +1,211 @@
+//! The Union **constraint file** (paper §IV-E): accelerator-derived rules
+//! that eliminate illegal mappings and prune the map space.
+//!
+//! Examples from the paper: an NVDLA-style accelerator is realized by
+//! forcing parallelization onto C and K with a fixed aspect ratio; a
+//! MAERI-style fully-flexible accelerator provides no constraint file at
+//! all; users may also bound PE utilization or pin loop orders / tile
+//! sizes to steer exploration.
+//!
+//! ```text
+//! # nvdla-style.ucon
+//! parallel_dims: [C, K]
+//! min_utilization: 0.25
+//! fixed_orders:
+//!   - level: 0
+//!     order: [N, K, C, Y, X, R, S]
+//! allowed_tile_sizes: [1, 2, 4, 8, 16, 32, 64]
+//! ```
+
+use crate::config::{parse, Value};
+
+/// Pruning rules for a map space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Constraints {
+    /// If set, only these problem dims may have spatial fan-out > 1
+    /// (NVDLA-style rigidity). `None` = fully flexible (MAERI-style).
+    pub parallel_dims: Option<Vec<String>>,
+    /// Reject mappings using less than this fraction of the PEs.
+    pub min_utilization: f64,
+    /// Reject mappings using more than this fraction (rarely < 1).
+    pub max_utilization: f64,
+    /// Forced temporal orders per cluster level: (level index, dim names
+    /// outermost-first).
+    pub fixed_orders: Vec<(usize, Vec<String>)>,
+    /// If set, temporal/spatial tile sizes are restricted to this set
+    /// (1 and the full size are always allowed).
+    pub allowed_tile_sizes: Option<Vec<u64>>,
+    /// Maximum number of *distinct problem dims* parallelized at one
+    /// cluster level. `Some(1)` models the memory-target loop-centric
+    /// restriction of Timeloop-style abstractions (§IV-A1: "1-to-1
+    /// mapping between a tensor rank and physical spatial dimension");
+    /// `None` is Union's fully-flexible cluster-target semantics where
+    /// spatial_fors change iterators concurrently.
+    pub max_parallel_dims_per_level: Option<usize>,
+}
+
+impl Default for Constraints {
+    fn default() -> Self {
+        Constraints {
+            parallel_dims: None,
+            min_utilization: 0.0,
+            max_utilization: 1.0,
+            fixed_orders: Vec::new(),
+            allowed_tile_sizes: None,
+            max_parallel_dims_per_level: None,
+        }
+    }
+}
+
+impl Constraints {
+    /// The forced order for a level, if any.
+    pub fn fixed_order_for(&self, level: usize) -> Option<&[String]> {
+        self.fixed_orders
+            .iter()
+            .find(|(l, _)| *l == level)
+            .map(|(_, names)| names.as_slice())
+    }
+
+    /// NVDLA-style preset used in §IV-E: parallelize only C and K.
+    pub fn nvdla_style() -> Constraints {
+        Constraints {
+            parallel_dims: Some(vec!["C".into(), "K".into()]),
+            ..Constraints::default()
+        }
+    }
+
+    /// Memory-target (Timeloop-style) restriction: one problem dim per
+    /// spatial level (§IV-A1). Used when driving the loop-level cost
+    /// model the way the paper's Fig. 8/11 studies do.
+    pub fn memory_target_style() -> Constraints {
+        Constraints {
+            max_parallel_dims_per_level: Some(1),
+            ..Constraints::default()
+        }
+    }
+}
+
+/// Parse a constraint file (`.ucon`).
+pub fn constraints_from_str(src: &str) -> Result<Constraints, String> {
+    let doc = parse(src).map_err(|e| e.to_string())?;
+    constraints_from_config(&doc)
+}
+
+fn string_list(v: &Value) -> Vec<String> {
+    v.as_list()
+        .map(|items| {
+            items
+                .iter()
+                .filter_map(|i| match i {
+                    Value::Str(s) => Some(s.clone()),
+                    Value::Int(n) => Some(n.to_string()),
+                    _ => None,
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Build constraints from a parsed config document.
+pub fn constraints_from_config(doc: &Value) -> Result<Constraints, String> {
+    let mut c = Constraints::default();
+    if let Some(v) = doc.get("parallel_dims") {
+        c.parallel_dims = Some(string_list(v));
+    }
+    if let Some(u) = doc.get_f64("min_utilization") {
+        if !(0.0..=1.0).contains(&u) {
+            return Err(format!("min_utilization {u} out of [0,1]"));
+        }
+        c.min_utilization = u;
+    }
+    if let Some(u) = doc.get_f64("max_utilization") {
+        if !(0.0..=1.0).contains(&u) {
+            return Err(format!("max_utilization {u} out of [0,1]"));
+        }
+        c.max_utilization = u;
+    }
+    if c.min_utilization > c.max_utilization {
+        return Err("min_utilization exceeds max_utilization".into());
+    }
+    if let Some(orders) = doc.get_list("fixed_orders") {
+        for o in orders {
+            let level = o
+                .get_int("level")
+                .ok_or("fixed_orders entry missing 'level'")? as usize;
+            let order = o
+                .get("order")
+                .map(string_list)
+                .filter(|v| !v.is_empty())
+                .ok_or("fixed_orders entry missing 'order'")?;
+            c.fixed_orders.push((level, order));
+        }
+    }
+    if let Some(n) = doc.get_int("max_parallel_dims_per_level") {
+        if n < 1 {
+            return Err("max_parallel_dims_per_level must be >= 1".into());
+        }
+        c.max_parallel_dims_per_level = Some(n as usize);
+    }
+    if let Some(sizes) = doc.get_list("allowed_tile_sizes") {
+        let v: Vec<u64> = sizes
+            .iter()
+            .filter_map(|s| s.as_int())
+            .map(|i| i as u64)
+            .collect();
+        if v.is_empty() {
+            return Err("allowed_tile_sizes is empty".into());
+        }
+        c.allowed_tile_sizes = Some(v);
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_constraint_file() {
+        let src = "\
+parallel_dims: [C, K]
+min_utilization: 0.25
+max_utilization: 1.0
+fixed_orders:
+  - level: 0
+    order: [N, K, C, Y, X, R, S]
+allowed_tile_sizes: [1, 2, 4, 8, 16]
+";
+        let c = constraints_from_str(src).unwrap();
+        assert_eq!(c.parallel_dims.as_ref().unwrap().len(), 2);
+        assert_eq!(c.min_utilization, 0.25);
+        assert_eq!(c.fixed_order_for(0).unwrap().len(), 7);
+        assert!(c.fixed_order_for(1).is_none());
+        assert_eq!(c.allowed_tile_sizes.as_ref().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn empty_file_is_fully_flexible() {
+        let c = constraints_from_str("").unwrap();
+        assert_eq!(c, Constraints::default());
+        assert!(c.parallel_dims.is_none());
+    }
+
+    #[test]
+    fn bad_utilization_rejected() {
+        assert!(constraints_from_str("min_utilization: 1.5").is_err());
+        assert!(constraints_from_str("min_utilization: 0.9\nmax_utilization: 0.1").is_err());
+    }
+
+    #[test]
+    fn nvdla_preset() {
+        let c = Constraints::nvdla_style();
+        assert!(c.parallel_dims.as_ref().unwrap().contains(&"C".to_string()));
+        assert!(c.parallel_dims.as_ref().unwrap().contains(&"K".to_string()));
+    }
+
+    #[test]
+    fn missing_order_field_is_error() {
+        let src = "fixed_orders:\n  - level: 0\n";
+        assert!(constraints_from_str(src).is_err());
+    }
+}

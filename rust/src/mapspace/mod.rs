@@ -1,0 +1,531 @@
+//! Map-space construction, pruning, enumeration and sampling (paper
+//! §III-B, §IV-E).
+//!
+//! The map space of a problem on an architecture is the set of legal
+//! [`Mapping`]s: per problem dimension a divisor chain
+//! `D = TT⁰ ≥ ST⁰ ≥ TT¹ ≥ … ≥ STᴸ⁻¹`, crossed with per-level temporal
+//! orders. The space grows multiplicatively ("exponential and
+//! multiplicative characteristics", §III-B), so [`MapSpace`] supports
+//! three access patterns used by the mappers:
+//!
+//! * [`MapSpace::enumerate`] — exhaustive tiling enumeration (orders
+//!   restricted to a canonical set) for small problems;
+//! * [`MapSpace::sample`] — uniform-ish random draws for sampling search;
+//! * [`MapSpace::mutate`] — local perturbation for genetic/heuristic
+//!   mappers.
+//!
+//! A [`Constraints`] file (§IV-E) prunes the space: forced parallel dims
+//! (NVDLA-style), utilization bounds, fixed loop orders, restricted tile
+//! sizes.
+
+mod constraints;
+
+pub use constraints::{constraints_from_str, Constraints};
+
+use crate::arch::Arch;
+use crate::mapping::{LevelMapping, Mapping};
+use crate::problem::Problem;
+use crate::util::divisors::divisors;
+use crate::util::rng::Rng;
+
+/// The map space of one (problem, architecture, constraints) triple.
+pub struct MapSpace<'a> {
+    pub problem: &'a Problem,
+    pub arch: &'a Arch,
+    pub constraints: &'a Constraints,
+    /// Per-dimension candidate divisor lists (post-pruning).
+    dim_divisors: Vec<Vec<u64>>,
+}
+
+impl<'a> MapSpace<'a> {
+    pub fn new(problem: &'a Problem, arch: &'a Arch, constraints: &'a Constraints) -> Self {
+        let dim_divisors = problem
+            .dims
+            .iter()
+            .map(|d| {
+                let mut divs = divisors(d.size);
+                if let Some(allowed) = &constraints.allowed_tile_sizes {
+                    divs.retain(|t| allowed.contains(t) || *t == 1 || *t == d.size);
+                }
+                divs
+            })
+            .collect();
+        MapSpace { problem, arch, constraints, dim_divisors }
+    }
+
+    fn ndims(&self) -> usize {
+        self.problem.dims.len()
+    }
+
+    fn nlevels(&self) -> usize {
+        self.arch.depth()
+    }
+
+    /// Can dimension `d` be parallelized under the constraint file?
+    fn may_parallelize(&self, d: usize) -> bool {
+        match &self.constraints.parallel_dims {
+            Some(allowed) => allowed.iter().any(|n| *n == self.problem.dims[d].name),
+            None => true,
+        }
+    }
+
+    /// Chain positions: `2 * nlevels` values per dim
+    /// `[TT0, ST0, TT1, ST1, ...]`; `TT0` pinned to the dim size.
+    fn chain_len(&self) -> usize {
+        2 * self.nlevels()
+    }
+
+    /// Enumerate all divisor chains for dim `d` that satisfy structural
+    /// rules (coverage, divisibility, no fan-out beyond the sub-cluster
+    /// count, parallelization constraints).
+    fn dim_chains(&self, d: usize) -> Vec<Vec<u64>> {
+        let size = self.problem.dims[d].size;
+        let mut out: Vec<Vec<u64>> = Vec::new();
+        let mut chain = vec![size];
+        self.rec_chains(d, &mut chain, &mut out);
+        out
+    }
+
+    fn rec_chains(&self, d: usize, chain: &mut Vec<u64>, out: &mut Vec<Vec<u64>>) {
+        if chain.len() == self.chain_len() {
+            out.push(chain.clone());
+            return;
+        }
+        let prev = *chain.last().unwrap();
+        let pos = chain.len(); // the slot we're filling
+        let level = pos / 2;
+        let is_spatial = pos % 2 == 1; // ST slot at `level`
+        for &t in &self.dim_divisors[d] {
+            if t > prev || prev % t != 0 {
+                continue;
+            }
+            if is_spatial {
+                let fanout = prev / t; // TT/ST at this level
+                if fanout > 1 {
+                    if !self.may_parallelize(d) {
+                        continue;
+                    }
+                    if fanout > self.arch.levels[level].sub_clusters {
+                        continue;
+                    }
+                }
+            }
+            chain.push(t);
+            self.rec_chains(d, chain, out);
+            chain.pop();
+        }
+    }
+
+    /// Build a mapping from per-dim chains and per-level orders.
+    fn mapping_from_chains(&self, chains: &[Vec<u64>], orders: &[Vec<usize>]) -> Mapping {
+        let nl = self.nlevels();
+        let nd = self.ndims();
+        let mut levels = Vec::with_capacity(nl);
+        for i in 0..nl {
+            let mut tt = vec![0u64; nd];
+            let mut st = vec![0u64; nd];
+            for d in 0..nd {
+                tt[d] = chains[d][2 * i];
+                st[d] = chains[d][2 * i + 1];
+            }
+            levels.push(LevelMapping {
+                temporal_order: orders[i].clone(),
+                temporal_tile: tt,
+                spatial_tile: st,
+            });
+        }
+        Mapping { levels }
+    }
+
+    /// The canonical order set for exhaustive enumeration: all rotations
+    /// of the dimension list (puts each dim innermost once), applied
+    /// uniformly at every level — a documented restriction that keeps
+    /// exhaustive search tractable while exposing the reuse-critical
+    /// choice (which dim is stationary).
+    fn canonical_orders(&self) -> Vec<Vec<usize>> {
+        let nd = self.ndims();
+        (0..nd)
+            .map(|rot| (0..nd).map(|i| (i + rot) % nd).collect())
+            .collect()
+    }
+
+    /// Apply the constraint file's fixed order (if any) for a level.
+    fn order_for_level(&self, level: usize, base: &[usize]) -> Vec<usize> {
+        if let Some(names) = self.constraints.fixed_order_for(level) {
+            let fixed: Vec<usize> = names
+                .iter()
+                .filter_map(|n| self.problem.dim_index(n))
+                .collect();
+            if fixed.len() == base.len() {
+                return fixed;
+            }
+        }
+        base.to_vec()
+    }
+
+    /// Post-filters from the constraint file: legality + utilization band
+    /// + per-level parallel-dim limit.
+    pub fn admits(&self, m: &Mapping) -> bool {
+        if m.check(self.problem, self.arch).is_err() {
+            return false;
+        }
+        if let Some(limit) = self.constraints.max_parallel_dims_per_level {
+            for l in 0..m.levels.len() {
+                let distinct = (0..self.ndims())
+                    .filter(|&d| m.parallelism(l, d) > 1)
+                    .count();
+                if distinct > limit {
+                    return false;
+                }
+            }
+        }
+        let u = m.utilization(self.arch);
+        u >= self.constraints.min_utilization && u <= self.constraints.max_utilization
+    }
+
+    /// Exhaustively enumerate legal mappings (tilings × canonical orders),
+    /// stopping after `limit` mappings have been produced.
+    pub fn enumerate(&self, limit: usize) -> Vec<Mapping> {
+        let nd = self.ndims();
+        let per_dim: Vec<Vec<Vec<u64>>> = (0..nd).map(|d| self.dim_chains(d)).collect();
+        if per_dim.iter().any(|c| c.is_empty()) {
+            return Vec::new();
+        }
+        let orders = self.canonical_orders();
+        let mut out = Vec::new();
+        // odometer over per-dim chain choices
+        let mut idx = vec![0usize; nd];
+        'outer: loop {
+            let chains: Vec<Vec<u64>> = (0..nd).map(|d| per_dim[d][idx[d]].clone()).collect();
+            for base in &orders {
+                let per_level: Vec<Vec<usize>> = (0..self.nlevels())
+                    .map(|l| self.order_for_level(l, base))
+                    .collect();
+                let m = self.mapping_from_chains(&chains, &per_level);
+                if self.admits(&m) {
+                    out.push(m);
+                    if out.len() >= limit {
+                        break 'outer;
+                    }
+                }
+            }
+            // advance odometer
+            let mut d = 0;
+            loop {
+                if d == nd {
+                    break 'outer;
+                }
+                idx[d] += 1;
+                if idx[d] < per_dim[d].len() {
+                    break;
+                }
+                idx[d] = 0;
+                d += 1;
+            }
+        }
+        out
+    }
+
+    /// Estimate of the tiling-space size (product of per-dim chain
+    /// counts), before order choices and legality filtering.
+    pub fn tiling_space_size(&self) -> f64 {
+        (0..self.ndims())
+            .map(|d| self.dim_chains(d).len() as f64)
+            .product()
+    }
+
+    /// Draw a random candidate mapping (structurally valid chain; overall
+    /// legality still subject to [`MapSpace::admits`]).
+    pub fn sample(&self, rng: &mut Rng) -> Mapping {
+        self.sample_with_bias(rng, 0.0)
+    }
+
+    /// Like [`MapSpace::sample`] but at each spatial slot, with
+    /// probability `greedy`, pick the choice that maximizes fan-out
+    /// instead of drawing uniformly. Utilization-seeking mappers
+    /// (heuristic, genetic seeding) use `greedy ≈ 0.5–0.8` to reach the
+    /// high-parallelism corner of the space quickly.
+    pub fn sample_with_bias(&self, rng: &mut Rng, greedy: f64) -> Mapping {
+        let nd = self.ndims();
+        let nl = self.nlevels();
+        // under a per-level parallel-dim limit, pre-draw which dims may
+        // fan out at each level so samples land inside the constraint
+        let spatial_ok: Option<Vec<Vec<bool>>> =
+            self.constraints.max_parallel_dims_per_level.map(|limit| {
+                (0..nl)
+                    .map(|_| {
+                        let mut dims: Vec<usize> = (0..nd).collect();
+                        rng.shuffle(&mut dims);
+                        let mut ok = vec![false; nd];
+                        for &d in dims.iter().take(limit) {
+                            ok[d] = true;
+                        }
+                        ok
+                    })
+                    .collect()
+            });
+        let mut chains: Vec<Vec<u64>> = Vec::with_capacity(nd);
+        for d in 0..nd {
+            let mut chain = Vec::with_capacity(self.chain_len());
+            chain.push(self.problem.dims[d].size);
+            while chain.len() < self.chain_len() {
+                let prev = *chain.last().unwrap();
+                let pos = chain.len();
+                let level = pos / 2;
+                let is_spatial = pos % 2 == 1;
+                // allocation-free selection (hot path, §Perf iteration 4):
+                // count legal options, then walk to the chosen one.
+                // divisors are sorted ascending, so the first legal
+                // option is the smallest ST = the largest fan-out.
+                let legal = |t: u64| -> bool {
+                    if t > prev || prev % t != 0 {
+                        return false;
+                    }
+                    if is_spatial {
+                        let fanout = prev / t;
+                        if fanout > 1 {
+                            if !self.may_parallelize(d)
+                                || fanout > self.arch.levels[level].sub_clusters
+                            {
+                                return false;
+                            }
+                            if let Some(ok) = &spatial_ok {
+                                if !ok[level][d] {
+                                    return false;
+                                }
+                            }
+                        }
+                    }
+                    true
+                };
+                let count = self.dim_divisors[d].iter().filter(|&&t| legal(t)).count();
+                debug_assert!(count > 0, "prev itself is always a legal choice");
+                let want = if is_spatial && greedy > 0.0 && rng.chance(greedy) {
+                    0
+                } else {
+                    rng.below(count)
+                };
+                let pick = self.dim_divisors[d]
+                    .iter()
+                    .copied()
+                    .filter(|&t| legal(t))
+                    .nth(want)
+                    .expect("indexed within count");
+                chain.push(pick);
+            }
+            chains.push(chain);
+        }
+        let orders: Vec<Vec<usize>> = (0..nl)
+            .map(|l| {
+                // avoid the shuffle+clone double allocation when the
+                // level's order is pinned by the constraint file
+                if let Some(names) = self.constraints.fixed_order_for(l) {
+                    let fixed: Vec<usize> = names
+                        .iter()
+                        .filter_map(|n| self.problem.dim_index(n))
+                        .collect();
+                    if fixed.len() == nd {
+                        return fixed;
+                    }
+                }
+                let mut o: Vec<usize> = (0..nd).collect();
+                rng.shuffle(&mut o);
+                o
+            })
+            .collect();
+        self.mapping_from_chains(&chains, &orders)
+    }
+
+    /// Draw until a mapping passes [`MapSpace::admits`], up to `tries`.
+    pub fn sample_legal(&self, rng: &mut Rng, tries: usize) -> Option<Mapping> {
+        for _ in 0..tries {
+            let m = self.sample(rng);
+            if self.admits(&m) {
+                return Some(m);
+            }
+        }
+        None
+    }
+
+    /// Locally perturb a mapping: re-draw one dimension's chain or shuffle
+    /// one level's order. Used by the genetic mapper's mutation operator.
+    pub fn mutate(&self, m: &Mapping, rng: &mut Rng) -> Mapping {
+        let mut out = m.clone();
+        let nd = self.ndims();
+        if rng.chance(0.5) {
+            // re-draw one dim's chain from a fresh sample
+            let fresh = self.sample(rng);
+            let d = rng.below(nd);
+            for (lvl, fresh_lvl) in out.levels.iter_mut().zip(&fresh.levels) {
+                lvl.temporal_tile[d] = fresh_lvl.temporal_tile[d];
+                lvl.spatial_tile[d] = fresh_lvl.spatial_tile[d];
+            }
+        } else {
+            // swap two dims in one level's temporal order
+            let l = rng.below(out.levels.len());
+            if self.constraints.fixed_order_for(l).is_none() && nd >= 2 {
+                let i = rng.below(nd);
+                let j = rng.below(nd);
+                out.levels[l].temporal_order.swap(i, j);
+            }
+        }
+        out
+    }
+
+    /// Crossover two parents dimension-wise (GAMMA-style): the child takes
+    /// each dim's divisor chain from one parent or the other.
+    pub fn crossover(&self, a: &Mapping, b: &Mapping, rng: &mut Rng) -> Mapping {
+        let mut child = a.clone();
+        for d in 0..self.ndims() {
+            if rng.chance(0.5) {
+                for (cl, bl) in child.levels.iter_mut().zip(&b.levels) {
+                    cl.temporal_tile[d] = bl.temporal_tile[d];
+                    cl.spatial_tile[d] = bl.spatial_tile[d];
+                }
+            }
+        }
+        child
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::problem::gemm;
+
+    #[test]
+    fn enumerate_small_space_all_legal() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let maps = space.enumerate(5_000);
+        assert!(!maps.is_empty());
+        for m in &maps {
+            assert!(m.check(&p, &a).is_ok());
+        }
+    }
+
+    #[test]
+    fn sample_legal_finds_mappings() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let mut rng = Rng::new(7);
+        let m = space.sample_legal(&mut rng, 10_000).expect("no legal mapping found");
+        assert!(space.admits(&m));
+    }
+
+    #[test]
+    fn parallel_dims_constraint_respected() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints {
+            parallel_dims: Some(vec!["M".into(), "N".into()]),
+            ..Constraints::default()
+        };
+        let space = MapSpace::new(&p, &a, &c);
+        let mut rng = Rng::new(3);
+        let k = p.dim_index("K").unwrap();
+        let mut found = 0;
+        for _ in 0..20 {
+            if let Some(m) = space.sample_legal(&mut rng, 1_000) {
+                found += 1;
+                for lvl in 0..a.depth() {
+                    assert_eq!(m.parallelism(lvl, k), 1, "K must not be parallelized");
+                }
+            }
+        }
+        assert!(found > 0);
+    }
+
+    #[test]
+    fn utilization_band_filters() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let c = Constraints {
+            min_utilization: 0.5,
+            ..Constraints::default()
+        };
+        let space = MapSpace::new(&p, &a, &c);
+        let mut rng = Rng::new(11);
+        if let Some(m) = space.sample_legal(&mut rng, 50_000) {
+            assert!(m.utilization(&a) >= 0.5);
+        }
+    }
+
+    #[test]
+    fn mutate_keeps_divisor_chain_structure() {
+        let p = gemm(16, 16, 16);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let mut rng = Rng::new(5);
+        let m = space.sample_legal(&mut rng, 10_000).unwrap();
+        for _ in 0..30 {
+            let mutant = space.mutate(&m, &mut rng);
+            assert_eq!(mutant.levels.len(), m.levels.len());
+            for d in 0..p.dims.len() {
+                let mut prev = p.dims[d].size;
+                for lvl in &mutant.levels {
+                    assert!(lvl.temporal_tile[d] >= 1);
+                    assert_eq!(prev % lvl.temporal_tile[d], 0, "TT divides outer ST");
+                    assert_eq!(lvl.temporal_tile[d] % lvl.spatial_tile[d], 0);
+                    prev = lvl.spatial_tile[d];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_mixes_parents() {
+        let p = gemm(16, 16, 16);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let mut rng = Rng::new(9);
+        let a1 = space.sample_legal(&mut rng, 10_000).unwrap();
+        let b1 = space.sample_legal(&mut rng, 10_000).unwrap();
+        let child = space.crossover(&a1, &b1, &mut rng);
+        assert_eq!(child.levels.len(), a1.levels.len());
+        // every dim chain comes verbatim from one of the parents
+        for d in 0..p.dims.len() {
+            let from_a = child
+                .levels
+                .iter()
+                .zip(&a1.levels)
+                .all(|(c, p_)| c.temporal_tile[d] == p_.temporal_tile[d]);
+            let from_b = child
+                .levels
+                .iter()
+                .zip(&b1.levels)
+                .all(|(c, p_)| c.temporal_tile[d] == p_.temporal_tile[d]);
+            assert!(from_a || from_b);
+        }
+    }
+
+    #[test]
+    fn tiling_space_size_positive() {
+        let p = gemm(16, 16, 16);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        assert!(space.tiling_space_size() > 1.0);
+    }
+
+    #[test]
+    fn allowed_tile_sizes_restrict_chains() {
+        let p = gemm(16, 16, 16);
+        let a = presets::fig5_toy();
+        let free = Constraints::default();
+        let restricted = Constraints {
+            allowed_tile_sizes: Some(vec![1, 16]),
+            ..Constraints::default()
+        };
+        let s_free = MapSpace::new(&p, &a, &free).tiling_space_size();
+        let s_restr = MapSpace::new(&p, &a, &restricted).tiling_space_size();
+        assert!(s_restr < s_free);
+    }
+}

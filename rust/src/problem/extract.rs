@@ -1,0 +1,184 @@
+//! Extraction of a Union [`Problem`] from a lowered IR module (paper
+//! §IV-B): loop iterators become dimensions, array references become data
+//! spaces with affine projections, loop bounds become dimension sizes, and
+//! the `op_hint` annotation is preserved as the operation attribute.
+
+use crate::ir::core::{Attr, Module, Op};
+use crate::ir::AffineMap;
+
+use super::{DataSpace, Dim, Operation, Problem, ProjTerm};
+
+fn hint_to_operation(hint: &str) -> Operation {
+    match hint {
+        "CONV2D" => Operation::Conv2d,
+        "GEMM" => Operation::Gemm,
+        "DWCONV" => Operation::DwConv,
+        "TC" => Operation::TensorContraction,
+        "MTTKRP" => Operation::Mttkrp,
+        _ => Operation::Generic,
+    }
+}
+
+fn map_to_projection(map: &AffineMap) -> Vec<Vec<ProjTerm>> {
+    map.results
+        .iter()
+        .map(|expr| {
+            expr.terms
+                .iter()
+                .map(|&(d, c)| ProjTerm { dim: d, coef: c.max(0) as u64 })
+                .collect()
+        })
+        .collect()
+}
+
+/// Extract a problem instance from the first affine loop nest in `m`.
+///
+/// The nest must have passed [`crate::ir::check_loop_level`]; this
+/// function re-validates the essentials and reports precise errors.
+pub fn problem_from_affine(m: &Module) -> Result<Problem, String> {
+    let root = m
+        .ops
+        .iter()
+        .find(|o| o.opcode == "affine.for")
+        .ok_or_else(|| "module contains no affine loop nest".to_string())?;
+
+    // walk the spine collecting (name, bound) per loop level
+    let mut dims: Vec<Dim> = Vec::new();
+    let mut cur: &Op = root;
+    let body: &[Op] = loop {
+        let name = cur
+            .attr("iv_name")
+            .and_then(|a| a.as_str())
+            .ok_or("loop without iv_name")?
+            .to_string();
+        let ub = cur
+            .attr("ub")
+            .and_then(|a| a.as_int())
+            .ok_or("loop without bound")?;
+        if ub <= 0 {
+            return Err(format!("loop {name} has non-positive bound {ub}"));
+        }
+        dims.push(Dim { name, size: ub as u64 });
+        let block = &cur.regions[0].blocks[0];
+        match block.ops.iter().find(|o| o.opcode == "affine.for") {
+            Some(inner) => cur = inner,
+            None => break &block.ops,
+        }
+    };
+
+    // array references -> data spaces
+    let mut data_spaces: Vec<DataSpace> = Vec::new();
+    for op in body {
+        let (tensor, map, is_output) = match op.opcode.as_str() {
+            "affine.load" => {
+                let Some(Attr::Map(map)) = op.attr("map") else {
+                    return Err("load without affine map".into());
+                };
+                (op.operands[0], map, false)
+            }
+            "affine.store" => {
+                let Some(Attr::Map(map)) = op.attr("map") else {
+                    return Err("store without affine map".into());
+                };
+                (op.operands[1], map, true)
+            }
+            _ => continue,
+        };
+        let name = m.value_name(tensor).to_string();
+        if let Some(existing) = data_spaces.iter_mut().find(|d| d.name == name) {
+            // a tensor both loaded and stored is the (read-modify-write) output
+            existing.is_output |= is_output;
+            continue;
+        }
+        if map.num_dims != dims.len() {
+            return Err(format!(
+                "access map of {name} has {} dims, nest has {}",
+                map.num_dims,
+                dims.len()
+            ));
+        }
+        data_spaces.push(DataSpace {
+            name,
+            projection: map_to_projection(map),
+            is_output,
+        });
+    }
+
+    let operation = root
+        .attr("op_hint")
+        .and_then(|a| a.as_str())
+        .map(hint_to_operation)
+        .unwrap_or(Operation::Generic);
+
+    let problem = Problem {
+        name: m.name.clone(),
+        operation,
+        dims,
+        data_spaces,
+    };
+    problem.validate()?;
+    Ok(problem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::core::{DType, Module, Type};
+    use crate::ir::dialects::{ta, tosa};
+    use crate::ir::lower::{linalg_to_affine, ta_to_linalg, tosa_to_linalg};
+
+    #[test]
+    fn extract_gemm() {
+        let mut m = Module::new("g");
+        let a = m.new_value("A", Type::tensor(&[8, 4], DType::F32));
+        let b = m.new_value("B", Type::tensor(&[4, 6], DType::F32));
+        let (op, _) = tosa::matmul(&mut m, a, b);
+        m.ops.push(op);
+        let p = problem_from_affine(&linalg_to_affine(&tosa_to_linalg(&m))).unwrap();
+        assert_eq!(p.operation, Operation::Gemm);
+        assert_eq!(p.dims.len(), 3);
+        assert_eq!(p.total_macs(), 8 * 6 * 4);
+        assert_eq!(p.data_spaces.len(), 3);
+        assert!(p.output().name.contains("out"));
+        // matches the hand-built shape
+        let hand = crate::problem::gemm(8, 6, 4);
+        assert_eq!(p.dim_sizes(), hand.dim_sizes());
+        assert_eq!(p.reduction_dims(), hand.reduction_dims());
+    }
+
+    #[test]
+    fn extract_conv_preserves_stride() {
+        let mut m = Module::new("c");
+        let input = m.new_value("I", Type::tensor(&[1, 9, 9, 3], DType::F32));
+        let weight = m.new_value("W", Type::tensor(&[8, 3, 3, 3], DType::F32));
+        let (op, _) = tosa::conv2d(&mut m, input, weight, (2, 2));
+        m.ops.push(op);
+        let p = problem_from_affine(&linalg_to_affine(&tosa_to_linalg(&m))).unwrap();
+        assert_eq!(p.operation, Operation::Conv2d);
+        // input's H rank projection has a coef-2 term (stride)
+        let inp = p.data_spaces.iter().find(|d| d.name == "I").unwrap();
+        let h_rank = &inp.projection[1];
+        assert!(h_rank.iter().any(|t| t.coef == 2));
+        // X = (9-3)/2 + 1 = 4
+        assert_eq!(p.dims[p.dim_index("X").unwrap()].size, 4);
+    }
+
+    #[test]
+    fn extract_tc_native() {
+        let mut m = Module::new("tc");
+        let a = m.new_value("A", Type::tensor(&[16, 16, 16, 16], DType::F32));
+        let b = m.new_value("B", Type::tensor(&[16, 16], DType::F32));
+        let (op, _) = ta::contract(&mut m, "dbea,ec->abcd", a, b);
+        m.ops.push(op);
+        let p = problem_from_affine(&linalg_to_affine(&ta_to_linalg(&m, false))).unwrap();
+        assert_eq!(p.operation, Operation::TensorContraction);
+        assert_eq!(p.dims.len(), 5);
+        assert_eq!(p.total_macs(), 16u64.pow(5));
+    }
+
+    #[test]
+    fn extract_fails_without_nest() {
+        let m = Module::new("empty");
+        assert!(problem_from_affine(&m).is_err());
+    }
+}

@@ -1,0 +1,359 @@
+//! **First Union abstraction** (paper §IV-B): from MLIR dialects to a
+//! *problem instance*.
+//!
+//! A [`Problem`] is a cost-model-independent description of a tensor
+//! operation: named iteration *dimensions* with sizes, *data spaces*
+//! (tensors) with affine *projections* from the iteration space onto each
+//! tensor rank, and an optional *operation annotation* (CONV2D / GEMM /
+//! TC) so that operation-level cost models (MAESTRO-style) and loop-level
+//! cost models (Timeloop-style) can both consume the same instance.
+//!
+//! Problems are produced by [`crate::frontend`] builders or extracted from
+//! [`crate::ir`] affine loop nests by [`extract::problem_from_affine`].
+
+mod extract;
+mod shapes;
+
+pub use extract::problem_from_affine;
+pub use shapes::{conv2d, gemm, mttkrp, tensor_contraction};
+
+/// High-level operation annotation attached to a problem instance.
+///
+/// Operation-level cost models (MAESTRO) dispatch on this; loop-level cost
+/// models (Timeloop) ignore it and use the loop/projection view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operation {
+    Conv2d,
+    Gemm,
+    /// Depthwise convolution.
+    DwConv,
+    /// General tensor contraction (einsum with one contracted group).
+    TensorContraction,
+    /// Matricized tensor times Khatri-Rao product (3-operand unit op).
+    Mttkrp,
+    /// Anything else expressible as a perfectly-nested affine loop.
+    Generic,
+}
+
+impl Operation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Operation::Conv2d => "CONV2D",
+            Operation::Gemm => "GEMM",
+            Operation::DwConv => "DWCONV",
+            Operation::TensorContraction => "TC",
+            Operation::Mttkrp => "MTTKRP",
+            Operation::Generic => "GENERIC",
+        }
+    }
+
+    /// MACs per innermost iteration point (3-operand ops do one extra
+    /// multiply; used by cost models when checking the PE unit operation).
+    pub fn operands(&self) -> usize {
+        match self {
+            Operation::Mttkrp => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// A named iteration dimension with a size (loop bound).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dim {
+    pub name: String,
+    pub size: u64,
+}
+
+/// One affine term of a projection: `coef * iter(dim)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProjTerm {
+    /// Index into [`Problem::dims`].
+    pub dim: usize,
+    /// Multiplier (e.g. `stride` for the sliding-window X index of CONV2D).
+    pub coef: u64,
+}
+
+/// The projection of the iteration space onto one tensor rank: an affine
+/// sum of iteration variables, e.g. CONV2D input column `x*stride + s`.
+pub type RankProjection = Vec<ProjTerm>;
+
+/// A tensor participating in the operation, with its projection.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataSpace {
+    pub name: String,
+    /// One projection per tensor rank, outermost rank first.
+    pub projection: Vec<RankProjection>,
+    /// True for the tensor being produced (read-modify-write).
+    pub is_output: bool,
+}
+
+impl DataSpace {
+    /// Dimensions that index this tensor (appear in any rank projection).
+    pub fn relevant_dims(&self, ndims: usize) -> Vec<bool> {
+        let mut rel = vec![false; ndims];
+        for rank in &self.projection {
+            for t in rank {
+                rel[t.dim] = true;
+            }
+        }
+        rel
+    }
+
+    /// Number of elements this tensor's tile occupies when each dimension
+    /// `d` spans `tile[d]` iterations: the product over ranks of the
+    /// projected extent `Σ coef_i · (tile_i − 1) + 1`.
+    ///
+    /// For simple projections (coef 1, one term) this is just the tile
+    /// size; for CONV2D sliding windows it yields the halo-inclusive
+    /// extent, matching Timeloop's working-set math.
+    pub fn tile_footprint(&self, tile: &[u64]) -> u64 {
+        self.projection
+            .iter()
+            .map(|rank| {
+                rank.iter()
+                    .map(|t| t.coef * (tile[t.dim].saturating_sub(1)))
+                    .sum::<u64>()
+                    + 1
+            })
+            .product()
+    }
+
+    /// Total tensor size in elements for the full problem bounds.
+    pub fn full_size(&self, dims: &[Dim]) -> u64 {
+        let full: Vec<u64> = dims.iter().map(|d| d.size).collect();
+        self.tile_footprint(&full)
+    }
+}
+
+/// A Union problem instance (Fig. 5(a) of the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Problem {
+    pub name: String,
+    pub operation: Operation,
+    pub dims: Vec<Dim>,
+    pub data_spaces: Vec<DataSpace>,
+}
+
+impl Problem {
+    /// Index of a dimension by name.
+    pub fn dim_index(&self, name: &str) -> Option<usize> {
+        self.dims.iter().position(|d| d.name == name)
+    }
+
+    /// Dimension sizes in declaration order.
+    pub fn dim_sizes(&self) -> Vec<u64> {
+        self.dims.iter().map(|d| d.size).collect()
+    }
+
+    /// Total multiply-accumulate count = product of all loop bounds.
+    pub fn total_macs(&self) -> u64 {
+        self.dims.iter().map(|d| d.size).product()
+    }
+
+    /// The output data space. Every well-formed problem has exactly one.
+    pub fn output(&self) -> &DataSpace {
+        self.data_spaces
+            .iter()
+            .find(|ds| ds.is_output)
+            .expect("problem has no output data space")
+    }
+
+    /// Reduction dimensions: iterated but not projected onto the output.
+    pub fn reduction_dims(&self) -> Vec<bool> {
+        let rel = self.output().relevant_dims(self.dims.len());
+        rel.into_iter().map(|r| !r).collect()
+    }
+
+    /// Arithmetic intensity in MACs per element touched (upper bound,
+    /// full-reuse): used by decoupled mappers for off-chip reasoning.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        let touched: u64 = self
+            .data_spaces
+            .iter()
+            .map(|ds| ds.full_size(&self.dims))
+            .sum();
+        self.total_macs() as f64 / touched.max(1) as f64
+    }
+
+    /// Validate internal consistency (indices in range, exactly one
+    /// output, nonzero bounds). Frontends call this after construction.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dims.is_empty() {
+            return Err("problem has no dimensions".into());
+        }
+        for d in &self.dims {
+            if d.size == 0 {
+                return Err(format!("dimension {} has size 0", d.name));
+            }
+        }
+        let outputs = self.data_spaces.iter().filter(|d| d.is_output).count();
+        if outputs != 1 {
+            return Err(format!("expected exactly 1 output data space, got {outputs}"));
+        }
+        if self.data_spaces.len() < 2 {
+            return Err("problem needs at least one input and one output".into());
+        }
+        for ds in &self.data_spaces {
+            if ds.projection.is_empty() {
+                return Err(format!("data space {} has no ranks", ds.name));
+            }
+            for rank in &ds.projection {
+                if rank.is_empty() {
+                    return Err(format!("data space {} has an empty rank projection", ds.name));
+                }
+                for t in rank {
+                    if t.dim >= self.dims.len() {
+                        return Err(format!(
+                            "data space {} projects onto unknown dim index {}",
+                            ds.name, t.dim
+                        ));
+                    }
+                    if t.coef == 0 {
+                        return Err(format!("data space {} has a zero coefficient", ds.name));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for Problem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "problem {} [{}]", self.name, self.operation.name())?;
+        write!(f, "  dims:")?;
+        for d in &self.dims {
+            write!(f, " {}={}", d.name, d.size)?;
+        }
+        writeln!(f)?;
+        for ds in &self.data_spaces {
+            write!(f, "  {}{}[", if ds.is_output { "out " } else { "in  " }, ds.name)?;
+            for (i, rank) in ds.projection.iter().enumerate() {
+                if i > 0 {
+                    write!(f, "][")?;
+                }
+                for (j, t) in rank.iter().enumerate() {
+                    if j > 0 {
+                        write!(f, "+")?;
+                    }
+                    if t.coef != 1 {
+                        write!(f, "{}*", t.coef)?;
+                    }
+                    write!(f, "{}", self.dims[t.dim].name)?;
+                }
+            }
+            writeln!(f, "]")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_problem_shape() {
+        let p = gemm(64, 32, 16);
+        p.validate().unwrap();
+        assert_eq!(p.total_macs(), 64 * 32 * 16);
+        assert_eq!(p.dims.len(), 3);
+        assert_eq!(p.data_spaces.len(), 3);
+        // reduction dim is K
+        let red = p.reduction_dims();
+        let k = p.dim_index("K").unwrap();
+        assert!(red[k]);
+        assert_eq!(red.iter().filter(|&&r| r).count(), 1);
+    }
+
+    #[test]
+    fn gemm_footprints() {
+        let p = gemm(8, 4, 2);
+        let a = &p.data_spaces[0]; // A[M][K]
+        let full: Vec<u64> = p.dim_sizes();
+        assert_eq!(a.tile_footprint(&full), 8 * 2);
+        // tile M=2,N=4,K=1
+        let m = p.dim_index("M").unwrap();
+        let n = p.dim_index("N").unwrap();
+        let k = p.dim_index("K").unwrap();
+        let mut tile = vec![1u64; 3];
+        tile[m] = 2;
+        tile[n] = 4;
+        tile[k] = 1;
+        assert_eq!(a.tile_footprint(&tile), 2);
+        let c = p.output();
+        assert_eq!(c.tile_footprint(&tile), 8);
+    }
+
+    #[test]
+    fn conv_halo_footprint() {
+        // X'=4, R=3, stride 1: input extent = 1*(4-1) + 1*(3-1) + 1 = 6
+        let p = conv2d(1, 1, 1, 4, 4, 3, 3, 1);
+        let ia = p
+            .data_spaces
+            .iter()
+            .find(|d| d.name == "Input")
+            .unwrap();
+        let mut tile: Vec<u64> = vec![1; p.dims.len()];
+        tile[p.dim_index("X").unwrap()] = 4;
+        tile[p.dim_index("R").unwrap()] = 3;
+        assert_eq!(ia.tile_footprint(&tile), 6);
+    }
+
+    #[test]
+    fn conv_strided_footprint() {
+        let p = conv2d(1, 1, 1, 4, 4, 3, 3, 2);
+        let ia = p.data_spaces.iter().find(|d| d.name == "Input").unwrap();
+        let mut tile: Vec<u64> = vec![1; p.dims.len()];
+        tile[p.dim_index("X").unwrap()] = 4;
+        tile[p.dim_index("R").unwrap()] = 3;
+        // 2*(4-1) + 1*(3-1) + 1 = 9
+        assert_eq!(ia.tile_footprint(&tile), 9);
+    }
+
+    #[test]
+    fn validate_catches_bad_problems() {
+        let mut p = gemm(4, 4, 4);
+        p.data_spaces[2].is_output = false;
+        assert!(p.validate().is_err());
+
+        let mut p2 = gemm(4, 4, 4);
+        p2.dims[0].size = 0;
+        assert!(p2.validate().is_err());
+
+        let mut p3 = gemm(4, 4, 4);
+        p3.data_spaces[0].projection[0][0].dim = 99;
+        assert!(p3.validate().is_err());
+    }
+
+    #[test]
+    fn arithmetic_intensity_gemm() {
+        let p = gemm(64, 64, 64);
+        // macs = 64^3, touched = 3*64^2 -> AI = 64/3
+        assert!((p.arithmetic_intensity() - 64.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tc_problem() {
+        let p = tensor_contraction(
+            "ccsd-t4",
+            &[("A", 32), ("B", 32), ("C", 32), ("D", 32), ("E", 32), ("F", 32), ("G", 32)],
+            &["D", "F", "G", "B"],
+            &["G", "E", "A", "C"],
+            &["A", "B", "C", "D", "E", "F"],
+        );
+        p.validate().unwrap();
+        assert_eq!(p.total_macs(), 32u64.pow(7));
+        assert_eq!(p.operation, Operation::TensorContraction);
+        let red = p.reduction_dims();
+        assert_eq!(red.iter().filter(|&&r| r).count(), 1); // only G
+    }
+
+    #[test]
+    fn display_is_stable() {
+        let p = gemm(4, 4, 4);
+        let s = p.to_string();
+        assert!(s.contains("GEMM"));
+        assert!(s.contains("M=4"));
+    }
+}

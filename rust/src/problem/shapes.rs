@@ -1,0 +1,211 @@
+//! Canonical problem builders for the operations the paper evaluates
+//! (Algorithms 1 and 2, plus GEMM and MTTKRP from §III-B).
+
+use super::{DataSpace, Dim, Operation, Problem, ProjTerm};
+
+fn term(dim: usize, coef: u64) -> ProjTerm {
+    ProjTerm { dim, coef }
+}
+
+/// GEMM: `C[M][N] += A[M][K] * B[K][N]`.
+pub fn gemm(m: u64, n: u64, k: u64) -> Problem {
+    let dims = vec![
+        Dim { name: "M".into(), size: m },
+        Dim { name: "N".into(), size: n },
+        Dim { name: "K".into(), size: k },
+    ];
+    let (dm, dn, dk) = (0, 1, 2);
+    Problem {
+        name: format!("gemm_m{m}_n{n}_k{k}"),
+        operation: Operation::Gemm,
+        dims,
+        data_spaces: vec![
+            DataSpace {
+                name: "A".into(),
+                projection: vec![vec![term(dm, 1)], vec![term(dk, 1)]],
+                is_output: false,
+            },
+            DataSpace {
+                name: "B".into(),
+                projection: vec![vec![term(dk, 1)], vec![term(dn, 1)]],
+                is_output: false,
+            },
+            DataSpace {
+                name: "C".into(),
+                projection: vec![vec![term(dm, 1)], vec![term(dn, 1)]],
+                is_output: true,
+            },
+        ],
+    }
+}
+
+/// CONV2D (Algorithm 1): `OA[N][K][X][Y] += IA[N][C][x*stride+R][y*stride+S] * F[K][C][R][S]`.
+///
+/// `x`/`y` here are *output* spatial sizes; the input extent follows from
+/// the sliding-window projection.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(n: u64, k: u64, c: u64, x: u64, y: u64, r: u64, s: u64, stride: u64) -> Problem {
+    let dims = vec![
+        Dim { name: "N".into(), size: n },
+        Dim { name: "K".into(), size: k },
+        Dim { name: "C".into(), size: c },
+        Dim { name: "X".into(), size: x },
+        Dim { name: "Y".into(), size: y },
+        Dim { name: "R".into(), size: r },
+        Dim { name: "S".into(), size: s },
+    ];
+    let (dn, dk, dc, dx, dy, dr, ds) = (0, 1, 2, 3, 4, 5, 6);
+    Problem {
+        name: format!("conv2d_n{n}_k{k}_c{c}_x{x}_y{y}_r{r}_s{s}_st{stride}"),
+        operation: Operation::Conv2d,
+        dims,
+        data_spaces: vec![
+            DataSpace {
+                name: "Input".into(),
+                projection: vec![
+                    vec![term(dn, 1)],
+                    vec![term(dc, 1)],
+                    vec![term(dx, stride), term(dr, 1)],
+                    vec![term(dy, stride), term(ds, 1)],
+                ],
+                is_output: false,
+            },
+            DataSpace {
+                name: "Filter".into(),
+                projection: vec![
+                    vec![term(dk, 1)],
+                    vec![term(dc, 1)],
+                    vec![term(dr, 1)],
+                    vec![term(ds, 1)],
+                ],
+                is_output: false,
+            },
+            DataSpace {
+                name: "Output".into(),
+                projection: vec![
+                    vec![term(dn, 1)],
+                    vec![term(dk, 1)],
+                    vec![term(dx, 1)],
+                    vec![term(dy, 1)],
+                ],
+                is_output: true,
+            },
+        ],
+    }
+}
+
+/// General tensor contraction from an einsum-like spec.
+///
+/// `dims` lists (name, size) for every index; `a`/`b`/`out` give the index
+/// names of each tensor in rank order. Example (ccsd-t4, Algorithm 2):
+/// `C[a,b,c,d,e,f] = A[d,f,g,b] × B[g,e,a,c]`.
+pub fn tensor_contraction(
+    name: &str,
+    dims: &[(&str, u64)],
+    a: &[&str],
+    b: &[&str],
+    out: &[&str],
+) -> Problem {
+    let dim_list: Vec<Dim> = dims
+        .iter()
+        .map(|(n, s)| Dim { name: (*n).into(), size: *s })
+        .collect();
+    let idx = |n: &str| -> usize {
+        dim_list
+            .iter()
+            .position(|d| d.name == n)
+            .unwrap_or_else(|| panic!("unknown TC index {n}"))
+    };
+    let proj = |names: &[&str]| -> Vec<Vec<ProjTerm>> {
+        names.iter().map(|n| vec![term(idx(n), 1)]).collect()
+    };
+    Problem {
+        name: name.to_string(),
+        operation: Operation::TensorContraction,
+        dims: dim_list.clone(),
+        data_spaces: vec![
+            DataSpace { name: "A".into(), projection: proj(a), is_output: false },
+            DataSpace { name: "B".into(), projection: proj(b), is_output: false },
+            DataSpace { name: "C".into(), projection: proj(out), is_output: true },
+        ],
+    }
+}
+
+/// MTTKRP: `O[I][J] += T[I][K][L] * B[K][J] * C[L][J]` — the §III-B example
+/// of an operation needing a 3-operand unit op in the cost model.
+pub fn mttkrp(i: u64, j: u64, k: u64, l: u64) -> Problem {
+    let dims = vec![
+        Dim { name: "I".into(), size: i },
+        Dim { name: "J".into(), size: j },
+        Dim { name: "K".into(), size: k },
+        Dim { name: "L".into(), size: l },
+    ];
+    let (di, dj, dk, dl) = (0, 1, 2, 3);
+    Problem {
+        name: format!("mttkrp_i{i}_j{j}_k{k}_l{l}"),
+        operation: Operation::Mttkrp,
+        dims,
+        data_spaces: vec![
+            DataSpace {
+                name: "T".into(),
+                projection: vec![vec![term(di, 1)], vec![term(dk, 1)], vec![term(dl, 1)]],
+                is_output: false,
+            },
+            DataSpace {
+                name: "B".into(),
+                projection: vec![vec![term(dk, 1)], vec![term(dj, 1)]],
+                is_output: false,
+            },
+            DataSpace {
+                name: "C".into(),
+                projection: vec![vec![term(dl, 1)], vec![term(dj, 1)]],
+                is_output: false,
+            },
+            DataSpace {
+                name: "O".into(),
+                projection: vec![vec![term(di, 1)], vec![term(dj, 1)]],
+                is_output: true,
+            },
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_validates() {
+        conv2d(32, 64, 64, 56, 56, 3, 3, 1).validate().unwrap();
+    }
+
+    #[test]
+    fn mttkrp_has_three_inputs() {
+        let p = mttkrp(8, 8, 8, 8);
+        p.validate().unwrap();
+        assert_eq!(p.data_spaces.iter().filter(|d| !d.is_output).count(), 3);
+        assert_eq!(p.operation.operands(), 3);
+    }
+
+    #[test]
+    fn tc_reduction_is_contracted_index() {
+        let p = tensor_contraction(
+            "intensli2",
+            &[("A", 16), ("B", 16), ("C", 16), ("D", 16), ("E", 16)],
+            &["D", "B", "E", "A"],
+            &["E", "C"],
+            &["A", "B", "C", "D"],
+        );
+        p.validate().unwrap();
+        let red = p.reduction_dims();
+        let e = p.dim_index("E").unwrap();
+        assert!(red[e]);
+        assert_eq!(red.iter().filter(|&&x| x).count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown TC index")]
+    fn tc_unknown_index_panics() {
+        tensor_contraction("bad", &[("A", 4)], &["Z"], &["A"], &["A"]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Reporting layer: tables, CSV emission, normalization and ASCII bar
+//! charts used by the figure-regeneration benches and the examples.
+
+use std::fmt::Write as _;
+
+/// A rectangular table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let _ = writeln!(
+            out,
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        let _ = ncol;
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{}",
+            self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+}
+
+/// Normalize a series to its minimum (the paper plots normalized EDP).
+pub fn normalize_to_min(values: &[f64]) -> Vec<f64> {
+    let min = values
+        .iter()
+        .copied()
+        .filter(|v| v.is_finite() && *v > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    if !min.is_finite() {
+        return values.to_vec();
+    }
+    values.iter().map(|v| v / min).collect()
+}
+
+/// An ASCII horizontal bar chart on a log scale (for figure benches).
+pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let mut out = String::new();
+    let _ = writeln!(out, "-- {title} --");
+    let finite: Vec<f64> = values.iter().copied().filter(|v| v.is_finite() && *v > 0.0).collect();
+    if finite.is_empty() {
+        return out;
+    }
+    let lmin = finite.iter().copied().fold(f64::INFINITY, f64::min).ln();
+    let lmax = finite.iter().copied().fold(f64::NEG_INFINITY, f64::max).ln();
+    let span = (lmax - lmin).max(1e-9);
+    let lw = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    for (label, v) in labels.iter().zip(values) {
+        let bar = if v.is_finite() && *v > 0.0 {
+            let frac = (v.ln() - lmin) / span;
+            let n = 1 + (frac * (width.saturating_sub(1)) as f64).round() as usize;
+            "#".repeat(n)
+        } else {
+            "(n/a)".to_string()
+        };
+        let _ = writeln!(out, "{label:<lw$}  {bar} {v:.3e}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.contains("long-name"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "2".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+    }
+
+    #[test]
+    fn normalize_min_is_one() {
+        let n = normalize_to_min(&[4.0, 2.0, 8.0]);
+        assert_eq!(n, vec![2.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn bar_chart_handles_log_range() {
+        let s = bar_chart(
+            "t",
+            &["a".into(), "b".into()],
+            &[1e-9, 1e-3],
+            40,
+        );
+        assert!(s.contains("a"));
+        assert!(s.contains("#"));
+    }
+}

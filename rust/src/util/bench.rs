@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets in this repo are `harness = false` binaries that
+//! use [`Bencher`] for warmup + timed iterations and print a stable,
+//! greppable report format:
+//!
+//! ```text
+//! bench <name> ... mean 1.234 ms  median 1.230 ms  p95 1.280 ms  (n=50)
+//! ```
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One benchmark's timing result.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional derived throughput (items/sec) when `throughput_items` set.
+    pub throughput: Option<f64>,
+}
+
+impl BenchReport {
+    pub fn print(&self) {
+        let s = &self.summary;
+        let mut line = format!(
+            "bench {:<44} mean {:>10}  median {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            fmt_secs(s.mean),
+            fmt_secs(s.median),
+            fmt_secs(s.p95),
+            s.n
+        );
+        if let Some(tp) = self.throughput {
+            line.push_str(&format!("  [{:.3e} items/s]", tp));
+        }
+        println!("{line}");
+    }
+}
+
+/// Format a duration in seconds with an auto-scaled unit.
+pub fn fmt_secs(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} us", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Runs closures with warmup and reports summary statistics.
+pub struct Bencher {
+    warmup_iters: usize,
+    sample_iters: usize,
+    reports: Vec<BenchReport>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        Bencher {
+            warmup_iters: 3,
+            sample_iters: 10,
+            reports: Vec::new(),
+        }
+    }
+
+    pub fn with_iters(warmup: usize, samples: usize) -> Bencher {
+        Bencher {
+            warmup_iters: warmup,
+            sample_iters: samples,
+            reports: Vec::new(),
+        }
+    }
+
+    /// Time `f` and record+print a report. Returns the last value produced
+    /// so benchmark payloads cannot be optimized away.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> T {
+        for _ in 0..self.warmup_iters.saturating_sub(1) {
+            std::hint::black_box(f());
+        }
+        let mut last = f(); // final warmup doubles as a value source
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            last = std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let report = BenchReport {
+            name: name.to_string(),
+            summary: Summary::of(&samples),
+            throughput: None,
+        };
+        report.print();
+        self.reports.push(report);
+        last
+    }
+
+    /// Like [`Bencher::bench`] but also reports items/sec throughput.
+    pub fn bench_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: F,
+    ) -> T {
+        let out = self.bench(name, &mut f);
+        if let Some(last) = self.reports.last_mut() {
+            if last.summary.mean > 0.0 {
+                last.throughput = Some(items as f64 / last.summary.mean);
+                // reprint with throughput attached
+                last.print();
+            }
+        }
+        out
+    }
+
+    pub fn reports(&self) -> &[BenchReport] {
+        &self.reports
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::with_iters(1, 3);
+        let v = b.bench("noop", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(b.reports().len(), 1);
+        assert_eq!(b.reports()[0].summary.n, 3);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let mut b = Bencher::with_iters(1, 3);
+        b.bench_throughput("tp", 1000, || {
+            std::hint::black_box((0..100).sum::<u64>())
+        });
+        assert!(b.reports()[0].throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" us"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Integer factorization helpers for the map-space tiler.
+//!
+//! Union tilings split every problem dimension into per-cluster-level tile
+//! sizes whose product equals the dimension size; enumerating those splits
+//! reduces to enumerating ordered factorizations, which this module
+//! provides.
+
+/// Prime factorization of `n` as (prime, multiplicity) pairs, ascending.
+pub fn factorize(mut n: u64) -> Vec<(u64, u32)> {
+    let mut out = Vec::new();
+    let mut p = 2u64;
+    while p * p <= n {
+        if n % p == 0 {
+            let mut m = 0;
+            while n % p == 0 {
+                n /= p;
+                m += 1;
+            }
+            out.push((p, m));
+        }
+        p += if p == 2 { 1 } else { 2 };
+    }
+    if n > 1 {
+        out.push((n, 1));
+    }
+    out
+}
+
+/// All divisors of `n`, ascending. `divisors(12) = [1,2,3,4,6,12]`.
+pub fn divisors(n: u64) -> Vec<u64> {
+    let mut out = vec![1u64];
+    for (p, m) in factorize(n) {
+        let prev = out.clone();
+        let mut pk = 1u64;
+        for _ in 0..m {
+            pk *= p;
+            out.extend(prev.iter().map(|d| d * pk));
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// All ordered `k`-way multiplicative splits of `n`:
+/// every `Vec` `t` returned satisfies `t.len() == k` and `t.iter().product() == n`.
+///
+/// `tilings(4, 2) = [[1,4],[2,2],[4,1]]`.
+///
+/// The count grows as d(n)^(k-1) in the worst case; the map-space layer is
+/// responsible for pruning before this explodes (Union §IV-E constraints).
+pub fn tilings(n: u64, k: usize) -> Vec<Vec<u64>> {
+    assert!(k >= 1, "need at least one tiling level");
+    if k == 1 {
+        return vec![vec![n]];
+    }
+    let mut out = Vec::new();
+    for d in divisors(n) {
+        for mut rest in tilings(n / d, k - 1) {
+            let mut t = Vec::with_capacity(k);
+            t.push(d);
+            t.append(&mut rest);
+            out.push(t);
+        }
+    }
+    out
+}
+
+/// Number of ordered `k`-way multiplicative splits of `n`, without
+/// materializing them (used for map-space size reporting, paper §III-B).
+pub fn tiling_count(n: u64, k: usize) -> u64 {
+    // multiplicative over prime powers: stars-and-bars C(m + k - 1, k - 1)
+    factorize(n)
+        .into_iter()
+        .map(|(_, m)| binomial(m as u64 + k as u64 - 1, k as u64 - 1))
+        .product()
+}
+
+fn binomial(n: u64, k: u64) -> u64 {
+    let k = k.min(n - k);
+    let mut num = 1u64;
+    for i in 0..k {
+        num = num * (n - i) / (i + 1);
+    }
+    num
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorize_basic() {
+        assert_eq!(factorize(1), vec![]);
+        assert_eq!(factorize(12), vec![(2, 2), (3, 1)]);
+        assert_eq!(factorize(97), vec![(97, 1)]);
+        assert_eq!(factorize(1024), vec![(2, 10)]);
+    }
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(64).len(), 7);
+    }
+
+    #[test]
+    fn tilings_product_invariant() {
+        for n in [1u64, 6, 16, 56, 64] {
+            for k in 1..=4 {
+                for t in tilings(n, k) {
+                    assert_eq!(t.len(), k);
+                    assert_eq!(t.iter().product::<u64>(), n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tilings_count_matches_enumeration() {
+        for n in [1u64, 2, 12, 16, 56, 60] {
+            for k in 1..=4 {
+                assert_eq!(
+                    tilings(n, k).len() as u64,
+                    tiling_count(n, k),
+                    "n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tilings_are_unique() {
+        let mut t = tilings(24, 3);
+        let len = t.len();
+        t.sort();
+        t.dedup();
+        assert_eq!(t.len(), len);
+    }
+}

@@ -1,0 +1,19 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! a deterministic PRNG, integer factorization helpers used by the
+//! map-space tiler, summary statistics, a micro-benchmark harness
+//! (criterion replacement), a miniature property-testing framework
+//! (proptest replacement), and a std-thread parallel map.
+
+pub mod bench;
+pub mod divisors;
+pub mod par;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+pub use bench::{BenchReport, Bencher};
+pub use divisors::{divisors, factorize, tilings};
+pub use par::par_map;
+pub use quickcheck::{Gen, QuickCheck};
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,80 @@
+//! std-thread parallel map (rayon is unavailable offline).
+//!
+//! The mappers evaluate thousands-to-millions of candidate mappings against
+//! an analytical cost model; `par_map` chunks the candidate list across
+//! `available_parallelism()` scoped threads.
+
+/// Parallel map over `items`, preserving order. `f` must be `Sync` and the
+/// items `Send`. Falls back to sequential for small inputs where thread
+/// spawn overhead would dominate.
+pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
+where
+    T: Send + Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n.max(1));
+    if threads <= 1 || n < 64 {
+        return items.iter().map(&f).collect();
+    }
+
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+
+    std::thread::scope(|scope| {
+        let f = &f;
+        // hand out disjoint (input-chunk, output-chunk) pairs to threads
+        let mut in_rest: &[T] = &items;
+        let mut out_rest: &mut [Option<U>] = &mut out;
+        let mut handles = Vec::new();
+        while !in_rest.is_empty() {
+            let take = chunk.min(in_rest.len());
+            let (in_chunk, in_tail) = in_rest.split_at(take);
+            let (out_chunk, out_tail) = out_rest.split_at_mut(take);
+            in_rest = in_tail;
+            out_rest = out_tail;
+            handles.push(scope.spawn(move || {
+                for (slot, item) in out_chunk.iter_mut().zip(in_chunk) {
+                    *slot = Some(f(item));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("par_map worker panicked");
+        }
+    });
+
+    out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_input_sequential_path() {
+        let v: Vec<u64> = (0..10).collect();
+        let out = par_map(v, |x| x * 2);
+        assert_eq!(out, (0..10).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn large_input_parallel_preserves_order() {
+        let v: Vec<u64> = (0..10_000).collect();
+        let out = par_map(v, |x| x * x);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let out: Vec<u64> = par_map(Vec::<u64>::new(), |x| *x);
+        assert!(out.is_empty());
+    }
+}

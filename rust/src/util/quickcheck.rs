@@ -1,0 +1,155 @@
+//! Miniature property-testing framework (proptest is unavailable offline).
+//!
+//! Usage mirrors quickcheck: a [`QuickCheck`] runner repeatedly draws
+//! random inputs through a [`Gen`] handle and asserts a property. On
+//! failure it retries with progressively simpler size budgets to report a
+//! small counterexample, then panics with the seed so the failure replays
+//! deterministically.
+
+use super::rng::Rng;
+
+/// Random input source handed to properties. Wraps [`Rng`] with a `size`
+/// budget that the runner shrinks on failure.
+pub struct Gen {
+    rng: Rng,
+    /// Soft upper bound generators should respect for "how big" inputs are.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in `[1, size]` — the most common draw for dimension sizes.
+    pub fn dim(&mut self) -> u64 {
+        self.rng.range(1, self.size.max(1)) as u64
+    }
+
+    /// usize in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi)
+    }
+
+    /// Pick an element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        self.rng.choose(items)
+    }
+
+    /// A vector of `len` draws from `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Property-test runner.
+pub struct QuickCheck {
+    cases: usize,
+    seed: u64,
+    max_size: usize,
+}
+
+impl Default for QuickCheck {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl QuickCheck {
+    pub fn new() -> QuickCheck {
+        QuickCheck {
+            cases: 200,
+            seed: 0x5EED,
+            max_size: 64,
+        }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+
+    /// Run `prop` for `cases` random inputs. `prop` returns `Err(msg)` (or
+    /// panics) to signal failure; the runner then re-runs at smaller sizes
+    /// to find a simpler counterexample and panics with replay info.
+    pub fn check<F>(&self, name: &str, mut prop: F)
+    where
+        F: FnMut(&mut Gen) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            // ramp the size budget so early cases are small
+            let size = 2 + (self.max_size.saturating_sub(2)) * case / self.cases.max(1);
+            let case_seed = self.seed ^ (case as u64).wrapping_mul(0x9E37_79B9);
+            let mut g = Gen::new(case_seed, size);
+            if let Err(msg) = prop(&mut g) {
+                // try to find a smaller failure for the report
+                let mut best: Option<(u64, usize, String)> = Some((case_seed, size, msg));
+                'shrink: for small in 2..size {
+                    for attempt in 0..16u64 {
+                        let s = case_seed ^ attempt.wrapping_mul(0xABCD_1234);
+                        let mut g2 = Gen::new(s, small);
+                        if let Err(m2) = prop(&mut g2) {
+                            best = Some((s, small, m2));
+                            break 'shrink;
+                        }
+                    }
+                }
+                let (s, sz, m) = best.unwrap();
+                panic!(
+                    "property '{name}' failed (case {case}): {m}\n  replay: seed={s:#x} size={sz}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        QuickCheck::new().cases(50).check("add-commutes", |g| {
+            let a = g.dim();
+            let b = g.dim();
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} {b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_replay() {
+        QuickCheck::new().cases(5).check("always-fails", |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn gen_vec_len() {
+        let mut g = Gen::new(1, 10);
+        let v = g.vec(7, |g| g.dim());
+        assert_eq!(v.len(), 7);
+        assert!(v.iter().all(|&x| (1..=10).contains(&x)));
+    }
+}

@@ -1,0 +1,68 @@
+//! Integration: the shipped example config files parse and drive a
+//! search through the CLI-level plumbing (the paper's Fig. 2 input set:
+//! architecture file + mapping constraint file).
+
+use union::arch::arch_from_str;
+use union::cost::{AnalyticalModel, EnergyTable};
+use union::mappers::{Mapper, RandomMapper};
+use union::mapspace::{constraints_from_str, MapSpace};
+
+#[test]
+fn shipped_uarch_files_parse_and_match_presets() {
+    let cloud = arch_from_str(&std::fs::read_to_string("configs/cloud_32x64.uarch").unwrap())
+        .unwrap();
+    assert_eq!(cloud.num_pes(), 2048);
+    assert_eq!(cloud.pe_array_shape(), (64, 32));
+    let edge = arch_from_str(&std::fs::read_to_string("configs/edge_16x16.uarch").unwrap())
+        .unwrap();
+    assert_eq!(edge.num_pes(), 256);
+    // structurally identical to the presets
+    let preset = union::arch::presets::cloud(32, 64);
+    assert_eq!(cloud.levels.len(), preset.levels.len());
+    for (a, b) in cloud.levels.iter().zip(&preset.levels) {
+        assert_eq!(a.sub_clusters, b.sub_clusters);
+        assert_eq!(a.is_virtual(), b.is_virtual());
+    }
+}
+
+#[test]
+fn nvdla_constraint_file_restricts_parallel_dims() {
+    let cons = constraints_from_str(
+        &std::fs::read_to_string("configs/nvdla_style.ucon").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cons.parallel_dims.as_ref().unwrap(), &["C", "K"]);
+    assert!(cons.fixed_order_for(1).is_some());
+
+    // NVDLA-style search on a conv layer: only C/K fan out
+    let p = union::problem::conv2d(1, 16, 16, 14, 14, 3, 3, 1);
+    let arch = union::arch::presets::edge();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    if let Some(r) = RandomMapper::new(2_000, 3).search(&space, &model) {
+        let c = p.dim_index("C").unwrap();
+        let k = p.dim_index("K").unwrap();
+        for l in 0..arch.depth() {
+            for d in 0..p.dims.len() {
+                if d != c && d != k {
+                    assert_eq!(r.mapping.parallelism(l, d), 1, "dim {d} level {l}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn memory_target_ucon_matches_builtin_preset() {
+    let cons = constraints_from_str(
+        &std::fs::read_to_string("configs/memory_target.ucon").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cons.max_parallel_dims_per_level, Some(1));
+}
+
+#[test]
+fn cli_parses_uarch_files() {
+    let arch = union::cli::parse_arch("configs/cloud_32x64.uarch").unwrap();
+    assert_eq!(arch.num_pes(), 2048);
+}

@@ -1,0 +1,134 @@
+//! Integration: the paper's interoperability claim — **every mapper works
+//! with every cost model** through the unified abstractions (Table I's
+//! "Unified" mappers row). 5 mappers × 2 cost models × 2 workload classes.
+
+use union::cost::{AnalyticalModel, EnergyTable, MaestroModel};
+use union::frontend;
+use union::mappers::{
+    DecoupledMapper, ExhaustiveMapper, GeneticMapper, HeuristicMapper, Mapper, Objective,
+    RandomMapper,
+};
+use union::mapspace::{Constraints, MapSpace};
+
+fn mappers() -> Vec<Box<dyn Mapper>> {
+    vec![
+        Box::new(ExhaustiveMapper::new(20_000)),
+        Box::new(RandomMapper::new(400, 11)),
+        Box::new(DecoupledMapper::new(120, 40, 11)),
+        Box::new(HeuristicMapper::new(200, 40, 11)),
+        Box::new(GeneticMapper::new(30, 4, 11)),
+    ]
+}
+
+#[test]
+fn all_mappers_drive_analytical_on_gemm() {
+    let p = frontend::gemm_problem(64, 64, 64);
+    let arch = union::arch::presets::edge();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    for mapper in mappers() {
+        let r = mapper
+            .search(&space, &model)
+            .unwrap_or_else(|| panic!("{} found nothing", mapper.name()));
+        assert!(space.admits(&r.mapping), "{}", mapper.name());
+        assert!(r.score.is_finite() && r.score > 0.0, "{}", mapper.name());
+        assert!(r.evaluated > 0, "{}", mapper.name());
+    }
+}
+
+#[test]
+fn all_mappers_drive_maestro_on_gemm() {
+    let p = frontend::gemm_problem(64, 64, 64);
+    let arch = union::arch::presets::edge();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = MaestroModel::new(EnergyTable::default_8bit());
+    for mapper in mappers() {
+        let r = mapper
+            .search(&space, &model)
+            .unwrap_or_else(|| panic!("{} x maestro found nothing", mapper.name()));
+        assert!(space.admits(&r.mapping), "{}", mapper.name());
+    }
+}
+
+#[test]
+fn all_mappers_drive_analytical_on_conv() {
+    // 7-dim CONV2D exercises larger chains
+    let p = union::problem::conv2d(1, 16, 16, 14, 14, 3, 3, 1);
+    let arch = union::arch::presets::edge();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    for mapper in mappers() {
+        // exhaustive would explode on 7 dims; cap it via its limit — it
+        // still must return *something* legal from the truncated space
+        let r = mapper.search(&space, &model);
+        assert!(r.is_some(), "{} x conv found nothing", mapper.name());
+    }
+}
+
+#[test]
+fn objectives_order_consistently_for_every_mapper() {
+    let p = frontend::gemm_problem(32, 32, 32);
+    let arch = union::arch::presets::fig5_toy();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    for mapper in mappers() {
+        let lat = mapper.search_with(&space, &model, Objective::Latency);
+        let nrg = mapper.search_with(&space, &model, Objective::Energy);
+        if let (Some(l), Some(n)) = (lat, nrg) {
+            // a latency-optimized result cannot be slower than an
+            // energy-optimized one from the same search budget... only
+            // guaranteed for deterministic searches over the same set;
+            // assert the weaker sanity: optimizing X yields finite X
+            assert!(l.cost.latency_s().is_finite());
+            assert!(n.cost.energy_j().is_finite());
+        }
+    }
+}
+
+#[test]
+fn exhaustive_is_lower_bound_on_toy_space() {
+    // on a space small enough to enumerate fully, no other mapper beats
+    // exhaustive — the sanity anchor for all search results
+    let p = frontend::gemm_problem(8, 8, 8);
+    let arch = union::arch::presets::fig5_toy();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let exhaustive = ExhaustiveMapper::new(500_000)
+        .search(&space, &model)
+        .expect("exhaustive");
+    for mapper in mappers().into_iter().skip(1) {
+        if let Some(r) = mapper.search(&space, &model) {
+            assert!(
+                r.score >= exhaustive.score - 1e-18,
+                "{} beat exhaustive: {} < {}",
+                mapper.name(),
+                r.score,
+                exhaustive.score
+            );
+        }
+    }
+}
+
+#[test]
+fn memory_target_constraint_respected_by_all_mappers() {
+    let p = frontend::gemm_problem(64, 64, 64);
+    let arch = union::arch::presets::edge();
+    let cons = Constraints::memory_target_style();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    for mapper in mappers() {
+        if let Some(r) = mapper.search(&space, &model) {
+            for l in 0..arch.depth() {
+                let distinct = (0..p.dims.len())
+                    .filter(|&d| r.mapping.parallelism(l, d) > 1)
+                    .count();
+                assert!(distinct <= 1, "{} violated memory-target constraint", mapper.name());
+            }
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration: the full frontend→IR→problem→mapspace→cost pipeline, end
+//! to end over the paper's workload zoo.
+
+use union::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use union::frontend::{self, im2col_gemm, ttgt_gemm};
+use union::ir::{check_loop_level, check_operation_level, Conformability};
+use union::mapping::Mapping;
+use union::prelude::*;
+
+#[test]
+fn every_table_iv_workload_lowers_and_extracts() {
+    for w in frontend::dnn_workloads() {
+        let affine = w.lower(false);
+        assert!(
+            check_loop_level(&affine).is_ok(),
+            "{} must be loop-level conformable",
+            w.name
+        );
+        let p = w.problem_via_ir(false).unwrap();
+        assert_eq!(p.total_macs(), w.problem().total_macs(), "{}", w.name);
+    }
+}
+
+#[test]
+fn every_tc_workload_lowers_both_ways() {
+    for (_, _, w) in frontend::tc_workloads() {
+        // native: TC with all indices
+        let native = w.problem_via_ir(false).unwrap();
+        assert_eq!(native.operation, Operation::TensorContraction);
+        // ttgt: collapses to GEMM with the Table III dims
+        let ttgt_p = w.problem_via_ir(true).unwrap();
+        assert_eq!(ttgt_p.operation, Operation::Gemm);
+        assert_eq!(ttgt_p.total_macs(), native.total_macs(), "{}", w.name);
+        let plan = ttgt_gemm(&w).unwrap();
+        assert_eq!(ttgt_p.dims[0].size, plan.m);
+    }
+}
+
+#[test]
+fn conformability_routes_problems_to_models() {
+    let arch = union::arch::presets::edge();
+    let analytical = AnalyticalModel::new(EnergyTable::default_8bit());
+    let maestro = MaestroModel::new(EnergyTable::default_8bit());
+
+    // GEMM: both models accept
+    let gemm = frontend::dlrm_layers().remove(0).problem();
+    assert!(analytical.conformable(&gemm, &arch).is_ok());
+    assert!(maestro.conformable(&gemm, &arch).is_ok());
+
+    // native TC: analytical only (maestro needs the TTGT rewrite first)
+    let tc_w = frontend::tccg_problem(&frontend::TCCG[0], 16);
+    let tc = tc_w.problem();
+    assert!(analytical.conformable(&tc, &arch).is_ok());
+    assert!(maestro.conformable(&tc, &arch).is_err());
+    let rewritten = ttgt_gemm(&tc_w).unwrap().gemm_workload("tc_ttgt").problem();
+    assert!(maestro.conformable(&rewritten, &arch).is_ok());
+
+    // the IR-level conformability passes agree with the model-level ones
+    let affine_native = tc_w.lower(false);
+    match check_operation_level(&affine_native, MaestroModel::supported_operations()) {
+        Conformability::NotConformable(_) => {}
+        other => panic!("expected not-conformable, got {other:?}"),
+    }
+    let affine_ttgt = tc_w.lower(true);
+    assert!(check_operation_level(&affine_ttgt, MaestroModel::supported_operations()).is_ok());
+}
+
+#[test]
+fn im2col_and_native_conv_agree_on_macs_and_search() {
+    let conv = frontend::resnet50_layers().remove(0);
+    let gemm = im2col_gemm(&conv).unwrap();
+    assert_eq!(conv.macs(), gemm.macs());
+
+    // both can be searched on the edge accelerator
+    let arch = union::arch::presets::edge();
+    let cons = Constraints::default();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    for w in [&conv, &gemm] {
+        let p = w.problem();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let r = RandomMapper::new(400, 5).search(&space, &model);
+        assert!(r.is_some(), "{} search failed", w.name);
+    }
+}
+
+#[test]
+fn full_pipeline_from_config_files() {
+    // architecture + constraints from text, workload from the zoo —
+    // exactly the paper's Fig. 2 input set
+    let arch = union::arch::arch_from_str(
+        "name: custom\nnoc_bw: 32\nclusters:\n  - name: C4\n    memory: DRAM\n    sub_clusters: 1\n  - name: C3\n    memory: L2\n    size_kb: 100\n    sub_clusters: 16\n    axis: Y\n  - name: C2\n    virtual: true\n    sub_clusters: 16\n    axis: X\n  - name: C1\n    memory: L1\n    size_kb: 0.5\n    sub_clusters: 1\n",
+    )
+    .unwrap();
+    assert_eq!(arch.num_pes(), 256);
+    let cons = union::mapspace::constraints_from_str(
+        "parallel_dims: [M, N]\nmin_utilization: 0.1\n",
+    )
+    .unwrap();
+    let p = frontend::gemm_problem(256, 256, 256);
+    let space = MapSpace::new(&p, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let best = RandomMapper::new(2_000, 9).search(&space, &model).expect("search");
+    // constraints respected
+    assert!(best.cost.utilization >= 0.1);
+    let k = p.dim_index("K").unwrap();
+    for l in 0..arch.depth() {
+        assert_eq!(best.mapping.parallelism(l, k), 1);
+    }
+}
+
+#[test]
+fn sequential_baseline_always_evaluable_on_fig5_toy() {
+    let arch = union::arch::presets::fig5_toy();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let p = frontend::gemm_problem(8, 8, 8);
+    let m = Mapping::sequential(&p, &arch);
+    let e = model.evaluate(&p, &arch, &m).unwrap();
+    assert_eq!(e.macs, 512);
+    assert!(e.cycles >= 512.0);
+}
+
+#[test]
+fn mttkrp_unit_op_gate_end_to_end() {
+    // §III-B.2: MTTKRP is rejected by a 2-operand-configured model and
+    // accepted once the unit op is 3-operand
+    let p = union::problem::mttkrp(16, 16, 16, 16);
+    let arch = union::arch::presets::edge();
+    let two = AnalyticalModel::new(EnergyTable::default_8bit());
+    assert!(two.conformable(&p, &arch).is_err());
+    let three = AnalyticalModel::new(EnergyTable::default_8bit()).with_unit_op_operands(3);
+    assert!(three.conformable(&p, &arch).is_ok());
+    let cons = Constraints::default();
+    let space = MapSpace::new(&p, &arch, &cons);
+    let r = RandomMapper::new(500, 3).search(&space, &three);
+    assert!(r.is_some());
+}

@@ -1,0 +1,237 @@
+//! Property-based tests over the Union abstractions, via the in-tree
+//! quickcheck substrate (`union::util::quickcheck`). Each property runs
+//! hundreds of randomized cases with deterministic replay seeds.
+
+use union::arch::presets;
+use union::cost::{AnalyticalModel, CostModel, EnergyTable, ReuseModel, TileAnalysis};
+use union::mapspace::{Constraints, MapSpace};
+use union::problem::{conv2d, gemm};
+use union::util::divisors::{divisors, tilings};
+use union::util::quickcheck::{Gen, QuickCheck};
+use union::util::rng::Rng;
+
+/// Draw a random "nice" size: product of small factors, 1..=96.
+fn nice_size(g: &mut Gen) -> u64 {
+    let factors = [2u64, 2, 2, 3, 3, 5, 7];
+    let mut n = 1u64;
+    for _ in 0..g.range(0, 5) {
+        n *= *g.choose(&factors);
+        if n > 96 {
+            break;
+        }
+    }
+    n.min(96).max(1)
+}
+
+#[test]
+fn prop_sampled_mappings_satisfy_all_legality_rules() {
+    QuickCheck::new().cases(120).seed(0xA11CE).check("sampled-legal", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::fig5_toy();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        match space.sample_legal(&mut rng, 500) {
+            Some(m) => m
+                .check(&p, &arch)
+                .map_err(|e| format!("illegal sampled mapping: {e} for {p}")),
+            None => Ok(()), // tiny/degenerate spaces may have no admit
+        }
+    });
+}
+
+#[test]
+fn prop_trips_times_parallelism_cover_every_dim() {
+    QuickCheck::new().cases(100).seed(0xB0B).check("coverage-product", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::fig5_toy();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        for d in 0..p.dims.len() {
+            // Π over levels of (trips·parallelism) telescopes to
+            // D / ST_innermost; the innermost spatial tile iterates
+            // implicitly inside the PE (its L1-resident chunk)
+            let product: u64 = (0..arch.depth())
+                .map(|i| m.trips(&p, i, d) * m.parallelism(i, d))
+                .product();
+            let inner_st = m.levels.last().unwrap().spatial_tile[d];
+            if product * inner_st != p.dims[d].size {
+                return Err(format!(
+                    "dim {d}: covered {product} x inner {inner_st} != {}",
+                    p.dims[d].size
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_order_agnostic_reuse_is_lower_bound() {
+    // MAESTRO-style optimism can never move MORE data than the
+    // order-aware count — for every data space at every level
+    QuickCheck::new().cases(80).seed(0xCAFE).check("reuse-bound", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::fig5_toy();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        let ta = TileAnalysis::new(&p, &arch, &m);
+        let aware = ta.movement(ReuseModel::OrderAware);
+        let agnostic = ta.movement(ReuseModel::OrderAgnostic);
+        for (ds, (a, b)) in aware.detail.iter().zip(&agnostic.detail).enumerate() {
+            for (lvl, (la, lb)) in a.iter().zip(b).enumerate() {
+                if lb.fills > la.fills + 1e-9 {
+                    return Err(format!(
+                        "ds {ds} level {lvl}: agnostic {} > aware {}",
+                        lb.fills, la.fills
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fills_at_least_footprint() {
+    // every tile must be loaded at least once: fills >= footprint
+    QuickCheck::new().cases(80).seed(0xF111).check("fills-lb", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::fig5_toy();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        let ta = TileAnalysis::new(&p, &arch, &m);
+        let mv = ta.movement(ReuseModel::OrderAware);
+        for per_ds in &mv.detail {
+            for lvl in per_ds {
+                if lvl.fills + 1e-9 < lvl.footprint as f64 {
+                    return Err(format!(
+                        "fills {} < footprint {}",
+                        lvl.fills, lvl.footprint
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_positive_and_compute_bounded() {
+    // any legal mapping: cycles >= MACs / PEs, energy > MAC floor
+    QuickCheck::new().cases(80).seed(0xD00D).check("cost-bounds", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::fig5_toy();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let e = model.evaluate(&p, &arch, &m).map_err(|x| x.to_string())?;
+        let compute_lb = p.total_macs() as f64 / arch.num_pes() as f64;
+        if e.cycles + 1e-9 < compute_lb {
+            return Err(format!("cycles {} below compute bound {compute_lb}", e.cycles));
+        }
+        let mac_floor = p.total_macs() as f64 * 0.2;
+        if e.energy_pj < mac_floor {
+            return Err(format!("energy {} below MAC floor {mac_floor}", e.energy_pj));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conv_footprint_matches_brute_force() {
+    // the projection-based tile footprint equals a brute-force count of
+    // distinct input elements touched by a tile
+    QuickCheck::new().cases(60).seed(0x5EED5).check("conv-footprint", |g| {
+        let x = g.range(1, 6) as u64;
+        let r = g.range(1, 4) as u64;
+        let stride = g.range(1, 3) as u64;
+        let p = conv2d(1, 1, 1, x, x, r, r, stride);
+        let input = p
+            .data_spaces
+            .iter()
+            .find(|d| d.name == "Input")
+            .unwrap();
+        // tile spanning (tx, tr) in the X and R dims
+        let tx = g.range(1, x as usize) as u64;
+        let tr = g.range(1, r as usize) as u64;
+        let mut tile = vec![1u64; p.dims.len()];
+        tile[p.dim_index("X").unwrap()] = tx;
+        tile[p.dim_index("R").unwrap()] = tr;
+        let formula = input.tile_footprint(&tile);
+        // the formula models the bounding-box extent (contiguous
+        // allocation, Timeloop-style); brute-force both the extent and
+        // the distinct-element count
+        let mut seen = std::collections::HashSet::new();
+        let mut max_idx = 0u64;
+        for xi in 0..tx {
+            for ri in 0..tr {
+                let idx = xi * stride + ri;
+                seen.insert(idx);
+                max_idx = max_idx.max(idx);
+            }
+        }
+        let extent = max_idx + 1;
+        if formula != extent {
+            return Err(format!(
+                "x={x} r={r} s={stride} tile=({tx},{tr}): formula {formula} != extent {extent}"
+            ));
+        }
+        if formula < seen.len() as u64 {
+            return Err(format!(
+                "footprint {formula} below distinct-element count {}",
+                seen.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tilings_partition_divisors() {
+    QuickCheck::new().cases(100).seed(0x714).check("tilings", |g| {
+        let n = nice_size(g);
+        let k = g.range(1, 4);
+        for t in tilings(n, k) {
+            if t.iter().product::<u64>() != n {
+                return Err(format!("tiling {t:?} of {n} broken"));
+            }
+            for v in &t {
+                if !divisors(n).contains(v) {
+                    return Err(format!("{v} not a divisor of {n}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_roundtrip() {
+    // Display(parse(x)) re-parses to the same document
+    QuickCheck::new().cases(60).seed(0xC0FF).check("config-roundtrip", |g| {
+        let n = g.range(1, 6);
+        let mut src = String::from("name: t\n");
+        for i in 0..n {
+            src.push_str(&format!("k{i}: {}\n", g.range(0, 1000)));
+        }
+        src.push_str("list:\n");
+        for i in 0..g.range(1, 4) {
+            src.push_str(&format!("  - item: {i}\n    v: {}\n", g.range(0, 9)));
+        }
+        let doc = union::config::parse(&src).map_err(|e| e.to_string())?;
+        let doc2 = union::config::parse(&doc.to_string()).map_err(|e| e.to_string())?;
+        if doc != doc2 {
+            return Err(format!("roundtrip mismatch:\n{doc}\nvs\n{doc2}"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,105 @@
+//! Integration: the PJRT runtime path — load AOT artifacts (built by
+//! `make artifacts`), execute, and validate numerics against Rust
+//! references. Skipped (with a notice) when artifacts are absent so
+//! `cargo test` works on a fresh checkout.
+
+use union::runtime::{
+    artifacts_available, artifacts_dir, max_abs_diff, random_tensor, reference_gemm, Runtime,
+};
+
+fn need_artifacts() -> bool {
+    if !artifacts_available() {
+        eprintln!("NOTE: artifacts/ not built; run `make artifacts` to enable runtime tests");
+        return false;
+    }
+    true
+}
+
+#[test]
+fn gemm_artifact_matches_rust_reference() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt client");
+    let exe = rt.load_artifact(&artifacts_dir(), "gemm_128").expect("load");
+    let (m, n, k) = (128, 128, 128);
+    let a = random_tensor(m * k, 10);
+    let b = random_tensor(k * n, 11);
+    let out = exe.run_f32(&[(&a, &[m, k]), (&b, &[k, n])]).expect("run");
+    assert_eq!(out.output.len(), m * n);
+    let reference = reference_gemm(&a, &b, m, n, k);
+    let diff = max_abs_diff(&out.output, &reference);
+    assert!(diff < 1e-3, "max diff {diff}");
+}
+
+#[test]
+fn ttgt_equals_native_tc_numerically() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt client");
+    let dir = artifacts_dir();
+    let native = rt.load_artifact(&dir, "tc_intensli2_native").expect("load native");
+    let ttgt = rt.load_artifact(&dir, "tc_intensli2_ttgt").expect("load ttgt");
+    let tds = 16;
+    let a = random_tensor(tds * tds * tds * tds, 20);
+    let b = random_tensor(tds * tds, 21);
+    let rn = native
+        .run_f32(&[(&a, &[tds, tds, tds, tds]), (&b, &[tds, tds])])
+        .expect("run native");
+    let rt_ = ttgt
+        .run_f32(&[(&a, &[tds, tds, tds, tds]), (&b, &[tds, tds])])
+        .expect("run ttgt");
+    assert_eq!(rn.output.len(), rt_.output.len());
+    let diff = max_abs_diff(&rn.output, &rt_.output);
+    assert!(diff < 1e-3, "TTGT != native: {diff}");
+}
+
+#[test]
+fn im2col_equals_direct_conv_numerically() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt client");
+    let dir = artifacts_dir();
+    let direct = rt.load_artifact(&dir, "conv2d_direct").expect("load direct");
+    let im2col = rt.load_artifact(&dir, "conv2d_im2col").expect("load im2col");
+    let x = random_tensor(2 * 16 * 16 * 8, 30);
+    let w = random_tensor(16 * 3 * 3 * 8, 31);
+    let rd = direct
+        .run_f32(&[(&x, &[2, 16, 16, 8]), (&w, &[16, 3, 3, 8])])
+        .expect("run direct");
+    let ri = im2col
+        .run_f32(&[(&x, &[2, 16, 16, 8]), (&w, &[16, 3, 3, 8])])
+        .expect("run im2col");
+    let diff = max_abs_diff(&rd.output, &ri.output);
+    assert!(diff < 1e-3, "im2col != direct: {diff}");
+}
+
+#[test]
+fn full_validation_routine() {
+    if !need_artifacts() {
+        return;
+    }
+    union::runtime::validate_artifacts(&artifacts_dir()).expect("validation");
+}
+
+#[test]
+fn wide_gemm_artifact_runs() {
+    if !need_artifacts() {
+        return;
+    }
+    let rt = Runtime::cpu().expect("pjrt client");
+    let exe = rt
+        .load_artifact(&artifacts_dir(), "gemm_512x64x1024")
+        .expect("load");
+    // DLRM-2 shape: [512,1024] x [1024,64]
+    let a = random_tensor(512 * 1024, 40);
+    let b = random_tensor(1024 * 64, 41);
+    let out = exe.run_f32(&[(&a, &[512, 1024]), (&b, &[1024, 64])]).expect("run");
+    assert_eq!(out.output.len(), 512 * 64);
+    // spot-check one element against the reference
+    let reference = reference_gemm(&a, &b, 512, 64, 1024);
+    let diff = max_abs_diff(&out.output, &reference);
+    assert!(diff < 1e-2, "max diff {diff}");
+}
