@@ -84,6 +84,10 @@ fn main() {
         );
         std::process::exit(2);
     }
+    if !union::runtime::runtime_available() {
+        eprintln!("built without the `pjrt` feature; skipping runtime stage");
+        std::process::exit(2);
+    }
     union::runtime::validate_artifacts(&dir).expect("artifact validation failed");
 
     // measured vs predicted for the chosen algorithm's GEMM

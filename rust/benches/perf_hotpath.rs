@@ -1,14 +1,84 @@
 //! Perf bench: the L3 hot paths — cost-model evaluation throughput,
-//! map-space sampling, legality checking, full search, and (if artifacts
-//! are built) PJRT artifact execution. The EXPERIMENTS.md §Perf numbers
-//! come from this target.
+//! map-space sampling, legality checking, full search, the batched
+//! engine vs the pre-engine candidate-by-candidate loop, and (if
+//! artifacts are built) PJRT artifact execution. The EXPERIMENTS.md
+//! §Perf numbers come from this target.
 
 use union::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use union::engine::Engine;
 use union::frontend;
-use union::mappers::{Mapper, RandomMapper};
+use union::mappers::{Mapper, Objective, RandomMapper};
 use union::mapspace::{Constraints, MapSpace};
 use union::util::bench::Bencher;
 use union::util::rng::Rng;
+
+/// The actual pre-engine search loop, reproduced from the removed
+/// `RandomMapper::search_with` + `evaluate_batch`: parallel sampling,
+/// then one parallel admits+evaluate pass over every candidate — no
+/// memoization, no pruning, no capacity pre-filter. This is the honest
+/// baseline for the engine's ≥2x candidates/sec target. Returns
+/// (candidates scored, best EDP).
+fn preengine_parallel_loop(
+    space: &MapSpace,
+    model: &dyn CostModel,
+    samples: usize,
+    seed: u64,
+) -> (u64, f64) {
+    let mut rng = Rng::new(seed);
+    let seeds: Vec<u64> = (0..samples).map(|_| rng.next_u64()).collect();
+    let candidates = union::util::par::par_map(seeds, |&s| {
+        let mut r = Rng::new(s);
+        space.sample(&mut r)
+    });
+    let scored = union::util::par::par_map(candidates, |m| {
+        if !space.admits(m) {
+            return None;
+        }
+        model
+            .evaluate_prechecked(space.problem, space.arch, m)
+            .ok()
+            .map(|e| e.edp())
+    });
+    let mut best = f64::INFINITY;
+    let mut n = 0u64;
+    for s in scored.into_iter().flatten() {
+        n += 1;
+        if s < best {
+            best = s;
+        }
+    }
+    (n, best)
+}
+
+/// The candidate-by-candidate loop of ISSUE.md's motivation (§III-B):
+/// one candidate sampled, checked and evaluated at a time, single
+/// thread. Kept as a second reference point for how much of the win is
+/// parallel batching vs memo+pruning.
+fn sequential_candidate_loop(
+    space: &MapSpace,
+    model: &dyn CostModel,
+    samples: usize,
+    seed: u64,
+) -> (u64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut best = f64::INFINITY;
+    let mut scored = 0u64;
+    for _ in 0..samples {
+        let mut r = Rng::new(rng.next_u64());
+        let m = space.sample(&mut r);
+        if !space.admits(&m) {
+            continue;
+        }
+        if let Ok(est) = model.evaluate_prechecked(space.problem, space.arch, &m) {
+            scored += 1;
+            let s = est.edp();
+            if s < best {
+                best = s;
+            }
+        }
+    }
+    (scored, best)
+}
 
 fn main() {
     let mut b = Bencher::with_iters(2, 10);
@@ -73,8 +143,48 @@ fn main() {
             .count()
     });
 
-    // --- end-to-end search (parallel evaluate_batch inside) ---
-    b.bench("random_search_2000 (gemm, parallel)", || {
+    // --- engine vs pre-engine loop on the Fig. 3 workload ---
+    // Fig. 3 searches mappings of DLRM-2 on the 16x16 edge accelerator;
+    // this is THE hot path of every figure driver. `cand/s` counts
+    // candidates that received a search decision: the legacy loop must
+    // evaluate each one, the engine resolves most via batching + memo +
+    // lower-bound pruning across all cores.
+    let fig3_problem = frontend::dlrm_layers().remove(1).problem();
+    let fig3_space = MapSpace::new(&fig3_problem, &arch, &cons);
+    const SEARCH_SAMPLES: usize = 4_000;
+
+    // every loop is credited with the proposals it disposes of
+    let seq_rate = b.bench_rate("fig3_search_seq (candidate-by-candidate)", "cand", || {
+        let (scored, best) =
+            sequential_candidate_loop(&fig3_space, &analytical, SEARCH_SAMPLES, 42);
+        std::hint::black_box((scored, best));
+        SEARCH_SAMPLES as u64
+    });
+    let pre_rate = b.bench_rate("fig3_search_preengine (parallel, no memo/prune)", "cand", || {
+        let (scored, best) =
+            preengine_parallel_loop(&fig3_space, &analytical, SEARCH_SAMPLES, 42);
+        std::hint::black_box((scored, best));
+        SEARCH_SAMPLES as u64
+    });
+    let engine_rate = b.bench_rate("fig3_search_engine (batched+memo+prune)", "cand", || {
+        let mut engine = Engine::new(&fig3_space, &analytical, Objective::Edp);
+        let r = engine.run(RandomMapper::new(SEARCH_SAMPLES, 42).source().as_mut());
+        std::hint::black_box(r.map(|r| r.score));
+        engine.stats().proposed as u64
+    });
+    let vs_pre = if pre_rate > 0.0 { engine_rate / pre_rate } else { 0.0 };
+    let vs_seq = if seq_rate > 0.0 { engine_rate / seq_rate } else { 0.0 };
+    println!(
+        "fig3 candidates-evaluated/sec: engine {engine_rate:.3e} | \
+         pre-engine parallel {pre_rate:.3e} | sequential {seq_rate:.3e}"
+    );
+    println!(
+        "fig3 speedup: {vs_pre:.2}x vs pre-engine parallel batch, \
+         {vs_seq:.2}x vs candidate-by-candidate loop (target >= 2x)"
+    );
+
+    // --- end-to-end search (engine inside) ---
+    b.bench("random_search_2000 (gemm, engine)", || {
         RandomMapper::new(2_000, 42)
             .search(&space, &analytical)
             .unwrap()
@@ -86,8 +196,8 @@ fn main() {
         frontend::resnet50_layers().remove(1).lower(false).ops.len()
     });
 
-    // --- PJRT artifact execution (requires `make artifacts`) ---
-    if union::runtime::artifacts_available() {
+    // --- PJRT artifact execution (requires `make artifacts` + --features pjrt) ---
+    if union::runtime::artifacts_available() && union::runtime::runtime_available() {
         let rt = union::runtime::Runtime::cpu().expect("pjrt");
         let dir = union::runtime::artifacts_dir();
         let gemm = rt.load_artifact(&dir, "gemm_128").expect("artifact");
@@ -100,6 +210,9 @@ fn main() {
                 .output[0]
         });
     } else {
-        println!("(artifacts not built; skipping PJRT benches — run `make artifacts`)");
+        println!(
+            "(artifacts not built or `pjrt` feature off; skipping PJRT benches — \
+             run `make artifacts` and build with --features pjrt)"
+        );
     }
 }

@@ -49,6 +49,15 @@ pub struct Memory {
     pub energy_pj: Option<f64>,
 }
 
+impl Memory {
+    /// Rule 3 capacity predicate: can this memory hold `need_bytes`?
+    /// `u64::MAX` capacity means unbounded (DRAM). Shared by the mapping
+    /// legality check and the engine's capacity pre-filter.
+    pub fn holds(&self, need_bytes: u64) -> bool {
+        self.size_bytes == u64::MAX || need_bytes <= self.size_bytes
+    }
+}
+
 /// One level of the cluster hierarchy.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterLevel {

@@ -14,7 +14,7 @@ use crate::mapping::Mapping;
 use crate::problem::Problem;
 
 use super::tile::{ReuseModel, TileAnalysis};
-use super::{CostEstimate, CostModel, EnergyTable, LevelStats};
+use super::{CostBound, CostEstimate, CostModel, EnergyTable, LevelStats};
 
 /// Timeloop-style hierarchical analytical model.
 pub struct AnalyticalModel {
@@ -130,6 +130,37 @@ impl CostModel for AnalyticalModel {
             clock_ghz: arch.clock_ghz,
         })
     }
+
+    /// Monotone floor, no tile analysis needed:
+    ///
+    /// * `cycles ≥ MACs / PEs-used` — the exact compute-bound term the
+    ///   model takes a max over;
+    /// * `energy ≥ MAC energy + innermost-level compute accesses` — both
+    ///   terms the tile analysis adds unconditionally (every MAC reads
+    ///   its operands and read-modify-writes the accumulator at L1).
+    ///
+    /// Per-candidate work is one `pes_used()` product, so pruning a
+    /// candidate costs ~100× less than evaluating it.
+    fn lower_bound(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+    ) -> Option<CostBound> {
+        let inner = arch.levels.iter().rev().find_map(|l| l.memory.as_ref())?;
+        let macs = problem.total_macs() as f64;
+        let pes = mapping.pes_used().max(1) as f64;
+        let mac_pj = macs
+            * self.energy.mac_pj
+            * (problem.operation.operands() as f64 - 1.0).max(1.0);
+        // innermost level serves every MAC: operand reads + accumulator RMW
+        let accesses = macs * (problem.data_spaces.len() as f64 + 1.0);
+        Some(CostBound {
+            cycles: macs / pes,
+            energy_pj: mac_pj + accesses * self.energy.access_pj(inner),
+            clock_ghz: arch.clock_ghz,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -168,12 +199,17 @@ mod tests {
         let model = AnalyticalModel::new(EnergyTable::default_8bit());
         let seq = model.evaluate(&p, &a, &seq_mapping(&p, &a)).unwrap();
         // use all 8 PEs: M 2-way at C3, N 4-way at C2
+        let lvl = |tt: Vec<u64>, st: Vec<u64>| LevelMapping {
+            temporal_order: order(),
+            temporal_tile: tt,
+            spatial_tile: st,
+        };
         let m = Mapping {
             levels: vec![
-                LevelMapping { temporal_order: order(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
-                LevelMapping { temporal_order: order(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![4, 8, 8] },
-                LevelMapping { temporal_order: order(), temporal_tile: vec![4, 8, 8], spatial_tile: vec![4, 2, 8] },
-                LevelMapping { temporal_order: order(), temporal_tile: vec![4, 2, 8], spatial_tile: vec![4, 2, 8] },
+                lvl(vec![8, 8, 8], vec![8, 8, 8]),
+                lvl(vec![8, 8, 8], vec![4, 8, 8]),
+                lvl(vec![4, 8, 8], vec![4, 2, 8]),
+                lvl(vec![4, 2, 8], vec![4, 2, 8]),
             ],
         };
         let par = model.evaluate(&p, &a, &m).unwrap();
@@ -202,13 +238,20 @@ mod tests {
         let model = AnalyticalModel::new(EnergyTable::default_8bit());
         // tiny L2 tiles force streaming; compare a reuse-friendly order
         // (M,K,N: A stationary) against a hostile one (N,M,K... for B?)
-        let mk = |ord: Vec<usize>| Mapping {
-            levels: vec![
-                LevelMapping { temporal_order: ord.clone(), temporal_tile: vec![32, 32, 32], spatial_tile: vec![32, 32, 32] },
-                LevelMapping { temporal_order: ord.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
-                LevelMapping { temporal_order: ord.clone(), temporal_tile: vec![1, 1, 1], spatial_tile: vec![1, 1, 1] },
-                LevelMapping { temporal_order: ord, temporal_tile: vec![1, 1, 1], spatial_tile: vec![1, 1, 1] },
-            ],
+        let mk = |ord: Vec<usize>| {
+            let lvl = |tt: Vec<u64>, st: Vec<u64>| LevelMapping {
+                temporal_order: ord.clone(),
+                temporal_tile: tt,
+                spatial_tile: st,
+            };
+            Mapping {
+                levels: vec![
+                    lvl(vec![32, 32, 32], vec![32, 32, 32]),
+                    lvl(vec![8, 8, 8], vec![8, 8, 8]),
+                    lvl(vec![1, 1, 1], vec![1, 1, 1]),
+                    lvl(vec![1, 1, 1], vec![1, 1, 1]),
+                ],
+            }
         };
         let good = model.evaluate(&p, &a, &mk(vec![0, 2, 1])).unwrap(); // M K N
         let bad = model.evaluate(&p, &a, &mk(vec![1, 0, 2])).unwrap(); // N M K
@@ -245,6 +288,27 @@ mod tests {
 
     use crate::arch::Arch;
     use crate::problem::Problem;
+
+    #[test]
+    fn lower_bound_never_exceeds_true_cost() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let cons = crate::mapspace::Constraints::default();
+        let space = crate::mapspace::MapSpace::new(&p, &a, &cons);
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut checked = 0;
+        for _ in 0..50 {
+            let Some(m) = space.sample_legal(&mut rng, 200) else { continue };
+            let est = model.evaluate_prechecked(&p, &a, &m).unwrap();
+            let b = model.lower_bound(&p, &a, &m).unwrap();
+            assert!(b.cycles <= est.cycles + 1e-9, "cycles bound too high");
+            assert!(b.energy_pj <= est.energy_pj + 1e-9, "energy bound too high");
+            assert!(b.edp() <= est.edp() * (1.0 + 1e-12), "EDP bound too high");
+            checked += 1;
+        }
+        assert!(checked > 10);
+    }
 
     #[test]
     fn low_fill_bw_becomes_latency_bound() {

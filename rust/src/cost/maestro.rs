@@ -18,7 +18,7 @@ use crate::mapping::Mapping;
 use crate::problem::{Operation, Problem};
 
 use super::tile::{ReuseModel, TileAnalysis};
-use super::{CostEstimate, CostModel, EnergyTable, LevelStats};
+use super::{CostBound, CostEstimate, CostModel, EnergyTable, LevelStats};
 
 /// MAESTRO-style cluster model.
 pub struct MaestroModel {
@@ -138,6 +138,27 @@ impl CostModel for MaestroModel {
             clock_ghz: arch.clock_ghz,
         })
     }
+
+    /// Monotone floor mirroring [`super::AnalyticalModel::lower_bound`]:
+    /// the MAESTRO-style latency also takes a max with `MACs / PEs-used`
+    /// and its energy also sums the innermost level's per-MAC accesses,
+    /// so the same two terms are a valid lower bound here.
+    fn lower_bound(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+    ) -> Option<CostBound> {
+        let inner = arch.levels.iter().rev().find_map(|l| l.memory.as_ref())?;
+        let macs = problem.total_macs() as f64;
+        let pes = mapping.pes_used().max(1) as f64;
+        let accesses = macs * (problem.data_spaces.len() as f64 + 1.0);
+        Some(CostBound {
+            cycles: macs / pes,
+            energy_pj: macs * self.energy.mac_pj + accesses * self.energy.access_pj(inner),
+            clock_ghz: arch.clock_ghz,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -204,6 +225,26 @@ mod tests {
         let e2 = model.evaluate(&p, &a, &m2).unwrap();
         assert_eq!(e1.energy_pj, e2.energy_pj, "data-centric model ignores order");
         assert_eq!(e1.cycles, e2.cycles);
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_true_cost() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let model = MaestroModel::new(EnergyTable::default_8bit());
+        let cons = crate::mapspace::Constraints::default();
+        let space = crate::mapspace::MapSpace::new(&p, &a, &cons);
+        let mut rng = crate::util::rng::Rng::new(78);
+        let mut checked = 0;
+        for _ in 0..50 {
+            let Some(m) = space.sample_legal(&mut rng, 200) else { continue };
+            let est = model.evaluate_prechecked(&p, &a, &m).unwrap();
+            let b = model.lower_bound(&p, &a, &m).unwrap();
+            assert!(b.cycles <= est.cycles + 1e-9);
+            assert!(b.energy_pj <= est.energy_pj + 1e-9);
+            checked += 1;
+        }
+        assert!(checked > 10);
     }
 
     #[test]

@@ -24,7 +24,7 @@ pub use analytical::AnalyticalModel;
 pub use energy::EnergyTable;
 pub use maestro::MaestroModel;
 pub use sparse::{Density, SparseModel};
-pub use tile::{DataMovement, ReuseModel, TileAnalysis};
+pub use tile::{DataMovement, FootprintMemo, ReuseModel, TileAnalysis};
 
 use crate::arch::Arch;
 use crate::mapping::Mapping;
@@ -86,6 +86,38 @@ impl CostEstimate {
     }
 }
 
+/// A cheap, *monotone* lower bound on a mapping's true cost: every field
+/// is guaranteed to be ≤ the corresponding field of the full
+/// [`CostEstimate`] the model would produce. The search engine uses it
+/// to skip candidates whose bound already exceeds the incumbent without
+/// paying for the full tile analysis.
+#[derive(Debug, Clone, Copy)]
+pub struct CostBound {
+    /// Lower bound on execution cycles.
+    pub cycles: f64,
+    /// Lower bound on total energy (pJ).
+    pub energy_pj: f64,
+    /// Clock used to convert cycles to seconds (same as the estimate's).
+    pub clock_ghz: f64,
+}
+
+impl CostBound {
+    /// Lower bound on latency in seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.cycles / (self.clock_ghz * 1e9)
+    }
+
+    /// Lower bound on energy in joules.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_pj * 1e-12
+    }
+
+    /// Lower bound on EDP (product of two lower bounds is itself one).
+    pub fn edp(&self) -> f64 {
+        self.energy_j() * self.latency_s()
+    }
+}
+
 /// A cost model evaluates (problem, arch, mapping) triples.
 ///
 /// `conformable` embodies the model's workload constraints (paper
@@ -116,6 +148,21 @@ pub trait CostModel: Sync {
         mapping: &Mapping,
     ) -> Result<CostEstimate, String> {
         self.evaluate(problem, arch, mapping)
+    }
+
+    /// A cheap *monotone* lower bound for a structurally valid mapping:
+    /// every returned field must under-estimate (or equal) what
+    /// `evaluate_prechecked` would report, so pruning against it can
+    /// never discard a true improvement. `None` disables pruning for
+    /// this model. The default is `None`; models override with whatever
+    /// floor their cost structure guarantees.
+    fn lower_bound(
+        &self,
+        _problem: &Problem,
+        _arch: &Arch,
+        _mapping: &Mapping,
+    ) -> Option<CostBound> {
+        None
     }
 }
 

@@ -9,9 +9,80 @@
 //! quantities; the Timeloop-style model uses the order-aware refetch,
 //! the MAESTRO-style model the order-agnostic (best-case) variant.
 
+use std::collections::HashMap;
+
 use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::problem::{DataSpace, Problem};
+
+/// Memoized per-(dim-chain) tile footprints.
+///
+/// The search hot path re-derives tile footprints constantly: rule 3 of
+/// the legality check sums `Σ_ds tile_footprint(TT)` for every level of
+/// every candidate, and genetic/decoupled mappers recombine whole
+/// divisor chains, so thousands of candidates in a batch share the same
+/// per-level temporal-tile vector. The footprint depends *only* on that
+/// vector (not on the level index), so one small map keyed by the chain
+/// serves every level of every candidate. The engine uses it as a fast
+/// rule-3 pre-filter before paying for the full legality pass.
+#[derive(Debug, Default)]
+pub struct FootprintMemo {
+    /// temporal-tile vector → summed footprint in words across all data
+    /// spaces.
+    map: HashMap<Vec<u64>, u64>,
+    hits: u64,
+    misses: u64,
+}
+
+impl FootprintMemo {
+    pub fn new() -> FootprintMemo {
+        FootprintMemo::default()
+    }
+
+    /// Cached [`Problem::tile_words`] — the rule-3 quantity.
+    pub fn total_words(&mut self, problem: &Problem, tt: &[u64]) -> u64 {
+        if let Some(&w) = self.map.get(tt) {
+            self.hits += 1;
+            return w;
+        }
+        self.misses += 1;
+        let w = problem.tile_words(tt);
+        self.map.insert(tt.to_vec(), w);
+        w
+    }
+
+    /// Does `mapping` violate rule 3 (a bounded memory too small for its
+    /// temporal tile) at any level? Same primitives as the rule-3 clause
+    /// of [`Mapping::check`] ([`Problem::tile_words`] +
+    /// [`crate::arch::Memory::holds`]), but memoized across candidates.
+    pub fn violates_capacity(
+        &mut self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+    ) -> bool {
+        if mapping.levels.len() != arch.depth() {
+            return false; // let the full legality check report this
+        }
+        for (lvl, arch_lvl) in mapping.levels.iter().zip(&arch.levels) {
+            if lvl.temporal_tile.len() != problem.dims.len() {
+                return false;
+            }
+            if let Some(mem) = &arch_lvl.memory {
+                let need = self.total_words(problem, &lvl.temporal_tile) * arch.word_bytes;
+                if !mem.holds(need) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// (hits, misses) counters, for the engine's statistics.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits, self.misses)
+    }
+}
 
 /// How refetch factors treat temporal loop order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -386,12 +457,17 @@ mod tests {
         // parallelize N 4-way at the C2 (virtual, X-axis) level:
         // A (M,K) is irrelevant to N -> multicast to 4 children
         let order = vec![0usize, 1, 2];
+        let lvl = |tt: Vec<u64>, st: Vec<u64>| LevelMapping {
+            temporal_order: order.clone(),
+            temporal_tile: tt,
+            spatial_tile: st,
+        };
         let m = Mapping {
             levels: vec![
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 2, 8] },
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 2, 8], spatial_tile: vec![8, 2, 8] },
+                lvl(vec![8, 8, 8], vec![8, 8, 8]),
+                lvl(vec![8, 8, 8], vec![8, 8, 8]),
+                lvl(vec![8, 8, 8], vec![8, 2, 8]),
+                lvl(vec![8, 2, 8], vec![8, 2, 8]),
             ],
         };
         m.check(&p, &a).unwrap();
@@ -432,16 +508,41 @@ mod tests {
     }
 
     #[test]
+    fn footprint_memo_matches_direct_computation_and_caches() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let mut memo = FootprintMemo::new();
+        let tt = vec![4u64, 4, 8];
+        let direct: u64 = p.data_spaces.iter().map(|ds| ds.tile_footprint(&tt)).sum();
+        assert_eq!(memo.total_words(&p, &tt), direct);
+        assert_eq!(memo.total_words(&p, &tt), direct);
+        assert_eq!(memo.counters(), (1, 1));
+        // agreement with the full legality check on rule 3
+        let m = Mapping::sequential(&p, &a);
+        let viol = memo.violates_capacity(&p, &a, &m);
+        let check_rule3 = matches!(
+            m.check(&p, &a),
+            Err(crate::mapping::IllegalMapping::Rule3 { .. })
+        );
+        assert_eq!(viol, check_rule3);
+    }
+
+    #[test]
     fn used_instances_track_fanout() {
         let p = gemm(8, 8, 8);
         let a = presets::fig5_toy();
         let order = vec![0usize, 1, 2];
+        let lvl = |tt: Vec<u64>, st: Vec<u64>| LevelMapping {
+            temporal_order: order.clone(),
+            temporal_tile: tt,
+            spatial_tile: st,
+        };
         let m = Mapping {
             levels: vec![
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![8, 8, 8] },
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![8, 8, 8], spatial_tile: vec![4, 8, 8] }, // M 2-way
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![4, 8, 8], spatial_tile: vec![4, 2, 8] }, // N 4-way
-                LevelMapping { temporal_order: order.clone(), temporal_tile: vec![4, 2, 8], spatial_tile: vec![4, 2, 8] },
+                lvl(vec![8, 8, 8], vec![8, 8, 8]),
+                lvl(vec![8, 8, 8], vec![4, 8, 8]), // M 2-way
+                lvl(vec![4, 8, 8], vec![4, 2, 8]), // N 4-way
+                lvl(vec![4, 2, 8], vec![4, 2, 8]),
             ],
         };
         m.check(&p, &a).unwrap();

@@ -1,0 +1,85 @@
+//! Whole-candidate **evaluation memo** for the search engine.
+//!
+//! Search algorithms that exploit previous results re-propose mappings
+//! verbatim: the genetic mapper re-injects its elites every generation,
+//! hill climbing revisits neighbours, and a portfolio run feeds several
+//! mappers the same incumbent region. Keying the full mapping (all
+//! per-level dim chains and orders — `Mapping` derives `Hash`/`Eq`)
+//! makes every repeat a table lookup instead of a tile analysis.
+//!
+//! Entries are exact, so memoization never changes a search result —
+//! only the number of cost-model invocations.
+
+use std::collections::HashMap;
+
+use crate::mapping::Mapping;
+
+/// What the engine learned about a candidate the last time it saw it.
+/// Only the objective score is kept: a repeat candidate can never beat
+/// the incumbent (the incumbent already dominates everything scored),
+/// so the full `CostEstimate` would be dead weight in the table.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum MemoEntry {
+    /// Evaluated successfully, with its objective score.
+    Scored(f64),
+    /// Inadmissible, failed evaluation, or pruned by a lower bound that
+    /// the (monotonically improving) incumbent still dominates.
+    Dead,
+}
+
+/// Bounded map from mapping → [`MemoEntry`].
+#[derive(Debug, Default)]
+pub(crate) struct EvalMemo {
+    map: HashMap<Mapping, MemoEntry>,
+    capacity: usize,
+}
+
+impl EvalMemo {
+    pub fn new(capacity: usize) -> EvalMemo {
+        EvalMemo { map: HashMap::new(), capacity: capacity.max(1) }
+    }
+
+    pub fn get(&self, m: &Mapping) -> Option<&MemoEntry> {
+        self.map.get(m)
+    }
+
+    pub fn insert(&mut self, m: Mapping, e: MemoEntry) {
+        // simple epoch reset keeps the memo bounded without tracking LRU
+        // order on the hot path
+        if self.map.len() >= self.capacity {
+            self.map.clear();
+        }
+        self.map.insert(m, e);
+    }
+
+    #[cfg(test)]
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::problem::gemm;
+
+    #[test]
+    fn insert_get_roundtrip_and_capacity_reset() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let m1 = Mapping::sequential(&p, &a);
+        let mut m2 = m1.clone();
+        m2.levels[1].temporal_order.swap(0, 1);
+
+        let mut memo = EvalMemo::new(1);
+        memo.insert(m1.clone(), MemoEntry::Dead);
+        assert!(matches!(memo.get(&m1), Some(MemoEntry::Dead)));
+        assert!(memo.get(&m2).is_none());
+        // capacity 1: inserting a second distinct key resets the epoch
+        memo.insert(m2.clone(), MemoEntry::Dead);
+        assert_eq!(memo.len(), 1);
+        assert!(memo.get(&m1).is_none());
+        assert!(memo.get(&m2).is_some());
+    }
+}

@@ -1,0 +1,518 @@
+//! The **batched search engine**: one evaluation pipeline shared by
+//! every mapper.
+//!
+//! The paper's premise (§III-B) is that map spaces grow multiplicatively
+//! and exploration speed is the product. Before this module each mapper
+//! owned a private search loop; now a mapper is just a
+//! [`CandidateSource`] that proposes batches, and the engine owns the
+//! hot path:
+//!
+//! 1. **memoization** — repeat candidates (genetic elites, climb
+//!    revisits, portfolio overlap) resolve from the [`memo::EvalMemo`]
+//!    without touching the cost model;
+//! 2. **rule-3 pre-filter** — per-(dim-chain) tile footprints are
+//!    memoized in a [`FootprintMemo`], rejecting capacity violators
+//!    before the full legality pass;
+//! 3. **lower-bound pruning** — candidates whose monotone
+//!    [`CostModel::lower_bound`] already meets the incumbent are skipped
+//!    before tile analysis. The bound is compared against the incumbent
+//!    *as of the start of the batch*, so pruning decisions are
+//!    independent of thread scheduling;
+//! 4. **parallel evaluation** — survivors run through
+//!    [`par_map_with`] with order-preserving chunking.
+//!
+//! # Determinism
+//!
+//! Engine results are reproducible across thread counts by
+//! construction: candidate generation happens in the source with
+//! explicitly seeded [`crate::util::rng::Rng`] streams (split via
+//! [`crate::util::rng::Rng::split`] / per-candidate `Rng::new`),
+//! batches are evaluated with order-preserving parallelism, pruning
+//! thresholds are per-batch snapshots, and the
+//! incumbent is folded in batch order with strict improvement — ties
+//! keep the earliest candidate. `tests/engine_determinism.rs` pins this
+//! for all five mappers at 1 and N threads.
+
+mod memo;
+
+use crate::cost::{CostEstimate, CostModel, FootprintMemo};
+use crate::mappers::{Objective, SearchResult};
+use crate::mapping::Mapping;
+use crate::mapspace::MapSpace;
+use crate::util::par::{default_threads, par_map_with};
+
+use memo::{EvalMemo, MemoEntry};
+
+/// Tuning knobs for an [`Engine`]. The defaults are what every mapper's
+/// `search_with` uses.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Worker threads for batch evaluation; `None` = all available.
+    pub threads: Option<usize>,
+    /// Apply monotone lower-bound pruning against the incumbent.
+    pub prune: bool,
+    /// Memoize per-candidate evaluations and per-chain footprints
+    /// (`false` also disables the footprint-memo capacity pre-filter,
+    /// so the engine is genuinely memoization-free for A/B runs).
+    pub memoize: bool,
+    /// Stop accepting batches once this many candidates were scored.
+    pub max_scored: Option<usize>,
+    /// Stop once the incumbent score is ≤ this target (early
+    /// termination for "good enough" searches).
+    pub target_score: Option<f64>,
+    /// Evaluation-memo entry cap before an epoch reset.
+    pub memo_capacity: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            threads: None,
+            prune: true,
+            memoize: true,
+            max_scored: None,
+            target_score: None,
+            memo_capacity: 1 << 20,
+        }
+    }
+}
+
+/// Counters the engine maintains across its lifetime. `scored` is what
+/// [`SearchResult::evaluated`] reports; `cost_evals` is the number of
+/// true cost-model invocations (scored minus memo hits).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Batches accepted from sources.
+    pub batches: usize,
+    /// Candidates proposed by sources.
+    pub proposed: usize,
+    /// Candidates that received a score (fresh evaluations + memo hits).
+    pub scored: usize,
+    /// Fresh cost-model invocations.
+    pub cost_evals: usize,
+    /// Candidates resolved from the evaluation memo.
+    pub memo_hits: usize,
+    /// Candidates skipped by lower-bound pruning.
+    pub pruned: usize,
+    /// Candidates rejected as inadmissible (pre-filter, legality or
+    /// evaluation error).
+    pub rejected: usize,
+}
+
+/// What the engine tells a source before asking for the next batch.
+pub struct Progress<'p> {
+    /// 0-based index of the batch about to be requested (within this
+    /// `run`).
+    pub batch_index: usize,
+    /// Incumbent mapping and its objective score, if any candidate has
+    /// scored so far (including previous `run`s on the same engine).
+    pub best: Option<(&'p Mapping, f64)>,
+    /// `(mapping, score)` pairs of the previous batch, in batch order —
+    /// exactly the candidates that received finite-cost scores.
+    pub last_scored: &'p [(Mapping, f64)],
+}
+
+/// A stream of candidate batches — the mapper side of the engine
+/// contract. Implementations own their RNG state (seeded explicitly)
+/// and may adapt to [`Progress`] feedback; they must not depend on
+/// thread count or wall-clock time, which would break reproducibility.
+pub trait CandidateSource {
+    fn name(&self) -> &str;
+
+    /// `true` if every produced mapping already passed
+    /// [`MapSpace::admits`]; the engine then skips re-checking.
+    fn preadmitted(&self) -> bool {
+        false
+    }
+
+    /// Produce the next batch, or `None` when the search is exhausted.
+    /// An empty batch also terminates the run.
+    fn next_batch(&mut self, space: &MapSpace, progress: &Progress) -> Option<Vec<Mapping>>;
+}
+
+struct Incumbent {
+    mapping: Mapping,
+    cost: CostEstimate,
+    score: f64,
+}
+
+enum Plan {
+    Hit(f64),
+    Dead,
+    Miss,
+}
+
+enum Outcome {
+    Scored(CostEstimate, f64),
+    Illegal,
+    Pruned,
+}
+
+/// The batched search engine. One engine can `run` several sources in
+/// sequence (the portfolio pattern): memo, incumbent and statistics
+/// carry over, so later sources prune against earlier results.
+pub struct Engine<'a> {
+    space: &'a MapSpace<'a>,
+    model: &'a dyn CostModel,
+    objective: Objective,
+    config: EngineConfig,
+    memo: EvalMemo,
+    tiles: FootprintMemo,
+    stats: EngineStats,
+    incumbent: Option<Incumbent>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(space: &'a MapSpace<'a>, model: &'a dyn CostModel, objective: Objective) -> Self {
+        Self::with_config(space, model, objective, EngineConfig::default())
+    }
+
+    pub fn with_config(
+        space: &'a MapSpace<'a>,
+        model: &'a dyn CostModel,
+        objective: Objective,
+        config: EngineConfig,
+    ) -> Self {
+        let memo = EvalMemo::new(config.memo_capacity);
+        Engine {
+            space,
+            model,
+            objective,
+            config,
+            memo,
+            tiles: FootprintMemo::new(),
+            stats: EngineStats::default(),
+            incumbent: None,
+        }
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Current incumbent score, if any.
+    pub fn best_score(&self) -> Option<f64> {
+        self.incumbent.as_ref().map(|i| i.score)
+    }
+
+    /// Snapshot the incumbent as a [`SearchResult`]. `evaluated` counts
+    /// every scored candidate over the engine's lifetime.
+    pub fn result(&self) -> Option<SearchResult> {
+        self.incumbent.as_ref().map(|i| SearchResult {
+            mapping: i.mapping.clone(),
+            cost: i.cost.clone(),
+            evaluated: self.stats.scored,
+            score: i.score,
+        })
+    }
+
+    /// Drain a source: request batches until it is exhausted or an
+    /// early-termination condition fires, and return the best mapping
+    /// found so far (across all `run`s on this engine).
+    pub fn run(&mut self, source: &mut dyn CandidateSource) -> Option<SearchResult> {
+        let mut batch_index = 0usize;
+        let mut last_scored: Vec<(Mapping, f64)> = Vec::new();
+        loop {
+            if self.terminated() {
+                break;
+            }
+            let progress = Progress {
+                batch_index,
+                best: self.incumbent.as_ref().map(|i| (&i.mapping, i.score)),
+                last_scored: &last_scored,
+            };
+            let Some(batch) = source.next_batch(self.space, &progress) else {
+                break;
+            };
+            if batch.is_empty() {
+                break;
+            }
+            last_scored = self.process_batch(batch, source.preadmitted());
+            batch_index += 1;
+        }
+        self.result()
+    }
+
+    /// Push one explicit batch through the full pipeline (memo →
+    /// pre-filter → legality → prune → parallel evaluate) and return
+    /// the `(mapping, score)` pairs that scored, in batch order.
+    pub fn evaluate(&mut self, batch: Vec<Mapping>) -> Vec<(Mapping, f64)> {
+        self.process_batch(batch, false)
+    }
+
+    fn terminated(&self) -> bool {
+        if let Some(cap) = self.config.max_scored {
+            if self.stats.scored >= cap {
+                return true;
+            }
+        }
+        if let (Some(target), Some(inc)) = (self.config.target_score, &self.incumbent) {
+            if inc.score <= target {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn process_batch(&mut self, batch: Vec<Mapping>, preadmitted: bool) -> Vec<(Mapping, f64)> {
+        self.stats.batches += 1;
+        self.stats.proposed += batch.len();
+        // pruning threshold is the incumbent at batch start: identical
+        // for every worker and every thread count
+        let snapshot = self.incumbent.as_ref().map(|i| i.score);
+
+        // main-thread memo pass: resolve repeats and capacity violators
+        let mut plan: Vec<Plan> = Vec::with_capacity(batch.len());
+        let mut miss_idx: Vec<usize> = Vec::new();
+        for (i, m) in batch.iter().enumerate() {
+            if self.config.memoize {
+                match self.memo.get(m) {
+                    Some(MemoEntry::Scored(score)) => {
+                        plan.push(Plan::Hit(*score));
+                        continue;
+                    }
+                    Some(MemoEntry::Dead) => {
+                        plan.push(Plan::Dead);
+                        continue;
+                    }
+                    None => {}
+                }
+            }
+            if self.config.memoize
+                && !preadmitted
+                && self
+                    .tiles
+                    .violates_capacity(self.space.problem, self.space.arch, m)
+            {
+                self.memo.insert(m.clone(), MemoEntry::Dead);
+                plan.push(Plan::Dead);
+                continue;
+            }
+            plan.push(Plan::Miss);
+            miss_idx.push(i);
+        }
+
+        // parallel pass over the misses; small batches (heuristic climb
+        // rounds, decoupled grafts) stay sequential — thread spawn would
+        // dominate the work, same cutoff par_map uses
+        let threads = if miss_idx.len() < 64 {
+            1
+        } else {
+            self.config.threads.unwrap_or_else(default_threads)
+        };
+        let space = self.space;
+        let model = self.model;
+        let objective = self.objective;
+        let prune = self.config.prune;
+        let batch_ref: &[Mapping] = &batch;
+        let outcomes: Vec<Outcome> = par_map_with(miss_idx, threads, |&i| {
+            let m = &batch_ref[i];
+            if !preadmitted && !space.admits(m) {
+                return Outcome::Illegal;
+            }
+            if prune {
+                if let (Some(inc), Some(bound)) =
+                    (snapshot, model.lower_bound(space.problem, space.arch, m))
+                {
+                    if objective.score_bound(&bound) >= inc {
+                        return Outcome::Pruned;
+                    }
+                }
+            }
+            match model.evaluate_prechecked(space.problem, space.arch, m) {
+                Ok(est) => {
+                    let score = objective.score(&est);
+                    Outcome::Scored(est, score)
+                }
+                Err(_) => Outcome::Illegal,
+            }
+        });
+
+        // main-thread merge in batch order: memo writes + incumbent fold
+        let mut scored_out: Vec<(Mapping, f64)> = Vec::new();
+        let mut outcomes_it = outcomes.into_iter();
+        for (m, p) in batch.into_iter().zip(plan) {
+            match p {
+                Plan::Hit(score) => {
+                    self.stats.memo_hits += 1;
+                    self.stats.scored += 1;
+                    // a memo hit was scored before, so the incumbent
+                    // (which never resets within an engine) already
+                    // dominates it — no incumbent update possible
+                    debug_assert!(
+                        self.incumbent.as_ref().is_some_and(|i| i.score <= score),
+                        "memoized candidate beat the incumbent"
+                    );
+                    scored_out.push((m, score));
+                }
+                Plan::Dead => {
+                    self.stats.rejected += 1;
+                }
+                Plan::Miss => {
+                    let outcome = outcomes_it.next().expect("one outcome per miss");
+                    match outcome {
+                        Outcome::Scored(est, score) => {
+                            self.stats.cost_evals += 1;
+                            self.stats.scored += 1;
+                            if self.config.memoize {
+                                self.memo.insert(m.clone(), MemoEntry::Scored(score));
+                            }
+                            let improves = self
+                                .incumbent
+                                .as_ref()
+                                .map(|i| score < i.score)
+                                .unwrap_or(true);
+                            if improves {
+                                self.incumbent = Some(Incumbent {
+                                    mapping: m.clone(),
+                                    cost: est,
+                                    score,
+                                });
+                            }
+                            scored_out.push((m, score));
+                        }
+                        Outcome::Illegal => {
+                            self.stats.rejected += 1;
+                            if self.config.memoize {
+                                self.memo.insert(m, MemoEntry::Dead);
+                            }
+                        }
+                        Outcome::Pruned => {
+                            // safe to memoize as dead: the incumbent only
+                            // improves, so a bound that failed against the
+                            // snapshot keeps failing forever
+                            self.stats.pruned += 1;
+                            if self.config.memoize {
+                                self.memo.insert(m, MemoEntry::Dead);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        scored_out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::mapspace::Constraints;
+    use crate::problem::gemm;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (crate::problem::Problem, crate::arch::Arch, Constraints) {
+        (gemm(32, 32, 32), presets::edge(), Constraints::default())
+    }
+
+    fn sample_batch(space: &MapSpace, seed: u64, n: usize) -> Vec<Mapping> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| space.sample(&mut rng)).collect()
+    }
+
+    #[test]
+    fn pruning_and_memoization_do_not_change_the_best() {
+        let (p, a, c) = setup();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let batches: Vec<Vec<Mapping>> =
+            (0..4).map(|i| sample_batch(&space, 100 + i, 400)).collect();
+
+        let mut plain = Engine::with_config(
+            &space,
+            &model,
+            Objective::Edp,
+            EngineConfig { prune: false, memoize: false, ..EngineConfig::default() },
+        );
+        let mut fast = Engine::new(&space, &model, Objective::Edp);
+        for b in &batches {
+            plain.evaluate(b.clone());
+            fast.evaluate(b.clone());
+        }
+        let (r1, r2) = (plain.result().unwrap(), fast.result().unwrap());
+        assert_eq!(r1.score, r2.score);
+        assert_eq!(r1.mapping, r2.mapping);
+        // the fast path did strictly less cost-model work
+        assert!(fast.stats().cost_evals <= plain.stats().cost_evals);
+    }
+
+    #[test]
+    fn memo_hits_on_repeat_batches() {
+        let (p, a, c) = setup();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let mut engine = Engine::new(&space, &model, Objective::Edp);
+        let batch = sample_batch(&space, 5, 200);
+        let first = engine.evaluate(batch.clone());
+        let evals_after_first = engine.stats().cost_evals;
+        let second = engine.evaluate(batch);
+        assert_eq!(first, second, "repeat batch must score identically");
+        assert_eq!(
+            engine.stats().cost_evals,
+            evals_after_first,
+            "repeat batch must be served from the memo"
+        );
+        assert!(engine.stats().memo_hits >= first.len());
+    }
+
+    #[test]
+    fn scored_output_preserves_batch_order() {
+        let (p, a, c) = setup();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let mut engine = Engine::with_config(
+            &space,
+            &model,
+            Objective::Edp,
+            EngineConfig { prune: false, ..EngineConfig::default() },
+        );
+        let batch = sample_batch(&space, 9, 300);
+        let scored = engine.evaluate(batch.clone());
+        // scored is the admitted subsequence of batch, in order
+        let mut it = batch.iter();
+        for (m, _) in &scored {
+            assert!(it.any(|b| b == m), "scored order diverged from batch order");
+        }
+    }
+
+    #[test]
+    fn max_scored_terminates_run() {
+        struct Endless {
+            seed: u64,
+        }
+        impl CandidateSource for Endless {
+            fn name(&self) -> &str {
+                "endless"
+            }
+            fn next_batch(
+                &mut self,
+                space: &MapSpace,
+                _p: &Progress,
+            ) -> Option<Vec<Mapping>> {
+                self.seed += 1;
+                let mut rng = Rng::new(self.seed);
+                Some((0..64).map(|_| space.sample(&mut rng)).collect())
+            }
+        }
+        let (p, a, c) = setup();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let mut engine = Engine::with_config(
+            &space,
+            &model,
+            Objective::Edp,
+            EngineConfig { max_scored: Some(100), ..EngineConfig::default() },
+        );
+        let r = engine.run(&mut Endless { seed: 0 });
+        assert!(r.is_some());
+        assert!(engine.stats().scored >= 100);
+        assert!(engine.stats().batches < 1_000, "termination did not fire");
+    }
+
+}

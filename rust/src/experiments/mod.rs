@@ -13,8 +13,9 @@
 
 use crate::arch::presets;
 use crate::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use crate::engine::Engine;
 use crate::frontend::{self, ttgt_gemm, Workload};
-use crate::mappers::{HeuristicMapper, Mapper, RandomMapper, SearchResult};
+use crate::mappers::{HeuristicMapper, Mapper, Objective, RandomMapper, SearchResult};
 use crate::mapping::render_loop_nest;
 use crate::mapspace::{Constraints, MapSpace};
 use crate::report::{normalize_to_min, Table};
@@ -38,20 +39,25 @@ impl Effort {
 }
 
 /// Run the standard two-mapper portfolio (random sampling + heuristic,
-/// §V-A uses "a mapper based on both heuristic and random sampling") and
-/// keep the better result.
+/// §V-A uses "a mapper based on both heuristic and random sampling") on
+/// ONE shared [`Engine`]: the heuristic phase prunes against (and
+/// hill-climbs from) the incumbent the random phase established, and
+/// candidates the two strategies both propose resolve from the shared
+/// memo instead of being evaluated twice.
 pub fn portfolio_search(
     space: &MapSpace,
     model: &dyn CostModel,
     effort: Effort,
     seed: u64,
 ) -> Option<SearchResult> {
-    let rnd = RandomMapper::new(effort.samples(), seed).search(space, model);
-    let heu = HeuristicMapper::new(effort.samples() / 2, 60, seed ^ 0xABCD).search(space, model);
-    match (rnd, heu) {
-        (Some(a), Some(b)) => Some(if a.score <= b.score { a } else { b }),
-        (a, b) => a.or(b),
-    }
+    let mut engine = Engine::new(space, model, Objective::Edp);
+    engine.run(RandomMapper::new(effort.samples(), seed).source().as_mut());
+    engine.run(
+        HeuristicMapper::new(effort.samples() / 2, 60, seed ^ 0xABCD)
+            .source()
+            .as_mut(),
+    );
+    engine.result()
 }
 
 // ---------------------------------------------------------------------

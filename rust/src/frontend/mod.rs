@@ -42,7 +42,17 @@ pub enum WorkloadKind {
 }
 
 impl Workload {
-    pub fn conv2d(name: &str, n: u64, k: u64, c: u64, x: u64, y: u64, r: u64, s: u64, stride: u64) -> Workload {
+    pub fn conv2d(
+        name: &str,
+        n: u64,
+        k: u64,
+        c: u64,
+        x: u64,
+        y: u64,
+        r: u64,
+        s: u64,
+        stride: u64,
+    ) -> Workload {
         Workload { name: name.into(), kind: WorkloadKind::Conv2d { n, k, c, x, y, r, s, stride } }
     }
 

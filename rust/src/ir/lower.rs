@@ -132,23 +132,39 @@ pub fn ta_to_linalg(src: &Module, use_ttgt: bool) -> Module {
         if use_ttgt {
             // free-A = output indices from A, free-B = output indices from B
             let free_a: Vec<char> = cout.iter().filter(|c| ain.contains(c)).copied().collect();
-            let free_b: Vec<char> = cout.iter().filter(|c| bin.contains(c) && !free_a.contains(c)).copied().collect();
+            let free_b: Vec<char> = cout
+                .iter()
+                .filter(|c| bin.contains(c) && !free_a.contains(c))
+                .copied()
+                .collect();
             let m_: u64 = free_a.iter().map(|&c| extent(c)).product();
             let n_: u64 = free_b.iter().map(|&c| extent(c)).product();
             let k_: u64 = contracted.iter().map(|&c| extent(c)).product();
             // document the transposes/reshapes as attribute metadata on
             // reshape ops so the pipeline records the TTGT structure
-            let a2 = dst.new_value("a_mat", super::core::Type::tensor(&[m_, k_], src.value_type(a).dtype().unwrap()));
+            let a2 = dst.new_value(
+                "a_mat",
+                super::core::Type::tensor(&[m_, k_], src.value_type(a).dtype().unwrap()),
+            );
             let mut t1 = Op::new("ta.reshape");
             t1.operands = vec![a];
             t1.results = vec![a2];
-            t1.set_attr("perm_group", Attr::Str(format!("{}|{}", collect(&free_a), collect(&contracted))));
+            t1.set_attr(
+                "perm_group",
+                Attr::Str(format!("{}|{}", collect(&free_a), collect(&contracted))),
+            );
             dst.ops.push(t1);
-            let b2 = dst.new_value("b_mat", super::core::Type::tensor(&[k_, n_], src.value_type(b).dtype().unwrap()));
+            let b2 = dst.new_value(
+                "b_mat",
+                super::core::Type::tensor(&[k_, n_], src.value_type(b).dtype().unwrap()),
+            );
             let mut t2 = Op::new("ta.reshape");
             t2.operands = vec![b];
             t2.results = vec![b2];
-            t2.set_attr("perm_group", Attr::Str(format!("{}|{}", collect(&contracted), collect(&free_b))));
+            t2.set_attr(
+                "perm_group",
+                Attr::Str(format!("{}|{}", collect(&contracted), collect(&free_b))),
+            );
             dst.ops.push(t2);
             let dims: Vec<(String, u64)> = [("M", m_), ("N", n_), ("K", k_)]
                 .iter()
@@ -165,7 +181,10 @@ pub fn ta_to_linalg(src: &Module, use_ttgt: bool) -> Module {
             dst.ops.push(gop);
             // fold back
             let oshape: Vec<u64> = cout.iter().map(|&c| extent(c)).collect();
-            let final_out = dst.new_value("tc_out", super::core::Type::tensor(&oshape, src.value_type(a).dtype().unwrap()));
+            let final_out = dst.new_value(
+                "tc_out",
+                super::core::Type::tensor(&oshape, src.value_type(a).dtype().unwrap()),
+            );
             let mut t3 = Op::new("ta.reshape");
             t3.operands = vec![gout];
             t3.results = vec![final_out];
@@ -180,7 +199,9 @@ pub fn ta_to_linalg(src: &Module, use_ttgt: bool) -> Module {
                 .map(|&c| (c.to_uppercase().to_string(), extent(c)))
                 .collect();
             let pos = |c: char| order.iter().position(|&x| x == c).unwrap();
-            let map_for = |idxs: &[char]| AffineMap::select(order.len(), &idxs.iter().map(|&c| pos(c)).collect::<Vec<_>>());
+            let map_for = |idxs: &[char]| {
+                AffineMap::select(order.len(), &idxs.iter().map(|&c| pos(c)).collect::<Vec<_>>())
+            };
             let maps = vec![map_for(&ain), map_for(&bin), map_for(&cout)];
             let its: Vec<String> = order
                 .iter()

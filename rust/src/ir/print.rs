@@ -18,10 +18,16 @@ pub fn print_module(m: &Module) -> String {
 fn fmt_attr(a: &Attr) -> String {
     match a {
         Attr::Int(i) => i.to_string(),
-        Attr::Ints(v) => format!("[{}]", v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")),
+        Attr::Ints(v) => format!(
+            "[{}]",
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+        ),
         Attr::F64(f) => format!("{f}"),
         Attr::Str(s) => format!("\"{s}\""),
-        Attr::Strs(v) => format!("[{}]", v.iter().map(|s| format!("\"{s}\"")).collect::<Vec<_>>().join(", ")),
+        Attr::Strs(v) => format!(
+            "[{}]",
+            v.iter().map(|s| format!("\"{s}\"")).collect::<Vec<_>>().join(", ")
+        ),
         Attr::Bool(b) => b.to_string(),
         Attr::Map(m) => format!("affine_map<{m}>"),
         Attr::Maps(v) => format!(

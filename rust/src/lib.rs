@@ -39,11 +39,19 @@
 //! let best = mapper.search(&space, &model).expect("found a mapping");
 //! println!("EDP = {:.3e}", best.cost.edp());
 //! ```
+//!
+//! Searches run through the shared batched [`engine`]: every mapper is a
+//! candidate source, and the engine owns evaluation (parallel batches,
+//! memoization, monotone lower-bound pruning, deterministic seeding).
+//!
+//! (Clippy policy lives in the `[lints.clippy]` table of
+//! `rust/Cargo.toml`, applied to every target in the package.)
 
 pub mod arch;
 pub mod cli;
 pub mod config;
 pub mod cost;
+pub mod engine;
 pub mod experiments;
 pub mod frontend;
 pub mod ir;
@@ -61,6 +69,7 @@ pub mod prelude {
     pub use crate::cost::{
         AnalyticalModel, CostEstimate, CostModel, EnergyTable, MaestroModel,
     };
+    pub use crate::engine::{CandidateSource, Engine, EngineConfig, EngineStats};
     pub use crate::frontend::{self, Workload};
     pub use crate::mappers::{
         DecoupledMapper, ExhaustiveMapper, GeneticMapper, HeuristicMapper, Mapper, Objective,

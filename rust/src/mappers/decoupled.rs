@@ -5,14 +5,17 @@
 //! off-chip traffic — a proxy objective evaluated without the full cost
 //! model, exactly Marvel's insight that DRAM traffic dominates and can be
 //! optimized independently. Phase 2 searches the remaining inner levels
-//! with the real cost model, holding the off-chip split fixed.
+//! with the real cost model, holding the off-chip split fixed. As a
+//! [`CandidateSource`], each retained off-chip split becomes one engine
+//! batch, so later splits are pruned against the best mapping the
+//! earlier splits already produced.
 
-use crate::cost::CostModel;
+use crate::engine::{CandidateSource, Progress};
 use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
-use super::{evaluate_batch, Mapper, Objective, SearchResult};
+use super::Mapper;
 
 /// Two-phase decoupled search.
 pub struct DecoupledMapper {
@@ -48,29 +51,42 @@ impl Mapper for DecoupledMapper {
         "decoupled"
     }
 
-    fn search_with(
-        &self,
-        space: &MapSpace,
-        model: &dyn CostModel,
-        objective: Objective,
-    ) -> Option<SearchResult> {
-        let mut rng = Rng::new(self.seed);
+    fn source(&self) -> Box<dyn CandidateSource> {
+        Box::new(DecoupledSource {
+            offchip_candidates: self.offchip_candidates,
+            onchip_samples: self.onchip_samples,
+            keep: self.keep,
+            rng: Rng::new(self.seed),
+            kept: None,
+            next_split: 0,
+        })
+    }
+}
 
-        // ---- phase 1: score off-chip splits by DRAM traffic ----
+struct DecoupledSource {
+    offchip_candidates: usize,
+    onchip_samples: usize,
+    keep: usize,
+    rng: Rng,
+    /// Phase-1 result, computed lazily on the first batch request.
+    kept: Option<Vec<Mapping>>,
+    next_split: usize,
+}
+
+impl DecoupledSource {
+    /// Phase 1: score off-chip splits by DRAM traffic, keep distinct
+    /// off-chip signatures (level-1 temporal tiles).
+    fn phase1(&mut self, space: &MapSpace) -> Vec<Mapping> {
         let mut splits: Vec<(Mapping, f64)> = Vec::new();
         for _ in 0..self.offchip_candidates {
-            let m = space.sample(&mut rng);
+            let m = space.sample(&mut self.rng);
             if !space.admits(&m) {
                 continue;
             }
             let traffic = Self::offchip_traffic(space, &m);
             splits.push((m, traffic));
         }
-        if splits.is_empty() {
-            return None;
-        }
         splits.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        // keep distinct off-chip signatures (level-1 temporal tiles)
         let mut kept: Vec<Mapping> = Vec::new();
         let mut seen: Vec<Vec<u64>> = Vec::new();
         for (m, _) in &splits {
@@ -87,42 +103,62 @@ impl Mapper for DecoupledMapper {
                 }
             }
         }
+        kept
+    }
 
-        // ---- phase 2: for each kept split, search the on-chip levels ----
-        let mut candidates: Vec<Mapping> = Vec::new();
-        for base in &kept {
-            candidates.push(base.clone());
-            for _ in 0..self.onchip_samples {
-                let fresh = space.sample(&mut rng);
-                // graft: keep the off-chip (levels 0..=1) tiling of `base`,
-                // take inner levels from `fresh` where the chain allows
-                let mut child = fresh.clone();
-                let keep_levels = 2.min(child.levels.len());
-                for l in 0..keep_levels {
-                    child.levels[l] = base.levels[l].clone();
-                }
-                // repair chain: inner temporal tiles must divide the kept
-                // spatial tiles (rule 1); clamp where violated
-                for d in 0..space.problem.dims.len() {
-                    let mut prev = child.levels[keep_levels - 1].spatial_tile[d];
-                    for l in keep_levels..child.levels.len() {
-                        let lv = &mut child.levels[l];
-                        if lv.temporal_tile[d] > prev || prev % lv.temporal_tile[d] != 0 {
-                            lv.temporal_tile[d] = prev;
-                        }
-                        if lv.spatial_tile[d] > lv.temporal_tile[d]
-                            || lv.temporal_tile[d] % lv.spatial_tile[d] != 0
-                        {
-                            lv.spatial_tile[d] = lv.temporal_tile[d];
-                        }
-                        prev = lv.spatial_tile[d];
-                    }
-                }
-                candidates.push(child);
+    /// Phase 2 for one kept split: the split itself plus grafted samples
+    /// keeping its off-chip tiling.
+    fn graft_batch(&mut self, space: &MapSpace, base: &Mapping) -> Vec<Mapping> {
+        let mut candidates = Vec::with_capacity(self.onchip_samples + 1);
+        candidates.push(base.clone());
+        for _ in 0..self.onchip_samples {
+            let fresh = space.sample(&mut self.rng);
+            // graft: keep the off-chip (levels 0..=1) tiling of `base`,
+            // take inner levels from `fresh` where the chain allows
+            let mut child = fresh.clone();
+            let keep_levels = 2.min(child.levels.len());
+            for l in 0..keep_levels {
+                child.levels[l] = base.levels[l].clone();
             }
+            // repair chain: inner temporal tiles must divide the kept
+            // spatial tiles (rule 1); clamp where violated
+            for d in 0..space.problem.dims.len() {
+                let mut prev = child.levels[keep_levels - 1].spatial_tile[d];
+                for l in keep_levels..child.levels.len() {
+                    let lv = &mut child.levels[l];
+                    if lv.temporal_tile[d] > prev || prev % lv.temporal_tile[d] != 0 {
+                        lv.temporal_tile[d] = prev;
+                    }
+                    if lv.spatial_tile[d] > lv.temporal_tile[d]
+                        || lv.temporal_tile[d] % lv.spatial_tile[d] != 0
+                    {
+                        lv.spatial_tile[d] = lv.temporal_tile[d];
+                    }
+                    prev = lv.spatial_tile[d];
+                }
+            }
+            candidates.push(child);
         }
-        let (best, _) = evaluate_batch(space, model, objective, candidates);
-        best
+        candidates
+    }
+}
+
+impl CandidateSource for DecoupledSource {
+    fn name(&self) -> &str {
+        "decoupled"
+    }
+
+    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+        if self.kept.is_none() {
+            let kept = self.phase1(space);
+            if kept.is_empty() {
+                return None;
+            }
+            self.kept = Some(kept);
+        }
+        let base = self.kept.as_ref()?.get(self.next_split)?.clone();
+        self.next_split += 1;
+        Some(self.graft_batch(space, &base))
     }
 }
 
@@ -131,6 +167,7 @@ mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::mappers::Mapper;
     use crate::mapspace::Constraints;
     use crate::problem::gemm;
 

@@ -1,11 +1,18 @@
-//! Brute-force mapper: enumerate the (order-restricted) map space and
-//! evaluate everything. Only tractable for small problems; the paper
-//! motivates smarter mappers by the infeasibility of this one (§III-B).
+//! Brute-force mapper: stream the (order-restricted) map space through
+//! the engine and evaluate everything. Only tractable for small
+//! problems; the paper motivates smarter mappers by the infeasibility of
+//! this one (§III-B). Batching still pays off here: once an incumbent
+//! exists, the engine's lower-bound pruning skips the long tail of
+//! low-parallelism tilings without full tile analysis.
 
-use crate::cost::CostModel;
-use crate::mapspace::MapSpace;
+use crate::engine::{CandidateSource, Progress};
+use crate::mapping::Mapping;
+use crate::mapspace::{EnumCursor, MapSpace};
 
-use super::{evaluate_batch, Mapper, Objective, SearchResult};
+use super::Mapper;
+
+/// Mappings streamed per engine batch.
+const BATCH: usize = 2048;
 
 /// Exhaustive search, capped at `limit` enumerated mappings.
 pub struct ExhaustiveMapper {
@@ -29,15 +36,40 @@ impl Mapper for ExhaustiveMapper {
         "exhaustive"
     }
 
-    fn search_with(
-        &self,
-        space: &MapSpace,
-        model: &dyn CostModel,
-        objective: Objective,
-    ) -> Option<SearchResult> {
-        let candidates = space.enumerate(self.limit);
-        let (best, _) = evaluate_batch(space, model, objective, candidates);
-        best
+    fn source(&self) -> Box<dyn CandidateSource> {
+        Box::new(ExhaustiveSource { remaining: self.limit, cursor: None })
+    }
+}
+
+/// Streams the enumeration cursor in batches. Enumeration already runs
+/// `admits` (the cursor only yields legal mappings), so batches are
+/// marked pre-admitted and the engine skips the duplicate legality pass.
+struct ExhaustiveSource {
+    remaining: usize,
+    cursor: Option<EnumCursor>,
+}
+
+impl CandidateSource for ExhaustiveSource {
+    fn name(&self) -> &str {
+        "exhaustive"
+    }
+
+    fn preadmitted(&self) -> bool {
+        true
+    }
+
+    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let cursor = self.cursor.get_or_insert_with(|| space.enum_cursor());
+        let take = self.remaining.min(BATCH);
+        let batch = space.enumerate_from(cursor, take);
+        if batch.is_empty() {
+            return None;
+        }
+        self.remaining -= batch.len();
+        Some(batch)
     }
 }
 
@@ -46,6 +78,7 @@ mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::mappers::{Mapper, Objective};
     use crate::mapspace::Constraints;
     use crate::problem::gemm;
 

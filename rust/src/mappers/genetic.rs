@@ -3,13 +3,18 @@
 //! with dimension-wise crossover, map-space mutation, tournament
 //! selection and elitism — "efficiently progressing by leveraging the
 //! previous results".
+//!
+//! As a [`CandidateSource`] each generation is one engine batch; the
+//! scored feedback in [`Progress::last_scored`] replaces the private
+//! evaluation loop, and re-injected elites hit the engine's memo instead
+//! of paying for re-evaluation.
 
-use crate::cost::CostModel;
+use crate::engine::{CandidateSource, Progress};
 use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
-use super::{evaluate_batch, Mapper, Objective, SearchResult};
+use super::Mapper;
 
 /// Genetic-algorithm search.
 pub struct GeneticMapper {
@@ -37,73 +42,97 @@ impl Mapper for GeneticMapper {
         "genetic"
     }
 
-    fn search_with(
-        &self,
-        space: &MapSpace,
-        model: &dyn CostModel,
-        objective: Objective,
-    ) -> Option<SearchResult> {
-        let mut rng = Rng::new(self.seed);
+    fn source(&self) -> Box<dyn CandidateSource> {
+        Box::new(GeneticSource {
+            population: self.population,
+            generations: self.generations,
+            mutation_rate: self.mutation_rate,
+            elite: self.elite,
+            rng: Rng::new(self.seed),
+            state: State::Init,
+        })
+    }
+}
 
-        // initial population
-        let init: Vec<Mapping> = (0..self.population).map(|_| space.sample(&mut rng)).collect();
-        let (mut best, mut scored) = evaluate_batch(space, model, objective, init);
-        let mut total_eval = best.as_ref().map(|b| b.evaluated).unwrap_or(0);
+enum State {
+    /// First batch: the random initial population.
+    Init,
+    /// Breeding: `gen` offspring batches emitted so far; `elites` are the
+    /// previous generation's retained champions (they survive into the
+    /// pool even if this generation regresses).
+    Evolve { gen: usize, elites: Vec<(Mapping, f64)> },
+}
+
+struct GeneticSource {
+    population: usize,
+    generations: usize,
+    mutation_rate: f64,
+    elite: usize,
+    rng: Rng,
+    state: State,
+}
+
+impl CandidateSource for GeneticSource {
+    fn name(&self) -> &str {
+        "genetic"
+    }
+
+    fn next_batch(&mut self, space: &MapSpace, progress: &Progress) -> Option<Vec<Mapping>> {
+        if matches!(self.state, State::Init) {
+            let init: Vec<Mapping> =
+                (0..self.population).map(|_| space.sample(&mut self.rng)).collect();
+            self.state = State::Evolve { gen: 0, elites: Vec::new() };
+            return Some(init);
+        }
+
+        let (gen, prev_elites) = match &self.state {
+            State::Evolve { gen, elites } => (*gen, elites.clone()),
+            State::Init => unreachable!("init handled above"),
+        };
+        if gen >= self.generations {
+            return None;
+        }
+        // survivors = this batch's scored feedback + previous elite
+        let mut scored: Vec<(Mapping, f64)> = progress.last_scored.to_vec();
+        scored.extend(prev_elites);
         if scored.is_empty() {
-            return best;
+            return None;
         }
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        scored.truncate(self.population.max(self.elite));
+        let parents = &scored;
 
-        for _gen in 0..self.generations {
-            scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            scored.truncate(self.population.max(self.elite));
-            let parents = &scored;
-
-            let mut next: Vec<Mapping> = parents
-                .iter()
-                .take(self.elite)
-                .map(|(m, _)| m.clone())
-                .collect();
-            while next.len() < self.population {
-                // tournament selection (size 3)
-                let pick = |rng: &mut Rng| {
-                    let mut best_i = rng.below(parents.len());
-                    for _ in 0..2 {
-                        let j = rng.below(parents.len());
-                        if parents[j].1 < parents[best_i].1 {
-                            best_i = j;
-                        }
+        let mut next: Vec<Mapping> = parents
+            .iter()
+            .take(self.elite)
+            .map(|(m, _)| m.clone())
+            .collect();
+        while next.len() < self.population {
+            // tournament selection (size 3)
+            let pick = |rng: &mut Rng| {
+                let mut best_i = rng.below(parents.len());
+                for _ in 0..2 {
+                    let j = rng.below(parents.len());
+                    if parents[j].1 < parents[best_i].1 {
+                        best_i = j;
                     }
-                    &parents[best_i].0
-                };
-                let pa = pick(&mut rng).clone();
-                let pb = pick(&mut rng).clone();
-                let mut child = space.crossover(&pa, &pb, &mut rng);
-                if rng.chance(self.mutation_rate) {
-                    child = space.mutate(&child, &mut rng);
                 }
-                next.push(child);
+                &parents[best_i].0
+            };
+            let pa = pick(&mut self.rng).clone();
+            let pb = pick(&mut self.rng).clone();
+            let mut child = space.crossover(&pa, &pb, &mut self.rng);
+            if self.rng.chance(self.mutation_rate) {
+                child = space.mutate(&child, &mut self.rng);
             }
+            next.push(child);
+        }
 
-            let (gen_best, gen_scored) = evaluate_batch(space, model, objective, next);
-            total_eval += gen_best.as_ref().map(|b| b.evaluated).unwrap_or(0);
-            if let Some(gb) = gen_best {
-                let improves = best.as_ref().map(|b| gb.score < b.score).unwrap_or(true);
-                if improves {
-                    best = Some(gb);
-                }
-            }
-            // survivors = previous elite + this generation's evaluations
-            let mut pool = gen_scored;
-            pool.extend(scored.iter().take(self.elite).cloned());
-            if pool.is_empty() {
-                break;
-            }
-            scored = pool;
-        }
-        if let Some(b) = &mut best {
-            b.evaluated = total_eval;
-        }
-        best
+        self.state = State::Evolve {
+            gen: gen + 1,
+            elites: scored.into_iter().take(self.elite).collect(),
+        };
+        Some(next)
     }
 }
 

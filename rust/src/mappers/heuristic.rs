@@ -4,14 +4,23 @@
 //! Strategy: (1) seed with samples biased toward maximum PE utilization —
 //! the dominant first-order effect the Fig. 10 study shows ("EDP gets
 //! saturated once it maximizes the PE utilization"); (2) hill-climb from
-//! the best seeds with the map-space mutation operator until no
-//! improvement for `patience` rounds.
+//! the engine's incumbent with the map-space mutation operator until no
+//! improvement for `patience` rounds. As a [`CandidateSource`] the climb
+//! phase reads the incumbent from [`Progress`], so inside a portfolio
+//! engine it refines whatever the best mapping found so far is — not
+//! just its own seeds.
 
-use crate::cost::CostModel;
+use crate::engine::{CandidateSource, Progress};
+use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
-use super::{evaluate_batch, Mapper, Objective, SearchResult};
+use super::Mapper;
+
+/// Mutants proposed per climb round.
+const MUTANTS_PER_ROUND: usize = 16;
+/// Seed candidates retained into evaluation.
+const KEPT_SEEDS: usize = 8;
 
 /// Greedy utilization-first search with hill climbing.
 pub struct HeuristicMapper {
@@ -32,62 +41,85 @@ impl Mapper for HeuristicMapper {
         "heuristic"
     }
 
-    fn search_with(
-        &self,
-        space: &MapSpace,
-        model: &dyn CostModel,
-        objective: Objective,
-    ) -> Option<SearchResult> {
-        let mut rng = Rng::new(self.seed);
+    fn source(&self) -> Box<dyn CandidateSource> {
+        Box::new(HeuristicSource {
+            seeds: self.seeds,
+            climb_rounds: self.climb_rounds,
+            patience: self.patience,
+            rng: Rng::new(self.seed),
+            state: State::Seed,
+        })
+    }
+}
 
-        // phase 1: draw utilization-biased seeds, keep the best
-        let mut seeds: Vec<(crate::mapping::Mapping, f64)> = Vec::new();
-        for i in 0..self.seeds {
-            // mix greedy-spatial and uniform draws for diversity
-            let greedy = if i % 3 == 0 { 0.0 } else { 0.7 };
-            let m = space.sample_with_bias(&mut rng, greedy);
-            if space.admits(&m) {
-                let u = m.utilization(space.arch);
-                seeds.push((m, u));
+enum State {
+    /// First batch: utilization-biased seeds.
+    Seed,
+    /// Subsequent batches: mutants of the incumbent.
+    Climb { round: usize, stale: usize, last_best: Option<f64> },
+}
+
+struct HeuristicSource {
+    seeds: usize,
+    climb_rounds: usize,
+    patience: usize,
+    rng: Rng,
+    state: State,
+}
+
+impl CandidateSource for HeuristicSource {
+    fn name(&self) -> &str {
+        "heuristic"
+    }
+
+    fn next_batch(&mut self, space: &MapSpace, progress: &Progress) -> Option<Vec<Mapping>> {
+        if matches!(self.state, State::Seed) {
+            // phase 1: draw utilization-biased seeds, keep the best
+            let mut seeds: Vec<(Mapping, f64)> = Vec::new();
+            for i in 0..self.seeds {
+                // mix greedy-spatial and uniform draws for diversity
+                let greedy = if i % 3 == 0 { 0.0 } else { 0.7 };
+                let m = space.sample_with_bias(&mut self.rng, greedy);
+                if space.admits(&m) {
+                    let u = m.utilization(space.arch);
+                    seeds.push((m, u));
+                }
+            }
+            self.state = State::Climb { round: 0, stale: 0, last_best: None };
+            if seeds.is_empty() {
+                return None;
+            }
+            seeds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            seeds.truncate(KEPT_SEEDS);
+            return Some(seeds.into_iter().map(|(m, _)| m).collect());
+        }
+
+        // phase 2: hill climb via mutation of the incumbent
+        let (best_mapping, best_score) = progress.best?;
+        let base = best_mapping.clone();
+        let State::Climb { round, stale, last_best } = &mut self.state else {
+            unreachable!("seed phase handled above");
+        };
+        if let Some(prev) = *last_best {
+            if best_score < prev {
+                *stale = 0;
+            } else {
+                *stale += 1;
+                if *stale >= self.patience {
+                    return None;
+                }
             }
         }
-        if seeds.is_empty() {
+        if *round >= self.climb_rounds {
             return None;
         }
-        seeds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        seeds.truncate(8);
-        let (mut best, _) = evaluate_batch(
-            space,
-            model,
-            objective,
-            seeds.into_iter().map(|(m, _)| m).collect(),
-        );
-        let mut total_evaluated = best.as_ref().map(|b| b.evaluated).unwrap_or(0);
-
-        // phase 2: hill climb via mutation
-        let mut stale = 0usize;
-        for _ in 0..self.climb_rounds {
-            let Some(cur) = &best else { break };
-            let mutants: Vec<_> = (0..16).map(|_| space.mutate(&cur.mapping, &mut rng)).collect();
-            let (cand, _) = evaluate_batch(space, model, objective, mutants);
-            total_evaluated += cand.as_ref().map(|c| c.evaluated).unwrap_or(0);
-            match cand {
-                Some(c) if c.score < cur.score => {
-                    best = Some(c);
-                    stale = 0;
-                }
-                _ => {
-                    stale += 1;
-                    if stale >= self.patience {
-                        break;
-                    }
-                }
-            }
-        }
-        if let Some(b) = &mut best {
-            b.evaluated = total_evaluated;
-        }
-        best
+        *round += 1;
+        *last_best = Some(best_score);
+        Some(
+            (0..MUTANTS_PER_ROUND)
+                .map(|_| space.mutate(&base, &mut self.rng))
+                .collect(),
+        )
     }
 }
 

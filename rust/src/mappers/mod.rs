@@ -13,6 +13,12 @@
 //! * [`GeneticMapper`] — GAMMA-style genetic algorithm (crossover over
 //!   per-dimension tiling genes, mutation, elitism).
 //!
+//! A mapper no longer owns a search loop: it exposes a
+//! [`CandidateSource`] (its proposal strategy) and the shared
+//! [`Engine`](crate::engine::Engine) owns evaluation — batching,
+//! memoization, lower-bound pruning and parallelism — so every mapper
+//! gets the whole hot-path treatment for free.
+//!
 //! All mappers optimize a configurable [`Objective`] (EDP by default,
 //! matching the paper's case studies).
 
@@ -28,7 +34,8 @@ pub use genetic::GeneticMapper;
 pub use heuristic::HeuristicMapper;
 pub use random::RandomMapper;
 
-use crate::cost::{CostEstimate, CostModel};
+use crate::cost::{CostBound, CostEstimate, CostModel};
+use crate::engine::{CandidateSource, Engine};
 use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
 
@@ -51,6 +58,16 @@ impl Objective {
         }
     }
 
+    /// Score a [`CostBound`] the same way: since every bound field is a
+    /// lower bound, the bound's score is a lower bound on the score.
+    pub fn score_bound(&self, b: &CostBound) -> f64 {
+        match self {
+            Objective::Latency => b.latency_s(),
+            Objective::Energy => b.energy_j(),
+            Objective::Edp => b.edp(),
+        }
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Objective::Latency => "latency",
@@ -65,66 +82,38 @@ impl Objective {
 pub struct SearchResult {
     pub mapping: Mapping,
     pub cost: CostEstimate,
-    /// Mappings evaluated during the search.
+    /// Mappings scored during the search (fresh evaluations + memo hits).
     pub evaluated: usize,
     /// Objective value of `mapping`.
     pub score: f64,
 }
 
 /// A mapper searches a map space for a good mapping under a cost model.
+///
+/// Concrete mappers implement [`Mapper::source`]; `search_with` is
+/// provided and routes every mapper through the shared batched
+/// [`Engine`].
 pub trait Mapper {
     fn name(&self) -> &str;
 
-    /// Search with an explicit objective.
+    /// The mapper's proposal strategy for the batched engine.
+    fn source(&self) -> Box<dyn CandidateSource>;
+
+    /// Search with an explicit objective (through the engine).
     fn search_with(
         &self,
         space: &MapSpace,
         model: &dyn CostModel,
         objective: Objective,
-    ) -> Option<SearchResult>;
+    ) -> Option<SearchResult> {
+        let mut engine = Engine::new(space, model, objective);
+        engine.run(self.source().as_mut())
+    }
 
     /// Search minimizing EDP (the paper's default metric).
     fn search(&self, space: &MapSpace, model: &dyn CostModel) -> Option<SearchResult> {
         self.search_with(space, model, Objective::Edp)
     }
-}
-
-/// Evaluate a batch of candidate mappings in parallel and fold the best.
-/// Shared by the concrete mappers.
-pub(crate) fn evaluate_batch(
-    space: &MapSpace,
-    model: &dyn CostModel,
-    objective: Objective,
-    candidates: Vec<Mapping>,
-) -> (Option<SearchResult>, Vec<(Mapping, f64)>) {
-    let scored: Vec<Option<(Mapping, CostEstimate, f64)>> = crate::util::par::par_map(
-        candidates,
-        |m| -> Option<(Mapping, CostEstimate, f64)> {
-            if !space.admits(m) {
-                return None;
-            }
-            // admits() already ran the full legality rules
-            let est = model.evaluate_prechecked(space.problem, space.arch, m).ok()?;
-            let score = objective.score(&est);
-            Some((m.clone(), est, score))
-        },
-    );
-    let mut best: Option<SearchResult> = None;
-    let mut all = Vec::new();
-    let mut evaluated = 0usize;
-    for item in scored.into_iter().flatten() {
-        evaluated += 1;
-        let (m, est, score) = item;
-        all.push((m.clone(), score));
-        let better = best.as_ref().map(|b| score < b.score).unwrap_or(true);
-        if better {
-            best = Some(SearchResult { mapping: m, cost: est, evaluated: 0, score });
-        }
-    }
-    if let Some(b) = &mut best {
-        b.evaluated = evaluated;
-    }
-    (best, all)
 }
 
 #[cfg(test)]
@@ -157,7 +146,24 @@ mod tests {
     }
 
     #[test]
-    fn evaluate_batch_finds_best() {
+    fn bound_scoring_matches_estimate_scoring() {
+        let b = CostBound { cycles: 1e6, energy_pj: 1e9, clock_ghz: 1.0 };
+        let e = CostEstimate {
+            cycles: 1e6,
+            energy_pj: 1e9,
+            utilization: 1.0,
+            macs: 1,
+            levels: vec![],
+            interconnect_pj: 0.0,
+            clock_ghz: 1.0,
+        };
+        for o in [Objective::Latency, Objective::Energy, Objective::Edp] {
+            assert!((o.score_bound(&b) - o.score(&e)).abs() < 1e-18);
+        }
+    }
+
+    #[test]
+    fn engine_batch_evaluation_finds_best() {
         let p = gemm(8, 8, 8);
         let a = presets::fig5_toy();
         let c = Constraints::default();
@@ -166,9 +172,10 @@ mod tests {
         let candidates = space.enumerate(200);
         let n = candidates.len();
         assert!(n > 1);
-        let (best, all) = evaluate_batch(&space, &model, Objective::Edp, candidates);
-        let best = best.unwrap();
-        assert_eq!(best.evaluated, n);
+        let mut engine = Engine::new(&space, &model, Objective::Edp);
+        let all = engine.evaluate(candidates);
+        let best = engine.result().unwrap();
+        assert_eq!(best.evaluated, engine.stats().scored);
         assert!(all.iter().all(|(_, s)| *s >= best.score));
     }
 }

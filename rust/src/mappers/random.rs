@@ -1,12 +1,18 @@
 //! Random-sampling mapper (the search strategy Timeloop ships, §II-C.3):
-//! draw N random candidates from the map space, evaluate in parallel,
-//! keep the best.
+//! draw N random candidates from the map space, evaluate through the
+//! batched engine, keep the best.
 
-use crate::cost::CostModel;
+use crate::engine::{CandidateSource, Progress};
+use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
-use super::{evaluate_batch, Mapper, Objective, SearchResult};
+use super::Mapper;
+
+/// Candidates per engine batch. Large enough to amortize the parallel
+/// dispatch, small enough that lower-bound pruning gets a fresh
+/// incumbent several times per search.
+const BATCH: usize = 1024;
 
 /// Random-sampling search.
 pub struct RandomMapper {
@@ -25,23 +31,42 @@ impl Mapper for RandomMapper {
         "random"
     }
 
-    fn search_with(
-        &self,
-        space: &MapSpace,
-        model: &dyn CostModel,
-        objective: Objective,
-    ) -> Option<SearchResult> {
-        // draw candidates in parallel with per-candidate split seeds —
-        // sampling is ~half the wall time of a search otherwise
-        // (EXPERIMENTS.md §Perf iteration 3)
-        let mut rng = Rng::new(self.seed);
-        let seeds: Vec<u64> = (0..self.samples).map(|_| rng.next_u64()).collect();
-        let candidates = crate::util::par::par_map(seeds, |&s| {
+    fn source(&self) -> Box<dyn CandidateSource> {
+        Box::new(RandomSource {
+            seed_stream: Rng::new(self.seed),
+            remaining: self.samples,
+        })
+    }
+}
+
+/// Emits the seed-determined sample stream in batches. Per-candidate
+/// split seeds are drawn sequentially from one root stream, then the
+/// actual (expensive) map-space sampling fans out over `par_map` —
+/// sampling is ~half the wall time of a search otherwise
+/// (EXPERIMENTS.md §Perf iteration 3). The candidate stream is a pure
+/// function of the seed: batch boundaries and thread counts cannot
+/// change it.
+struct RandomSource {
+    seed_stream: Rng,
+    remaining: usize,
+}
+
+impl CandidateSource for RandomSource {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let take = self.remaining.min(BATCH);
+        self.remaining -= take;
+        let seeds: Vec<u64> = (0..take).map(|_| self.seed_stream.next_u64()).collect();
+        Some(crate::util::par::par_map(seeds, |&s| {
             let mut r = Rng::new(s);
             space.sample(&mut r)
-        });
-        let (best, _) = evaluate_batch(space, model, objective, candidates);
-        best
+        }))
     }
 }
 
@@ -88,5 +113,31 @@ mod tests {
         let model = MaestroModel::new(EnergyTable::default_8bit());
         let r = RandomMapper::new(500, 11).search(&space, &model);
         assert!(r.is_some());
+    }
+
+    #[test]
+    fn batching_does_not_change_the_candidate_stream() {
+        // the first 100 candidates of a 2000-sample stream equal the
+        // 100-sample stream: sources must not entangle batch boundaries
+        // with the seed protocol
+        let p = gemm(32, 32, 32);
+        let a = presets::edge();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let collect = |samples: usize| -> Vec<Mapping> {
+            let mapper = RandomMapper::new(samples, 19);
+            let mut src = mapper.source();
+            let mut out = Vec::new();
+            let progress = Progress { batch_index: 0, best: None, last_scored: &[] };
+            while let Some(b) = src.next_batch(&space, &progress) {
+                out.extend(b);
+            }
+            out
+        };
+        let short = collect(100);
+        let long = collect(2_000);
+        assert_eq!(short.len(), 100);
+        assert_eq!(long.len(), 2_000);
+        assert_eq!(&long[..100], &short[..]);
     }
 }

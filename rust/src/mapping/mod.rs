@@ -48,29 +48,72 @@ pub struct Mapping {
 }
 
 /// Why a mapping is illegal (paper §IV-D rules).
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+///
+/// (Hand-rolled `Display`/`Error` impls — the offline build has no
+/// `thiserror`.)
+#[derive(Debug, Clone, PartialEq)]
 pub enum IllegalMapping {
-    #[error("mapping has {got} levels, architecture has {want}")]
     LevelCount { got: usize, want: usize },
-    #[error("level {level} tile vectors have wrong dimensionality")]
     DimCount { level: usize },
-    #[error("level {level} temporal_order is not a permutation of the dims")]
     BadOrder { level: usize },
-    #[error("rule 4 (coverage): outermost temporal tile of dim {dim} is {tt}, problem needs {need}")]
     Coverage { dim: String, tt: u64, need: u64 },
-    #[error("spatial tile must divide temporal tile: level {level} dim {dim} TT={tt} ST={st}")]
     SpatialDivides { level: usize, dim: String, tt: u64, st: u64 },
-    #[error("rule 1: spatial tile of dim {dim} at level {level} ({st}) smaller than temporal tile at level {inner} ({tt_inner})")]
     Rule1 { level: usize, inner: usize, dim: String, st: u64, tt_inner: u64 },
-    #[error("inner temporal tile must divide outer spatial tile: level {level} dim {dim}")]
     TripDivides { level: usize, dim: String },
-    #[error("rule 2: parallelism {par} at level {level} exceeds {subs} sub-clusters")]
     Rule2 { level: usize, par: u64, subs: u64 },
-    #[error("rule 3: level {level} ({mem}) needs {need} B but has {cap} B")]
     Rule3 { level: usize, mem: String, need: u64, cap: u64 },
-    #[error("innermost level must not parallelize (PE is a single MAC): dim {dim}")]
     PeParallel { dim: String },
 }
+
+impl std::fmt::Display for IllegalMapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        use IllegalMapping::*;
+        match self {
+            LevelCount { got, want } => {
+                write!(f, "mapping has {got} levels, architecture has {want}")
+            }
+            DimCount { level } => {
+                write!(f, "level {level} tile vectors have wrong dimensionality")
+            }
+            BadOrder { level } => {
+                write!(f, "level {level} temporal_order is not a permutation of the dims")
+            }
+            Coverage { dim, tt, need } => write!(
+                f,
+                "rule 4 (coverage): outermost temporal tile of dim {dim} is {tt}, \
+                 problem needs {need}"
+            ),
+            SpatialDivides { level, dim, tt, st } => write!(
+                f,
+                "spatial tile must divide temporal tile: level {level} dim {dim} \
+                 TT={tt} ST={st}"
+            ),
+            Rule1 { level, inner, dim, st, tt_inner } => write!(
+                f,
+                "rule 1: spatial tile of dim {dim} at level {level} ({st}) smaller \
+                 than temporal tile at level {inner} ({tt_inner})"
+            ),
+            TripDivides { level, dim } => write!(
+                f,
+                "inner temporal tile must divide outer spatial tile: level {level} dim {dim}"
+            ),
+            Rule2 { level, par, subs } => write!(
+                f,
+                "rule 2: parallelism {par} at level {level} exceeds {subs} sub-clusters"
+            ),
+            Rule3 { level, mem, need, cap } => write!(
+                f,
+                "rule 3: level {level} ({mem}) needs {need} B but has {cap} B"
+            ),
+            PeParallel { dim } => write!(
+                f,
+                "innermost level must not parallelize (PE is a single MAC): dim {dim}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for IllegalMapping {}
 
 impl Mapping {
     /// The trivial mapping: everything temporal at the outermost level,
@@ -225,16 +268,13 @@ impl Mapping {
                     dim: problem.dims[d].name.clone(),
                 });
             }
-            // rule 3: non-virtual levels hold their temporal tiles
+            // rule 3: non-virtual levels hold their temporal tiles.
+            // (Unbounded memories always hold — skip the footprint math
+            // on the hot path; `Memory::holds` is the shared predicate.)
             if let Some(mem) = &arch.levels[i].memory {
                 if mem.size_bytes != u64::MAX {
-                    let need: u64 = problem
-                        .data_spaces
-                        .iter()
-                        .map(|ds| ds.tile_footprint(&l.temporal_tile))
-                        .sum::<u64>()
-                        * arch.word_bytes;
-                    if need > mem.size_bytes {
+                    let need = problem.tile_words(&l.temporal_tile) * arch.word_bytes;
+                    if !mem.holds(need) {
                         return Err(IllegalMapping::Rule3 {
                             level: i,
                             mem: mem.name.clone(),

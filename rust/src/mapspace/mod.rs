@@ -28,6 +28,46 @@ use crate::problem::Problem;
 use crate::util::divisors::divisors;
 use crate::util::rng::Rng;
 
+/// Resumable enumeration state for a [`MapSpace`] (see
+/// [`MapSpace::enum_cursor`]). Owns the per-dimension chain tables and
+/// the odometer position, so batches can be pulled across engine calls
+/// without recomputing the chain sets.
+pub struct EnumCursor {
+    /// Per-dimension candidate divisor chains.
+    per_dim: Vec<Vec<Vec<u64>>>,
+    /// Canonical temporal-order set.
+    orders: Vec<Vec<usize>>,
+    /// Odometer over per-dim chain choices.
+    idx: Vec<usize>,
+    /// Position within `orders` for the current tiling.
+    order_i: usize,
+    done: bool,
+}
+
+impl EnumCursor {
+    /// True once the space is exhausted.
+    pub fn exhausted(&self) -> bool {
+        self.done
+    }
+
+    fn advance_odometer(&mut self) {
+        let nd = self.idx.len();
+        let mut d = 0;
+        loop {
+            if d == nd {
+                self.done = true;
+                return;
+            }
+            self.idx[d] += 1;
+            if self.idx[d] < self.per_dim[d].len() {
+                return;
+            }
+            self.idx[d] = 0;
+            d += 1;
+        }
+    }
+}
+
 /// The map space of one (problem, architecture, constraints) triple.
 pub struct MapSpace<'a> {
     pub problem: &'a Problem,
@@ -186,18 +226,41 @@ impl<'a> MapSpace<'a> {
     /// Exhaustively enumerate legal mappings (tilings × canonical orders),
     /// stopping after `limit` mappings have been produced.
     pub fn enumerate(&self, limit: usize) -> Vec<Mapping> {
+        let mut cursor = self.enum_cursor();
+        self.enumerate_from(&mut cursor, limit)
+    }
+
+    /// Start a resumable enumeration of this space. Feed the cursor to
+    /// [`MapSpace::enumerate_from`] repeatedly to stream the space in
+    /// batches (the exhaustive mapper's candidate source does exactly
+    /// this, so the engine can interleave pruning with enumeration
+    /// instead of materializing the whole space up front).
+    pub fn enum_cursor(&self) -> EnumCursor {
         let nd = self.ndims();
         let per_dim: Vec<Vec<Vec<u64>>> = (0..nd).map(|d| self.dim_chains(d)).collect();
-        if per_dim.iter().any(|c| c.is_empty()) {
-            return Vec::new();
+        let done = per_dim.iter().any(|c| c.is_empty());
+        EnumCursor {
+            per_dim,
+            orders: self.canonical_orders(),
+            idx: vec![0usize; nd],
+            order_i: 0,
+            done,
         }
-        let orders = self.canonical_orders();
+    }
+
+    /// Produce up to `limit` further admitted mappings, advancing the
+    /// cursor. Returns an empty vector once the space is exhausted.
+    /// Concatenating the batches of any `limit` schedule reproduces
+    /// `enumerate(usize::MAX)` exactly.
+    pub fn enumerate_from(&self, cursor: &mut EnumCursor, limit: usize) -> Vec<Mapping> {
+        let nd = self.ndims();
         let mut out = Vec::new();
-        // odometer over per-dim chain choices
-        let mut idx = vec![0usize; nd];
-        'outer: loop {
-            let chains: Vec<Vec<u64>> = (0..nd).map(|d| per_dim[d][idx[d]].clone()).collect();
-            for base in &orders {
+        while !cursor.done && out.len() < limit {
+            let chains: Vec<Vec<u64>> =
+                (0..nd).map(|d| cursor.per_dim[d][cursor.idx[d]].clone()).collect();
+            while cursor.order_i < cursor.orders.len() {
+                let base = &cursor.orders[cursor.order_i];
+                cursor.order_i += 1;
                 let per_level: Vec<Vec<usize>> = (0..self.nlevels())
                     .map(|l| self.order_for_level(l, base))
                     .collect();
@@ -205,23 +268,17 @@ impl<'a> MapSpace<'a> {
                 if self.admits(&m) {
                     out.push(m);
                     if out.len() >= limit {
-                        break 'outer;
+                        // cursor already points past this (tiling, order)
+                        if cursor.order_i >= cursor.orders.len() {
+                            cursor.order_i = 0;
+                            cursor.advance_odometer();
+                        }
+                        return out;
                     }
                 }
             }
-            // advance odometer
-            let mut d = 0;
-            loop {
-                if d == nd {
-                    break 'outer;
-                }
-                idx[d] += 1;
-                if idx[d] < per_dim[d].len() {
-                    break;
-                }
-                idx[d] = 0;
-                d += 1;
-            }
+            cursor.order_i = 0;
+            cursor.advance_odometer();
         }
         out
     }
@@ -405,6 +462,30 @@ mod tests {
         for m in &maps {
             assert!(m.check(&p, &a).is_ok());
         }
+    }
+
+    #[test]
+    fn batched_enumeration_matches_one_shot() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let c = Constraints::default();
+        let space = MapSpace::new(&p, &a, &c);
+        let one_shot = space.enumerate(3_000);
+        let mut cursor = space.enum_cursor();
+        let mut batched = Vec::new();
+        // deliberately awkward batch sizes
+        for take in [1usize, 7, 64, 600, 10_000].iter().cycle() {
+            let b = space.enumerate_from(&mut cursor, *take);
+            if b.is_empty() {
+                break;
+            }
+            batched.extend(b);
+            if batched.len() >= one_shot.len() {
+                break;
+            }
+        }
+        batched.truncate(one_shot.len());
+        assert_eq!(one_shot, batched);
     }
 
     #[test]

@@ -150,6 +150,15 @@ impl Problem {
         self.dims.iter().map(|d| d.size).product()
     }
 
+    /// Words a temporal tile occupies across ALL data spaces — the
+    /// quantity rule 3 (buffer capacity) compares against a memory.
+    /// Single source of truth shared by [`crate::mapping::Mapping::check`]
+    /// and the engine's memoized capacity pre-filter, so the two can
+    /// never drift.
+    pub fn tile_words(&self, tile: &[u64]) -> u64 {
+        self.data_spaces.iter().map(|ds| ds.tile_footprint(tile)).sum()
+    }
+
     /// The output data space. Every well-formed problem has exactly one.
     pub fn output(&self) -> &DataSpace {
         self.data_spaces

@@ -1,0 +1,57 @@
+//! API-compatible runtime stub for builds without the `pjrt` feature.
+//!
+//! The offline/CI environment has neither the `xla` PJRT bindings nor
+//! `anyhow`, so this stub keeps every consumer compiling: constructors
+//! return descriptive `Err(String)`s, and since a [`Runtime`] can never
+//! be constructed, the execution methods are unreachable by
+//! construction. Callers that gate on
+//! [`super::artifacts_available`] / [`super::runtime_available`] never
+//! hit these paths.
+
+use std::path::Path;
+
+use super::RunStats;
+
+const NO_PJRT: &str = "built without the `pjrt` feature: PJRT execution is unavailable \
+                       (rebuild with `--features pjrt` inside the rust_pallas toolchain image)";
+
+/// Stub PJRT execution context; cannot be constructed.
+pub struct Runtime {
+    _unconstructible: std::convert::Infallible,
+}
+
+/// Stub compiled artifact; cannot be constructed.
+pub struct Executable {
+    pub name: String,
+    _unconstructible: std::convert::Infallible,
+}
+
+impl Runtime {
+    /// Always fails in stub builds.
+    pub fn cpu() -> Result<Runtime, String> {
+        Err(NO_PJRT.to_string())
+    }
+
+    pub fn platform(&self) -> String {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load(&self, _path: &Path) -> Result<Executable, String> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+
+    pub fn load_artifact(&self, _dir: &Path, _name: &str) -> Result<Executable, String> {
+        unreachable!("stub Runtime cannot be constructed")
+    }
+}
+
+impl Executable {
+    pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<RunStats, String> {
+        unreachable!("stub Executable cannot be constructed")
+    }
+}
+
+/// Always fails in stub builds.
+pub fn validate_artifacts(_dir: &Path) -> Result<(), String> {
+    Err(NO_PJRT.to_string())
+}

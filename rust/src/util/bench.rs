@@ -17,8 +17,10 @@ use super::stats::Summary;
 pub struct BenchReport {
     pub name: String,
     pub summary: Summary,
-    /// Optional derived throughput (items/sec) when `throughput_items` set.
+    /// Optional derived throughput (`unit`/sec) when items were counted.
     pub throughput: Option<f64>,
+    /// What the throughput counts ("items", "cand", "MACs"...).
+    pub unit: &'static str,
 }
 
 impl BenchReport {
@@ -33,7 +35,7 @@ impl BenchReport {
             s.n
         );
         if let Some(tp) = self.throughput {
-            line.push_str(&format!("  [{:.3e} items/s]", tp));
+            line.push_str(&format!("  [{:.3e} {}/s]", tp, self.unit));
         }
         println!("{line}");
     }
@@ -99,6 +101,7 @@ impl Bencher {
             name: name.to_string(),
             summary: Summary::of(&samples),
             throughput: None,
+            unit: "items",
         };
         report.print();
         self.reports.push(report);
@@ -121,6 +124,43 @@ impl Bencher {
             }
         }
         out
+    }
+
+    /// Like [`Bencher::bench`] but the closure *returns how many items it
+    /// processed*, and the report derives `unit`/sec from the measured
+    /// counts rather than a fixed constant. This is how the search-engine
+    /// benches record **candidates-evaluated/sec**: with memoization and
+    /// lower-bound pruning in play, the per-iteration candidate count is
+    /// an output of the run, not an input.
+    pub fn bench_rate<F: FnMut() -> u64>(
+        &mut self,
+        name: &str,
+        unit: &'static str,
+        mut f: F,
+    ) -> f64 {
+        let mut counts: Vec<u64> = Vec::with_capacity(self.sample_iters);
+        let count_ref = &mut counts;
+        let wrapped = || {
+            let c = f();
+            count_ref.push(c);
+            c
+        };
+        self.bench(name, wrapped);
+        let last = self.reports.last_mut().expect("bench just pushed a report");
+        last.unit = unit;
+        // bench() also runs warmups through the closure; only the timed
+        // iterations (the last sample_iters counts) pair with samples
+        let timed: &[u64] = &counts[counts.len().saturating_sub(last.summary.n)..];
+        let total_items: u64 = timed.iter().sum();
+        let total_secs = last.summary.mean * last.summary.n as f64;
+        let rate = if total_secs > 0.0 {
+            total_items as f64 / total_secs
+        } else {
+            0.0
+        };
+        last.throughput = Some(rate);
+        last.print();
+        rate
     }
 
     pub fn reports(&self) -> &[BenchReport] {
@@ -148,6 +188,19 @@ mod tests {
             std::hint::black_box((0..100).sum::<u64>())
         });
         assert!(b.reports()[0].throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rate_counts_come_from_the_closure() {
+        let mut b = Bencher::with_iters(1, 4);
+        let rate = b.bench_rate("rate", "cand", || {
+            std::hint::black_box((0..500u64).sum::<u64>());
+            250
+        });
+        assert!(rate > 0.0);
+        let r = &b.reports()[0];
+        assert_eq!(r.unit, "cand");
+        assert_eq!(r.throughput, Some(rate));
     }
 
     #[test]

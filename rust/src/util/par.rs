@@ -1,12 +1,19 @@
 //! std-thread parallel map (rayon is unavailable offline).
 //!
-//! The mappers evaluate thousands-to-millions of candidate mappings against
-//! an analytical cost model; `par_map` chunks the candidate list across
-//! `available_parallelism()` scoped threads.
+//! The search engine evaluates thousands-to-millions of candidate
+//! mappings against an analytical cost model; [`par_map`] chunks the
+//! candidate list across `available_parallelism()` scoped threads, and
+//! [`par_map_with`] takes an explicit thread count so callers (the engine
+//! determinism tests, reproducibility studies) can pin parallelism.
+//!
+//! Results are bitwise identical regardless of thread count: chunking
+//! only partitions the index space, each output slot is written exactly
+//! once, and no cross-thread reduction reorders floating-point math.
 
-/// Parallel map over `items`, preserving order. `f` must be `Sync` and the
-/// items `Send`. Falls back to sequential for small inputs where thread
-/// spawn overhead would dominate.
+/// Parallel map over `items`, preserving order, on
+/// `available_parallelism()` threads. `f` must be `Sync` and the items
+/// `Send`. Falls back to sequential for small inputs where thread spawn
+/// overhead would dominate.
 pub fn par_map<T, U, F>(items: Vec<T>, f: F) -> Vec<U>
 where
     T: Send + Sync,
@@ -14,11 +21,31 @@ where
     F: Fn(&T) -> U + Sync,
 {
     let n = items.len();
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(n.max(1));
-    if threads <= 1 || n < 64 {
+    let threads = default_threads().min(n.max(1));
+    if n < 64 {
+        return items.iter().map(&f).collect();
+    }
+    par_map_with(items, threads, f)
+}
+
+/// The thread count [`par_map`] uses when none is requested.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Parallel map over `items` on exactly `threads` worker threads,
+/// preserving order. A worker panic is re-raised on the calling thread
+/// with its original payload, so `cargo test` reports the real assertion
+/// message instead of a generic join failure.
+pub fn par_map_with<T, U, F>(items: Vec<T>, threads: usize, f: F) -> Vec<U>
+where
+    T: Send + Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
         return items.iter().map(&f).collect();
     }
 
@@ -26,6 +53,7 @@ where
     let mut out: Vec<Option<U>> = Vec::with_capacity(n);
     out.resize_with(n, || None);
 
+    let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
     std::thread::scope(|scope| {
         let f = &f;
         // hand out disjoint (input-chunk, output-chunk) pairs to threads
@@ -44,10 +72,17 @@ where
                 }
             }));
         }
+        // join everything first so all workers are quiesced, then keep the
+        // first panic payload for propagation
         for h in handles {
-            h.join().expect("par_map worker panicked");
+            if let Err(payload) = h.join() {
+                panic_payload.get_or_insert(payload);
+            }
         }
     });
+    if let Some(payload) = panic_payload {
+        std::panic::resume_unwind(payload);
+    }
 
     out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
 }
@@ -76,5 +111,34 @@ mod tests {
     fn empty_input() {
         let out: Vec<u64> = par_map(Vec::<u64>::new(), |x| *x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn explicit_thread_counts_agree() {
+        let v: Vec<u64> = (0..5_000).collect();
+        let one = par_map_with(v.clone(), 1, |x| x * 3 + 1);
+        let many = par_map_with(v, 8, |x| x * 3 + 1);
+        assert_eq!(one, many);
+    }
+
+    #[test]
+    fn worker_panic_payload_propagates() {
+        let v: Vec<u64> = (0..1_000).collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            par_map_with(v, 4, |&x| {
+                assert!(x != 777, "sentinel candidate rejected");
+                x
+            })
+        }));
+        let payload = caught.expect_err("worker panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(
+            msg.contains("sentinel candidate rejected"),
+            "payload lost: {msg:?}"
+        );
     }
 }

@@ -1,0 +1,124 @@
+//! Engine determinism contract: same seed + same workload ⇒ identical
+//! best mapping, regardless of worker thread count, for all five
+//! mappers — and the engine's accelerations (memoization, lower-bound
+//! pruning) never change the winner.
+
+use union::arch::presets;
+use union::cost::{AnalyticalModel, CostModel, EnergyTable};
+use union::engine::{Engine, EngineConfig};
+use union::mappers::{
+    DecoupledMapper, ExhaustiveMapper, GeneticMapper, HeuristicMapper, Mapper, Objective,
+    RandomMapper, SearchResult,
+};
+use union::mapspace::{Constraints, MapSpace};
+use union::problem::gemm;
+
+fn mappers() -> Vec<(&'static str, Box<dyn Mapper>)> {
+    vec![
+        ("random", Box::new(RandomMapper::new(800, 11))),
+        ("exhaustive", Box::new(ExhaustiveMapper::new(3_000))),
+        ("genetic", Box::new(GeneticMapper::new(30, 4, 11))),
+        ("heuristic", Box::new(HeuristicMapper::new(200, 30, 11))),
+        ("decoupled", Box::new(DecoupledMapper::new(100, 30, 11))),
+    ]
+}
+
+fn search_configured(
+    mapper: &dyn Mapper,
+    space: &MapSpace,
+    model: &dyn CostModel,
+    config: EngineConfig,
+) -> Option<SearchResult> {
+    let mut engine = Engine::with_config(space, model, Objective::Edp, config);
+    engine.run(mapper.source().as_mut())
+}
+
+#[test]
+fn identical_best_mapping_at_one_and_many_threads() {
+    let p = gemm(32, 32, 32);
+    let a = presets::edge();
+    let c = Constraints::default();
+    let space = MapSpace::new(&p, &a, &c);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    for (name, mapper) in mappers() {
+        let cfg_1 = EngineConfig { threads: Some(1), ..EngineConfig::default() };
+        let cfg_n = EngineConfig { threads: Some(8), ..EngineConfig::default() };
+        let r1 = search_configured(mapper.as_ref(), &space, &model, cfg_1)
+            .unwrap_or_else(|| panic!("{name}: no result at 1 thread"));
+        let rn = search_configured(mapper.as_ref(), &space, &model, cfg_n)
+            .unwrap_or_else(|| panic!("{name}: no result at 8 threads"));
+        assert_eq!(r1.mapping, rn.mapping, "{name}: best mapping depends on thread count");
+        assert_eq!(r1.score, rn.score, "{name}: best score depends on thread count");
+        assert_eq!(r1.evaluated, rn.evaluated, "{name}: scored count depends on threads");
+    }
+}
+
+#[test]
+fn identical_best_mapping_on_repeat_runs() {
+    let p = gemm(32, 32, 32);
+    let a = presets::edge();
+    let c = Constraints::default();
+    let space = MapSpace::new(&p, &a, &c);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    for (name, mapper) in mappers() {
+        let r1 = mapper.search(&space, &model).unwrap_or_else(|| panic!("{name}: no result"));
+        let r2 = mapper.search(&space, &model).unwrap_or_else(|| panic!("{name}: no result"));
+        assert_eq!(r1.mapping, r2.mapping, "{name}: not reproducible across runs");
+        assert_eq!(r1.score, r2.score, "{name}: score not reproducible");
+    }
+}
+
+#[test]
+fn pruning_and_memoization_never_change_the_winner() {
+    // feedback-free (or incumbent-only) sources must produce the exact
+    // same winner with the accelerations on and off; the genetic source
+    // is excluded because pruning legitimately reshapes its parent pool
+    let p = gemm(32, 32, 32);
+    let a = presets::edge();
+    let c = Constraints::default();
+    let space = MapSpace::new(&p, &a, &c);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let subset: Vec<(&str, Box<dyn Mapper>)> = vec![
+        ("random", Box::new(RandomMapper::new(800, 11))),
+        ("exhaustive", Box::new(ExhaustiveMapper::new(3_000))),
+        ("heuristic", Box::new(HeuristicMapper::new(200, 30, 11))),
+        ("decoupled", Box::new(DecoupledMapper::new(100, 30, 11))),
+    ];
+    for (name, mapper) in subset {
+        let plain = EngineConfig { prune: false, memoize: false, ..EngineConfig::default() };
+        let fast = EngineConfig::default();
+        let rp = search_configured(mapper.as_ref(), &space, &model, plain)
+            .unwrap_or_else(|| panic!("{name}: no result (plain)"));
+        let rf = search_configured(mapper.as_ref(), &space, &model, fast)
+            .unwrap_or_else(|| panic!("{name}: no result (fast)"));
+        assert_eq!(rp.mapping, rf.mapping, "{name}: accelerations changed the winner");
+        assert_eq!(rp.score, rf.score, "{name}: accelerations changed the score");
+    }
+}
+
+#[test]
+fn maestro_model_is_thread_count_invariant_too() {
+    use union::cost::MaestroModel;
+    let p = gemm(32, 32, 32);
+    let a = presets::edge();
+    let c = Constraints::default();
+    let space = MapSpace::new(&p, &a, &c);
+    let model = MaestroModel::new(EnergyTable::default_8bit());
+    let mapper = RandomMapper::new(600, 23);
+    let r1 = search_configured(
+        &mapper,
+        &space,
+        &model,
+        EngineConfig { threads: Some(1), ..EngineConfig::default() },
+    )
+    .unwrap();
+    let rn = search_configured(
+        &mapper,
+        &space,
+        &model,
+        EngineConfig { threads: Some(6), ..EngineConfig::default() },
+    )
+    .unwrap();
+    assert_eq!(r1.mapping, rn.mapping);
+    assert_eq!(r1.score, rn.score);
+}

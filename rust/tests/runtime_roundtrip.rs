@@ -12,6 +12,10 @@ fn need_artifacts() -> bool {
         eprintln!("NOTE: artifacts/ not built; run `make artifacts` to enable runtime tests");
         return false;
     }
+    if !union::runtime::runtime_available() {
+        eprintln!("NOTE: built without the `pjrt` feature; skipping runtime tests");
+        return false;
+    }
     true
 }
 

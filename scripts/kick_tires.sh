@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Regenerate every paper artifact at fast effort into out/.
+#
+# Used by CI's smoke job and by reviewers: if any figure driver panics
+# or produces an empty table, this exits nonzero. `--thorough` forwards
+# the high-effort search budget (slow; not for CI).
+#
+#   scripts/kick_tires.sh [--thorough]
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+EFFORT_FLAG=""
+if [[ "${1:-}" == "--thorough" ]]; then
+    EFFORT_FLAG="--thorough"
+fi
+
+OUT=out
+mkdir -p "$OUT"
+
+echo "== building (release) =="
+cargo build --release --bin union
+
+BIN=target/release/union
+ARTIFACTS=(fig3 fig8 fig9 fig10 fig11 table3)
+
+for fig in "${ARTIFACTS[@]}"; do
+    echo "== $fig =="
+    # shellcheck disable=SC2086  # EFFORT_FLAG is intentionally word-split
+    "$BIN" casestudy "$fig" $EFFORT_FLAG | tee "$OUT/$fig.txt"
+done
+
+echo "== checking outputs =="
+status=0
+for fig in "${ARTIFACTS[@]}"; do
+    if [[ ! -s "$OUT/$fig.txt" ]]; then
+        echo "ERROR: $OUT/$fig.txt is empty" >&2
+        status=1
+    fi
+done
+
+if [[ $status -eq 0 ]]; then
+    echo "kick-tires OK: ${#ARTIFACTS[@]} artifacts regenerated in $OUT/"
+fi
+exit $status
