@@ -1,0 +1,51 @@
+//! Network-level co-design walkthrough: map the full ResNet-50 end to
+//! end on the edge and cloud accelerators, letting the orchestrator
+//! dedup the 54 layers into ~24 distinct search jobs on one engine
+//! session, then compare the end-to-end rollups.
+//!
+//! ```sh
+//! cargo run --release --example network_codesign [-- --thorough]
+//! ```
+
+use union::cost::{AnalyticalModel, EnergyTable};
+use union::experiments::Effort;
+use union::network::{NetworkOrchestrator, OrchestratorConfig};
+use union::prelude::*;
+
+fn main() {
+    let effort = if std::env::args().any(|a| a == "--thorough") {
+        Effort::Thorough
+    } else {
+        Effort::Fast
+    };
+    let graph = frontend::resnet50_full(1);
+    println!(
+        "network {}: {} layers in {} repeat-compressed nodes, {:.3e} MACs\n",
+        graph.name,
+        graph.total_layers(),
+        graph.len(),
+        graph.total_macs() as f64
+    );
+
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let constraints = Constraints::default();
+    for (label, arch) in [
+        ("edge (16x16, 256 PEs)", presets::edge()),
+        ("cloud (32x64, 2048 PEs)", presets::cloud(32, 64)),
+    ] {
+        let config = OrchestratorConfig {
+            samples: effort.samples(),
+            seed: 42,
+            ..OrchestratorConfig::default()
+        };
+        let orchestrator = NetworkOrchestrator::with_config(&arch, &model, &constraints, config);
+        match orchestrator.run(&graph) {
+            Ok(result) => {
+                println!("--- {label} ---");
+                print!("{}", result.per_layer_table().render());
+                println!("{}\n", result.summary());
+            }
+            Err(e) => println!("--- {label} --- failed: {e}\n"),
+        }
+    }
+}

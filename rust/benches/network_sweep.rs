@@ -1,0 +1,33 @@
+//! Regenerates the Table IV-style network-level co-design sweep (full
+//! ResNet-50 + the DLRM/BERT FC stacks on edge and cloud) and reports
+//! the cross-layer dedup the orchestrator achieved. The acceptance
+//! check for the network path lives here: the distinct-job count must
+//! be strictly below the layer count on ResNet-50.
+
+use union::experiments::{network_sweep, Effort};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(1, 3);
+    let (table, results) = b.bench("network_sweep(fast)", || network_sweep(Effort::Fast));
+    print!("{}", table.render());
+    for r in &results {
+        println!("{}", r.summary());
+    }
+    let resnet = results
+        .iter()
+        .find(|r| r.network == "ResNet50")
+        .expect("sweep covers ResNet-50");
+    assert!(
+        resnet.stats.distinct_jobs < resnet.stats.layers as usize,
+        "cross-layer dedup must evaluate fewer jobs ({}) than layers ({})",
+        resnet.stats.distinct_jobs,
+        resnet.stats.layers,
+    );
+    println!(
+        "resnet50 dedup: {} layers -> {} distinct jobs ({:.1}% reuse)",
+        resnet.stats.layers,
+        resnet.stats.distinct_jobs,
+        100.0 * resnet.stats.dedup_hit_rate
+    );
+}

@@ -191,6 +191,38 @@ fn main() {
             .score
     });
 
+    // --- network path: cross-layer dedup orchestrator on ResNet-50 ---
+    // 54 layers collapse to 24 distinct search jobs on one engine
+    // session; `cand/s` credits the proposals the session disposed of,
+    // and the dedup hit-rate is the layers served without a search.
+    {
+        use union::network::{NetworkOrchestrator, OrchestratorConfig};
+        let graph = frontend::resnet50_full(1);
+        let config = OrchestratorConfig { samples: 120, seed: 42, ..OrchestratorConfig::default() };
+        let orchestrator = NetworkOrchestrator::with_config(&arch, &analytical, &cons, config);
+        let mut last = None;
+        let net_rate = b.bench_rate("resnet50_network (dedup orchestrator)", "cand", || {
+            let r = orchestrator.run(&graph).expect("ResNet-50 maps on edge");
+            let proposed = r.stats.engine.proposed as u64;
+            last = Some(r);
+            proposed
+        });
+        let r = last.expect("bench ran at least once");
+        println!(
+            "resnet50 network path: {} layers -> {} distinct jobs, dedup hit-rate {:.1}% \
+             ({:.3e} cand/s; engine memo hits {})",
+            r.stats.layers,
+            r.stats.distinct_jobs,
+            100.0 * r.stats.dedup_hit_rate,
+            net_rate,
+            r.stats.engine.memo_hits,
+        );
+        assert!(
+            r.stats.distinct_jobs < r.stats.layers as usize,
+            "dedup must evaluate fewer jobs than layers"
+        );
+    }
+
     // --- frontend lowering pipeline ---
     b.bench_throughput("lower_tosa_to_affine (conv2d)", 1, || {
         frontend::resnet50_layers().remove(1).lower(false).ops.len()

@@ -126,6 +126,47 @@ pub fn parse_workload(spec: &str) -> Result<crate::frontend::Workload, String> {
     ))
 }
 
+/// Parse a network spec into a [`crate::network::WorkloadGraph`]:
+/// a zoo network name (`resnet50`, `dlrm`, `bert`, `dnn9`,
+/// `resnet50-tableiv`), or a `+`-separated list of workload specs
+/// (`gemm:8x8x8+DLRM-1+conv:...`). `batch` is the batch size for
+/// parametric networks (`resnet50`).
+pub fn parse_network(spec: &str, batch: u64) -> Result<crate::network::WorkloadGraph, String> {
+    use crate::frontend::{bert_layers, dlrm_layers, dnn_workloads, resnet50_full, resnet50_layers};
+    use crate::network::WorkloadGraph;
+    if batch == 0 {
+        return Err("--batch must be >= 1".into());
+    }
+    if spec == "resnet50" {
+        return Ok(resnet50_full(batch));
+    }
+    // every other spec has fixed layer shapes (Table IV batches or
+    // explicit workload dims) — reject --batch rather than silently
+    // ignoring it
+    if batch != 1 {
+        return Err(format!(
+            "network '{spec}' has fixed layer shapes; --batch only applies to resnet50"
+        ));
+    }
+    match spec {
+        "resnet50-tableiv" => return Ok(resnet50_layers()),
+        "dlrm" => return Ok(dlrm_layers()),
+        "bert" => return Ok(bert_layers()),
+        "dnn9" => return Ok(dnn_workloads()),
+        _ => {}
+    }
+    let mut graph = WorkloadGraph::new(spec);
+    for part in spec.split('+') {
+        graph.add(parse_workload(part).map_err(|e| {
+            format!(
+                "network '{spec}': {e} (networks: resnet50, resnet50-tableiv, dlrm, bert, dnn9, \
+                 or workload specs joined with '+')"
+            )
+        })?);
+    }
+    Ok(graph)
+}
+
 /// Parse arch specs: `edge`, `edge:RxC`, `cloud:RxC`, `chiplet:FILLBW`,
 /// `fig5`, or a `.uarch` file path.
 pub fn parse_arch(spec: &str) -> Result<crate::arch::Arch, String> {
@@ -206,6 +247,24 @@ mod tests {
         assert_eq!(t.macs(), 16u64.pow(5));
         assert!(parse_workload("nope").is_err());
         assert!(parse_workload("gemm:8x16").is_err());
+    }
+
+    #[test]
+    fn network_specs() {
+        let r = parse_network("resnet50", 1).unwrap();
+        assert_eq!(r.total_layers(), 54);
+        let r4 = parse_network("resnet50", 4).unwrap();
+        assert_eq!(r4.total_macs(), 4 * r.total_macs());
+        assert_eq!(parse_network("dlrm", 1).unwrap().len(), 3);
+        assert_eq!(parse_network("dnn9", 1).unwrap().len(), 9);
+        let custom = parse_network("gemm:8x8x8+DLRM-1", 1).unwrap();
+        assert_eq!(custom.len(), 2);
+        assert_eq!(custom[1].name, "DLRM-1");
+        assert!(parse_network("nonsense", 1).is_err());
+        // --batch is rejected where it would be silently ignored
+        assert!(parse_network("dlrm", 8).is_err());
+        assert!(parse_network("gemm:8x8x8", 2).is_err());
+        assert!(parse_network("resnet50", 0).is_err());
     }
 
     #[test]

@@ -39,6 +39,14 @@ impl FootprintMemo {
         FootprintMemo::default()
     }
 
+    /// Drop every cached footprint but keep the allocation and the
+    /// cumulative hit/miss counters. Cached footprints are only valid
+    /// for one problem's dims and data spaces, so a multi-job engine
+    /// session resets the memo when it moves to the next problem.
+    pub fn reset(&mut self) {
+        self.map.clear();
+    }
+
     /// Cached [`Problem::tile_words`] — the rule-3 quantity.
     pub fn total_words(&mut self, problem: &Problem, tt: &[u64]) -> u64 {
         if let Some(&w) = self.map.get(tt) {

@@ -52,6 +52,14 @@ impl EvalMemo {
         self.map.insert(m, e);
     }
 
+    /// Drop every entry but keep the table's allocated capacity. A
+    /// multi-job [`Session`](super::Session) calls this between jobs:
+    /// entries are only valid for the problem they were scored against,
+    /// but the backing allocation is reusable across the whole run.
+    pub fn reset(&mut self) {
+        self.map.clear();
+    }
+
     #[cfg(test)]
     pub fn len(&self) -> usize {
         self.map.len()

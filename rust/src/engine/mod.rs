@@ -34,6 +34,9 @@
 //! for all five mappers at 1 and N threads.
 
 mod memo;
+mod session;
+
+pub use session::Session;
 
 use crate::cost::{CostEstimate, CostModel, FootprintMemo};
 use crate::mappers::{Objective, SearchResult};
@@ -97,6 +100,20 @@ pub struct EngineStats {
     /// Candidates rejected as inadmissible (pre-filter, legality or
     /// evaluation error).
     pub rejected: usize,
+}
+
+impl EngineStats {
+    /// Fold another stats block into this one (a [`Session`] aggregates
+    /// per-job engine stats into run totals this way).
+    pub fn absorb(&mut self, other: &EngineStats) {
+        self.batches += other.batches;
+        self.proposed += other.proposed;
+        self.scored += other.scored;
+        self.cost_evals += other.cost_evals;
+        self.memo_hits += other.memo_hits;
+        self.pruned += other.pruned;
+        self.rejected += other.rejected;
+    }
 }
 
 /// What the engine tells a source before asking for the next batch.
@@ -184,6 +201,37 @@ impl<'a> Engine<'a> {
             stats: EngineStats::default(),
             incumbent: None,
         }
+    }
+
+    /// Build an engine for one job of a multi-job [`Session`], adopting
+    /// previously-allocated memo state. The caller is responsible for
+    /// having `reset` the memos if they carry entries from a different
+    /// problem (entries are only valid for the problem they were scored
+    /// against).
+    pub(crate) fn from_parts(
+        space: &'a MapSpace<'a>,
+        model: &'a dyn CostModel,
+        objective: Objective,
+        config: EngineConfig,
+        memo: EvalMemo,
+        tiles: FootprintMemo,
+    ) -> Self {
+        Engine {
+            space,
+            model,
+            objective,
+            config,
+            memo,
+            tiles,
+            stats: EngineStats::default(),
+            incumbent: None,
+        }
+    }
+
+    /// Tear the engine down into its reusable memo state plus the stats
+    /// it accumulated — the inverse of [`Engine::from_parts`].
+    pub(crate) fn into_parts(self) -> (EvalMemo, FootprintMemo, EngineStats) {
+        (self.memo, self.tiles, self.stats)
     }
 
     pub fn objective(&self) -> Objective {

@@ -1,0 +1,173 @@
+//! Multi-job search **sessions**: the engine API for network-level
+//! co-design.
+//!
+//! An [`Engine`](super::Engine) is scoped to one `(problem, arch,
+//! constraints)` map space. Evaluating a whole workload graph (every
+//! layer of ResNet-50, say) means many such jobs back to back, and
+//! before this module each caller rebuilt the engine — and its memo
+//! tables — from scratch per job. A [`Session`] makes the multi-job
+//! shape explicit: it owns the evaluation memo and footprint memo
+//! *allocations*, the engine configuration (thread budget, pruning,
+//! memo capacity) and the aggregate statistics, and hands them to a
+//! job-scoped engine for each [`Session::run_job`] call.
+//!
+//! Memo *entries* are only meaningful for the problem they were scored
+//! against, so the session resets both tables between jobs — what is
+//! shared is the warmed allocation, the thread policy and the stats
+//! stream, not stale scores. Within one job, sources run in sequence on
+//! the same engine (the portfolio pattern): later sources prune against
+//! and refine the incumbent the earlier ones established.
+//!
+//! Determinism: a session adds no cross-job coupling beyond allocation
+//! reuse, so the per-job engine determinism contract (identical results
+//! at 1 and N threads; see `tests/engine_determinism.rs`) lifts to
+//! whole sessions unchanged.
+
+use crate::cost::{CostModel, FootprintMemo};
+use crate::mappers::{Objective, SearchResult};
+use crate::mapspace::MapSpace;
+
+use super::memo::EvalMemo;
+use super::{CandidateSource, Engine, EngineConfig, EngineStats};
+
+/// A multi-job engine session. See the module docs.
+pub struct Session<'m> {
+    model: &'m dyn CostModel,
+    objective: Objective,
+    config: EngineConfig,
+    memo: EvalMemo,
+    tiles: FootprintMemo,
+    totals: EngineStats,
+    jobs: usize,
+}
+
+impl<'m> Session<'m> {
+    pub fn new(model: &'m dyn CostModel, objective: Objective) -> Self {
+        Self::with_config(model, objective, EngineConfig::default())
+    }
+
+    pub fn with_config(
+        model: &'m dyn CostModel,
+        objective: Objective,
+        config: EngineConfig,
+    ) -> Self {
+        let memo = EvalMemo::new(config.memo_capacity);
+        Session {
+            model,
+            objective,
+            config,
+            memo,
+            tiles: FootprintMemo::new(),
+            totals: EngineStats::default(),
+            jobs: 0,
+        }
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Number of jobs run so far.
+    pub fn jobs_run(&self) -> usize {
+        self.jobs
+    }
+
+    /// Aggregate engine statistics across every job of the session.
+    pub fn totals(&self) -> &EngineStats {
+        &self.totals
+    }
+
+    /// Run one search job: drain each source in turn on a job-scoped
+    /// engine that adopts the session's memo allocations and config,
+    /// then return the job's best result and its own stats (also folded
+    /// into [`Session::totals`]).
+    pub fn run_job(
+        &mut self,
+        space: &MapSpace,
+        sources: &mut [Box<dyn CandidateSource>],
+    ) -> (Option<SearchResult>, EngineStats) {
+        let mut memo = std::mem::take(&mut self.memo);
+        memo.reset();
+        let mut tiles = std::mem::take(&mut self.tiles);
+        tiles.reset();
+        let mut engine = Engine::from_parts(
+            space,
+            self.model,
+            self.objective,
+            self.config.clone(),
+            memo,
+            tiles,
+        );
+        for source in sources.iter_mut() {
+            engine.run(source.as_mut());
+        }
+        let result = engine.result();
+        let (memo, tiles, stats) = engine.into_parts();
+        self.memo = memo;
+        self.tiles = tiles;
+        self.totals.absorb(&stats);
+        self.jobs += 1;
+        (result, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::mappers::{portfolio_sources, Mapper, RandomMapper};
+    use crate::mapspace::Constraints;
+    use crate::problem::gemm;
+
+    #[test]
+    fn session_matches_fresh_engines_per_job() {
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let problems = [gemm(32, 32, 32), gemm(64, 16, 8), gemm(32, 32, 32)];
+
+        let mut session = Session::new(&model, Objective::Edp);
+        let mut session_results = Vec::new();
+        for p in &problems {
+            let space = MapSpace::new(p, &arch, &cons);
+            let mut sources = vec![RandomMapper::new(400, 9).source()];
+            let (r, stats) = session.run_job(&space, &mut sources);
+            assert!(stats.scored > 0);
+            session_results.push(r.expect("job finds a mapping"));
+        }
+        assert_eq!(session.jobs_run(), 3);
+        assert_eq!(
+            session.totals().scored,
+            session_results.iter().map(|r| r.evaluated).sum::<usize>()
+        );
+
+        // allocation reuse must not leak scores across problems: each
+        // job's winner equals a fresh single-job engine's winner
+        for (p, got) in problems.iter().zip(&session_results) {
+            let space = MapSpace::new(p, &arch, &cons);
+            let fresh = RandomMapper::new(400, 9)
+                .search(&space, &model)
+                .expect("fresh search finds a mapping");
+            assert_eq!(got.mapping, fresh.mapping, "{}", p.name);
+            assert_eq!(got.score, fresh.score, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn portfolio_sources_run_in_sequence_on_one_engine() {
+        let p = gemm(32, 32, 32);
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let mut session = Session::new(&model, Objective::Edp);
+        let (r, stats) = session.run_job(&space, &mut portfolio_sources(400, 11));
+        let r = r.expect("portfolio finds a mapping");
+        // the random phase alone scores 400-ish candidates; the heuristic
+        // phase adds its seeds and climb mutants on the same engine
+        assert!(stats.scored > 0);
+        assert!(stats.batches >= 2, "both phases must reach the engine");
+        assert!(r.score.is_finite());
+    }
+}

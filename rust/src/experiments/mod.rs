@@ -10,37 +10,77 @@
 //! | Fig. 10 (EDP vs aspect ratio, flexible)   | [`fig10_aspect_ratio`] |
 //! | Fig. 11 (EDP vs fill bandwidth, chiplets) | [`fig11_chiplet_bandwidth`] |
 //! | Table III (TTGT GEMM dims)                | [`table3_ttgt_dims`] |
+//! | Table IV-style network sweep              | [`network_sweep`] |
 
-use crate::arch::presets;
+use crate::arch::{presets, Arch};
 use crate::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
-use crate::engine::Engine;
+use crate::engine::Session;
 use crate::frontend::{self, ttgt_gemm, Workload};
-use crate::mappers::{HeuristicMapper, Mapper, Objective, RandomMapper, SearchResult};
+use crate::mappers::{portfolio_sources, Objective, SearchResult};
 use crate::mapping::render_loop_nest;
 use crate::mapspace::{Constraints, MapSpace};
+use crate::network::{NetworkOrchestrator, NetworkResult, OrchestratorConfig};
 use crate::report::{normalize_to_min, Table};
 use crate::util::rng::Rng;
 
-/// Search effort knob for the drivers (benches use `fast`, examples can
-/// afford `thorough`).
+/// Search effort knob for the drivers (benches and CI smoke use `fast`,
+/// examples can afford `thorough`, and anything can pin an explicit
+/// per-job candidate budget with `Custom`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Effort {
     Fast,
     Thorough,
+    /// Explicit per-job candidate budget (overrides the presets).
+    Custom(usize),
 }
 
 impl Effort {
-    fn samples(&self) -> usize {
+    /// Candidate budget per search job. The `Fast`/`Thorough` presets
+    /// can be overridden without a code edit via the
+    /// `UNION_FAST_SAMPLES` / `UNION_THOROUGH_SAMPLES` environment
+    /// variables, so CI smoke runs and local thorough runs stop
+    /// diverging by edit.
+    pub fn samples(&self) -> usize {
         match self {
-            Effort::Fast => 600,
-            Effort::Thorough => 4_000,
+            Effort::Fast => env_samples("UNION_FAST_SAMPLES", 600),
+            Effort::Thorough => env_samples("UNION_THOROUGH_SAMPLES", 4_000),
+            Effort::Custom(n) => (*n).max(1),
+        }
+    }
+
+    /// Parse a CLI effort spec: `fast`, `thorough`, or an explicit
+    /// sample count.
+    pub fn from_flag(s: &str) -> Result<Effort, String> {
+        match s {
+            "fast" => Ok(Effort::Fast),
+            "thorough" => Ok(Effort::Thorough),
+            other => other
+                .trim()
+                .parse::<usize>()
+                .map(Effort::Custom)
+                .map_err(|_| {
+                    format!("unknown effort '{other}' (fast, thorough, or a sample count)")
+                }),
         }
     }
 }
 
+fn env_samples(var: &str, default: usize) -> usize {
+    parse_samples_override(std::env::var(var).ok().as_deref(), default)
+}
+
+/// The pure part of the env-var override: a positive integer replaces
+/// the default; anything else (unset, garbage, zero) keeps it.
+pub fn parse_samples_override(value: Option<&str>, default: usize) -> usize {
+    value
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
 /// Run the standard two-mapper portfolio (random sampling + heuristic,
-/// §V-A uses "a mapper based on both heuristic and random sampling") on
-/// ONE shared [`Engine`]: the heuristic phase prunes against (and
+/// §V-A uses "a mapper based on both heuristic and random sampling") as
+/// ONE [`Session`] job: the heuristic phase prunes against (and
 /// hill-climbs from) the incumbent the random phase established, and
 /// candidates the two strategies both propose resolve from the shared
 /// memo instead of being evaluated twice.
@@ -50,14 +90,9 @@ pub fn portfolio_search(
     effort: Effort,
     seed: u64,
 ) -> Option<SearchResult> {
-    let mut engine = Engine::new(space, model, Objective::Edp);
-    engine.run(RandomMapper::new(effort.samples(), seed).source().as_mut());
-    engine.run(
-        HeuristicMapper::new(effort.samples() / 2, 60, seed ^ 0xABCD)
-            .source()
-            .as_mut(),
-    );
-    engine.result()
+    let mut session = Session::new(model, Objective::Edp);
+    let (result, _) = session.run_job(space, &mut portfolio_sources(effort.samples(), seed));
+    result
 }
 
 // ---------------------------------------------------------------------
@@ -78,10 +113,9 @@ pub fn fig3_mapping_sweep(effort: Effort) -> (Table, Vec<(f64, f64, f64)>) {
 
     // a diverse sample of legal mappings
     let mut rng = Rng::new(2021);
-    let want = match effort {
-        Effort::Fast => 12,
-        Effort::Thorough => 24,
-    };
+    // pick count follows the search budget, so an explicit
+    // `Effort::Custom` at thorough-scale samples gets the full figure
+    let want = if effort.samples() >= 2_000 { 24 } else { 12 };
     let mut picks: Vec<(String, f64, f64, f64)> = Vec::new();
     let mut seen_partitions: Vec<String> = Vec::new();
     let mut tries = 0;
@@ -251,7 +285,7 @@ pub type Fig10Series = Vec<(String, Vec<(String, f64)>)>;
 pub fn fig10_aspect_ratio(effort: Effort) -> (Table, Table, Fig10Series) {
     let model = MaestroModel::new(EnergyTable::default_8bit());
     let cons = Constraints::default();
-    let workloads = frontend::dnn_workloads();
+    let workloads = frontend::dnn_workloads().workloads();
     let mut series: Fig10Series = Vec::new();
 
     let mut edge_table = Table::new(
@@ -330,7 +364,7 @@ pub fn fig11_chiplet_bandwidth(effort: Effort) -> (Table, Fig10Series) {
     let cons = Constraints::memory_target_style();
     // representative subset across the three model families
     let workloads: Vec<Workload> = {
-        let mut v = frontend::resnet50_layers();
+        let mut v = frontend::resnet50_layers().workloads();
         v.push(frontend::dlrm_layers().remove(0));
         v.push(frontend::bert_layers().remove(0));
         v
@@ -403,6 +437,76 @@ pub fn table3_ttgt_dims() -> Table {
     t
 }
 
+// ---------------------------------------------------------------------
+// Table IV-style network sweep
+// ---------------------------------------------------------------------
+
+/// Network-level co-design sweep in the spirit of Table IV: map whole
+/// workload graphs (the full ResNet-50, the DLRM and BERT FC stacks)
+/// end to end on the edge and cloud presets with the Timeloop-style
+/// cost model, reporting per-network rollups plus the cross-layer dedup
+/// the orchestrator achieved. Returns the table and the raw
+/// [`NetworkResult`]s (per-layer breakdowns included).
+pub fn network_sweep(effort: Effort) -> (Table, Vec<NetworkResult>) {
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let networks = [
+        frontend::resnet50_full(1),
+        frontend::dlrm_layers(),
+        frontend::bert_layers(),
+    ];
+    let archs: [(&str, Arch); 2] = [
+        ("edge 16x16", presets::edge()),
+        ("cloud 32x64", presets::cloud(32, 64)),
+    ];
+    let mut table = Table::new(
+        "Network sweep: end-to-end mapping with cross-layer search reuse",
+        &[
+            "network", "arch", "layers", "jobs", "reuse", "cycles", "energy (J)", "EDP (Js)",
+        ],
+    );
+    table.group_by(0);
+    let mut results = Vec::new();
+    for graph in &networks {
+        for (label, arch) in &archs {
+            let config = OrchestratorConfig {
+                samples: effort.samples(),
+                seed: 2021,
+                ..OrchestratorConfig::default()
+            };
+            let orchestrator = NetworkOrchestrator::with_config(arch, &model, &cons, config);
+            match orchestrator.run(graph) {
+                Ok(r) => {
+                    table.row(vec![
+                        r.network.clone(),
+                        label.to_string(),
+                        r.stats.layers.to_string(),
+                        r.stats.distinct_jobs.to_string(),
+                        format!("{:.1}%", 100.0 * r.stats.dedup_hit_rate),
+                        format!("{:.3e}", r.total_cycles),
+                        format!("{:.3e}", r.total_energy_j),
+                        format!("{:.3e}", r.edp()),
+                    ]);
+                    results.push(r);
+                }
+                Err(e) => {
+                    table.row(vec![
+                        graph.name.clone(),
+                        label.to_string(),
+                        graph.total_layers().to_string(),
+                        "-".to_string(),
+                        "-".to_string(),
+                        "-".to_string(),
+                        "-".to_string(),
+                        format!("error: {e}"),
+                    ]);
+                }
+            }
+        }
+    }
+    (table, results)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -421,6 +525,23 @@ mod tests {
         assert_eq!(find("intensli2", "64")[3..6], ["262144", "64", "64"]);
         assert_eq!(find("ccsd7", "64")[3..6], ["4096", "64", "4096"]);
         assert_eq!(find("ccsd-t4", "32")[3..6], ["32768", "32768", "32"]);
+    }
+
+    #[test]
+    fn effort_samples_are_overridable() {
+        assert_eq!(Effort::Custom(123).samples(), 123);
+        assert_eq!(Effort::Custom(0).samples(), 1);
+        assert_eq!(Effort::from_flag("fast").unwrap(), Effort::Fast);
+        assert_eq!(Effort::from_flag("thorough").unwrap(), Effort::Thorough);
+        assert_eq!(Effort::from_flag("250").unwrap(), Effort::Custom(250));
+        assert!(Effort::from_flag("warp9").is_err());
+        // env override semantics (pure part; the env read itself is a
+        // one-liner over this)
+        assert_eq!(parse_samples_override(Some("300"), 600), 300);
+        assert_eq!(parse_samples_override(Some(" 300 "), 600), 300);
+        assert_eq!(parse_samples_override(Some("garbage"), 600), 600);
+        assert_eq!(parse_samples_override(Some("0"), 600), 600);
+        assert_eq!(parse_samples_override(None, 600), 600);
     }
 
     #[test]

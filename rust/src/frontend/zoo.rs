@@ -1,6 +1,14 @@
 //! The paper's evaluation workloads: Table IV DNN layers (ResNet50, DLRM,
 //! BERT from MLPerf) and Table III tensor contractions (TCCG benchmark
-//! suite: intensli2, ccsd7, ccsd-t4).
+//! suite: intensli2, ccsd7, ccsd-t4) — plus the full 53-conv ResNet-50
+//! network for end-to-end (network-level) co-design.
+//!
+//! Zoo entries are [`WorkloadGraph`]s: ordered layer lists with repeat
+//! counts, consumable whole by the network orchestrator or layer by
+//! layer (the graphs offer `Vec`-like indexing/`remove`/iteration) by
+//! the per-figure experiment drivers.
+
+use crate::network::WorkloadGraph;
 
 use super::Workload;
 
@@ -9,12 +17,15 @@ use super::Workload;
 /// * ResNet50-1: N=32 K=C=64 X=Y=56 R=S=1
 /// * ResNet50-2: N=32 K=C=64 X=Y=56 R=S=3
 /// * ResNet50-3: N=32 K=512 C=1024 X=Y=14 R=S=1
-pub fn resnet50_layers() -> Vec<Workload> {
-    vec![
-        Workload::conv2d("ResNet50-1", 32, 64, 64, 56, 56, 1, 1, 1),
-        Workload::conv2d("ResNet50-2", 32, 64, 64, 56, 56, 3, 3, 1),
-        Workload::conv2d("ResNet50-3", 32, 512, 1024, 14, 14, 1, 1, 1),
-    ]
+pub fn resnet50_layers() -> WorkloadGraph {
+    WorkloadGraph::from_workloads(
+        "ResNet50-TableIV",
+        vec![
+            Workload::conv2d("ResNet50-1", 32, 64, 64, 56, 56, 1, 1, 1),
+            Workload::conv2d("ResNet50-2", 32, 64, 64, 56, 56, 3, 3, 1),
+            Workload::conv2d("ResNet50-3", 32, 512, 1024, 14, 14, 1, 1, 1),
+        ],
+    )
 }
 
 /// Table IV — DLRM fully-connected layers (GEMM: M=N batch, K=NIN, N=NON).
@@ -22,12 +33,15 @@ pub fn resnet50_layers() -> Vec<Workload> {
 /// * DLRM-1: N=512 NIN=1024 NON=1024
 /// * DLRM-2: N=512 NIN=1024 NON=64
 /// * DLRM-3: N=512 NIN=2048 NON=2048
-pub fn dlrm_layers() -> Vec<Workload> {
-    vec![
-        Workload::gemm("DLRM-1", 512, 1024, 1024),
-        Workload::gemm("DLRM-2", 512, 64, 1024),
-        Workload::gemm("DLRM-3", 512, 2048, 2048),
-    ]
+pub fn dlrm_layers() -> WorkloadGraph {
+    WorkloadGraph::from_workloads(
+        "DLRM",
+        vec![
+            Workload::gemm("DLRM-1", 512, 1024, 1024),
+            Workload::gemm("DLRM-2", 512, 64, 1024),
+            Workload::gemm("DLRM-3", 512, 2048, 2048),
+        ],
+    )
 }
 
 /// Table IV — BERT fully-connected layers.
@@ -35,20 +49,75 @@ pub fn dlrm_layers() -> Vec<Workload> {
 /// * BERT-1: N=256 NIN=768 NON=768
 /// * BERT-2: N=256 NIN=3072 NON=768
 /// * BERT-3: N=256 NIN=768 NON=3072
-pub fn bert_layers() -> Vec<Workload> {
-    vec![
-        Workload::gemm("BERT-1", 256, 768, 768),
-        Workload::gemm("BERT-2", 256, 768, 3072),
-        Workload::gemm("BERT-3", 256, 3072, 768),
-    ]
+pub fn bert_layers() -> WorkloadGraph {
+    WorkloadGraph::from_workloads(
+        "BERT",
+        vec![
+            Workload::gemm("BERT-1", 256, 768, 768),
+            Workload::gemm("BERT-2", 256, 768, 3072),
+            Workload::gemm("BERT-3", 256, 3072, 768),
+        ],
+    )
 }
 
 /// All nine Table IV DNN workloads, in the paper's order.
-pub fn dnn_workloads() -> Vec<Workload> {
-    let mut v = resnet50_layers();
-    v.extend(dlrm_layers());
-    v.extend(bert_layers());
-    v
+pub fn dnn_workloads() -> WorkloadGraph {
+    let mut g = WorkloadGraph::from_workloads("TableIV-DNN9", resnet50_layers().workloads());
+    for w in dlrm_layers().workloads() {
+        g.add(w);
+    }
+    for w in bert_layers().workloads() {
+        g.add(w);
+    }
+    g
+}
+
+/// The full ResNet-50 (v1.5 bottleneck placement: the stride-2 conv is
+/// the 3×3 of each downsampling block), batch `n`, ImageNet 224×224
+/// input — 53 convolutions plus the final 1000-way FC as a GEMM.
+///
+/// Layer names follow `convS_Bx` (stage, block, position); identical
+/// consecutive interior blocks compress into repeat-counted nodes, and
+/// only ~23 of the 53 conv shapes are distinct — which is exactly what
+/// the network orchestrator's cross-layer dedup exploits.
+///
+/// Sizes are output-size semantics (`x`/`y` are output extents), so
+/// e.g. conv1 is 7×7 stride 2 producing 112×112 from the 224×224 input.
+pub fn resnet50_full(n: u64) -> WorkloadGraph {
+    let mut g = WorkloadGraph::new("ResNet50");
+    // conv1: 3 -> 64, 7x7 / s2, out 112x112
+    g.add(Workload::conv2d("conv1", n, 64, 3, 112, 112, 7, 7, 2));
+    // (3x3/s2 maxpool -> 56x56, not a tensor-op workload)
+
+    // bottleneck stages: (stage, blocks, width, in_ch, out_ch, out_xy)
+    // in_ch is the input channel count of the stage's FIRST block; every
+    // later block takes out_ch. Stage 2 keeps 56x56 (stride 1); stages
+    // 3-5 halve the spatial extent in block 1's 3x3 conv.
+    let stages: [(usize, u64, u64, u64, u64, u64); 4] = [
+        (2, 3, 64, 64, 256, 56),
+        (3, 4, 128, 256, 512, 28),
+        (4, 6, 256, 512, 1024, 14),
+        (5, 3, 512, 1024, 2048, 7),
+    ];
+    for (stage, blocks, width, in_ch, out_ch, out) in stages {
+        let first = stage == 2; // stage 2 downsamples via the maxpool, not the conv
+        let (stride, in_xy) = if first { (1, out) } else { (2, out * 2) };
+        let name = |pos: &str| format!("conv{stage}_{pos}");
+        // block 1 (projection block)
+        g.add(Workload::conv2d(&name("1a"), n, width, in_ch, in_xy, in_xy, 1, 1, 1));
+        g.add(Workload::conv2d(&name("1b"), n, width, width, out, out, 3, 3, stride));
+        g.add(Workload::conv2d(&name("1c"), n, out_ch, width, out, out, 1, 1, 1));
+        g.add(Workload::conv2d(&name("ds"), n, out_ch, in_ch, out, out, 1, 1, stride));
+        // interior identity blocks (identical shapes -> repeat-counted)
+        let rep = blocks - 1;
+        g.add_repeated(Workload::conv2d(&name("xa"), n, width, out_ch, out, out, 1, 1, 1), rep);
+        g.add_repeated(Workload::conv2d(&name("xb"), n, width, width, out, out, 3, 3, 1), rep);
+        g.add_repeated(Workload::conv2d(&name("xc"), n, out_ch, width, out, out, 1, 1, 1), rep);
+    }
+
+    // global average pool (not a tensor-op workload), then the classifier
+    g.add(Workload::gemm("fc1000", n, 1000, 2048));
+    g
 }
 
 /// One Table III TCCG problem family.
@@ -132,6 +201,55 @@ mod tests {
         let layers = resnet50_layers();
         // ResNet50-2 (3x3) has 9x the MACs of ResNet50-1 (1x1)
         assert_eq!(layers[1].macs(), layers[0].macs() * 9);
+    }
+
+    #[test]
+    fn resnet50_full_counts_match_the_network() {
+        let g = resnet50_full(1);
+        // 53 convolutions + 1 FC layer
+        assert_eq!(g.total_layers(), 54);
+        let convs: u64 = g
+            .nodes()
+            .iter()
+            .filter(|node| {
+                matches!(node.workload.kind, crate::frontend::WorkloadKind::Conv2d { .. })
+            })
+            .map(|node| node.repeat)
+            .sum();
+        assert_eq!(convs, 53);
+        // repeat counts compress the interior blocks
+        assert!(g.len() < 54, "graph should be repeat-compressed, got {} nodes", g.len());
+        // ~3.9 GMACs at batch 1 (He et al. report 3.8 GFLOPs as mult-adds
+        // for the v1 placement; v1.5 is slightly heavier)
+        let macs = g.total_macs();
+        assert!((3_500_000_000..4_500_000_000).contains(&macs), "got {macs}");
+        // batch scales MACs linearly
+        assert_eq!(resnet50_full(4).total_macs(), 4 * macs);
+    }
+
+    #[test]
+    fn resnet50_full_stage_shapes() {
+        let g = resnet50_full(2);
+        let find = |name: &str| -> Workload {
+            g.iter()
+                .find(|w| w.name == name)
+                .unwrap_or_else(|| panic!("layer {name} missing"))
+                .clone()
+        };
+        // spot-check the downsampling 3x3 of stage 3: 128ch, 28x28 out, s2
+        match find("conv3_1b").kind {
+            crate::frontend::WorkloadKind::Conv2d { n, k, c, x, y, r, s, stride } => {
+                assert_eq!((n, k, c, x, y, r, s, stride), (2, 128, 128, 28, 28, 3, 3, 2));
+            }
+            other => panic!("conv3_1b is {other:?}"),
+        }
+        // classifier GEMM: batch x 1000 over 2048 features
+        match find("fc1000").kind {
+            crate::frontend::WorkloadKind::Gemm { m, n, k } => {
+                assert_eq!((m, n, k), (2, 1000, 2048));
+            }
+            other => panic!("fc1000 is {other:?}"),
+        }
     }
 
     /// The Table III TTGT GEMM dimension sizes, exactly as printed.

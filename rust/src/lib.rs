@@ -43,6 +43,10 @@
 //! Searches run through the shared batched [`engine`]: every mapper is a
 //! candidate source, and the engine owns evaluation (parallel batches,
 //! memoization, monotone lower-bound pruning, deterministic seeding).
+//! Whole networks run through the [`network`] orchestrator, which dedups
+//! identical layer shapes into one search job each (ResNet-50's 53
+//! convolutions collapse to ~23 distinct searches) on one multi-job
+//! engine [`engine::Session`].
 //!
 //! (Clippy policy lives in the `[lints.clippy]` table of
 //! `rust/Cargo.toml`, applied to every target in the package.)
@@ -58,6 +62,7 @@ pub mod ir;
 pub mod mappers;
 pub mod mapping;
 pub mod mapspace;
+pub mod network;
 pub mod problem;
 pub mod report;
 pub mod runtime;
@@ -69,7 +74,7 @@ pub mod prelude {
     pub use crate::cost::{
         AnalyticalModel, CostEstimate, CostModel, EnergyTable, MaestroModel,
     };
-    pub use crate::engine::{CandidateSource, Engine, EngineConfig, EngineStats};
+    pub use crate::engine::{CandidateSource, Engine, EngineConfig, EngineStats, Session};
     pub use crate::frontend::{self, Workload};
     pub use crate::mappers::{
         DecoupledMapper, ExhaustiveMapper, GeneticMapper, HeuristicMapper, Mapper, Objective,
@@ -77,5 +82,8 @@ pub mod prelude {
     };
     pub use crate::mapping::Mapping;
     pub use crate::mapspace::{Constraints, MapSpace};
+    pub use crate::network::{
+        NetworkOrchestrator, NetworkResult, OrchestratorConfig, WorkloadGraph,
+    };
     pub use crate::problem::{DataSpace, Operation, Problem};
 }

@@ -5,12 +5,15 @@
 //! union search    --workload <spec> --arch <spec> [--mapper M] [--cost C]
 //!                 [--objective edp|energy|latency] [--samples N]
 //!                 [--constraints file.ucon] [--render]
-//! union casestudy <fig3|fig8|fig9|fig10|fig11|table3> [--thorough]
+//! union network   --model <net> [--arch <spec>] [--cost C] [--objective O]
+//!                 [--effort fast|thorough|N] [--batch N] [--seed N]
+//!                 [--constraints file.ucon] [--csv]
+//! union casestudy <fig3|fig8|fig9|fig10|fig11|table3|table4> [--thorough]
 //! union validate  [--artifacts DIR]
 //! union info      --arch <spec>
 //! ```
 
-use union::cli::{parse_arch, parse_workload, Args};
+use union::cli::{parse_arch, parse_network, parse_workload, Args};
 use union::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
 use union::experiments::{self, Effort};
 use union::ir::{check_loop_level, check_operation_level, print_module};
@@ -20,6 +23,7 @@ use union::mappers::{
 };
 use union::mapping::render_loop_nest;
 use union::mapspace::{constraints_from_str, Constraints, MapSpace};
+use union::network::{NetworkOrchestrator, OrchestratorConfig};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -37,6 +41,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
     match args.subcommand.as_deref() {
         Some("lower") => cmd_lower(&args),
         Some("search") => cmd_search(&args),
+        Some("network") => cmd_network(&args),
         Some("casestudy") => cmd_casestudy(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
@@ -56,12 +61,17 @@ subcommands:
   search    --workload <spec> --arch <spec> [--mapper exhaustive|random|decoupled|heuristic|genetic]
             [--cost analytical|maestro] [--objective edp|energy|latency]
             [--samples N] [--constraints file.ucon] [--render]
-  casestudy fig3|fig8|fig9|fig10|fig11|table3 [--thorough]
+  network   --model <net> [--arch <spec>] [--cost analytical|maestro]
+            [--objective edp|energy|latency] [--effort fast|thorough|N]
+            [--batch N] [--seed N] [--threads N] [--constraints file.ucon] [--csv]
+  casestudy fig3|fig8|fig9|fig10|fig11|table3|table4 [--thorough] [--effort E]
   validate  [--artifacts DIR]
   info      --arch <spec>
 
 workload specs: Table IV names (DLRM-2, ResNet50-1, BERT-3, ...),
   gemm:MxNxK, conv:N,K,C,X,Y,R,S,stride, tc:<name>:<tds>
+network specs: resnet50, resnet50-tableiv, dlrm, bert, dnn9,
+  or workload specs joined with '+'
 arch specs: edge, edge:RxC, cloud, cloud:RxC, chiplet:FILLBW, fig5, file.uarch";
 
 fn cmd_lower(args: &Args) -> Result<(), String> {
@@ -98,27 +108,11 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     } else {
         w.problem()
     };
-    let constraints = match args.flag("constraints") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path)
-                .map_err(|e| format!("reading {path}: {e}"))?;
-            constraints_from_str(&text)?
-        }
-        None => Constraints::default(),
-    };
+    let constraints = parse_constraints_flag(args)?;
     let samples = args.usize_flag("samples", 2_000)?;
     let seed = args.usize_flag("seed", 42)? as u64;
-    let objective = match args.flag_or("objective", "edp") {
-        "edp" => Objective::Edp,
-        "energy" => Objective::Energy,
-        "latency" => Objective::Latency,
-        other => return Err(format!("unknown objective '{other}'")),
-    };
-    let model: Box<dyn CostModel> = match args.flag_or("cost", "analytical") {
-        "analytical" => Box::new(AnalyticalModel::new(EnergyTable::default_8bit())),
-        "maestro" => Box::new(MaestroModel::new(EnergyTable::default_8bit())),
-        other => return Err(format!("unknown cost model '{other}'")),
-    };
+    let objective = parse_objective_flag(args)?;
+    let model = parse_cost_flag(args)?;
     model
         .conformable(&problem, &arch)
         .map_err(|e| format!("workload not conformable to {}: {e}", model.name()))?;
@@ -175,17 +169,96 @@ fn cmd_search(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn parse_constraints_flag(args: &Args) -> Result<Constraints, String> {
+    match args.flag("constraints") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading {path}: {e}"))?;
+            constraints_from_str(&text)
+        }
+        None => Ok(Constraints::default()),
+    }
+}
+
+fn parse_objective_flag(args: &Args) -> Result<Objective, String> {
+    match args.flag_or("objective", "edp") {
+        "edp" => Ok(Objective::Edp),
+        "energy" => Ok(Objective::Energy),
+        "latency" => Ok(Objective::Latency),
+        other => Err(format!("unknown objective '{other}'")),
+    }
+}
+
+fn parse_cost_flag(args: &Args) -> Result<Box<dyn CostModel>, String> {
+    match args.flag_or("cost", "analytical") {
+        "analytical" => Ok(Box::new(AnalyticalModel::new(EnergyTable::default_8bit()))),
+        "maestro" => Ok(Box::new(MaestroModel::new(EnergyTable::default_8bit()))),
+        other => Err(format!("unknown cost model '{other}'")),
+    }
+}
+
+/// `--effort fast|thorough|<samples>` with the legacy `--thorough`
+/// switch as a fallback.
+fn parse_effort_flag(args: &Args) -> Result<Effort, String> {
+    if let Some(v) = args.flag("effort") {
+        return Effort::from_flag(v);
+    }
+    Ok(if args.switch("thorough") {
+        Effort::Thorough
+    } else {
+        Effort::Fast
+    })
+}
+
+fn cmd_network(args: &Args) -> Result<(), String> {
+    let batch = args.usize_flag("batch", 1)? as u64;
+    let graph = parse_network(args.flag("model").ok_or("network needs --model")?, batch)?;
+    let arch = parse_arch(args.flag_or("arch", "edge"))?;
+    let constraints = parse_constraints_flag(args)?;
+    let objective = parse_objective_flag(args)?;
+    let model = parse_cost_flag(args)?;
+    let effort = parse_effort_flag(args)?;
+    let threads = match args.usize_flag("threads", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let config = OrchestratorConfig {
+        objective,
+        samples: effort.samples(),
+        seed: args.usize_flag("seed", 42)? as u64,
+        threads,
+    };
+    println!(
+        "mapping network {} ({} layers in {} nodes, {:.3e} MACs) on {} | cost={} objective={} samples/job={}",
+        graph.name,
+        graph.total_layers(),
+        graph.len(),
+        graph.total_macs() as f64,
+        arch.name,
+        model.name(),
+        objective.name(),
+        config.samples,
+    );
+    let orchestrator =
+        NetworkOrchestrator::with_config(&arch, model.as_ref(), &constraints, config);
+    let result = orchestrator.run(&graph)?;
+    let table = result.per_layer_table();
+    if args.switch("csv") {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.render());
+    }
+    println!("\n{}", result.summary());
+    Ok(())
+}
+
 fn cmd_casestudy(args: &Args) -> Result<(), String> {
     let which = args
         .positional()
         .first()
         .map(|s| s.as_str())
-        .ok_or("casestudy needs a figure id (fig3|fig8|fig9|fig10|fig11|table3)")?;
-    let effort = if args.switch("thorough") {
-        Effort::Thorough
-    } else {
-        Effort::Fast
-    };
+        .ok_or("casestudy needs a figure id (fig3|fig8|fig9|fig10|fig11|table3|table4)")?;
+    let effort = parse_effort_flag(args)?;
     match which {
         "fig3" => {
             let (table, _) = experiments::fig3_mapping_sweep(effort);
@@ -205,6 +278,13 @@ fn cmd_casestudy(args: &Args) -> Result<(), String> {
             print!("{}", table.render());
         }
         "table3" => print!("{}", experiments::table3_ttgt_dims().render()),
+        "table4" => {
+            let (table, results) = experiments::network_sweep(effort);
+            print!("{}", table.render());
+            for r in &results {
+                println!("{}", r.summary());
+            }
+        }
         other => return Err(format!("unknown case study '{other}'")),
     }
     Ok(())

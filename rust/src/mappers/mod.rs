@@ -77,6 +77,22 @@ impl Objective {
     }
 }
 
+/// The standard two-phase search portfolio (§V-A uses "a mapper based on
+/// both heuristic and random sampling"): random sampling to establish an
+/// incumbent, then heuristic hill-climbing that seeds with
+/// utilization-biased draws and refines whatever incumbent the engine
+/// holds. Run the returned sources in sequence on ONE engine (or one
+/// [`Session`](crate::engine::Session) job) so the later phase prunes
+/// against — and climbs from — the earlier phase's best, and overlapping
+/// proposals resolve from the shared memo. Single source of truth for
+/// `experiments::portfolio_search` and the network orchestrator.
+pub fn portfolio_sources(samples: usize, seed: u64) -> Vec<Box<dyn CandidateSource>> {
+    vec![
+        RandomMapper::new(samples, seed).source(),
+        HeuristicMapper::new(samples / 2, 60, seed ^ 0xABCD).source(),
+    ]
+}
+
 /// The best mapping a search found, with its cost and search statistics.
 #[derive(Debug, Clone)]
 pub struct SearchResult {

@@ -91,6 +91,40 @@ pub fn constraints_from_str(src: &str) -> Result<Constraints, String> {
     constraints_from_config(&doc)
 }
 
+/// Render constraints back to `.ucon` text — the inverse of
+/// [`constraints_from_str`]. Fields at their default are omitted, so
+/// `Constraints::default()` renders to the empty (fully flexible) file.
+/// The round trip `parse(render(c)) == c` is property-tested in
+/// `tests/properties.rs` across every field.
+pub fn constraints_to_str(c: &Constraints) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    if let Some(dims) = &c.parallel_dims {
+        let _ = writeln!(out, "parallel_dims: [{}]", dims.join(", "));
+    }
+    if c.min_utilization != 0.0 {
+        let _ = writeln!(out, "min_utilization: {}", c.min_utilization);
+    }
+    if c.max_utilization != 1.0 {
+        let _ = writeln!(out, "max_utilization: {}", c.max_utilization);
+    }
+    if !c.fixed_orders.is_empty() {
+        let _ = writeln!(out, "fixed_orders:");
+        for (level, order) in &c.fixed_orders {
+            let _ = writeln!(out, "  - level: {level}");
+            let _ = writeln!(out, "    order: [{}]", order.join(", "));
+        }
+    }
+    if let Some(sizes) = &c.allowed_tile_sizes {
+        let rendered: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
+        let _ = writeln!(out, "allowed_tile_sizes: [{}]", rendered.join(", "));
+    }
+    if let Some(n) = c.max_parallel_dims_per_level {
+        let _ = writeln!(out, "max_parallel_dims_per_level: {n}");
+    }
+    out
+}
+
 fn string_list(v: &Value) -> Vec<String> {
     v.as_list()
         .map(|items| {
@@ -207,5 +241,37 @@ allowed_tile_sizes: [1, 2, 4, 8, 16]
     fn missing_order_field_is_error() {
         let src = "fixed_orders:\n  - level: 0\n";
         assert!(constraints_from_str(src).is_err());
+    }
+
+    #[test]
+    fn render_roundtrips_presets_and_defaults() {
+        for c in [
+            Constraints::default(),
+            Constraints::nvdla_style(),
+            Constraints::memory_target_style(),
+        ] {
+            let text = constraints_to_str(&c);
+            let parsed = constraints_from_str(&text).unwrap();
+            assert_eq!(parsed, c, "text was:\n{text}");
+        }
+        assert_eq!(constraints_to_str(&Constraints::default()), "");
+    }
+
+    #[test]
+    fn render_roundtrips_every_field() {
+        let c = Constraints {
+            parallel_dims: Some(vec!["C".into(), "K".into()]),
+            min_utilization: 0.25,
+            max_utilization: 0.75,
+            fixed_orders: vec![
+                (0, vec!["N".into(), "K".into(), "C".into()]),
+                (2, vec!["X".into(), "Y".into()]),
+            ],
+            allowed_tile_sizes: Some(vec![1, 2, 4, 8, 16]),
+            max_parallel_dims_per_level: Some(2),
+        };
+        let text = constraints_to_str(&c);
+        let parsed = constraints_from_str(&text).unwrap();
+        assert_eq!(parsed, c, "text was:\n{text}");
     }
 }

@@ -20,7 +20,7 @@
 
 mod constraints;
 
-pub use constraints::{constraints_from_str, Constraints};
+pub use constraints::{constraints_from_str, constraints_to_str, Constraints};
 
 use crate::arch::Arch;
 use crate::mapping::{LevelMapping, Mapping};

@@ -1,0 +1,149 @@
+//! The [`WorkloadGraph`]: an ordered list of named workload nodes with
+//! repeat counts — the network-level unit the orchestrator consumes.
+//!
+//! Nodes appear in execution order (a layer pipeline); consecutive
+//! identical blocks compress into one node with `repeat > 1`, which is
+//! how ResNet-50's interior bottleneck blocks are written. The graph
+//! also offers `Vec`-like accessors (`len`, indexing, `remove`,
+//! iteration over workloads) so single-layer studies keep reading
+//! naturally from the zoo's graphs.
+
+use crate::frontend::Workload;
+
+/// One node of a [`WorkloadGraph`]: a layer plus how many times it
+/// repeats consecutively in the network.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkNode {
+    pub workload: Workload,
+    pub repeat: u64,
+}
+
+/// An ordered workload graph (see module docs).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WorkloadGraph {
+    pub name: String,
+    nodes: Vec<NetworkNode>,
+}
+
+impl WorkloadGraph {
+    pub fn new(name: &str) -> WorkloadGraph {
+        WorkloadGraph { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    /// Build a graph from workloads, one node each (repeat 1).
+    pub fn from_workloads(name: &str, workloads: Vec<Workload>) -> WorkloadGraph {
+        let mut g = WorkloadGraph::new(name);
+        for w in workloads {
+            g.add(w);
+        }
+        g
+    }
+
+    /// Append a node executed once.
+    pub fn add(&mut self, workload: Workload) {
+        self.add_repeated(workload, 1);
+    }
+
+    /// Append a node executed `repeat` consecutive times.
+    pub fn add_repeated(&mut self, workload: Workload, repeat: u64) {
+        assert!(repeat >= 1, "node repeat count must be >= 1");
+        self.nodes.push(NetworkNode { workload, repeat });
+    }
+
+    pub fn nodes(&self) -> &[NetworkNode] {
+        &self.nodes
+    }
+
+    /// Number of nodes (repeat-compressed).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Total executed layers: Σ node repeats.
+    pub fn total_layers(&self) -> u64 {
+        self.nodes.iter().map(|n| n.repeat).sum()
+    }
+
+    /// Total MACs over the whole network (repeats included).
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.repeat * n.workload.macs()).sum()
+    }
+
+    /// The node workloads, one per node (repeat-compressed).
+    pub fn workloads(&self) -> Vec<Workload> {
+        self.nodes.iter().map(|n| n.workload.clone()).collect()
+    }
+
+    /// Remove and return the `i`-th node's workload (`Vec::remove`
+    /// compatibility for single-layer consumers of the zoo graphs).
+    pub fn remove(&mut self, i: usize) -> Workload {
+        self.nodes.remove(i).workload
+    }
+
+    /// Iterate the node workloads by reference.
+    pub fn iter(&self) -> impl Iterator<Item = &Workload> {
+        self.nodes.iter().map(|n| &n.workload)
+    }
+}
+
+impl std::ops::Index<usize> for WorkloadGraph {
+    type Output = Workload;
+    fn index(&self, i: usize) -> &Workload {
+        &self.nodes[i].workload
+    }
+}
+
+impl IntoIterator for WorkloadGraph {
+    type Item = Workload;
+    type IntoIter = std::vec::IntoIter<Workload>;
+    /// Iterate the node workloads (repeat-compressed), in order.
+    fn into_iter(self) -> Self::IntoIter {
+        self.nodes
+            .into_iter()
+            .map(|n| n.workload)
+            .collect::<Vec<_>>()
+            .into_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repeat_counts_expand_in_totals() {
+        let mut g = WorkloadGraph::new("toy");
+        g.add(Workload::gemm("a", 8, 8, 8));
+        g.add_repeated(Workload::gemm("b", 4, 4, 4), 3);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.total_layers(), 4);
+        assert_eq!(g.total_macs(), 512 + 3 * 64);
+        assert_eq!(g[1].name, "b");
+        assert_eq!(g.workloads().len(), 2);
+        assert_eq!(g.iter().count(), 2);
+    }
+
+    #[test]
+    fn vec_compat_accessors() {
+        let mut g = WorkloadGraph::from_workloads(
+            "toy",
+            vec![Workload::gemm("a", 8, 8, 8), Workload::gemm("b", 4, 4, 4)],
+        );
+        let b = g.remove(1);
+        assert_eq!(b.name, "b");
+        assert_eq!(g.len(), 1);
+        let names: Vec<String> = g.into_iter().map(|w| w.name).collect();
+        assert_eq!(names, vec!["a"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "repeat count")]
+    fn zero_repeat_rejected() {
+        let mut g = WorkloadGraph::new("bad");
+        g.add_repeated(Workload::gemm("a", 2, 2, 2), 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! **Network-level co-design** (paper §V, Tables III–IV): whole-DNN
+//! workload graphs and the orchestrator that maps them end to end.
+//!
+//! The paper's case studies evaluate entire networks — ResNet-50, BERT,
+//! DLRM — layer by layer, and per-layer searches dominate evaluation
+//! cost. Real networks repeat layer shapes heavily (ResNet-50 has ~23
+//! distinct CONV2D shapes across its 53 convolutions), so the
+//! [`NetworkOrchestrator`] canonicalizes every node of a
+//! [`WorkloadGraph`] to a [`crate::problem::Problem`], hash-dedups
+//! identical `(problem, arch, cost model, constraints, objective)`
+//! search jobs, runs only the distinct jobs through one engine
+//! [`Session`](crate::engine::Session), and re-expands the results into
+//! per-layer and end-to-end network reports.
+
+mod graph;
+mod orchestrator;
+
+pub use graph::{NetworkNode, WorkloadGraph};
+pub use orchestrator::{
+    LayerResult, NetworkOrchestrator, NetworkResult, NetworkStats, OrchestratorConfig,
+};

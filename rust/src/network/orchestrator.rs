@@ -1,0 +1,399 @@
+//! The [`NetworkOrchestrator`]: plan → dedup → search → re-expand.
+//!
+//! Planning canonicalizes every graph node to a
+//! [`crate::problem::Problem`] and keys it by a canonical signature of
+//! `(problem, arch, cost model, constraints, objective)`; nodes with
+//! identical signatures collapse into one search job (first-encounter
+//! order, so job indices — and therefore reports — are deterministic).
+//! The distinct jobs then run through one engine
+//! [`Session`](crate::engine::Session) with the standard search
+//! portfolio and per-job seeds derived only from the job index, which
+//! preserves the engine's thread-count-invariant determinism guarantee:
+//! the whole network report is byte-identical at 1 and N threads.
+
+use std::collections::HashMap;
+
+use crate::arch::Arch;
+use crate::cost::CostModel;
+use crate::engine::{CandidateSource, EngineConfig, EngineStats, Progress, Session};
+use crate::frontend::{Workload, WorkloadKind};
+use crate::mappers::{portfolio_sources, Objective, SearchResult};
+use crate::mapping::Mapping;
+use crate::mapspace::{Constraints, MapSpace};
+use crate::problem::Problem;
+use crate::report::Table;
+use crate::util::rng::Rng;
+
+use super::WorkloadGraph;
+
+/// Knobs for a network-level co-design run.
+#[derive(Debug, Clone)]
+pub struct OrchestratorConfig {
+    /// Metric each per-layer search minimizes.
+    pub objective: Objective,
+    /// Candidate budget per distinct search job (the portfolio draws
+    /// `samples` random candidates plus `samples/2` heuristic seeds).
+    pub samples: usize,
+    /// Base seed; per-job seeds derive from it and the job index only.
+    pub seed: u64,
+    /// Worker threads for batch evaluation; `None` = all available.
+    pub threads: Option<usize>,
+}
+
+impl Default for OrchestratorConfig {
+    fn default() -> Self {
+        OrchestratorConfig {
+            objective: Objective::Edp,
+            samples: 600,
+            seed: 42,
+            threads: None,
+        }
+    }
+}
+
+/// Plans and runs a co-design search over a whole [`WorkloadGraph`].
+pub struct NetworkOrchestrator<'a> {
+    arch: &'a Arch,
+    model: &'a dyn CostModel,
+    constraints: &'a Constraints,
+    config: OrchestratorConfig,
+}
+
+/// One expanded layer of the network result.
+#[derive(Debug, Clone)]
+pub struct LayerResult {
+    /// Node (layer) name from the graph.
+    pub name: String,
+    /// Compact shape label ([`shape_label`]) of the layer's workload.
+    pub op: String,
+    /// Consecutive executions of this node.
+    pub repeat: u64,
+    /// Index of the distinct search job that produced `result`.
+    pub job: usize,
+    /// `true` if the job was searched for an *earlier* node and this
+    /// layer reused its result (cross-layer dedup hit).
+    pub dedup_hit: bool,
+    /// MACs of one execution of this layer.
+    pub macs: u64,
+    /// Best mapping + cost for one execution of this layer.
+    pub result: SearchResult,
+}
+
+/// Dedup and engine counters for a network run.
+#[derive(Debug, Clone)]
+pub struct NetworkStats {
+    /// Graph nodes (repeat-compressed).
+    pub nodes: usize,
+    /// Executed layers: Σ node repeats.
+    pub layers: u64,
+    /// Distinct search jobs actually evaluated.
+    pub distinct_jobs: usize,
+    /// Fraction of layers served by a job searched for an earlier
+    /// layer: `(layers - distinct_jobs) / layers`.
+    pub dedup_hit_rate: f64,
+    /// Aggregate engine statistics across every job.
+    pub engine: EngineStats,
+}
+
+/// End-to-end result of mapping a network.
+#[derive(Debug, Clone)]
+pub struct NetworkResult {
+    pub network: String,
+    pub arch: String,
+    pub model: String,
+    pub layers: Vec<LayerResult>,
+    pub stats: NetworkStats,
+    /// Σ over layers of `repeat × cycles` (layers run back to back).
+    pub total_cycles: f64,
+    /// Σ over layers of `repeat × energy`.
+    pub total_energy_j: f64,
+    /// Σ over layers of `repeat × latency`.
+    pub total_latency_s: f64,
+}
+
+impl NetworkResult {
+    /// End-to-end network EDP: total energy × total latency.
+    pub fn edp(&self) -> f64 {
+        self.total_energy_j * self.total_latency_s
+    }
+
+    /// Per-layer breakdown grouped by stage, with a network rollup row.
+    pub fn per_layer_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("{} on {} — per-layer mapping ({})", self.network, self.arch, self.model),
+            &[
+                "stage", "layer", "op", "repeat", "job", "search", "MACs", "cycles",
+                "energy (J)", "EDP (Js)", "util",
+            ],
+        );
+        t.group_by(0);
+        for l in &self.layers {
+            let c = &l.result.cost;
+            t.row(vec![
+                stage_of(&l.name).to_string(),
+                l.name.clone(),
+                l.op.clone(),
+                l.repeat.to_string(),
+                l.job.to_string(),
+                if l.dedup_hit { "reused" } else { "searched" }.to_string(),
+                l.macs.to_string(),
+                format!("{:.3e}", c.cycles),
+                format!("{:.3e}", c.energy_j()),
+                format!("{:.3e}", c.edp()),
+                format!("{:.2}", c.utilization),
+            ]);
+        }
+        let s = &self.stats;
+        t.set_rollup(vec![
+            "network".to_string(),
+            self.network.clone(),
+            String::new(),
+            s.layers.to_string(),
+            format!("{} distinct", s.distinct_jobs),
+            format!("{:.1}% reused", 100.0 * s.dedup_hit_rate),
+            self.layers.iter().map(|l| l.repeat * l.macs).sum::<u64>().to_string(),
+            format!("{:.3e}", self.total_cycles),
+            format!("{:.3e}", self.total_energy_j),
+            format!("{:.3e}", self.edp()),
+            String::new(),
+        ]);
+        t
+    }
+
+    /// Human summary of the run (CLI, kick-tires, benches).
+    pub fn summary(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "network {}: {} layers in {} nodes -> {} distinct search jobs ({:.1}% layer reuse)\n\
+             end-to-end: cycles={:.3e}  latency={:.3e}s  energy={:.3e}J  EDP={:.3e}Js\n\
+             engine: proposed={} scored={} cost-evals={} memo-hits={} pruned={} rejected={}",
+            self.network,
+            s.layers,
+            s.nodes,
+            s.distinct_jobs,
+            100.0 * s.dedup_hit_rate,
+            self.total_cycles,
+            self.total_latency_s,
+            self.total_energy_j,
+            self.edp(),
+            s.engine.proposed,
+            s.engine.scored,
+            s.engine.cost_evals,
+            s.engine.memo_hits,
+            s.engine.pruned,
+            s.engine.rejected,
+        )
+    }
+}
+
+struct JobPlan {
+    problem: Problem,
+    first_node: usize,
+}
+
+impl<'a> NetworkOrchestrator<'a> {
+    pub fn new(arch: &'a Arch, model: &'a dyn CostModel, constraints: &'a Constraints) -> Self {
+        Self::with_config(arch, model, constraints, OrchestratorConfig::default())
+    }
+
+    pub fn with_config(
+        arch: &'a Arch,
+        model: &'a dyn CostModel,
+        constraints: &'a Constraints,
+        config: OrchestratorConfig,
+    ) -> Self {
+        NetworkOrchestrator { arch, model, constraints, config }
+    }
+
+    /// Map the whole graph: canonicalize, dedup, search the distinct
+    /// jobs on one session, re-expand into a [`NetworkResult`].
+    pub fn run(&self, graph: &WorkloadGraph) -> Result<NetworkResult, String> {
+        if graph.is_empty() {
+            return Err(format!("network '{}' has no layers", graph.name));
+        }
+
+        // ---- plan: canonicalize + hash-dedup search jobs ----
+        let mut jobs: Vec<JobPlan> = Vec::new();
+        let mut index: HashMap<String, usize> = HashMap::new();
+        let mut node_job: Vec<usize> = Vec::with_capacity(graph.len());
+        for (i, node) in graph.nodes().iter().enumerate() {
+            let problem = node.workload.problem();
+            problem
+                .validate()
+                .map_err(|e| format!("layer {} ({}): {e}", i, node.workload.name))?;
+            let sig = self.job_signature(&problem);
+            let j = match index.get(&sig).copied() {
+                Some(j) => j,
+                None => {
+                    let j = jobs.len();
+                    index.insert(sig, j);
+                    jobs.push(JobPlan { problem, first_node: i });
+                    j
+                }
+            };
+            node_job.push(j);
+        }
+        for job in &jobs {
+            self.model
+                .conformable(&job.problem, self.arch)
+                .map_err(|e| {
+                    format!(
+                        "layer {} not conformable to {}: {e}",
+                        graph.nodes()[job.first_node].workload.name,
+                        self.model.name()
+                    )
+                })?;
+        }
+
+        // ---- search: distinct jobs only, one shared session ----
+        let engine_config = EngineConfig {
+            threads: self.config.threads,
+            ..EngineConfig::default()
+        };
+        let mut session = Session::with_config(self.model, self.config.objective, engine_config);
+        let mut job_results: Vec<SearchResult> = Vec::with_capacity(jobs.len());
+        for (j, job) in jobs.iter().enumerate() {
+            let space = MapSpace::new(&job.problem, self.arch, self.constraints);
+            // a small admits-checked seed batch first, so every job has
+            // a legal incumbent even on shapes where uniform sampling
+            // admits rarely; then the standard portfolio
+            let mut sources: Vec<Box<dyn CandidateSource>> = vec![Box::new(LegalSeedSource {
+                rng: Rng::new(self.job_seed(j) ^ 0x5EED_BA5E),
+                want: 16,
+                tries: 200,
+                done: false,
+            })];
+            sources.extend(portfolio_sources(self.config.samples, self.job_seed(j)));
+            let (result, _) = session.run_job(&space, &mut sources);
+            let result = result.ok_or_else(|| {
+                format!(
+                    "no legal mapping found for layer {} on {}",
+                    graph.nodes()[job.first_node].workload.name,
+                    self.arch.name
+                )
+            })?;
+            job_results.push(result);
+        }
+
+        // ---- re-expand: per-layer results + network rollups ----
+        let mut layers = Vec::with_capacity(graph.len());
+        let mut seen = vec![false; jobs.len()];
+        let (mut cycles, mut energy, mut latency) = (0.0f64, 0.0f64, 0.0f64);
+        for (i, node) in graph.nodes().iter().enumerate() {
+            let j = node_job[i];
+            let result = job_results[j].clone();
+            let rep = node.repeat as f64;
+            cycles += result.cost.cycles * rep;
+            energy += result.cost.energy_j() * rep;
+            latency += result.cost.latency_s() * rep;
+            layers.push(LayerResult {
+                name: node.workload.name.clone(),
+                op: shape_label(&node.workload),
+                repeat: node.repeat,
+                job: j,
+                dedup_hit: seen[j],
+                macs: node.workload.macs(),
+                result,
+            });
+            seen[j] = true;
+        }
+        let total_layers = graph.total_layers();
+        let stats = NetworkStats {
+            nodes: graph.len(),
+            layers: total_layers,
+            distinct_jobs: jobs.len(),
+            dedup_hit_rate: (total_layers.saturating_sub(jobs.len() as u64)) as f64
+                / total_layers as f64,
+            engine: session.totals().clone(),
+        };
+        Ok(NetworkResult {
+            network: graph.name.clone(),
+            arch: self.arch.name.clone(),
+            model: self.model.name().to_string(),
+            layers,
+            stats,
+            total_cycles: cycles,
+            total_energy_j: energy,
+            total_latency_s: latency,
+        })
+    }
+
+    /// Canonical dedup key: [`Problem::signature`] (name-independent),
+    /// plus everything else that selects a search job. Within one run
+    /// arch / model / constraints are fixed, but keying them keeps
+    /// signatures comparable across runs (and honest about what a "job"
+    /// is).
+    fn job_signature(&self, problem: &Problem) -> String {
+        format!(
+            "{}|arch={}|model={}|cons={:?}|obj={}|samples={}",
+            problem.signature(),
+            self.arch.name,
+            self.model.name(),
+            self.constraints,
+            self.config.objective.name(),
+            self.config.samples,
+        )
+    }
+
+    /// Per-job seed: a pure function of the base seed and job index, so
+    /// results are independent of thread count and of how many other
+    /// jobs the session ran.
+    fn job_seed(&self, job: usize) -> u64 {
+        self.config
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(job as u64 + 1))
+    }
+}
+
+/// Safety-net candidate source: one batch of admits-checked draws
+/// ([`MapSpace::sample_legal`]) so a job never ends incumbent-less just
+/// because uniform sampling has a low admit rate on its shape. Seeded
+/// explicitly; emits exactly one batch.
+struct LegalSeedSource {
+    rng: Rng,
+    want: usize,
+    tries: usize,
+    done: bool,
+}
+
+impl CandidateSource for LegalSeedSource {
+    fn name(&self) -> &str {
+        "legal-seed"
+    }
+
+    fn preadmitted(&self) -> bool {
+        true
+    }
+
+    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+        if self.done {
+            return None;
+        }
+        self.done = true;
+        let batch: Vec<Mapping> = (0..self.want)
+            .filter_map(|_| space.sample_legal(&mut self.rng, self.tries))
+            .collect();
+        if batch.is_empty() {
+            None
+        } else {
+            Some(batch)
+        }
+    }
+}
+
+/// Stage grouping key: the node-name prefix before the first `_`
+/// ("conv4_2b" → "conv4"); names without one are their own stage.
+fn stage_of(name: &str) -> &str {
+    name.split('_').next().unwrap_or(name)
+}
+
+/// Compact shape label for a workload (used by the per-layer table).
+pub fn shape_label(w: &Workload) -> String {
+    match &w.kind {
+        WorkloadKind::Conv2d { n, k, c, x, y, r, s, stride } => {
+            format!("conv {c}>{k} {x}x{y} f{r}x{s} s{stride} n{n}")
+        }
+        WorkloadKind::Gemm { m, n, k } => format!("gemm {m}x{n}x{k}"),
+        WorkloadKind::Tc { equation, .. } => format!("tc {equation}"),
+    }
+}

@@ -184,6 +184,17 @@ impl Problem {
         self.total_macs() as f64 / touched.max(1) as f64
     }
 
+    /// A canonical, name-independent rendering of the problem structure
+    /// (operation, dims with sizes, data-space projections). Two
+    /// problems with equal signatures have identical map spaces and
+    /// identical costs under every model — this is the identity the
+    /// network-level orchestrator dedups search jobs by.
+    pub fn signature(&self) -> String {
+        let mut p = self.clone();
+        p.name.clear();
+        p.to_string()
+    }
+
     /// Validate internal consistency (indices in range, exactly one
     /// output, nonzero bounds). Frontends call this after construction.
     pub fn validate(&self) -> Result<(), String> {
@@ -364,5 +375,20 @@ mod tests {
         let s = p.to_string();
         assert!(s.contains("GEMM"));
         assert!(s.contains("M=4"));
+    }
+
+    #[test]
+    fn signature_ignores_name_but_not_shape() {
+        let mut a = gemm(8, 4, 2);
+        let mut b = gemm(8, 4, 2);
+        a.name = "layer_x".into();
+        b.name = "layer_y".into();
+        assert_eq!(a.signature(), b.signature());
+        assert_ne!(a.signature(), gemm(8, 4, 4).signature());
+        // strided convs differ from unit-stride convs of the same dims
+        assert_ne!(
+            conv2d(1, 8, 4, 7, 7, 3, 3, 1).signature(),
+            conv2d(1, 8, 4, 7, 7, 3, 3, 2).signature()
+        );
     }
 }

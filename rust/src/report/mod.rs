@@ -3,12 +3,20 @@
 
 use std::fmt::Write as _;
 
-/// A rectangular table with a header row.
+/// A rectangular table with a header row, an optional rollup (totals)
+/// row rendered under a separator, and optional row grouping (a blank
+/// line whenever the value in the group column changes) — the shape the
+/// network-level per-layer reports use.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
     pub title: String,
     pub header: Vec<String>,
     pub rows: Vec<Vec<String>>,
+    /// Totals row rendered after the body under a separator.
+    pub rollup: Option<Vec<String>>,
+    /// When set, `render` separates runs of rows whose value in this
+    /// column differs (grouped report).
+    pub group_col: Option<usize>,
 }
 
 impl Table {
@@ -17,6 +25,8 @@ impl Table {
             title: title.to_string(),
             header: header.iter().map(|s| s.to_string()).collect(),
             rows: Vec::new(),
+            rollup: None,
+            group_col: None,
         }
     }
 
@@ -25,11 +35,23 @@ impl Table {
         self.rows.push(cells);
     }
 
+    /// Set the rollup (totals) row.
+    pub fn set_rollup(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "rollup width mismatch");
+        self.rollup = Some(cells);
+    }
+
+    /// Group rows by a column: `render` inserts a blank line between
+    /// consecutive rows whose values in `col` differ.
+    pub fn group_by(&mut self, col: usize) {
+        assert!(col < self.header.len(), "group column out of range");
+        self.group_col = Some(col);
+    }
+
     /// Render as an aligned text table.
     pub fn render(&self) -> String {
-        let ncol = self.header.len();
         let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
-        for row in &self.rows {
+        for row in self.rows.iter().chain(&self.rollup) {
             for (i, c) in row.iter().enumerate() {
                 widths[i] = widths[i].max(c.len());
             }
@@ -46,24 +68,32 @@ impl Table {
                 .collect::<Vec<_>>()
                 .join("  ")
         };
+        let separator = widths
+            .iter()
+            .map(|w| "-".repeat(*w))
+            .collect::<Vec<_>>()
+            .join("  ");
         let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
-        let _ = writeln!(
-            out,
-            "{}",
-            widths
-                .iter()
-                .map(|w| "-".repeat(*w))
-                .collect::<Vec<_>>()
-                .join("  ")
-        );
+        let _ = writeln!(out, "{separator}");
+        let mut prev_group: Option<&str> = None;
         for row in &self.rows {
+            if let Some(col) = self.group_col {
+                if prev_group.is_some_and(|p| p != row[col]) {
+                    let _ = writeln!(out);
+                }
+                prev_group = Some(&row[col]);
+            }
             let _ = writeln!(out, "{}", fmt_row(row, &widths));
         }
-        let _ = ncol;
+        if let Some(rollup) = &self.rollup {
+            let _ = writeln!(out, "{separator}");
+            let _ = writeln!(out, "{}", fmt_row(rollup, &widths));
+        }
         out
     }
 
     /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    /// The rollup row, if any, is the last record.
     pub fn to_csv(&self) -> String {
         let esc = |s: &str| {
             if s.contains(',') || s.contains('"') {
@@ -78,7 +108,7 @@ impl Table {
             "{}",
             self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
         );
-        for row in &self.rows {
+        for row in self.rows.iter().chain(&self.rollup) {
             let _ = writeln!(
                 out,
                 "{}",
@@ -149,6 +179,42 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn rollup_renders_under_separator_and_in_csv() {
+        let mut t = Table::new("sum", &["name", "value"]);
+        t.row(vec!["a".into(), "1".into()]);
+        t.row(vec!["b".into(), "2".into()]);
+        t.set_rollup(vec!["total".into(), "3".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        // title, header, sep, 2 rows, sep, rollup
+        assert_eq!(lines.len(), 7);
+        assert!(lines[6].starts_with("total"));
+        assert!(lines[5].starts_with('-'));
+        let csv = t.to_csv();
+        assert!(csv.trim_end().ends_with("total,3"));
+    }
+
+    #[test]
+    fn grouping_separates_runs() {
+        let mut t = Table::new("", &["grp", "v"]);
+        t.group_by(0);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["x".into(), "2".into()]);
+        t.row(vec!["y".into(), "3".into()]);
+        let s = t.render();
+        // header, sep, 2 x-rows, blank, 1 y-row
+        assert_eq!(s.lines().count(), 6);
+        assert!(s.contains("\n\ny"));
+    }
+
+    #[test]
+    #[should_panic(expected = "rollup width mismatch")]
+    fn rollup_rejects_ragged_rows() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.set_rollup(vec!["1".into()]);
     }
 
     #[test]

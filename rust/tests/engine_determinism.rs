@@ -97,6 +97,51 @@ fn pruning_and_memoization_never_change_the_winner() {
 }
 
 #[test]
+fn network_orchestration_is_thread_count_invariant() {
+    // the whole network-level pipeline (dedup -> session -> re-expand)
+    // must inherit the engine's determinism: byte-identical reports at
+    // 1 and N threads
+    use union::frontend;
+    use union::network::{NetworkOrchestrator, OrchestratorConfig};
+
+    let graph = frontend::resnet50_full(1);
+    let arch = presets::edge();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let run = |threads: Option<usize>| {
+        let config = OrchestratorConfig {
+            samples: 120,
+            seed: 13,
+            threads,
+            ..OrchestratorConfig::default()
+        };
+        NetworkOrchestrator::with_config(&arch, &model, &cons, config)
+            .run(&graph)
+            .expect("network maps")
+    };
+    let r1 = run(Some(1));
+    let rn = run(Some(8));
+    assert_eq!(r1.stats.distinct_jobs, rn.stats.distinct_jobs);
+    assert_eq!(r1.stats.engine, rn.stats.engine, "engine stats depend on threads");
+    assert_eq!(r1.total_cycles, rn.total_cycles);
+    assert_eq!(r1.total_energy_j, rn.total_energy_j);
+    assert_eq!(r1.edp(), rn.edp());
+    for (a, b) in r1.layers.iter().zip(&rn.layers) {
+        assert_eq!(a.result.mapping, b.result.mapping, "{}: mapping depends on threads", a.name);
+        assert_eq!(a.result.score, b.result.score, "{}", a.name);
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.dedup_hit, b.dedup_hit);
+    }
+    // the strongest form: the rendered artifacts are byte-identical
+    assert_eq!(
+        r1.per_layer_table().render(),
+        rn.per_layer_table().render(),
+        "per-layer report depends on thread count"
+    );
+    assert_eq!(r1.summary(), rn.summary());
+}
+
+#[test]
 fn maestro_model_is_thread_count_invariant_too() {
     use union::cost::MaestroModel;
     let p = gemm(32, 32, 32);

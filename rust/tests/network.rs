@@ -1,0 +1,128 @@
+//! Network-level orchestration: cross-layer dedup correctness on the
+//! full ResNet-50 graph, result re-expansion, and report structure.
+
+use union::arch::presets;
+use union::cost::{AnalyticalModel, EnergyTable};
+use union::frontend::{self, WorkloadKind};
+use union::mapspace::Constraints;
+use union::network::{NetworkOrchestrator, OrchestratorConfig};
+
+/// ResNet-50's distinct search-job count: 23 distinct CONV2D shapes
+/// across the 53 convolutions, plus the classifier GEMM.
+const RESNET50_DISTINCT_JOBS: usize = 24;
+
+fn fast_config(samples: usize) -> OrchestratorConfig {
+    OrchestratorConfig { samples, seed: 7, ..OrchestratorConfig::default() }
+}
+
+#[test]
+fn resnet50_graph_has_53_convs_plus_fc() {
+    let g = frontend::resnet50_full(1);
+    assert_eq!(g.total_layers(), 54);
+    let convs: u64 = g
+        .nodes()
+        .iter()
+        .filter(|n| matches!(n.workload.kind, WorkloadKind::Conv2d { .. }))
+        .map(|n| n.repeat)
+        .sum();
+    assert_eq!(convs, 53);
+}
+
+#[test]
+fn orchestrator_evaluates_only_distinct_shapes_on_resnet50() {
+    let g = frontend::resnet50_full(1);
+    let arch = presets::edge();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let orch = NetworkOrchestrator::with_config(&arch, &model, &cons, fast_config(150));
+    let r = orch.run(&g).expect("ResNet-50 maps end-to-end on edge");
+
+    // THE dedup claim: distinct jobs equal the distinct-shape count,
+    // not the raw layer count
+    assert_eq!(r.stats.distinct_jobs, RESNET50_DISTINCT_JOBS);
+    assert_eq!(r.stats.layers, 54);
+    assert!(r.stats.distinct_jobs < r.stats.layers as usize);
+    let expected_rate = (54.0 - RESNET50_DISTINCT_JOBS as f64) / 54.0;
+    assert!((r.stats.dedup_hit_rate - expected_rate).abs() < 1e-12);
+
+    // every node got a result; dedup hits share their job's result exactly
+    assert_eq!(r.layers.len(), g.len());
+    assert!(r.layers.iter().any(|l| l.dedup_hit));
+    for l in &r.layers {
+        let first = r
+            .layers
+            .iter()
+            .find(|o| o.job == l.job)
+            .expect("job has a first layer");
+        assert!(!first.dedup_hit, "first layer of a job must be the searched one");
+        assert_eq!(l.result.score, first.result.score, "{}", l.name);
+        assert_eq!(l.result.mapping, first.result.mapping, "{}", l.name);
+    }
+
+    // rollups: totals accumulate repeat-weighted per-layer costs
+    let cycles: f64 = r
+        .layers
+        .iter()
+        .map(|l| l.result.cost.cycles * l.repeat as f64)
+        .sum();
+    assert!((r.total_cycles - cycles).abs() <= 1e-6 * cycles.abs());
+    assert!(r.total_energy_j > 0.0 && r.total_latency_s > 0.0);
+    assert!((r.edp() - r.total_energy_j * r.total_latency_s).abs() <= f64::EPSILON * r.edp());
+}
+
+#[test]
+fn per_layer_table_groups_stages_and_rolls_up() {
+    let g = frontend::resnet50_full(1);
+    let arch = presets::edge();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let orch = NetworkOrchestrator::with_config(&arch, &model, &cons, fast_config(100));
+    let r = orch.run(&g).expect("network maps");
+    let t = r.per_layer_table();
+    assert_eq!(t.rows.len(), r.layers.len());
+    assert!(t.rollup.is_some(), "network table must carry a rollup row");
+    assert_eq!(t.group_col, Some(0));
+    let rendered = t.render();
+    assert!(rendered.contains("conv1"));
+    assert!(rendered.contains("fc1000"));
+    assert!(rendered.contains("reused"));
+    // CSV includes the rollup as the last record
+    let csv = t.to_csv();
+    assert_eq!(csv.lines().count(), 1 + t.rows.len() + 1);
+}
+
+#[test]
+fn duplicate_nodes_in_a_custom_graph_dedup_to_one_job() {
+    use union::frontend::Workload;
+    use union::network::WorkloadGraph;
+    let mut g = WorkloadGraph::new("dup");
+    // same shape under three different layer names + one odd one out
+    g.add(Workload::gemm("fc_a", 64, 64, 64));
+    g.add(Workload::gemm("fc_b", 64, 64, 64));
+    g.add_repeated(Workload::gemm("fc_c", 64, 64, 64), 2);
+    g.add(Workload::gemm("fc_d", 32, 32, 32));
+    let arch = presets::edge();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let orch = NetworkOrchestrator::with_config(&arch, &model, &cons, fast_config(200));
+    let r = orch.run(&g).expect("maps");
+    assert_eq!(r.stats.distinct_jobs, 2);
+    assert_eq!(r.stats.layers, 5);
+    assert_eq!(r.layers[0].job, r.layers[1].job);
+    assert_eq!(r.layers[0].job, r.layers[2].job);
+    assert!(!r.layers[0].dedup_hit);
+    assert!(r.layers[1].dedup_hit && r.layers[2].dedup_hit);
+    assert!(!r.layers[3].dedup_hit);
+    assert_ne!(r.layers[3].job, r.layers[0].job);
+}
+
+#[test]
+fn empty_graph_is_rejected() {
+    use union::network::WorkloadGraph;
+    let g = WorkloadGraph::new("empty");
+    let arch = presets::edge();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let orch = NetworkOrchestrator::new(&arch, &model, &cons);
+    assert!(orch.run(&g).is_err());
+}

@@ -4,7 +4,7 @@
 
 use union::arch::presets;
 use union::cost::{AnalyticalModel, CostModel, EnergyTable, ReuseModel, TileAnalysis};
-use union::mapspace::{Constraints, MapSpace};
+use union::mapspace::{constraints_from_str, constraints_to_str, Constraints, MapSpace};
 use union::problem::{conv2d, gemm};
 use union::util::divisors::{divisors, tilings};
 use union::util::quickcheck::{Gen, QuickCheck};
@@ -231,6 +231,59 @@ fn prop_config_roundtrip() {
         let doc2 = union::config::parse(&doc.to_string()).map_err(|e| e.to_string())?;
         if doc != doc2 {
             return Err(format!("roundtrip mismatch:\n{doc}\nvs\n{doc2}"));
+        }
+        Ok(())
+    });
+}
+
+/// Draw a random [`Constraints`] covering every field, including
+/// `max_parallel_dims_per_level`. Utilization bounds come from a 1/64
+/// grid (exact in binary and in decimal rendering), dim names from the
+/// CONV2D/GEMM vocabulary.
+fn random_constraints(g: &mut Gen) -> Constraints {
+    let names = ["N", "K", "C", "X", "Y", "R", "S", "M"];
+    let mut c = Constraints::default();
+    if g.range(0, 1) == 1 {
+        let n = g.range(1, 4);
+        c.parallel_dims = Some(g.vec(n, |g| g.choose(&names).to_string()));
+    }
+    let a = g.range(0, 64) as f64 / 64.0;
+    let b = g.range(0, 64) as f64 / 64.0;
+    c.min_utilization = a.min(b);
+    c.max_utilization = a.max(b);
+    for _ in 0..g.range(0, 2) {
+        let level = g.range(0, 3);
+        let len = g.range(1, 7);
+        let order = g.vec(len, |g| g.choose(&names).to_string());
+        c.fixed_orders.push((level, order));
+    }
+    if g.range(0, 1) == 1 {
+        let len = g.range(1, 6);
+        c.allowed_tile_sizes = Some(g.vec(len, |g| 1u64 << g.range(0, 7)));
+    }
+    if g.range(0, 1) == 1 {
+        c.max_parallel_dims_per_level = Some(g.range(1, 4));
+    }
+    c
+}
+
+#[test]
+fn prop_constraints_roundtrip_parse_render_parse() {
+    // parse(render(c)) == c for every field combination, and render is
+    // a fixpoint (render(parse(render(c))) == render(c))
+    QuickCheck::new().cases(200).seed(0xC0_75).check("constraints-roundtrip", |g| {
+        let c = random_constraints(g);
+        let text = constraints_to_str(&c);
+        let parsed = constraints_from_str(&text)
+            .map_err(|e| format!("rendered file unparseable: {e}\n---\n{text}"))?;
+        if parsed != c {
+            return Err(format!(
+                "round trip changed constraints:\n{c:?}\nvs\n{parsed:?}\n---\n{text}"
+            ));
+        }
+        let text2 = constraints_to_str(&parsed);
+        if text2 != text {
+            return Err(format!("render not a fixpoint:\n---\n{text}\n---\n{text2}"));
         }
         Ok(())
     });

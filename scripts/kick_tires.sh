@@ -30,16 +30,29 @@ for fig in "${ARTIFACTS[@]}"; do
     "$BIN" casestudy "$fig" $EFFORT_FLAG | tee "$OUT/$fig.txt"
 done
 
+# network-level co-design: ResNet-50 end to end on the edge preset. At
+# fast effort the orchestrator's cross-layer dedup (54 layers -> ~24
+# distinct search jobs) keeps this CI-cheap.
+echo "== network_resnet50 =="
+# shellcheck disable=SC2086
+"$BIN" network --model resnet50 --arch edge $EFFORT_FLAG | tee "$OUT/network_resnet50.txt"
+
+CHECK_FILES=("${ARTIFACTS[@]}" network_resnet50)
+
 echo "== checking outputs =="
 status=0
-for fig in "${ARTIFACTS[@]}"; do
+for fig in "${CHECK_FILES[@]}"; do
     if [[ ! -s "$OUT/$fig.txt" ]]; then
         echo "ERROR: $OUT/$fig.txt is empty" >&2
         status=1
     fi
 done
+if ! grep -q "distinct search jobs" "$OUT/network_resnet50.txt"; then
+    echo "ERROR: network run did not report its dedup summary" >&2
+    status=1
+fi
 
 if [[ $status -eq 0 ]]; then
-    echo "kick-tires OK: ${#ARTIFACTS[@]} artifacts regenerated in $OUT/"
+    echo "kick-tires OK: ${#CHECK_FILES[@]} artifacts regenerated in $OUT/"
 fi
 exit $status
