@@ -1,0 +1,57 @@
+//! Regenerates the hardware design-space exploration sweep (the
+//! edge-class grid family × full ResNet-50) and reports the Pareto
+//! frontier plus the pruning and session-reuse statistics. The
+//! acceptance checks for the DSE path live here: dominance pruning must
+//! skip at least 25% of the arch-point evaluation decisions, and the
+//! frontier must be non-trivial. With `UNION_BENCH_DIR` set, the run is
+//! recorded as `BENCH_dse_sweep.json` for the bench-regression gate.
+
+use union::experiments::{dse_sweep, Effort};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(1, 1);
+    let mut last = None;
+    b.bench_rate("dse_sweep(fast, resnet50, edge-grid)", "cand", || {
+        let (_, result) = dse_sweep(Effort::Fast);
+        let proposed = result.stats.engine.proposed as u64;
+        last = Some(result);
+        proposed
+    });
+    let r = last.expect("bench ran at least once");
+    print!("{}", r.points_table().render());
+    println!();
+    print!("{}", r.frontier_table().render());
+    println!("{}", r.summary());
+
+    let s = &r.stats;
+    assert!(s.evaluated > 0, "sweep must evaluate something");
+    assert!(s.frontier_size >= 1, "frontier must be non-empty");
+    assert!(
+        s.pruned_rate() >= 0.25,
+        "dominance pruning must skip >= 25% of arch-point evaluations, got {:.1}% \
+         ({} pruned / {} decisions)",
+        100.0 * s.pruned_rate(),
+        s.pruned,
+        s.evaluated + s.pruned,
+    );
+    assert!(
+        s.warm_seeded_jobs > 0,
+        "cross-point session reuse must warm-start later searches"
+    );
+
+    b.gated_metric("dse_dominated_skip_rate", s.pruned_rate());
+    // warm-seed coverage is gated as a rate over jobs run, not an
+    // absolute count: better pruning evaluates fewer points, which
+    // lowers the absolute count without any regression
+    b.gated_metric(
+        "dse_warm_seed_rate",
+        s.warm_seeded_jobs as f64 / s.jobs_run.max(1) as f64,
+    );
+    b.metric("dse_warm_seeded_jobs", s.warm_seeded_jobs as f64);
+    b.metric("dse_dominated_skips", s.pruned as f64);
+    b.metric("dse_evaluated_points", s.evaluated as f64);
+    b.metric("dse_frontier_size", s.frontier_size as f64);
+    b.metric("dse_engine_memo_hits", s.engine.memo_hits as f64);
+    b.write_json_env("dse_sweep");
+}

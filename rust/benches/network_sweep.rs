@@ -2,14 +2,23 @@
 //! ResNet-50 + the DLRM/BERT FC stacks on edge and cloud) and reports
 //! the cross-layer dedup the orchestrator achieved. The acceptance
 //! check for the network path lives here: the distinct-job count must
-//! be strictly below the layer count on ResNet-50.
+//! be strictly below the layer count on ResNet-50. With
+//! `UNION_BENCH_DIR` set, the run is recorded as
+//! `BENCH_network_sweep.json` for the bench-regression gate.
 
 use union::experiments::{network_sweep, Effort};
 use union::util::bench::Bencher;
 
 fn main() {
     let mut b = Bencher::with_iters(1, 3);
-    let (table, results) = b.bench("network_sweep(fast)", || network_sweep(Effort::Fast));
+    let mut last = None;
+    b.bench_rate("network_sweep(fast)", "cand", || {
+        let (table, results) = network_sweep(Effort::Fast);
+        let proposed: u64 = results.iter().map(|r| r.stats.engine.proposed as u64).sum();
+        last = Some((table, results));
+        proposed
+    });
+    let (table, results) = last.expect("bench ran at least once");
     print!("{}", table.render());
     for r in &results {
         println!("{}", r.summary());
@@ -30,4 +39,7 @@ fn main() {
         resnet.stats.distinct_jobs,
         100.0 * resnet.stats.dedup_hit_rate
     );
+    b.gated_metric("resnet50_dedup_hit_rate", resnet.stats.dedup_hit_rate);
+    b.metric("networks_swept", results.len() as f64);
+    b.write_json_env("network_sweep");
 }

@@ -182,6 +182,8 @@ fn main() {
         "fig3 speedup: {vs_pre:.2}x vs pre-engine parallel batch, \
          {vs_seq:.2}x vs candidate-by-candidate loop (target >= 2x)"
     );
+    b.metric("fig3_engine_speedup_vs_preengine", vs_pre);
+    b.metric("fig3_engine_speedup_vs_sequential", vs_seq);
 
     // --- end-to-end search (engine inside) ---
     b.bench("random_search_2000 (gemm, engine)", || {
@@ -221,6 +223,8 @@ fn main() {
             r.stats.distinct_jobs < r.stats.layers as usize,
             "dedup must evaluate fewer jobs than layers"
         );
+        b.gated_metric("resnet50_dedup_hit_rate", r.stats.dedup_hit_rate);
+        b.metric("resnet50_distinct_jobs", r.stats.distinct_jobs as f64);
     }
 
     // --- frontend lowering pipeline ---
@@ -247,4 +251,6 @@ fn main() {
              run `make artifacts` and build with --features pjrt)"
         );
     }
+
+    b.write_json_env("perf_hotpath");
 }

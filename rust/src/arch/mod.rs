@@ -56,7 +56,29 @@ impl Memory {
     pub fn holds(&self, need_bytes: u64) -> bool {
         self.size_bytes == u64::MAX || need_bytes <= self.size_bytes
     }
+
+    /// Silicon-area proxy of ONE instance of this memory, in
+    /// [`AREA_PER_KB_SRAM`] units per on-chip KB. DRAM (unbounded) is
+    /// off-chip and contributes nothing to die area.
+    pub fn area_proxy(&self) -> f64 {
+        if self.size_bytes == u64::MAX {
+            0.0
+        } else {
+            self.size_bytes as f64 / 1024.0 * AREA_PER_KB_SRAM
+        }
+    }
 }
+
+/// Area-proxy constant: one KB of on-chip SRAM. The proxy is a relative
+/// unit (no absolute mm²): what matters for design-space exploration is
+/// that doubling a buffer or the PE array moves the area axis of the
+/// Pareto frontier consistently.
+pub const AREA_PER_KB_SRAM: f64 = 1.0;
+
+/// Area-proxy constant: one PE (MAC unit + pipeline registers), in the
+/// same relative units as [`AREA_PER_KB_SRAM`] — a uint8 MAC plus its
+/// control is a fraction of a KB of SRAM.
+pub const AREA_PER_PE: f64 = 0.25;
 
 /// One level of the cluster hierarchy.
 #[derive(Debug, Clone, PartialEq)]
@@ -133,6 +155,25 @@ impl Arch {
     /// Innermost (PE) level index.
     pub fn pe_level(&self) -> usize {
         self.levels.len() - 1
+    }
+
+    /// Relative silicon-area proxy of the whole machine: every instance
+    /// of every on-chip memory (L1s count once per PE, a chiplet GLB
+    /// once per chiplet) plus [`AREA_PER_PE`] per MAC unit. DRAM is
+    /// off-chip and free. This is the third objective axis of the
+    /// design-space explorer ([`crate::dse`]): latency and energy come
+    /// from the cost model, area from the architecture alone.
+    pub fn area_proxy(&self) -> f64 {
+        let mem: f64 = self
+            .levels
+            .iter()
+            .enumerate()
+            .map(|(i, l)| match &l.memory {
+                Some(m) => self.instances(i) as f64 * m.area_proxy(),
+                None => 0.0,
+            })
+            .sum();
+        mem + self.num_pes() as f64 * AREA_PER_PE
     }
 
     /// Validate structural invariants.
@@ -268,6 +309,26 @@ mod tests {
         let mut c = presets::edge();
         c.word_bytes = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn area_proxy_counts_all_onchip_instances() {
+        // edge: one 100 KB L2 + 256 × 0.5 KB L1 + 256 PEs, DRAM free
+        let a = presets::edge();
+        let want = 100.0 * AREA_PER_KB_SRAM
+            + 256.0 * 0.5 * AREA_PER_KB_SRAM
+            + 256.0 * AREA_PER_PE;
+        assert!((a.area_proxy() - want).abs() < 1e-9, "{}", a.area_proxy());
+        // aspect ratio does not change the area proxy (same resources)
+        for (r, c) in presets::edge_aspect_ratios() {
+            assert!((presets::edge_flexible(r, c).area_proxy() - want).abs() < 1e-9);
+        }
+        // chiplet package: 16 GLBs of 100 KB count once per chiplet, and
+        // the fill-bandwidth knob is area-free
+        let c1 = presets::chiplet16(1.0);
+        let c2 = presets::chiplet16(32.0);
+        assert!((c1.area_proxy() - c2.area_proxy()).abs() < 1e-9);
+        assert!(c1.area_proxy() > 16.0 * 100.0 * AREA_PER_KB_SRAM);
     }
 
     #[test]

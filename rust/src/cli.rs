@@ -202,6 +202,37 @@ pub fn parse_arch(spec: &str) -> Result<crate::arch::Arch, String> {
     ))
 }
 
+/// Parse a DSE arch-space spec: `edge-grid` (the default PE-grid × L2
+/// family), `aspect:edge` / `aspect:cloud` (the Fig. 10 families), or
+/// `chiplet[:BW,BW,...]` (the Fig. 11 family, optionally with explicit
+/// fill bandwidths).
+pub fn parse_arch_space(spec: &str) -> Result<crate::dse::ArchSpace, String> {
+    use crate::dse;
+    if spec == "edge-grid" {
+        return Ok(dse::edge_grid_space());
+    }
+    if let Some(class) = spec.strip_prefix("aspect:") {
+        return dse::aspect_ratio_space(class);
+    }
+    if spec == "chiplet" {
+        return Ok(dse::chiplet_space(&crate::experiments::FIG11_FILL_BW));
+    }
+    if let Some(rest) = spec.strip_prefix("chiplet:") {
+        let bws: Vec<f64> = rest
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad fill bandwidth '{t}' in '{spec}'"))
+            })
+            .collect::<Result<_, _>>()?;
+        return Ok(dse::chiplet_space(&bws));
+    }
+    Err(format!(
+        "unknown arch space '{spec}' (edge-grid, aspect:edge, aspect:cloud, chiplet[:BW,...])"
+    ))
+}
+
 fn parse_ratio(rc: &str) -> Result<(u64, u64), String> {
     let (r, c) = rc.split_once('x').ok_or_else(|| format!("bad ratio '{rc}'"))?;
     Ok((
@@ -274,5 +305,17 @@ mod tests {
         assert_eq!(parse_arch("chiplet:2").unwrap().num_pes(), 4096);
         assert_eq!(parse_arch("edge:4x64").unwrap().pe_array_shape(), (64, 4));
         assert!(parse_arch("bogus").is_err());
+    }
+
+    #[test]
+    fn arch_space_specs() {
+        assert_eq!(parse_arch_space("edge-grid").unwrap().len(), 21);
+        assert_eq!(parse_arch_space("aspect:edge").unwrap().len(), 5);
+        assert_eq!(parse_arch_space("aspect:cloud").unwrap().len(), 6);
+        assert_eq!(parse_arch_space("chiplet").unwrap().len(), 8);
+        assert_eq!(parse_arch_space("chiplet:1,4,16").unwrap().len(), 3);
+        assert!(parse_arch_space("aspect:warp").is_err());
+        assert!(parse_arch_space("chiplet:fast").is_err());
+        assert!(parse_arch_space("bogus").is_err());
     }
 }

@@ -131,6 +131,37 @@ impl CostModel for AnalyticalModel {
         })
     }
 
+    /// Mapping-independent floor for the whole architecture. Beyond the
+    /// per-mapping bound (with `PEs-used` relaxed to the machine's full
+    /// PE count), it adds the *compulsory DRAM traffic*: the tile
+    /// analysis pins every tensor's footprint at the outermost level to
+    /// its full size, so DRAM reads+writes are ≥ Σ tensor words for
+    /// every mapping — which floors both the DRAM bandwidth term of
+    /// latency and the DRAM access term of energy.
+    fn arch_lower_bound(&self, problem: &Problem, arch: &Arch) -> Option<CostBound> {
+        let inner = arch.levels.iter().rev().find_map(|l| l.memory.as_ref())?;
+        let outer = arch.levels.first().and_then(|l| l.memory.as_ref())?;
+        let macs = problem.total_macs() as f64;
+        let pes = arch.num_pes().max(1) as f64;
+        let mac_pj = macs
+            * self.energy.mac_pj
+            * (problem.operation.operands() as f64 - 1.0).max(1.0);
+        let inner_accesses = macs * (problem.data_spaces.len() as f64 + 1.0);
+        let dram_words: f64 = problem
+            .data_spaces
+            .iter()
+            .map(|ds| ds.full_size(&problem.dims) as f64)
+            .sum();
+        let dram_cycles = dram_words * arch.word_bytes as f64 / outer.fill_bw;
+        Some(CostBound {
+            cycles: (macs / pes).max(dram_cycles),
+            energy_pj: mac_pj
+                + inner_accesses * self.energy.access_pj(inner)
+                + dram_words * self.energy.access_pj(outer),
+            clock_ghz: arch.clock_ghz,
+        })
+    }
+
     /// Monotone floor, no tile analysis needed:
     ///
     /// * `cycles ≥ MACs / PEs-used` — the exact compute-bound term the
@@ -308,6 +339,56 @@ mod tests {
             checked += 1;
         }
         assert!(checked > 10);
+    }
+
+    #[test]
+    fn arch_lower_bound_never_exceeds_true_cost() {
+        // the arch-level floor must under-estimate EVERY legal mapping,
+        // on flat and chiplet hierarchies alike
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let cons = crate::mapspace::Constraints::default();
+        for (arch, seed) in [
+            (presets::edge(), 81u64),
+            (presets::edge_flexible(4, 64), 82),
+            (presets::chiplet16(2.0), 83),
+        ] {
+            let p = gemm(64, 64, 64);
+            let space = crate::mapspace::MapSpace::new(&p, &arch, &cons);
+            let b = model.arch_lower_bound(&p, &arch).unwrap();
+            let mut rng = crate::util::rng::Rng::new(seed);
+            let mut checked = 0;
+            for _ in 0..50 {
+                let Some(m) = space.sample_legal(&mut rng, 200) else { continue };
+                let est = model.evaluate_prechecked(&p, &arch, &m).unwrap();
+                assert!(b.cycles <= est.cycles + 1e-9, "{}: cycles floor too high", arch.name);
+                assert!(
+                    b.energy_pj <= est.energy_pj + 1e-9,
+                    "{}: energy floor too high",
+                    arch.name
+                );
+                // the arch floor also sits under the per-mapping floor
+                let mb = model.lower_bound(&p, &arch, &m).unwrap();
+                assert!(b.cycles <= mb.cycles + 1e-9);
+                checked += 1;
+            }
+            assert!(checked > 10, "{}: too few legal samples", arch.name);
+        }
+    }
+
+    #[test]
+    fn arch_lower_bound_tracks_resources() {
+        // fewer PEs or less DRAM bandwidth can only raise the floor
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let p = gemm(256, 256, 256);
+        let big = presets::spatial_2d("big", 16, 16, 512, 100 * 1024, 32.0, 32.0, 1);
+        let small = presets::spatial_2d("small", 4, 4, 512, 100 * 1024, 32.0, 32.0, 1);
+        let starved = presets::spatial_2d("starved", 16, 16, 512, 100 * 1024, 32.0, 0.25, 1);
+        let b_big = model.arch_lower_bound(&p, &big).unwrap();
+        let b_small = model.arch_lower_bound(&p, &small).unwrap();
+        let b_starved = model.arch_lower_bound(&p, &starved).unwrap();
+        assert!(b_small.cycles > b_big.cycles, "16 PEs must floor higher than 256");
+        assert!(b_starved.cycles > b_big.cycles, "starved DRAM must floor latency");
+        assert!(b_small.edp() > b_big.edp());
     }
 
     #[test]

@@ -159,6 +159,21 @@ impl CostModel for MaestroModel {
             clock_ghz: arch.clock_ghz,
         })
     }
+
+    /// Mapping-independent floor: the per-mapping bound with `PEs-used`
+    /// relaxed to the machine's full PE count (`pes_used ≤ num_pes` for
+    /// every legal mapping, so this only loosens an already-sound bound).
+    fn arch_lower_bound(&self, problem: &Problem, arch: &Arch) -> Option<CostBound> {
+        let inner = arch.levels.iter().rev().find_map(|l| l.memory.as_ref())?;
+        let macs = problem.total_macs() as f64;
+        let pes = arch.num_pes().max(1) as f64;
+        let accesses = macs * (problem.data_spaces.len() as f64 + 1.0);
+        Some(CostBound {
+            cycles: macs / pes,
+            energy_pj: macs * self.energy.mac_pj + accesses * self.energy.access_pj(inner),
+            clock_ghz: arch.clock_ghz,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -245,6 +260,29 @@ mod tests {
             checked += 1;
         }
         assert!(checked > 10);
+    }
+
+    #[test]
+    fn arch_lower_bound_sits_under_mapping_bound() {
+        let p = gemm(64, 64, 64);
+        let a = presets::edge();
+        let model = MaestroModel::new(EnergyTable::default_8bit());
+        let ab = model.arch_lower_bound(&p, &a).unwrap();
+        let cons = crate::mapspace::Constraints::default();
+        let space = crate::mapspace::MapSpace::new(&p, &a, &cons);
+        let mut rng = crate::util::rng::Rng::new(79);
+        let mut checked = 0;
+        for _ in 0..30 {
+            let Some(m) = space.sample_legal(&mut rng, 200) else { continue };
+            let mb = model.lower_bound(&p, &a, &m).unwrap();
+            assert!(ab.cycles <= mb.cycles + 1e-9);
+            assert!(ab.energy_pj <= mb.energy_pj + 1e-9);
+            let est = model.evaluate_prechecked(&p, &a, &m).unwrap();
+            assert!(ab.cycles <= est.cycles + 1e-9);
+            assert!(ab.energy_pj <= est.energy_pj + 1e-9);
+            checked += 1;
+        }
+        assert!(checked > 5);
     }
 
     #[test]

@@ -164,6 +164,19 @@ pub trait CostModel: Sync {
     ) -> Option<CostBound> {
         None
     }
+
+    /// A *mapping-independent* monotone lower bound: a floor on what ANY
+    /// legal mapping of `problem` can achieve on `arch` under this
+    /// model. The design-space explorer ([`crate::dse`]) sums it across
+    /// a workload graph to skip whole architecture points whose best
+    /// case is already dominated by an evaluated point, so soundness
+    /// matters more than tightness: every field must be ≤ the
+    /// corresponding field of `evaluate_prechecked` for every mapping
+    /// the map space admits. `None` disables architecture-level pruning
+    /// for this model.
+    fn arch_lower_bound(&self, _problem: &Problem, _arch: &Arch) -> Option<CostBound> {
+        None
+    }
 }
 
 #[cfg(test)]

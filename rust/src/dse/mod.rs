@@ -1,0 +1,35 @@
+//! **Hardware design-space exploration** (DSE): the architecture side
+//! of co-design as a first-class search space.
+//!
+//! The paper's hardware case studies (Fig. 10 aspect ratios, Fig. 11
+//! chiplet bandwidth — and their companion study, "Evaluating Spatial
+//! Accelerator Architectures with Tiled Matrix-Matrix Multiplication",
+//! arXiv 2106.10499) show that the best mapping flips as the
+//! architecture changes, so hardware and mapping must be searched
+//! *jointly*. This module turns those bespoke per-figure loops into
+//! special cases of a generic co-search:
+//!
+//! * [`ArchSpace`] — a parameterized, deterministically ordered family
+//!   of concrete architectures (explicit lists or
+//!   [`GridSpaceBuilder`] cross products with validity constraints);
+//! * [`ParetoFrontier`] — weak-dominance frontier over minimized
+//!   objectives, shared by pruning and reporting;
+//! * [`DseOrchestrator`] — (arch × workload-graph) co-search through
+//!   one engine session, with bound-based dominance skipping of whole
+//!   arch points and cross-point warm-started searches;
+//! * [`candidate_sweep`] — the figure path: search at selected points,
+//!   cross-evaluate the pooled winners everywhere (Fig. 10/11 are now
+//!   one call each).
+
+mod orchestrator;
+mod pareto;
+mod space;
+
+pub use orchestrator::{
+    candidate_sweep, CandidateSweep, DseConfig, DseEval, DseOrchestrator, DsePoint, DseResult,
+    DseStats, PointStatus,
+};
+pub use pareto::{dominates, ParetoFrontier};
+pub use space::{
+    aspect_ratio_space, chiplet_space, edge_grid_space, ArchPoint, ArchSpace, GridSpaceBuilder,
+};

@@ -1,0 +1,665 @@
+//! The [`DseOrchestrator`]: (architecture × workload-graph) co-search
+//! with incumbent-based dominance pruning.
+//!
+//! For every point of an [`ArchSpace`] the orchestrator *could* run a
+//! full network-level mapping search ([`NetworkOrchestrator`] as the
+//! inner loop). Two reuse layers make the sweep cheaper than the sum
+//! of its parts:
+//!
+//! 1. **bound-based skipping** — before evaluating a point, the
+//!    mapping-independent [`CostModel::arch_lower_bound`] is summed
+//!    across the workload graph. If an already-evaluated point weakly
+//!    dominates the candidate's `(objective-score bound, area)` pair,
+//!    the whole point — every per-layer search job — is skipped.
+//!    Pruning and the reported frontier share the same dominance space
+//!    (`objective score` × `area proxy`; with the default EDP objective
+//!    that is the area-vs-energy-delay trade-off curve), which makes
+//!    skipping provably lossless: the true score can only be worse
+//!    than its bound, so a dominated bound proves a dominated point;
+//! 2. **cross-point search reuse** — all inner runs share one engine
+//!    [`Session`] (warmed memo allocations, one stats stream) and one
+//!    [`WarmStartCache`]: a layer's winning mapping on one arch point
+//!    seeds the same layer's search on the next, so later points start
+//!    from a realistic incumbent and prune harder from batch one.
+//!
+//! Evaluation order is deterministic (descending PE count, then
+//! ascending area): the capable machines are measured first, which is
+//! exactly what gives the dominance test teeth against
+//! small-array/large-cache configurations later in the order. The
+//! reported frontier and every table are byte-identical across thread
+//! counts, inheriting the engine's determinism contract.
+
+use crate::arch::Arch;
+use crate::cost::{CostBound, CostModel};
+use crate::engine::{EngineConfig, EngineStats, Session};
+use crate::mappers::{portfolio_sources, Objective};
+use crate::mapping::Mapping;
+use crate::mapspace::{Constraints, MapSpace};
+use crate::network::{NetworkOrchestrator, OrchestratorConfig, WarmStartCache, WorkloadGraph};
+use crate::problem::Problem;
+use crate::report::Table;
+
+use super::pareto::ParetoFrontier;
+use super::space::ArchSpace;
+
+/// Knobs for a design-space exploration run.
+#[derive(Debug, Clone)]
+pub struct DseConfig {
+    /// Scalar objective the inner mapping searches minimize (and the
+    /// score axis of the pruning frontier).
+    pub objective: Objective,
+    /// Candidate budget per distinct search job.
+    pub samples: usize,
+    /// Base seed for the inner searches (identical across arch points,
+    /// so per-point differences come from the hardware, not the RNG).
+    pub seed: u64,
+    /// Worker threads for batch evaluation; `None` = all available.
+    pub threads: Option<usize>,
+    /// Skip arch points whose summed lower bound is already dominated.
+    pub prune: bool,
+    /// Seed each layer's search with its winner from earlier points.
+    pub warm_start: bool,
+}
+
+impl Default for DseConfig {
+    fn default() -> Self {
+        DseConfig {
+            objective: Objective::Edp,
+            samples: 600,
+            seed: 42,
+            threads: None,
+            prune: true,
+            warm_start: true,
+        }
+    }
+}
+
+/// Why a point did or did not get evaluated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PointStatus {
+    /// Evaluated and on the final (objective score, area) frontier.
+    Frontier,
+    /// Evaluated but dominated by other evaluated points.
+    Dominated,
+    /// Skipped: its lower bound was already dominated.
+    Pruned,
+    /// Not evaluable (failed validation, non-conformable, or no legal
+    /// mapping), with the reason.
+    Invalid(String),
+}
+
+impl PointStatus {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PointStatus::Frontier => "frontier",
+            PointStatus::Dominated => "dominated",
+            PointStatus::Pruned => "pruned",
+            PointStatus::Invalid(_) => "invalid",
+        }
+    }
+}
+
+/// Network-level measurements of one evaluated arch point.
+#[derive(Debug, Clone)]
+pub struct DseEval {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub edp: f64,
+    /// Scalar objective score ([`DseConfig::objective`]).
+    pub score: f64,
+    pub distinct_jobs: usize,
+    pub dedup_hit_rate: f64,
+    pub warm_seeded_jobs: usize,
+}
+
+/// One arch point's outcome in the sweep.
+#[derive(Debug, Clone)]
+pub struct DsePoint {
+    /// Index into the originating [`ArchSpace`].
+    pub index: usize,
+    pub arch: String,
+    pub label: String,
+    pub pes: u64,
+    pub area: f64,
+    /// Network-summed lower bound on the objective score, if the model
+    /// provides one.
+    pub bound_score: Option<f64>,
+    pub eval: Option<DseEval>,
+    pub status: PointStatus,
+}
+
+/// Sweep-level counters.
+#[derive(Debug, Clone)]
+pub struct DseStats {
+    /// Arch points in the space.
+    pub points: usize,
+    pub evaluated: usize,
+    /// Points skipped whole by dominance pruning.
+    pub pruned: usize,
+    pub invalid: usize,
+    pub frontier_size: usize,
+    /// Search jobs run across all points (one session).
+    pub jobs_run: usize,
+    /// Jobs opened from a warm-start seed.
+    pub warm_seeded_jobs: usize,
+    /// Aggregate engine counters across the whole sweep.
+    pub engine: EngineStats,
+}
+
+impl DseStats {
+    /// Fraction of evaluation *decisions* resolved by dominance pruning:
+    /// `pruned / (evaluated + pruned)`.
+    pub fn pruned_rate(&self) -> f64 {
+        let decisions = self.evaluated + self.pruned;
+        if decisions == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / decisions as f64
+        }
+    }
+}
+
+/// End-to-end result of a design-space exploration.
+#[derive(Debug, Clone)]
+pub struct DseResult {
+    pub space: String,
+    pub network: String,
+    pub model: String,
+    pub objective: String,
+    /// Every point, in evaluation order.
+    pub points: Vec<DsePoint>,
+    pub stats: DseStats,
+}
+
+impl DseResult {
+    /// The frontier points, in evaluation order.
+    pub fn frontier(&self) -> Vec<&DsePoint> {
+        self.points
+            .iter()
+            .filter(|p| p.status == PointStatus::Frontier)
+            .collect()
+    }
+
+    /// All points with their outcome — the main sweep report.
+    pub fn points_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "DSE: {} on {} ({}, objective {})",
+                self.space, self.network, self.model, self.objective
+            ),
+            &[
+                "arch", "PEs", "area", "status", "bound", "latency (s)", "energy (J)",
+                "score", "jobs", "reuse",
+            ],
+        );
+        for p in &self.points {
+            let (lat, en, score, jobs, reuse) = match &p.eval {
+                Some(e) => (
+                    format!("{:.3e}", e.latency_s),
+                    format!("{:.3e}", e.energy_j),
+                    format!("{:.3e}", e.score),
+                    e.distinct_jobs.to_string(),
+                    format!("{:.1}%", 100.0 * e.dedup_hit_rate),
+                ),
+                None => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+            };
+            t.row(vec![
+                p.label.clone(),
+                p.pes.to_string(),
+                format!("{:.0}", p.area),
+                p.status.name().to_string(),
+                p.bound_score
+                    .map(|b| format!("{b:.3e}"))
+                    .unwrap_or_else(|| "-".into()),
+                lat,
+                en,
+                score,
+                jobs,
+                reuse,
+            ]);
+        }
+        t
+    }
+
+    /// Only the Pareto-optimal points of the (objective score, area)
+    /// trade-off, with their latency/energy/EDP breakdown.
+    pub fn frontier_table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Pareto frontier ({} vs area): {} on {}",
+                self.objective, self.space, self.network
+            ),
+            &["arch", "PEs", "area", "latency (s)", "energy (J)", "EDP (Js)", "score"],
+        );
+        for p in self.frontier() {
+            let e = p.eval.as_ref().expect("frontier points were evaluated");
+            t.row(vec![
+                p.label.clone(),
+                p.pes.to_string(),
+                format!("{:.0}", p.area),
+                format!("{:.3e}", e.latency_s),
+                format!("{:.3e}", e.energy_j),
+                format!("{:.3e}", e.edp),
+                format!("{:.3e}", e.score),
+            ]);
+        }
+        t
+    }
+
+    /// Human summary (CLI, kick-tires, benches): coverage, pruning and
+    /// session-reuse statistics.
+    pub fn summary(&self) -> String {
+        let s = &self.stats;
+        format!(
+            "dse {} on {}: {} arch points -> {} evaluated, {} skipped by dominance pruning \
+             ({:.1}% of arch-point evaluations), {} invalid; frontier holds {} points\n\
+             session reuse: {} search jobs on one engine session, {} warm-started\n\
+             engine: proposed={} scored={} cost-evals={} memo-hits={} pruned={} rejected={}",
+            self.space,
+            self.network,
+            s.points,
+            s.evaluated,
+            s.pruned,
+            100.0 * s.pruned_rate(),
+            s.invalid,
+            s.frontier_size,
+            s.jobs_run,
+            s.warm_seeded_jobs,
+            s.engine.proposed,
+            s.engine.scored,
+            s.engine.cost_evals,
+            s.engine.memo_hits,
+            s.engine.pruned,
+            s.engine.rejected,
+        )
+    }
+}
+
+/// Plans and runs a hardware design-space exploration (see module docs).
+pub struct DseOrchestrator<'a> {
+    model: &'a dyn CostModel,
+    constraints: &'a Constraints,
+    config: DseConfig,
+}
+
+impl<'a> DseOrchestrator<'a> {
+    pub fn new(model: &'a dyn CostModel, constraints: &'a Constraints) -> Self {
+        Self::with_config(model, constraints, DseConfig::default())
+    }
+
+    pub fn with_config(
+        model: &'a dyn CostModel,
+        constraints: &'a Constraints,
+        config: DseConfig,
+    ) -> Self {
+        DseOrchestrator { model, constraints, config }
+    }
+
+    /// Explore `space` for `graph`: evaluate or skip every arch point,
+    /// maintain the Pareto frontier, and report per-point outcomes.
+    pub fn run(&self, space: &ArchSpace, graph: &WorkloadGraph) -> Result<DseResult, String> {
+        if space.is_empty() {
+            return Err(format!("arch space '{}' has no points", space.name));
+        }
+        if graph.is_empty() {
+            return Err(format!("network '{}' has no layers", graph.name));
+        }
+
+        let engine_config = EngineConfig {
+            threads: self.config.threads,
+            ..EngineConfig::default()
+        };
+        let mut session = Session::with_config(self.model, self.config.objective, engine_config);
+        let mut warm = WarmStartCache::new();
+        // one dominance space for pruning AND reporting: (objective
+        // score, area proxy). Weak dominance over a candidate's BOUND
+        // proves its true point could never enter this frontier.
+        let mut frontier = ParetoFrontier::new(2);
+
+        // deterministic evaluation order: most-capable machines first
+        // (descending PE count, then ascending area, then space order),
+        // so achieved scores exist before the starved configurations
+        // they dominate come up for a decision
+        let mut order: Vec<usize> = (0..space.len()).collect();
+        order.sort_by(|&a, &b| {
+            let (pa, pb) = (space.points()[a].arch.num_pes(), space.points()[b].arch.num_pes());
+            pb.cmp(&pa)
+                .then(
+                    space.points()[a]
+                        .arch
+                        .area_proxy()
+                        .total_cmp(&space.points()[b].arch.area_proxy()),
+                )
+                .then(a.cmp(&b))
+        });
+
+        let mut points_out: Vec<DsePoint> = Vec::with_capacity(space.len());
+        let mut evaluated = 0usize;
+        let mut pruned = 0usize;
+        let mut invalid = 0usize;
+        let mut warm_seeded = 0usize;
+        for idx in order {
+            let point = &space.points()[idx];
+            let area = point.arch.area_proxy();
+            let mut out = DsePoint {
+                index: idx,
+                arch: point.arch.name.clone(),
+                label: point.label.clone(),
+                pes: point.arch.num_pes(),
+                area,
+                bound_score: None,
+                eval: None,
+                status: PointStatus::Invalid(String::new()),
+            };
+            if let Err(e) = point.arch.validate() {
+                invalid += 1;
+                out.status = PointStatus::Invalid(e);
+                points_out.push(out);
+                continue;
+            }
+            out.bound_score = self.network_bound(graph, &point.arch);
+            if self.config.prune {
+                if let Some(b) = out.bound_score {
+                    if frontier.dominated(&[b, area]) {
+                        pruned += 1;
+                        out.status = PointStatus::Pruned;
+                        points_out.push(out);
+                        continue;
+                    }
+                }
+            }
+            let net_config = OrchestratorConfig {
+                objective: self.config.objective,
+                samples: self.config.samples,
+                seed: self.config.seed,
+                threads: self.config.threads,
+            };
+            let orchestrator = NetworkOrchestrator::with_config(
+                &point.arch,
+                self.model,
+                self.constraints,
+                net_config,
+            );
+            let warm_arg = if self.config.warm_start { Some(&mut warm) } else { None };
+            match orchestrator.run_with_session(graph, &mut session, warm_arg) {
+                Ok(r) => {
+                    evaluated += 1;
+                    let score =
+                        self.config.objective.score_raw(r.total_latency_s, r.total_energy_j);
+                    frontier.insert(&[score, area], idx);
+                    out.eval = Some(DseEval {
+                        latency_s: r.total_latency_s,
+                        energy_j: r.total_energy_j,
+                        edp: r.edp(),
+                        score,
+                        distinct_jobs: r.stats.distinct_jobs,
+                        dedup_hit_rate: r.stats.dedup_hit_rate,
+                        warm_seeded_jobs: r.stats.warm_seeded_jobs,
+                    });
+                    warm_seeded += r.stats.warm_seeded_jobs;
+                    // provisional; final frontier membership below
+                    out.status = PointStatus::Dominated;
+                }
+                Err(e) => {
+                    invalid += 1;
+                    out.status = PointStatus::Invalid(e);
+                }
+            }
+            points_out.push(out);
+        }
+
+        // final frontier membership
+        let on_frontier: std::collections::HashSet<usize> =
+            frontier.ids().into_iter().collect();
+        for p in &mut points_out {
+            if p.eval.is_some() && on_frontier.contains(&p.index) {
+                p.status = PointStatus::Frontier;
+            }
+        }
+
+        let stats = DseStats {
+            points: space.len(),
+            evaluated,
+            pruned,
+            invalid,
+            frontier_size: frontier.len(),
+            jobs_run: session.jobs_run(),
+            warm_seeded_jobs: warm_seeded,
+            engine: session.totals().clone(),
+        };
+        Ok(DseResult {
+            space: space.name.clone(),
+            network: graph.name.clone(),
+            model: self.model.name().to_string(),
+            objective: self.config.objective.name().to_string(),
+            points: points_out,
+            stats,
+        })
+    }
+
+    /// Network-summed lower bound on the scalar objective: per-layer
+    /// [`CostModel::arch_lower_bound`] weighted by repeats; `None` if
+    /// the model declines for any layer.
+    fn network_bound(&self, graph: &WorkloadGraph, arch: &Arch) -> Option<f64> {
+        let mut cycles = 0.0f64;
+        let mut energy_pj = 0.0f64;
+        let mut clock = None;
+        for node in graph.nodes() {
+            let problem = node.workload.problem();
+            let b = self.model.arch_lower_bound(&problem, arch)?;
+            cycles += b.cycles * node.repeat as f64;
+            energy_pj += b.energy_pj * node.repeat as f64;
+            clock = Some(b.clock_ghz);
+        }
+        let bound = CostBound { cycles, energy_pj, clock_ghz: clock? };
+        Some(self.config.objective.score_bound(&bound))
+    }
+}
+
+/// Result of a [`candidate_sweep`].
+#[derive(Debug, Clone)]
+pub struct CandidateSweep {
+    /// Per arch point (space order): best objective score any pooled
+    /// candidate achieves there; `f64::INFINITY` if none is legal.
+    pub best: Vec<f64>,
+    /// The pooled per-search-point winners, in search order.
+    pub pool: Vec<Mapping>,
+    /// Engine totals across the searches (one shared session).
+    pub stats: EngineStats,
+}
+
+/// The **figure-sweep path**: search a single problem at selected arch
+/// points (each `(point index, seed)` runs the standard portfolio on
+/// one shared [`Session`]), then cross-evaluate every winner at every
+/// point of the space and keep the per-point best. Searching per point
+/// and *evaluating the union* removes search noise from hardware
+/// comparisons — the per-point optimum is at least as good as any
+/// single fixed candidate — which is exactly the Fig. 10 / Fig. 11
+/// methodology, now expressed once over any [`ArchSpace`].
+pub fn candidate_sweep(
+    space: &ArchSpace,
+    search: &[(usize, u64)],
+    problem: &Problem,
+    model: &dyn CostModel,
+    constraints: &Constraints,
+    samples: usize,
+    objective: Objective,
+) -> CandidateSweep {
+    let mut session = Session::new(model, objective);
+    let mut pool: Vec<Mapping> = Vec::new();
+    for &(idx, seed) in search {
+        let point = &space.points()[idx];
+        let mspace = MapSpace::new(problem, &point.arch, constraints);
+        let (result, _) = session.run_job(&mspace, &mut portfolio_sources(samples, seed));
+        if let Some(r) = result {
+            pool.push(r.mapping);
+        }
+    }
+    let best = space
+        .points()
+        .iter()
+        .map(|p| {
+            pool.iter()
+                .filter_map(|m| model.evaluate(problem, &p.arch, m).ok())
+                .map(|e| objective.score(&e))
+                .fold(f64::INFINITY, f64::min)
+        })
+        .collect();
+    CandidateSweep { best, pool, stats: session.totals().clone() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{AnalyticalModel, EnergyTable};
+    use crate::dse::space::GridSpaceBuilder;
+    use crate::frontend;
+    use crate::network::WorkloadGraph;
+
+    fn tiny_space() -> ArchSpace {
+        GridSpaceBuilder::new("tiny")
+            .grids(&[(2, 2), (4, 4), (8, 8)])
+            .l2_bytes(&[16 * 1024, 256 * 1024])
+            .build()
+    }
+
+    fn tiny_graph() -> WorkloadGraph {
+        WorkloadGraph::from_workloads(
+            "toy",
+            vec![
+                frontend::Workload::gemm("g1", 64, 64, 64),
+                frontend::Workload::gemm("g2", 64, 64, 64),
+                frontend::Workload::gemm("g3", 32, 128, 32),
+            ],
+        )
+    }
+
+    #[test]
+    fn explores_and_reports_consistently() {
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let cons = Constraints::default();
+        let config = DseConfig { samples: 150, ..DseConfig::default() };
+        let orch = DseOrchestrator::with_config(&model, &cons, config);
+        let r = orch.run(&tiny_space(), &tiny_graph()).unwrap();
+        assert_eq!(r.points.len(), 6);
+        let s = &r.stats;
+        assert_eq!(s.points, 6);
+        assert_eq!(s.evaluated + s.pruned + s.invalid, s.points);
+        assert!(s.evaluated >= 1, "something must evaluate");
+        assert_eq!(s.frontier_size, r.frontier().len());
+        assert!(s.frontier_size >= 1);
+        // frontier points are evaluated points
+        for p in r.frontier() {
+            assert!(p.eval.is_some());
+        }
+        // cross-layer dedup carries into the sweep: g1 and g2 share a job
+        let first_eval = r
+            .points
+            .iter()
+            .find_map(|p| p.eval.as_ref())
+            .expect("an evaluated point");
+        assert_eq!(first_eval.distinct_jobs, 2, "identical layers dedup");
+        // tables render without panicking and cover every point
+        assert_eq!(r.points_table().rows.len(), 6);
+        assert_eq!(r.frontier_table().rows.len(), s.frontier_size);
+        assert!(r.summary().contains("arch points"));
+    }
+
+    #[test]
+    fn pruning_never_removes_frontier_points() {
+        // the frontier objective set must be identical with pruning on
+        // and off — dominance skipping is lossless by construction.
+        // (warm starts stay off: they couple later searches to which
+        // earlier points ran, which is reuse, not a frontier property)
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let cons = Constraints::default();
+        let run = |prune: bool| {
+            let config =
+                DseConfig { samples: 150, prune, warm_start: false, ..DseConfig::default() };
+            DseOrchestrator::with_config(&model, &cons, config)
+                .run(&tiny_space(), &tiny_graph())
+                .unwrap()
+        };
+        let with = run(true);
+        let without = run(false);
+        assert_eq!(without.stats.pruned, 0);
+        let key = |r: &DseResult| -> Vec<(String, String)> {
+            let mut v: Vec<(String, String)> = r
+                .frontier()
+                .iter()
+                .map(|p| {
+                    let e = p.eval.as_ref().unwrap();
+                    (p.arch.clone(), format!("{:.6e}|{:.6e}", e.latency_s, e.energy_j))
+                })
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(key(&with), key(&without), "pruning changed the frontier");
+    }
+
+    #[test]
+    fn warm_start_seeds_later_points() {
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let cons = Constraints::default();
+        let run = |warm_start: bool| {
+            let config =
+                DseConfig { samples: 150, prune: false, warm_start, ..DseConfig::default() };
+            DseOrchestrator::with_config(&model, &cons, config)
+                .run(&tiny_space(), &tiny_graph())
+                .unwrap()
+        };
+        let cold = run(false);
+        let warm = run(true);
+        assert_eq!(cold.stats.warm_seeded_jobs, 0);
+        assert!(warm.stats.warm_seeded_jobs > 0, "later points must reuse seeds");
+        // the first evaluated point has no cache to draw from; every
+        // later one reopens both distinct layer shapes from it
+        let evals: Vec<&DseEval> =
+            warm.points.iter().filter_map(|p| p.eval.as_ref()).collect();
+        assert_eq!(evals.first().unwrap().warm_seeded_jobs, 0);
+        for e in &evals[1..] {
+            assert_eq!(e.warm_seeded_jobs, e.distinct_jobs, "all jobs warm-seeded");
+        }
+        // warm starts change seeds, never feasibility or reporting shape
+        assert_eq!(cold.stats.evaluated, warm.stats.evaluated);
+        assert!(warm.points.iter().all(|p| p
+            .eval
+            .as_ref()
+            .map(|e| e.score.is_finite())
+            .unwrap_or(true)));
+    }
+
+    #[test]
+    fn candidate_sweep_matches_independent_searches() {
+        // the generic figure-sweep path must reproduce the legacy
+        // per-point portfolio_search + cross-evaluate loop exactly
+        use crate::engine::Session;
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let cons = Constraints::default();
+        let space = tiny_space();
+        let problem = frontend::Workload::gemm("g", 64, 64, 64).problem();
+        let search: Vec<(usize, u64)> = (0..space.len()).map(|i| (i, 31 + i as u64)).collect();
+        let sweep =
+            candidate_sweep(&space, &search, &problem, &model, &cons, 200, Objective::Edp);
+
+        let mut pool = Vec::new();
+        for &(idx, seed) in &search {
+            let mspace = MapSpace::new(&problem, &space.points()[idx].arch, &cons);
+            let mut fresh = Session::new(&model, Objective::Edp);
+            let (r, _) = fresh.run_job(&mspace, &mut portfolio_sources(200, seed));
+            if let Some(r) = r {
+                pool.push(r.mapping);
+            }
+        }
+        assert_eq!(sweep.pool, pool, "shared session changed a search result");
+        for (i, p) in space.points().iter().enumerate() {
+            let best = pool
+                .iter()
+                .filter_map(|m| model.evaluate(&problem, &p.arch, m).ok())
+                .map(|e| e.edp())
+                .fold(f64::INFINITY, f64::min);
+            assert_eq!(sweep.best[i], best, "{}", p.arch.name);
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Multi-objective **Pareto frontier** with weak-dominance semantics.
+//!
+//! The design-space explorer minimizes every objective (latency,
+//! energy, area proxy). A point *weakly dominates* another when it is ≤
+//! in every objective; the frontier keeps exactly the points no other
+//! point weakly dominates (so exact duplicates collapse to the first
+//! arrival). Weak dominance is what makes **bound-based skipping**
+//! sound: if an evaluated point weakly dominates a candidate's *lower
+//! bound*, it also weakly dominates the candidate's true (≥ bound)
+//! objectives, so evaluating the candidate could never change the
+//! frontier's objective set.
+//!
+//! Points are stored in lexicographic objective order, so the frontier
+//! is a pure function of the inserted *set* — independent of insertion
+//! order — which the DSE determinism test relies on.
+
+/// `a` weakly dominates `b`: no worse in every objective. Both slices
+/// must have the same length and finite entries.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+fn cmp_lex(a: &[f64], b: &[f64]) -> std::cmp::Ordering {
+    for (x, y) in a.iter().zip(b) {
+        match x.total_cmp(y) {
+            std::cmp::Ordering::Equal => continue,
+            o => return o,
+        }
+    }
+    std::cmp::Ordering::Equal
+}
+
+/// A set of mutually non-dominated points, each carrying a caller
+/// payload id (the arch-point index in the DSE).
+#[derive(Debug, Clone)]
+pub struct ParetoFrontier {
+    dims: usize,
+    points: Vec<(Vec<f64>, usize)>,
+}
+
+impl ParetoFrontier {
+    /// An empty frontier over `dims` minimized objectives.
+    pub fn new(dims: usize) -> ParetoFrontier {
+        assert!(dims >= 1, "frontier needs at least one objective");
+        ParetoFrontier { dims, points: Vec::new() }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// The frontier points in lexicographic objective order.
+    pub fn points(&self) -> &[(Vec<f64>, usize)] {
+        &self.points
+    }
+
+    /// Payload ids of the frontier points, in frontier order.
+    pub fn ids(&self) -> Vec<usize> {
+        self.points.iter().map(|(_, id)| *id).collect()
+    }
+
+    /// Is `objs` weakly dominated by some frontier point? Safe to call
+    /// with a *lower bound*: a dominated bound proves the true point
+    /// cannot contribute.
+    pub fn dominated(&self, objs: &[f64]) -> bool {
+        assert_eq!(objs.len(), self.dims, "objective arity mismatch");
+        self.points.iter().any(|(p, _)| dominates(p, objs))
+    }
+
+    /// Offer a point. Returns `true` if it entered the frontier (also
+    /// evicting any points it weakly dominates); `false` if an existing
+    /// point weakly dominates it. Non-finite objectives are rejected.
+    pub fn insert(&mut self, objs: &[f64], id: usize) -> bool {
+        assert_eq!(objs.len(), self.dims, "objective arity mismatch");
+        if objs.iter().any(|v| !v.is_finite()) {
+            return false;
+        }
+        if self.dominated(objs) {
+            return false;
+        }
+        self.points.retain(|(p, _)| !dominates(objs, p));
+        let pos = self
+            .points
+            .binary_search_by(|(p, _)| cmp_lex(p, objs))
+            .unwrap_or_else(|e| e);
+        self.points.insert(pos, (objs.to_vec(), id));
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_non_dominated_evicts_dominated() {
+        let mut f = ParetoFrontier::new(2);
+        assert!(f.insert(&[2.0, 2.0], 0));
+        assert!(f.insert(&[1.0, 3.0], 1)); // trade-off: kept
+        assert!(!f.insert(&[3.0, 3.0], 2)); // dominated by (2,2)
+        assert_eq!(f.len(), 2);
+        // (1,1) dominates everything -> frontier collapses to it
+        assert!(f.insert(&[1.0, 1.0], 3));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.ids(), vec![3]);
+    }
+
+    #[test]
+    fn weak_dominance_rejects_duplicates() {
+        let mut f = ParetoFrontier::new(3);
+        assert!(f.insert(&[1.0, 2.0, 3.0], 0));
+        assert!(!f.insert(&[1.0, 2.0, 3.0], 1), "exact duplicate rejected");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.ids(), vec![0], "first arrival keeps the slot");
+    }
+
+    #[test]
+    fn dominated_works_on_bounds() {
+        let mut f = ParetoFrontier::new(2);
+        f.insert(&[2.0, 2.0], 0);
+        assert!(f.dominated(&[2.5, 2.0]), "bound worse-or-equal everywhere");
+        assert!(!f.dominated(&[1.5, 9.0]), "bound better on one axis");
+    }
+
+    #[test]
+    fn non_finite_rejected() {
+        let mut f = ParetoFrontier::new(2);
+        assert!(!f.insert(&[f64::INFINITY, 1.0], 0));
+        assert!(!f.insert(&[f64::NAN, 1.0], 1));
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn points_stay_lexicographically_sorted() {
+        let mut f = ParetoFrontier::new(2);
+        f.insert(&[3.0, 1.0], 0);
+        f.insert(&[1.0, 3.0], 1);
+        f.insert(&[2.0, 2.0], 2);
+        let objs: Vec<&[f64]> = f.points().iter().map(|(p, _)| p.as_slice()).collect();
+        assert_eq!(objs, vec![&[1.0, 3.0][..], &[2.0, 2.0][..], &[3.0, 1.0][..]]);
+    }
+}

@@ -1,0 +1,279 @@
+//! [`ArchSpace`]: a parameterized family of architectures — the
+//! hardware side of the co-search.
+//!
+//! A space is an explicit, deterministically ordered list of concrete
+//! [`Arch`] points (each with a short human label), produced either
+//! from an explicit arch list (the Fig. 10 aspect-ratio and Fig. 11
+//! bandwidth families) or from a [`GridSpaceBuilder`] cross product of
+//! PE grids × buffer sizes × bandwidths with validity constraints.
+//! Keeping the enumeration eager and ordered makes every consumer —
+//! sweep drivers, the Pareto explorer, reports — reproducible by
+//! construction.
+
+use crate::arch::{presets, Arch};
+
+const KB: u64 = 1024;
+
+/// One point of an [`ArchSpace`]: a concrete architecture plus a short
+/// parameter label for reports ("16x16 PEs, L2 256 KB").
+#[derive(Debug, Clone)]
+pub struct ArchPoint {
+    pub arch: Arch,
+    pub label: String,
+}
+
+/// An ordered family of candidate architectures (see module docs).
+#[derive(Debug, Clone, Default)]
+pub struct ArchSpace {
+    pub name: String,
+    points: Vec<ArchPoint>,
+}
+
+impl ArchSpace {
+    pub fn new(name: &str) -> ArchSpace {
+        ArchSpace { name: name.to_string(), points: Vec::new() }
+    }
+
+    /// Build a space from explicit architectures; each point's label is
+    /// its arch name.
+    pub fn from_archs(name: &str, archs: Vec<Arch>) -> ArchSpace {
+        let mut s = ArchSpace::new(name);
+        for a in archs {
+            let label = a.name.clone();
+            s.push(a, &label);
+        }
+        s
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, arch: Arch, label: &str) {
+        self.points.push(ArchPoint { arch, label: label.to_string() });
+    }
+
+    pub fn points(&self) -> &[ArchPoint] {
+        &self.points
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArchPoint> {
+        self.points.iter()
+    }
+}
+
+/// Cross-product builder for 2D spatial-accelerator families
+/// ([`presets::spatial_2d`] topology: DRAM → shared L2 → virtual column
+/// level → per-PE L1). Every combination of the configured axes is
+/// instantiated, validity-checked ([`Arch::validate`] plus any caller
+/// predicates) and appended in deterministic axis-nesting order: grids
+/// outermost, then L2, L1, NoC, DRAM bandwidth innermost.
+pub struct GridSpaceBuilder {
+    name: String,
+    grids: Vec<(u64, u64)>,
+    l1_bytes: Vec<u64>,
+    l2_bytes: Vec<u64>,
+    noc_bw: Vec<f64>,
+    dram_bw: Vec<f64>,
+    word_bytes: u64,
+    #[allow(clippy::type_complexity)]
+    predicates: Vec<Box<dyn Fn(&Arch) -> bool>>,
+}
+
+impl GridSpaceBuilder {
+    pub fn new(name: &str) -> GridSpaceBuilder {
+        GridSpaceBuilder {
+            name: name.to_string(),
+            grids: vec![(16, 16)],
+            l1_bytes: vec![KB / 2],
+            l2_bytes: vec![100 * KB],
+            noc_bw: vec![32.0],
+            dram_bw: vec![32.0],
+            word_bytes: 1,
+            predicates: Vec::new(),
+        }
+    }
+
+    /// PE grid shapes (rows, cols).
+    pub fn grids(mut self, grids: &[(u64, u64)]) -> Self {
+        self.grids = grids.to_vec();
+        self
+    }
+
+    pub fn l1_bytes(mut self, sizes: &[u64]) -> Self {
+        self.l1_bytes = sizes.to_vec();
+        self
+    }
+
+    pub fn l2_bytes(mut self, sizes: &[u64]) -> Self {
+        self.l2_bytes = sizes.to_vec();
+        self
+    }
+
+    pub fn noc_bw(mut self, bws: &[f64]) -> Self {
+        self.noc_bw = bws.to_vec();
+        self
+    }
+
+    pub fn dram_bw(mut self, bws: &[f64]) -> Self {
+        self.dram_bw = bws.to_vec();
+        self
+    }
+
+    pub fn word_bytes(mut self, w: u64) -> Self {
+        self.word_bytes = w;
+        self
+    }
+
+    /// Add a validity constraint; points failing it are never emitted.
+    pub fn constraint(mut self, pred: impl Fn(&Arch) -> bool + 'static) -> Self {
+        self.predicates.push(Box::new(pred));
+        self
+    }
+
+    /// Enumerate every valid point of the cross product.
+    pub fn build(self) -> ArchSpace {
+        let mut space = ArchSpace::new(&self.name);
+        for &(rows, cols) in &self.grids {
+            for &l2 in &self.l2_bytes {
+                for &l1 in &self.l1_bytes {
+                    for &noc in &self.noc_bw {
+                        for &dram in &self.dram_bw {
+                            let arch = presets::spatial_2d(
+                                &format!(
+                                    "{}_{rows}x{cols}_l2-{}k_l1-{}b_noc{noc}_dram{dram}",
+                                    self.name,
+                                    l2 / KB,
+                                    l1
+                                ),
+                                rows,
+                                cols,
+                                l1,
+                                l2,
+                                noc,
+                                dram,
+                                self.word_bytes,
+                            );
+                            if arch.validate().is_err() {
+                                continue;
+                            }
+                            if self.predicates.iter().any(|p| !p(&arch)) {
+                                continue;
+                            }
+                            let label = format!(
+                                "{rows}x{cols} PEs, L1 {l1} B, L2 {} KB, NoC {noc}, DRAM {dram} B/cyc",
+                                l2 / KB
+                            );
+                            space.push(arch, &label);
+                        }
+                    }
+                }
+            }
+        }
+        space
+    }
+}
+
+/// The default **edge-class grid space** the `dse` case study and bench
+/// explore: PE arrays from 8 to 1024 MACs crossed with shared-L2 sizes
+/// from 64 KB to 1 MB (L1, NoC and DRAM bandwidth fixed at the Table V
+/// edge operating point). The family deliberately contains
+/// questions-with-obvious-answers — tiny arrays paired with huge caches
+/// — because proving they are dominated *without evaluating them* is
+/// the job of the explorer's bound-based pruning.
+pub fn edge_grid_space() -> ArchSpace {
+    GridSpaceBuilder::new("edge-grid")
+        .grids(&[(4, 2), (4, 4), (8, 4), (8, 8), (16, 16), (32, 16), (32, 32)])
+        .l2_bytes(&[64 * KB, 256 * KB, 1024 * KB])
+        .build()
+}
+
+/// The Fig. 10 flexible-aspect-ratio families as arch spaces.
+pub fn aspect_ratio_space(class: &str) -> Result<ArchSpace, String> {
+    match class {
+        "edge" => Ok(ArchSpace::from_archs(
+            "edge aspect ratios",
+            presets::edge_aspect_ratios()
+                .into_iter()
+                .map(|(r, c)| presets::edge_flexible(r, c))
+                .collect(),
+        )),
+        "cloud" => Ok(ArchSpace::from_archs(
+            "cloud aspect ratios",
+            presets::cloud_aspect_ratios()
+                .into_iter()
+                .map(|(r, c)| presets::cloud(r, c))
+                .collect(),
+        )),
+        other => Err(format!("unknown aspect-ratio class '{other}' (edge, cloud)")),
+    }
+}
+
+/// The Fig. 11 chiplet family: 16-chiplet package across per-chiplet
+/// fill bandwidths.
+pub fn chiplet_space(fill_bws: &[f64]) -> ArchSpace {
+    ArchSpace::from_archs(
+        "chiplet fill bandwidth",
+        fill_bws.iter().map(|&bw| presets::chiplet16(bw)).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_crosses_axes_in_order() {
+        let s = GridSpaceBuilder::new("t")
+            .grids(&[(2, 2), (4, 4)])
+            .l2_bytes(&[64 * KB, 128 * KB])
+            .build();
+        assert_eq!(s.len(), 4);
+        // grids outermost, L2 inner
+        assert_eq!(s.points()[0].arch.num_pes(), 4);
+        assert_eq!(s.points()[1].arch.num_pes(), 4);
+        assert_eq!(s.points()[2].arch.num_pes(), 16);
+        assert!(s.points()[0].label.contains("L2 64 KB"));
+        assert!(s.points()[1].label.contains("L2 128 KB"));
+        for p in s.iter() {
+            p.arch.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn constraints_filter_points() {
+        let s = GridSpaceBuilder::new("t")
+            .grids(&[(2, 2), (4, 4), (8, 8)])
+            .constraint(|a| a.num_pes() >= 16)
+            .build();
+        assert_eq!(s.len(), 2);
+        assert!(s.iter().all(|p| p.arch.num_pes() >= 16));
+    }
+
+    #[test]
+    fn default_edge_grid_space_is_valid_and_diverse() {
+        let s = edge_grid_space();
+        assert_eq!(s.len(), 21);
+        let pes: std::collections::BTreeSet<u64> =
+            s.iter().map(|p| p.arch.num_pes()).collect();
+        assert!(pes.contains(&8) && pes.contains(&1024));
+        // areas must spread enough for dominance pruning to have targets
+        let areas: Vec<f64> = s.iter().map(|p| p.arch.area_proxy()).collect();
+        let max = areas.iter().copied().fold(f64::MIN, f64::max);
+        let min = areas.iter().copied().fold(f64::MAX, f64::min);
+        assert!(max / min > 5.0, "area spread {max}/{min} too small");
+    }
+
+    #[test]
+    fn named_spaces_match_their_figures() {
+        assert_eq!(aspect_ratio_space("edge").unwrap().len(), 5);
+        assert_eq!(aspect_ratio_space("cloud").unwrap().len(), 6);
+        assert!(aspect_ratio_space("warp").is_err());
+        assert_eq!(chiplet_space(&[1.0, 2.0]).len(), 2);
+    }
+}

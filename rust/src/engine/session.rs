@@ -25,6 +25,7 @@
 
 use crate::cost::{CostModel, FootprintMemo};
 use crate::mappers::{Objective, SearchResult};
+use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
 
 use super::memo::EvalMemo;
@@ -86,6 +87,30 @@ impl<'m> Session<'m> {
         space: &MapSpace,
         sources: &mut [Box<dyn CandidateSource>],
     ) -> (Option<SearchResult>, EngineStats) {
+        self.run_job_seeded(space, &[], sources)
+    }
+
+    /// [`Session::run_job`] with **cross-job incumbent sharing**: the
+    /// `seeds` (typically the winning mappings of the *same problem* on
+    /// neighbouring architecture points of a design-space sweep) are
+    /// pushed through the engine as an explicit first batch, before any
+    /// source proposes. A seed that is legal in this job's map space
+    /// immediately becomes the incumbent, so every later candidate is
+    /// pruned against a realistic target from batch one; an illegal
+    /// seed (the neighbouring arch shaped it differently) is rejected
+    /// by the engine's normal admissibility pass and costs nothing.
+    ///
+    /// Determinism is preserved: the seed batch is evaluated with the
+    /// same order-preserving pipeline as any other batch, so results
+    /// remain thread-count-invariant — but note that seeding, like any
+    /// extra batch, can legitimately change (only improve or tie) the
+    /// winner relative to an unseeded run.
+    pub fn run_job_seeded(
+        &mut self,
+        space: &MapSpace,
+        seeds: &[Mapping],
+        sources: &mut [Box<dyn CandidateSource>],
+    ) -> (Option<SearchResult>, EngineStats) {
         let mut memo = std::mem::take(&mut self.memo);
         memo.reset();
         let mut tiles = std::mem::take(&mut self.tiles);
@@ -98,6 +123,9 @@ impl<'m> Session<'m> {
             memo,
             tiles,
         );
+        if !seeds.is_empty() {
+            engine.evaluate(seeds.to_vec());
+        }
         for source in sources.iter_mut() {
             engine.run(source.as_mut());
         }
@@ -152,6 +180,48 @@ mod tests {
             assert_eq!(got.mapping, fresh.mapping, "{}", p.name);
             assert_eq!(got.score, fresh.score, "{}", p.name);
         }
+    }
+
+    #[test]
+    fn seeded_job_never_loses_to_its_seed() {
+        let p = gemm(32, 32, 32);
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+
+        // the unseeded winner becomes the seed of a tiny follow-up job
+        let mut session = Session::new(&model, Objective::Edp);
+        let (first, _) =
+            session.run_job(&space, &mut vec![RandomMapper::new(400, 9).source()]);
+        let first = first.expect("unseeded job finds a mapping");
+
+        let seeds = vec![first.mapping.clone()];
+        let (seeded, stats) = session.run_job_seeded(
+            &space,
+            &seeds,
+            &mut vec![RandomMapper::new(50, 1234).source()],
+        );
+        let seeded = seeded.expect("seeded job keeps an incumbent");
+        assert!(
+            seeded.score <= first.score,
+            "seeding can only improve or tie: {} vs {}",
+            seeded.score,
+            first.score
+        );
+        assert!(stats.batches >= 2, "seed batch + at least one source batch");
+
+        // an illegal seed (level structure of a different arch) is
+        // rejected, not fatal: the search still proposes its full budget
+        let other = presets::chiplet16(2.0);
+        let other_space = MapSpace::new(&p, &other, &cons);
+        let (_, stats) = session.run_job_seeded(
+            &other_space,
+            &seeds,
+            &mut vec![RandomMapper::new(200, 7).source()],
+        );
+        assert!(stats.rejected >= 1, "the foreign seed must be rejected");
+        assert!(stats.proposed >= 200, "search proceeds past a rejected seed");
     }
 
     #[test]

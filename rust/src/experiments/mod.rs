@@ -11,9 +11,16 @@
 //! | Fig. 11 (EDP vs fill bandwidth, chiplets) | [`fig11_chiplet_bandwidth`] |
 //! | Table III (TTGT GEMM dims)                | [`table3_ttgt_dims`] |
 //! | Table IV-style network sweep              | [`network_sweep`] |
+//! | HW design-space exploration (beyond-paper)| [`dse_sweep`] |
+//!
+//! The [`CASE_STUDIES`] registry is the single source of truth for the
+//! artifact ids: the CLI dispatches on it, `union casestudy --list`
+//! prints it, and `scripts/kick_tires.sh` drives its CI loop from that
+//! output, so a new entry here is automatically smoke-tested.
 
 use crate::arch::{presets, Arch};
 use crate::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use crate::dse::{self, DseResult};
 use crate::engine::Session;
 use crate::frontend::{self, ttgt_gemm, Workload};
 use crate::mappers::{portfolio_sources, Objective, SearchResult};
@@ -22,6 +29,74 @@ use crate::mapspace::{Constraints, MapSpace};
 use crate::network::{NetworkOrchestrator, NetworkResult, OrchestratorConfig};
 use crate::report::{normalize_to_min, Table};
 use crate::util::rng::Rng;
+
+/// Registry of every paper artifact (plus the beyond-paper DSE sweep)
+/// the CLI can regenerate: `(id, one-line description, renderer)`. The
+/// renderer IS the dispatch — the CLI has no parallel match to drift
+/// out of sync, so an entry added here is advertised by
+/// `union casestudy --list`, runnable by id, and smoke-tested by
+/// `scripts/kick_tires.sh`, all from this one table.
+pub const CASE_STUDIES: &[(&str, &str, fn(Effort) -> String)] = &[
+    ("fig3", "mapping sweep: DLRM layer on the 16x16 edge accelerator", render_fig3),
+    ("fig8", "algorithm exploration: TC native vs TTGT on cloud", render_fig8),
+    ("fig9", "optimal intensli2 mappings (native and via GEMM)", fig9_mappings),
+    ("fig10", "EDP vs aspect ratio on the flexible accelerators", render_fig10),
+    ("fig11", "EDP vs per-chiplet fill bandwidth", render_fig11),
+    ("table3", "TTGT GEMM dimension sizes", render_table3),
+    ("table4", "network-level co-design sweep", render_table4),
+    ("dse", "hardware design-space exploration with Pareto pruning", render_dse),
+];
+
+/// Look up a case study and render its full artifact text (what `union
+/// casestudy <id>` prints and kick-tires captures); `None` for an
+/// unknown id.
+pub fn run_case_study(id: &str, effort: Effort) -> Option<String> {
+    CASE_STUDIES
+        .iter()
+        .find(|(cid, _, _)| *cid == id)
+        .map(|(_, _, render)| render(effort))
+}
+
+fn render_fig3(effort: Effort) -> String {
+    fig3_mapping_sweep(effort).0.render()
+}
+
+fn render_fig8(effort: Effort) -> String {
+    fig8_algorithm_exploration(effort).0.render()
+}
+
+fn render_fig10(effort: Effort) -> String {
+    let (edge, cloud, _) = fig10_aspect_ratio(effort);
+    format!("{}\n{}", edge.render(), cloud.render())
+}
+
+fn render_fig11(effort: Effort) -> String {
+    fig11_chiplet_bandwidth(effort).0.render()
+}
+
+fn render_table3(_effort: Effort) -> String {
+    table3_ttgt_dims().render()
+}
+
+fn render_table4(effort: Effort) -> String {
+    let (table, results) = network_sweep(effort);
+    let mut out = table.render();
+    for r in &results {
+        out.push_str(&r.summary());
+        out.push('\n');
+    }
+    out
+}
+
+fn render_dse(effort: Effort) -> String {
+    let (table, result) = dse_sweep(effort);
+    format!(
+        "{}\n{}{}\n",
+        table.render(),
+        result.frontier_table().render(),
+        result.summary()
+    )
+}
 
 /// Search effort knob for the drivers (benches and CI smoke use `fast`,
 /// examples can afford `thorough`, and anything can pin an explicit
@@ -301,41 +376,27 @@ pub fn fig10_aspect_ratio(effort: Effort) -> (Table, Table, Fig10Series) {
         ("edge", presets::edge_aspect_ratios(), &mut edge_table),
         ("cloud", presets::cloud_aspect_ratios(), &mut cloud_table),
     ] {
+        // the aspect-ratio family as a generic DSE arch space: search
+        // at every point, then cross-evaluate the pooled winners on
+        // every point (evaluate() rejects fan-outs a ratio cannot host)
+        // so search noise does not masquerade as a hardware preference
+        let arch_space = dse::aspect_ratio_space(class).expect("known class");
+        let search: Vec<(usize, u64)> =
+            (0..arch_space.len()).map(|i| (i, 31 + i as u64)).collect();
         for w in &workloads {
             let problem = w.problem();
-            // search per ratio, then cross-evaluate every candidate on
-            // every ratio (evaluate() rejects fan-outs the ratio cannot
-            // host) so search noise does not masquerade as a hardware
-            // preference
-            let mut candidates: Vec<crate::mapping::Mapping> = Vec::new();
-            let archs: Vec<crate::arch::Arch> = ratios
-                .iter()
-                .map(|&(r, c)| {
-                    if class == "edge" {
-                        presets::edge_flexible(r, c)
-                    } else {
-                        presets::cloud(r, c)
-                    }
-                })
-                .collect();
-            for (i, arch) in archs.iter().enumerate() {
-                let space = MapSpace::new(&problem, arch, &cons);
-                if let Some(best) = portfolio_search(&space, &model, effort, 31 + i as u64) {
-                    candidates.push(best.mapping);
-                }
-            }
-            let mut edps = Vec::new();
-            let mut labels = Vec::new();
-            for (arch, &(r, c)) in archs.iter().zip(&ratios) {
-                let best = candidates
-                    .iter()
-                    .filter_map(|m| model.evaluate(&problem, arch, m).ok())
-                    .map(|e| e.edp())
-                    .fold(f64::INFINITY, f64::min);
-                edps.push(best);
-                labels.push(format!("{r}x{c}"));
-            }
-            let norm = normalize_to_min(&edps);
+            let sweep = dse::candidate_sweep(
+                &arch_space,
+                &search,
+                &problem,
+                &model,
+                &cons,
+                effort.samples(),
+                Objective::Edp,
+            );
+            let labels: Vec<String> =
+                ratios.iter().map(|&(r, c)| format!("{r}x{c}")).collect();
+            let norm = normalize_to_min(&sweep.best);
             let mut row = vec![w.name.clone()];
             row.extend(norm.iter().map(|v| format!("{v:.2}")));
             table.row(row);
@@ -376,35 +437,39 @@ pub fn fig11_chiplet_bandwidth(effort: Effort) -> (Table, Fig10Series) {
         &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
     );
     let mut series: Fig10Series = Vec::new();
+    // the bandwidth family as a generic DSE arch space. The sweep only
+    // changes fill bandwidth, so mapping legality is bandwidth-
+    // independent: search at anchor bandwidths (bw-bound, mid,
+    // compute-bound regimes), then evaluate the candidate pool at every
+    // point and keep the best — the per-point optimum is at least as
+    // good as any fixed candidate, and the series is free of search
+    // noise
+    let arch_space = dse::chiplet_space(&FIG11_FILL_BW);
+    let anchors: [f64; 3] = [1.0, 8.0, 32.0];
+    let search: Vec<(usize, u64)> = anchors
+        .iter()
+        .enumerate()
+        .map(|(i, bw)| {
+            let idx = FIG11_FILL_BW
+                .iter()
+                .position(|b| b == bw)
+                .expect("anchor is a swept bandwidth");
+            (idx, 41 + i as u64)
+        })
+        .collect();
     for w in &workloads {
         let problem = w.problem();
-        // the sweep only changes fill bandwidth, so mapping legality is
-        // bandwidth-independent: search at anchor bandwidths (bw-bound,
-        // mid, compute-bound regimes), then evaluate the candidate pool
-        // at every point and keep the best — the per-point optimum is at
-        // least as good as any fixed candidate, and the series is free
-        // of search noise
-        let mut candidates: Vec<crate::mapping::Mapping> = Vec::new();
-        for (i, &bw) in [1.0, 8.0, 32.0].iter().enumerate() {
-            let arch = presets::chiplet16(bw);
-            let space = MapSpace::new(&problem, &arch, &cons);
-            if let Some(best) = portfolio_search(&space, &model, effort, 41 + i as u64) {
-                candidates.push(best.mapping);
-            }
-        }
-        let mut edps = Vec::new();
-        let mut labels = Vec::new();
-        for &bw in &FIG11_FILL_BW {
-            let arch = presets::chiplet16(bw);
-            let best = candidates
-                .iter()
-                .filter_map(|m| model.evaluate(&problem, &arch, m).ok())
-                .map(|e| e.edp())
-                .fold(f64::INFINITY, f64::min);
-            edps.push(best);
-            labels.push(format!("{bw}"));
-        }
-        let norm = normalize_to_min(&edps);
+        let sweep = dse::candidate_sweep(
+            &arch_space,
+            &search,
+            &problem,
+            &model,
+            &cons,
+            effort.samples(),
+            Objective::Edp,
+        );
+        let labels: Vec<String> = FIG11_FILL_BW.iter().map(|bw| format!("{bw}")).collect();
+        let norm = normalize_to_min(&sweep.best);
         let mut row = vec![w.name.clone()];
         row.extend(norm.iter().map(|v| format!("{v:.2}")));
         table.row(row);
@@ -507,6 +572,35 @@ pub fn network_sweep(effort: Effort) -> (Table, Vec<NetworkResult>) {
     (table, results)
 }
 
+// ---------------------------------------------------------------------
+// Hardware design-space exploration (beyond-paper artifact)
+// ---------------------------------------------------------------------
+
+/// The **DSE sweep**: co-search the default edge-class grid space
+/// ([`dse::edge_grid_space`]: PE arrays from 8 to 1024 MACs × shared-L2
+/// sizes from 64 KB to 1 MB) against the full ResNet-50 with the
+/// Timeloop-style cost model, maintaining the EDP-vs-area Pareto
+/// frontier and skipping arch points whose network-summed cost lower
+/// bound is already dominated. Returns the all-points table plus the
+/// raw [`DseResult`] (frontier, per-point outcomes, pruning and
+/// session-reuse statistics).
+pub fn dse_sweep(effort: Effort) -> (Table, DseResult) {
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let graph = frontend::resnet50_full(1);
+    let space = dse::edge_grid_space();
+    let config = dse::DseConfig {
+        samples: effort.samples(),
+        seed: 2021,
+        ..dse::DseConfig::default()
+    };
+    let orchestrator = dse::DseOrchestrator::with_config(&model, &cons, config);
+    let result = orchestrator
+        .run(&space, &graph)
+        .expect("edge grid space and ResNet-50 are non-empty");
+    (result.points_table(), result)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,6 +636,22 @@ mod tests {
         assert_eq!(parse_samples_override(Some("garbage"), 600), 600);
         assert_eq!(parse_samples_override(Some("0"), 600), 600);
         assert_eq!(parse_samples_override(None, 600), 600);
+    }
+
+    #[test]
+    fn case_study_registry_is_well_formed() {
+        let ids: Vec<&str> = CASE_STUDIES.iter().map(|(id, _, _)| *id).collect();
+        let unique: std::collections::BTreeSet<&str> = ids.iter().copied().collect();
+        assert_eq!(ids.len(), unique.len(), "duplicate case-study id");
+        for want in ["fig3", "fig8", "fig9", "fig10", "fig11", "table3", "table4", "dse"] {
+            assert!(ids.contains(&want), "registry lost '{want}'");
+        }
+        assert!(CASE_STUDIES.iter().all(|(_, d, _)| !d.is_empty()));
+        // the renderer IS the dispatch: an unknown id is None, a known
+        // one renders through the registry entry
+        assert!(run_case_study("nope", Effort::Fast).is_none());
+        let t3 = run_case_study("table3", Effort::Fast).expect("table3 registered");
+        assert!(t3.contains("Table III"));
     }
 
     #[test]

@@ -46,7 +46,11 @@
 //! Whole networks run through the [`network`] orchestrator, which dedups
 //! identical layer shapes into one search job each (ResNet-50's 53
 //! convolutions collapse to ~23 distinct searches) on one multi-job
-//! engine [`engine::Session`].
+//! engine [`engine::Session`]. One level further up, the [`dse`] module
+//! searches the *hardware* too: an [`dse::ArchSpace`] of candidate
+//! architectures is co-explored with the workload graph on one session,
+//! maintaining a Pareto frontier (objective × silicon-area proxy) and
+//! skipping arch points whose cost lower bound is already dominated.
 //!
 //! (Clippy policy lives in the `[lints.clippy]` table of
 //! `rust/Cargo.toml`, applied to every target in the package.)
@@ -55,6 +59,7 @@ pub mod arch;
 pub mod cli;
 pub mod config;
 pub mod cost;
+pub mod dse;
 pub mod engine;
 pub mod experiments;
 pub mod frontend;
@@ -74,6 +79,7 @@ pub mod prelude {
     pub use crate::cost::{
         AnalyticalModel, CostEstimate, CostModel, EnergyTable, MaestroModel,
     };
+    pub use crate::dse::{ArchSpace, DseConfig, DseOrchestrator, DseResult, ParetoFrontier};
     pub use crate::engine::{CandidateSource, Engine, EngineConfig, EngineStats, Session};
     pub use crate::frontend::{self, Workload};
     pub use crate::mappers::{

@@ -8,13 +8,16 @@
 //! union network   --model <net> [--arch <spec>] [--cost C] [--objective O]
 //!                 [--effort fast|thorough|N] [--batch N] [--seed N]
 //!                 [--constraints file.ucon] [--csv]
-//! union casestudy <fig3|fig8|fig9|fig10|fig11|table3|table4> [--thorough]
+//! union dse       [--space S] [--model <net>] [--cost C] [--objective O]
+//!                 [--effort E] [--seed N] [--no-prune] [--no-warm-start] [--csv]
+//! union casestudy <id> [--thorough] | --list
 //! union validate  [--artifacts DIR]
 //! union info      --arch <spec>
 //! ```
 
-use union::cli::{parse_arch, parse_network, parse_workload, Args};
+use union::cli::{parse_arch, parse_arch_space, parse_network, parse_workload, Args};
 use union::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use union::dse::{DseConfig, DseOrchestrator, PointStatus};
 use union::experiments::{self, Effort};
 use union::ir::{check_loop_level, check_operation_level, print_module};
 use union::mappers::{
@@ -42,6 +45,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("lower") => cmd_lower(&args),
         Some("search") => cmd_search(&args),
         Some("network") => cmd_network(&args),
+        Some("dse") => cmd_dse(&args),
         Some("casestudy") => cmd_casestudy(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
@@ -64,7 +68,12 @@ subcommands:
   network   --model <net> [--arch <spec>] [--cost analytical|maestro]
             [--objective edp|energy|latency] [--effort fast|thorough|N]
             [--batch N] [--seed N] [--threads N] [--constraints file.ucon] [--csv]
-  casestudy fig3|fig8|fig9|fig10|fig11|table3|table4 [--thorough] [--effort E]
+  dse       [--space edge-grid|aspect:edge|aspect:cloud|chiplet[:BW,...]]
+            [--model <net>] [--cost analytical|maestro]
+            [--objective edp|energy|latency] [--effort fast|thorough|N]
+            [--batch N] [--seed N] [--threads N] [--constraints file.ucon]
+            [--no-prune] [--no-warm-start] [--csv]
+  casestudy <id> [--thorough] [--effort E]   (ids: `union casestudy --list`)
   validate  [--artifacts DIR]
   info      --arch <spec>
 
@@ -252,42 +261,96 @@ fn cmd_network(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_dse(args: &Args) -> Result<(), String> {
+    let space = parse_arch_space(args.flag_or("space", "edge-grid"))?;
+    let batch = args.usize_flag("batch", 1)? as u64;
+    let graph = parse_network(args.flag_or("model", "resnet50"), batch)?;
+    let constraints = parse_constraints_flag(args)?;
+    let objective = parse_objective_flag(args)?;
+    let model = parse_cost_flag(args)?;
+    let effort = parse_effort_flag(args)?;
+    let threads = match args.usize_flag("threads", 0)? {
+        0 => None,
+        n => Some(n),
+    };
+    let config = DseConfig {
+        objective,
+        samples: effort.samples(),
+        seed: args.usize_flag("seed", 42)? as u64,
+        threads,
+        prune: !args.switch("no-prune"),
+        warm_start: !args.switch("no-warm-start"),
+    };
+    println!(
+        "exploring {} ({} arch points) for {} ({} layers, {:.3e} MACs) | cost={} objective={} samples/job={}",
+        space.name,
+        space.len(),
+        graph.name,
+        graph.total_layers(),
+        graph.total_macs() as f64,
+        model.name(),
+        objective.name(),
+        config.samples,
+    );
+    let orchestrator = DseOrchestrator::with_config(model.as_ref(), &constraints, config);
+    let result = orchestrator.run(&space, &graph)?;
+    let table = result.points_table();
+    if args.switch("csv") {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.render());
+        println!();
+        print!("{}", result.frontier_table().render());
+        // dominated points first so frontier glyphs win contended cells
+        let mut pts: Vec<(f64, f64, char)> = Vec::new();
+        for p in &result.points {
+            if let Some(e) = &p.eval {
+                if p.status != PointStatus::Frontier {
+                    pts.push((p.area, e.score, 'o'));
+                }
+            }
+        }
+        for p in result.frontier() {
+            let e = p.eval.as_ref().expect("frontier points were evaluated");
+            pts.push((p.area, e.score, '*'));
+        }
+        print!(
+            "{}",
+            union::report::scatter_plot(
+                &format!("{} vs area proxy (* = frontier)", result.objective),
+                &pts,
+                64,
+                16,
+            )
+        );
+    }
+    println!("\n{}", result.summary());
+    Ok(())
+}
+
 fn cmd_casestudy(args: &Args) -> Result<(), String> {
+    if args.switch("list") {
+        for (id, _, _) in experiments::CASE_STUDIES {
+            println!("{id}");
+        }
+        return Ok(());
+    }
+    let ids: Vec<&str> = experiments::CASE_STUDIES.iter().map(|(id, _, _)| *id).collect();
     let which = args
         .positional()
         .first()
         .map(|s| s.as_str())
-        .ok_or("casestudy needs a figure id (fig3|fig8|fig9|fig10|fig11|table3|table4)")?;
+        .ok_or_else(|| format!("casestudy needs an id ({}) or --list", ids.join("|")))?;
     let effort = parse_effort_flag(args)?;
-    match which {
-        "fig3" => {
-            let (table, _) = experiments::fig3_mapping_sweep(effort);
-            print!("{}", table.render());
+    // the registry entry carries the renderer, so there is no second
+    // dispatch table here to drift out of sync
+    match experiments::run_case_study(which, effort) {
+        Some(artifact) => {
+            print!("{artifact}");
+            Ok(())
         }
-        "fig8" => {
-            let (table, _) = experiments::fig8_algorithm_exploration(effort);
-            print!("{}", table.render());
-        }
-        "fig9" => print!("{}", experiments::fig9_mappings(effort)),
-        "fig10" => {
-            let (edge, cloud, _) = experiments::fig10_aspect_ratio(effort);
-            print!("{}\n{}", edge.render(), cloud.render());
-        }
-        "fig11" => {
-            let (table, _) = experiments::fig11_chiplet_bandwidth(effort);
-            print!("{}", table.render());
-        }
-        "table3" => print!("{}", experiments::table3_ttgt_dims().render()),
-        "table4" => {
-            let (table, results) = experiments::network_sweep(effort);
-            print!("{}", table.render());
-            for r in &results {
-                println!("{}", r.summary());
-            }
-        }
-        other => return Err(format!("unknown case study '{other}'")),
+        None => Err(format!("unknown case study '{which}' (have: {})", ids.join("|"))),
     }
-    Ok(())
 }
 
 fn cmd_validate(args: &Args) -> Result<(), String> {

@@ -50,22 +50,26 @@ pub enum Objective {
 }
 
 impl Objective {
-    pub fn score(&self, e: &CostEstimate) -> f64 {
+    /// The one scoring dispatch, over already-derived scalar metrics.
+    /// [`Objective::score`], [`Objective::score_bound`] and network- or
+    /// sweep-level consumers (which aggregate latency/energy totals
+    /// rather than hold one `CostEstimate`) all route through here.
+    pub fn score_raw(&self, latency_s: f64, energy_j: f64) -> f64 {
         match self {
-            Objective::Latency => e.latency_s(),
-            Objective::Energy => e.energy_j(),
-            Objective::Edp => e.edp(),
+            Objective::Latency => latency_s,
+            Objective::Energy => energy_j,
+            Objective::Edp => energy_j * latency_s,
         }
+    }
+
+    pub fn score(&self, e: &CostEstimate) -> f64 {
+        self.score_raw(e.latency_s(), e.energy_j())
     }
 
     /// Score a [`CostBound`] the same way: since every bound field is a
     /// lower bound, the bound's score is a lower bound on the score.
     pub fn score_bound(&self, b: &CostBound) -> f64 {
-        match self {
-            Objective::Latency => b.latency_s(),
-            Objective::Energy => b.energy_j(),
-            Objective::Edp => b.edp(),
-        }
+        self.score_raw(b.latency_s(), b.energy_j())
     }
 
     pub fn name(&self) -> &'static str {

@@ -91,8 +91,45 @@ pub struct NetworkStats {
     /// Fraction of layers served by a job searched for an earlier
     /// layer: `(layers - distinct_jobs) / layers`.
     pub dedup_hit_rate: f64,
-    /// Aggregate engine statistics across every job.
+    /// Jobs that started from a warm-start seed mapping (cross-run
+    /// incumbent sharing; always 0 for a plain [`NetworkOrchestrator::run`]).
+    pub warm_seeded_jobs: usize,
+    /// Aggregate engine statistics across every job of THIS run (not the
+    /// whole session, which may span several runs in a design-space sweep).
     pub engine: EngineStats,
+}
+
+/// Cross-run warm-start cache: the best mapping seen per *arch-free* job
+/// signature. A design-space sweep maps the same workload graph onto
+/// many architecture points; layer shapes recur across points even
+/// though the `(problem, arch)` dedup key differs, so the winning
+/// mapping of a problem on one arch is an excellent opening candidate
+/// on the next. [`NetworkOrchestrator::run_with_session`] consults the
+/// cache before each job and records each job's winner back into it.
+#[derive(Debug, Default)]
+pub struct WarmStartCache {
+    entries: HashMap<String, Mapping>,
+    hits: usize,
+}
+
+impl WarmStartCache {
+    pub fn new() -> WarmStartCache {
+        WarmStartCache::default()
+    }
+
+    /// Distinct signatures cached so far.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Times a cached mapping seeded a job.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
 }
 
 /// End-to-end result of mapping a network.
@@ -163,8 +200,13 @@ impl NetworkResult {
     /// Human summary of the run (CLI, kick-tires, benches).
     pub fn summary(&self) -> String {
         let s = &self.stats;
+        let warm = if s.warm_seeded_jobs > 0 {
+            format!(", {} warm-started", s.warm_seeded_jobs)
+        } else {
+            String::new()
+        };
         format!(
-            "network {}: {} layers in {} nodes -> {} distinct search jobs ({:.1}% layer reuse)\n\
+            "network {}: {} layers in {} nodes -> {} distinct search jobs ({:.1}% layer reuse{warm})\n\
              end-to-end: cycles={:.3e}  latency={:.3e}s  energy={:.3e}J  EDP={:.3e}Js\n\
              engine: proposed={} scored={} cost-evals={} memo-hits={} pruned={} rejected={}",
             self.network,
@@ -208,6 +250,31 @@ impl<'a> NetworkOrchestrator<'a> {
     /// Map the whole graph: canonicalize, dedup, search the distinct
     /// jobs on one session, re-expand into a [`NetworkResult`].
     pub fn run(&self, graph: &WorkloadGraph) -> Result<NetworkResult, String> {
+        let engine_config = EngineConfig {
+            threads: self.config.threads,
+            ..EngineConfig::default()
+        };
+        let mut session = Session::with_config(self.model, self.config.objective, engine_config);
+        self.run_with_session(graph, &mut session, None)
+    }
+
+    /// [`NetworkOrchestrator::run`] as the **inner loop of a larger
+    /// sweep**: search this graph's jobs on a caller-owned
+    /// [`Session`] (so memo allocations, thread policy and aggregate
+    /// stats persist across many runs — one per architecture point of a
+    /// [`crate::dse`] exploration) and optionally warm-start each job
+    /// from a [`WarmStartCache`] shared across those runs.
+    ///
+    /// The session must have been built with the same cost model and
+    /// objective as this orchestrator; the orchestrator's `threads`
+    /// knob is ignored in favour of the session's engine config. With a
+    /// fresh session and no cache this is exactly [`NetworkOrchestrator::run`].
+    pub fn run_with_session(
+        &self,
+        graph: &WorkloadGraph,
+        session: &mut Session,
+        mut warm: Option<&mut WarmStartCache>,
+    ) -> Result<NetworkResult, String> {
         if graph.is_empty() {
             return Err(format!("network '{}' has no layers", graph.name));
         }
@@ -246,12 +313,9 @@ impl<'a> NetworkOrchestrator<'a> {
         }
 
         // ---- search: distinct jobs only, one shared session ----
-        let engine_config = EngineConfig {
-            threads: self.config.threads,
-            ..EngineConfig::default()
-        };
-        let mut session = Session::with_config(self.model, self.config.objective, engine_config);
         let mut job_results: Vec<SearchResult> = Vec::with_capacity(jobs.len());
+        let mut run_stats = EngineStats::default();
+        let mut warm_seeded = 0usize;
         for (j, job) in jobs.iter().enumerate() {
             let space = MapSpace::new(&job.problem, self.arch, self.constraints);
             // a small admits-checked seed batch first, so every job has
@@ -264,7 +328,22 @@ impl<'a> NetworkOrchestrator<'a> {
                 done: false,
             })];
             sources.extend(portfolio_sources(self.config.samples, self.job_seed(j)));
-            let (result, _) = session.run_job(&space, &mut sources);
+            // cross-run incumbent sharing: open with the best mapping
+            // this problem earned on a neighbouring arch point, if any
+            let warm_key = self.warm_signature(&job.problem);
+            let seeds: Vec<Mapping> = match warm.as_mut() {
+                Some(cache) => match cache.entries.get(&warm_key) {
+                    Some(m) => {
+                        cache.hits += 1;
+                        warm_seeded += 1;
+                        vec![m.clone()]
+                    }
+                    None => Vec::new(),
+                },
+                None => Vec::new(),
+            };
+            let (result, stats) = session.run_job_seeded(&space, &seeds, &mut sources);
+            run_stats.absorb(&stats);
             let result = result.ok_or_else(|| {
                 format!(
                     "no legal mapping found for layer {} on {}",
@@ -272,6 +351,9 @@ impl<'a> NetworkOrchestrator<'a> {
                     self.arch.name
                 )
             })?;
+            if let Some(cache) = warm.as_mut() {
+                cache.entries.insert(warm_key, result.mapping.clone());
+            }
             job_results.push(result);
         }
 
@@ -304,7 +386,8 @@ impl<'a> NetworkOrchestrator<'a> {
             distinct_jobs: jobs.len(),
             dedup_hit_rate: (total_layers.saturating_sub(jobs.len() as u64)) as f64
                 / total_layers as f64,
-            engine: session.totals().clone(),
+            warm_seeded_jobs: warm_seeded,
+            engine: run_stats,
         };
         Ok(NetworkResult {
             network: graph.name.clone(),
@@ -328,6 +411,20 @@ impl<'a> NetworkOrchestrator<'a> {
             "{}|arch={}|model={}|cons={:?}|obj={}|samples={}",
             problem.signature(),
             self.arch.name,
+            self.model.name(),
+            self.constraints,
+            self.config.objective.name(),
+            self.config.samples,
+        )
+    }
+
+    /// Warm-start key: [`Self::job_signature`] **minus the arch** — what
+    /// must coincide for a mapping found on one architecture point to be
+    /// a sensible opening candidate on another.
+    fn warm_signature(&self, problem: &Problem) -> String {
+        format!(
+            "{}|model={}|cons={:?}|obj={}|samples={}",
+            problem.signature(),
             self.model.name(),
             self.constraints,
             self.config.objective.name(),

@@ -158,6 +158,57 @@ pub fn bar_chart(title: &str, labels: &[String], values: &[f64], width: usize) -
     out
 }
 
+/// An ASCII scatter plot on log-log axes. Each point is `(x, y, glyph)`;
+/// points are drawn in order, so later glyphs win contended cells (the
+/// DSE report draws dominated points first and frontier points last).
+/// Non-finite or non-positive coordinates are skipped.
+pub fn scatter_plot(
+    title: &str,
+    points: &[(f64, f64, char)],
+    width: usize,
+    height: usize,
+) -> String {
+    let width = width.max(2);
+    let height = height.max(2);
+    let mut out = String::new();
+    let _ = writeln!(out, "-- {title} --");
+    let finite: Vec<(f64, f64, char)> = points
+        .iter()
+        .copied()
+        .filter(|(x, y, _)| x.is_finite() && *x > 0.0 && y.is_finite() && *y > 0.0)
+        .collect();
+    if finite.is_empty() {
+        return out;
+    }
+    let lx: Vec<f64> = finite.iter().map(|(x, _, _)| x.ln()).collect();
+    let ly: Vec<f64> = finite.iter().map(|(_, y, _)| y.ln()).collect();
+    let xmin = lx.iter().copied().fold(f64::INFINITY, f64::min);
+    let xmax = lx.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let ymin = ly.iter().copied().fold(f64::INFINITY, f64::min);
+    let ymax = ly.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let xspan = (xmax - xmin).max(1e-9);
+    let yspan = (ymax - ymin).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for (i, &(_, _, glyph)) in finite.iter().enumerate() {
+        let cx = ((lx[i] - xmin) / xspan * (width - 1) as f64).round() as usize;
+        let cy = ((ly[i] - ymin) / yspan * (height - 1) as f64).round() as usize;
+        grid[height - 1 - cy][cx.min(width - 1)] = glyph;
+    }
+    for row in &grid {
+        let line: String = row.iter().collect();
+        let _ = writeln!(out, "|{line}|");
+    }
+    let _ = writeln!(
+        out,
+        "x: {:.2e}..{:.2e}  y: {:.2e}..{:.2e}  (log-log)",
+        xmin.exp(),
+        xmax.exp(),
+        ymin.exp(),
+        ymax.exp()
+    );
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +280,37 @@ mod tests {
     fn normalize_min_is_one() {
         let n = normalize_to_min(&[4.0, 2.0, 8.0]);
         assert_eq!(n, vec![2.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn scatter_plot_places_points_and_skips_bad_ones() {
+        // glyphs chosen to never collide with axis-label text
+        let s = scatter_plot(
+            "trade-off",
+            &[
+                (1.0, 1.0, '@'),
+                (100.0, 0.01, '*'),
+                (f64::INFINITY, 1.0, '#'),
+                (-1.0, 1.0, '#'),
+            ],
+            20,
+            8,
+        );
+        assert!(s.contains("-- trade-off --"));
+        assert!(s.contains('@') && s.contains('*'));
+        assert!(!s.contains('#'), "non-finite/non-positive points skipped");
+        assert!(s.contains("(log-log)"));
+        // empty input renders just the title
+        let empty = scatter_plot("e", &[], 20, 8);
+        assert_eq!(empty.lines().count(), 1);
+    }
+
+    #[test]
+    fn scatter_plot_later_points_win_cells() {
+        // two points in the same cell: the later glyph is drawn
+        let s = scatter_plot("t", &[(1.0, 1.0, '@'), (1.0, 1.0, '*')], 10, 4);
+        assert!(s.contains('*'));
+        assert!(!s.contains('@'));
     }
 
     #[test]

@@ -7,6 +7,15 @@
 //! ```text
 //! bench <name> ... mean 1.234 ms  median 1.230 ms  p95 1.280 ms  (n=50)
 //! ```
+//!
+//! Beyond timings, a bench can record named scalar [`Metric`]s (dedup
+//! hit-rates, dominance-skip counts, ...) and serialize the whole run
+//! as `BENCH_<name>.json` via [`Bencher::write_json_env`] when the
+//! `UNION_BENCH_DIR` environment variable is set. CI's bench-regression
+//! job diffs those files against the committed baselines in
+//! `bench/baselines/` (see `bench/README.md`): every recorded
+//! throughput and every *gated* metric is higher-is-better and fails
+//! the gate when it drops more than the threshold below its baseline.
 
 use std::time::Instant;
 
@@ -54,11 +63,22 @@ pub fn fmt_secs(secs: f64) -> String {
     }
 }
 
+/// A named scalar recorded alongside the timing reports. Gated metrics
+/// participate in CI's bench-regression comparison (higher-is-better);
+/// plain metrics are recorded for the trajectory but never gate.
+#[derive(Debug, Clone)]
+pub struct Metric {
+    pub name: String,
+    pub value: f64,
+    pub gated: bool,
+}
+
 /// Runs closures with warmup and reports summary statistics.
 pub struct Bencher {
     warmup_iters: usize,
     sample_iters: usize,
     reports: Vec<BenchReport>,
+    metrics: Vec<Metric>,
 }
 
 impl Default for Bencher {
@@ -73,6 +93,7 @@ impl Bencher {
             warmup_iters: 3,
             sample_iters: 10,
             reports: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -81,6 +102,7 @@ impl Bencher {
             warmup_iters: warmup,
             sample_iters: samples,
             reports: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -166,6 +188,95 @@ impl Bencher {
     pub fn reports(&self) -> &[BenchReport] {
         &self.reports
     }
+
+    /// Record an informational metric (trajectory only, never gates).
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("metric {name} = {value}");
+        self.metrics.push(Metric { name: name.to_string(), value, gated: false });
+    }
+
+    /// Record a gated metric: CI fails when it regresses more than the
+    /// bench-regression threshold below its committed baseline.
+    pub fn gated_metric(&mut self, name: &str, value: f64) {
+        println!("metric {name} = {value} [gated]");
+        self.metrics.push(Metric { name: name.to_string(), value, gated: true });
+    }
+
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    /// Serialize every report and metric as the `BENCH_<name>.json`
+    /// document the regression checker consumes.
+    pub fn to_json(&self, bench: &str) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v:e}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench)));
+        out.push_str("  \"results\": [\n");
+        for (i, r) in self.reports.iter().enumerate() {
+            let tp = match r.throughput {
+                Some(t) => num(t),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_s\": {}, \"median_s\": {}, \"p95_s\": {}, \
+                 \"n\": {}, \"throughput\": {}, \"unit\": \"{}\"}}{}\n",
+                esc(&r.name),
+                num(r.summary.mean),
+                num(r.summary.median),
+                num(r.summary.p95),
+                r.summary.n,
+                tp,
+                esc(r.unit),
+                if i + 1 < self.reports.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str("  \"metrics\": [\n");
+        for (i, m) in self.metrics.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"value\": {}, \"gated\": {}}}{}\n",
+                esc(&m.name),
+                num(m.value),
+                m.gated,
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// When `UNION_BENCH_DIR` is set, write `BENCH_<name>.json` there
+    /// (creating the directory) and return the path. A write failure is
+    /// reported but never fails the bench itself.
+    pub fn write_json_env(&self, bench: &str) -> Option<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from(std::env::var("UNION_BENCH_DIR").ok()?);
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            eprintln!("bench json: cannot create {}: {e}", dir.display());
+            return None;
+        }
+        let path = dir.join(format!("BENCH_{bench}.json"));
+        match std::fs::write(&path, self.to_json(bench)) {
+            Ok(()) => {
+                println!("bench json written to {}", path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("bench json: cannot write {}: {e}", path.display());
+                None
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -201,6 +312,23 @@ mod tests {
         let r = &b.reports()[0];
         assert_eq!(r.unit, "cand");
         assert_eq!(r.throughput, Some(rate));
+    }
+
+    #[test]
+    fn json_records_reports_and_metrics() {
+        let mut b = Bencher::with_iters(1, 2);
+        b.bench_rate("engine \"hot\" path", "cand", || 100);
+        b.metric("frontier_size", 4.0);
+        b.gated_metric("dedup_hit_rate", 0.55);
+        let json = b.to_json("demo");
+        assert!(json.contains("\"bench\": \"demo\""));
+        assert!(json.contains("engine \\\"hot\\\" path"), "quotes escaped");
+        assert!(json.contains("\"unit\": \"cand\""));
+        assert!(json.contains("\"name\": \"dedup_hit_rate\", \"value\": 5.5e-1, \"gated\": true"));
+        assert!(json.contains("\"gated\": false"));
+        // no trailing commas before the closing brackets
+        assert!(!json.contains(",\n  ]"));
+        assert_eq!(b.metrics().len(), 2);
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Design-space-exploration contracts: Pareto-frontier properties
+//! (non-domination, insertion-order invariance, dominated inserts are
+//! no-ops) and whole-sweep thread-count determinism, mirroring
+//! `tests/engine_determinism.rs`.
+
+use union::cost::{AnalyticalModel, EnergyTable};
+use union::dse::{dominates, DseConfig, DseOrchestrator, GridSpaceBuilder, ParetoFrontier};
+use union::frontend;
+use union::mapspace::Constraints;
+use union::util::quickcheck::{Gen, QuickCheck};
+
+/// Random 3-objective points on a small integer grid, so duplicates and
+/// dominance chains are common.
+fn random_points(g: &mut Gen, n: usize) -> Vec<Vec<f64>> {
+    (0..n)
+        .map(|_| (0..3).map(|_| g.range(1, 9) as f64).collect())
+        .collect()
+}
+
+fn build(points: &[Vec<f64>]) -> ParetoFrontier {
+    let mut f = ParetoFrontier::new(3);
+    for (i, p) in points.iter().enumerate() {
+        f.insert(p, i);
+    }
+    f
+}
+
+/// The frontier's objective vectors (stored lexicographically sorted,
+/// so two frontiers over the same set compare with `==`).
+fn objective_set(f: &ParetoFrontier) -> Vec<Vec<f64>> {
+    f.points().iter().map(|(p, _)| p.clone()).collect()
+}
+
+#[test]
+fn every_reported_point_is_non_dominated() {
+    QuickCheck::new().cases(200).check("mutually-non-dominated", |g| {
+        let n = g.range(1, 24);
+        let pts = random_points(g, n);
+        let objs = objective_set(&build(&pts));
+        for i in 0..objs.len() {
+            for j in 0..objs.len() {
+                if i != j && dominates(&objs[i], &objs[j]) {
+                    return Err(format!("{:?} dominates {:?}", objs[i], objs[j]));
+                }
+            }
+        }
+        // and every input point is covered by some frontier point
+        for p in &pts {
+            if !objs.iter().any(|q| dominates(q, p)) {
+                return Err(format!("{p:?} not covered by the frontier"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn inserting_a_dominated_point_never_changes_the_frontier() {
+    QuickCheck::new().cases(200).check("dominated-insert-is-noop", |g| {
+        let n = g.range(1, 20);
+        let pts = random_points(g, n);
+        let mut f = build(&pts);
+        let before = objective_set(&f);
+        // worsen a random input point along random axes (zero delta
+        // included: exact duplicates are dominated too)
+        let base = pts[g.range(0, n - 1)].clone();
+        let worse: Vec<f64> = base.iter().map(|v| v + g.range(0, 3) as f64).collect();
+        if f.insert(&worse, usize::MAX) {
+            return Err(format!("dominated point {worse:?} entered the frontier"));
+        }
+        if objective_set(&f) != before {
+            return Err("frontier changed on a dominated insert".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frontier_is_invariant_to_insertion_order() {
+    QuickCheck::new().cases(200).check("order-invariant", |g| {
+        let n = g.range(1, 20);
+        let mut pts = random_points(g, n);
+        let a = objective_set(&build(&pts));
+        g.rng().shuffle(&mut pts);
+        let b = objective_set(&build(&pts));
+        if a != b {
+            return Err(format!("order changed the frontier: {a:?} vs {b:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dse_sweep_is_thread_count_invariant() {
+    // the whole DSE pipeline (bounds -> dominance skips -> shared
+    // session with warm starts -> frontier) must inherit the engine's
+    // determinism: byte-identical reports at 1 and N threads
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let space = GridSpaceBuilder::new("det")
+        .grids(&[(4, 4), (8, 8), (16, 16)])
+        .l2_bytes(&[64 * 1024, 512 * 1024])
+        .build();
+    let graph = frontend::dlrm_layers();
+    let run = |threads: Option<usize>| {
+        let config = DseConfig {
+            samples: 120,
+            seed: 13,
+            threads,
+            ..DseConfig::default()
+        };
+        DseOrchestrator::with_config(&model, &cons, config)
+            .run(&space, &graph)
+            .expect("sweep runs")
+    };
+    let r1 = run(Some(1));
+    let rn = run(Some(8));
+    assert_eq!(r1.stats.evaluated, rn.stats.evaluated);
+    assert_eq!(r1.stats.pruned, rn.stats.pruned);
+    assert_eq!(r1.stats.engine, rn.stats.engine, "engine stats depend on threads");
+    // the strongest form: the rendered artifacts are byte-identical
+    assert_eq!(
+        r1.points_table().render(),
+        rn.points_table().render(),
+        "DSE points table depends on thread count"
+    );
+    assert_eq!(
+        r1.frontier_table().render(),
+        rn.frontier_table().render(),
+        "DSE frontier depends on thread count"
+    );
+    assert_eq!(r1.summary(), rn.summary());
+}
+
+#[test]
+fn dse_sweep_is_reproducible_across_runs() {
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let cons = Constraints::default();
+    let space = GridSpaceBuilder::new("repro")
+        .grids(&[(4, 4), (8, 8)])
+        .l2_bytes(&[128 * 1024])
+        .build();
+    let graph = frontend::dlrm_layers();
+    let run = || {
+        let config = DseConfig { samples: 100, seed: 7, ..DseConfig::default() };
+        DseOrchestrator::with_config(&model, &cons, config)
+            .run(&space, &graph)
+            .expect("sweep runs")
+    };
+    assert_eq!(run().points_table().render(), run().points_table().render());
+}

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare BENCH_<name>.json runs to baselines.
+
+The benches (``cargo bench --bench perf_hotpath --bench network_sweep
+--bench dse_sweep`` with ``UNION_BENCH_DIR`` set) write one JSON file
+each, recording every timing report (with candidates/sec throughput
+where applicable) and every named metric (dedup hit-rate, dominated-skip
+count, ...). This script fails CI when the current run regresses against
+the committed baselines in bench/baselines/:
+
+* every baseline *throughput* must reach at least (1 - threshold) x its
+  baseline value (higher is better);
+* every baseline *gated metric* is held to the same rule;
+* a baseline entry missing from the current run fails outright —
+  coverage cannot silently vanish;
+* plain (non-gated) metrics and timing means are recorded for the
+  trajectory but never gate.
+
+Refresh baselines after a legitimate speedup with ``--update`` (see
+bench/README.md). Only stdlib is used; no pip installs.
+"""
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+
+
+def gated_entries(doc):
+    """Extract {key: value} for everything that participates in the gate."""
+    out = {}
+    for r in doc.get("results", []):
+        tp = r.get("throughput")
+        if tp is not None:
+            out["throughput:" + r["name"]] = float(tp)
+    for m in doc.get("metrics", []):
+        if m.get("gated") and m.get("value") is not None:
+            out["metric:" + m["name"]] = float(m["value"])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baselines", default="bench/baselines",
+                    help="directory of committed BENCH_<name>.json baselines")
+    ap.add_argument("--current", default="out/bench",
+                    help="directory of freshly recorded BENCH_<name>.json files")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="allowed fractional drop before failing (default 0.15)")
+    ap.add_argument("--update", action="store_true",
+                    help="copy current files over the baselines instead of comparing")
+    args = ap.parse_args()
+
+    baselines = pathlib.Path(args.baselines)
+    current = pathlib.Path(args.current)
+
+    if args.update:
+        baselines.mkdir(parents=True, exist_ok=True)
+        updated = 0
+        for cur in sorted(current.glob("BENCH_*.json")):
+            json.loads(cur.read_text())  # refuse to commit malformed JSON
+            shutil.copy(cur, baselines / cur.name)
+            print(f"baseline updated: {baselines / cur.name}")
+            updated += 1
+        if updated == 0:
+            sys.exit(f"no BENCH_*.json files found in {current}")
+        return
+
+    baseline_files = sorted(baselines.glob("BENCH_*.json"))
+    if not baseline_files:
+        sys.exit(f"no baselines in {baselines} — run with --update to create them")
+
+    failures = []
+    compared = 0
+    for base_path in baseline_files:
+        cur_path = current / base_path.name
+        if not cur_path.exists():
+            failures.append(f"{base_path.name}: current run file missing from {current}")
+            continue
+        base = gated_entries(json.loads(base_path.read_text()))
+        cur = gated_entries(json.loads(cur_path.read_text()))
+        for key, base_val in sorted(base.items()):
+            if key not in cur:
+                failures.append(f"{base_path.name}: '{key}' missing from current run")
+                continue
+            cur_val = cur[key]
+            floor = base_val * (1.0 - args.threshold)
+            verdict = "ok" if cur_val >= floor else "REGRESSION"
+            delta = (cur_val / base_val - 1.0) * 100.0 if base_val else float("inf")
+            print(f"{verdict:>10}  {base_path.name}  {key}: "
+                  f"{cur_val:.4g} vs baseline {base_val:.4g} ({delta:+.1f}%)")
+            compared += 1
+            if cur_val < floor:
+                failures.append(
+                    f"{base_path.name}: '{key}' regressed to {cur_val:.4g} "
+                    f"(baseline {base_val:.4g}, floor {floor:.4g})")
+
+    print(f"\ncompared {compared} gated entries across {len(baseline_files)} bench files")
+    if failures:
+        print("\nbench-regression FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        print("\nIf a slowdown is expected (e.g. the bench now does more work) or a "
+              "speedup legitimately moved a baseline, refresh with:\n"
+              "  UNION_BENCH_DIR=$PWD/out/bench cargo bench --bench perf_hotpath "
+              "--bench network_sweep --bench dse_sweep\n"
+              "  python3 scripts/check_bench_regression.py --update\n"
+              "and commit bench/baselines/ (see bench/README.md).", file=sys.stderr)
+        sys.exit(1)
+    print("bench-regression gate: green")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # Regenerate every paper artifact at fast effort into out/.
 #
-# Used by CI's smoke job and by reviewers: if any figure driver panics
-# or produces an empty table, this exits nonzero. `--thorough` forwards
-# the high-effort search budget (slow; not for CI).
+# Used by CI's smoke job and by reviewers: if any case-study driver
+# panics or produces an empty table, this exits nonzero. The artifact
+# list is NOT hard-coded here: it comes from `union casestudy --list`,
+# which prints the CASE_STUDIES registry in rust/src/experiments/mod.rs
+# — so adding a case study there automatically adds CI coverage, and a
+# registry/CI drift is impossible by construction. `--thorough`
+# forwards the high-effort search budget (slow; not for CI).
 #
 #   scripts/kick_tires.sh [--thorough]
 
@@ -22,7 +26,19 @@ echo "== building (release) =="
 cargo build --release --bin union
 
 BIN=target/release/union
-ARTIFACTS=(fig3 fig8 fig9 fig10 fig11 table3)
+
+# portable read loop (mapfile needs bash 4; macOS ships 3.2)
+ARTIFACTS=()
+while IFS= read -r id; do
+    [[ -n "$id" ]] && ARTIFACTS+=("$id")
+done < <("$BIN" casestudy --list)
+# guard the real failure mode (empty/garbage output) without
+# duplicating the registry size here
+if [[ ${#ARTIFACTS[@]} -lt 1 ]]; then
+    echo "ERROR: casestudy --list returned no ids" >&2
+    exit 1
+fi
+echo "== registry: ${ARTIFACTS[*]} =="
 
 for fig in "${ARTIFACTS[@]}"; do
     echo "== $fig =="
@@ -49,6 +65,10 @@ for fig in "${CHECK_FILES[@]}"; do
 done
 if ! grep -q "distinct search jobs" "$OUT/network_resnet50.txt"; then
     echo "ERROR: network run did not report its dedup summary" >&2
+    status=1
+fi
+if ! grep -q "skipped by dominance pruning" "$OUT/dse.txt"; then
+    echo "ERROR: dse run did not report its pruning summary" >&2
     status=1
 fi
 
