@@ -63,7 +63,7 @@ fn main() {
     let mut n = 0;
     while n < 200 {
         let Some(m) = space.sample_legal(&mut rng, 100) else { continue };
-        let ta = TileAnalysis::new(&problem, &arch, &m);
+        let mut ta = TileAnalysis::new(&problem, &arch, &m);
         let aware = ta.movement(ReuseModel::OrderAware);
         let agnostic = ta.movement(ReuseModel::OrderAgnostic);
         aware_total += aware.levels[0].reads;

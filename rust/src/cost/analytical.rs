@@ -13,8 +13,8 @@ use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::problem::Problem;
 
-use super::tile::{ReuseModel, TileAnalysis};
-use super::{CostBound, CostEstimate, CostModel, EnergyTable, LevelStats};
+use super::tile::{tile_movement_into, FootprintMemo, ReuseModel, TileScratch};
+use super::{CostBound, CostEstimate, CostModel, EnergyTable, LeanCost, LevelStats};
 
 /// Timeloop-style hierarchical analytical model.
 pub struct AnalyticalModel {
@@ -33,6 +33,82 @@ impl AnalyticalModel {
     pub fn with_unit_op_operands(mut self, n: usize) -> Self {
         self.unit_op_operands = n;
         self
+    }
+
+    /// The one cost computation both `evaluate_prechecked` (full, with
+    /// per-level stats) and `evaluate_lean` (scalars only, allocation-
+    /// free) run — identical arithmetic in identical order, so the two
+    /// paths are bit-identical by construction. `scratch` must be
+    /// prepared for `(problem, arch)`.
+    fn cost_core(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+        scratch: &mut TileScratch,
+        footprints: Option<&FootprintMemo>,
+        mut level_stats: Option<&mut Vec<LevelStats>>,
+    ) -> (LeanCost, f64) {
+        tile_movement_into(problem, arch, mapping, ReuseModel::OrderAware, footprints, scratch);
+        let macs = scratch.macs();
+        let pes_used = scratch.pes_used();
+
+        let word = arch.word_bytes as f64;
+        let mut energy_pj = 0.0;
+        let mut interconnect_pj = 0.0;
+        let mut bw_bound: f64 = 0.0;
+
+        for lm in scratch.level_rows() {
+            let mem = arch.levels[lm.level]
+                .memory
+                .as_ref()
+                .expect("real level has memory");
+            let e_access = self.energy.access_pj(mem);
+            let level_energy = (lm.reads + lm.writes) * e_access;
+            energy_pj += level_energy;
+            interconnect_pj += lm.link_words * self.energy.link_pj(lm.cross_package) / word
+                * arch.word_bytes as f64;
+            // bandwidth: words arriving per instance / fill bandwidth
+            let bw_cycles = lm.per_instance_in * word / mem.fill_bw;
+            bw_bound = bw_bound.max(bw_cycles);
+            if let Some(out) = level_stats.as_mut() {
+                out.push(LevelStats {
+                    level_name: mem.name.clone(),
+                    reads: lm.reads,
+                    writes: lm.writes,
+                    energy_pj: level_energy,
+                    bw_cycles,
+                });
+            }
+        }
+        // DRAM outgoing bandwidth (reads serving the chip)
+        if let Some(top) = scratch.level_rows().first() {
+            let mem = arch.levels[top.level].memory.as_ref().unwrap();
+            let dram_cycles = (top.reads + top.writes) * word / mem.fill_bw;
+            bw_bound = bw_bound.max(dram_cycles);
+            if let Some(ls) = level_stats.as_mut().and_then(|o| o.first_mut()) {
+                ls.bw_cycles = dram_cycles;
+            }
+        }
+
+        let mac_energy = macs as f64
+            * self.energy.mac_pj
+            * (problem.operation.operands() as f64 - 1.0).max(1.0);
+        energy_pj += mac_energy + interconnect_pj;
+
+        let compute_cycles = macs as f64 / pes_used.max(1) as f64;
+        let cycles = compute_cycles.max(bw_bound);
+
+        (
+            LeanCost {
+                cycles,
+                energy_pj,
+                utilization: mapping.utilization(arch),
+                macs,
+                clock_ghz: arch.clock_ghz,
+            },
+            interconnect_pj,
+        )
     }
 }
 
@@ -72,63 +148,33 @@ impl CostModel for AnalyticalModel {
         arch: &Arch,
         mapping: &Mapping,
     ) -> Result<CostEstimate, String> {
-        let ta = TileAnalysis::new(problem, arch, mapping);
-        let mv = ta.movement(ReuseModel::OrderAware);
-
-        let word = arch.word_bytes as f64;
-        let mut levels = Vec::with_capacity(mv.levels.len());
-        let mut energy_pj = 0.0;
-        let mut interconnect_pj = 0.0;
-        let mut bw_bound: f64 = 0.0;
-
-        for lm in &mv.levels {
-            let mem = arch.levels[lm.level]
-                .memory
-                .as_ref()
-                .expect("real level has memory");
-            let e_access = self.energy.access_pj(mem);
-            let level_energy = (lm.reads + lm.writes) * e_access;
-            energy_pj += level_energy;
-            interconnect_pj += lm.link_words * self.energy.link_pj(lm.cross_package) / word
-                * arch.word_bytes as f64;
-            // bandwidth: words arriving per instance / fill bandwidth
-            let bw_cycles = lm.per_instance_in * word / mem.fill_bw;
-            bw_bound = bw_bound.max(bw_cycles);
-            levels.push(LevelStats {
-                level_name: mem.name.clone(),
-                reads: lm.reads,
-                writes: lm.writes,
-                energy_pj: level_energy,
-                bw_cycles,
-            });
-        }
-        // DRAM outgoing bandwidth (reads serving the chip)
-        if let Some(top) = mv.levels.first() {
-            let mem = arch.levels[top.level].memory.as_ref().unwrap();
-            let dram_cycles = (top.reads + top.writes) * word / mem.fill_bw;
-            bw_bound = bw_bound.max(dram_cycles);
-            if let Some(ls) = levels.first_mut() {
-                ls.bw_cycles = dram_cycles;
-            }
-        }
-
-        let mac_energy = mv.macs as f64
-            * self.energy.mac_pj
-            * (problem.operation.operands() as f64 - 1.0).max(1.0);
-        energy_pj += mac_energy + interconnect_pj;
-
-        let compute_cycles = mv.macs as f64 / mv.pes_used.max(1) as f64;
-        let cycles = compute_cycles.max(bw_bound);
-
+        let mut scratch = TileScratch::new();
+        scratch.prepare(problem, arch);
+        let mut levels = Vec::new();
+        let (lean, interconnect_pj) =
+            self.cost_core(problem, arch, mapping, &mut scratch, None, Some(&mut levels));
         Ok(CostEstimate {
-            cycles,
-            energy_pj,
-            utilization: mapping.utilization(arch),
-            macs: mv.macs,
+            cycles: lean.cycles,
+            energy_pj: lean.energy_pj,
+            utilization: lean.utilization,
+            macs: lean.macs,
             levels,
             interconnect_pj,
-            clock_ghz: arch.clock_ghz,
+            clock_ghz: lean.clock_ghz,
         })
+    }
+
+    fn evaluate_lean(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+        scratch: &mut TileScratch,
+        footprints: Option<&FootprintMemo>,
+    ) -> Result<LeanCost, String> {
+        scratch.prepare(problem, arch);
+        let (lean, _) = self.cost_core(problem, arch, mapping, scratch, footprints, None);
+        Ok(lean)
     }
 
     /// Mapping-independent floor for the whole architecture. Beyond the

@@ -17,8 +17,8 @@ use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::problem::{Operation, Problem};
 
-use super::tile::{ReuseModel, TileAnalysis};
-use super::{CostBound, CostEstimate, CostModel, EnergyTable, LevelStats};
+use super::tile::{tile_movement_into, FootprintMemo, ReuseModel, TileScratch};
+use super::{CostBound, CostEstimate, CostModel, EnergyTable, LeanCost, LevelStats};
 
 /// MAESTRO-style cluster model.
 pub struct MaestroModel {
@@ -33,6 +33,81 @@ impl MaestroModel {
     /// The operations MAESTRO natively supports.
     pub fn supported_operations() -> &'static [Operation] {
         &[Operation::Conv2d, Operation::Gemm, Operation::DwConv]
+    }
+
+    /// Shared cost core — see
+    /// [`AnalyticalModel::cost_core`](super::AnalyticalModel) for the
+    /// contract: `evaluate_prechecked` and `evaluate_lean` both run
+    /// exactly this arithmetic, so their scores are bit-identical.
+    fn cost_core(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+        scratch: &mut TileScratch,
+        footprints: Option<&FootprintMemo>,
+        mut level_stats: Option<&mut Vec<LevelStats>>,
+    ) -> (LeanCost, f64) {
+        tile_movement_into(problem, arch, mapping, ReuseModel::OrderAgnostic, footprints, scratch);
+        let macs = scratch.macs();
+        let pes_used = scratch.pes_used();
+
+        let word = arch.word_bytes as f64;
+        let mut energy_pj = 0.0;
+        let mut interconnect_pj = 0.0;
+        for lm in scratch.level_rows() {
+            let mem = arch.levels[lm.level].memory.as_ref().unwrap();
+            let e_access = self.energy.access_pj(mem);
+            let level_energy = (lm.reads + lm.writes) * e_access;
+            energy_pj += level_energy;
+            interconnect_pj += lm.link_words * self.energy.link_pj(lm.cross_package);
+            if let Some(out) = level_stats.as_mut() {
+                out.push(LevelStats {
+                    level_name: mem.name.clone(),
+                    reads: lm.reads,
+                    writes: lm.writes,
+                    energy_pj: level_energy,
+                    bw_cycles: 0.0,
+                });
+            }
+        }
+        energy_pj += interconnect_pj + macs as f64 * self.energy.mac_pj;
+
+        // latency: per-time-step pipeline of compute and NoC delivery.
+        // steps = product of all temporal trips; per-step compute = MACs
+        // within one innermost tile across the active PEs; per-step NoC =
+        // delta words delivered to the PEs through the shared NoC.
+        let total_steps: f64 = (0..arch.depth())
+            .map(|i| {
+                (0..problem.dims.len())
+                    .map(|d| scratch.trip(i, d) as f64)
+                    .product::<f64>()
+            })
+            .product();
+        let compute_per_step = macs as f64 / pes_used.max(1) as f64 / total_steps;
+        // words delivered from L2 to all PEs per step, through the NoC
+        let l1 = scratch.level_rows().last().unwrap();
+        let noc_words_per_step = l1.link_words / total_steps;
+        let noc_per_step = noc_words_per_step * word / arch.noc_bw;
+        let steady = compute_per_step.max(noc_per_step);
+        // pipeline: first step pays both (fill), then steady-state
+        let cycles = (compute_per_step + noc_per_step) + steady * (total_steps - 1.0).max(0.0);
+        // DRAM feed can still dominate
+        let dram = arch.levels[scratch.real_levels()[0]].memory.as_ref().unwrap();
+        let top = &scratch.level_rows()[0];
+        let dram_cycles = (top.reads + top.writes) * word / dram.fill_bw;
+        let cycles = cycles.max(dram_cycles).max(macs as f64 / pes_used.max(1) as f64);
+
+        (
+            LeanCost {
+                cycles,
+                energy_pj,
+                utilization: mapping.utilization(arch),
+                macs,
+                clock_ghz: arch.clock_ghz,
+            },
+            interconnect_pj,
+        )
     }
 }
 
@@ -80,63 +155,33 @@ impl CostModel for MaestroModel {
         arch: &Arch,
         mapping: &Mapping,
     ) -> Result<CostEstimate, String> {
-        let ta = TileAnalysis::new(problem, arch, mapping);
-        let mv = ta.movement(ReuseModel::OrderAgnostic);
-
-        let word = arch.word_bytes as f64;
-        let mut levels = Vec::with_capacity(mv.levels.len());
-        let mut energy_pj = 0.0;
-        let mut interconnect_pj = 0.0;
-        for lm in &mv.levels {
-            let mem = arch.levels[lm.level].memory.as_ref().unwrap();
-            let e_access = self.energy.access_pj(mem);
-            let level_energy = (lm.reads + lm.writes) * e_access;
-            energy_pj += level_energy;
-            interconnect_pj += lm.link_words * self.energy.link_pj(lm.cross_package);
-            levels.push(LevelStats {
-                level_name: mem.name.clone(),
-                reads: lm.reads,
-                writes: lm.writes,
-                energy_pj: level_energy,
-                bw_cycles: 0.0,
-            });
-        }
-        energy_pj += interconnect_pj + mv.macs as f64 * self.energy.mac_pj;
-
-        // latency: per-time-step pipeline of compute and NoC delivery.
-        // steps = product of all temporal trips; per-step compute = MACs
-        // within one innermost tile across the active PEs; per-step NoC =
-        // delta words delivered to the PEs through the shared NoC.
-        let total_steps: f64 = (0..arch.depth())
-            .map(|i| {
-                (0..problem.dims.len())
-                    .map(|d| ta.trips[i][d] as f64)
-                    .product::<f64>()
-            })
-            .product();
-        let compute_per_step = mv.macs as f64 / mv.pes_used.max(1) as f64 / total_steps;
-        // words delivered from L2 to all PEs per step, through the NoC
-        let l1 = mv.levels.last().unwrap();
-        let noc_words_per_step = l1.link_words / total_steps;
-        let noc_per_step = noc_words_per_step * word / arch.noc_bw;
-        let steady = compute_per_step.max(noc_per_step);
-        // pipeline: first step pays both (fill), then steady-state
-        let cycles = (compute_per_step + noc_per_step) + steady * (total_steps - 1.0).max(0.0);
-        // DRAM feed can still dominate
-        let dram = arch.levels[ta.real_levels[0]].memory.as_ref().unwrap();
-        let top = &mv.levels[0];
-        let dram_cycles = (top.reads + top.writes) * word / dram.fill_bw;
-        let cycles = cycles.max(dram_cycles).max(mv.macs as f64 / mv.pes_used.max(1) as f64);
-
+        let mut scratch = TileScratch::new();
+        scratch.prepare(problem, arch);
+        let mut levels = Vec::new();
+        let (lean, interconnect_pj) =
+            self.cost_core(problem, arch, mapping, &mut scratch, None, Some(&mut levels));
         Ok(CostEstimate {
-            cycles,
-            energy_pj,
-            utilization: mapping.utilization(arch),
-            macs: mv.macs,
+            cycles: lean.cycles,
+            energy_pj: lean.energy_pj,
+            utilization: lean.utilization,
+            macs: lean.macs,
             levels,
             interconnect_pj,
-            clock_ghz: arch.clock_ghz,
+            clock_ghz: lean.clock_ghz,
         })
+    }
+
+    fn evaluate_lean(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+        scratch: &mut TileScratch,
+        footprints: Option<&FootprintMemo>,
+    ) -> Result<LeanCost, String> {
+        scratch.prepare(problem, arch);
+        let (lean, _) = self.cost_core(problem, arch, mapping, scratch, footprints, None);
+        Ok(lean)
     }
 
     /// Monotone floor mirroring [`super::AnalyticalModel::lower_bound`]:

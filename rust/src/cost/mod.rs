@@ -24,7 +24,9 @@ pub use analytical::AnalyticalModel;
 pub use energy::EnergyTable;
 pub use maestro::MaestroModel;
 pub use sparse::{Density, SparseModel};
-pub use tile::{DataMovement, FootprintMemo, ReuseModel, TileAnalysis};
+pub use tile::{
+    DataMovement, FootprintMemo, FpEntry, ReuseModel, TileAnalysis, TileScratch,
+};
 
 use crate::arch::Arch;
 use crate::mapping::Mapping;
@@ -83,6 +85,53 @@ impl CostEstimate {
     /// Effective throughput in MACs/cycle.
     pub fn macs_per_cycle(&self) -> f64 {
         self.macs as f64 / self.cycles.max(1.0)
+    }
+}
+
+/// The scalar core of a [`CostEstimate`]: everything the search loop
+/// needs to score a candidate, and nothing that allocates. `Copy`, so
+/// the engine's per-candidate outcome is a plain value — the full
+/// estimate (with its per-level breakdown and level-name strings) is
+/// only materialized for incumbents.
+#[derive(Debug, Clone, Copy)]
+pub struct LeanCost {
+    /// Execution cycles (max of compute-bound and bandwidth-bound terms).
+    pub cycles: f64,
+    /// Total energy in picojoules.
+    pub energy_pj: f64,
+    /// Fraction of PEs used by the mapping.
+    pub utilization: f64,
+    /// Total multiply-accumulates.
+    pub macs: u64,
+    /// Clock used to convert cycles to seconds.
+    pub clock_ghz: f64,
+}
+
+impl LeanCost {
+    /// Latency in seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.cycles / (self.clock_ghz * 1e9)
+    }
+
+    /// Energy in joules.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_pj * 1e-12
+    }
+
+    /// Energy-delay product in joule-seconds.
+    pub fn edp(&self) -> f64 {
+        self.energy_j() * self.latency_s()
+    }
+
+    /// The same scalars extracted from a full estimate.
+    pub fn of(e: &CostEstimate) -> LeanCost {
+        LeanCost {
+            cycles: e.cycles,
+            energy_pj: e.energy_pj,
+            utilization: e.utilization,
+            macs: e.macs,
+            clock_ghz: e.clock_ghz,
+        }
     }
 }
 
@@ -148,6 +197,31 @@ pub trait CostModel: Sync {
         mapping: &Mapping,
     ) -> Result<CostEstimate, String> {
         self.evaluate(problem, arch, mapping)
+    }
+
+    /// The allocation-free scoring path of the search engine: estimate
+    /// the scalar cost of an *already validated* mapping using caller-
+    /// provided scratch buffers ([`TileScratch`], one per evaluation
+    /// worker, prepared for this `(problem, arch)`), optionally reusing
+    /// per-data-space tile footprints a [`FootprintMemo`] already holds.
+    ///
+    /// Contract: the returned scalars must be **bit-identical** to the
+    /// corresponding fields of [`CostModel::evaluate_prechecked`] — the
+    /// in-tree models guarantee it by routing both paths through one
+    /// shared core; the default implementation guarantees it trivially
+    /// by calling `evaluate_prechecked` (allocating — models with a hot
+    /// path override this).
+    fn evaluate_lean(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+        scratch: &mut TileScratch,
+        footprints: Option<&FootprintMemo>,
+    ) -> Result<LeanCost, String> {
+        let _ = (scratch, footprints);
+        self.evaluate_prechecked(problem, arch, mapping)
+            .map(|e| LeanCost::of(&e))
     }
 
     /// A cheap *monotone* lower bound for a structurally valid mapping:

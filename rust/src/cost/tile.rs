@@ -8,12 +8,38 @@
 //! distributions in between. Both cost models are built on these
 //! quantities; the Timeloop-style model uses the order-aware refetch,
 //! the MAESTRO-style model the order-agnostic (best-case) variant.
+//!
+//! # The scratch-based hot path
+//!
+//! The search engine evaluates millions of candidates; allocating the
+//! trip/fan-out/detail tables per candidate made the allocator the
+//! dominant non-model cost. All analysis state now lives in a
+//! [`TileScratch`] — flat buffers sized once per job and reused for
+//! every candidate (one scratch per engine worker). The allocating
+//! [`TileAnalysis`] API remains as a thin wrapper over the same core,
+//! so the two paths cannot drift: `TileAnalysis::movement` and the
+//! scratch path execute the identical arithmetic in the identical
+//! order, producing bit-identical results.
 
 use std::collections::HashMap;
 
 use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::problem::{DataSpace, Problem};
+use crate::util::hash::BuildFnv;
+
+/// One footprint-memo entry: the rule-3 total plus the per-data-space
+/// breakdown, so the *full tile analysis* — not just the capacity
+/// pre-filter — can reuse a cached chain.
+#[derive(Debug, Clone)]
+pub struct FpEntry {
+    /// Σ over data spaces of the tile footprint, in words (the rule-3
+    /// quantity).
+    pub total_words: u64,
+    /// Per-data-space tile footprints, indexed like
+    /// [`Problem::data_spaces`].
+    pub per_ds: Box<[u64]>,
+}
 
 /// Memoized per-(dim-chain) tile footprints.
 ///
@@ -23,13 +49,14 @@ use crate::problem::{DataSpace, Problem};
 /// divisor chains, so thousands of candidates in a batch share the same
 /// per-level temporal-tile vector. The footprint depends *only* on that
 /// vector (not on the level index), so one small map keyed by the chain
-/// serves every level of every candidate. The engine uses it as a fast
-/// rule-3 pre-filter before paying for the full legality pass.
+/// serves every level of every candidate. The engine populates it on
+/// the main thread during the rule-3 pre-filter, then the parallel
+/// workers reuse the per-data-space entries inside the full tile
+/// analysis via the read-only [`FootprintMemo::lookup`].
 #[derive(Debug, Default)]
 pub struct FootprintMemo {
-    /// temporal-tile vector → summed footprint in words across all data
-    /// spaces.
-    map: HashMap<Vec<u64>, u64>,
+    /// temporal-tile vector → footprint entry.
+    map: HashMap<Vec<u64>, FpEntry, BuildFnv>,
     hits: u64,
     misses: u64,
 }
@@ -47,16 +74,35 @@ impl FootprintMemo {
         self.map.clear();
     }
 
+    /// Read-only lookup (no counter update) — safe to share across
+    /// evaluation workers.
+    #[inline]
+    pub fn lookup(&self, tt: &[u64]) -> Option<&FpEntry> {
+        self.map.get(tt)
+    }
+
+    /// Cached footprint entry for a temporal-tile vector, computing and
+    /// inserting on miss. Returns `(entry, was_hit)`.
+    pub fn get_or_compute(&mut self, problem: &Problem, tt: &[u64]) -> (&FpEntry, bool) {
+        let hit = self.map.contains_key(tt);
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+            let per_ds: Box<[u64]> = problem
+                .data_spaces
+                .iter()
+                .map(|ds| ds.tile_footprint(tt))
+                .collect();
+            let total_words = per_ds.iter().sum();
+            self.map.insert(tt.to_vec(), FpEntry { total_words, per_ds });
+        }
+        (self.map.get(tt).expect("entry just ensured"), hit)
+    }
+
     /// Cached [`Problem::tile_words`] — the rule-3 quantity.
     pub fn total_words(&mut self, problem: &Problem, tt: &[u64]) -> u64 {
-        if let Some(&w) = self.map.get(tt) {
-            self.hits += 1;
-            return w;
-        }
-        self.misses += 1;
-        let w = problem.tile_words(tt);
-        self.map.insert(tt.to_vec(), w);
-        w
+        self.get_or_compute(problem, tt).0.total_words
     }
 
     /// Does `mapping` violate rule 3 (a bounded memory too small for its
@@ -104,7 +150,7 @@ pub enum ReuseModel {
 }
 
 /// Movement of one data space at one real memory level.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct DsLevelMovement {
     /// Tile footprint in words at this level (one instance).
     pub footprint: u64,
@@ -120,7 +166,7 @@ pub struct DsLevelMovement {
 }
 
 /// Aggregated per-level movement across data spaces.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct LevelMovement {
     /// Architecture level index.
     pub level: usize,
@@ -136,7 +182,8 @@ pub struct LevelMovement {
     pub cross_package: bool,
 }
 
-/// Full data-movement summary for a mapping.
+/// Full data-movement summary for a mapping (the allocating form; the
+/// hot path reads the same numbers out of a [`TileScratch`]).
 #[derive(Debug, Clone)]
 pub struct DataMovement {
     /// One entry per real memory level, outermost first.
@@ -149,80 +196,370 @@ pub struct DataMovement {
     pub macs: u64,
 }
 
-/// The analysis context.
+/// Reusable tile-analysis workspace: every buffer the analysis needs,
+/// flat, sized once per `(problem, arch)` job and reused for every
+/// candidate. The steady-state analysis of one candidate performs zero
+/// heap allocations.
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    nd: usize,
+    nl: usize,
+    nds: usize,
+    nreal: usize,
+    prepared: bool,
+    /// Problem dim sizes (so full-tensor footprints need no temp vec).
+    dim_sizes: Vec<u64>,
+    /// `trips[l*nd+d]`: temporal trip count.
+    trips: Vec<u64>,
+    /// `fanout[l*nd+d]`: spatial fan-out.
+    fanout: Vec<u64>,
+    /// Total fan-out per level.
+    level_fanouts: Vec<u64>,
+    /// Used instances per level (cumulative outer fan-out).
+    used_inst: Vec<u64>,
+    /// Indices of real (non-virtual) levels, outermost first.
+    real_levels: Vec<usize>,
+    /// Relevance masks, `relevant[ds*nd+d]`.
+    relevant: Vec<bool>,
+    /// Full tensor sizes per data space.
+    full_sizes: Vec<u64>,
+    /// Per (ds, real level) movement detail, `detail[ds*nreal+ri]`.
+    detail: Vec<DsLevelMovement>,
+    /// Aggregated per-real-level movement.
+    levels: Vec<LevelMovement>,
+    /// PEs used by the last analyzed mapping.
+    pes_used: u64,
+    /// Total MACs of the problem.
+    macs: u64,
+}
+
+impl TileScratch {
+    pub fn new() -> TileScratch {
+        TileScratch::default()
+    }
+
+    /// Size the buffers and (re)build the problem-level caches.
+    /// Unconditional: the rebuild is a few dozen integer ops (far below
+    /// one tile analysis) and — once buffer capacities are warm —
+    /// allocation-free, so calling it per candidate is cheap while
+    /// making the scratch impossible to desynchronize from the problem
+    /// it is used with (no address-identity caching that could go stale
+    /// when a caller reuses one scratch across different problems).
+    pub fn prepare(&mut self, problem: &Problem, arch: &Arch) {
+        let nd = problem.dims.len();
+        let nl = arch.depth();
+        let nds = problem.data_spaces.len();
+        self.nd = nd;
+        self.nl = nl;
+        self.nds = nds;
+        self.dim_sizes.clear();
+        self.dim_sizes.extend(problem.dims.iter().map(|d| d.size));
+        self.trips.clear();
+        self.trips.resize(nl * nd, 1);
+        self.fanout.clear();
+        self.fanout.resize(nl * nd, 1);
+        self.level_fanouts.clear();
+        self.level_fanouts.resize(nl, 1);
+        self.used_inst.clear();
+        self.used_inst.resize(nl, 1);
+        self.real_levels.clear();
+        self.real_levels
+            .extend((0..nl).filter(|&i| !arch.levels[i].is_virtual()));
+        self.nreal = self.real_levels.len();
+        self.relevant.clear();
+        self.relevant.resize(nds * nd, false);
+        for (di, ds) in problem.data_spaces.iter().enumerate() {
+            for rank in &ds.projection {
+                for t in rank {
+                    self.relevant[di * nd + t.dim] = true;
+                }
+            }
+        }
+        self.full_sizes.clear();
+        self.full_sizes.extend(
+            problem
+                .data_spaces
+                .iter()
+                .map(|ds| ds.tile_footprint(&self.dim_sizes)),
+        );
+        self.detail.clear();
+        self.detail.resize(nds * self.nreal, DsLevelMovement::default());
+        self.levels.clear();
+        self.levels.resize(self.nreal, LevelMovement::default());
+        self.macs = problem.total_macs();
+        self.prepared = true;
+    }
+
+    /// Aggregated movement of real level `ri` (after
+    /// [`tile_movement_into`]).
+    #[inline]
+    pub fn level(&self, ri: usize) -> &LevelMovement {
+        &self.levels[ri]
+    }
+
+    /// Per-level aggregated movement, outermost real level first.
+    #[inline]
+    pub fn level_rows(&self) -> &[LevelMovement] {
+        &self.levels
+    }
+
+    /// Per-(ds, real level) detail cell.
+    #[inline]
+    pub fn detail(&self, ds: usize, ri: usize) -> &DsLevelMovement {
+        &self.detail[ds * self.nreal + ri]
+    }
+
+    /// Temporal trip count of (level, dim) for the last analyzed mapping.
+    #[inline]
+    pub fn trip(&self, level: usize, dim: usize) -> u64 {
+        self.trips[level * self.nd + dim]
+    }
+
+    /// Indices of real (non-virtual) levels, outermost first.
+    #[inline]
+    pub fn real_levels(&self) -> &[usize] {
+        &self.real_levels
+    }
+
+    /// PEs used by the last analyzed mapping.
+    #[inline]
+    pub fn pes_used(&self) -> u64 {
+        self.pes_used
+    }
+
+    /// Total MACs of the prepared problem.
+    #[inline]
+    pub fn macs(&self) -> u64 {
+        self.macs
+    }
+
+    /// Used instances of level `i` = product of outer fan-outs.
+    #[inline]
+    fn used_instances(&self, level: usize) -> u64 {
+        self.used_inst[level]
+    }
+
+    /// Distinct-tile children of the distribution at level `j` for data
+    /// space `di`: fan-out restricted to its relevant dims.
+    fn distinct_children(&self, j: usize, di: usize) -> u64 {
+        (0..self.nd)
+            .map(|d| {
+                if self.relevant[di * self.nd + d] {
+                    self.fanout[j * self.nd + d]
+                } else {
+                    1
+                }
+            })
+            .product()
+    }
+
+    /// Refetch factor of data space `di`'s tile at `level`, counting the
+    /// temporal loop blocks `0..=level` above its memory.
+    fn refetch_idx(&self, mapping: &Mapping, di: usize, level: usize, model: ReuseModel) -> f64 {
+        let nd = self.nd;
+        let rel = &self.relevant[di * nd..(di + 1) * nd];
+        let mut r = 1f64;
+        for j in 0..=level {
+            let order = &mapping.levels[j].temporal_order;
+            // does any deeper block (j+1..=level) iterate a relevant dim?
+            let rel_below_blocks = (j + 1..=level)
+                .any(|j2| (0..nd).any(|d| rel[d] && self.trips[j2 * nd + d] > 1));
+            for (pos, &d) in order.iter().enumerate() {
+                let w = self.trips[j * nd + d];
+                if w <= 1 {
+                    continue;
+                }
+                if rel[d] {
+                    r *= w as f64;
+                } else if model == ReuseModel::OrderAware {
+                    // an irrelevant loop forces refetch iff a relevant
+                    // loop iterates below it (same block, deeper position)
+                    // or in a deeper block
+                    let rel_below_here = order[pos + 1..]
+                        .iter()
+                        .any(|&d2| rel[d2] && self.trips[j * nd + d2] > 1)
+                        || rel_below_blocks;
+                    if rel_below_here {
+                        r *= w as f64;
+                    }
+                }
+            }
+        }
+        r
+    }
+}
+
+/// Fill the structural tables (trips, fan-outs, used instances,
+/// `pes_used`) for one mapping. `scratch` must be prepared for the same
+/// `(problem, arch)`.
+pub(crate) fn tile_structure_into(
+    problem: &Problem,
+    _arch: &Arch,
+    mapping: &Mapping,
+    s: &mut TileScratch,
+) {
+    debug_assert!(s.prepared, "TileScratch::prepare not called");
+    let (nl, nd) = (s.nl, s.nd);
+    for i in 0..nl {
+        for d in 0..nd {
+            s.trips[i * nd + d] = mapping.trips(problem, i, d);
+            s.fanout[i * nd + d] = mapping.parallelism(i, d);
+        }
+    }
+    for i in 0..nl {
+        s.level_fanouts[i] = s.fanout[i * nd..(i + 1) * nd].iter().product();
+    }
+    s.used_inst[0] = 1;
+    for i in 1..nl {
+        s.used_inst[i] = s.used_inst[i - 1] * s.level_fanouts[i - 1];
+    }
+    s.pes_used = mapping.pes_used();
+}
+
+/// The shared analysis core: compute the full data-movement summary of
+/// `mapping` into `scratch`. When a [`FootprintMemo`] is supplied, the
+/// per-data-space footprints of each level's temporal tile are read
+/// from it (populated by the engine's rule-3 pre-filter) instead of
+/// being recomputed. Bit-identical to [`TileAnalysis::movement`] — the
+/// wrapper routes through this function.
+pub(crate) fn tile_movement_into(
+    problem: &Problem,
+    arch: &Arch,
+    mapping: &Mapping,
+    model: ReuseModel,
+    footprints: Option<&FootprintMemo>,
+    s: &mut TileScratch,
+) {
+    tile_structure_into(problem, arch, mapping, s);
+    let (nds, nreal) = (s.nds, s.nreal);
+
+    // footprints per (real level, ds): cached chain entries when the
+    // memo has them, direct computation otherwise
+    for ri in 0..nreal {
+        let li = s.real_levels[ri];
+        let tt = &mapping.levels[li].temporal_tile;
+        match footprints.and_then(|m| m.lookup(tt)) {
+            Some(entry) => {
+                for di in 0..nds {
+                    s.detail[di * nreal + ri].footprint = entry.per_ds[di];
+                }
+            }
+            None => {
+                for (di, ds) in problem.data_spaces.iter().enumerate() {
+                    s.detail[di * nreal + ri].footprint = ds.tile_footprint(tt);
+                }
+            }
+        }
+    }
+
+    // per-(ds, real level) volumes (same cell order as the legacy
+    // nested loop: ds outer, real level inner)
+    for di in 0..nds {
+        for ri in 0..nreal {
+            let li = s.real_levels[ri];
+            let footprint = s.detail[di * nreal + ri].footprint;
+            let refetch = if li == 0 { 1.0 } else { s.refetch_idx(mapping, di, li, model) };
+            let fills = footprint as f64 * refetch;
+            let total_fills = fills * s.used_instances(li) as f64;
+            // multicast across the distributions between the previous
+            // real level and this one
+            let multicast = if ri == 0 {
+                1.0
+            } else {
+                let prev = s.real_levels[ri - 1];
+                (prev..li)
+                    .map(|j| s.level_fanouts[j] as f64 / s.distinct_children(j, di) as f64)
+                    .product()
+            };
+            s.detail[di * nreal + ri] =
+                DsLevelMovement { footprint, refetch, fills, total_fills, multicast };
+        }
+        // the outermost (DRAM) level holds the full tensor once
+        let l0 = &mut s.detail[di * nreal];
+        l0.footprint = s.full_sizes[di];
+        l0.refetch = 1.0;
+        l0.fills = s.full_sizes[di] as f64;
+        l0.total_fills = s.full_sizes[di] as f64;
+    }
+
+    // aggregate per level: reads serve the next real level below;
+    // writes are the fills arriving from the level above
+    for (ri, lvl) in s.levels.iter_mut().enumerate() {
+        *lvl = LevelMovement {
+            level: s.real_levels[ri],
+            reads: 0.0,
+            writes: 0.0,
+            per_instance_in: 0.0,
+            link_words: 0.0,
+            cross_package: false,
+        };
+    }
+    for (di, ds) in problem.data_spaces.iter().enumerate() {
+        for ri in 1..nreal {
+            let parent_ri = ri - 1;
+            let mv = s.detail[di * nreal + ri];
+            let t_total = mv.total_fills;
+            let parent_traffic = t_total / mv.multicast;
+            let li = s.real_levels[ri];
+            let cross = (s.real_levels[parent_ri]..li).any(|j| arch.levels[j].cross_package)
+                || arch.levels[li].cross_package;
+            if !ds.is_output {
+                s.levels[parent_ri].reads += parent_traffic;
+                s.levels[ri].writes += t_total;
+            } else {
+                // outputs flow upward; spatial "multicast" becomes a
+                // NoC reduction of partial sums
+                s.levels[ri].reads += t_total; // send up / RMW source
+                s.levels[ri].writes += t_total; // partial updates landing
+                s.levels[parent_ri].writes += parent_traffic;
+                // partial tiles beyond the final result are read back
+                let excess = (parent_traffic - s.full_sizes[di] as f64).max(0.0);
+                s.levels[parent_ri].reads += excess;
+            }
+            s.levels[ri].per_instance_in += mv.fills;
+            s.levels[ri].link_words += t_total;
+            s.levels[ri].cross_package |= cross;
+        }
+    }
+
+    // innermost level additionally serves the MACs: every compute
+    // reads its operands and read-modify-writes the partial sum
+    let macs = s.macs;
+    if let Some(inner) = s.levels.last_mut() {
+        let n_inputs = (nds - 1) as f64;
+        inner.reads += macs as f64 * n_inputs; // operand reads
+        inner.reads += macs as f64; // accumulator read
+        inner.writes += macs as f64; // accumulator write
+    }
+}
+
+/// The allocating analysis context — compatibility wrapper over the
+/// scratch core for tests, reports and one-off callers. The search
+/// engine uses [`TileScratch`] directly through the cost models'
+/// `evaluate_lean`.
 pub struct TileAnalysis<'a> {
     pub problem: &'a Problem,
     pub arch: &'a Arch,
     pub mapping: &'a Mapping,
-    /// `w[level][dim]`: temporal trip count.
-    pub trips: Vec<Vec<u64>>,
-    /// `p[level][dim]`: spatial fan-out.
-    pub fanout: Vec<Vec<u64>>,
-    /// Indices of real (non-virtual) levels, outermost first.
-    pub real_levels: Vec<usize>,
-    /// Precomputed relevance masks, one per data space (hot-path cache:
-    /// `DataSpace::relevant_dims` allocates, and refetch() is called per
-    /// (data space, level) in the innermost search loop).
-    relevant: Vec<Vec<bool>>,
-    /// Cached total fan-out per level.
-    level_fanouts: Vec<u64>,
-    /// Cached used-instance counts per level (cumulative fan-out).
-    used_inst: Vec<u64>,
+    scratch: TileScratch,
 }
 
 impl<'a> TileAnalysis<'a> {
     pub fn new(problem: &'a Problem, arch: &'a Arch, mapping: &'a Mapping) -> Self {
-        let nl = arch.depth();
-        let nd = problem.dims.len();
-        let mut trips = vec![vec![1u64; nd]; nl];
-        let mut fanout = vec![vec![1u64; nd]; nl];
-        for i in 0..nl {
-            for d in 0..nd {
-                trips[i][d] = mapping.trips(problem, i, d);
-                fanout[i][d] = mapping.parallelism(i, d);
-            }
-        }
-        let real_levels = (0..nl).filter(|&i| !arch.levels[i].is_virtual()).collect();
-        let relevant: Vec<Vec<bool>> = problem
-            .data_spaces
-            .iter()
-            .map(|ds| ds.relevant_dims(nd))
-            .collect();
-        let level_fanouts: Vec<u64> =
-            (0..nl).map(|i| fanout[i].iter().product()).collect();
-        let mut used_inst = vec![1u64; nl];
-        for i in 1..nl {
-            used_inst[i] = used_inst[i - 1] * level_fanouts[i - 1];
-        }
-        TileAnalysis {
-            problem,
-            arch,
-            mapping,
-            trips,
-            fanout,
-            real_levels,
-            relevant,
-            level_fanouts,
-            used_inst,
-        }
+        let mut scratch = TileScratch::new();
+        scratch.prepare(problem, arch);
+        tile_structure_into(problem, arch, mapping, &mut scratch);
+        TileAnalysis { problem, arch, mapping, scratch }
     }
 
-    /// Total fan-out at a level.
-    fn level_fanout(&self, level: usize) -> u64 {
-        self.level_fanouts[level]
+    /// Temporal trip count of (level, dim).
+    pub fn trips(&self, level: usize, dim: usize) -> u64 {
+        self.scratch.trip(level, dim)
     }
 
     /// Used instances of level `i` = product of outer fan-outs.
     pub fn used_instances(&self, level: usize) -> u64 {
-        self.used_inst[level]
-    }
-
-    /// Distinct-tile children of the distribution at level `j` for a data
-    /// space: fan-out restricted to its relevant dims.
-    fn distinct_children(&self, j: usize, rel: &[bool]) -> u64 {
-        (0..rel.len())
-            .map(|d| if rel[d] { self.fanout[j][d] } else { 1 })
-            .product()
+        self.scratch.used_instances(level)
     }
 
     /// Refetch factor of a data space's tile at `level`, counting the
@@ -240,152 +577,22 @@ impl<'a> TileAnalysis<'a> {
                     .position(|d| d.name == ds.name)
                     .expect("data space not in problem")
             });
-        self.refetch_idx(ds_index, level, model)
-    }
-
-    /// Internal refetch by data-space index (no per-call allocation).
-    fn refetch_idx(&self, ds_index: usize, level: usize, model: ReuseModel) -> f64 {
-        let rel = &self.relevant[ds_index];
-        let mut r = 1f64;
-        for j in 0..=level {
-            let order = &self.mapping.levels[j].temporal_order;
-            // does any deeper block (j+1..=level) iterate a relevant dim?
-            let rel_below_blocks = (j + 1..=level).any(|j2| {
-                (0..rel.len()).any(|d| rel[d] && self.trips[j2][d] > 1)
-            });
-            for (pos, &d) in order.iter().enumerate() {
-                let w = self.trips[j][d];
-                if w <= 1 {
-                    continue;
-                }
-                if rel[d] {
-                    r *= w as f64;
-                } else if model == ReuseModel::OrderAware {
-                    // an irrelevant loop forces refetch iff a relevant
-                    // loop iterates below it (same block, deeper position)
-                    // or in a deeper block
-                    let rel_below_here = order[pos + 1..]
-                        .iter()
-                        .any(|&d2| rel[d2] && self.trips[j][d2] > 1)
-                        || rel_below_blocks;
-                    if rel_below_here {
-                        r *= w as f64;
-                    }
-                }
-            }
-        }
-        r
+        self.scratch.refetch_idx(self.mapping, ds_index, level, model)
     }
 
     /// Compute the full data-movement summary.
-    pub fn movement(&self, model: ReuseModel) -> DataMovement {
-        let nds = self.problem.data_spaces.len();
-        let nreal = self.real_levels.len();
-        let full_sizes: Vec<u64> = self
-            .problem
-            .data_spaces
-            .iter()
-            .map(|ds| ds.full_size(&self.problem.dims))
+    pub fn movement(&mut self, model: ReuseModel) -> DataMovement {
+        tile_movement_into(self.problem, self.arch, self.mapping, model, None, &mut self.scratch);
+        let s = &self.scratch;
+        let detail = (0..s.nds)
+            .map(|di| s.detail[di * s.nreal..(di + 1) * s.nreal].to_vec())
             .collect();
-
-        // per-(ds, real level) volumes
-        let mut detail: Vec<Vec<DsLevelMovement>> = Vec::with_capacity(nds);
-        for (di, ds) in self.problem.data_spaces.iter().enumerate() {
-            let rel = &self.relevant[di];
-            let mut per_level = Vec::with_capacity(nreal);
-            for (ri, &li) in self.real_levels.iter().enumerate() {
-                let tt = &self.mapping.levels[li].temporal_tile;
-                let footprint = ds.tile_footprint(tt);
-                let refetch = if li == 0 { 1.0 } else { self.refetch_idx(di, li, model) };
-                let fills = footprint as f64 * refetch;
-                let total_fills = fills * self.used_instances(li) as f64;
-                // multicast across the distributions between the previous
-                // real level and this one
-                let multicast = if ri == 0 {
-                    1.0
-                } else {
-                    let prev = self.real_levels[ri - 1];
-                    (prev..li)
-                        .map(|j| {
-                            self.level_fanout(j) as f64
-                                / self.distinct_children(j, rel) as f64
-                        })
-                        .product()
-                };
-                per_level.push(DsLevelMovement {
-                    footprint,
-                    refetch,
-                    fills,
-                    total_fills,
-                    multicast,
-                });
-            }
-            // the outermost (DRAM) level holds the full tensor once
-            if let Some(l0) = per_level.first_mut() {
-                l0.footprint = full_sizes[di];
-                l0.refetch = 1.0;
-                l0.fills = full_sizes[di] as f64;
-                l0.total_fills = full_sizes[di] as f64;
-            }
-            detail.push(per_level);
+        DataMovement {
+            levels: s.levels.clone(),
+            detail,
+            pes_used: s.pes_used,
+            macs: s.macs,
         }
-
-        // aggregate per level: reads serve the next real level below;
-        // writes are the fills arriving from the level above
-        let mut levels: Vec<LevelMovement> = self
-            .real_levels
-            .iter()
-            .map(|&li| LevelMovement {
-                level: li,
-                reads: 0.0,
-                writes: 0.0,
-                per_instance_in: 0.0,
-                link_words: 0.0,
-                cross_package: false,
-            })
-            .collect();
-
-        for (di, ds) in self.problem.data_spaces.iter().enumerate() {
-            for ri in 1..nreal {
-                let parent_ri = ri - 1;
-                let mv = &detail[di][ri];
-                let t_total = mv.total_fills;
-                let parent_traffic = t_total / mv.multicast;
-                let li = self.real_levels[ri];
-                let cross = (self.real_levels[parent_ri]..li)
-                    .any(|j| self.arch.levels[j].cross_package)
-                    || self.arch.levels[li].cross_package;
-                if !ds.is_output {
-                    levels[parent_ri].reads += parent_traffic;
-                    levels[ri].writes += t_total;
-                } else {
-                    // outputs flow upward; spatial "multicast" becomes a
-                    // NoC reduction of partial sums
-                    levels[ri].reads += t_total; // send up / RMW source
-                    levels[ri].writes += t_total; // partial updates landing
-                    levels[parent_ri].writes += parent_traffic;
-                    // partial tiles beyond the final result are read back
-                    let excess = (parent_traffic - full_sizes[di] as f64).max(0.0);
-                    levels[parent_ri].reads += excess;
-                }
-                levels[ri].per_instance_in += mv.fills;
-                levels[ri].link_words += t_total;
-                levels[ri].cross_package |= cross;
-            }
-        }
-
-        // innermost level additionally serves the MACs: every compute
-        // reads its operands and read-modify-writes the partial sum
-        let macs = self.problem.total_macs();
-        let pes_used = self.mapping.pes_used();
-        if let Some(inner) = levels.last_mut() {
-            let n_inputs = (self.problem.data_spaces.len() - 1) as f64;
-            inner.reads += macs as f64 * n_inputs; // operand reads
-            inner.reads += macs as f64; // accumulator read
-            inner.writes += macs as f64; // accumulator write
-        }
-
-        DataMovement { levels, detail, pes_used, macs }
     }
 }
 
@@ -418,7 +625,7 @@ mod tests {
             ],
         };
         m.check(&p, &a).unwrap();
-        let ta = TileAnalysis::new(&p, &a, &m);
+        let mut ta = TileAnalysis::new(&p, &a, &m);
         let mv = ta.movement(ReuseModel::OrderAware);
         // A tile at L1 (1x1), refetch: block3 loops (within L2 tile ST=8,8,8 ... wait
         // L1 fills for A: N innermost and irrelevant to A -> A reused
@@ -449,7 +656,7 @@ mod tests {
                 mk(vec![1, 1, 1], vec![1, 1, 1]),
             ],
         };
-        let ta = TileAnalysis::new(&p, &a, &m);
+        let mut ta = TileAnalysis::new(&p, &a, &m);
         let aware = ta.movement(ReuseModel::OrderAware);
         let agnostic = ta.movement(ReuseModel::OrderAgnostic);
         let a_aware = aware.detail[0].last().unwrap().fills;
@@ -479,7 +686,7 @@ mod tests {
             ],
         };
         m.check(&p, &a).unwrap();
-        let ta = TileAnalysis::new(&p, &a, &m);
+        let mut ta = TileAnalysis::new(&p, &a, &m);
         let mv = ta.movement(ReuseModel::OrderAware);
         // detail[0] = A; last real level is L1 (index 3 in arch, 2 in real)
         let a_l1 = mv.detail[0].last().unwrap();
@@ -494,7 +701,7 @@ mod tests {
         let p = gemm(4, 4, 4);
         let a = presets::fig5_toy();
         let m = Mapping::sequential(&p, &a);
-        let ta = TileAnalysis::new(&p, &a, &m);
+        let mut ta = TileAnalysis::new(&p, &a, &m);
         let mv = ta.movement(ReuseModel::OrderAware);
         let inner = mv.levels.last().unwrap();
         // 64 MACs: >= 2*64 operand reads + 64 accum reads
@@ -507,7 +714,7 @@ mod tests {
         let p = gemm(8, 8, 8);
         let a = presets::fig5_toy();
         let m = Mapping::sequential(&p, &a);
-        let ta = TileAnalysis::new(&p, &a, &m);
+        let mut ta = TileAnalysis::new(&p, &a, &m);
         let mv = ta.movement(ReuseModel::OrderAware);
         for (di, _) in p.data_spaces.iter().enumerate() {
             assert_eq!(mv.detail[di][0].footprint, 64);
@@ -525,6 +732,11 @@ mod tests {
         assert_eq!(memo.total_words(&p, &tt), direct);
         assert_eq!(memo.total_words(&p, &tt), direct);
         assert_eq!(memo.counters(), (1, 1));
+        // the cached per-ds breakdown matches the direct one too
+        let entry = memo.lookup(&tt).expect("entry cached");
+        for (di, ds) in p.data_spaces.iter().enumerate() {
+            assert_eq!(entry.per_ds[di], ds.tile_footprint(&tt));
+        }
         // agreement with the full legality check on rule 3
         let m = Mapping::sequential(&p, &a);
         let viol = memo.violates_capacity(&p, &a, &m);
@@ -554,10 +766,46 @@ mod tests {
             ],
         };
         m.check(&p, &a).unwrap();
-        let ta = TileAnalysis::new(&p, &a, &m);
+        let mut ta = TileAnalysis::new(&p, &a, &m);
         assert_eq!(ta.used_instances(0), 1);
         assert_eq!(ta.used_instances(2), 2);
         assert_eq!(ta.used_instances(3), 8);
         assert_eq!(ta.movement(ReuseModel::OrderAware).pes_used, 8);
+    }
+
+    #[test]
+    fn scratch_path_with_memo_matches_direct_path() {
+        // the footprint-memo-assisted analysis must be bit-identical to
+        // the direct one for every cell
+        let p = gemm(16, 8, 4);
+        let a = presets::fig5_toy();
+        let cons = crate::mapspace::Constraints::default();
+        let space = crate::mapspace::MapSpace::new(&p, &a, &cons);
+        let mut rng = crate::util::rng::Rng::new(41);
+        let mut memo = FootprintMemo::new();
+        let mut s1 = TileScratch::new();
+        let mut s2 = TileScratch::new();
+        s1.prepare(&p, &a);
+        s2.prepare(&p, &a);
+        let mut checked = 0;
+        for _ in 0..20 {
+            let Some(m) = space.sample_legal(&mut rng, 200) else { continue };
+            // populate the memo exactly as the engine pre-filter does
+            for lvl in &m.levels {
+                memo.get_or_compute(&p, &lvl.temporal_tile);
+            }
+            for model in [ReuseModel::OrderAware, ReuseModel::OrderAgnostic] {
+                tile_movement_into(&p, &a, &m, model, Some(&memo), &mut s1);
+                tile_movement_into(&p, &a, &m, model, None, &mut s2);
+                for (l1, l2) in s1.level_rows().iter().zip(s2.level_rows()) {
+                    assert_eq!(l1.reads.to_bits(), l2.reads.to_bits());
+                    assert_eq!(l1.writes.to_bits(), l2.writes.to_bits());
+                    assert_eq!(l1.per_instance_in.to_bits(), l2.per_instance_in.to_bits());
+                    assert_eq!(l1.link_words.to_bits(), l2.link_words.to_bits());
+                }
+            }
+            checked += 1;
+        }
+        assert!(checked > 5);
     }
 }

@@ -254,7 +254,8 @@ impl DseResult {
             "dse {} on {}: {} arch points -> {} evaluated, {} skipped by dominance pruning \
              ({:.1}% of arch-point evaluations), {} invalid; frontier holds {} points\n\
              session reuse: {} search jobs on one engine session, {} warm-started\n\
-             engine: proposed={} scored={} cost-evals={} memo-hits={} pruned={} rejected={}",
+             engine: proposed={} scored={} cost-evals={} memo-hits={} pruned={} rejected={}\n\
+             caches: eval-memo {:.1}% hit ({}/{}), footprint-memo {:.1}% hit ({}/{})",
             self.space,
             self.network,
             s.points,
@@ -271,6 +272,12 @@ impl DseResult {
             s.engine.memo_hits,
             s.engine.pruned,
             s.engine.rejected,
+            100.0 * s.engine.memo_hit_rate(),
+            s.engine.memo_hits,
+            s.engine.memo_hits + s.engine.memo_misses,
+            100.0 * s.engine.footprint_hit_rate(),
+            s.engine.footprint_hits,
+            s.engine.footprint_hits + s.engine.footprint_misses,
         )
     }
 }

@@ -1,24 +1,30 @@
-//! Whole-candidate **evaluation memo** for the search engine.
+//! Whole-candidate **evaluation memo** for the search engine, keyed by
+//! interned packed mapping codes.
 //!
 //! Search algorithms that exploit previous results re-propose mappings
 //! verbatim: the genetic mapper re-injects its elites every generation,
 //! hill climbing revisits neighbours, and a portfolio run feeds several
-//! mappers the same incumbent region. Keying the full mapping (all
-//! per-level dim chains and orders — `Mapping` derives `Hash`/`Eq`)
-//! makes every repeat a table lookup instead of a tile analysis.
-//!
-//! Entries are exact, so memoization never changes a search result —
-//! only the number of cost-model invocations.
+//! mappers the same incumbent region. Keying on the packed code makes
+//! every repeat a table lookup instead of a tile analysis — and the key
+//! is *small*: the table maps the code's precomputed 64-bit fingerprint
+//! (identity-hashed — it is already well mixed) to an offset into a
+//! flat **intern arena** holding the code words, so a lookup is one
+//! hash probe plus one slice compare, and an insert appends to the
+//! arena instead of cloning a nested `Mapping`. Fingerprint collisions
+//! are resolved by full code comparison, never trusted: entries are
+//! exact, so memoization never changes a search result — only the
+//! number of cost-model invocations.
 
 use std::collections::HashMap;
 
-use crate::mapping::Mapping;
+use crate::mapping::PackedRef;
+use crate::util::hash::BuildIdentity;
 
 /// What the engine learned about a candidate the last time it saw it.
 /// Only the objective score is kept: a repeat candidate can never beat
 /// the incumbent (the incumbent already dominates everything scored),
 /// so the full `CostEstimate` would be dead weight in the table.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub(crate) enum MemoEntry {
     /// Evaluated successfully, with its objective score.
     Scored(f64),
@@ -27,42 +33,118 @@ pub(crate) enum MemoEntry {
     Dead,
 }
 
-/// Bounded map from mapping → [`MemoEntry`].
+/// One interned candidate: where its code words live in the arena, plus
+/// what we learned about it.
+#[derive(Debug, Clone, Copy)]
+struct Interned {
+    start: u32,
+    entry: MemoEntry,
+}
+
+/// Per-fingerprint slot. Distinct codes colliding on a fingerprint are
+/// astronomically rare but must stay exact, so the slot degrades to a
+/// (tiny) vector when it happens.
+#[derive(Debug)]
+enum Slot {
+    One(Interned),
+    Many(Vec<Interned>),
+}
+
+/// Bounded fingerprint-keyed memo over interned packed codes.
 #[derive(Debug, Default)]
 pub(crate) struct EvalMemo {
-    map: HashMap<Mapping, MemoEntry>,
+    map: HashMap<u64, Slot, BuildIdentity>,
+    /// Flat storage of every interned code's canonical word sequence.
+    arena: Vec<u64>,
+    /// Words per code in the current epoch (fixed per problem/arch).
+    code_words: usize,
+    entries: usize,
     capacity: usize,
 }
 
 impl EvalMemo {
     pub fn new(capacity: usize) -> EvalMemo {
-        EvalMemo { map: HashMap::new(), capacity: capacity.max(1) }
+        EvalMemo {
+            map: HashMap::default(),
+            arena: Vec::new(),
+            code_words: 0,
+            entries: 0,
+            capacity: capacity.max(1),
+        }
     }
 
-    pub fn get(&self, m: &Mapping) -> Option<&MemoEntry> {
-        self.map.get(m)
+    fn code_at(&self, i: Interned) -> &[u64] {
+        &self.arena[i.start as usize..i.start as usize + self.code_words]
     }
 
-    pub fn insert(&mut self, m: Mapping, e: MemoEntry) {
+    /// Look a candidate up by its packed code. No allocation.
+    pub fn get(&self, r: PackedRef) -> Option<MemoEntry> {
+        let want = PackedRef::code_words(r.nlevels(), r.ndims());
+        if self.code_words != want {
+            return None; // different epoch shape (or empty memo)
+        }
+        match self.map.get(&r.fingerprint())? {
+            Slot::One(i) => r.code_matches(self.code_at(*i)).then_some(i.entry),
+            Slot::Many(v) => v
+                .iter()
+                .find(|i| r.code_matches(self.code_at(**i)))
+                .map(|i| i.entry),
+        }
+    }
+
+    /// Intern a candidate's code and record its entry. Amortized: the
+    /// arena and table grow geometrically, and a steady-state batch of
+    /// repeats never reaches this path at all.
+    pub fn insert(&mut self, r: PackedRef, entry: MemoEntry) {
+        let want = PackedRef::code_words(r.nlevels(), r.ndims());
+        if self.code_words != want {
+            // shape change = new problem epoch: the old entries are
+            // meaningless (Session::run_job resets anyway)
+            self.reset();
+            self.code_words = want;
+        }
         // simple epoch reset keeps the memo bounded without tracking LRU
         // order on the hot path
-        if self.map.len() >= self.capacity {
-            self.map.clear();
+        if self.entries >= self.capacity {
+            let cw = self.code_words;
+            self.reset();
+            self.code_words = cw;
         }
-        self.map.insert(m, e);
+        let start = self.arena.len() as u32;
+        r.write_code(&mut self.arena);
+        let interned = Interned { start, entry };
+        self.entries += 1;
+        match self.map.entry(r.fingerprint()) {
+            std::collections::hash_map::Entry::Vacant(v) => {
+                v.insert(Slot::One(interned));
+            }
+            std::collections::hash_map::Entry::Occupied(o) => {
+                let slot = o.into_mut();
+                match slot {
+                    Slot::One(first) => {
+                        let first = *first;
+                        *slot = Slot::Many(vec![first, interned]);
+                    }
+                    Slot::Many(v) => v.push(interned),
+                }
+            }
+        }
     }
 
-    /// Drop every entry but keep the table's allocated capacity. A
-    /// multi-job [`Session`](super::Session) calls this between jobs:
-    /// entries are only valid for the problem they were scored against,
-    /// but the backing allocation is reusable across the whole run.
+    /// Drop every entry but keep the allocated capacity. A multi-job
+    /// [`Session`](super::Session) calls this between jobs: entries are
+    /// only valid for the problem they were scored against, but the
+    /// backing allocations are reusable across the whole run.
     pub fn reset(&mut self) {
         self.map.clear();
+        self.arena.clear();
+        self.entries = 0;
+        self.code_words = 0;
     }
 
     #[cfg(test)]
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.entries
     }
 }
 
@@ -70,6 +152,7 @@ impl EvalMemo {
 mod tests {
     use super::*;
     use crate::arch::presets;
+    use crate::mapping::{Mapping, PackedMapping};
     use crate::problem::gemm;
 
     #[test]
@@ -79,15 +162,38 @@ mod tests {
         let m1 = Mapping::sequential(&p, &a);
         let mut m2 = m1.clone();
         m2.levels[1].temporal_order.swap(0, 1);
+        let p1 = PackedMapping::encode(&m1);
+        let p2 = PackedMapping::encode(&m2);
 
         let mut memo = EvalMemo::new(1);
-        memo.insert(m1.clone(), MemoEntry::Dead);
-        assert!(matches!(memo.get(&m1), Some(MemoEntry::Dead)));
-        assert!(memo.get(&m2).is_none());
+        memo.insert(p1.as_ref(), MemoEntry::Dead);
+        assert_eq!(memo.get(p1.as_ref()), Some(MemoEntry::Dead));
+        assert_eq!(memo.get(p2.as_ref()), None);
         // capacity 1: inserting a second distinct key resets the epoch
-        memo.insert(m2.clone(), MemoEntry::Dead);
+        memo.insert(p2.as_ref(), MemoEntry::Scored(1.5));
         assert_eq!(memo.len(), 1);
-        assert!(memo.get(&m1).is_none());
-        assert!(memo.get(&m2).is_some());
+        assert_eq!(memo.get(p1.as_ref()), None);
+        assert_eq!(memo.get(p2.as_ref()), Some(MemoEntry::Scored(1.5)));
+    }
+
+    #[test]
+    fn distinct_scores_survive_together() {
+        let p = gemm(16, 16, 16);
+        let a = presets::fig5_toy();
+        let base = Mapping::sequential(&p, &a);
+        let mut memo = EvalMemo::new(1024);
+        let mut packed = Vec::new();
+        for i in 0..32u64 {
+            let mut m = base.clone();
+            // vary a legal-looking inner tile value to build distinct codes
+            m.levels[2].temporal_tile[0] = i + 1;
+            let pm = PackedMapping::encode(&m);
+            memo.insert(pm.as_ref(), MemoEntry::Scored(i as f64));
+            packed.push(pm);
+        }
+        for (i, pm) in packed.iter().enumerate() {
+            assert_eq!(memo.get(pm.as_ref()), Some(MemoEntry::Scored(i as f64)));
+        }
+        assert_eq!(memo.len(), 32);
     }
 }

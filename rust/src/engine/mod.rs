@@ -19,7 +19,23 @@
 //!    *as of the start of the batch*, so pruning decisions are
 //!    independent of thread scheduling;
 //! 4. **parallel evaluation** — survivors run through
-//!    [`par_map_with`] with order-preserving chunking.
+//!    [`par_map_with_state`] with order-preserving chunking and one
+//!    [`TileScratch`] per worker.
+//!
+//! # The zero-allocation steady state
+//!
+//! Candidates travel the pipeline as **packed codes**
+//! ([`crate::mapping::PackedBatch`]): sources write fixed-stride slots
+//! in place, the memo keys on interned codes with precomputed
+//! fingerprints, the capacity pre-filter reads footprints off contiguous
+//! temporal-tile slices, and evaluation runs through
+//! [`CostModel::evaluate_lean`] into per-worker scratch buffers. Every
+//! per-batch intermediate (plan, miss list, outcomes, scored list, the
+//! batch arenas themselves) is an engine-owned buffer reused across
+//! batches, so once capacities are warm the engine performs **zero heap
+//! allocations per candidate** (`tests/alloc_hotpath.rs` pins this with
+//! a counting allocator). Full `CostEstimate`s — which allocate — are
+//! materialized only when a candidate becomes the incumbent.
 //!
 //! # Determinism
 //!
@@ -28,21 +44,22 @@
 //! explicitly seeded [`crate::util::rng::Rng`] streams (split via
 //! [`crate::util::rng::Rng::split`] / per-candidate `Rng::new`),
 //! batches are evaluated with order-preserving parallelism, pruning
-//! thresholds are per-batch snapshots, and the
-//! incumbent is folded in batch order with strict improvement — ties
-//! keep the earliest candidate. `tests/engine_determinism.rs` pins this
-//! for all five mappers at 1 and N threads.
+//! thresholds are per-batch snapshots, memo bookkeeping (including the
+//! footprint-memo hit/miss counters) happens on the main thread, and
+//! the incumbent is folded in batch order with strict improvement —
+//! ties keep the earliest candidate. `tests/engine_determinism.rs` pins
+//! this for all five mappers at 1 and N threads.
 
 mod memo;
 mod session;
 
 pub use session::Session;
 
-use crate::cost::{CostEstimate, CostModel, FootprintMemo};
+use crate::cost::{CostEstimate, CostModel, FootprintMemo, TileScratch};
 use crate::mappers::{Objective, SearchResult};
-use crate::mapping::Mapping;
+use crate::mapping::{Mapping, PackedBatch, PackedMapping, PackedRef};
 use crate::mapspace::MapSpace;
-use crate::util::par::{default_threads, par_map_with};
+use crate::util::par::{default_threads, par_map_with_state};
 
 use memo::{EvalMemo, MemoEntry};
 
@@ -82,7 +99,13 @@ impl Default for EngineConfig {
 
 /// Counters the engine maintains across its lifetime. `scored` is what
 /// [`SearchResult::evaluated`] reports; `cost_evals` is the number of
-/// true cost-model invocations (scored minus memo hits).
+/// true cost-model invocations (scored minus memo hits). The paired
+/// hit/miss counters expose cache effectiveness per run: `memo_hits` /
+/// `memo_misses` for the whole-candidate evaluation memo,
+/// `footprint_hits` / `footprint_misses` for the per-chain footprint
+/// memo consulted by the rule-3 pre-filter (and reused by the full tile
+/// analysis). All counters are maintained on the main thread, so they
+/// are thread-count-invariant like everything else the engine reports.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct EngineStats {
     /// Batches accepted from sources.
@@ -93,8 +116,15 @@ pub struct EngineStats {
     pub scored: usize,
     /// Fresh cost-model invocations.
     pub cost_evals: usize,
-    /// Candidates resolved from the evaluation memo.
+    /// Candidates resolved from the evaluation memo (previously scored
+    /// *or* previously found dead).
     pub memo_hits: usize,
+    /// Candidates that missed the evaluation memo (with memoization on).
+    pub memo_misses: usize,
+    /// Footprint-memo lookups served from cache.
+    pub footprint_hits: usize,
+    /// Footprint-memo lookups that computed a fresh chain entry.
+    pub footprint_misses: usize,
     /// Candidates skipped by lower-bound pruning.
     pub pruned: usize,
     /// Candidates rejected as inadmissible (pre-filter, legality or
@@ -111,8 +141,66 @@ impl EngineStats {
         self.scored += other.scored;
         self.cost_evals += other.cost_evals;
         self.memo_hits += other.memo_hits;
+        self.memo_misses += other.memo_misses;
+        self.footprint_hits += other.footprint_hits;
+        self.footprint_misses += other.footprint_misses;
         self.pruned += other.pruned;
         self.rejected += other.rejected;
+    }
+
+    /// Evaluation-memo hit rate over all lookups (0 when memoization
+    /// never ran).
+    pub fn memo_hit_rate(&self) -> f64 {
+        let lookups = self.memo_hits + self.memo_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.memo_hits as f64 / lookups as f64
+        }
+    }
+
+    /// Footprint-memo hit rate over all chain lookups.
+    pub fn footprint_hit_rate(&self) -> f64 {
+        let lookups = self.footprint_hits + self.footprint_misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.footprint_hits as f64 / lookups as f64
+        }
+    }
+}
+
+/// The scored outcome of the previous batch, viewed in place: indices
+/// into the batch's packed codes plus their objective scores, in batch
+/// order. Borrowed from engine-owned buffers — no per-batch copies.
+#[derive(Clone, Copy)]
+pub struct ScoredView<'p> {
+    batch: Option<&'p PackedBatch>,
+    scored: &'p [(u32, f64)],
+}
+
+impl<'p> ScoredView<'p> {
+    /// The empty view (before the first batch).
+    pub fn empty() -> ScoredView<'static> {
+        ScoredView { batch: None, scored: &[] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.scored.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scored.is_empty()
+    }
+
+    /// The `k`-th scored candidate (batch order) and its score.
+    pub fn get(&self, k: usize) -> (PackedRef<'p>, f64) {
+        let (i, score) = self.scored[k];
+        (self.batch.expect("non-empty view has a batch").get(i as usize), score)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (PackedRef<'p>, f64)> + '_ {
+        (0..self.len()).map(|k| self.get(k))
     }
 }
 
@@ -121,18 +209,24 @@ pub struct Progress<'p> {
     /// 0-based index of the batch about to be requested (within this
     /// `run`).
     pub batch_index: usize,
-    /// Incumbent mapping and its objective score, if any candidate has
-    /// scored so far (including previous `run`s on the same engine).
-    pub best: Option<(&'p Mapping, f64)>,
-    /// `(mapping, score)` pairs of the previous batch, in batch order —
-    /// exactly the candidates that received finite-cost scores.
-    pub last_scored: &'p [(Mapping, f64)],
+    /// Incumbent packed code and its objective score, if any candidate
+    /// has scored so far (including previous `run`s on the same engine).
+    pub best: Option<(PackedRef<'p>, f64)>,
+    /// The previous batch's scored candidates, in batch order — exactly
+    /// the candidates that received finite-cost scores.
+    pub last_scored: ScoredView<'p>,
 }
 
 /// A stream of candidate batches — the mapper side of the engine
 /// contract. Implementations own their RNG state (seeded explicitly)
 /// and may adapt to [`Progress`] feedback; they must not depend on
 /// thread count or wall-clock time, which would break reproducibility.
+///
+/// `next_batch` *writes* candidates into the engine-owned `out` arena
+/// (already `reset` to this space's packed shape) instead of returning
+/// a fresh `Vec<Mapping>`: steady-state candidate generation reuses the
+/// same buffers batch after batch. Return `false` when the search is
+/// exhausted; leaving `out` empty also terminates the run.
 pub trait CandidateSource {
     fn name(&self) -> &str;
 
@@ -142,12 +236,19 @@ pub trait CandidateSource {
         false
     }
 
-    /// Produce the next batch, or `None` when the search is exhausted.
-    /// An empty batch also terminates the run.
-    fn next_batch(&mut self, space: &MapSpace, progress: &Progress) -> Option<Vec<Mapping>>;
+    /// Fill `out` with the next batch. Return `false` once exhausted —
+    /// a batch written alongside `false` is still evaluated; `false`
+    /// only means "don't ask me again".
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        progress: &Progress,
+        out: &mut PackedBatch,
+    ) -> bool;
 }
 
 struct Incumbent {
+    packed: PackedMapping,
     mapping: Mapping,
     cost: CostEstimate,
     score: f64,
@@ -159,10 +260,25 @@ enum Plan {
     Miss,
 }
 
+#[derive(Debug, Clone, Copy)]
 enum Outcome {
-    Scored(CostEstimate, f64),
+    Scored(crate::cost::LeanCost, f64),
     Illegal,
     Pruned,
+}
+
+/// Per-evaluation-worker reusable state: a decode target plus the tile
+/// scratch the lean cost path fills. Sized on first use, reused for
+/// every candidate the worker ever touches.
+struct WorkerState {
+    mapping: Mapping,
+    scratch: TileScratch,
+}
+
+impl WorkerState {
+    fn new() -> WorkerState {
+        WorkerState { mapping: Mapping { levels: Vec::new() }, scratch: TileScratch::new() }
+    }
 }
 
 /// The batched search engine. One engine can `run` several sources in
@@ -177,6 +293,19 @@ pub struct Engine<'a> {
     tiles: FootprintMemo,
     stats: EngineStats,
     incumbent: Option<Incumbent>,
+    // ---- reusable hot-path buffers (see module docs) ----
+    /// The previous processed batch (backs `Progress::last_scored`).
+    prev_batch: PackedBatch,
+    /// Spare arena rotated with `prev_batch` each iteration.
+    spare_batch: PackedBatch,
+    /// Scored (index, score) pairs of the previous batch.
+    prev_scored: Vec<(u32, f64)>,
+    /// Spare scored buffer rotated with `prev_scored`.
+    scored_buf: Vec<(u32, f64)>,
+    plan: Vec<Plan>,
+    miss_idx: Vec<u32>,
+    outcomes: Vec<Option<Outcome>>,
+    workers: Vec<WorkerState>,
 }
 
 impl<'a> Engine<'a> {
@@ -191,16 +320,7 @@ impl<'a> Engine<'a> {
         config: EngineConfig,
     ) -> Self {
         let memo = EvalMemo::new(config.memo_capacity);
-        Engine {
-            space,
-            model,
-            objective,
-            config,
-            memo,
-            tiles: FootprintMemo::new(),
-            stats: EngineStats::default(),
-            incumbent: None,
-        }
+        Self::assemble(space, model, objective, config, memo, FootprintMemo::new())
     }
 
     /// Build an engine for one job of a multi-job [`Session`], adopting
@@ -216,6 +336,22 @@ impl<'a> Engine<'a> {
         memo: EvalMemo,
         tiles: FootprintMemo,
     ) -> Self {
+        Self::assemble(space, model, objective, config, memo, tiles)
+    }
+
+    fn assemble(
+        space: &'a MapSpace<'a>,
+        model: &'a dyn CostModel,
+        objective: Objective,
+        config: EngineConfig,
+        memo: EvalMemo,
+        tiles: FootprintMemo,
+    ) -> Self {
+        let (nl, nd) = space.packed_shape();
+        let mut prev_batch = PackedBatch::new();
+        prev_batch.reset(nl, nd);
+        let mut spare_batch = PackedBatch::new();
+        spare_batch.reset(nl, nd);
         Engine {
             space,
             model,
@@ -225,6 +361,14 @@ impl<'a> Engine<'a> {
             tiles,
             stats: EngineStats::default(),
             incumbent: None,
+            prev_batch,
+            spare_batch,
+            prev_scored: Vec::new(),
+            scored_buf: Vec::new(),
+            plan: Vec::new(),
+            miss_idx: Vec::new(),
+            outcomes: Vec::new(),
+            workers: Vec::new(),
         }
     }
 
@@ -263,33 +407,86 @@ impl<'a> Engine<'a> {
     /// found so far (across all `run`s on this engine).
     pub fn run(&mut self, source: &mut dyn CandidateSource) -> Option<SearchResult> {
         let mut batch_index = 0usize;
-        let mut last_scored: Vec<(Mapping, f64)> = Vec::new();
+        // each run starts with empty feedback: a new source must not see
+        // the previous source's final batch as its own `last_scored`
+        // (the incumbent, memo and stats do carry over — that is the
+        // portfolio contract)
+        self.prev_scored.clear();
         loop {
             if self.terminated() {
                 break;
             }
-            let progress = Progress {
-                batch_index,
-                best: self.incumbent.as_ref().map(|i| (&i.mapping, i.score)),
-                last_scored: &last_scored,
+            let (nl, nd) = self.space.packed_shape();
+            let mut out = std::mem::take(&mut self.spare_batch);
+            out.reset(nl, nd);
+            let keep_going = {
+                let progress = Progress {
+                    batch_index,
+                    best: self.incumbent.as_ref().map(|i| (i.packed.as_ref(), i.score)),
+                    last_scored: ScoredView {
+                        batch: Some(&self.prev_batch),
+                        scored: &self.prev_scored,
+                    },
+                };
+                source.next_batch(self.space, &progress, &mut out)
             };
-            let Some(batch) = source.next_batch(self.space, &progress) else {
-                break;
-            };
-            if batch.is_empty() {
+            if out.is_empty() {
+                self.spare_batch = out;
                 break;
             }
-            last_scored = self.process_batch(batch, source.preadmitted());
+            let mut scored = std::mem::take(&mut self.scored_buf);
+            self.process_batch_into(&out, source.preadmitted(), &mut scored);
+            // rotate the arenas: this batch becomes the previous one,
+            // the old previous becomes the next spare — no allocation
+            self.scored_buf = std::mem::replace(&mut self.prev_scored, scored);
+            self.spare_batch = std::mem::replace(&mut self.prev_batch, out);
             batch_index += 1;
+            if !keep_going {
+                // a final batch written alongside `false` is still
+                // evaluated (just processed above) — exhaustion only
+                // stops *requesting* more
+                break;
+            }
         }
         self.result()
     }
 
-    /// Push one explicit batch through the full pipeline (memo →
-    /// pre-filter → legality → prune → parallel evaluate) and return
-    /// the `(mapping, score)` pairs that scored, in batch order.
+    /// Push one explicit batch of `Mapping`s through the full pipeline
+    /// (memo → pre-filter → legality → prune → parallel evaluate) and
+    /// return the `(mapping, score)` pairs that scored, in batch order.
+    /// Compatibility/seeding path — the engine's own loop works on
+    /// packed batches (see [`Engine::evaluate_packed`]). Mappings whose
+    /// shape does not match the space (e.g. a warm-start seed from a
+    /// different architecture) are counted as rejected.
     pub fn evaluate(&mut self, batch: Vec<Mapping>) -> Vec<(Mapping, f64)> {
-        self.process_batch(batch, false)
+        let (nl, nd) = self.space.packed_shape();
+        let mut pb = PackedBatch::new();
+        pb.reset(nl, nd);
+        let mut misshapen = 0usize;
+        for m in &batch {
+            if !pb.push_mapping(m) {
+                misshapen += 1;
+            }
+        }
+        self.stats.proposed += misshapen;
+        self.stats.rejected += misshapen;
+        let mut scored = Vec::new();
+        self.process_batch_into(&pb, false, &mut scored);
+        scored
+            .into_iter()
+            .map(|(i, s)| (pb.get(i as usize).to_mapping(), s))
+            .collect()
+    }
+
+    /// Evaluate a packed batch in place, returning how many candidates
+    /// scored. This is the allocation-free public entry: the scored
+    /// list lands in an engine-owned reusable buffer.
+    pub fn evaluate_packed(&mut self, batch: &PackedBatch) -> usize {
+        let mut scored = std::mem::take(&mut self.scored_buf);
+        self.process_batch_into(batch, false, &mut scored);
+        let n = scored.len();
+        self.scored_buf = scored;
+        n
     }
 
     fn terminated(&self) -> bool {
@@ -306,127 +503,201 @@ impl<'a> Engine<'a> {
         false
     }
 
-    fn process_batch(&mut self, batch: Vec<Mapping>, preadmitted: bool) -> Vec<(Mapping, f64)> {
+    /// The batch pipeline. `scored_out` is cleared and receives the
+    /// `(batch index, score)` pairs of every scoring candidate, in
+    /// batch order.
+    fn process_batch_into(
+        &mut self,
+        batch: &PackedBatch,
+        preadmitted: bool,
+        scored_out: &mut Vec<(u32, f64)>,
+    ) {
+        scored_out.clear();
         self.stats.batches += 1;
         self.stats.proposed += batch.len();
         // pruning threshold is the incumbent at batch start: identical
         // for every worker and every thread count
         let snapshot = self.incumbent.as_ref().map(|i| i.score);
+        let memoize = self.config.memoize;
+        let word_bytes = self.space.arch.word_bytes;
 
         // main-thread memo pass: resolve repeats and capacity violators
-        let mut plan: Vec<Plan> = Vec::with_capacity(batch.len());
-        let mut miss_idx: Vec<usize> = Vec::new();
-        for (i, m) in batch.iter().enumerate() {
-            if self.config.memoize {
-                match self.memo.get(m) {
+        // (and pre-populate footprint chains for the workers to reuse)
+        self.plan.clear();
+        self.miss_idx.clear();
+        'candidates: for i in 0..batch.len() {
+            let r = batch.get(i);
+            if memoize {
+                match self.memo.get(r) {
                     Some(MemoEntry::Scored(score)) => {
-                        plan.push(Plan::Hit(*score));
+                        self.stats.memo_hits += 1;
+                        self.plan.push(Plan::Hit(score));
                         continue;
                     }
                     Some(MemoEntry::Dead) => {
-                        plan.push(Plan::Dead);
+                        self.stats.memo_hits += 1;
+                        self.plan.push(Plan::Dead);
                         continue;
                     }
-                    None => {}
+                    None => {
+                        self.stats.memo_misses += 1;
+                    }
+                }
+                if !preadmitted {
+                    for (li, arch_lvl) in self.space.arch.levels.iter().enumerate() {
+                        let Some(mem) = &arch_lvl.memory else { continue };
+                        let (entry, hit) =
+                            self.tiles.get_or_compute(self.space.problem, r.tt(li));
+                        let need = entry.total_words * word_bytes;
+                        if hit {
+                            self.stats.footprint_hits += 1;
+                        } else {
+                            self.stats.footprint_misses += 1;
+                        }
+                        if !mem.holds(need) {
+                            self.memo.insert(r, MemoEntry::Dead);
+                            self.plan.push(Plan::Dead);
+                            continue 'candidates;
+                        }
+                    }
                 }
             }
-            if self.config.memoize
-                && !preadmitted
-                && self
-                    .tiles
-                    .violates_capacity(self.space.problem, self.space.arch, m)
-            {
-                self.memo.insert(m.clone(), MemoEntry::Dead);
-                plan.push(Plan::Dead);
-                continue;
-            }
-            plan.push(Plan::Miss);
-            miss_idx.push(i);
+            self.plan.push(Plan::Miss);
+            self.miss_idx.push(i as u32);
         }
 
         // parallel pass over the misses; small batches (heuristic climb
         // rounds, decoupled grafts) stay sequential — thread spawn would
         // dominate the work, same cutoff par_map uses
-        let threads = if miss_idx.len() < 64 {
+        let threads = if self.miss_idx.len() < 64 {
             1
         } else {
-            self.config.threads.unwrap_or_else(default_threads)
+            self.config.threads.unwrap_or_else(default_threads).max(1)
         };
+        if self.workers.len() < threads {
+            self.workers.resize_with(threads, WorkerState::new);
+        }
         let space = self.space;
         let model = self.model;
         let objective = self.objective;
         let prune = self.config.prune;
-        let batch_ref: &[Mapping] = &batch;
-        let outcomes: Vec<Outcome> = par_map_with(miss_idx, threads, |&i| {
-            let m = &batch_ref[i];
-            if !preadmitted && !space.admits(m) {
-                return Outcome::Illegal;
-            }
-            if prune {
-                if let (Some(inc), Some(bound)) =
-                    (snapshot, model.lower_bound(space.problem, space.arch, m))
-                {
-                    if objective.score_bound(&bound) >= inc {
-                        return Outcome::Pruned;
+        let footprints: Option<&FootprintMemo> = if memoize { Some(&self.tiles) } else { None };
+        par_map_with_state(
+            &self.miss_idx,
+            threads,
+            &mut self.workers,
+            &mut self.outcomes,
+            |ws, &i| {
+                let r = batch.get(i as usize);
+                r.decode_into(&mut ws.mapping);
+                if !preadmitted && !space.admits(&ws.mapping) {
+                    return Some(Outcome::Illegal);
+                }
+                if prune {
+                    if let (Some(inc), Some(bound)) = (
+                        snapshot,
+                        model.lower_bound(space.problem, space.arch, &ws.mapping),
+                    ) {
+                        if objective.score_bound(&bound) >= inc {
+                            return Some(Outcome::Pruned);
+                        }
                     }
                 }
-            }
-            match model.evaluate_prechecked(space.problem, space.arch, m) {
-                Ok(est) => {
-                    let score = objective.score(&est);
-                    Outcome::Scored(est, score)
+                match model.evaluate_lean(
+                    space.problem,
+                    space.arch,
+                    &ws.mapping,
+                    &mut ws.scratch,
+                    footprints,
+                ) {
+                    Ok(lean) => {
+                        let score = objective.score_lean(&lean);
+                        Some(Outcome::Scored(lean, score))
+                    }
+                    Err(_) => Some(Outcome::Illegal),
                 }
-                Err(_) => Outcome::Illegal,
-            }
-        });
+            },
+        );
 
         // main-thread merge in batch order: memo writes + incumbent fold
-        let mut scored_out: Vec<(Mapping, f64)> = Vec::new();
-        let mut outcomes_it = outcomes.into_iter();
-        for (m, p) in batch.into_iter().zip(plan) {
+        let mut oi = 0usize;
+        for (i, p) in self.plan.iter().enumerate() {
             match p {
                 Plan::Hit(score) => {
-                    self.stats.memo_hits += 1;
                     self.stats.scored += 1;
                     // a memo hit was scored before, so the incumbent
                     // (which never resets within an engine) already
                     // dominates it — no incumbent update possible
                     debug_assert!(
-                        self.incumbent.as_ref().is_some_and(|i| i.score <= score),
+                        self.incumbent.as_ref().is_some_and(|inc| inc.score <= *score),
                         "memoized candidate beat the incumbent"
                     );
-                    scored_out.push((m, score));
+                    scored_out.push((i as u32, *score));
                 }
                 Plan::Dead => {
                     self.stats.rejected += 1;
                 }
                 Plan::Miss => {
-                    let outcome = outcomes_it.next().expect("one outcome per miss");
+                    let outcome = self.outcomes[oi].expect("one outcome per miss");
+                    oi += 1;
                     match outcome {
-                        Outcome::Scored(est, score) => {
+                        Outcome::Scored(lean, score) => {
                             self.stats.cost_evals += 1;
                             self.stats.scored += 1;
-                            if self.config.memoize {
-                                self.memo.insert(m.clone(), MemoEntry::Scored(score));
+                            let r = batch.get(i);
+                            if memoize {
+                                self.memo.insert(r, MemoEntry::Scored(score));
                             }
                             let improves = self
                                 .incumbent
                                 .as_ref()
-                                .map(|i| score < i.score)
+                                .map(|inc| score < inc.score)
                                 .unwrap_or(true);
                             if improves {
+                                // materialize the full estimate only for
+                                // incumbents (rare): decode once,
+                                // re-evaluate through the same core. If a
+                                // third-party model's full path fails
+                                // where its lean path succeeded, fall
+                                // back to a breakdown-free estimate so
+                                // the incumbent is never silently lost
+                                let mapping = r.to_mapping();
+                                let est = match self.model.evaluate_prechecked(
+                                    self.space.problem,
+                                    self.space.arch,
+                                    &mapping,
+                                ) {
+                                    Ok(est) => {
+                                        debug_assert_eq!(
+                                            self.objective.score(&est).to_bits(),
+                                            score.to_bits(),
+                                            "lean/full cost paths diverged"
+                                        );
+                                        est
+                                    }
+                                    Err(_) => CostEstimate {
+                                        cycles: lean.cycles,
+                                        energy_pj: lean.energy_pj,
+                                        utilization: lean.utilization,
+                                        macs: lean.macs,
+                                        levels: Vec::new(),
+                                        interconnect_pj: 0.0,
+                                        clock_ghz: lean.clock_ghz,
+                                    },
+                                };
                                 self.incumbent = Some(Incumbent {
-                                    mapping: m.clone(),
+                                    packed: r.to_owned_code(),
+                                    mapping,
                                     cost: est,
                                     score,
                                 });
                             }
-                            scored_out.push((m, score));
+                            scored_out.push((i as u32, score));
                         }
                         Outcome::Illegal => {
                             self.stats.rejected += 1;
-                            if self.config.memoize {
-                                self.memo.insert(m, MemoEntry::Dead);
+                            if memoize {
+                                self.memo.insert(batch.get(i), MemoEntry::Dead);
                             }
                         }
                         Outcome::Pruned => {
@@ -434,15 +705,14 @@ impl<'a> Engine<'a> {
                             // improves, so a bound that failed against the
                             // snapshot keeps failing forever
                             self.stats.pruned += 1;
-                            if self.config.memoize {
-                                self.memo.insert(m, MemoEntry::Dead);
+                            if memoize {
+                                self.memo.insert(batch.get(i), MemoEntry::Dead);
                             }
                         }
                     }
                 }
             }
         }
-        scored_out
     }
 }
 
@@ -488,6 +758,12 @@ mod tests {
         assert_eq!(r1.mapping, r2.mapping);
         // the fast path did strictly less cost-model work
         assert!(fast.stats().cost_evals <= plain.stats().cost_evals);
+        // and its cache counters add up
+        assert_eq!(
+            fast.stats().memo_hits + fast.stats().memo_misses,
+            fast.stats().proposed,
+            "every proposal is a memo lookup when memoization is on"
+        );
     }
 
     #[test]
@@ -507,6 +783,7 @@ mod tests {
             "repeat batch must be served from the memo"
         );
         assert!(engine.stats().memo_hits >= first.len());
+        assert!(engine.stats().memo_hit_rate() > 0.0);
     }
 
     #[test]
@@ -530,6 +807,30 @@ mod tests {
     }
 
     #[test]
+    fn packed_and_mapping_entrypoints_agree() {
+        let (p, a, c) = setup();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let batch = sample_batch(&space, 21, 256);
+        let mut pb = PackedBatch::new();
+        let (nl, nd) = space.packed_shape();
+        pb.reset(nl, nd);
+        for m in &batch {
+            assert!(pb.push_mapping(m));
+        }
+        let mut via_mappings = Engine::new(&space, &model, Objective::Edp);
+        let scored = via_mappings.evaluate(batch);
+        let mut via_packed = Engine::new(&space, &model, Objective::Edp);
+        let n = via_packed.evaluate_packed(&pb);
+        assert_eq!(scored.len(), n);
+        assert_eq!(via_mappings.result().unwrap().score, via_packed.result().unwrap().score);
+        assert_eq!(
+            via_mappings.result().unwrap().mapping,
+            via_packed.result().unwrap().mapping
+        );
+    }
+
+    #[test]
     fn max_scored_terminates_run() {
         struct Endless {
             seed: u64,
@@ -542,10 +843,14 @@ mod tests {
                 &mut self,
                 space: &MapSpace,
                 _p: &Progress,
-            ) -> Option<Vec<Mapping>> {
+                out: &mut PackedBatch,
+            ) -> bool {
                 self.seed += 1;
                 let mut rng = Rng::new(self.seed);
-                Some((0..64).map(|_| space.sample(&mut rng)).collect())
+                for _ in 0..64 {
+                    out.push_with(|slot| space.sample_into(&mut rng, slot));
+                }
+                true
             }
         }
         let (p, a, c) = setup();
@@ -562,5 +867,4 @@ mod tests {
         assert!(engine.stats().scored >= 100);
         assert!(engine.stats().batches < 1_000, "termination did not fire");
     }
-
 }

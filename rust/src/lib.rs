@@ -80,13 +80,15 @@ pub mod prelude {
         AnalyticalModel, CostEstimate, CostModel, EnergyTable, MaestroModel,
     };
     pub use crate::dse::{ArchSpace, DseConfig, DseOrchestrator, DseResult, ParetoFrontier};
-    pub use crate::engine::{CandidateSource, Engine, EngineConfig, EngineStats, Session};
+    pub use crate::engine::{
+        CandidateSource, Engine, EngineConfig, EngineStats, Progress, ScoredView, Session,
+    };
     pub use crate::frontend::{self, Workload};
     pub use crate::mappers::{
         DecoupledMapper, ExhaustiveMapper, GeneticMapper, HeuristicMapper, Mapper, Objective,
         RandomMapper, SearchResult,
     };
-    pub use crate::mapping::Mapping;
+    pub use crate::mapping::{Mapping, PackedBatch, PackedMapping, PackedRef};
     pub use crate::mapspace::{Constraints, MapSpace};
     pub use crate::network::{
         NetworkOrchestrator, NetworkResult, OrchestratorConfig, WorkloadGraph,

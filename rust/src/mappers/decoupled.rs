@@ -11,7 +11,7 @@
 //! earlier splits already produced.
 
 use crate::engine::{CandidateSource, Progress};
-use crate::mapping::Mapping;
+use crate::mapping::{Mapping, PackedBatch};
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
@@ -36,7 +36,7 @@ impl DecoupledMapper {
     /// Off-chip traffic proxy for a mapping: words moved between DRAM and
     /// the first on-chip level, from the tile-analysis engine.
     fn offchip_traffic(space: &MapSpace, m: &Mapping) -> f64 {
-        let ta = crate::cost::TileAnalysis::new(space.problem, space.arch, m);
+        let mut ta = crate::cost::TileAnalysis::new(space.problem, space.arch, m);
         let mv = ta.movement(crate::cost::ReuseModel::OrderAware);
         // reads+writes at the outermost (DRAM) level
         mv.levels
@@ -148,17 +148,32 @@ impl CandidateSource for DecoupledSource {
         "decoupled"
     }
 
-    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        _progress: &Progress,
+        out: &mut PackedBatch,
+    ) -> bool {
         if self.kept.is_none() {
             let kept = self.phase1(space);
             if kept.is_empty() {
-                return None;
+                return false;
             }
             self.kept = Some(kept);
         }
-        let base = self.kept.as_ref()?.get(self.next_split)?.clone();
+        let Some(base) = self
+            .kept
+            .as_ref()
+            .and_then(|kept| kept.get(self.next_split))
+            .cloned()
+        else {
+            return false;
+        };
         self.next_split += 1;
-        Some(self.graft_batch(space, &base))
+        for m in self.graft_batch(space, &base) {
+            out.push_mapping(&m);
+        }
+        true
     }
 }
 

@@ -6,7 +6,7 @@
 //! low-parallelism tilings without full tile analysis.
 
 use crate::engine::{CandidateSource, Progress};
-use crate::mapping::Mapping;
+use crate::mapping::PackedBatch;
 use crate::mapspace::{EnumCursor, MapSpace};
 
 use super::Mapper;
@@ -58,18 +58,26 @@ impl CandidateSource for ExhaustiveSource {
         true
     }
 
-    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        _progress: &Progress,
+        out: &mut PackedBatch,
+    ) -> bool {
         if self.remaining == 0 {
-            return None;
+            return false;
         }
         let cursor = self.cursor.get_or_insert_with(|| space.enum_cursor());
         let take = self.remaining.min(BATCH);
         let batch = space.enumerate_from(cursor, take);
         if batch.is_empty() {
-            return None;
+            return false;
         }
         self.remaining -= batch.len();
-        Some(batch)
+        for m in &batch {
+            out.push_mapping(m);
+        }
+        true
     }
 }
 

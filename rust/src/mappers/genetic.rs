@@ -10,7 +10,7 @@
 //! of paying for re-evaluation.
 
 use crate::engine::{CandidateSource, Progress};
-use crate::mapping::Mapping;
+use crate::mapping::{PackedBatch, PackedMapping, PackedRef};
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
@@ -50,6 +50,13 @@ impl Mapper for GeneticMapper {
             elite: self.elite,
             rng: Rng::new(self.seed),
             state: State::Init,
+            pool: Vec::new(),
+            pool_scores: Vec::new(),
+            pool_len: 0,
+            order: Vec::new(),
+            elites: Vec::new(),
+            elites_len: 0,
+            child: None,
         })
     }
 }
@@ -57,12 +64,16 @@ impl Mapper for GeneticMapper {
 enum State {
     /// First batch: the random initial population.
     Init,
-    /// Breeding: `gen` offspring batches emitted so far; `elites` are the
-    /// previous generation's retained champions (they survive into the
-    /// pool even if this generation regresses).
-    Evolve { gen: usize, elites: Vec<(Mapping, f64)> },
+    /// Breeding: `gen` offspring batches emitted so far.
+    Evolve { gen: usize },
 }
 
+/// The genome pool lives in **reused packed-code buffers**: every
+/// generation copies the engine's scored feedback (plus the retained
+/// elites) into grow-only `PackedMapping` slots, sorts an index list,
+/// and breeds children straight into the engine's output arena with the
+/// packed crossover/mutation operators — no per-genome `Mapping`
+/// allocation anywhere in the loop.
 struct GeneticSource {
     population: usize,
     generations: usize,
@@ -70,6 +81,38 @@ struct GeneticSource {
     elite: usize,
     rng: Rng,
     state: State,
+    /// Parent genomes (grow-only buffers; `pool_len` is the live count).
+    pool: Vec<PackedMapping>,
+    pool_scores: Vec<f64>,
+    pool_len: usize,
+    /// Score-sorted indices into the pool.
+    order: Vec<usize>,
+    /// Retained champions of the previous generation (they survive into
+    /// the pool even if this generation regresses).
+    elites: Vec<(PackedMapping, f64)>,
+    elites_len: usize,
+    /// Crossover staging buffer (children mutate out of this).
+    child: Option<PackedMapping>,
+}
+
+impl GeneticSource {
+    /// Copy one genome into the next free pool slot.
+    fn pool_push(
+        pool: &mut Vec<PackedMapping>,
+        pool_scores: &mut Vec<f64>,
+        len: &mut usize,
+        r: PackedRef,
+        score: f64,
+    ) {
+        if pool.len() <= *len {
+            pool.push(r.to_owned_code());
+            pool_scores.push(score);
+        } else {
+            pool[*len].copy_from(r);
+            pool_scores[*len] = score;
+        }
+        *len += 1;
+    }
 }
 
 impl CandidateSource for GeneticSource {
@@ -77,62 +120,105 @@ impl CandidateSource for GeneticSource {
         "genetic"
     }
 
-    fn next_batch(&mut self, space: &MapSpace, progress: &Progress) -> Option<Vec<Mapping>> {
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        progress: &Progress,
+        out: &mut PackedBatch,
+    ) -> bool {
         if matches!(self.state, State::Init) {
-            let init: Vec<Mapping> =
-                (0..self.population).map(|_| space.sample(&mut self.rng)).collect();
-            self.state = State::Evolve { gen: 0, elites: Vec::new() };
-            return Some(init);
+            let rng = &mut self.rng;
+            for _ in 0..self.population {
+                out.push_with(|slot| space.sample_into(rng, slot));
+            }
+            self.state = State::Evolve { gen: 0 };
+            return true;
         }
 
-        let (gen, prev_elites) = match &self.state {
-            State::Evolve { gen, elites } => (*gen, elites.clone()),
+        let gen = match &self.state {
+            State::Evolve { gen } => *gen,
             State::Init => unreachable!("init handled above"),
         };
         if gen >= self.generations {
-            return None;
+            return false;
         }
-        // survivors = this batch's scored feedback + previous elite
-        let mut scored: Vec<(Mapping, f64)> = progress.last_scored.to_vec();
-        scored.extend(prev_elites);
-        if scored.is_empty() {
-            return None;
+        // survivors = this batch's scored feedback + previous elites
+        self.pool_len = 0;
+        for (r, score) in progress.last_scored.iter() {
+            Self::pool_push(&mut self.pool, &mut self.pool_scores, &mut self.pool_len, r, score);
         }
-        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        scored.truncate(self.population.max(self.elite));
-        let parents = &scored;
+        for k in 0..self.elites_len {
+            let (pm, score) = &self.elites[k];
+            Self::pool_push(
+                &mut self.pool,
+                &mut self.pool_scores,
+                &mut self.pool_len,
+                pm.as_ref(),
+                *score,
+            );
+        }
+        if self.pool_len == 0 {
+            return false;
+        }
+        self.order.clear();
+        self.order.extend(0..self.pool_len);
+        let scores = &self.pool_scores;
+        self.order
+            .sort_by(|&x, &y| scores[x].partial_cmp(&scores[y]).unwrap());
+        let keep = self.population.max(self.elite).min(self.pool_len);
+        self.order.truncate(keep);
 
-        let mut next: Vec<Mapping> = parents
-            .iter()
-            .take(self.elite)
-            .map(|(m, _)| m.clone())
-            .collect();
-        while next.len() < self.population {
+        // elites re-enter the batch verbatim (they resolve from the
+        // engine's memo), then tournament-selected children fill it
+        for &idx in self.order.iter().take(self.elite) {
+            out.push_ref(self.pool[idx].as_ref());
+        }
+        let (nl, nd) = space.packed_shape();
+        let child = self.child.get_or_insert_with(|| PackedMapping::zeroed(nl, nd));
+        while out.len() < self.population {
             // tournament selection (size 3)
-            let pick = |rng: &mut Rng| {
-                let mut best_i = rng.below(parents.len());
+            let pick = |rng: &mut Rng, order: &[usize], scores: &[f64]| -> usize {
+                let mut best = order[rng.below(order.len())];
                 for _ in 0..2 {
-                    let j = rng.below(parents.len());
-                    if parents[j].1 < parents[best_i].1 {
-                        best_i = j;
+                    let j = order[rng.below(order.len())];
+                    if scores[j] < scores[best] {
+                        best = j;
                     }
                 }
-                &parents[best_i].0
+                best
             };
-            let pa = pick(&mut self.rng).clone();
-            let pb = pick(&mut self.rng).clone();
-            let mut child = space.crossover(&pa, &pb, &mut self.rng);
+            let pa = pick(&mut self.rng, &self.order, &self.pool_scores);
+            let pb = pick(&mut self.rng, &self.order, &self.pool_scores);
+            space.crossover_into(
+                self.pool[pa].as_ref(),
+                self.pool[pb].as_ref(),
+                &mut self.rng,
+                &mut child.as_slot(),
+            );
+            child.refresh_fingerprint();
             if self.rng.chance(self.mutation_rate) {
-                child = space.mutate(&child, &mut self.rng);
+                let rng = &mut self.rng;
+                let base = &*child;
+                out.push_with(|slot| space.mutate_into(base.as_ref(), rng, slot));
+            } else {
+                out.push_ref(child.as_ref());
             }
-            next.push(child);
         }
 
-        self.state = State::Evolve {
-            gen: gen + 1,
-            elites: scored.into_iter().take(self.elite).collect(),
-        };
-        Some(next)
+        // retain this generation's champions
+        for (k, &idx) in self.order.iter().take(self.elite).enumerate() {
+            let score = self.pool_scores[idx];
+            if self.elites.len() <= k {
+                self.elites.push((self.pool[idx].clone(), score));
+            } else {
+                self.elites[k].0.copy_from(self.pool[idx].as_ref());
+                self.elites[k].1 = score;
+            }
+        }
+        self.elites_len = self.order.len().min(self.elite);
+
+        self.state = State::Evolve { gen: gen + 1 };
+        true
     }
 }
 

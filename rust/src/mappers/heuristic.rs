@@ -11,7 +11,7 @@
 //! just its own seeds.
 
 use crate::engine::{CandidateSource, Progress};
-use crate::mapping::Mapping;
+use crate::mapping::{Mapping, PackedBatch, PackedMapping};
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
@@ -48,6 +48,7 @@ impl Mapper for HeuristicMapper {
             patience: self.patience,
             rng: Rng::new(self.seed),
             state: State::Seed,
+            base: None,
         })
     }
 }
@@ -65,6 +66,8 @@ struct HeuristicSource {
     patience: usize,
     rng: Rng,
     state: State,
+    /// Reusable copy of the incumbent the climb mutates from.
+    base: Option<PackedMapping>,
 }
 
 impl CandidateSource for HeuristicSource {
@@ -72,14 +75,22 @@ impl CandidateSource for HeuristicSource {
         "heuristic"
     }
 
-    fn next_batch(&mut self, space: &MapSpace, progress: &Progress) -> Option<Vec<Mapping>> {
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        progress: &Progress,
+        out: &mut PackedBatch,
+    ) -> bool {
+        let (nl, nd) = space.packed_shape();
         if matches!(self.state, State::Seed) {
             // phase 1: draw utilization-biased seeds, keep the best
             let mut seeds: Vec<(Mapping, f64)> = Vec::new();
+            let mut draw = PackedMapping::zeroed(nl, nd);
             for i in 0..self.seeds {
                 // mix greedy-spatial and uniform draws for diversity
                 let greedy = if i % 3 == 0 { 0.0 } else { 0.7 };
-                let m = space.sample_with_bias(&mut self.rng, greedy);
+                space.sample_with_bias_into(&mut self.rng, greedy, &mut draw.as_slot());
+                let m = draw.to_mapping();
                 if space.admits(&m) {
                     let u = m.utilization(space.arch);
                     seeds.push((m, u));
@@ -87,16 +98,22 @@ impl CandidateSource for HeuristicSource {
             }
             self.state = State::Climb { round: 0, stale: 0, last_best: None };
             if seeds.is_empty() {
-                return None;
+                return false;
             }
             seeds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
             seeds.truncate(KEPT_SEEDS);
-            return Some(seeds.into_iter().map(|(m, _)| m).collect());
+            for (m, _) in &seeds {
+                out.push_mapping(m);
+            }
+            return true;
         }
 
         // phase 2: hill climb via mutation of the incumbent
-        let (best_mapping, best_score) = progress.best?;
-        let base = best_mapping.clone();
+        let Some((best_packed, best_score)) = progress.best else {
+            return false;
+        };
+        let base = self.base.get_or_insert_with(|| best_packed.to_owned_code());
+        base.copy_from(best_packed);
         let State::Climb { round, stale, last_best } = &mut self.state else {
             unreachable!("seed phase handled above");
         };
@@ -106,20 +123,20 @@ impl CandidateSource for HeuristicSource {
             } else {
                 *stale += 1;
                 if *stale >= self.patience {
-                    return None;
+                    return false;
                 }
             }
         }
         if *round >= self.climb_rounds {
-            return None;
+            return false;
         }
         *round += 1;
         *last_best = Some(best_score);
-        Some(
-            (0..MUTANTS_PER_ROUND)
-                .map(|_| space.mutate(&base, &mut self.rng))
-                .collect(),
-        )
+        let rng = &mut self.rng;
+        for _ in 0..MUTANTS_PER_ROUND {
+            out.push_with(|slot| space.mutate_into(base.as_ref(), rng, slot));
+        }
+        true
     }
 }
 

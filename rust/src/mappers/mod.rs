@@ -34,7 +34,7 @@ pub use genetic::GeneticMapper;
 pub use heuristic::HeuristicMapper;
 pub use random::RandomMapper;
 
-use crate::cost::{CostBound, CostEstimate, CostModel};
+use crate::cost::{CostBound, CostEstimate, CostModel, LeanCost};
 use crate::engine::{CandidateSource, Engine};
 use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
@@ -64,6 +64,13 @@ impl Objective {
 
     pub fn score(&self, e: &CostEstimate) -> f64 {
         self.score_raw(e.latency_s(), e.energy_j())
+    }
+
+    /// Score the engine's allocation-free [`LeanCost`] path. Identical
+    /// arithmetic to [`Objective::score`] on the corresponding full
+    /// estimate (both route through [`Objective::score_raw`]).
+    pub fn score_lean(&self, c: &LeanCost) -> f64 {
+        self.score_raw(c.latency_s(), c.energy_j())
     }
 
     /// Score a [`CostBound`] the same way: since every bound field is a

@@ -3,7 +3,7 @@
 //! batched engine, keep the best.
 
 use crate::engine::{CandidateSource, Progress};
-use crate::mapping::Mapping;
+use crate::mapping::PackedBatch;
 use crate::mapspace::MapSpace;
 use crate::util::rng::Rng;
 
@@ -35,20 +35,24 @@ impl Mapper for RandomMapper {
         Box::new(RandomSource {
             seed_stream: Rng::new(self.seed),
             remaining: self.samples,
+            seeds: Vec::new(),
         })
     }
 }
 
 /// Emits the seed-determined sample stream in batches. Per-candidate
 /// split seeds are drawn sequentially from one root stream, then the
-/// actual (expensive) map-space sampling fans out over `par_map` —
-/// sampling is ~half the wall time of a search otherwise
-/// (EXPERIMENTS.md §Perf iteration 3). The candidate stream is a pure
-/// function of the seed: batch boundaries and thread counts cannot
-/// change it.
+/// actual (expensive) map-space sampling fans out over the packed
+/// batch's parallel fill — sampling is ~half the wall time of a search
+/// otherwise (EXPERIMENTS.md §Perf iteration 3), and writing packed
+/// slots in place means a steady-state batch allocates nothing. The
+/// candidate stream is a pure function of the seed: batch boundaries
+/// and thread counts cannot change it.
 struct RandomSource {
     seed_stream: Rng,
     remaining: usize,
+    /// Per-candidate split seeds for the current batch (reused buffer).
+    seeds: Vec<u64>,
 }
 
 impl CandidateSource for RandomSource {
@@ -56,17 +60,34 @@ impl CandidateSource for RandomSource {
         "random"
     }
 
-    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        _progress: &Progress,
+        out: &mut PackedBatch,
+    ) -> bool {
         if self.remaining == 0 {
-            return None;
+            return false;
         }
         let take = self.remaining.min(BATCH);
         self.remaining -= take;
-        let seeds: Vec<u64> = (0..take).map(|_| self.seed_stream.next_u64()).collect();
-        Some(crate::util::par::par_map(seeds, |&s| {
-            let mut r = Rng::new(s);
-            space.sample(&mut r)
-        }))
+        self.seeds.clear();
+        for _ in 0..take {
+            self.seeds.push(self.seed_stream.next_u64());
+        }
+        let seeds = &self.seeds;
+        // same sequential-below-64 cutoff as par_map: thread spawn would
+        // dominate tiny batches
+        let threads = if take < 64 {
+            1
+        } else {
+            crate::util::par::default_threads()
+        };
+        out.fill_par(take, threads, |i, slot| {
+            let mut r = Rng::new(seeds[i]);
+            space.sample_into(&mut r, slot);
+        });
+        true
     }
 }
 
@@ -120,6 +141,8 @@ mod tests {
         // the first 100 candidates of a 2000-sample stream equal the
         // 100-sample stream: sources must not entangle batch boundaries
         // with the seed protocol
+        use crate::engine::ScoredView;
+        use crate::mapping::Mapping;
         let p = gemm(32, 32, 32);
         let a = presets::edge();
         let c = Constraints::default();
@@ -128,9 +151,21 @@ mod tests {
             let mapper = RandomMapper::new(samples, 19);
             let mut src = mapper.source();
             let mut out = Vec::new();
-            let progress = Progress { batch_index: 0, best: None, last_scored: &[] };
-            while let Some(b) = src.next_batch(&space, &progress) {
-                out.extend(b);
+            let (nl, nd) = space.packed_shape();
+            let mut batch = PackedBatch::new();
+            loop {
+                batch.reset(nl, nd);
+                let progress = Progress {
+                    batch_index: 0,
+                    best: None,
+                    last_scored: ScoredView::empty(),
+                };
+                if !src.next_batch(&space, &progress, &mut batch) || batch.is_empty() {
+                    break;
+                }
+                for i in 0..batch.len() {
+                    out.push(batch.get(i).to_mapping());
+                }
             }
             out
         };

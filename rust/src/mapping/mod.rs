@@ -21,8 +21,10 @@
 //! mappings verbatim. The module implements the paper's four legality
 //! rules plus divisibility, and the Fig. 5(e)/Fig. 7 loop-nest rendering.
 
+mod packed;
 mod render;
 
+pub use packed::{PackedBatch, PackedMapping, PackedRef, PackedSlot, MAX_PACKED_DIMS};
 pub use render::render_loop_nest;
 
 use crate::arch::Arch;
@@ -115,6 +117,64 @@ impl std::fmt::Display for IllegalMapping {
 
 impl std::error::Error for IllegalMapping {}
 
+/// Allocation-free legality verdict: the same §IV-D rules as
+/// [`IllegalMapping`], carrying indices instead of names. The search
+/// hot path rejects candidates through this (admits is a bool), and
+/// [`Mapping::check`] converts it into the rich, name-bearing error at
+/// the API boundary — one rule implementation, two reporting depths.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum FastViolation {
+    LevelCount { got: usize, want: usize },
+    DimCount { level: usize },
+    BadOrder { level: usize },
+    Coverage { dim: usize, tt: u64, need: u64 },
+    SpatialDivides { level: usize, dim: usize, tt: u64, st: u64 },
+    Rule1 { level: usize, inner: usize, dim: usize, st: u64, tt_inner: u64 },
+    TripDivides { level: usize, dim: usize },
+    Rule2 { level: usize, par: u64, subs: u64 },
+    Rule3 { level: usize, need: u64, cap: u64 },
+    PeParallel { dim: usize },
+}
+
+impl FastViolation {
+    fn into_error(self, problem: &Problem, arch: &Arch) -> IllegalMapping {
+        let dim_name = |d: usize| problem.dims[d].name.clone();
+        match self {
+            FastViolation::LevelCount { got, want } => IllegalMapping::LevelCount { got, want },
+            FastViolation::DimCount { level } => IllegalMapping::DimCount { level },
+            FastViolation::BadOrder { level } => IllegalMapping::BadOrder { level },
+            FastViolation::Coverage { dim, tt, need } => {
+                IllegalMapping::Coverage { dim: dim_name(dim), tt, need }
+            }
+            FastViolation::SpatialDivides { level, dim, tt, st } => {
+                IllegalMapping::SpatialDivides { level, dim: dim_name(dim), tt, st }
+            }
+            FastViolation::Rule1 { level, inner, dim, st, tt_inner } => {
+                IllegalMapping::Rule1 { level, inner, dim: dim_name(dim), st, tt_inner }
+            }
+            FastViolation::TripDivides { level, dim } => {
+                IllegalMapping::TripDivides { level, dim: dim_name(dim) }
+            }
+            FastViolation::Rule2 { level, par, subs } => {
+                IllegalMapping::Rule2 { level, par, subs }
+            }
+            FastViolation::Rule3 { level, need, cap } => IllegalMapping::Rule3 {
+                level,
+                mem: arch.levels[level]
+                    .memory
+                    .as_ref()
+                    .map(|m| m.name.clone())
+                    .unwrap_or_default(),
+                need,
+                cap,
+            },
+            FastViolation::PeParallel { dim } => {
+                IllegalMapping::PeParallel { dim: dim_name(dim) }
+            }
+        }
+    }
+}
+
 impl Mapping {
     /// The trivial mapping: everything temporal at the outermost level,
     /// tiles of 1 inside — always legal w.r.t. rules 1/2/4 (rule 3 may
@@ -189,26 +249,58 @@ impl Mapping {
         }
     }
 
-    /// Validate this mapping against the paper's §IV-D legality rules.
+    /// Validate this mapping against the paper's §IV-D legality rules,
+    /// reporting the first violation with names attached. The search
+    /// hot path uses the allocation-free [`Mapping::is_legal`] instead;
+    /// both run the same rule implementation.
     pub fn check(&self, problem: &Problem, arch: &Arch) -> Result<(), IllegalMapping> {
+        self.check_fast(problem, arch)
+            .map_err(|v| v.into_error(problem, arch))
+    }
+
+    /// Allocation-free legality verdict — `check` without the error
+    /// report. This is what [`crate::mapspace::MapSpace::admits`] calls
+    /// per candidate.
+    pub fn is_legal(&self, problem: &Problem, arch: &Arch) -> bool {
+        self.check_fast(problem, arch).is_ok()
+    }
+
+    /// The one rule implementation (§IV-D): every quantity in the
+    /// violation is an index or a value, so the Ok and Err paths both
+    /// avoid the allocator entirely.
+    fn check_fast(&self, problem: &Problem, arch: &Arch) -> Result<(), FastViolation> {
         let nlev = arch.depth();
         let ndim = problem.dims.len();
         if self.levels.len() != nlev {
-            return Err(IllegalMapping::LevelCount { got: self.levels.len(), want: nlev });
+            return Err(FastViolation::LevelCount { got: self.levels.len(), want: nlev });
         }
         for (i, l) in self.levels.iter().enumerate() {
             if l.temporal_tile.len() != ndim
                 || l.spatial_tile.len() != ndim
                 || l.temporal_order.len() != ndim
             {
-                return Err(IllegalMapping::DimCount { level: i });
+                return Err(FastViolation::DimCount { level: i });
             }
-            let mut seen = vec![false; ndim];
-            for &d in &l.temporal_order {
-                if d >= ndim || seen[d] {
-                    return Err(IllegalMapping::BadOrder { level: i });
+            // bitmask permutation check: no per-level `seen` allocation
+            // on the search hot path (every packed problem has ≤ 128
+            // dims); problems beyond 128 dims take the allocating
+            // fallback so `check` stays correct for any dimensionality
+            if ndim <= 128 {
+                let mut seen = 0u128;
+                for &d in &l.temporal_order {
+                    if d >= ndim || seen & (1u128 << d) != 0 {
+                        return Err(FastViolation::BadOrder { level: i });
+                    }
+                    seen |= 1u128 << d;
                 }
-                seen[d] = true;
+            } else {
+                let mut seen = vec![false; ndim];
+                for &d in &l.temporal_order {
+                    if d >= ndim || seen[d] {
+                        return Err(FastViolation::BadOrder { level: i });
+                    }
+                    seen[d] = true;
+                }
             }
         }
         // rule 4 (coverage): top temporal tile spans the problem
@@ -216,11 +308,7 @@ impl Mapping {
             let need = problem.dims[d].size;
             let tt = self.levels[0].temporal_tile[d];
             if tt != need {
-                return Err(IllegalMapping::Coverage {
-                    dim: problem.dims[d].name.clone(),
-                    tt,
-                    need,
-                });
+                return Err(FastViolation::Coverage { dim: d, tt, need });
             }
         }
         for i in 0..nlev {
@@ -229,44 +317,34 @@ impl Mapping {
             for d in 0..ndim {
                 let (tt, st) = (l.temporal_tile[d], l.spatial_tile[d]);
                 if st == 0 || tt == 0 || st > tt || tt % st != 0 {
-                    return Err(IllegalMapping::SpatialDivides {
-                        level: i,
-                        dim: problem.dims[d].name.clone(),
-                        tt,
-                        st,
-                    });
+                    return Err(FastViolation::SpatialDivides { level: i, dim: d, tt, st });
                 }
                 fanout *= tt / st;
                 if i + 1 < nlev {
                     let tt_inner = self.levels[i + 1].temporal_tile[d];
                     // rule 1
                     if st < tt_inner {
-                        return Err(IllegalMapping::Rule1 {
+                        return Err(FastViolation::Rule1 {
                             level: i,
                             inner: i + 1,
-                            dim: problem.dims[d].name.clone(),
+                            dim: d,
                             st,
                             tt_inner,
                         });
                     }
                     if st % tt_inner != 0 {
-                        return Err(IllegalMapping::TripDivides {
-                            level: i,
-                            dim: problem.dims[d].name.clone(),
-                        });
+                        return Err(FastViolation::TripDivides { level: i, dim: d });
                     }
                 }
             }
             // rule 2: fan-out fits the sub-cluster count
             let subs = arch.levels[i].sub_clusters;
             if fanout > subs {
-                return Err(IllegalMapping::Rule2 { level: i, par: fanout, subs });
+                return Err(FastViolation::Rule2 { level: i, par: fanout, subs });
             }
             if i == nlev - 1 && fanout > 1 {
                 let d = (0..ndim).find(|&d| self.parallelism(i, d) > 1).unwrap();
-                return Err(IllegalMapping::PeParallel {
-                    dim: problem.dims[d].name.clone(),
-                });
+                return Err(FastViolation::PeParallel { dim: d });
             }
             // rule 3: non-virtual levels hold their temporal tiles.
             // (Unbounded memories always hold — skip the footprint math
@@ -275,9 +353,8 @@ impl Mapping {
                 if mem.size_bytes != u64::MAX {
                     let need = problem.tile_words(&l.temporal_tile) * arch.word_bytes;
                     if !mem.holds(need) {
-                        return Err(IllegalMapping::Rule3 {
+                        return Err(FastViolation::Rule3 {
                             level: i,
-                            mem: mem.name.clone(),
                             need,
                             cap: mem.size_bytes,
                         });

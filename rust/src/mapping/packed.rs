@@ -1,0 +1,650 @@
+//! **Packed mapping codes**: a fixed-stride flat encoding of a
+//! [`Mapping`] for the search hot path.
+//!
+//! A `Mapping` is ergonomic but allocation-heavy: one `LevelMapping` per
+//! level, each holding three `Vec`s, so every sampled candidate costs
+//! `1 + 3·L` heap allocations and every memo key hashes a nested
+//! structure. The packed code flattens the same information into two
+//! flat buffers with a fixed per-mapping stride:
+//!
+//! * `tiles` — `2·L·D` little-endian `u64` words, laid out per level as
+//!   `[TT₀..TT_D | ST₀..ST_D]`, so the temporal-tile vector of any level
+//!   is a *contiguous sub-slice* (the footprint memo keys on exactly
+//!   that slice, no copy needed);
+//! * `perms` — `L·D` bytes, the per-level temporal orders (a problem
+//!   has far fewer than 256 dims).
+//!
+//! Every code carries a precomputed 64-bit **fingerprint** (FNV-1a over
+//! the words), so memo lookups hash one `u64` instead of re-walking the
+//! structure, and equality is one fingerprint compare plus a slice
+//! `memcmp`. Codes of one `(problem, arch)` pair all share the same
+//! stride, which is what makes [`PackedBatch`] — a steady-state
+//! allocation-free arena of candidate codes — possible: sources write
+//! into reused slots instead of building fresh `Vec<Mapping>` batches.
+//!
+//! Encoding is lossless: `encode → decode` round-trips every legal
+//! mapping bit-for-bit (`tests/properties.rs` pins this).
+
+use crate::arch::Arch;
+
+use super::{LevelMapping, Mapping};
+
+/// Maximum problem dimensionality a packed code supports (perm entries
+/// are bytes; the legality check uses a 128-bit seen-mask).
+pub const MAX_PACKED_DIMS: usize = 128;
+
+/// FNV-1a over 64-bit words — cheap, deterministic, and good enough for
+/// a memo-table fingerprint (collisions are handled by full compare,
+/// never by trusting the hash).
+#[inline]
+fn fnv1a_words(seed: u64, words: impl Iterator<Item = u64>) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = seed ^ 0xCBF2_9CE4_8422_2325;
+    for w in words {
+        h ^= w;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Pack the perm bytes of one code into u64 words (little-endian, zero
+/// padded) for fingerprinting and memo-arena interning.
+#[inline]
+pub(crate) fn perm_words(perms: &[u8]) -> impl Iterator<Item = u64> + '_ {
+    perms.chunks(8).map(|c| {
+        let mut w = 0u64;
+        for (i, &b) in c.iter().enumerate() {
+            w |= (b as u64) << (8 * i);
+        }
+        w
+    })
+}
+
+#[inline]
+fn fingerprint_of(nlevels: usize, ndims: usize, tiles: &[u64], perms: &[u8]) -> u64 {
+    let shape = ((nlevels as u64) << 32) | ndims as u64;
+    fnv1a_words(shape, tiles.iter().copied().chain(perm_words(perms)))
+}
+
+/// A borrowed view of one packed mapping code. `Copy`, pointer-sized —
+/// this is what flows through the engine pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct PackedRef<'a> {
+    pub(crate) nlevels: usize,
+    pub(crate) ndims: usize,
+    pub(crate) tiles: &'a [u64],
+    pub(crate) perms: &'a [u8],
+    pub(crate) fingerprint: u64,
+}
+
+impl<'a> PackedRef<'a> {
+    pub fn nlevels(&self) -> usize {
+        self.nlevels
+    }
+
+    pub fn ndims(&self) -> usize {
+        self.ndims
+    }
+
+    /// Precomputed fingerprint of this code.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Temporal-tile vector of `level` — a contiguous slice, usable
+    /// directly as a footprint-memo key.
+    #[inline]
+    pub fn tt(&self, level: usize) -> &'a [u64] {
+        let base = level * 2 * self.ndims;
+        &self.tiles[base..base + self.ndims]
+    }
+
+    /// Spatial-tile vector of `level`.
+    #[inline]
+    pub fn st(&self, level: usize) -> &'a [u64] {
+        let base = level * 2 * self.ndims + self.ndims;
+        &self.tiles[base..base + self.ndims]
+    }
+
+    /// Temporal order of `level` (dim indices as bytes, outermost first).
+    #[inline]
+    pub fn order(&self, level: usize) -> &'a [u8] {
+        &self.perms[level * self.ndims..(level + 1) * self.ndims]
+    }
+
+    /// Parallelism of dim `d` at `level`: `TT/ST`.
+    #[inline]
+    pub fn parallelism(&self, level: usize, dim: usize) -> u64 {
+        self.tt(level)[dim] / self.st(level)[dim].max(1)
+    }
+
+    /// Total spatial fan-out at `level`.
+    pub fn level_fanout(&self, level: usize) -> u64 {
+        (0..self.ndims).map(|d| self.parallelism(level, d)).product()
+    }
+
+    /// PEs used = product of all level fan-outs.
+    pub fn pes_used(&self) -> u64 {
+        (0..self.nlevels).map(|l| self.level_fanout(l)).product()
+    }
+
+    /// PE utilization against an architecture.
+    pub fn utilization(&self, arch: &Arch) -> f64 {
+        self.pes_used() as f64 / arch.num_pes() as f64
+    }
+
+    /// Exact code equality (shape, tiles and perms).
+    pub fn code_eq(&self, other: &PackedRef) -> bool {
+        self.fingerprint == other.fingerprint
+            && self.nlevels == other.nlevels
+            && self.ndims == other.ndims
+            && self.tiles == other.tiles
+            && self.perms == other.perms
+    }
+
+    /// Number of u64 words `write_code` emits for this shape.
+    pub(crate) fn code_words(nlevels: usize, ndims: usize) -> usize {
+        2 * nlevels * ndims + (nlevels * ndims).div_ceil(8)
+    }
+
+    /// Append the canonical word sequence (tiles then packed perms) to
+    /// `out` — the memo arena's interned representation.
+    pub(crate) fn write_code(&self, out: &mut Vec<u64>) {
+        out.extend_from_slice(self.tiles);
+        out.extend(perm_words(self.perms));
+    }
+
+    /// Compare this code against an interned word sequence written by
+    /// [`PackedRef::write_code`], without materializing ours.
+    pub(crate) fn code_matches(&self, words: &[u64]) -> bool {
+        let nt = self.tiles.len();
+        if words.len() != Self::code_words(self.nlevels, self.ndims) {
+            return false;
+        }
+        if self.tiles != &words[..nt] {
+            return false;
+        }
+        perm_words(self.perms).eq(words[nt..].iter().copied())
+    }
+
+    /// Decode into an existing `Mapping`, reusing its allocations when
+    /// the shape matches (the per-worker hot path: zero allocations
+    /// after the first call).
+    pub fn decode_into(&self, m: &mut Mapping) {
+        let (nl, nd) = (self.nlevels, self.ndims);
+        m.levels.resize_with(nl, || LevelMapping {
+            temporal_order: Vec::new(),
+            temporal_tile: Vec::new(),
+            spatial_tile: Vec::new(),
+        });
+        for (l, lvl) in m.levels.iter_mut().enumerate() {
+            lvl.temporal_tile.resize(nd, 0);
+            lvl.spatial_tile.resize(nd, 0);
+            lvl.temporal_order.resize(nd, 0);
+            lvl.temporal_tile.copy_from_slice(self.tt(l));
+            lvl.spatial_tile.copy_from_slice(self.st(l));
+            for (pos, &b) in self.order(l).iter().enumerate() {
+                lvl.temporal_order[pos] = b as usize;
+            }
+        }
+    }
+
+    /// Decode into a fresh `Mapping`.
+    pub fn to_mapping(&self) -> Mapping {
+        let mut m = Mapping { levels: Vec::new() };
+        self.decode_into(&mut m);
+        m
+    }
+
+    /// Copy into a fresh owned code.
+    pub fn to_owned_code(&self) -> PackedMapping {
+        PackedMapping {
+            nlevels: self.nlevels,
+            ndims: self.ndims,
+            tiles: self.tiles.to_vec(),
+            perms: self.perms.to_vec(),
+            fingerprint: self.fingerprint,
+        }
+    }
+}
+
+/// A mutable view of one code slot being written (inside a
+/// [`PackedBatch`] or an owned [`PackedMapping`]). The producer fills
+/// tiles and perms; the owner recomputes the fingerprint on commit.
+pub struct PackedSlot<'a> {
+    pub(crate) nlevels: usize,
+    pub(crate) ndims: usize,
+    pub(crate) tiles: &'a mut [u64],
+    pub(crate) perms: &'a mut [u8],
+}
+
+impl<'a> PackedSlot<'a> {
+    pub fn nlevels(&self) -> usize {
+        self.nlevels
+    }
+
+    pub fn ndims(&self) -> usize {
+        self.ndims
+    }
+
+    /// Set the TT value of (level, dim).
+    #[inline]
+    pub fn set_tt(&mut self, level: usize, dim: usize, v: u64) {
+        self.tiles[level * 2 * self.ndims + dim] = v;
+    }
+
+    /// Set the ST value of (level, dim).
+    #[inline]
+    pub fn set_st(&mut self, level: usize, dim: usize, v: u64) {
+        self.tiles[level * 2 * self.ndims + self.ndims + dim] = v;
+    }
+
+    #[inline]
+    pub fn tt_at(&self, level: usize, dim: usize) -> u64 {
+        self.tiles[level * 2 * self.ndims + dim]
+    }
+
+    #[inline]
+    pub fn st_at(&self, level: usize, dim: usize) -> u64 {
+        self.tiles[level * 2 * self.ndims + self.ndims + dim]
+    }
+
+    /// Write a chain value at flat chain position `pos` (`2·level +
+    /// spatial`) for `dim` — matches the sampler's `[TT0, ST0, TT1, …]`
+    /// walk.
+    #[inline]
+    pub fn set_chain(&mut self, pos: usize, dim: usize, v: u64) {
+        let level = pos / 2;
+        let spatial = pos % 2;
+        self.tiles[level * 2 * self.ndims + spatial * self.ndims + dim] = v;
+    }
+
+    /// Mutable temporal order of `level`.
+    #[inline]
+    pub fn order_mut(&mut self, level: usize) -> &mut [u8] {
+        &mut self.perms[level * self.ndims..(level + 1) * self.ndims]
+    }
+
+    /// Overwrite this slot with an existing code of the same shape.
+    pub fn copy_from(&mut self, r: PackedRef) {
+        debug_assert_eq!(self.nlevels, r.nlevels);
+        debug_assert_eq!(self.ndims, r.ndims);
+        self.tiles.copy_from_slice(r.tiles);
+        self.perms.copy_from_slice(r.perms);
+    }
+
+    /// Encode a `Mapping` of the same shape into this slot.
+    pub fn encode(&mut self, m: &Mapping) {
+        debug_assert_eq!(m.levels.len(), self.nlevels);
+        for (l, lvl) in m.levels.iter().enumerate() {
+            debug_assert_eq!(lvl.temporal_tile.len(), self.ndims);
+            for d in 0..self.ndims {
+                self.set_tt(l, d, lvl.temporal_tile[d]);
+                self.set_st(l, d, lvl.spatial_tile[d]);
+            }
+            for (pos, &dim) in lvl.temporal_order.iter().enumerate() {
+                debug_assert!(dim < MAX_PACKED_DIMS);
+                self.perms[l * self.ndims + pos] = dim as u8;
+            }
+        }
+    }
+}
+
+/// An owned packed mapping code (fixed shape, reusable buffers).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedMapping {
+    nlevels: usize,
+    ndims: usize,
+    tiles: Vec<u64>,
+    perms: Vec<u8>,
+    fingerprint: u64,
+}
+
+impl PackedMapping {
+    /// A zeroed code of the given shape.
+    pub fn zeroed(nlevels: usize, ndims: usize) -> PackedMapping {
+        assert!(ndims <= MAX_PACKED_DIMS, "problem has too many dims to pack");
+        PackedMapping {
+            nlevels,
+            ndims,
+            tiles: vec![0; 2 * nlevels * ndims],
+            perms: vec![0; nlevels * ndims],
+            fingerprint: 0,
+        }
+    }
+
+    /// Encode a `Mapping` into a fresh code.
+    pub fn encode(m: &Mapping) -> PackedMapping {
+        let nlevels = m.levels.len();
+        let ndims = m.levels.first().map(|l| l.temporal_tile.len()).unwrap_or(0);
+        let mut pm = PackedMapping::zeroed(nlevels, ndims);
+        pm.as_slot().encode(m);
+        pm.refresh_fingerprint();
+        pm
+    }
+
+    pub fn as_ref(&self) -> PackedRef<'_> {
+        PackedRef {
+            nlevels: self.nlevels,
+            ndims: self.ndims,
+            tiles: &self.tiles,
+            perms: &self.perms,
+            fingerprint: self.fingerprint,
+        }
+    }
+
+    /// Mutable slot view over this code's buffers. Call
+    /// [`PackedMapping::refresh_fingerprint`] after writing.
+    pub fn as_slot(&mut self) -> PackedSlot<'_> {
+        PackedSlot {
+            nlevels: self.nlevels,
+            ndims: self.ndims,
+            tiles: &mut self.tiles,
+            perms: &mut self.perms,
+        }
+    }
+
+    pub fn refresh_fingerprint(&mut self) {
+        self.fingerprint = fingerprint_of(self.nlevels, self.ndims, &self.tiles, &self.perms);
+    }
+
+    /// Copy another code into this one, reusing the buffers (reshapes
+    /// if the source has a different stride).
+    pub fn copy_from(&mut self, r: PackedRef) {
+        self.nlevels = r.nlevels;
+        self.ndims = r.ndims;
+        self.tiles.clear();
+        self.tiles.extend_from_slice(r.tiles);
+        self.perms.clear();
+        self.perms.extend_from_slice(r.perms);
+        self.fingerprint = r.fingerprint;
+    }
+
+    pub fn to_mapping(&self) -> Mapping {
+        self.as_ref().to_mapping()
+    }
+}
+
+/// A flat arena of packed candidate codes, all sharing one shape. The
+/// engine reuses two of these (current + previous batch) across its
+/// whole run, and sources fill slots in place — steady-state candidate
+/// generation performs no heap allocation once capacities are warm.
+#[derive(Debug, Default)]
+pub struct PackedBatch {
+    nlevels: usize,
+    ndims: usize,
+    len: usize,
+    tiles: Vec<u64>,
+    perms: Vec<u8>,
+    fingerprints: Vec<u64>,
+}
+
+impl PackedBatch {
+    pub fn new() -> PackedBatch {
+        PackedBatch::default()
+    }
+
+    /// Reset for a new batch of the given shape: clears the length but
+    /// keeps every buffer's capacity.
+    pub fn reset(&mut self, nlevels: usize, ndims: usize) {
+        assert!(ndims <= MAX_PACKED_DIMS, "problem has too many dims to pack");
+        self.nlevels = nlevels;
+        self.ndims = ndims;
+        self.len = 0;
+        self.tiles.clear();
+        self.perms.clear();
+        self.fingerprints.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn tile_stride(&self) -> usize {
+        2 * self.nlevels * self.ndims
+    }
+
+    fn perm_stride(&self) -> usize {
+        self.nlevels * self.ndims
+    }
+
+    /// Borrow slot `i`.
+    pub fn get(&self, i: usize) -> PackedRef<'_> {
+        debug_assert!(i < self.len);
+        let (ts, ps) = (self.tile_stride(), self.perm_stride());
+        PackedRef {
+            nlevels: self.nlevels,
+            ndims: self.ndims,
+            tiles: &self.tiles[i * ts..(i + 1) * ts],
+            perms: &self.perms[i * ps..(i + 1) * ps],
+            fingerprint: self.fingerprints[i],
+        }
+    }
+
+    /// Append one slot, let `f` fill it, then fingerprint it.
+    pub fn push_with<F: FnOnce(&mut PackedSlot)>(&mut self, f: F) {
+        let (ts, ps) = (self.tile_stride(), self.perm_stride());
+        let i = self.len;
+        self.tiles.resize((i + 1) * ts, 0);
+        self.perms.resize((i + 1) * ps, 0);
+        let mut slot = PackedSlot {
+            nlevels: self.nlevels,
+            ndims: self.ndims,
+            tiles: &mut self.tiles[i * ts..(i + 1) * ts],
+            perms: &mut self.perms[i * ps..(i + 1) * ps],
+        };
+        f(&mut slot);
+        let fp = fingerprint_of(
+            self.nlevels,
+            self.ndims,
+            &self.tiles[i * ts..(i + 1) * ts],
+            &self.perms[i * ps..(i + 1) * ps],
+        );
+        self.fingerprints.push(fp);
+        self.len = i + 1;
+    }
+
+    /// Append a copy of an existing code.
+    pub fn push_ref(&mut self, r: PackedRef) {
+        debug_assert_eq!(r.nlevels, self.nlevels);
+        debug_assert_eq!(r.ndims, self.ndims);
+        let i = self.len;
+        self.tiles.extend_from_slice(r.tiles);
+        self.perms.extend_from_slice(r.perms);
+        self.fingerprints.push(r.fingerprint);
+        self.len = i + 1;
+    }
+
+    /// Encode and append a `Mapping`. Returns `false` (and appends
+    /// nothing) when its shape does not match the batch stride — the
+    /// caller decides whether that is a rejection or an error.
+    pub fn push_mapping(&mut self, m: &Mapping) -> bool {
+        if m.levels.len() != self.nlevels
+            || m.levels.iter().any(|l| {
+                l.temporal_tile.len() != self.ndims
+                    || l.spatial_tile.len() != self.ndims
+                    || l.temporal_order.len() != self.ndims
+                    || l.temporal_order.iter().any(|&d| d >= MAX_PACKED_DIMS)
+            })
+        {
+            return false;
+        }
+        self.push_with(|slot| slot.encode(m));
+        true
+    }
+
+    /// Resize to exactly `n` zeroed slots and fill them in parallel:
+    /// `f(i, slot)` runs for every slot over `threads` workers (chunked,
+    /// order-preserving — the same determinism contract as
+    /// [`crate::util::par::par_map_with`]). Fingerprints are computed
+    /// in the worker after `f` returns.
+    pub fn fill_par<F>(&mut self, n: usize, threads: usize, f: F)
+    where
+        F: Fn(usize, &mut PackedSlot) + Sync,
+    {
+        let (ts, ps) = (self.tile_stride(), self.perm_stride());
+        self.len = n;
+        self.tiles.clear();
+        self.tiles.resize(n * ts, 0);
+        self.perms.clear();
+        self.perms.resize(n * ps, 0);
+        self.fingerprints.clear();
+        self.fingerprints.resize(n, 0);
+        if n == 0 {
+            return;
+        }
+        let threads = threads.max(1).min(n);
+        let (nlevels, ndims) = (self.nlevels, self.ndims);
+        let fill_chunk = |start: usize, tiles: &mut [u64], perms: &mut [u8], fps: &mut [u64]| {
+            for (k, fp_out) in fps.iter_mut().enumerate() {
+                let mut slot = PackedSlot {
+                    nlevels,
+                    ndims,
+                    tiles: &mut tiles[k * ts..(k + 1) * ts],
+                    perms: &mut perms[k * ps..(k + 1) * ps],
+                };
+                f(start + k, &mut slot);
+                *fp_out = fingerprint_of(
+                    nlevels,
+                    ndims,
+                    &tiles[k * ts..(k + 1) * ts],
+                    &perms[k * ps..(k + 1) * ps],
+                );
+            }
+        };
+        if threads <= 1 {
+            fill_chunk(0, &mut self.tiles, &mut self.perms, &mut self.fingerprints);
+            return;
+        }
+        let chunk = n.div_ceil(threads);
+        let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
+        std::thread::scope(|scope| {
+            let fill_chunk = &fill_chunk;
+            let mut t_rest: &mut [u64] = &mut self.tiles;
+            let mut p_rest: &mut [u8] = &mut self.perms;
+            let mut f_rest: &mut [u64] = &mut self.fingerprints;
+            let mut start = 0usize;
+            let mut handles = Vec::new();
+            while start < n {
+                let take = chunk.min(n - start);
+                let (t_chunk, t_tail) = t_rest.split_at_mut(take * ts);
+                let (p_chunk, p_tail) = p_rest.split_at_mut(take * ps);
+                let (f_chunk, f_tail) = f_rest.split_at_mut(take);
+                t_rest = t_tail;
+                p_rest = p_tail;
+                f_rest = f_tail;
+                let s = start;
+                handles.push(scope.spawn(move || fill_chunk(s, t_chunk, p_chunk, f_chunk)));
+                start += take;
+            }
+            for h in handles {
+                if let Err(payload) = h.join() {
+                    panic_payload.get_or_insert(payload);
+                }
+            }
+        });
+        if let Some(payload) = panic_payload {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::problem::gemm;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let mut m = Mapping::sequential(&p, &a);
+        m.levels[1].temporal_order = vec![2, 0, 1];
+        let pm = PackedMapping::encode(&m);
+        assert_eq!(pm.to_mapping(), m);
+        // round-trip preserves the fingerprint
+        let pm2 = PackedMapping::encode(&pm.to_mapping());
+        assert_eq!(pm.as_ref().fingerprint(), pm2.as_ref().fingerprint());
+        assert!(pm.as_ref().code_eq(&pm2.as_ref()));
+    }
+
+    #[test]
+    fn tt_slices_are_contiguous_per_level() {
+        let p = gemm(8, 4, 2);
+        let a = presets::fig5_toy();
+        let m = Mapping::sequential(&p, &a);
+        let pm = PackedMapping::encode(&m);
+        let r = pm.as_ref();
+        for (l, lvl) in m.levels.iter().enumerate() {
+            assert_eq!(r.tt(l), &lvl.temporal_tile[..]);
+            assert_eq!(r.st(l), &lvl.spatial_tile[..]);
+        }
+        assert_eq!(r.pes_used(), m.pes_used());
+    }
+
+    #[test]
+    fn batch_push_and_get() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let m = Mapping::sequential(&p, &a);
+        let mut b = PackedBatch::new();
+        b.reset(a.depth(), p.dims.len());
+        assert!(b.push_mapping(&m));
+        b.push_with(|slot| slot.encode(&m));
+        assert_eq!(b.len(), 2);
+        assert!(b.get(0).code_eq(&b.get(1)));
+        assert_eq!(b.get(0).to_mapping(), m);
+        // wrong-shaped mapping is refused, not mangled
+        let mut wrong = m.clone();
+        wrong.levels.pop();
+        assert!(!b.push_mapping(&wrong));
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn code_words_match_interned_form() {
+        let p = gemm(8, 8, 8);
+        let a = presets::fig5_toy();
+        let m = Mapping::sequential(&p, &a);
+        let pm = PackedMapping::encode(&m);
+        let r = pm.as_ref();
+        let mut words = Vec::new();
+        r.write_code(&mut words);
+        assert_eq!(words.len(), PackedRef::code_words(r.nlevels(), r.ndims()));
+        assert!(r.code_matches(&words));
+        let mut other = pm.clone();
+        other.as_slot().set_tt(1, 0, 999);
+        other.refresh_fingerprint();
+        assert!(!other.as_ref().code_matches(&words));
+    }
+
+    #[test]
+    fn fill_par_matches_sequential() {
+        let mut seq = PackedBatch::new();
+        let mut par = PackedBatch::new();
+        seq.reset(3, 4);
+        par.reset(3, 4);
+        let fill = |i: usize, slot: &mut PackedSlot| {
+            for l in 0..3 {
+                for d in 0..4 {
+                    slot.set_tt(l, d, (i * 100 + l * 10 + d) as u64 + 1);
+                    slot.set_st(l, d, 1);
+                }
+                for (pos, b) in slot.order_mut(l).iter_mut().enumerate() {
+                    *b = pos as u8;
+                }
+            }
+        };
+        seq.fill_par(100, 1, fill);
+        par.fill_par(100, 7, fill);
+        assert_eq!(seq.len(), par.len());
+        for i in 0..100 {
+            assert!(seq.get(i).code_eq(&par.get(i)));
+        }
+    }
+}

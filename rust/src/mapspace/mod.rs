@@ -23,7 +23,7 @@ mod constraints;
 pub use constraints::{constraints_from_str, constraints_to_str, Constraints};
 
 use crate::arch::Arch;
-use crate::mapping::{LevelMapping, Mapping};
+use crate::mapping::{LevelMapping, Mapping, PackedMapping, PackedRef, PackedSlot};
 use crate::problem::Problem;
 use crate::util::divisors::divisors;
 use crate::util::rng::Rng;
@@ -204,9 +204,11 @@ impl<'a> MapSpace<'a> {
     }
 
     /// Post-filters from the constraint file: legality + utilization band
-    /// + per-level parallel-dim limit.
+    /// + per-level parallel-dim limit. Allocation-free (the legality
+    /// rules run through [`Mapping::is_legal`]) — this is the per-
+    /// candidate filter of the engine's evaluation workers.
     pub fn admits(&self, m: &Mapping) -> bool {
-        if m.check(self.problem, self.arch).is_err() {
+        if !m.is_legal(self.problem, self.arch) {
             return false;
         }
         if let Some(limit) = self.constraints.max_parallel_dims_per_level {
@@ -291,6 +293,24 @@ impl<'a> MapSpace<'a> {
             .product()
     }
 
+    /// The packed-code shape of this space: `(levels, dims)`. Every
+    /// [`PackedBatch`](crate::mapping::PackedBatch) the engine uses for
+    /// this space is `reset` to this shape.
+    pub fn packed_shape(&self) -> (usize, usize) {
+        (self.nlevels(), self.ndims())
+    }
+
+    /// Encode a mapping into a fresh packed code.
+    pub fn encode(&self, m: &Mapping) -> PackedMapping {
+        PackedMapping::encode(m)
+    }
+
+    /// Decode a packed code back into a `Mapping` (lossless inverse of
+    /// [`MapSpace::encode`]).
+    pub fn decode(&self, r: PackedRef) -> Mapping {
+        r.to_mapping()
+    }
+
     /// Draw a random candidate mapping (structurally valid chain; overall
     /// legality still subject to [`MapSpace::admits`]).
     pub fn sample(&self, rng: &mut Rng) -> Mapping {
@@ -302,9 +322,29 @@ impl<'a> MapSpace<'a> {
     /// instead of drawing uniformly. Utilization-seeking mappers
     /// (heuristic, genetic seeding) use `greedy ≈ 0.5–0.8` to reach the
     /// high-parallelism corner of the space quickly.
+    ///
+    /// Allocating wrapper over [`MapSpace::sample_with_bias_into`] — the
+    /// engine hot path writes packed slots directly.
     pub fn sample_with_bias(&self, rng: &mut Rng, greedy: f64) -> Mapping {
+        let mut pm = PackedMapping::zeroed(self.nlevels(), self.ndims());
+        self.sample_with_bias_into(rng, greedy, &mut pm.as_slot());
+        pm.to_mapping()
+    }
+
+    /// Packed-native uniform sample: fill `slot` in place with a
+    /// structurally valid candidate, allocating nothing (unless a
+    /// `max_parallel_dims_per_level` constraint forces the per-level
+    /// parallel-dim pre-draw).
+    pub fn sample_into(&self, rng: &mut Rng, slot: &mut PackedSlot) {
+        self.sample_with_bias_into(rng, 0.0, slot);
+    }
+
+    /// Packed-native biased sample — see [`MapSpace::sample_with_bias`].
+    pub fn sample_with_bias_into(&self, rng: &mut Rng, greedy: f64, slot: &mut PackedSlot) {
         let nd = self.ndims();
         let nl = self.nlevels();
+        debug_assert_eq!(slot.ndims(), nd);
+        debug_assert_eq!(slot.nlevels(), nl);
         // under a per-level parallel-dim limit, pre-draw which dims may
         // fan out at each level so samples land inside the constraint
         let spatial_ok: Option<Vec<Vec<bool>>> =
@@ -321,76 +361,96 @@ impl<'a> MapSpace<'a> {
                     })
                     .collect()
             });
-        let mut chains: Vec<Vec<u64>> = Vec::with_capacity(nd);
         for d in 0..nd {
-            let mut chain = Vec::with_capacity(self.chain_len());
-            chain.push(self.problem.dims[d].size);
-            while chain.len() < self.chain_len() {
-                let prev = *chain.last().unwrap();
-                let pos = chain.len();
-                let level = pos / 2;
-                let is_spatial = pos % 2 == 1;
-                // allocation-free selection (hot path, §Perf iteration 4):
-                // count legal options, then walk to the chosen one.
-                // divisors are sorted ascending, so the first legal
-                // option is the smallest ST = the largest fan-out.
-                let legal = |t: u64| -> bool {
-                    if t > prev || prev % t != 0 {
-                        return false;
-                    }
-                    if is_spatial {
-                        let fanout = prev / t;
-                        if fanout > 1 {
-                            if !self.may_parallelize(d)
-                                || fanout > self.arch.levels[level].sub_clusters
-                            {
+            self.sample_dim_chain_into(d, rng, greedy, spatial_ok.as_deref(), slot);
+        }
+        for l in 0..nl {
+            self.draw_order_into(l, rng, slot);
+        }
+    }
+
+    /// Draw one dimension's divisor chain directly into `slot`.
+    fn sample_dim_chain_into(
+        &self,
+        d: usize,
+        rng: &mut Rng,
+        greedy: f64,
+        spatial_ok: Option<&[Vec<bool>]>,
+        slot: &mut PackedSlot,
+    ) {
+        let mut prev = self.problem.dims[d].size;
+        slot.set_chain(0, d, prev);
+        for pos in 1..self.chain_len() {
+            let level = pos / 2;
+            let is_spatial = pos % 2 == 1;
+            // allocation-free selection (hot path, §Perf iteration 4):
+            // count legal options, then walk to the chosen one.
+            // divisors are sorted ascending, so the first legal
+            // option is the smallest ST = the largest fan-out.
+            let legal = |t: u64| -> bool {
+                if t > prev || prev % t != 0 {
+                    return false;
+                }
+                if is_spatial {
+                    let fanout = prev / t;
+                    if fanout > 1 {
+                        if !self.may_parallelize(d)
+                            || fanout > self.arch.levels[level].sub_clusters
+                        {
+                            return false;
+                        }
+                        if let Some(ok) = spatial_ok {
+                            if !ok[level][d] {
                                 return false;
-                            }
-                            if let Some(ok) = &spatial_ok {
-                                if !ok[level][d] {
-                                    return false;
-                                }
                             }
                         }
                     }
-                    true
-                };
-                let count = self.dim_divisors[d].iter().filter(|&&t| legal(t)).count();
-                debug_assert!(count > 0, "prev itself is always a legal choice");
-                let want = if is_spatial && greedy > 0.0 && rng.chance(greedy) {
-                    0
-                } else {
-                    rng.below(count)
-                };
-                let pick = self.dim_divisors[d]
-                    .iter()
-                    .copied()
-                    .filter(|&t| legal(t))
-                    .nth(want)
-                    .expect("indexed within count");
-                chain.push(pick);
-            }
-            chains.push(chain);
-        }
-        let orders: Vec<Vec<usize>> = (0..nl)
-            .map(|l| {
-                // avoid the shuffle+clone double allocation when the
-                // level's order is pinned by the constraint file
-                if let Some(names) = self.constraints.fixed_order_for(l) {
-                    let fixed: Vec<usize> = names
-                        .iter()
-                        .filter_map(|n| self.problem.dim_index(n))
-                        .collect();
-                    if fixed.len() == nd {
-                        return fixed;
-                    }
                 }
-                let mut o: Vec<usize> = (0..nd).collect();
-                rng.shuffle(&mut o);
-                o
-            })
-            .collect();
-        self.mapping_from_chains(&chains, &orders)
+                true
+            };
+            let count = self.dim_divisors[d].iter().filter(|&&t| legal(t)).count();
+            debug_assert!(count > 0, "prev itself is always a legal choice");
+            let want = if is_spatial && greedy > 0.0 && rng.chance(greedy) {
+                0
+            } else {
+                rng.below(count)
+            };
+            let pick = self.dim_divisors[d]
+                .iter()
+                .copied()
+                .filter(|&t| legal(t))
+                .nth(want)
+                .expect("indexed within count");
+            slot.set_chain(pos, d, pick);
+            prev = pick;
+        }
+    }
+
+    /// Write level `l`'s temporal order into `slot`: the constraint
+    /// file's fixed order when it names every dim, a uniform shuffle
+    /// otherwise. No heap allocation either way.
+    fn draw_order_into(&self, l: usize, rng: &mut Rng, slot: &mut PackedSlot) {
+        let nd = self.ndims();
+        if let Some(names) = self.constraints.fixed_order_for(l) {
+            let order = slot.order_mut(l);
+            let mut wrote = 0usize;
+            for n in names {
+                if let Some(d) = self.problem.dim_index(n) {
+                    if wrote < nd {
+                        order[wrote] = d as u8;
+                    }
+                    wrote += 1;
+                }
+            }
+            if wrote == nd {
+                return;
+            }
+        }
+        let order = slot.order_mut(l);
+        for (pos, b) in order.iter_mut().enumerate() {
+            *b = pos as u8;
+        }
+        rng.shuffle(order);
     }
 
     /// Draw until a mapping passes [`MapSpace::admits`], up to `tries`.
@@ -406,42 +466,84 @@ impl<'a> MapSpace<'a> {
 
     /// Locally perturb a mapping: re-draw one dimension's chain or shuffle
     /// one level's order. Used by the genetic mapper's mutation operator.
+    ///
+    /// Allocating wrapper over [`MapSpace::mutate_into`].
     pub fn mutate(&self, m: &Mapping, rng: &mut Rng) -> Mapping {
-        let mut out = m.clone();
+        let base = self.encode(m);
+        let mut out = PackedMapping::zeroed(self.nlevels(), self.ndims());
+        self.mutate_into(base.as_ref(), rng, &mut out.as_slot());
+        out.to_mapping()
+    }
+
+    /// Packed-native mutation: copy `base` into `slot`, then either
+    /// re-draw one dimension's divisor chain in place or swap two dims
+    /// in one level's temporal order. Allocation-free unless a
+    /// `max_parallel_dims_per_level` constraint forces the same
+    /// per-level parallel-dim pre-draw fresh samples perform.
+    pub fn mutate_into(&self, base: PackedRef, rng: &mut Rng, slot: &mut PackedSlot) {
+        slot.copy_from(base);
         let nd = self.ndims();
         if rng.chance(0.5) {
-            // re-draw one dim's chain from a fresh sample
-            let fresh = self.sample(rng);
+            // re-draw one dim's chain under the same constraint pre-draw
+            // as a fresh sample (remaining legality is the engine's
+            // admits pass, exactly as for fresh samples)
+            let spatial_ok: Option<Vec<Vec<bool>>> =
+                self.constraints.max_parallel_dims_per_level.map(|limit| {
+                    (0..self.nlevels())
+                        .map(|_| {
+                            let mut dims: Vec<usize> = (0..nd).collect();
+                            rng.shuffle(&mut dims);
+                            let mut ok = vec![false; nd];
+                            for &d in dims.iter().take(limit) {
+                                ok[d] = true;
+                            }
+                            ok
+                        })
+                        .collect()
+                });
             let d = rng.below(nd);
-            for (lvl, fresh_lvl) in out.levels.iter_mut().zip(&fresh.levels) {
-                lvl.temporal_tile[d] = fresh_lvl.temporal_tile[d];
-                lvl.spatial_tile[d] = fresh_lvl.spatial_tile[d];
-            }
+            self.sample_dim_chain_into(d, rng, 0.0, spatial_ok.as_deref(), slot);
         } else {
             // swap two dims in one level's temporal order
-            let l = rng.below(out.levels.len());
+            let l = rng.below(self.nlevels());
             if self.constraints.fixed_order_for(l).is_none() && nd >= 2 {
                 let i = rng.below(nd);
                 let j = rng.below(nd);
-                out.levels[l].temporal_order.swap(i, j);
+                slot.order_mut(l).swap(i, j);
             }
         }
-        out
     }
 
     /// Crossover two parents dimension-wise (GAMMA-style): the child takes
     /// each dim's divisor chain from one parent or the other.
+    ///
+    /// Allocating wrapper over [`MapSpace::crossover_into`].
     pub fn crossover(&self, a: &Mapping, b: &Mapping, rng: &mut Rng) -> Mapping {
-        let mut child = a.clone();
+        let (pa, pb) = (self.encode(a), self.encode(b));
+        let mut out = PackedMapping::zeroed(self.nlevels(), self.ndims());
+        self.crossover_into(pa.as_ref(), pb.as_ref(), rng, &mut out.as_slot());
+        out.to_mapping()
+    }
+
+    /// Packed-native crossover: `slot` starts as a copy of `a` (tiles
+    /// and orders) and takes each dim's whole divisor chain from `b`
+    /// with probability ½. Allocation-free.
+    pub fn crossover_into(
+        &self,
+        a: PackedRef,
+        b: PackedRef,
+        rng: &mut Rng,
+        slot: &mut PackedSlot,
+    ) {
+        slot.copy_from(a);
         for d in 0..self.ndims() {
             if rng.chance(0.5) {
-                for (cl, bl) in child.levels.iter_mut().zip(&b.levels) {
-                    cl.temporal_tile[d] = bl.temporal_tile[d];
-                    cl.spatial_tile[d] = bl.spatial_tile[d];
+                for l in 0..self.nlevels() {
+                    slot.set_tt(l, d, b.tt(l)[d]);
+                    slot.set_st(l, d, b.st(l)[d]);
                 }
             }
         }
-        child
     }
 }
 

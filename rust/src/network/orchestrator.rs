@@ -208,7 +208,8 @@ impl NetworkResult {
         format!(
             "network {}: {} layers in {} nodes -> {} distinct search jobs ({:.1}% layer reuse{warm})\n\
              end-to-end: cycles={:.3e}  latency={:.3e}s  energy={:.3e}J  EDP={:.3e}Js\n\
-             engine: proposed={} scored={} cost-evals={} memo-hits={} pruned={} rejected={}",
+             engine: proposed={} scored={} cost-evals={} memo-hits={} pruned={} rejected={}\n\
+             caches: eval-memo {:.1}% hit ({}/{}), footprint-memo {:.1}% hit ({}/{})",
             self.network,
             s.layers,
             s.nodes,
@@ -224,6 +225,12 @@ impl NetworkResult {
             s.engine.memo_hits,
             s.engine.pruned,
             s.engine.rejected,
+            100.0 * s.engine.memo_hit_rate(),
+            s.engine.memo_hits,
+            s.engine.memo_hits + s.engine.memo_misses,
+            100.0 * s.engine.footprint_hit_rate(),
+            s.engine.footprint_hits,
+            s.engine.footprint_hits + s.engine.footprint_misses,
         )
     }
 }
@@ -462,19 +469,22 @@ impl CandidateSource for LegalSeedSource {
         true
     }
 
-    fn next_batch(&mut self, space: &MapSpace, _progress: &Progress) -> Option<Vec<Mapping>> {
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        _progress: &Progress,
+        out: &mut crate::mapping::PackedBatch,
+    ) -> bool {
         if self.done {
-            return None;
+            return false;
         }
         self.done = true;
-        let batch: Vec<Mapping> = (0..self.want)
-            .filter_map(|_| space.sample_legal(&mut self.rng, self.tries))
-            .collect();
-        if batch.is_empty() {
-            None
-        } else {
-            Some(batch)
+        for _ in 0..self.want {
+            if let Some(m) = space.sample_legal(&mut self.rng, self.tries) {
+                out.push_mapping(&m);
+            }
         }
+        !out.is_empty()
     }
 }
 

@@ -1,0 +1,111 @@
+//! Tiny non-cryptographic hashers for the search-engine memo tables.
+//!
+//! The default `SipHash` is DoS-resistant but costs tens of nanoseconds
+//! per lookup — measurable when the footprint memo is consulted for
+//! every level of every candidate. These hashers trade resistance
+//! (irrelevant: keys are tile vectors and precomputed fingerprints, not
+//! attacker-controlled strings) for a few-cycle hash.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FNV-1a folding 8 bytes at a time — for slice-of-`u64` keys (the
+/// footprint memo's per-level temporal-tile vectors).
+#[derive(Default)]
+pub struct Fnv64(u64);
+
+impl Hasher for Fnv64 {
+    fn finish(&self) -> u64 {
+        // final avalanche so low-entropy tile values spread across
+        // HashMap buckets (which use the low bits)
+        let mut h = self.0;
+        h ^= h >> 33;
+        h = h.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+        h ^= h >> 33;
+        h
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        const PRIME: u64 = 0x0000_0100_0000_01B3;
+        let mut h = if self.0 == 0 { 0xCBF2_9CE4_8422_2325 } else { self.0 };
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            h ^= u64::from_le_bytes(c.try_into().expect("exact chunk"));
+            h = h.wrapping_mul(PRIME);
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut w = 0u64;
+            for (i, &b) in rem.iter().enumerate() {
+                w |= (b as u64) << (8 * i);
+            }
+            h ^= w;
+            h = h.wrapping_mul(PRIME);
+        }
+        self.0 = h;
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+}
+
+/// `BuildHasher` for [`Fnv64`].
+pub type BuildFnv = BuildHasherDefault<Fnv64>;
+
+/// Identity hasher for keys that are *already* well-mixed 64-bit
+/// fingerprints (the evaluation memo): hashing them again is pure waste.
+#[derive(Default)]
+pub struct Identity64(u64);
+
+impl Hasher for Identity64 {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        // generic fallback (only u64 keys are expected): fold via FNV
+        let mut f = Fnv64(self.0);
+        f.write(bytes);
+        self.0 = f.finish();
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.0 = v;
+    }
+}
+
+/// `BuildHasher` for [`Identity64`].
+pub type BuildIdentity = BuildHasherDefault<Identity64>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn fnv_map_roundtrip() {
+        let mut m: HashMap<Vec<u64>, u32, BuildFnv> = HashMap::default();
+        for i in 0..100u64 {
+            m.insert(vec![i, i * 3, 7], i as u32);
+        }
+        for i in 0..100u64 {
+            assert_eq!(m.get([i, i * 3, 7].as_slice()), Some(&(i as u32)));
+        }
+        assert_eq!(m.get([1u64, 2, 3].as_slice()), None);
+    }
+
+    #[test]
+    fn identity_map_roundtrip() {
+        let mut m: HashMap<u64, u32, BuildIdentity> = HashMap::default();
+        for i in 0..100u64 {
+            m.insert(i.wrapping_mul(0x9E37_79B9_7F4A_7C15), i as u32);
+        }
+        for i in 0..100u64 {
+            assert_eq!(m.get(&i.wrapping_mul(0x9E37_79B9_7F4A_7C15)), Some(&(i as u32)));
+        }
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod divisors;
+pub mod hash;
 pub mod par;
 pub mod quickcheck;
 pub mod rng;

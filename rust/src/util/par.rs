@@ -87,6 +87,80 @@ where
     out.into_iter().map(|o| o.expect("par_map slot unfilled")).collect()
 }
 
+/// Order-preserving parallel map with **per-worker mutable state** and a
+/// caller-provided output buffer: `f(state, item)` runs with one `S` per
+/// worker (disjoint chunks, so no locking), and results land in `out`
+/// (cleared, then resized — steady-state callers reuse the buffer, so
+/// the call allocates nothing once capacities are warm).
+///
+/// `states` must hold at least one element; at most `states.len()`
+/// workers run. The engine threads one tile-analysis scratch per worker
+/// through its evaluation pass this way. Same determinism contract as
+/// [`par_map_with`]: chunking only partitions the index space, each
+/// output slot is written exactly once, results are independent of the
+/// worker count (state is scratch, never carried between items in a way
+/// that affects values).
+pub fn par_map_with_state<T, U, S, F>(
+    items: &[T],
+    threads: usize,
+    states: &mut [S],
+    out: &mut Vec<U>,
+    f: F,
+) where
+    T: Sync,
+    U: Send + Default,
+    S: Send,
+    F: Fn(&mut S, &T) -> U + Sync,
+{
+    let n = items.len();
+    assert!(!states.is_empty(), "par_map_with_state needs at least one state");
+    let threads = threads.max(1).min(states.len()).min(n.max(1));
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    if threads <= 1 {
+        let s = &mut states[0];
+        out.extend(items.iter().map(|item| f(s, item)));
+        return;
+    }
+    out.resize_with(n, U::default);
+
+    let chunk = n.div_ceil(threads);
+    let mut panic_payload: Option<Box<dyn std::any::Any + Send>> = None;
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut in_rest: &[T] = items;
+        let mut out_rest: &mut [U] = out;
+        let mut state_rest: &mut [S] = states;
+        let mut handles = Vec::new();
+        while !in_rest.is_empty() {
+            let take = chunk.min(in_rest.len());
+            let (in_chunk, in_tail) = in_rest.split_at(take);
+            let (out_chunk, out_tail) = out_rest.split_at_mut(take);
+            let (state, state_tail) = state_rest
+                .split_first_mut()
+                .expect("one state per spawned chunk");
+            in_rest = in_tail;
+            out_rest = out_tail;
+            state_rest = state_tail;
+            handles.push(scope.spawn(move || {
+                for (slot, item) in out_chunk.iter_mut().zip(in_chunk) {
+                    *slot = f(state, item);
+                }
+            }));
+        }
+        for h in handles {
+            if let Err(payload) = h.join() {
+                panic_payload.get_or_insert(payload);
+            }
+        }
+    });
+    if let Some(payload) = panic_payload {
+        std::panic::resume_unwind(payload);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +193,25 @@ mod tests {
         let one = par_map_with(v.clone(), 1, |x| x * 3 + 1);
         let many = par_map_with(v, 8, |x| x * 3 + 1);
         assert_eq!(one, many);
+    }
+
+    #[test]
+    fn with_state_matches_plain_map_and_reuses_buffers() {
+        let v: Vec<u64> = (0..5_000).collect();
+        let mut states = vec![0u64; 8]; // per-worker accumulators
+        let mut out: Vec<u64> = Vec::new();
+        par_map_with_state(&v, 8, &mut states, &mut out, |s, &x| {
+            *s += 1; // scratch mutation must not affect results
+            x * 3 + 1
+        });
+        assert_eq!(out, v.iter().map(|x| x * 3 + 1).collect::<Vec<_>>());
+        assert_eq!(states.iter().sum::<u64>(), 5_000, "every item visited once");
+        // sequential path with one state, reusing the output buffer
+        let cap = out.capacity();
+        let mut one = vec![0u64];
+        par_map_with_state(&v, 1, &mut one, &mut out, |_, &x| x * 3 + 1);
+        assert_eq!(out.len(), 5_000);
+        assert!(out.capacity() >= cap, "buffer must be reused, not shrunk");
     }
 
     #[test]

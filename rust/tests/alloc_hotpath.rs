@@ -1,0 +1,126 @@
+//! Zero-allocation contract of the steady-state evaluate loop.
+//!
+//! A counting global allocator wraps `System` and tallies every
+//! `alloc`/`realloc`. After a warm-up pass over a fixed GEMM batch, a
+//! repeat of the same batch must perform **zero heap allocations**:
+//!
+//! * with memoization on, every candidate resolves from the interned
+//!   evaluation memo (fingerprint lookup, no key construction);
+//! * with memoization off, every candidate re-runs the full pipeline —
+//!   packed decode into a reused `Mapping`, legality via the bitmask
+//!   check, lower-bound pruning, and `evaluate_lean` into the worker's
+//!   `TileScratch` — still without touching the allocator.
+//!
+//! This file intentionally holds a single `#[test]`: the allocation
+//! counter is process-global, and a concurrently running test would
+//! pollute the steady-state window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_evaluate_loop_is_allocation_free() {
+    use union::arch::presets;
+    use union::cost::{AnalyticalModel, EnergyTable};
+    use union::engine::{Engine, EngineConfig};
+    use union::mappers::Objective;
+    use union::mapping::PackedBatch;
+    use union::mapspace::{Constraints, MapSpace};
+    use union::problem::gemm;
+    use union::util::rng::Rng;
+
+    let problem = gemm(32, 32, 32);
+    let arch = presets::edge();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&problem, &arch, &cons);
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+
+    // a fixed batch of packed candidates, written once up front
+    let (nl, nd) = space.packed_shape();
+    let mut batch = PackedBatch::new();
+    batch.reset(nl, nd);
+    let mut rng = Rng::new(99);
+    for _ in 0..256 {
+        batch.push_with(|slot| space.sample_into(&mut rng, slot));
+    }
+
+    // threads=1 keeps the loop on the calling thread: scoped-thread
+    // spawning is a per-batch (not per-candidate) cost and would show
+    // up in the counter without being part of the per-candidate story
+    let single = |memoize: bool| EngineConfig {
+        threads: Some(1),
+        memoize,
+        ..EngineConfig::default()
+    };
+
+    // ---- memo-hit steady state (memoization on) ----
+    let mut engine = Engine::with_config(&space, &model, Objective::Edp, single(true));
+    engine.evaluate_packed(&batch); // warm: memo interning, incumbent, buffers
+    engine.evaluate_packed(&batch); // settle every buffer capacity
+    let scored_warm = engine.stats().scored;
+    let before = allocations();
+    let scored = engine.evaluate_packed(&batch);
+    let after = allocations();
+    assert!(scored > 0, "fixed batch must keep scoring");
+    assert_eq!(
+        engine.stats().scored,
+        scored_warm + scored,
+        "repeat batch must score the same candidates"
+    );
+    assert_eq!(
+        after - before,
+        0,
+        "memo-hit steady state allocated {} times for {} candidates",
+        after - before,
+        batch.len()
+    );
+
+    // ---- full-evaluation steady state (memoization off) ----
+    // every candidate re-runs decode + legality + bound + evaluate_lean
+    let mut engine = Engine::with_config(&space, &model, Objective::Edp, single(false));
+    engine.evaluate_packed(&batch); // warm: incumbent + full estimate, scratch sizing
+    engine.evaluate_packed(&batch); // settle buffer capacities
+    let evals_before = engine.stats().cost_evals;
+    let before = allocations();
+    let scored = engine.evaluate_packed(&batch);
+    let after = allocations();
+    assert!(scored > 0);
+    assert!(
+        engine.stats().cost_evals > evals_before,
+        "memoization off: the cost model must actually run"
+    );
+    assert_eq!(
+        after - before,
+        0,
+        "full-evaluation steady state allocated {} times for {} candidates",
+        after - before,
+        batch.len()
+    );
+}

@@ -3,7 +3,9 @@
 //! hundreds of randomized cases with deterministic replay seeds.
 
 use union::arch::presets;
-use union::cost::{AnalyticalModel, CostModel, EnergyTable, ReuseModel, TileAnalysis};
+use union::cost::{
+    AnalyticalModel, CostModel, EnergyTable, MaestroModel, ReuseModel, TileAnalysis, TileScratch,
+};
 use union::mapspace::{constraints_from_str, constraints_to_str, Constraints, MapSpace};
 use union::problem::{conv2d, gemm};
 use union::util::divisors::{divisors, tilings};
@@ -37,6 +39,90 @@ fn prop_sampled_mappings_satisfy_all_legality_rules() {
                 .map_err(|e| format!("illegal sampled mapping: {e} for {p}")),
             None => Ok(()), // tiny/degenerate spaces may have no admit
         }
+    });
+}
+
+#[test]
+fn prop_packed_encode_decode_roundtrips() {
+    // the packed mapping code is lossless: encode → decode reproduces
+    // every legal mapping exactly, and re-encoding reproduces the
+    // fingerprint (so memo keys are stable across trips)
+    QuickCheck::new().cases(150).seed(0xFACADE).check("packed-roundtrip", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::fig5_toy();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        let packed = space.encode(&m);
+        let decoded = space.decode(packed.as_ref());
+        if decoded != m {
+            return Err(format!("round trip changed the mapping:\n{m}\nvs\n{decoded}"));
+        }
+        let repacked = space.encode(&decoded);
+        if !packed.as_ref().code_eq(&repacked.as_ref()) {
+            return Err("re-encoding produced a different code".into());
+        }
+        if packed.as_ref().fingerprint() != repacked.as_ref().fingerprint() {
+            return Err("fingerprint not stable across a round trip".into());
+        }
+        if packed.as_ref().pes_used() != m.pes_used() {
+            return Err("packed pes_used disagrees with the mapping".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_path_scores_bit_identical_to_mapping_path() {
+    // the engine's allocation-free lean path must produce BIT-identical
+    // scores to the legacy full-estimate path, for both cost models,
+    // with and without the footprint memo in play
+    QuickCheck::new().cases(100).seed(0x1EAF).check("lean-bit-identical", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        // the packed round trip feeds the lean path exactly what the
+        // engine's decode step would
+        let decoded = space.decode(space.encode(&m).as_ref());
+        let analytical = AnalyticalModel::new(EnergyTable::default_8bit());
+        let maestro = MaestroModel::new(EnergyTable::default_8bit());
+        let models: [(&str, &dyn CostModel); 2] =
+            [("analytical", &analytical), ("maestro", &maestro)];
+        let mut scratch = TileScratch::new();
+        let mut memo = union::cost::FootprintMemo::new();
+        for lvl in &m.levels {
+            memo.get_or_compute(&p, &lvl.temporal_tile);
+        }
+        for (name, model) in models {
+            let full = model
+                .evaluate_prechecked(&p, &arch, &m)
+                .map_err(|e| format!("{name}: full path failed: {e}"))?;
+            for fpm in [None, Some(&memo)] {
+                let lean = model
+                    .evaluate_lean(&p, &arch, &decoded, &mut scratch, fpm)
+                    .map_err(|e| format!("{name}: lean path failed: {e}"))?;
+                if lean.cycles.to_bits() != full.cycles.to_bits() {
+                    return Err(format!(
+                        "{name}: cycles differ: lean {} vs full {}",
+                        lean.cycles, full.cycles
+                    ));
+                }
+                if lean.energy_pj.to_bits() != full.energy_pj.to_bits() {
+                    return Err(format!(
+                        "{name}: energy differs: lean {} vs full {}",
+                        lean.energy_pj, full.energy_pj
+                    ));
+                }
+                if lean.edp().to_bits() != full.edp().to_bits() {
+                    return Err(format!("{name}: EDP differs"));
+                }
+            }
+        }
+        Ok(())
     });
 }
 
@@ -79,7 +165,7 @@ fn prop_order_agnostic_reuse_is_lower_bound() {
         let space = MapSpace::new(&p, &arch, &cons);
         let mut rng = Rng::new(g.rng().next_u64());
         let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
-        let ta = TileAnalysis::new(&p, &arch, &m);
+        let mut ta = TileAnalysis::new(&p, &arch, &m);
         let aware = ta.movement(ReuseModel::OrderAware);
         let agnostic = ta.movement(ReuseModel::OrderAgnostic);
         for (ds, (a, b)) in aware.detail.iter().zip(&agnostic.detail).enumerate() {
@@ -106,7 +192,7 @@ fn prop_fills_at_least_footprint() {
         let space = MapSpace::new(&p, &arch, &cons);
         let mut rng = Rng::new(g.rng().next_u64());
         let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
-        let ta = TileAnalysis::new(&p, &arch, &m);
+        let mut ta = TileAnalysis::new(&p, &arch, &m);
         let mv = ta.movement(ReuseModel::OrderAware);
         for per_ds in &mv.detail {
             for lvl in per_ds {

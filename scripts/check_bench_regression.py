@@ -22,6 +22,7 @@ bench/README.md). Only stdlib is used; no pip installs.
 
 import argparse
 import json
+import os
 import pathlib
 import shutil
 import sys
@@ -38,6 +39,26 @@ def gated_entries(doc):
         if m.get("gated") and m.get("value") is not None:
             out["metric:" + m["name"]] = float(m["value"])
     return out
+
+
+def render_table(rows, markdown=False):
+    """Per-metric delta table: (verdict, file, key, current, baseline, delta%)."""
+    header = ("verdict", "bench file", "entry", "current", "baseline", "delta")
+    body = [
+        (verdict, fname, key, f"{cur:.4g}", f"{base:.4g}",
+         "n/a" if base == 0 else f"{(cur / base - 1.0) * 100.0:+.1f}%")
+        for verdict, fname, key, cur, base in rows
+    ]
+    if markdown:
+        lines = ["| " + " | ".join(header) + " |",
+                 "|" + "|".join("---" for _ in header) + "|"]
+        lines += ["| " + " | ".join(r) + " |" for r in body]
+        return "\n".join(lines)
+    widths = [max(len(h), *(len(r[i]) for r in body)) if body else len(h)
+              for i, h in enumerate(header)]
+    lines = ["  ".join(h.ljust(w) for h, w in zip(header, widths))]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(r, widths)) for r in body]
+    return "\n".join(lines)
 
 
 def main():
@@ -72,7 +93,7 @@ def main():
         sys.exit(f"no baselines in {baselines} — run with --update to create them")
 
     failures = []
-    compared = 0
+    rows = []
     for base_path in baseline_files:
         cur_path = current / base_path.name
         if not cur_path.exists():
@@ -87,16 +108,29 @@ def main():
             cur_val = cur[key]
             floor = base_val * (1.0 - args.threshold)
             verdict = "ok" if cur_val >= floor else "REGRESSION"
-            delta = (cur_val / base_val - 1.0) * 100.0 if base_val else float("inf")
-            print(f"{verdict:>10}  {base_path.name}  {key}: "
-                  f"{cur_val:.4g} vs baseline {base_val:.4g} ({delta:+.1f}%)")
-            compared += 1
+            rows.append((verdict, base_path.name, key, cur_val, base_val))
             if cur_val < floor:
                 failures.append(
                     f"{base_path.name}: '{key}' regressed to {cur_val:.4g} "
                     f"(baseline {base_val:.4g}, floor {floor:.4g})")
 
-    print(f"\ncompared {compared} gated entries across {len(baseline_files)} bench files")
+    print(render_table(rows))
+    print(f"\ncompared {len(rows)} gated entries across {len(baseline_files)} bench files")
+
+    # when running in GitHub Actions, publish the delta table to the
+    # job summary so a reviewer sees per-metric movement, not only the
+    # pass/fail bit
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        verdict_line = ("**bench-regression: FAILED**" if failures
+                        else "**bench-regression: green**")
+        with open(summary_path, "a", encoding="utf-8") as f:
+            f.write("## Bench regression deltas\n\n")
+            f.write(render_table(rows, markdown=True))
+            f.write(f"\n\n{verdict_line} — threshold {args.threshold:.0%}, "
+                    f"{len(rows)} gated entries\n")
+            for fail in failures:
+                f.write(f"- ❌ {fail}\n")
     if failures:
         print("\nbench-regression FAILURES:", file=sys.stderr)
         for f in failures:

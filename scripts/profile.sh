@@ -1,0 +1,87 @@
+#!/usr/bin/env bash
+# Release-build profiling wrapper for the search hot path.
+#
+# Usage:
+#   scripts/profile.sh search [args...]    # profile `union search ...`
+#   scripts/profile.sh bench <name>        # profile one bench binary
+#   scripts/profile.sh stat <any of the above>
+#
+# Examples:
+#   scripts/profile.sh search --workload gemm --m 512 --n 512 --k 512
+#   scripts/profile.sh bench perf_hotpath
+#   scripts/profile.sh stat bench perf_hotpath
+#
+# Output goes to out/profile/: a perf.data plus, when a flamegraph tool
+# is available (inferno-flamegraph or flamegraph.pl on PATH), an SVG.
+# Falls back to `perf stat` summaries, and to plain `/usr/bin/time -v`
+# when perf itself is missing — so the script degrades gracefully on
+# locked-down runners instead of failing.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+OUT=out/profile
+mkdir -p "$OUT"
+
+MODE=record
+if [[ "${1:-}" == "stat" ]]; then
+    MODE=stat
+    shift
+fi
+
+if [[ $# -lt 1 ]]; then
+    echo "usage: $0 [stat] search [args...] | [stat] bench <name>" >&2
+    exit 2
+fi
+
+KIND=$1
+shift
+case "$KIND" in
+search)
+    cargo build --release
+    CMD=(target/release/union search "$@")
+    LABEL=search
+    ;;
+bench)
+    NAME=${1:?bench name required}
+    shift || true
+    # build the bench binary without running it, then locate it
+    cargo bench --bench "$NAME" --no-run
+    BIN=$(ls -t target/release/deps/"$NAME"-* 2>/dev/null | grep -v '\.d$' | head -1)
+    [[ -n "$BIN" ]] || { echo "bench binary for '$NAME' not found" >&2; exit 1; }
+    CMD=("$BIN" "$@")
+    LABEL="bench-$NAME"
+    ;;
+*)
+    echo "unknown target '$KIND' (want: search | bench <name>)" >&2
+    exit 2
+    ;;
+esac
+
+if ! command -v perf >/dev/null 2>&1; then
+    echo "perf not available; falling back to /usr/bin/time -v" >&2
+    /usr/bin/time -v "${CMD[@]}" 2>"$OUT/$LABEL.time.txt" || true
+    echo "wrote $OUT/$LABEL.time.txt"
+    exit 0
+fi
+
+if [[ "$MODE" == stat ]]; then
+    perf stat -d -o "$OUT/$LABEL.stat.txt" -- "${CMD[@]}"
+    echo "wrote $OUT/$LABEL.stat.txt"
+    exit 0
+fi
+
+perf record -F 997 -g --call-graph dwarf -o "$OUT/$LABEL.perf.data" -- "${CMD[@]}"
+echo "wrote $OUT/$LABEL.perf.data"
+
+# flamegraph, with whichever tool is installed
+if command -v inferno-flamegraph >/dev/null 2>&1 && command -v inferno-collapse-perf >/dev/null 2>&1; then
+    perf script -i "$OUT/$LABEL.perf.data" | inferno-collapse-perf \
+        | inferno-flamegraph >"$OUT/$LABEL.svg"
+    echo "wrote $OUT/$LABEL.svg"
+elif command -v flamegraph.pl >/dev/null 2>&1 && command -v stackcollapse-perf.pl >/dev/null 2>&1; then
+    perf script -i "$OUT/$LABEL.perf.data" | stackcollapse-perf.pl \
+        | flamegraph.pl >"$OUT/$LABEL.svg"
+    echo "wrote $OUT/$LABEL.svg"
+else
+    echo "no flamegraph tool on PATH; inspect with: perf report -i $OUT/$LABEL.perf.data"
+fi
