@@ -1,0 +1,72 @@
+//! Mapping-as-a-service, end to end in one process: start `union
+//! serve`'s server on an ephemeral port, drive it with the JSON-lines
+//! client, and watch identical jobs coalesce and repeat jobs come back
+//! from the cache.
+//!
+//!     cargo run --release --example service_client
+//!
+//! Against a long-running daemon the client half of this is just
+//! `union client search --workload gemm:256x64x512 --arch edge`.
+
+use union::mappers::Objective;
+use union::service::{client_request, JobSpec, Request, ServeConfig, Server};
+
+fn main() -> Result<(), String> {
+    // an ephemeral in-memory server; a real deployment runs
+    // `union serve --port 7415 --cache results.jsonl` instead
+    let server = Server::bind(ServeConfig { port: 0, ..ServeConfig::default() })?;
+    let addr = server.local_addr()?.to_string();
+    println!("serving on {addr}");
+    let daemon = std::thread::spawn(move || server.run());
+
+    let spec = JobSpec {
+        workload: "gemm:256x64x512".into(),
+        arch: "edge".into(),
+        cost: "analytical".into(),
+        objective: Objective::Edp,
+        samples: 300,
+        seed: 42,
+        constraints: String::new(),
+    };
+
+    // first query: a fresh search on some shard
+    let first = client_request(
+        &addr,
+        &Request::Search { id: Some("q1".into()), spec: spec.clone() },
+    )?;
+    println!(
+        "first answer:  cached={} score={:.4e} ({} candidates evaluated)",
+        first.bool_field("cached").unwrap(),
+        first.num("score").unwrap(),
+        first.num("evaluated").unwrap(),
+    );
+
+    // same job again: served from the result cache, bit-identical
+    let second = client_request(
+        &addr,
+        &Request::Search { id: Some("q2".into()), spec },
+    )?;
+    println!(
+        "second answer: cached={} score={:.4e}",
+        second.bool_field("cached").unwrap(),
+        second.num("score").unwrap(),
+    );
+    assert_eq!(
+        first.num("score").unwrap().to_bits(),
+        second.num("score").unwrap().to_bits(),
+        "cache must reproduce the search bit-exactly"
+    );
+
+    // counters, then a graceful drain
+    let status = client_request(&addr, &Request::Status { id: None })?;
+    println!(
+        "status: requests={} searched={} cache_hits={}",
+        status.num("requests").unwrap(),
+        status.num("searched").unwrap(),
+        status.num("cache_hits").unwrap(),
+    );
+    let bye = client_request(&addr, &Request::Shutdown { id: None })?;
+    println!("shutdown ok={}", bye.bool_field("ok").unwrap());
+    daemon.join().map_err(|_| "server thread panicked")??;
+    Ok(())
+}

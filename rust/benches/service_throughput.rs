@@ -1,0 +1,142 @@
+//! Load generator for the mapping service: requests/sec through the
+//! broker with a **cold** cache (every distinct job searches) vs a
+//! **warm** persistent cache (every request answers from the store).
+//! With `UNION_BENCH_DIR` set, the run is recorded as
+//! `BENCH_service_throughput.json` for the bench-regression gate.
+//!
+//! The workload is a fixed mix: `DISTINCT` small GEMM jobs, each
+//! requested `REPEAT` times. Submissions happen against a *paused*
+//! broker so the repeat requests deterministically coalesce onto the
+//! first submission of their signature (the coalesce count is a gated
+//! metric — it is a correctness property, not a timing), then the
+//! workers are released and all waiters complete.
+
+use union::arch::presets;
+use union::frontend::Workload;
+use union::mappers::Objective;
+use union::mapspace::Constraints;
+use union::service::{Broker, BrokerConfig, CostKind, JobRequest, ResultCache, Submitted};
+use union::util::bench::Bencher;
+
+const DISTINCT: usize = 6;
+const REPEAT: usize = 4;
+const SAMPLES: usize = 80;
+
+fn job(i: usize) -> JobRequest {
+    // distinct shapes, all tiny: the bench measures service overheads
+    // and cache behavior, not raw search time
+    let dims = [16, 24, 32, 40, 48, 64];
+    let m = dims[i % dims.len()];
+    JobRequest {
+        workload: Workload::gemm(&format!("svc-{i}"), m, 16, 16),
+        arch: presets::edge(),
+        cost: CostKind::Analytical,
+        objective: Objective::Edp,
+        constraints: Constraints::default(),
+        samples: SAMPLES,
+        seed: 42,
+    }
+}
+
+/// Submit the full request mix (paused), release the workers, wait for
+/// every answer. Returns requests served.
+fn drive(broker: &Broker) -> u64 {
+    let mut pending = Vec::new();
+    for rep in 0..REPEAT {
+        for i in 0..DISTINCT {
+            match broker.submit(job(i)) {
+                Submitted::Pending { rx, .. } => pending.push(rx),
+                Submitted::Cached(_) => {}
+                other => {
+                    let k = match other {
+                        Submitted::Overloaded { .. } => "overloaded",
+                        Submitted::Draining => "draining",
+                        Submitted::Rejected(_) => "rejected",
+                        _ => unreachable!(),
+                    };
+                    panic!("unexpected submit outcome {k} (rep {rep})");
+                }
+            }
+        }
+    }
+    broker.resume();
+    for rx in pending {
+        rx.recv().expect("job answered").result.expect("job succeeded");
+    }
+    (DISTINCT * REPEAT) as u64
+}
+
+fn config() -> BrokerConfig {
+    BrokerConfig {
+        shards: 2,
+        queue_capacity: DISTINCT * REPEAT,
+        job_threads: Some(1),
+        paused: true,
+    }
+}
+
+fn main() {
+    let mut b = Bencher::with_iters(1, 5);
+
+    // ---- cold: fresh broker + empty cache every iteration ----
+    let mut cold_stats = None;
+    let cold_rps = b.bench_rate("service_cold_requests", "req", || {
+        let broker = Broker::new(config());
+        let served = drive(&broker);
+        cold_stats = Some(broker.drain());
+        served
+    });
+    let cold = cold_stats.expect("cold bench ran");
+    assert_eq!(cold.searched, DISTINCT, "one search per distinct signature");
+    assert_eq!(
+        cold.coalesced,
+        DISTINCT * (REPEAT - 1),
+        "paused submission makes every repeat coalesce"
+    );
+
+    // ---- warm: one persistent cache file populated once, then every
+    // request in every timed iteration is a cache hit ----
+    let path = std::env::temp_dir().join(format!(
+        "union-bench-service-cache-{}.jsonl",
+        std::process::id()
+    ));
+    std::fs::remove_file(&path).ok();
+    {
+        let broker = Broker::with_cache(config(), ResultCache::open(&path).unwrap());
+        drive(&broker);
+        broker.drain();
+    }
+    let mut warm_stats = None;
+    let warm_rps = b.bench_rate("service_warm_cache_requests", "req", || {
+        // reopen the store each iteration: the measured path includes
+        // loading the cache from disk, as a restarted daemon would
+        let broker = Broker::with_cache(config(), ResultCache::open(&path).unwrap());
+        let served = drive(&broker);
+        warm_stats = Some(broker.drain());
+        served
+    });
+    let warm = warm_stats.expect("warm bench ran");
+    assert_eq!(warm.searched, 0, "warm cache serves every request");
+    assert_eq!(warm.cache_hits, DISTINCT * REPEAT);
+    std::fs::remove_file(&path).ok();
+
+    println!(
+        "service throughput: cold {:.3e} req/s, warm {:.3e} req/s ({:.1}x)",
+        cold_rps,
+        warm_rps,
+        warm_rps / cold_rps
+    );
+    // deterministic quality gates: the coalesce/cache behavior above
+    b.gated_metric(
+        "service_cold_coalesce_rate",
+        cold.coalesced as f64 / (DISTINCT * REPEAT) as f64,
+    );
+    b.gated_metric(
+        "service_warm_cache_hit_rate",
+        warm.cache_hits as f64 / (DISTINCT * REPEAT) as f64,
+    );
+    // timing gate: a warm cache must beat re-searching by a wide margin
+    b.gated_metric("service_warm_speedup_vs_cold", warm_rps / cold_rps);
+    b.metric("service_distinct_jobs", DISTINCT as f64);
+    b.write_json_env("service_throughput");
+}

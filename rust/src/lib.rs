@@ -51,6 +51,10 @@
 //! architectures is co-explored with the workload graph on one session,
 //! maintaining a Pareto frontier (objective × silicon-area proxy) and
 //! skipping arch points whose cost lower bound is already dominated.
+//! Finally, the [`service`] module turns the stack multi-tenant:
+//! `union serve` runs a sharded evaluation daemon (JSON-lines over
+//! TCP/stdin) that coalesces concurrent identical searches and answers
+//! repeat traffic from a persistent, bit-exact result cache.
 //!
 //! (Clippy policy lives in the `[lints.clippy]` table of
 //! `rust/Cargo.toml`, applied to every target in the package.)
@@ -71,6 +75,7 @@ pub mod network;
 pub mod problem;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod util;
 
 /// Most-used types, for `use union::prelude::*`.
@@ -94,4 +99,7 @@ pub mod prelude {
         NetworkOrchestrator, NetworkResult, OrchestratorConfig, WorkloadGraph,
     };
     pub use crate::problem::{DataSpace, Operation, Problem};
+    pub use crate::service::{
+        Broker, BrokerConfig, CostKind, JobRequest, ResultCache, ServeConfig, Server,
+    };
 }

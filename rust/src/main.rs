@@ -7,9 +7,13 @@
 //!                 [--constraints file.ucon] [--render]
 //! union network   --model <net> [--arch <spec>] [--cost C] [--objective O]
 //!                 [--effort fast|thorough|N] [--batch N] [--seed N]
-//!                 [--constraints file.ucon] [--csv]
+//!                 [--constraints file.ucon] [--csv] [--mappings]
 //! union dse       [--space S] [--model <net>] [--cost C] [--objective O]
 //!                 [--effort E] [--seed N] [--no-prune] [--no-warm-start] [--csv]
+//! union serve     [--port N] [--cache file.jsonl] [--shards N] [--queue N]
+//!                 [--job-threads N] [--stdio] [--verbose]
+//! union client    search|status|shutdown [--port N] [--workload <spec>] ...
+//! union warm      --cache file.jsonl [--model <net>] [--arch <spec>] ...
 //! union casestudy <id> [--thorough] | --list
 //! union validate  [--artifacts DIR]
 //! union info      --arch <spec>
@@ -27,6 +31,10 @@ use union::mappers::{
 use union::mapping::render_loop_nest;
 use union::mapspace::{constraints_from_str, Constraints, MapSpace};
 use union::network::{NetworkOrchestrator, OrchestratorConfig};
+use union::service::{
+    self, mapping_from_json, Broker, BrokerConfig, CostKind, JobRequest, JobSpec, Request,
+    ResultCache, ServeConfig, Server, Submitted,
+};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -46,6 +54,9 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("search") => cmd_search(&args),
         Some("network") => cmd_network(&args),
         Some("dse") => cmd_dse(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
+        Some("warm") => cmd_warm(&args),
         Some("casestudy") => cmd_casestudy(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
@@ -67,12 +78,21 @@ subcommands:
             [--samples N] [--constraints file.ucon] [--render]
   network   --model <net> [--arch <spec>] [--cost analytical|maestro]
             [--objective edp|energy|latency] [--effort fast|thorough|N]
-            [--batch N] [--seed N] [--threads N] [--constraints file.ucon] [--csv]
+            [--batch N] [--seed N] [--threads N] [--constraints file.ucon]
+            [--csv] [--mappings]
   dse       [--space edge-grid|aspect:edge|aspect:cloud|chiplet[:BW,...]]
             [--model <net>] [--cost analytical|maestro]
             [--objective edp|energy|latency] [--effort fast|thorough|N]
             [--batch N] [--seed N] [--threads N] [--constraints file.ucon]
             [--no-prune] [--no-warm-start] [--csv]
+  serve     [--port N] [--host H] [--shards N] [--queue N] [--job-threads N]
+            [--cache file.jsonl] [--stdio] [--verbose]
+  client    search|status|shutdown [--port N] [--host H] [--json]
+            search: --workload <spec> [--arch <spec>] [--cost C] [--objective O]
+                    [--effort E] [--seed N] [--constraints file.ucon]
+                    [--mapping-only]
+  warm      --cache file.jsonl [--model <net>] [--arch <spec>] [--cost C]
+            [--objective O] [--effort E] [--batch N] [--seed N] [--shards N]
   casestudy <id> [--thorough] [--effort E]   (ids: `union casestudy --list`)
   validate  [--artifacts DIR]
   info      --arch <spec>
@@ -190,12 +210,8 @@ fn parse_constraints_flag(args: &Args) -> Result<Constraints, String> {
 }
 
 fn parse_objective_flag(args: &Args) -> Result<Objective, String> {
-    match args.flag_or("objective", "edp") {
-        "edp" => Ok(Objective::Edp),
-        "energy" => Ok(Objective::Energy),
-        "latency" => Ok(Objective::Latency),
-        other => Err(format!("unknown objective '{other}'")),
-    }
+    // one objective grammar for the CLI and the wire protocol
+    service::proto::parse_objective(args.flag_or("objective", "edp"))
 }
 
 fn parse_cost_flag(args: &Args) -> Result<Box<dyn CostModel>, String> {
@@ -258,6 +274,16 @@ fn cmd_network(args: &Args) -> Result<(), String> {
         print!("{}", table.render());
     }
     println!("\n{}", result.summary());
+    if args.switch("mappings") {
+        // one block per distinct search job, in job order — the same
+        // canonical `Mapping` rendering `union client --mapping-only`
+        // prints, so the two are byte-comparable (CI's service smoke
+        // test does exactly that)
+        for layer in result.layers.iter().filter(|l| !l.dedup_hit) {
+            println!("\n== job {} best mapping (first layer: {}) ==", layer.job, layer.name);
+            print!("{}", layer.result.mapping);
+        }
+    }
     Ok(())
 }
 
@@ -325,6 +351,266 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
         );
     }
     println!("\n{}", result.summary());
+    Ok(())
+}
+
+/// `--port` with range validation (no silent `as u16` truncation).
+fn parse_port_flag(args: &Args, default: u16) -> Result<u16, String> {
+    let port = args.usize_flag("port", default as usize)?;
+    u16::try_from(port).map_err(|_| format!("--port {port} is out of range (max 65535)"))
+}
+
+/// Shared serve/warm broker knobs from flags.
+fn parse_broker_flags(args: &Args) -> Result<BrokerConfig, String> {
+    let defaults = BrokerConfig::default();
+    // same convention as network/dse --threads: 0 = all cores.
+    // Absent keeps the broker default (1: the shards are the
+    // parallelism).
+    let job_threads = match args.flag("job-threads") {
+        None => defaults.job_threads,
+        Some(_) => match args.usize_flag("job-threads", 0)? {
+            0 => None,
+            n => Some(n),
+        },
+    };
+    Ok(BrokerConfig {
+        shards: args.usize_flag("shards", defaults.shards)?.max(1),
+        queue_capacity: args.usize_flag("queue", defaults.queue_capacity)?.max(1),
+        job_threads,
+        paused: false,
+    })
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let config = ServeConfig {
+        host: args.flag_or("host", "127.0.0.1").to_string(),
+        port: parse_port_flag(args, 7415)?,
+        cache: args.flag("cache").map(std::path::PathBuf::from),
+        broker: parse_broker_flags(args)?,
+        verbose: args.switch("verbose"),
+    };
+    if args.switch("stdio") {
+        let stats = service::serve_stdio(config)?;
+        eprintln!(
+            "served {} requests ({} searched, {} cache hits, {} coalesced)",
+            stats.requests, stats.searched, stats.cache_hits, stats.coalesced
+        );
+        return Ok(());
+    }
+    let server = Server::bind(config.clone())?;
+    let addr = server.local_addr()?;
+    eprintln!(
+        "union serve: listening on {addr} ({} shards, queue {} per shard, cache: {})",
+        config.broker.shards,
+        config.broker.queue_capacity,
+        config
+            .cache
+            .as_ref()
+            .map(|p| p.display().to_string())
+            .unwrap_or_else(|| "in-memory".into()),
+    );
+    let stats = server.run()?;
+    eprintln!(
+        "union serve: drained after {} requests ({} searched, {} cache hits, {} coalesced)",
+        stats.requests, stats.searched, stats.cache_hits, stats.coalesced
+    );
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<(), String> {
+    let action = args
+        .positional()
+        .first()
+        .map(|s| s.as_str())
+        .ok_or("client needs an action: search | status | shutdown")?;
+    let addr = format!(
+        "{}:{}",
+        args.flag_or("host", "127.0.0.1"),
+        parse_port_flag(args, 7415)?
+    );
+    let request = match action {
+        "status" => Request::Status { id: None },
+        "shutdown" => Request::Shutdown { id: None },
+        "search" => {
+            let constraints = match args.flag("constraints") {
+                Some(path) => std::fs::read_to_string(path)
+                    .map_err(|e| format!("reading {path}: {e}"))?,
+                None => String::new(),
+            };
+            Request::Search {
+                id: None,
+                spec: JobSpec {
+                    workload: args
+                        .flag("workload")
+                        .ok_or("client search needs --workload")?
+                        .to_string(),
+                    arch: args.flag_or("arch", "edge").to_string(),
+                    cost: args.flag_or("cost", "analytical").to_string(),
+                    objective: parse_objective_flag(args)?,
+                    samples: parse_effort_flag(args)?.samples(),
+                    seed: args.usize_flag("seed", 42)? as u64,
+                    constraints,
+                },
+            }
+        }
+        other => return Err(format!("unknown client action '{other}'")),
+    };
+    let response = service::client_request(&addr, &request)?;
+    if args.switch("json") {
+        println!("{}", response.to_line());
+        return Ok(());
+    }
+    match response.str("type") {
+        Some("result") => {
+            let mapping = mapping_from_json(
+                response.get("mapping").ok_or("result without mapping")?,
+            )?;
+            if args.switch("mapping-only") {
+                print!("{mapping}");
+                return Ok(());
+            }
+            println!(
+                "result: cached={} coalesced={} shard={}",
+                response.bool_field("cached").unwrap_or(false),
+                response.bool_field("coalesced").unwrap_or(false),
+                response
+                    .num("shard")
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            );
+            println!(
+                "objective {} score={:.6e}  (evaluated {} candidates)",
+                response.str("objective").unwrap_or("?"),
+                response.num("score").unwrap_or(f64::NAN),
+                response.num("evaluated").unwrap_or(0.0),
+            );
+            println!(
+                "cycles={:.3e}  energy_pj={:.3e}  util={:.2}",
+                response.num("cycles").unwrap_or(f64::NAN),
+                response.num("energy_pj").unwrap_or(f64::NAN),
+                response.num("utilization").unwrap_or(f64::NAN),
+            );
+            println!("mapping:");
+            print!("{mapping}");
+            Ok(())
+        }
+        Some("status") => {
+            println!(
+                "server: {} shards, queued={:?}, active={}",
+                response.num("shards").unwrap_or(0.0),
+                response
+                    .arr("queued")
+                    .map(|q| q
+                        .iter()
+                        .filter_map(|v| match v {
+                            service::Json::Num(n) => Some(*n as usize),
+                            _ => None,
+                        })
+                        .collect::<Vec<_>>())
+                    .unwrap_or_default(),
+                response.num("active").unwrap_or(0.0),
+            );
+            println!(
+                "requests={} searched={} cache_hits={} coalesced={} overloaded={} errors={}",
+                response.num("requests").unwrap_or(0.0),
+                response.num("searched").unwrap_or(0.0),
+                response.num("cache_hits").unwrap_or(0.0),
+                response.num("coalesced").unwrap_or(0.0),
+                response.num("overloaded").unwrap_or(0.0),
+                response.num("errors").unwrap_or(0.0),
+            );
+            println!(
+                "cache: {} entries ({} loaded at start, {} skipped, {} appended)",
+                response.num("cache_entries").unwrap_or(0.0),
+                response.num("cache_loaded").unwrap_or(0.0),
+                response.num("cache_skipped").unwrap_or(0.0),
+                response.num("cache_appended").unwrap_or(0.0),
+            );
+            Ok(())
+        }
+        Some("shutdown") => {
+            println!(
+                "server drained and shut down ({} requests, {} searched)",
+                response.num("requests").unwrap_or(0.0),
+                response.num("searched").unwrap_or(0.0),
+            );
+            Ok(())
+        }
+        Some("overloaded") => Err(format!(
+            "server overloaded (shard {}, depth {}) — retry with backoff",
+            response.num("shard").unwrap_or(-1.0),
+            response.num("depth").unwrap_or(-1.0),
+        )),
+        _ => Err(response
+            .str("message")
+            .unwrap_or("malformed response")
+            .to_string()),
+    }
+}
+
+fn cmd_warm(args: &Args) -> Result<(), String> {
+    let cache_path = args.flag("cache").ok_or("warm needs --cache <file>")?;
+    let batch = args.usize_flag("batch", 1)? as u64;
+    let graph = parse_network(args.flag_or("model", "resnet50"), batch)?;
+    let arch = parse_arch(args.flag_or("arch", "edge"))?;
+    let cost = CostKind::parse(args.flag_or("cost", "analytical"))?;
+    let objective = parse_objective_flag(args)?;
+    let constraints = parse_constraints_flag(args)?;
+    let samples = parse_effort_flag(args)?.samples();
+    let seed = args.usize_flag("seed", 42)? as u64;
+    let mut broker_config = parse_broker_flags(args)?;
+    // the whole graph is submitted up front: queues must hold it
+    broker_config.queue_capacity = broker_config.queue_capacity.max(graph.len());
+    let cache = ResultCache::open(std::path::Path::new(cache_path))?;
+    println!(
+        "warming {} from {} ({} layers in {} nodes) on {} | cost={} objective={} samples/job={}",
+        cache_path,
+        graph.name,
+        graph.total_layers(),
+        graph.len(),
+        arch.name,
+        cost.name(),
+        objective.name(),
+        samples,
+    );
+    let broker = Broker::with_cache(broker_config, cache);
+    let mut pending = Vec::new();
+    for workload in graph.workloads() {
+        let req = JobRequest {
+            workload,
+            arch: arch.clone(),
+            cost,
+            objective,
+            constraints: constraints.clone(),
+            samples,
+            seed,
+        };
+        match broker.submit(req) {
+            Submitted::Pending { rx, .. } => pending.push(rx),
+            Submitted::Cached(_) => {}
+            Submitted::Overloaded { shard, depth } => {
+                return Err(format!("warm overloaded its own broker (shard {shard}, depth {depth})"))
+            }
+            Submitted::Draining => return Err("broker draining during warm".into()),
+            Submitted::Rejected(e) => return Err(e),
+        }
+    }
+    for rx in pending {
+        let done = rx.recv().map_err(|_| "broker dropped a warm job")?;
+        done.result?;
+    }
+    let stats = broker.drain();
+    let (entries, cache_stats) = broker.cache_stats();
+    println!(
+        "warm: {} submissions -> {} searched, {} coalesced, {} already cached; \
+         cache now holds {} entries (+{} appended)",
+        stats.requests,
+        stats.searched,
+        stats.coalesced,
+        stats.cache_hits,
+        entries,
+        cache_stats.appended,
+    );
     Ok(())
 }
 

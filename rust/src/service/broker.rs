@@ -1,0 +1,655 @@
+//! The **sharded broker**: canonicalize → cache → coalesce → route →
+//! search.
+//!
+//! Every incoming job is first *canonicalized* to a [`job_signature`] —
+//! the same `(problem, arch, cost model, constraints, objective,
+//! samples, seed)` signature family the network orchestrator dedups
+//! layers with, extended with the search seed and an arch content hash
+//! so it is stable **across processes** (nothing ambient — no
+//! addresses, no hash-map iteration order — feeds it; pinned by a
+//! property test in `tests/service.rs`). The signature then drives
+//! three layers of work avoidance, cheapest first:
+//!
+//! 1. **persistent cache** — a signature already in the
+//!    [`ResultCache`] is answered immediately (microseconds), with a
+//!    result bit-identical to the original search;
+//! 2. **in-flight coalescing** — a signature currently queued or
+//!    running registers the caller as an additional *waiter* on that
+//!    job; N concurrent identical requests cost exactly one search and
+//!    every waiter receives the same result;
+//! 3. **sharded execution** — a genuinely new signature is routed by
+//!    signature hash to one of the worker shards, each a thread owning
+//!    long-lived engine [`Session`]s (one per cost-model × objective),
+//!    so memo/scratch allocations stay warm across requests. Routing
+//!    by signature keeps any residual repeat traffic on the shard that
+//!    has seen the job's problem shape before.
+//!
+//! Searches run through the [`NetworkOrchestrator`]'s single-job path
+//! (legal-seed batch + standard portfolio, per-job seeds derived from
+//! the request seed), so a service answer is **byte-identical** to
+//! `union network` run locally on the same job — CI's service smoke
+//! test asserts exactly that.
+//!
+//! **Backpressure**: each shard has a bounded queue; a submit that
+//! lands on a full shard returns [`Submitted::Overloaded`] instead of
+//! queueing unboundedly, and the protocol layer surfaces that as an
+//! explicit `overloaded` response for the client to retry. **Drain**:
+//! [`Broker::drain`] stops new submissions, lets every queued and
+//! running job finish (waiters are answered), then joins the workers.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use crate::arch::Arch;
+use crate::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use crate::engine::{EngineConfig, EngineStats, Session};
+use crate::frontend::Workload;
+use crate::mappers::Objective;
+use crate::mapspace::{constraints_to_str, Constraints};
+use crate::network::{NetworkOrchestrator, OrchestratorConfig, WorkloadGraph};
+
+use super::cache::{CacheStats, CachedResult, ResultCache};
+
+/// Cost models the service can evaluate with. The variants resolve to
+/// process-wide model instances so worker shards can hold
+/// `Session<'static>`s keyed by `(cost, objective)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CostKind {
+    Analytical,
+    Maestro,
+}
+
+impl CostKind {
+    pub fn parse(s: &str) -> Result<CostKind, String> {
+        match s {
+            "analytical" => Ok(CostKind::Analytical),
+            "maestro" => Ok(CostKind::Maestro),
+            other => Err(format!("unknown cost model '{other}' (analytical, maestro)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostKind::Analytical => "analytical",
+            CostKind::Maestro => "maestro",
+        }
+    }
+
+    /// The shared model instance (default 8-bit energy table, as
+    /// everywhere else in the repo).
+    pub fn model(&self) -> &'static dyn CostModel {
+        static ANALYTICAL: OnceLock<AnalyticalModel> = OnceLock::new();
+        static MAESTRO: OnceLock<MaestroModel> = OnceLock::new();
+        match self {
+            CostKind::Analytical => {
+                ANALYTICAL.get_or_init(|| AnalyticalModel::new(EnergyTable::default_8bit()))
+            }
+            CostKind::Maestro => {
+                MAESTRO.get_or_init(|| MaestroModel::new(EnergyTable::default_8bit()))
+            }
+        }
+    }
+}
+
+/// A fully-resolved search job: parsed objects, not spec strings.
+/// (The protocol layer resolves a [`super::proto::JobSpec`] into one of
+/// these with the CLI's own parsers; `union warm` builds them straight
+/// from the model zoo.)
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    pub workload: Workload,
+    pub arch: Arch,
+    pub cost: CostKind,
+    pub objective: Objective,
+    pub constraints: Constraints,
+    /// Candidate budget per search job.
+    pub samples: usize,
+    /// Base search seed (the per-job engine seeds derive from it).
+    pub seed: u64,
+}
+
+/// Canonical job identity — the persistent-cache key and the coalescing
+/// key. Built only from the request's own fields, in a fixed order,
+/// with the problem reduced to its name-independent
+/// [`crate::problem::Problem::signature`] and the arch keyed by name
+/// **plus a content hash** (two different `.uarch` files that happen to
+/// share a name must not collide). Stable across thread counts,
+/// processes and machines.
+pub fn job_signature(req: &JobRequest) -> String {
+    let problem = req.workload.problem();
+    format!(
+        "union-job-v1|{}|arch={}#{:016x}|model={}|cons={}|obj={}|samples={}|seed={}",
+        problem.signature(),
+        req.arch.name,
+        fnv64(req.arch.to_string().as_bytes()),
+        req.cost.name(),
+        constraints_to_str(&req.constraints),
+        req.objective.name(),
+        req.samples,
+        req.seed,
+    )
+    .replace('\n', ";")
+}
+
+/// FNV-1a over bytes (stable across processes, unlike `DefaultHasher`
+/// which is seeded per process).
+pub(crate) fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// How a finished job was produced (reported to every waiter).
+#[derive(Debug, Clone)]
+pub struct JobDone {
+    pub sig: String,
+    /// `Err` carries a job-level failure (unknown workload shape, not
+    /// conformable, no legal mapping); failures are never cached.
+    pub result: Result<CachedResult, String>,
+    /// Shard that executed the search.
+    pub shard: usize,
+}
+
+/// Outcome of [`Broker::submit`].
+pub enum Submitted {
+    /// Answered without any engine work (persistent-cache hit).
+    Cached(Box<CachedResult>),
+    /// Job queued (fresh) or joined (coalesced); await the receiver.
+    Pending { rx: Receiver<JobDone>, coalesced: bool, shard: usize },
+    /// The target shard's queue is full — explicit backpressure.
+    Overloaded { shard: usize, depth: usize },
+    /// The broker is draining and accepts no new work.
+    Draining,
+    /// The request was rejected before canonicalization (invalid
+    /// problem).
+    Rejected(String),
+}
+
+/// Broker knobs. Defaults favor a small always-correct deployment:
+/// shards scale with the machine, per-job engines stay single-threaded
+/// (the shards ARE the parallelism; per-job results are
+/// thread-count-invariant either way).
+#[derive(Debug, Clone)]
+pub struct BrokerConfig {
+    /// Worker shards (each one thread owning long-lived sessions).
+    pub shards: usize,
+    /// Bounded queue depth per shard; a full queue answers `overloaded`.
+    pub queue_capacity: usize,
+    /// Engine threads per job (`None` = all cores; default 1).
+    pub job_threads: Option<usize>,
+    /// Start with workers gated: jobs queue (and coalesce) but do not
+    /// execute until [`Broker::resume`]. Used by tests and benches to
+    /// make coalescing deterministic.
+    pub paused: bool,
+}
+
+impl Default for BrokerConfig {
+    fn default() -> Self {
+        BrokerConfig {
+            shards: std::thread::available_parallelism().map_or(2, |n| n.get().min(4)),
+            queue_capacity: 64,
+            job_threads: Some(1),
+            paused: false,
+        }
+    }
+}
+
+/// Broker counters, all updated under one lock so snapshots are
+/// consistent. `searched` counts jobs that actually ran an engine
+/// search; the coalescing/caching acceptance tests assert against
+/// these plus the absorbed [`EngineStats`].
+#[derive(Debug, Clone, Default)]
+pub struct BrokerStats {
+    /// Search submissions received (cache hits + coalesced + enqueued +
+    /// overloaded + rejected).
+    pub requests: usize,
+    /// Served from the persistent cache with zero engine work.
+    pub cache_hits: usize,
+    /// Joined an identical in-flight job.
+    pub coalesced: usize,
+    /// Search jobs actually executed by a shard.
+    pub searched: usize,
+    /// Submissions refused with backpressure.
+    pub overloaded: usize,
+    /// Jobs that finished with an error.
+    pub errors: usize,
+    /// `evaluate` requests served (protocol layer, no queue).
+    pub evaluates: usize,
+    /// Aggregate engine statistics across every executed job.
+    pub engine: EngineStats,
+}
+
+struct Ticket {
+    sig: String,
+    req: JobRequest,
+}
+
+struct State {
+    queues: Vec<VecDeque<Ticket>>,
+    /// sig → waiters of the queued/running job with that signature.
+    inflight: HashMap<String, Vec<Sender<JobDone>>>,
+    /// Jobs currently executing on some shard.
+    active: usize,
+    draining: bool,
+    paused: bool,
+    stats: BrokerStats,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// The result cache under its own lock, so its disk appends (one
+    /// write+flush per completed job) never block the submit
+    /// bookkeeping, coalescing or status paths that hold `state`.
+    /// Never locked while holding `state` (and vice versa).
+    cache: Mutex<ResultCache>,
+    /// Signaled on enqueue, resume and drain (workers wait on it).
+    work: Condvar,
+    /// Signaled when a job finishes (drain waits on it).
+    idle: Condvar,
+    config: BrokerConfig,
+}
+
+/// The mapping-service broker. See the module docs.
+///
+/// Shareable by reference across connection threads: every operation —
+/// including [`Broker::drain`] — takes `&self` (the worker handles live
+/// behind their own mutex), so the server holds one `Arc<Broker>` and
+/// concurrent searches never serialize on a broker-wide lock.
+pub struct Broker {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Broker {
+    /// Start a broker with an in-memory cache.
+    pub fn new(config: BrokerConfig) -> Broker {
+        Broker::with_cache(config, ResultCache::in_memory())
+    }
+
+    /// Start a broker over an explicit (usually persistent) cache.
+    pub fn with_cache(config: BrokerConfig, cache: ResultCache) -> Broker {
+        let config = BrokerConfig { shards: config.shards.max(1), ..config };
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                queues: (0..config.shards).map(|_| VecDeque::new()).collect(),
+                inflight: HashMap::new(),
+                active: 0,
+                draining: false,
+                paused: config.paused,
+                stats: BrokerStats::default(),
+            }),
+            cache: Mutex::new(cache),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+            config: config.clone(),
+        });
+        let workers = (0..config.shards)
+            .map(|shard| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("union-shard-{shard}"))
+                    .spawn(move || worker_loop(shard, shared))
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        Broker { shared, workers: Mutex::new(workers) }
+    }
+
+    pub fn config(&self) -> &BrokerConfig {
+        &self.shared.config
+    }
+
+    /// Release the worker gate of a `paused: true` broker. Idempotent.
+    pub fn resume(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.paused = false;
+        self.shared.work.notify_all();
+    }
+
+    /// Submit a search job. Never blocks on engine work: the slow path
+    /// returns a receiver to await.
+    pub fn submit(&self, req: JobRequest) -> Submitted {
+        let sig = job_signature(&req);
+        self.submit_with_signature(req, sig)
+    }
+
+    /// [`Broker::submit`] with the canonical signature already rendered
+    /// — the protocol layer computes it once per request (it needs it
+    /// for the response anyway) instead of twice. `sig` MUST equal
+    /// `job_signature(&req)`: a mismatched signature would poison the
+    /// cache and the coalescing map.
+    pub fn submit_with_signature(&self, req: JobRequest, sig: String) -> Submitted {
+        debug_assert_eq!(sig, job_signature(&req), "signature/request mismatch");
+        let problem = req.workload.problem();
+        if let Err(e) = problem.validate() {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stats.requests += 1;
+            st.stats.errors += 1;
+            return Submitted::Rejected(format!("invalid workload: {e}"));
+        }
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stats.requests += 1;
+            if st.draining {
+                return Submitted::Draining;
+            }
+        }
+        // cache fast path under the cache's own lock: a disk append on
+        // a worker never stalls submit bookkeeping, and vice versa
+        let hit = self.shared.cache.lock().unwrap().get(&sig).cloned();
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(hit) = hit {
+            st.stats.cache_hits += 1;
+            return Submitted::Cached(Box::new(hit));
+        }
+        // re-check after the lock gap: enqueueing after a completed
+        // drain would strand the waiter forever
+        if st.draining {
+            return Submitted::Draining;
+        }
+        let shard = (fnv64(sig.as_bytes()) % self.shared.config.shards as u64) as usize;
+        if let Some(waiters) = st.inflight.get_mut(&sig) {
+            st.stats.coalesced += 1;
+            let (tx, rx) = channel();
+            waiters.push(tx);
+            return Submitted::Pending { rx, coalesced: true, shard };
+        }
+        if st.queues[shard].len() >= self.shared.config.queue_capacity {
+            st.stats.overloaded += 1;
+            return Submitted::Overloaded { shard, depth: st.queues[shard].len() };
+        }
+        let (tx, rx) = channel();
+        st.inflight.insert(sig.clone(), vec![tx]);
+        st.queues[shard].push_back(Ticket { sig, req });
+        self.shared.work.notify_all();
+        Submitted::Pending { rx, coalesced: false, shard }
+    }
+
+    /// Convenience: submit and block until the result is available
+    /// (following a coalesced or fresh search as needed). `Err` for
+    /// overloaded/draining/rejected submissions.
+    pub fn submit_wait(&self, req: JobRequest) -> Result<CachedResult, String> {
+        match self.submit(req) {
+            Submitted::Cached(hit) => Ok(*hit),
+            Submitted::Pending { rx, .. } => rx
+                .recv()
+                .map_err(|_| "broker dropped the job".to_string())
+                .and_then(|done| done.result),
+            Submitted::Overloaded { shard, depth } => {
+                Err(format!("overloaded: shard {shard} queue depth {depth}"))
+            }
+            Submitted::Draining => Err("broker is draining".into()),
+            Submitted::Rejected(e) => Err(e),
+        }
+    }
+
+    /// Consistent snapshot of the counters.
+    pub fn stats(&self) -> BrokerStats {
+        self.shared.state.lock().unwrap().stats.clone()
+    }
+
+    /// Per-shard queue depths plus the number of running jobs.
+    pub fn load(&self) -> (Vec<usize>, usize) {
+        let st = self.shared.state.lock().unwrap();
+        (st.queues.iter().map(|q| q.len()).collect(), st.active)
+    }
+
+    /// Cache statistics: `(distinct entries, load/skip/append counters)`.
+    pub fn cache_stats(&self) -> (usize, CacheStats) {
+        let cache = self.shared.cache.lock().unwrap();
+        (cache.len(), cache.stats())
+    }
+
+    /// Bump the `evaluate` counter (the evaluate path runs in the
+    /// protocol layer, not on a shard).
+    pub fn note_evaluate(&self) {
+        self.shared.state.lock().unwrap().stats.evaluates += 1;
+    }
+
+    /// Graceful drain: refuse new submissions, run every queued job to
+    /// completion (all waiters are answered), join the workers. Returns
+    /// the final stats. Idempotent: a concurrent or repeated call waits
+    /// for the same quiescence and finds no workers left to join.
+    pub fn drain(&self) -> BrokerStats {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.draining = true;
+            // a paused broker must still run its backlog to drain
+            st.paused = false;
+            self.shared.work.notify_all();
+            let _unused = self
+                .shared
+                .idle
+                .wait_while(st, |st| {
+                    st.active > 0 || st.queues.iter().any(|q| !q.is_empty())
+                })
+                .unwrap();
+        }
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in handles {
+            let _ = w.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Broker {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn worker_loop(shard: usize, shared: Arc<Shared>) {
+    // long-lived sessions: one per (cost model, objective) this shard
+    // has served, so eval/footprint memo allocations and worker scratch
+    // stay warm across requests
+    let mut sessions: HashMap<(CostKind, u8), Session<'static>> = HashMap::new();
+    loop {
+        let ticket = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if !st.paused {
+                    if let Some(t) = st.queues[shard].pop_front() {
+                        st.active += 1;
+                        break t;
+                    }
+                    if st.draining {
+                        return;
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // a panicking search must not strand the shard (active count,
+        // inflight waiters): degrade it to a job error and drop the
+        // shard's sessions, whose interior state is now suspect
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_search(&ticket.req, &mut sessions, shared.config.job_threads)
+        }))
+        .unwrap_or_else(|_| {
+            sessions.clear();
+            Err("search panicked; see server log".into())
+        });
+        // persist first (cache lock only: the disk append must not
+        // block submits), then update counters and release waiters
+        // under the state lock
+        let result = match outcome {
+            Ok((result, engine)) => {
+                shared.cache.lock().unwrap().insert(&ticket.sig, result.clone());
+                Ok((result, engine))
+            }
+            Err(e) => Err(e),
+        };
+        let mut st = shared.state.lock().unwrap();
+        st.stats.searched += 1;
+        let result = match result {
+            Ok((result, engine)) => {
+                st.stats.engine.absorb(&engine);
+                Ok(result)
+            }
+            Err(e) => {
+                st.stats.errors += 1;
+                Err(e)
+            }
+        };
+        let waiters = st.inflight.remove(&ticket.sig).unwrap_or_default();
+        st.active -= 1;
+        shared.idle.notify_all();
+        drop(st);
+        for tx in waiters {
+            // a waiter that hung up is not an error
+            let _ = tx.send(JobDone {
+                sig: ticket.sig.clone(),
+                result: result.clone(),
+                shard,
+            });
+        }
+    }
+}
+
+/// Objective → session-map key (Objective has no `Hash`; keep the key
+/// local rather than widening the public type).
+fn objective_key(o: Objective) -> u8 {
+    match o {
+        Objective::Latency => 0,
+        Objective::Energy => 1,
+        Objective::Edp => 2,
+    }
+}
+
+/// Execute one job on this shard's long-lived session through the
+/// network orchestrator's single-job path — identical semantics (and
+/// identical bytes) to `union network` on a one-layer graph.
+fn run_search(
+    req: &JobRequest,
+    sessions: &mut HashMap<(CostKind, u8), Session<'static>>,
+    job_threads: Option<usize>,
+) -> Result<(CachedResult, EngineStats), String> {
+    let graph =
+        WorkloadGraph::from_workloads(&req.workload.name, vec![req.workload.clone()]);
+    let config = OrchestratorConfig {
+        objective: req.objective,
+        samples: req.samples,
+        seed: req.seed,
+        threads: job_threads,
+    };
+    let orchestrator =
+        NetworkOrchestrator::with_config(&req.arch, req.cost.model(), &req.constraints, config);
+    let session = sessions
+        .entry((req.cost, objective_key(req.objective)))
+        .or_insert_with(|| {
+            Session::with_config(
+                req.cost.model(),
+                req.objective,
+                EngineConfig { threads: job_threads, ..EngineConfig::default() },
+            )
+        });
+    let network = orchestrator.run_with_session(&graph, session, None)?;
+    let layer = network
+        .layers
+        .first()
+        .ok_or_else(|| "orchestrator returned no layers".to_string())?;
+    Ok((CachedResult::from_search(&layer.result), network.stats.engine))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(m: u64, samples: usize) -> JobRequest {
+        JobRequest {
+            workload: Workload::gemm("t", m, 16, 16),
+            arch: crate::arch::presets::edge(),
+            cost: CostKind::Analytical,
+            objective: Objective::Edp,
+            constraints: Constraints::default(),
+            samples,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn signature_ignores_workload_name_but_keys_everything_else() {
+        let a = req(32, 100);
+        let mut b = a.clone();
+        b.workload.name = "renamed".into();
+        assert_eq!(job_signature(&a), job_signature(&b), "names are not identity");
+        let mut c = a.clone();
+        c.seed = 43;
+        assert_ne!(job_signature(&a), job_signature(&c), "seed is identity");
+        let mut d = a.clone();
+        d.samples = 101;
+        assert_ne!(job_signature(&a), job_signature(&d), "samples are identity");
+        let mut e = a.clone();
+        e.cost = CostKind::Maestro;
+        assert_ne!(job_signature(&a), job_signature(&e), "cost model is identity");
+        let mut f = a.clone();
+        f.arch = crate::arch::presets::cloud(32, 64);
+        assert_ne!(job_signature(&a), job_signature(&f), "arch is identity");
+        assert!(!job_signature(&a).contains('\n'), "one line, cache-record safe");
+    }
+
+    #[test]
+    fn broker_runs_a_job_and_caches_it() {
+        let broker = Broker::new(BrokerConfig {
+            shards: 2,
+            ..BrokerConfig::default()
+        });
+        let r1 = broker.submit_wait(req(32, 150)).expect("job finds a mapping");
+        assert!(r1.score.is_finite() && r1.score > 0.0);
+        // the second identical submit is a pure cache hit
+        let r2 = broker.submit_wait(req(32, 150)).unwrap();
+        assert_eq!(r1, r2);
+        let stats = broker.drain();
+        assert_eq!(stats.searched, 1);
+        assert_eq!(stats.cache_hits, 1);
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn overload_is_reported_not_queued() {
+        // paused broker, capacity 1: the second *distinct* job on the
+        // same shard must bounce. Force same-shard with shards=1.
+        let broker = Broker::new(BrokerConfig {
+            shards: 1,
+            queue_capacity: 1,
+            paused: true,
+            ..BrokerConfig::default()
+        });
+        let first = broker.submit(req(32, 50));
+        assert!(matches!(first, Submitted::Pending { coalesced: false, .. }));
+        let second = broker.submit(req(48, 50));
+        assert!(matches!(second, Submitted::Overloaded { .. }));
+        // identical-to-first still coalesces even when the queue is full
+        let third = broker.submit(req(32, 50));
+        assert!(matches!(third, Submitted::Pending { coalesced: true, .. }));
+        broker.resume();
+        let stats = broker.drain();
+        assert_eq!(stats.overloaded, 1);
+        assert_eq!(stats.coalesced, 1);
+        assert_eq!(stats.searched, 1);
+    }
+
+    #[test]
+    fn draining_refuses_new_work() {
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        broker.submit_wait(req(16, 40)).unwrap();
+        broker.drain();
+        assert!(matches!(broker.submit(req(24, 40)), Submitted::Draining));
+    }
+
+    #[test]
+    fn invalid_workload_is_rejected_up_front() {
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        let bad = JobRequest {
+            workload: Workload::gemm("zero", 0, 4, 4),
+            ..req(8, 10)
+        };
+        assert!(matches!(broker.submit(bad), Submitted::Rejected(_)));
+    }
+}

@@ -1,0 +1,363 @@
+//! The **persistent result cache**: a versioned, corruption-tolerant
+//! on-disk store of finished search jobs, keyed by canonical job
+//! signature.
+//!
+//! Format: a JSON-lines file whose first line is the version header
+//! `{"union_result_cache":1}` and whose remaining lines are one record
+//! per completed job. Records are *appended* as jobs finish (one
+//! `write` + `flush` per job — the file is never rewritten in steady
+//! state), so a crash can at worst truncate the final record.
+//! [`ResultCache::open`] therefore loads leniently: a line that fails
+//! to parse, fails validation, or is half-written is **skipped and
+//! counted**, never fatal. A version-mismatched or headerless file is
+//! preserved as `<path>.bad-vN` and a fresh store is started — old data
+//! is never silently destroyed, and never misinterpreted.
+//!
+//! Scores and cost metrics are serialized with shortest-round-trip
+//! float formatting ([`Json`]), so a reloaded record reproduces the
+//! original `f64`s bit for bit — a cache hit is indistinguishable from
+//! re-running the search (`tests/service.rs` pins this).
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::mappers::SearchResult;
+use crate::mapping::Mapping;
+
+use super::proto::{mapping_from_json, mapping_to_json, Json};
+
+/// On-disk format version; bump when the record schema changes.
+pub const CACHE_VERSION: u64 = 1;
+
+/// One completed job: the best mapping plus the summary metrics a
+/// service response carries. (The full per-level cost breakdown is not
+/// stored — responses report summary metrics, and a client that wants
+/// the breakdown can `evaluate` the returned mapping.)
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedResult {
+    pub score: f64,
+    pub mapping: Mapping,
+    pub cycles: f64,
+    pub energy_pj: f64,
+    pub utilization: f64,
+    pub macs: u64,
+    pub clock_ghz: f64,
+    /// Candidates scored by the search that produced this result.
+    pub evaluated: usize,
+}
+
+impl CachedResult {
+    /// Snapshot a finished [`SearchResult`].
+    pub fn from_search(r: &SearchResult) -> CachedResult {
+        CachedResult {
+            score: r.score,
+            mapping: r.mapping.clone(),
+            cycles: r.cost.cycles,
+            energy_pj: r.cost.energy_pj,
+            utilization: r.cost.utilization,
+            macs: r.cost.macs,
+            clock_ghz: r.cost.clock_ghz,
+            evaluated: r.evaluated,
+        }
+    }
+
+    /// Energy in joules (mirrors `CostEstimate::energy_j`).
+    pub fn energy_j(&self) -> f64 {
+        self.energy_pj * 1e-12
+    }
+
+    /// Latency in seconds.
+    pub fn latency_s(&self) -> f64 {
+        self.cycles / (self.clock_ghz * 1e9)
+    }
+
+    fn to_json(&self, sig: &str) -> Json {
+        Json::Obj(vec![
+            ("sig".into(), Json::Str(sig.to_string())),
+            ("score".into(), Json::Num(self.score)),
+            ("cycles".into(), Json::Num(self.cycles)),
+            ("energy_pj".into(), Json::Num(self.energy_pj)),
+            ("utilization".into(), Json::Num(self.utilization)),
+            ("macs".into(), Json::Num(self.macs as f64)),
+            ("clock_ghz".into(), Json::Num(self.clock_ghz)),
+            ("evaluated".into(), Json::Num(self.evaluated as f64)),
+            ("mapping".into(), mapping_to_json(&self.mapping)),
+        ])
+    }
+
+    fn from_json(doc: &Json) -> Result<(String, CachedResult), String> {
+        let sig = doc.str("sig").ok_or("record has no sig")?.to_string();
+        let need = |k: &str| doc.num(k).ok_or_else(|| format!("record field '{k}' missing"));
+        let mapping =
+            mapping_from_json(doc.get("mapping").ok_or("record has no mapping")?)?;
+        if mapping.levels.is_empty() {
+            return Err("record mapping has no levels".into());
+        }
+        Ok((
+            sig,
+            CachedResult {
+                score: need("score")?,
+                cycles: need("cycles")?,
+                energy_pj: need("energy_pj")?,
+                utilization: need("utilization")?,
+                macs: doc.u64_field("macs").ok_or("record field 'macs' missing")?,
+                clock_ghz: need("clock_ghz")?,
+                evaluated: doc.u64_field("evaluated").unwrap_or(0) as usize,
+                mapping,
+            },
+        ))
+    }
+}
+
+/// Load/append statistics, surfaced by `union client status` and the
+/// corruption-tolerance tests.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Records loaded at open.
+    pub loaded: usize,
+    /// Lines skipped at open (corrupt, truncated, or invalid records).
+    pub skipped: usize,
+    /// Records appended since open.
+    pub appended: usize,
+}
+
+/// The persistent store. `None` path = purely in-memory (tests, or
+/// `union serve` without `--cache`).
+pub struct ResultCache {
+    path: Option<PathBuf>,
+    file: Option<File>,
+    map: HashMap<String, CachedResult>,
+    stats: CacheStats,
+}
+
+impl ResultCache {
+    /// An in-memory cache: same dedup behavior, nothing persisted.
+    pub fn in_memory() -> ResultCache {
+        ResultCache { path: None, file: None, map: HashMap::new(), stats: CacheStats::default() }
+    }
+
+    /// Open (or create) the store at `path`, loading every valid record.
+    /// Unreadable *records* are skipped (see module docs); an unreadable
+    /// *file* — wrong version, missing header — is set aside as
+    /// `<path>.bad-vN` and a fresh store is started. Only a real I/O
+    /// error (permissions, missing parent directory) is fatal.
+    pub fn open(path: &Path) -> Result<ResultCache, String> {
+        let mut map = HashMap::new();
+        let mut stats = CacheStats::default();
+        let mut needs_header = true;
+        let mut needs_newline_repair = false;
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                // a crash mid-append can leave a half-written final line
+                // with no newline; appending onto it would fuse (and
+                // destroy) the next record, so terminate it first
+                needs_newline_repair = !text.is_empty() && !text.ends_with('\n');
+                let mut lines = text.lines();
+                let header_ok = lines
+                    .next()
+                    .and_then(|l| Json::parse(l).ok())
+                    .and_then(|h| h.u64_field("union_result_cache"))
+                    == Some(CACHE_VERSION);
+                if header_ok {
+                    needs_header = false;
+                    for line in lines {
+                        if line.trim().is_empty() {
+                            continue;
+                        }
+                        match Json::parse(line).and_then(|doc| CachedResult::from_json(&doc)) {
+                            Ok((sig, rec)) => {
+                                // identical jobs are deterministic, so
+                                // duplicate records agree; first wins
+                                map.entry(sig).or_insert(rec);
+                                stats.loaded += 1;
+                            }
+                            Err(_) => stats.skipped += 1,
+                        }
+                    }
+                } else if !text.trim().is_empty() {
+                    // wrong version / not a cache file: set it aside
+                    // rather than appending v1 records into it. The
+                    // aside name keeps the full filename and never
+                    // overwrites an earlier set-aside.
+                    let file_name = path
+                        .file_name()
+                        .map(|n| n.to_string_lossy().into_owned())
+                        .unwrap_or_else(|| "cache".into());
+                    let mut aside = path.with_file_name(format!(
+                        "{file_name}.bad-v{CACHE_VERSION}"
+                    ));
+                    let mut n = 1usize;
+                    while aside.exists() {
+                        aside = path.with_file_name(format!(
+                            "{file_name}.bad-v{CACHE_VERSION}.{n}"
+                        ));
+                        n += 1;
+                    }
+                    std::fs::rename(path, &aside).map_err(|e| {
+                        format!("cannot set aside incompatible cache {}: {e}", path.display())
+                    })?;
+                }
+                // an existing-but-empty file still needs its header
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(format!("reading cache {}: {e}", path.display())),
+        }
+        // (re)create with a header if absent, empty or set aside
+        if needs_header {
+            let mut f = File::create(path)
+                .map_err(|e| format!("creating cache {}: {e}", path.display()))?;
+            let header = Json::Obj(vec![(
+                "union_result_cache".into(),
+                Json::Num(CACHE_VERSION as f64),
+            )]);
+            writeln!(f, "{}", header.to_line())
+                .map_err(|e| format!("writing cache header: {e}"))?;
+        }
+        let mut file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("opening cache {} for append: {e}", path.display()))?;
+        if needs_newline_repair && !needs_header {
+            writeln!(file).map_err(|e| format!("repairing cache tail: {e}"))?;
+        }
+        Ok(ResultCache {
+            path: Some(path.to_path_buf()),
+            file: Some(file),
+            map,
+            stats,
+        })
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Distinct signatures currently held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, sig: &str) -> Option<&CachedResult> {
+        self.map.get(sig)
+    }
+
+    /// Record a completed job: insert in memory and append one line to
+    /// the store (flushed immediately; an append failure is reported on
+    /// stderr but never loses the in-memory entry or fails the job).
+    pub fn insert(&mut self, sig: &str, result: CachedResult) {
+        if self.map.contains_key(sig) {
+            return; // deterministic duplicates; keep the first record
+        }
+        if let Some(f) = self.file.as_mut() {
+            let line = result.to_json(sig).to_line();
+            if let Err(e) = writeln!(f, "{line}").and_then(|()| f.flush()) {
+                eprintln!("result cache: append failed: {e}");
+            } else {
+                self.stats.appended += 1;
+            }
+        }
+        self.map.insert(sig.to_string(), result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::LevelMapping;
+
+    fn sample_result(seed: u64) -> CachedResult {
+        CachedResult {
+            score: 1.0 / (seed as f64 + 3.0),
+            mapping: Mapping {
+                levels: vec![LevelMapping {
+                    temporal_order: vec![0, 1],
+                    temporal_tile: vec![seed + 1, 4],
+                    spatial_tile: vec![1, 4],
+                }],
+            },
+            cycles: 123.5 * seed as f64,
+            energy_pj: 9.75e4,
+            utilization: 0.5,
+            macs: 1 << 20,
+            clock_ghz: 1.0,
+            evaluated: 600,
+        }
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        static NEXT: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+        let n = NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "union-cache-test-{}-{tag}-{n}.jsonl",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn record_roundtrip_is_bit_identical() {
+        let r = sample_result(7);
+        let line = r.to_json("sig|x").to_line();
+        let (sig, back) = CachedResult::from_json(&Json::parse(&line).unwrap()).unwrap();
+        assert_eq!(sig, "sig|x");
+        assert_eq!(back.score.to_bits(), r.score.to_bits());
+        assert_eq!(back.cycles.to_bits(), r.cycles.to_bits());
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn persists_across_reopen() {
+        let path = tmp_path("reopen");
+        {
+            let mut c = ResultCache::open(&path).unwrap();
+            c.insert("a", sample_result(1));
+            c.insert("b", sample_result(2));
+            assert_eq!(c.stats().appended, 2);
+        }
+        let c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().loaded, 2);
+        assert_eq!(c.stats().skipped, 0);
+        assert_eq!(c.get("a").unwrap(), &sample_result(1));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_mismatch_sets_file_aside() {
+        let path = tmp_path("badver");
+        let bad = "{\"union_result_cache\":99}\n{\"sig\":\"x\"}\n";
+        std::fs::write(&path, bad).unwrap();
+        let c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.len(), 0);
+        let name = path.file_name().unwrap().to_string_lossy().into_owned();
+        let aside = path.with_file_name(format!("{name}.bad-v1"));
+        assert!(aside.exists(), "old file preserved (full filename kept)");
+        // a second incompatible file must not overwrite the first aside
+        drop(c);
+        std::fs::write(&path, bad).unwrap();
+        let _ = ResultCache::open(&path).unwrap();
+        let aside2 = path.with_file_name(format!("{name}.bad-v1.1"));
+        assert!(aside.exists() && aside2.exists(), "both asides preserved");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&aside).ok();
+        std::fs::remove_file(&aside2).ok();
+    }
+
+    #[test]
+    fn in_memory_cache_never_touches_disk() {
+        let mut c = ResultCache::in_memory();
+        c.insert("a", sample_result(1));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().appended, 0);
+        assert!(c.path().is_none());
+    }
+}

@@ -1,0 +1,43 @@
+//! **Mapping-as-a-service**: the multi-tenant serving layer over the
+//! whole Union stack (`union serve` / `union client` / `union warm`).
+//!
+//! The paper's pitch (§I) is one shared abstraction through which many
+//! users explore algorithms × mappings × cost models; every subsystem
+//! below this one (engine [`crate::engine::Session`]s, the
+//! [`crate::network`] orchestrator, [`crate::dse`]) is batch/CLI-only —
+//! all memoization dies with the process and concurrent users cannot
+//! share a search. This module is the missing layer, built std-only:
+//!
+//! * [`proto`] — a JSON-lines request protocol (search / evaluate /
+//!   status / shutdown) served over TCP and stdin, with a from-scratch
+//!   JSON codec whose float formatting round-trips bit-exactly;
+//! * [`broker`] — the sharded broker: canonical job signatures,
+//!   persistent-cache fast path, in-flight request coalescing
+//!   (concurrent identical queries cost one search), signature-hash
+//!   routing to worker shards owning long-lived engine sessions,
+//!   bounded queues with explicit `overloaded` backpressure, and
+//!   graceful drain;
+//! * [`cache`] — the versioned, corruption-tolerant on-disk result
+//!   store that survives restarts and powers `union warm`;
+//! * [`server`] — the TCP accept loop, the `--stdio` scripting mode and
+//!   the blocking client helper.
+//!
+//! Determinism is the load-bearing property: a job's canonical
+//! signature is a pure function of the request, searches are
+//! thread-count-invariant, and cache records round-trip bit-exactly —
+//! so cached, coalesced and fresh answers to one job are all
+//! **identical**, and a service answer equals `union network` run
+//! locally on the same job. `tests/service.rs` and CI's service smoke
+//! job pin every link of that chain.
+
+pub mod broker;
+pub mod cache;
+pub mod proto;
+pub mod server;
+
+pub use broker::{
+    job_signature, Broker, BrokerConfig, BrokerStats, CostKind, JobDone, JobRequest, Submitted,
+};
+pub use cache::{CacheStats, CachedResult, ResultCache, CACHE_VERSION};
+pub use proto::{mapping_from_json, mapping_to_json, JobSpec, Json, Request};
+pub use server::{client_request, resolve_spec, serve_stdio, ServeConfig, Server};

@@ -1,0 +1,686 @@
+//! The **JSON-lines wire protocol** of the mapping service.
+//!
+//! One request per line, one (or more, for scripting convenience)
+//! response lines back — the same framing over TCP and over
+//! stdin/stdout, so `union serve --stdio` is scriptable with a heredoc
+//! and the TCP path needs no extra framing layer. The JSON codec is a
+//! from-scratch recursive-descent parser/printer (the offline build has
+//! no serde), shared with the persistent result cache, whose records
+//! are the same [`Json`] documents appended to a file.
+//!
+//! ## Requests
+//!
+//! ```text
+//! {"type":"search","id":"r1","workload":"gemm:64x64x64","arch":"edge",
+//!  "cost":"analytical","objective":"edp","effort":"fast","seed":42}
+//! {"type":"evaluate","workload":"gemm:8x8x8","arch":"fig5","mapping":[...]}
+//! {"type":"status"}
+//! {"type":"shutdown"}
+//! ```
+//!
+//! `search` fields beyond `workload` are optional (defaults in
+//! brackets): `arch` [`edge`], `cost` [`analytical`], `objective`
+//! [`edp`], `effort` (`fast`, `thorough` or a sample count) [`fast`],
+//! `seed` [42], `constraints` (inline `.ucon` text) [none], `id` (any
+//! string, echoed back) [absent].
+//!
+//! ## Responses
+//!
+//! Every response carries `"type"` and `"ok"`. A `search` answer is a
+//! `result` (score + summary metrics + the mapping as a nested array,
+//! losslessly decodable via [`mapping_from_json`]), a `status` answer
+//! mirrors the broker counters, and errors/backpressure come back as
+//! `error` / `overloaded` lines tied to the request `id`.
+//!
+//! Floating-point numbers are printed with Rust's shortest round-trip
+//! formatting, so a score that travels through the wire (or the
+//! on-disk cache) parses back to the **bit-identical** `f64` — the
+//! foundation of the "cached result == searched result" guarantee.
+
+use crate::mappers::Objective;
+use crate::mapping::{LevelMapping, Mapping};
+
+/// A parsed JSON value. Objects preserve insertion order (we never need
+/// map semantics beyond key lookup, and ordered output keeps responses
+/// and cache records diffable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.get(key)? {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn num(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn u64_field(&self, key: &str) -> Option<u64> {
+        let n = self.num(key)?;
+        if n.is_finite() && n >= 0.0 {
+            Some(n as u64)
+        } else {
+            None
+        }
+    }
+
+    pub fn bool_field(&self, key: &str) -> Option<bool> {
+        match self.get(key)? {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn arr(&self, key: &str) -> Option<&[Json]> {
+        match self.get(key)? {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Serialize to a single line (no pretty-printing: the protocol is
+    /// line-framed).
+    pub fn to_line(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // shortest round-trip formatting: parses back to the
+                    // bit-identical f64
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_json_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_json_string(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse one JSON document from `src` (trailing whitespace allowed,
+    /// trailing garbage is an error — cache records and protocol lines
+    /// are exactly one document each).
+    pub fn parse(src: &str) -> Result<Json, String> {
+        let bytes = src.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(v)
+    }
+}
+
+fn write_json_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos).copied() {
+        None => Err("unexpected end of input".into()),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'"') => parse_string(b, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos).copied() {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {pos}")),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    return Err(format!("expected ':' at byte {pos}"));
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos).copied() {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {pos}")),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {pos}"))
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).map_err(|_| "bad utf8 in number")?;
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number '{text}' at byte {start}"))
+}
+
+/// Read the 4 hex digits of a `\uXXXX` escape; `u_pos` points at the `u`.
+fn parse_u_escape(b: &[u8], u_pos: usize) -> Result<u32, String> {
+    let hex = b.get(u_pos + 1..u_pos + 5).ok_or("truncated \\u escape")?;
+    let hex = std::str::from_utf8(hex).map_err(|_| "bad \\u escape")?;
+    u32::from_str_radix(hex, 16).map_err(|_| format!("bad \\u escape '{hex}'"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    if b.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {pos}"));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    let mut chunk_start = *pos;
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                out.push_str(
+                    std::str::from_utf8(&b[chunk_start..*pos]).map_err(|_| "bad utf8")?,
+                );
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                out.push_str(
+                    std::str::from_utf8(&b[chunk_start..*pos]).map_err(|_| "bad utf8")?,
+                );
+                *pos += 1;
+                match b.get(*pos).copied() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let code = parse_u_escape(b, *pos)?;
+                        *pos += 4;
+                        if (0xD800..0xDC00).contains(&code) {
+                            // high surrogate: standard encoders emit
+                            // non-BMP characters as \uD8xx\uDCxx pairs —
+                            // combine with the mandatory low half
+                            if b.get(*pos + 1..*pos + 3) == Some(&b"\\u"[..]) {
+                                let low = parse_u_escape(b, *pos + 2)?;
+                                if (0xDC00..0xE000).contains(&low) {
+                                    let c = 0x10000
+                                        + ((code - 0xD800) << 10)
+                                        + (low - 0xDC00);
+                                    out.push(char::from_u32(c).unwrap_or('\u{FFFD}'));
+                                    *pos += 6;
+                                } else {
+                                    out.push('\u{FFFD}'); // unpaired high
+                                }
+                            } else {
+                                out.push('\u{FFFD}'); // unpaired high
+                            }
+                        } else if (0xDC00..0xE000).contains(&code) {
+                            out.push('\u{FFFD}'); // stray low surrogate
+                        } else {
+                            out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        }
+                    }
+                    _ => return Err(format!("bad escape at byte {pos}")),
+                }
+                *pos += 1;
+                chunk_start = *pos;
+            }
+            _ => *pos += 1,
+        }
+    }
+    Err("unterminated string".into())
+}
+
+// ---------------------------------------------------------------------------
+// mapping <-> JSON
+// ---------------------------------------------------------------------------
+
+/// Encode a mapping as a nested array: one `[temporal_order,
+/// temporal_tile, spatial_tile]` triple per cluster level, outermost
+/// first. Lossless — see [`mapping_from_json`].
+pub fn mapping_to_json(m: &Mapping) -> Json {
+    Json::Arr(
+        m.levels
+            .iter()
+            .map(|l| {
+                Json::Arr(vec![
+                    Json::Arr(l.temporal_order.iter().map(|&d| Json::Num(d as f64)).collect()),
+                    Json::Arr(l.temporal_tile.iter().map(|&t| Json::Num(t as f64)).collect()),
+                    Json::Arr(l.spatial_tile.iter().map(|&t| Json::Num(t as f64)).collect()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Decode a mapping produced by [`mapping_to_json`].
+pub fn mapping_from_json(j: &Json) -> Result<Mapping, String> {
+    let levels = match j {
+        Json::Arr(levels) => levels,
+        _ => return Err("mapping must be an array of levels".into()),
+    };
+    let mut out = Vec::with_capacity(levels.len());
+    for (i, level) in levels.iter().enumerate() {
+        let triple = match level {
+            Json::Arr(t) if t.len() == 3 => t,
+            _ => return Err(format!("mapping level {i} must be [order, tt, st]")),
+        };
+        let ints = |j: &Json, what: &str| -> Result<Vec<u64>, String> {
+            match j {
+                Json::Arr(v) => v
+                    .iter()
+                    .map(|x| match x {
+                        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Ok(*n as u64),
+                        _ => Err(format!("level {i} {what}: not a non-negative integer")),
+                    })
+                    .collect(),
+                _ => Err(format!("level {i} {what} must be an array")),
+            }
+        };
+        out.push(LevelMapping {
+            temporal_order: ints(&triple[0], "order")?.iter().map(|&d| d as usize).collect(),
+            temporal_tile: ints(&triple[1], "temporal_tile")?,
+            spatial_tile: ints(&triple[2], "spatial_tile")?,
+        });
+    }
+    Ok(Mapping { levels: out })
+}
+
+// ---------------------------------------------------------------------------
+// requests
+// ---------------------------------------------------------------------------
+
+/// A `search`/`evaluate` job description as it appears on the wire —
+/// spec *strings*, not parsed objects; the server resolves them with
+/// the same parsers the CLI uses, so a job means exactly the same
+/// thing whether it arrives over TCP or on `union network`'s command
+/// line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Workload spec (`gemm:MxNxK`, `conv:...`, a Table IV name, ...).
+    pub workload: String,
+    /// Arch spec (`edge`, `cloud:32x64`, a `.uarch` path, ...).
+    pub arch: String,
+    /// Cost model name (`analytical` | `maestro`).
+    pub cost: String,
+    pub objective: Objective,
+    /// Per-job candidate budget (already resolved from `effort`).
+    pub samples: usize,
+    pub seed: u64,
+    /// Inline `.ucon` constraints text; empty = unconstrained.
+    pub constraints: String,
+}
+
+/// A parsed protocol request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Search { id: Option<String>, spec: JobSpec },
+    Evaluate { id: Option<String>, spec: JobSpec, mapping: Json },
+    Status { id: Option<String> },
+    Shutdown { id: Option<String> },
+}
+
+impl Request {
+    /// The echoed request id, if any.
+    pub fn id(&self) -> Option<&str> {
+        match self {
+            Request::Search { id, .. }
+            | Request::Evaluate { id, .. }
+            | Request::Status { id }
+            | Request::Shutdown { id } => id.as_deref(),
+        }
+    }
+
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let doc = Json::parse(line)?;
+        let id = doc.str("id").map(|s| s.to_string());
+        let typ = doc.str("type").ok_or("request needs a \"type\" field")?;
+        match typ {
+            "status" => Ok(Request::Status { id }),
+            "shutdown" => Ok(Request::Shutdown { id }),
+            "search" => Ok(Request::Search { id, spec: job_spec(&doc)? }),
+            "evaluate" => {
+                let mapping = doc
+                    .get("mapping")
+                    .ok_or("evaluate needs a \"mapping\" field")?
+                    .clone();
+                Ok(Request::Evaluate { id, spec: job_spec(&doc)?, mapping })
+            }
+            other => Err(format!(
+                "unknown request type '{other}' (search, evaluate, status, shutdown)"
+            )),
+        }
+    }
+
+    /// Serialize back to a request line (the client side of the
+    /// protocol; also keeps round-trip tests honest).
+    pub fn to_line(&self) -> String {
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        let push_id = |fields: &mut Vec<(String, Json)>, id: &Option<String>| {
+            if let Some(id) = id {
+                fields.push(("id".into(), Json::Str(id.clone())));
+            }
+        };
+        match self {
+            Request::Status { id } => {
+                fields.push(("type".into(), Json::Str("status".into())));
+                push_id(&mut fields, id);
+            }
+            Request::Shutdown { id } => {
+                fields.push(("type".into(), Json::Str("shutdown".into())));
+                push_id(&mut fields, id);
+            }
+            Request::Search { id, spec } => {
+                fields.push(("type".into(), Json::Str("search".into())));
+                push_id(&mut fields, id);
+                push_spec(&mut fields, spec);
+            }
+            Request::Evaluate { id, spec, mapping } => {
+                fields.push(("type".into(), Json::Str("evaluate".into())));
+                push_id(&mut fields, id);
+                push_spec(&mut fields, spec);
+                fields.push(("mapping".into(), mapping.clone()));
+            }
+        }
+        Json::Obj(fields).to_line()
+    }
+}
+
+fn push_spec(fields: &mut Vec<(String, Json)>, spec: &JobSpec) {
+    fields.push(("workload".into(), Json::Str(spec.workload.clone())));
+    fields.push(("arch".into(), Json::Str(spec.arch.clone())));
+    fields.push(("cost".into(), Json::Str(spec.cost.clone())));
+    fields.push(("objective".into(), Json::Str(objective_flag(spec.objective).into())));
+    fields.push(("samples".into(), Json::Num(spec.samples as f64)));
+    fields.push(("seed".into(), Json::Num(spec.seed as f64)));
+    if !spec.constraints.is_empty() {
+        fields.push(("constraints".into(), Json::Str(spec.constraints.clone())));
+    }
+}
+
+/// Parse the `edp|energy|latency` objective spelling shared by the CLI
+/// and the protocol.
+pub fn parse_objective(s: &str) -> Result<Objective, String> {
+    match s {
+        "edp" => Ok(Objective::Edp),
+        "energy" => Ok(Objective::Energy),
+        "latency" => Ok(Objective::Latency),
+        other => Err(format!("unknown objective '{other}' (edp, energy, latency)")),
+    }
+}
+
+/// The wire spelling of an objective (inverse of [`parse_objective`]).
+pub fn objective_flag(o: Objective) -> &'static str {
+    match o {
+        Objective::Edp => "edp",
+        Objective::Energy => "energy",
+        Objective::Latency => "latency",
+    }
+}
+
+fn job_spec(doc: &Json) -> Result<JobSpec, String> {
+    let workload = doc
+        .str("workload")
+        .ok_or("search/evaluate needs a \"workload\" field")?
+        .to_string();
+    let objective = parse_objective(doc.str("objective").unwrap_or("edp"))?;
+    // `samples` (explicit integer) wins over `effort` (fast|thorough|N)
+    let samples = match doc.u64_field("samples") {
+        Some(n) if n > 0 => n as usize,
+        _ => crate::experiments::Effort::from_flag(doc.str("effort").unwrap_or("fast"))?
+            .samples(),
+    };
+    Ok(JobSpec {
+        workload,
+        arch: doc.str("arch").unwrap_or("edge").to_string(),
+        cost: doc.str("cost").unwrap_or("analytical").to_string(),
+        objective,
+        samples,
+        seed: doc.u64_field("seed").unwrap_or(42),
+        constraints: doc.str("constraints").unwrap_or("").to_string(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrips() {
+        let cases = [
+            "null",
+            "true",
+            "[1,2.5,-3e-2]",
+            "\"a\\\"b\\\\c\\nd\"",
+            "{\"a\":[{\"b\":null}],\"c\":\"x\"}",
+            "{}",
+            "[]",
+        ];
+        for src in cases {
+            let v = Json::parse(src).unwrap();
+            let printed = v.to_line();
+            assert_eq!(Json::parse(&printed).unwrap(), v, "{src}");
+        }
+    }
+
+    #[test]
+    fn surrogate_pairs_decode() {
+        // standard encoders (python json, serde_json, jq) emit non-BMP
+        // characters as \uD8xx\uDCxx pairs — they must combine
+        let v = Json::parse("\"\\ud83d\\ude00 ok\"").unwrap();
+        assert_eq!(v, Json::Str("\u{1F600} ok".into()));
+        // unpaired halves degrade to the replacement char, not an error
+        assert_eq!(
+            Json::parse("\"\\ud83d x\"").unwrap(),
+            Json::Str("\u{FFFD} x".into())
+        );
+        assert_eq!(Json::parse("\"\\ude00\"").unwrap(), Json::Str("\u{FFFD}".into()));
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        for bad in ["", "{", "[1,", "{\"a\"}", "nul", "1 2", "\"unterminated"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_identical() {
+        for v in [1.0 / 3.0, 2.36e-7, f64::MIN_POSITIVE, 1e300, -0.0, 123456.789] {
+            let line = Json::Num(v).to_line();
+            match Json::parse(&line).unwrap() {
+                Json::Num(back) => assert_eq!(back.to_bits(), v.to_bits(), "{line}"),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let spec = JobSpec {
+            workload: "gemm:64x64x64".into(),
+            arch: "edge".into(),
+            cost: "analytical".into(),
+            objective: Objective::Edp,
+            samples: 600,
+            seed: 42,
+            constraints: "parallel_dims: [M, K]\n".into(),
+        };
+        for req in [
+            Request::Status { id: Some("s1".into()) },
+            Request::Shutdown { id: None },
+            Request::Search { id: Some("r1".into()), spec: spec.clone() },
+        ] {
+            let line = req.to_line();
+            assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn request_defaults_apply() {
+        let r = Request::parse("{\"type\":\"search\",\"workload\":\"gemm:8x8x8\"}").unwrap();
+        match r {
+            Request::Search { id, spec } => {
+                assert_eq!(id, None);
+                assert_eq!(spec.arch, "edge");
+                assert_eq!(spec.cost, "analytical");
+                assert_eq!(spec.objective, Objective::Edp);
+                assert_eq!(spec.seed, 42);
+                assert!(spec.samples > 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_errors_are_clear() {
+        assert!(Request::parse("{\"type\":\"search\"}")
+            .unwrap_err()
+            .contains("workload"));
+        assert!(Request::parse("{\"workload\":\"x\"}").unwrap_err().contains("type"));
+        assert!(Request::parse("{\"type\":\"warp\"}").unwrap_err().contains("warp"));
+        assert!(Request::parse("{\"type\":\"evaluate\",\"workload\":\"x\"}")
+            .unwrap_err()
+            .contains("mapping"));
+    }
+
+    #[test]
+    fn mapping_json_roundtrips() {
+        let m = Mapping {
+            levels: vec![
+                LevelMapping {
+                    temporal_order: vec![0, 2, 1],
+                    temporal_tile: vec![4096, 16, 16],
+                    spatial_tile: vec![4096, 16, 16],
+                },
+                LevelMapping {
+                    temporal_order: vec![2, 0, 1],
+                    temporal_tile: vec![1, 1, 1],
+                    spatial_tile: vec![1, 1, 1],
+                },
+            ],
+        };
+        let j = mapping_to_json(&m);
+        let back = mapping_from_json(&Json::parse(&j.to_line()).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn mapping_json_rejects_malformed() {
+        for bad in ["{}", "[[1,2]]", "[[[0],[1],[-1]]]", "[[[0],[1.5],[1]]]"] {
+            let j = Json::parse(bad).unwrap();
+            assert!(mapping_from_json(&j).is_err(), "{bad}");
+        }
+    }
+}

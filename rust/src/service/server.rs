@@ -1,0 +1,535 @@
+//! The service front-ends: a TCP JSON-lines server, a stdin/stdout
+//! loop for scripting, and the blocking client helper `union client`
+//! and the tests use.
+//!
+//! A connection is one thread reading requests line by line and
+//! answering in order (pipelining across *connections* is what the
+//! broker's shards parallelize; within a connection the protocol stays
+//! strictly request/response so clients never have to match ids).
+//! `search` goes through the broker (cache → coalesce → shard);
+//! `evaluate` is served inline — scoring one known mapping costs
+//! microseconds, queueing it would cost more than running it;
+//! `shutdown` drains the broker (every queued job finishes and is
+//! answered), replies, and stops the accept loop.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::cli::{parse_arch, parse_workload};
+use crate::mappers::Objective;
+use crate::mapspace::{constraints_from_str, Constraints};
+
+use super::broker::{job_signature, Broker, BrokerConfig, CostKind, JobRequest, Submitted};
+use super::cache::{CachedResult, ResultCache};
+use super::proto::{
+    mapping_from_json, mapping_to_json, objective_flag, JobSpec, Json, Request,
+};
+
+/// Server knobs (`union serve` flags map 1:1 onto these).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind host (loopback by default: the protocol is unauthenticated).
+    pub host: String,
+    /// Bind port; 0 = ephemeral (tests read back the bound address).
+    pub port: u16,
+    /// Persistent cache path; `None` = in-memory only.
+    pub cache: Option<PathBuf>,
+    pub broker: BrokerConfig,
+    /// Log one line per request to stderr.
+    pub verbose: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".into(),
+            port: 7415,
+            cache: None,
+            broker: BrokerConfig::default(),
+            verbose: false,
+        }
+    }
+}
+
+/// Resolve a wire-level [`JobSpec`] with the same parsers the CLI uses.
+pub fn resolve_spec(spec: &JobSpec) -> Result<JobRequest, String> {
+    let workload = parse_workload(&spec.workload)?;
+    let arch = parse_arch(&spec.arch)?;
+    let cost = CostKind::parse(&spec.cost)?;
+    let constraints = if spec.constraints.is_empty() {
+        Constraints::default()
+    } else {
+        constraints_from_str(&spec.constraints)?
+    };
+    Ok(JobRequest {
+        workload,
+        arch,
+        cost,
+        objective: spec.objective,
+        constraints,
+        samples: spec.samples.max(1),
+        seed: spec.seed,
+    })
+}
+
+fn id_field(fields: &mut Vec<(String, Json)>, id: &Option<String>) {
+    if let Some(id) = id {
+        fields.push(("id".into(), Json::Str(id.clone())));
+    }
+}
+
+fn error_response(id: &Option<String>, message: &str) -> Json {
+    let mut fields = vec![
+        ("type".into(), Json::Str("error".into())),
+        ("ok".into(), Json::Bool(false)),
+    ];
+    id_field(&mut fields, id);
+    fields.push(("message".into(), Json::Str(message.to_string())));
+    Json::Obj(fields)
+}
+
+fn result_response(
+    id: &Option<String>,
+    sig: &str,
+    objective: Objective,
+    result: &CachedResult,
+    cached: bool,
+    coalesced: bool,
+    shard: Option<usize>,
+) -> Json {
+    let mut fields = vec![
+        ("type".into(), Json::Str("result".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.extend([
+        ("cached".into(), Json::Bool(cached)),
+        ("coalesced".into(), Json::Bool(coalesced)),
+        (
+            "shard".into(),
+            shard.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+        ),
+        ("objective".into(), Json::Str(objective_flag(objective).into())),
+        ("score".into(), Json::Num(result.score)),
+        ("cycles".into(), Json::Num(result.cycles)),
+        ("energy_pj".into(), Json::Num(result.energy_pj)),
+        ("utilization".into(), Json::Num(result.utilization)),
+        ("macs".into(), Json::Num(result.macs as f64)),
+        ("clock_ghz".into(), Json::Num(result.clock_ghz)),
+        ("evaluated".into(), Json::Num(result.evaluated as f64)),
+        ("mapping".into(), mapping_to_json(&result.mapping)),
+        ("signature".into(), Json::Str(sig.to_string())),
+    ]);
+    Json::Obj(fields)
+}
+
+fn engine_json(e: &crate::engine::EngineStats) -> Json {
+    Json::Obj(vec![
+        ("proposed".into(), Json::Num(e.proposed as f64)),
+        ("scored".into(), Json::Num(e.scored as f64)),
+        ("cost_evals".into(), Json::Num(e.cost_evals as f64)),
+        ("memo_hits".into(), Json::Num(e.memo_hits as f64)),
+        ("pruned".into(), Json::Num(e.pruned as f64)),
+        ("rejected".into(), Json::Num(e.rejected as f64)),
+    ])
+}
+
+fn status_response(id: &Option<String>, broker: &Broker) -> Json {
+    let stats = broker.stats();
+    let (queued, active) = broker.load();
+    let (cache_entries, cache) = broker.cache_stats();
+    let mut fields = vec![
+        ("type".into(), Json::Str("status".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.extend([
+        ("shards".into(), Json::Num(broker.config().shards as f64)),
+        ("queue_capacity".into(), Json::Num(broker.config().queue_capacity as f64)),
+        (
+            "queued".into(),
+            Json::Arr(queued.iter().map(|&q| Json::Num(q as f64)).collect()),
+        ),
+        ("active".into(), Json::Num(active as f64)),
+        ("requests".into(), Json::Num(stats.requests as f64)),
+        ("cache_hits".into(), Json::Num(stats.cache_hits as f64)),
+        ("coalesced".into(), Json::Num(stats.coalesced as f64)),
+        ("searched".into(), Json::Num(stats.searched as f64)),
+        ("overloaded".into(), Json::Num(stats.overloaded as f64)),
+        ("errors".into(), Json::Num(stats.errors as f64)),
+        ("evaluates".into(), Json::Num(stats.evaluates as f64)),
+        ("cache_entries".into(), Json::Num(cache_entries as f64)),
+        ("cache_loaded".into(), Json::Num(cache.loaded as f64)),
+        ("cache_skipped".into(), Json::Num(cache.skipped as f64)),
+        ("cache_appended".into(), Json::Num(cache.appended as f64)),
+        ("engine".into(), engine_json(&stats.engine)),
+    ]);
+    Json::Obj(fields)
+}
+
+/// Handle one request line against the broker, blocking until the
+/// answer is available. Returns the response plus "shut down now".
+pub fn handle_line(broker: &Broker, line: &str) -> (Json, bool) {
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err(e) => return (error_response(&None, &e), false),
+    };
+    let id = req.id().map(|s| s.to_string());
+    match req {
+        Request::Status { .. } => (status_response(&id, broker), false),
+        Request::Shutdown { .. } => {
+            // drain every queued/running job (their waiters are all
+            // answered first), then acknowledge
+            let stats = broker.drain();
+            let mut fields = vec![
+                ("type".into(), Json::Str("shutdown".into())),
+                ("ok".into(), Json::Bool(true)),
+            ];
+            id_field(&mut fields, &id);
+            fields.push(("searched".into(), Json::Num(stats.searched as f64)));
+            fields.push(("requests".into(), Json::Num(stats.requests as f64)));
+            (Json::Obj(fields), true)
+        }
+        Request::Search { spec, .. } => {
+            let job = match resolve_spec(&spec) {
+                Ok(j) => j,
+                Err(e) => return (error_response(&id, &e), false),
+            };
+            let sig = job_signature(&job);
+            let objective = job.objective;
+            match broker.submit_with_signature(job, sig.clone()) {
+                Submitted::Cached(hit) => (
+                    result_response(&id, &sig, objective, &hit, true, false, None),
+                    false,
+                ),
+                Submitted::Pending { rx, coalesced, shard: _ } => match rx.recv() {
+                    Ok(done) => match done.result {
+                        Ok(result) => (
+                            result_response(
+                                &id,
+                                &done.sig,
+                                objective,
+                                &result,
+                                false,
+                                coalesced,
+                                Some(done.shard),
+                            ),
+                            false,
+                        ),
+                        Err(e) => (error_response(&id, &e), false),
+                    },
+                    Err(_) => (error_response(&id, "broker dropped the job"), false),
+                },
+                Submitted::Overloaded { shard, depth } => {
+                    let mut fields = vec![
+                        ("type".into(), Json::Str("overloaded".into())),
+                        ("ok".into(), Json::Bool(false)),
+                    ];
+                    id_field(&mut fields, &id);
+                    fields.extend([
+                        ("shard".into(), Json::Num(shard as f64)),
+                        ("depth".into(), Json::Num(depth as f64)),
+                        (
+                            "message".into(),
+                            Json::Str("queue full; retry with backoff".into()),
+                        ),
+                    ]);
+                    (Json::Obj(fields), false)
+                }
+                Submitted::Draining => (error_response(&id, "server is draining"), false),
+                Submitted::Rejected(e) => (error_response(&id, &e), false),
+            }
+        }
+        Request::Evaluate { spec, mapping, .. } => {
+            let reply = (|| -> Result<Json, String> {
+                let job = resolve_spec(&spec)?;
+                let mapping = mapping_from_json(&mapping)?;
+                let problem = job.workload.problem();
+                let model = job.cost.model();
+                model.conformable(&problem, &job.arch)?;
+                mapping.check(&problem, &job.arch).map_err(|e| e.to_string())?;
+                let est = model.evaluate(&problem, &job.arch, &mapping)?;
+                broker.note_evaluate();
+                let result = CachedResult {
+                    score: job.objective.score(&est),
+                    mapping,
+                    cycles: est.cycles,
+                    energy_pj: est.energy_pj,
+                    utilization: est.utilization,
+                    macs: est.macs,
+                    clock_ghz: est.clock_ghz,
+                    evaluated: 1,
+                };
+                Ok(result_response(
+                    &id,
+                    &job_signature(&job),
+                    job.objective,
+                    &result,
+                    false,
+                    false,
+                    None,
+                ))
+            })();
+            match reply {
+                Ok(r) => (r, false),
+                Err(e) => (error_response(&id, &e), false),
+            }
+        }
+    }
+}
+
+/// A running TCP server. Construct with [`Server::bind`], then drive
+/// with [`Server::run`] (blocks until a `shutdown` request).
+pub struct Server {
+    listener: TcpListener,
+    broker: Arc<Broker>,
+    shutdown: Arc<AtomicBool>,
+    verbose: bool,
+}
+
+impl Server {
+    /// Bind the listener and start the broker (with the persistent
+    /// cache loaded, when configured).
+    pub fn bind(config: ServeConfig) -> Result<Server, String> {
+        let cache = match &config.cache {
+            Some(path) => ResultCache::open(path)?,
+            None => ResultCache::in_memory(),
+        };
+        let listener = TcpListener::bind((config.host.as_str(), config.port))
+            .map_err(|e| format!("bind {}:{}: {e}", config.host, config.port))?;
+        let broker = Broker::with_cache(config.broker.clone(), cache);
+        Ok(Server {
+            listener,
+            broker: Arc::new(broker),
+            shutdown: Arc::new(AtomicBool::new(false)),
+            verbose: config.verbose,
+        })
+    }
+
+    /// The locally bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| e.to_string())
+    }
+
+    /// Accept loop: one thread per connection, until a `shutdown`
+    /// request drains the broker. Returns the drained broker's final
+    /// stats.
+    pub fn run(self) -> Result<super::broker::BrokerStats, String> {
+        let addr = self.local_addr()?;
+        // each live connection: a write-half clone (so shutdown can
+        // unblock a reader parked in a blocking read — an idle client
+        // must not keep the daemon alive forever) plus its thread
+        let mut conns: Vec<(TcpStream, std::thread::JoinHandle<()>)> = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("accept: {e}");
+                    continue;
+                }
+            };
+            // a clone we keep is the only way to force-close the
+            // connection later; without one (fd exhaustion) refuse it
+            let clone = match stream.try_clone() {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("refusing connection (clone failed): {e}");
+                    continue;
+                }
+            };
+            // reap finished connections so the list tracks *live*
+            // connections, not total connections ever served
+            conns.retain(|(_, h)| !h.is_finished());
+            let broker = Arc::clone(&self.broker);
+            let shutdown = Arc::clone(&self.shutdown);
+            let verbose = self.verbose;
+            let handle = std::thread::spawn(move || {
+                if let Err(e) = serve_connection(stream, &broker, &shutdown, addr, verbose) {
+                    if verbose {
+                        eprintln!("connection: {e}");
+                    }
+                }
+            });
+            conns.push((clone, handle));
+        }
+        // unblock any thread parked in a read, then join them all.
+        // Read-half only: a handler that just received its JobDone from
+        // the drain must still be able to WRITE its response — closing
+        // both halves here would race the drained answers off the wire.
+        for (s, _) in &conns {
+            let _ = s.shutdown(std::net::Shutdown::Read);
+        }
+        for (_, c) in conns {
+            let _ = c.join();
+        }
+        // the shutdown handler already drained; this reports final stats
+        Ok(self.broker.drain())
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    broker: &Arc<Broker>,
+    shutdown: &Arc<AtomicBool>,
+    addr: std::net::SocketAddr,
+    verbose: bool,
+) -> Result<(), String> {
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if verbose {
+            eprintln!("<- {line}");
+        }
+        let (response, stop) = handle_line(broker, &line);
+        if !matches!(response, Json::Null) {
+            writeln!(writer, "{}", response.to_line()).map_err(|e| e.to_string())?;
+            writer.flush().map_err(|e| e.to_string())?;
+        }
+        if stop {
+            shutdown.store(true, Ordering::SeqCst);
+            // unblock the accept loop. Connecting to an unspecified
+            // bind address (0.0.0.0 / ::) is platform-dependent, so
+            // wake via loopback on the same port in that case.
+            let mut wake = addr;
+            if wake.ip().is_unspecified() {
+                wake.set_ip(match wake.ip() {
+                    std::net::IpAddr::V4(_) => {
+                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
+                    }
+                    std::net::IpAddr::V6(_) => {
+                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
+                    }
+                });
+            }
+            let _ = TcpStream::connect(wake);
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Serve the protocol over stdin/stdout (the `--stdio` scripting mode):
+/// same semantics as TCP, one process, exits after `shutdown` or EOF.
+pub fn serve_stdio(config: ServeConfig) -> Result<super::broker::BrokerStats, String> {
+    let cache = match &config.cache {
+        Some(path) => ResultCache::open(path)?,
+        None => ResultCache::in_memory(),
+    };
+    let broker = Broker::with_cache(config.broker.clone(), cache);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (response, stop) = handle_line(&broker, &line);
+        if !matches!(response, Json::Null) {
+            let mut out = stdout.lock();
+            writeln!(out, "{}", response.to_line()).map_err(|e| e.to_string())?;
+            out.flush().map_err(|e| e.to_string())?;
+        }
+        if stop {
+            return Ok(broker.stats());
+        }
+    }
+    Ok(broker.drain())
+}
+
+/// Blocking client: connect, send one request line, return the first
+/// response document. `union client` and the e2e tests sit on this.
+pub fn client_request(addr: &str, request: &Request) -> Result<Json, String> {
+    let stream =
+        TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    writeln!(writer, "{}", request.to_line()).map_err(|e| e.to_string())?;
+    writer.flush().map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err("server closed the connection without answering".into());
+        }
+        if !line.trim().is_empty() {
+            return Json::parse(line.trim());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_spec_uses_cli_parsers() {
+        let spec = JobSpec {
+            workload: "gemm:8x8x8".into(),
+            arch: "edge".into(),
+            cost: "analytical".into(),
+            objective: Objective::Edp,
+            samples: 10,
+            seed: 1,
+            constraints: String::new(),
+        };
+        let job = resolve_spec(&spec).unwrap();
+        assert_eq!(job.workload.macs(), 512);
+        assert_eq!(job.arch.num_pes(), 256);
+        let bad = JobSpec { workload: "nope".into(), ..spec };
+        assert!(resolve_spec(&bad).is_err());
+    }
+
+    #[test]
+    fn handle_line_reports_parse_errors_in_band() {
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        let (resp, stop) = handle_line(&broker, "not json");
+        assert!(!stop);
+        assert_eq!(resp.str("type"), Some("error"));
+        assert_eq!(resp.bool_field("ok"), Some(false));
+        let (resp, _) = handle_line(&broker, "{\"type\":\"search\"}");
+        assert!(resp.str("message").unwrap().contains("workload"));
+    }
+
+    #[test]
+    fn evaluate_roundtrips_a_searched_mapping() {
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        let (resp, _) = handle_line(
+            &broker,
+            "{\"type\":\"search\",\"workload\":\"gemm:16x16x16\",\"samples\":80,\"seed\":7}",
+        );
+        assert_eq!(resp.str("type"), Some("result"), "{}", resp.to_line());
+        let mapping = resp.get("mapping").unwrap().clone();
+        let eval = Request::Evaluate {
+            id: Some("e1".into()),
+            spec: JobSpec {
+                workload: "gemm:16x16x16".into(),
+                arch: "edge".into(),
+                cost: "analytical".into(),
+                objective: Objective::Edp,
+                samples: 80,
+                seed: 7,
+                constraints: String::new(),
+            },
+            mapping,
+        };
+        let (eresp, _) = handle_line(&broker, &eval.to_line());
+        assert_eq!(eresp.str("type"), Some("result"), "{}", eresp.to_line());
+        // evaluating the best mapping reproduces the search's score bits
+        assert_eq!(
+            eresp.num("score").unwrap().to_bits(),
+            resp.num("score").unwrap().to_bits()
+        );
+        assert_eq!(broker.stats().evaluates, 1);
+    }
+}

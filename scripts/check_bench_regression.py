@@ -2,17 +2,26 @@
 """Bench-regression gate: compare BENCH_<name>.json runs to baselines.
 
 The benches (``cargo bench --bench perf_hotpath --bench network_sweep
---bench dse_sweep`` with ``UNION_BENCH_DIR`` set) write one JSON file
-each, recording every timing report (with candidates/sec throughput
-where applicable) and every named metric (dedup hit-rate, dominated-skip
-count, ...). This script fails CI when the current run regresses against
-the committed baselines in bench/baselines/:
+--bench dse_sweep --bench service_throughput`` with ``UNION_BENCH_DIR``
+set) write one JSON file each, recording every timing report (with
+candidates/sec throughput where applicable) and every named metric
+(dedup hit-rate, dominated-skip count, ...). This script fails CI when
+the current run regresses against the committed baselines in
+bench/baselines/:
 
 * every baseline *throughput* must reach at least (1 - threshold) x its
   baseline value (higher is better);
 * every baseline *gated metric* is held to the same rule;
 * a baseline entry missing from the current run fails outright —
   coverage cannot silently vanish;
+* the reverse direction fails too: a gated entry the current run emits
+  with no baseline record, and a whole BENCH_<name>.json with no
+  committed baseline, each fail with a message naming the entry and
+  pointing at ``--update`` — new coverage must be seeded, not silently
+  ungated;
+* malformed bench JSON (unparsable file, entry without a name,
+  non-numeric value) fails with a clear per-file message, never a
+  traceback;
 * plain (non-gated) metrics and timing means are recorded for the
   trajectory but never gate.
 
@@ -28,17 +37,46 @@ import shutil
 import sys
 
 
-def gated_entries(doc):
-    """Extract {key: value} for everything that participates in the gate."""
+def gated_entries(doc, fname):
+    """Extract {key: value} for everything that participates in the gate.
+
+    Malformed entries (no name, non-numeric value) fail with a clear
+    message naming the file and entry, never a KeyError traceback.
+    """
     out = {}
     for r in doc.get("results", []):
+        name = r.get("name")
+        if not name:
+            raise BenchFileError(f"{fname}: result entry without a 'name': {r!r}")
         tp = r.get("throughput")
         if tp is not None:
-            out["throughput:" + r["name"]] = float(tp)
+            try:
+                out["throughput:" + name] = float(tp)
+            except (TypeError, ValueError):
+                raise BenchFileError(
+                    f"{fname}: throughput of '{name}' is not a number: {tp!r}")
     for m in doc.get("metrics", []):
+        name = m.get("name")
+        if not name:
+            raise BenchFileError(f"{fname}: metric entry without a 'name': {m!r}")
         if m.get("gated") and m.get("value") is not None:
-            out["metric:" + m["name"]] = float(m["value"])
+            try:
+                out["metric:" + name] = float(m["value"])
+            except (TypeError, ValueError):
+                raise BenchFileError(
+                    f"{fname}: gated metric '{name}' is not a number: {m['value']!r}")
     return out
+
+
+class BenchFileError(Exception):
+    """A bench JSON file that cannot be compared (clear message, no traceback)."""
+
+
+def load_bench_file(path):
+    try:
+        return json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        raise BenchFileError(f"{path}: unreadable bench JSON ({e})")
 
 
 def render_table(rows, markdown=False):
@@ -77,15 +115,20 @@ def main():
     current = pathlib.Path(args.current)
 
     if args.update:
+        files = sorted(current.glob("BENCH_*.json"))
+        if not files:
+            sys.exit(f"no BENCH_*.json files found in {current}")
+        # validate everything BEFORE copying anything: a malformed file
+        # must refuse the whole update, not leave baselines half-replaced
+        for cur in files:
+            try:
+                load_bench_file(cur)
+            except BenchFileError as e:
+                sys.exit(f"refusing to update baselines (nothing copied): {e}")
         baselines.mkdir(parents=True, exist_ok=True)
-        updated = 0
-        for cur in sorted(current.glob("BENCH_*.json")):
-            json.loads(cur.read_text())  # refuse to commit malformed JSON
+        for cur in files:
             shutil.copy(cur, baselines / cur.name)
             print(f"baseline updated: {baselines / cur.name}")
-            updated += 1
-        if updated == 0:
-            sys.exit(f"no BENCH_*.json files found in {current}")
         return
 
     baseline_files = sorted(baselines.glob("BENCH_*.json"))
@@ -99,8 +142,12 @@ def main():
         if not cur_path.exists():
             failures.append(f"{base_path.name}: current run file missing from {current}")
             continue
-        base = gated_entries(json.loads(base_path.read_text()))
-        cur = gated_entries(json.loads(cur_path.read_text()))
+        try:
+            base = gated_entries(load_bench_file(base_path), base_path.name)
+            cur = gated_entries(load_bench_file(cur_path), cur_path.name)
+        except BenchFileError as e:
+            failures.append(str(e))
+            continue
         for key, base_val in sorted(base.items()):
             if key not in cur:
                 failures.append(f"{base_path.name}: '{key}' missing from current run")
@@ -113,6 +160,23 @@ def main():
                 failures.append(
                     f"{base_path.name}: '{key}' regressed to {cur_val:.4g} "
                     f"(baseline {base_val:.4g}, floor {floor:.4g})")
+        # a bench that now emits gated entries the baseline does not
+        # record is running ungated — fail loudly rather than letting
+        # new coverage silently float
+        for key in sorted(set(cur) - set(base)):
+            failures.append(
+                f"{base_path.name}: current run emits '{key}' but the baseline has "
+                f"no entry for it — record it with --update (and commit bench/baselines/)")
+
+    # whole bench files that exist in the current run but have no
+    # committed baseline at all: new benches that need seeding
+    baseline_names = {p.name for p in baseline_files}
+    new_benches = [p.name for p in sorted(current.glob("BENCH_*.json"))
+                   if p.name not in baseline_names]
+    for name in new_benches:
+        failures.append(
+            f"{name}: new bench with no committed baseline — seed it with --update "
+            f"(and commit bench/baselines/{name})")
 
     print(render_table(rows))
     print(f"\ncompared {len(rows)} gated entries across {len(baseline_files)} bench files")
@@ -135,10 +199,11 @@ def main():
         print("\nbench-regression FAILURES:", file=sys.stderr)
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
-        print("\nIf a slowdown is expected (e.g. the bench now does more work) or a "
-              "speedup legitimately moved a baseline, refresh with:\n"
+        print("\nIf a slowdown is expected (e.g. the bench now does more work), a "
+              "speedup legitimately moved a baseline, or a new bench/metric needs "
+              "seeding, refresh with:\n"
               "  UNION_BENCH_DIR=$PWD/out/bench cargo bench --bench perf_hotpath "
-              "--bench network_sweep --bench dse_sweep\n"
+              "--bench network_sweep --bench dse_sweep --bench service_throughput\n"
               "  python3 scripts/check_bench_regression.py --update\n"
               "and commit bench/baselines/ (see bench/README.md).", file=sys.stderr)
         sys.exit(1)

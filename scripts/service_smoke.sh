@@ -1,0 +1,95 @@
+#!/usr/bin/env bash
+# Service smoke test: start `union serve`, drive it with `union client`,
+# and verify the serving invariants end to end:
+#
+#   1. the served best mapping is BYTE-IDENTICAL to the direct CLI
+#      answer for the same job (`union network --mappings`);
+#   2. a second client run of the same job is answered from the
+#      persistent cache (`"cached":true`) with the identical mapping;
+#   3. status reports exactly one search;
+#   4. shutdown drains gracefully and the server process exits 0.
+#
+# Used by CI's service-smoke job; runnable locally the same way:
+#   scripts/service_smoke.sh
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+OUT=out/service
+mkdir -p "$OUT"
+
+echo "== building (release) =="
+cargo build --release --bin union
+BIN=target/release/union
+
+PORT=$(python3 -c 'import socket; s=socket.socket(); s.bind(("127.0.0.1",0)); print(s.getsockname()[1]); s.close()')
+CACHE="$OUT/cache.jsonl"
+rm -f "$CACHE"
+
+echo "== starting union serve on port $PORT =="
+"$BIN" serve --port "$PORT" --cache "$CACHE" --shards 2 &
+SERVER_PID=$!
+trap 'kill "$SERVER_PID" 2>/dev/null || true' EXIT
+
+# wait until the daemon answers status (it builds its broker first)
+up=0
+for _ in $(seq 1 50); do
+    if "$BIN" client status --port "$PORT" >/dev/null 2>&1; then
+        up=1
+        break
+    fi
+    if ! kill -0 "$SERVER_PID" 2>/dev/null; then
+        echo "ERROR: server exited before accepting connections" >&2
+        exit 1
+    fi
+    sleep 0.2
+done
+if [[ $up -ne 1 ]]; then
+    echo "ERROR: server never became ready" >&2
+    exit 1
+fi
+
+JOB=(--workload gemm:64x32x32 --arch edge --cost analytical --objective edp --effort 200 --seed 7)
+
+echo "== direct CLI answer for the same job =="
+"$BIN" network --model gemm:64x32x32 --arch edge --cost analytical \
+    --objective edp --effort 200 --seed 7 --mappings | tee "$OUT/direct.txt"
+# the mapping block is the canonical rendering, from its first line on
+sed -n '/^target_cluster/,$p' "$OUT/direct.txt" > "$OUT/direct_mapping.txt"
+test -s "$OUT/direct_mapping.txt"
+
+echo "== first client run (fresh search) =="
+"$BIN" client search "${JOB[@]}" --port "$PORT" --json | tee "$OUT/first.json"
+grep -q '"cached":false' "$OUT/first.json"
+"$BIN" client search "${JOB[@]}" --port "$PORT" --mapping-only > "$OUT/served_mapping.txt"
+
+echo "== served mapping must be byte-identical to the direct answer =="
+cmp "$OUT/direct_mapping.txt" "$OUT/served_mapping.txt"
+
+echo "== second client run must come from the persistent cache =="
+"$BIN" client search "${JOB[@]}" --port "$PORT" --json | tee "$OUT/second.json"
+grep -q '"cached":true' "$OUT/second.json"
+# bit-identical responses: the full JSON lines match except the id-free
+# fields that encode provenance; compare score + mapping directly
+python3 - "$OUT/first.json" "$OUT/second.json" <<'EOF'
+import json, sys
+a = json.load(open(sys.argv[1]))
+b = json.load(open(sys.argv[2]))
+assert a["score"] == b["score"], (a["score"], b["score"])
+assert a["mapping"] == b["mapping"], "cached mapping diverged"
+assert a["signature"] == b["signature"], "job signature moved between runs"
+EOF
+
+echo "== status + graceful shutdown =="
+"$BIN" client status --port "$PORT" | tee "$OUT/status.txt"
+grep -q 'searched=1 ' "$OUT/status.txt"
+grep -q 'cache_hits=[1-9]' "$OUT/status.txt"
+"$BIN" client shutdown --port "$PORT"
+wait "$SERVER_PID"
+trap - EXIT
+
+# the cache file survives the daemon and holds the one record
+test -s "$CACHE"
+grep -q 'union_result_cache' "$CACHE"
+
+echo "service smoke OK"
