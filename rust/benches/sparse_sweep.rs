@@ -1,0 +1,104 @@
+//! Sparsity scenario bench: drives the density-parameterized
+//! sparse-analytical cost kind through the packed search engine and
+//! regenerates the density-sweep case study. Reports the sparse search
+//! rate against the dense baseline on the same workload (the wrapper
+//! adds only a scalar rescale on top of the base model's lean path, so
+//! the two rates should be close), plus deterministic quality and
+//! coverage metrics from a fixed-budget sweep. With `UNION_BENCH_DIR`
+//! set, the run is recorded as `BENCH_sparse_sweep.json` for the
+//! bench-regression gate.
+
+use union::arch::presets;
+use union::cost::CostKind;
+use union::engine::Session;
+use union::experiments::{run_case_study, sparsity_sweep, Effort, SPARSITY_DENSITIES};
+use union::frontend;
+use union::mappers::{portfolio_sources, Objective};
+use union::mapspace::{Constraints, MapSpace};
+use union::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::with_iters(2, 10);
+
+    // -- search rate: dense vs sparse on the same SpMM problem --------
+    let workload = frontend::spmm_workloads().remove(0); // SpMM-1
+    let problem = workload.problem();
+    let arch = presets::edge();
+    let cons = Constraints::default();
+    let space = MapSpace::new(&problem, &arch, &cons);
+    const SAMPLES: usize = 800;
+
+    let dense = CostKind::Analytical.model();
+    let sparse = CostKind::sparse_analytical(0.1, 0.05).unwrap().model();
+
+    let dense_rate = b.bench_rate("sparse_bench_dense_search", "cand", || {
+        let mut session = Session::new(dense, Objective::Edp);
+        let (result, stats) = session.run_job(&space, &mut portfolio_sources(SAMPLES, 7));
+        assert!(result.is_some(), "dense search found no mapping");
+        stats.proposed as u64
+    });
+    let sparse_rate = b.bench_rate("sparse_bench_sparse_search", "cand", || {
+        let mut session = Session::new(sparse, Objective::Edp);
+        let (result, stats) = session.run_job(&space, &mut portfolio_sources(SAMPLES, 7));
+        assert!(result.is_some(), "sparse search found no mapping");
+        stats.proposed as u64
+    });
+
+    // the sparse hot path must stay engine-grade: pruning and
+    // memoization on, allocation-free steady state (tests/alloc_hotpath
+    // proves the latter; here we gate the resulting throughput ratio)
+    let ratio = sparse_rate / dense_rate.max(1e-9);
+    println!("sparse/dense search rate ratio: {ratio:.3}");
+    b.gated_metric("sparse_dense_search_rate_ratio", ratio);
+
+    // -- deterministic sweep quality (fixed budget, env-independent) --
+    // one fixed-budget search per density on SpMM-1: EDP must improve
+    // monotonically as density drops (the whole point of the scenario),
+    // and the d=0.1 run must keep the engine's accelerations engaged
+    let mut edps = Vec::new();
+    let mut last_stats = None;
+    for &d in &SPARSITY_DENSITIES {
+        let kind = CostKind::sparse_analytical(d, 0.05).unwrap();
+        let mut session = Session::new(kind.model(), Objective::Edp);
+        let (result, stats) = session.run_job(&space, &mut portfolio_sources(1_000, 13));
+        let best = result.expect("sweep search found a mapping");
+        println!("d={d}: best EDP {:.3e} (evals {})", best.score, stats.cost_evals);
+        edps.push(best.score);
+        last_stats = Some(stats);
+    }
+    // search incumbents are not *pointwise* monotone (each density
+    // searches its own trajectory), but the density effect dwarfs
+    // search noise; allow a 5% slack
+    assert!(
+        edps.windows(2).all(|w| w[1] <= w[0] * 1.05),
+        "EDP must improve (or hold) as density drops: {edps:?}"
+    );
+    let stats = last_stats.expect("sweep ran");
+    assert!(stats.cost_evals > 0, "sparse sweep must evaluate candidates");
+    let edp_gain = edps[0] / edps[edps.len() - 1].max(f64::MIN_POSITIVE);
+    b.gated_metric("sparse_sweep_edp_gain_d1_to_d01", edp_gain);
+    b.metric("sparse_sweep_memo_hits", stats.memo_hits as f64);
+    b.metric("sparse_sweep_pruned", stats.pruned as f64);
+
+    // -- the registered case study end to end (once, untimed: the
+    // per-candidate costs above already carry the timing story) -------
+    let (per_density, pruned_table) = sparsity_sweep(Effort::Fast);
+    assert_eq!(per_density.len(), SPARSITY_DENSITIES.len());
+    for (_, table) in &per_density {
+        print!("{}", table.render());
+        println!();
+    }
+    print!("{}", pruned_table.render());
+    b.metric(
+        "sparse_casestudy_rows",
+        per_density.iter().map(|(_, t)| t.rows.len()).sum::<usize>() as f64,
+    );
+    // the CLI dispatch path stays wired (registry-driven, same as
+    // kick-tires exercises)
+    assert!(
+        run_case_study("sparsity", Effort::Custom(20)).is_some(),
+        "sparsity case study must be registered"
+    );
+
+    b.write_json_env("sparse_sweep");
+}

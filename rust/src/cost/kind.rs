@@ -1,0 +1,289 @@
+//! [`CostKind`] — the single **model-selection API**: one small value
+//! that names a cost model *configuration* and resolves it to a shared
+//! process-wide instance.
+//!
+//! Every surface that lets a user pick a cost model speaks this type:
+//! the CLI `--cost` flag, the service wire protocol's `"cost"` field,
+//! the broker's canonical [`job_signature`](crate::service::job_signature)
+//! (via [`CostKind::render`]) and its per-shard session map (via the
+//! derived `Copy + Eq + Hash`), `union warm`, the DSE drivers and the
+//! benches. Having exactly one `parse`/`render` round-trip means a cost
+//! spec means the same thing everywhere it can be written down.
+//!
+//! Unlike the original unit-variant enum this type can carry
+//! **parameters**: [`CostKind::SparseAnalytical`] holds the input
+//! density and metadata overhead of a [`SparseModel`] as IEEE-754 bit
+//! patterns, so two differently-configured sparse jobs hash and compare
+//! as distinct identities (they must never coalesce in the broker) while
+//! the kind itself stays `Copy`.
+//!
+//! Wire stability: `render()` emits exactly the strings the service has
+//! always used for the dense kinds (`"analytical"`, `"maestro"`), so
+//! job signatures — and therefore persistent result caches written by
+//! earlier versions — keep hitting byte-for-byte (pinned by
+//! `tests/service.rs`).
+
+use std::sync::{Mutex, OnceLock};
+
+use super::{AnalyticalModel, CostModel, EnergyTable, MaestroModel, SparseModel};
+
+/// Metadata words per kept data word assumed when a sparse cost spec
+/// does not say otherwise (CSR-ish bookkeeping; see [`SparseModel`]).
+pub const DEFAULT_METADATA_OVERHEAD: f64 = 0.05;
+
+/// A cost-model configuration the ecosystem can evaluate with. See the
+/// module docs; resolve to the shared model instance with
+/// [`CostKind::model`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CostKind {
+    Analytical,
+    Maestro,
+    /// The sparsity wrapper over the analytical model, keyed by its
+    /// parameters. The `f64`s are stored as raw bits so the kind stays
+    /// `Copy + Eq + Hash` (it is a session-map key in the broker);
+    /// construct through [`CostKind::sparse_analytical`], which
+    /// validates and canonicalizes them (`-0.0` → `+0.0`, NaN
+    /// rejected), so bit equality IS value equality.
+    SparseAnalytical { density_bits: u64, metadata_bits: u64 },
+}
+
+impl CostKind {
+    /// A sparse-analytical kind with validated, canonical parameters:
+    /// `density` is the uniform input density in `[0, 1]`,
+    /// `metadata_overhead` the metadata words per kept data word.
+    pub fn sparse_analytical(density: f64, metadata_overhead: f64) -> Result<CostKind, String> {
+        if !(0.0..=1.0).contains(&density) {
+            return Err(format!("density {density} out of range (0 <= d <= 1)"));
+        }
+        if !(0.0..=8.0).contains(&metadata_overhead) {
+            return Err(format!(
+                "metadata overhead {metadata_overhead} out of range (0 <= meta <= 8)"
+            ));
+        }
+        // +0.0 canonicalizes -0.0 (which passes the range checks but has
+        // different bits) and is the identity on every other accepted value
+        Ok(CostKind::SparseAnalytical {
+            density_bits: (density + 0.0).to_bits(),
+            metadata_bits: (metadata_overhead + 0.0).to_bits(),
+        })
+    }
+
+    /// Parse a cost spec as written on the CLI or the wire:
+    /// `analytical`, `maestro`, or
+    /// `sparse-analytical:d=<density>[,meta=<overhead>]`.
+    pub fn parse(s: &str) -> Result<CostKind, String> {
+        match s {
+            "analytical" => return Ok(CostKind::Analytical),
+            "maestro" => return Ok(CostKind::Maestro),
+            "sparse-analytical" => {
+                return Err(
+                    "sparse-analytical needs a density, e.g. sparse-analytical:d=0.1".into()
+                )
+            }
+            _ => {}
+        }
+        let Some(params) = s.strip_prefix("sparse-analytical:") else {
+            return Err(format!(
+                "unknown cost model '{s}' (analytical, maestro, sparse-analytical:d=D[,meta=M])"
+            ));
+        };
+        let mut density: Option<f64> = None;
+        let mut meta = DEFAULT_METADATA_OVERHEAD;
+        for part in params.split(',') {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("bad cost parameter '{part}' (expected key=value)"))?;
+            let (key, value) = (key.trim(), value.trim());
+            let value: f64 = value
+                .parse()
+                .map_err(|_| format!("bad number '{value}' for cost parameter '{key}'"))?;
+            match key {
+                "d" | "density" => density = Some(value),
+                "meta" => meta = value,
+                other => {
+                    return Err(format!("unknown cost parameter '{other}' (d, meta)"));
+                }
+            }
+        }
+        let density = density.ok_or("sparse-analytical needs d=<density>")?;
+        CostKind::sparse_analytical(density, meta)
+    }
+
+    /// The canonical spelling of this kind — `parse(render(k)) == k`
+    /// exactly (f64 parameters print with shortest-round-trip
+    /// formatting, so they parse back bit-identically). For the dense
+    /// kinds this is byte-identical to the historical wire strings, so
+    /// job signatures built from it stay cache-compatible.
+    pub fn render(&self) -> String {
+        match *self {
+            CostKind::Analytical => "analytical".into(),
+            CostKind::Maestro => "maestro".into(),
+            CostKind::SparseAnalytical { .. } => format!(
+                "sparse-analytical:d={},meta={}",
+                self.density().unwrap_or(1.0),
+                self.metadata_overhead().unwrap_or(0.0),
+            ),
+        }
+    }
+
+    /// The parameter-free family name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CostKind::Analytical => "analytical",
+            CostKind::Maestro => "maestro",
+            CostKind::SparseAnalytical { .. } => "sparse-analytical",
+        }
+    }
+
+    /// The uniform input density of a sparse kind; `None` for dense kinds.
+    pub fn density(&self) -> Option<f64> {
+        match self {
+            CostKind::SparseAnalytical { density_bits, .. } => Some(f64::from_bits(*density_bits)),
+            _ => None,
+        }
+    }
+
+    /// The metadata overhead of a sparse kind; `None` for dense kinds.
+    pub fn metadata_overhead(&self) -> Option<f64> {
+        match self {
+            CostKind::SparseAnalytical { metadata_bits, .. } => {
+                Some(f64::from_bits(*metadata_bits))
+            }
+            _ => None,
+        }
+    }
+
+    /// The shared model instance for this configuration (default 8-bit
+    /// energy table, as everywhere else in the repo). Dense kinds
+    /// resolve to one process-wide singleton each; sparse kinds are
+    /// interned per distinct parameter set (each distinct configuration
+    /// leaks one small model allocation for the life of the process —
+    /// bounded by the handful of densities a sweep touches), so worker
+    /// shards can hold `Session<'static>`s keyed by `(CostKind,
+    /// objective)` regardless of parameters.
+    pub fn model(&self) -> &'static dyn CostModel {
+        static ANALYTICAL: OnceLock<AnalyticalModel> = OnceLock::new();
+        static MAESTRO: OnceLock<MaestroModel> = OnceLock::new();
+        type SparseEntry = (CostKind, &'static SparseModel<AnalyticalModel>);
+        static SPARSE: OnceLock<Mutex<Vec<SparseEntry>>> = OnceLock::new();
+        match *self {
+            CostKind::Analytical => {
+                ANALYTICAL.get_or_init(|| AnalyticalModel::new(EnergyTable::default_8bit()))
+            }
+            CostKind::Maestro => {
+                MAESTRO.get_or_init(|| MaestroModel::new(EnergyTable::default_8bit()))
+            }
+            CostKind::SparseAnalytical { density_bits, metadata_bits } => {
+                let table = SPARSE.get_or_init(|| Mutex::new(Vec::new()));
+                let mut table = table.lock().unwrap();
+                if let Some((_, model)) = table.iter().find(|(k, _)| *k == *self) {
+                    return *model;
+                }
+                let model: &'static SparseModel<AnalyticalModel> =
+                    Box::leak(Box::new(SparseModel::uniform(
+                        AnalyticalModel::new(EnergyTable::default_8bit()),
+                        f64::from_bits(density_bits),
+                        f64::from_bits(metadata_bits),
+                    )));
+                table.push((*self, model));
+                model
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_wire_strings_are_byte_stable() {
+        // the historical service strings: render MUST keep emitting them
+        // verbatim or every pre-existing cached job signature goes cold
+        assert_eq!(CostKind::parse("analytical").unwrap(), CostKind::Analytical);
+        assert_eq!(CostKind::parse("maestro").unwrap(), CostKind::Maestro);
+        assert_eq!(CostKind::Analytical.render(), "analytical");
+        assert_eq!(CostKind::Maestro.render(), "maestro");
+        assert_eq!(CostKind::Analytical.name(), "analytical");
+        assert_eq!(CostKind::Maestro.name(), "maestro");
+    }
+
+    #[test]
+    fn sparse_parse_render_roundtrips_bit_exactly() {
+        for spec in [
+            "sparse-analytical:d=0.1,meta=0.05",
+            "sparse-analytical:d=0.5,meta=0",
+            "sparse-analytical:d=1,meta=0.25",
+            "sparse-analytical:d=0.3333333333333333,meta=0.05",
+        ] {
+            let k = CostKind::parse(spec).unwrap();
+            let rendered = k.render();
+            assert_eq!(CostKind::parse(&rendered).unwrap(), k, "{spec} -> {rendered}");
+            // render is a fixpoint
+            assert_eq!(CostKind::parse(&rendered).unwrap().render(), rendered);
+        }
+        // the default metadata overhead is applied (and made explicit)
+        let k = CostKind::parse("sparse-analytical:d=0.1").unwrap();
+        assert_eq!(k.metadata_overhead(), Some(DEFAULT_METADATA_OVERHEAD));
+        assert_eq!(k.render(), "sparse-analytical:d=0.1,meta=0.05");
+        assert_eq!(k.name(), "sparse-analytical");
+        // `density` is accepted as the long spelling of `d`
+        assert_eq!(CostKind::parse("sparse-analytical:density=0.1").unwrap(), k);
+    }
+
+    #[test]
+    fn differently_configured_sparse_kinds_are_distinct_identities() {
+        let a = CostKind::sparse_analytical(0.1, 0.05).unwrap();
+        let b = CostKind::sparse_analytical(0.1, 0.10).unwrap();
+        let c = CostKind::sparse_analytical(0.5, 0.05).unwrap();
+        assert_ne!(a, b, "metadata overhead is identity");
+        assert_ne!(a, c, "density is identity");
+        assert_ne!(a.render(), b.render());
+        assert_ne!(a.render(), c.render());
+        // -0.0 canonicalizes: bit equality is value equality
+        assert_eq!(
+            CostKind::sparse_analytical(0.5, 0.0).unwrap(),
+            CostKind::sparse_analytical(0.5, -0.0).unwrap()
+        );
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for bad in [
+            "warp",
+            "sparse-analytical",
+            "sparse-analytical:",
+            "sparse-analytical:d=2",
+            "sparse-analytical:d=-0.1",
+            "sparse-analytical:d=nope",
+            "sparse-analytical:meta=0.05",
+            "sparse-analytical:d=0.5,meta=99",
+            "sparse-analytical:d=0.5,turbo=1",
+        ] {
+            assert!(CostKind::parse(bad).is_err(), "{bad} should be rejected");
+        }
+        assert!(CostKind::sparse_analytical(f64::NAN, 0.0).is_err());
+        assert!(CostKind::sparse_analytical(0.5, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn models_are_interned_per_configuration() {
+        let a = CostKind::sparse_analytical(0.21, 0.05).unwrap();
+        let b = CostKind::sparse_analytical(0.22, 0.05).unwrap();
+        // repeat resolution returns the same instance (pointer identity)
+        assert!(std::ptr::eq(
+            a.model() as *const dyn CostModel as *const (),
+            a.model() as *const dyn CostModel as *const (),
+        ));
+        // distinct configurations resolve to distinct instances
+        assert!(!std::ptr::eq(
+            a.model() as *const dyn CostModel as *const (),
+            b.model() as *const dyn CostModel as *const (),
+        ));
+        assert_eq!(a.model().name(), "sparse");
+        assert!(std::ptr::eq(
+            CostKind::Analytical.model() as *const dyn CostModel as *const (),
+            CostKind::Analytical.model() as *const dyn CostModel as *const (),
+        ));
+    }
+}

@@ -16,17 +16,17 @@
 
 mod analytical;
 mod energy;
+mod kind;
 mod maestro;
 mod sparse;
 mod tile;
 
 pub use analytical::AnalyticalModel;
 pub use energy::EnergyTable;
+pub use kind::{CostKind, DEFAULT_METADATA_OVERHEAD};
 pub use maestro::MaestroModel;
-pub use sparse::{Density, SparseModel};
-pub use tile::{
-    DataMovement, FootprintMemo, FpEntry, ReuseModel, TileAnalysis, TileScratch,
-};
+pub use sparse::{Density, DensitySpec, SparseModel};
+pub use tile::{DataMovement, FootprintMemo, FpEntry, ReuseModel, TileAnalysis, TileScratch};
 
 use crate::arch::Arch;
 use crate::mapping::Mapping;

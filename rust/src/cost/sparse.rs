@@ -14,12 +14,21 @@
 //!   (compressed tiles), plus a metadata overhead per kept word;
 //! * output density is estimated as `1 - (1 - dA·dB)^K` over the
 //!   reduction extent (random-sparsity union bound), clamped to 1.
+//!
+//! The wrapper participates fully in the engine's packed hot path: it
+//! overrides [`CostModel::evaluate_lean`] (delegating the tile analysis
+//! to the base model's zero-alloc path and scaling the scalars) and both
+//! lower bounds (scaling the base floors by the same factors), so sparse
+//! searches get pruning + memoization for free. Both paths scale through
+//! one shared routine, so lean and full sparse scores are bit-identical
+//! whenever the base model's are.
 
 use crate::arch::Arch;
 use crate::mapping::Mapping;
 use crate::problem::Problem;
 
-use super::{CostEstimate, CostModel};
+use super::kind::DEFAULT_METADATA_OVERHEAD;
+use super::{CostBound, CostEstimate, CostModel, FootprintMemo, LeanCost, TileScratch};
 
 /// Per-data-space densities. Order matches `problem.data_spaces`.
 #[derive(Debug, Clone)]
@@ -31,49 +40,178 @@ pub struct Density {
 }
 
 impl Density {
-    /// Uniform density for inputs; output density derived per problem.
+    /// Uniform density for inputs; output density derived per problem;
+    /// default metadata overhead. See [`Density::uniform_with`].
     pub fn uniform(problem: &Problem, input_density: f64) -> Density {
+        Density::uniform_with(problem, input_density, DEFAULT_METADATA_OVERHEAD)
+    }
+
+    /// Uniform density for inputs with an explicit metadata overhead
+    /// (words of bookkeeping per kept data word); the output density is
+    /// derived per problem from the reduction extent.
+    pub fn uniform_with(
+        problem: &Problem,
+        input_density: f64,
+        metadata_overhead: f64,
+    ) -> Density {
         assert!((0.0..=1.0).contains(&input_density));
-        // reduction extent = product of reduction-dim sizes
-        let red = problem.reduction_dims();
-        let k: f64 = problem
-            .dims
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| red[*i])
-            .map(|(_, d)| d.size as f64)
-            .product();
-        let pair = input_density * input_density;
-        let out_density = 1.0 - (1.0 - pair).powf(k.min(1e6));
+        assert!(metadata_overhead >= 0.0);
+        let out_density = uniform_output_density(problem, input_density);
         let per = problem
             .data_spaces
             .iter()
-            .map(|ds| if ds.is_output { out_density.min(1.0) } else { input_density })
+            .map(|ds| if ds.is_output { out_density } else { input_density })
             .collect();
-        Density { per_data_space: per, metadata_overhead: 0.05 }
+        Density { per_data_space: per, metadata_overhead }
     }
+}
+
+/// Output density under uniform random input sparsity: `1 - (1 - d²)^K`
+/// over the reduction extent `K`, clamped to 1. Allocation-free (walks
+/// the output projection instead of materializing `reduction_dims()`),
+/// and multiplies the extent in dimension order so the explicit and
+/// uniform density paths agree bit-for-bit.
+fn uniform_output_density(problem: &Problem, input_density: f64) -> f64 {
+    let output = problem.output();
+    let mut k = 1.0f64;
+    'dims: for (i, dim) in problem.dims.iter().enumerate() {
+        for rank in &output.projection {
+            for term in rank {
+                if term.dim == i {
+                    continue 'dims; // projected onto the output: not a reduction dim
+                }
+            }
+        }
+        k *= dim.size as f64;
+    }
+    let pair = input_density * input_density;
+    (1.0 - (1.0 - pair).powf(k.min(1e6))).min(1.0)
+}
+
+/// How a [`SparseModel`] knows its densities: an explicit per-data-space
+/// vector bound to one problem shape, or a problem-agnostic uniform
+/// input density whose per-problem scales are derived on the fly (the
+/// form a parameterized [`CostKind`](super::CostKind) carries, since one
+/// shared model instance must serve every problem in a workload graph).
+#[derive(Debug, Clone)]
+pub enum DensitySpec {
+    /// Fixed densities for one specific problem's data spaces.
+    Explicit(Density),
+    /// Every input data space has `input_density`; the output density is
+    /// derived per problem as in [`Density::uniform_with`].
+    Uniform { input_density: f64, metadata_overhead: f64 },
 }
 
 /// Wraps a base cost model with sparsity scaling.
 pub struct SparseModel<M: CostModel> {
     base: M,
-    density: Density,
+    density: DensitySpec,
 }
 
 impl<M: CostModel> SparseModel<M> {
+    /// A sparse wrapper with an explicit per-data-space density vector.
     pub fn new(base: M, density: Density) -> SparseModel<M> {
-        SparseModel { base, density }
+        SparseModel { base, density: DensitySpec::Explicit(density) }
     }
 
-    fn compute_scale(&self, problem: &Problem) -> f64 {
-        // a MAC executes only when all input operands are non-zero
-        problem
-            .data_spaces
-            .iter()
-            .zip(&self.density.per_data_space)
-            .filter(|(ds, _)| !ds.is_output)
-            .map(|(_, d)| *d)
-            .product()
+    /// A problem-agnostic sparse wrapper: uniform input density, output
+    /// density derived per problem, explicit metadata overhead.
+    pub fn uniform(base: M, input_density: f64, metadata_overhead: f64) -> SparseModel<M> {
+        assert!((0.0..=1.0).contains(&input_density));
+        assert!(metadata_overhead >= 0.0);
+        SparseModel { base, density: DensitySpec::Uniform { input_density, metadata_overhead } }
+    }
+
+    /// The wrapped base model.
+    pub fn base(&self) -> &M {
+        &self.base
+    }
+
+    /// `(compute_scale, traffic_scale)` for `problem` — the two factors
+    /// everything else derives from. Allocation-free on both spec
+    /// variants (hot-path requirement), and the uniform variant performs
+    /// the same float operations in the same order as the explicit
+    /// vector [`Density::uniform_with`] would produce, so the two forms
+    /// are bit-identical.
+    fn scales(&self, problem: &Problem) -> (f64, f64) {
+        match &self.density {
+            DensitySpec::Explicit(density) => {
+                // a MAC executes only when all input operands are non-zero
+                let compute_scale: f64 = problem
+                    .data_spaces
+                    .iter()
+                    .zip(&density.per_data_space)
+                    .filter(|(ds, _)| !ds.is_output)
+                    .map(|(_, d)| *d)
+                    .product();
+                // traffic scale: weighted by each data space's share of
+                // accesses; we approximate with the mean density +
+                // metadata overhead (per-level attribution would need
+                // per-ds level stats; the wrapper stays model-agnostic
+                // by construction)
+                let mean_density = density.per_data_space.iter().copied().sum::<f64>()
+                    / density.per_data_space.len() as f64;
+                let traffic_scale = (mean_density * (1.0 + density.metadata_overhead)).min(1.0);
+                (compute_scale, traffic_scale)
+            }
+            DensitySpec::Uniform { input_density, metadata_overhead } => {
+                let out_density = uniform_output_density(problem, *input_density);
+                let compute_scale: f64 = problem
+                    .data_spaces
+                    .iter()
+                    .filter(|ds| !ds.is_output)
+                    .map(|_| *input_density)
+                    .product();
+                let mean_density = problem
+                    .data_spaces
+                    .iter()
+                    .map(|ds| if ds.is_output { out_density } else { *input_density })
+                    .sum::<f64>()
+                    / problem.data_spaces.len() as f64;
+                let traffic_scale = (mean_density * (1.0 + metadata_overhead)).min(1.0);
+                (compute_scale, traffic_scale)
+            }
+        }
+    }
+
+    /// Scale the scalar core of a dense estimate. The single shared
+    /// routine behind both the full ([`sparsify`](Self::sparsify)) and
+    /// lean evaluation paths — bit-identity between them holds by
+    /// construction. Returns `(macs, cycles, energy_pj, traffic_scale)`;
+    /// the last so the full path can scale its per-level breakdown.
+    fn scale_scalars(
+        &self,
+        problem: &Problem,
+        macs: u64,
+        cycles: f64,
+        energy_pj: f64,
+    ) -> (u64, f64, f64, f64) {
+        let (compute_scale, traffic_scale) = self.scales(problem);
+        let macs = (macs as f64 * compute_scale).ceil() as u64;
+        // latency: compute term scales with effective MACs, bandwidth
+        // terms with compressed traffic; both shrink, so the binding
+        // term scales by the larger of the two factors. The floor keeps
+        // cycles from vanishing but never raises them above the dense
+        // value (so density 1.0 stays an exact identity)
+        let cycles = (cycles * compute_scale.max(traffic_scale)).max(cycles.min(1.0));
+        let energy_pj = energy_pj * traffic_scale.max(compute_scale);
+        (macs, cycles, energy_pj, traffic_scale)
+    }
+
+    fn sparsify(&self, problem: &Problem, dense: CostEstimate) -> CostEstimate {
+        let mut out = dense;
+        let (macs, cycles, energy_pj, traffic_scale) =
+            self.scale_scalars(problem, out.macs, out.cycles, out.energy_pj);
+        out.macs = macs;
+        out.cycles = cycles;
+        out.energy_pj = energy_pj;
+        for l in &mut out.levels {
+            l.reads *= traffic_scale;
+            l.writes *= traffic_scale;
+            l.energy_pj *= traffic_scale;
+        }
+        out.interconnect_pj *= traffic_scale;
+        out
     }
 }
 
@@ -83,12 +221,14 @@ impl<M: CostModel> CostModel for SparseModel<M> {
     }
 
     fn conformable(&self, problem: &Problem, arch: &Arch) -> Result<(), String> {
-        if self.density.per_data_space.len() != problem.data_spaces.len() {
-            return Err(format!(
-                "density vector has {} entries, problem has {} data spaces",
-                self.density.per_data_space.len(),
-                problem.data_spaces.len()
-            ));
+        if let DensitySpec::Explicit(density) = &self.density {
+            if density.per_data_space.len() != problem.data_spaces.len() {
+                return Err(format!(
+                    "density vector has {} entries, problem has {} data spaces",
+                    density.per_data_space.len(),
+                    problem.data_spaces.len()
+                ));
+            }
         }
         self.base.conformable(problem, arch)
     }
@@ -112,34 +252,50 @@ impl<M: CostModel> CostModel for SparseModel<M> {
         let dense = self.base.evaluate_prechecked(problem, arch, mapping)?;
         Ok(self.sparsify(problem, dense))
     }
+
+    fn evaluate_lean(
+        &self,
+        problem: &Problem,
+        arch: &Arch,
+        mapping: &Mapping,
+        scratch: &mut TileScratch,
+        footprints: Option<&FootprintMemo>,
+    ) -> Result<LeanCost, String> {
+        // the base model does the (zero-alloc, memo-assisted) tile
+        // analysis; sparsity is a scalar rescale on top
+        let dense = self.base.evaluate_lean(problem, arch, mapping, scratch, footprints)?;
+        let (macs, cycles, energy_pj, _) =
+            self.scale_scalars(problem, dense.macs, dense.cycles, dense.energy_pj);
+        Ok(LeanCost {
+            cycles,
+            energy_pj,
+            utilization: dense.utilization,
+            macs,
+            clock_ghz: dense.clock_ghz,
+        })
+    }
+
+    fn lower_bound(&self, problem: &Problem, arch: &Arch, mapping: &Mapping) -> Option<CostBound> {
+        let base = self.base.lower_bound(problem, arch, mapping)?;
+        Some(self.scale_bound(problem, base))
+    }
+
+    fn arch_lower_bound(&self, problem: &Problem, arch: &Arch) -> Option<CostBound> {
+        let base = self.base.arch_lower_bound(problem, arch)?;
+        Some(self.scale_bound(problem, base))
+    }
 }
 
 impl<M: CostModel> SparseModel<M> {
-    fn sparsify(&self, problem: &Problem, dense: CostEstimate) -> CostEstimate {
-        let compute_scale = self.compute_scale(problem);
-        // traffic scale: weighted by each data space's share of accesses;
-        // we approximate with the mean input density + metadata overhead
-        // (per-level attribution would need per-ds level stats; the
-        // wrapper stays model-agnostic by construction)
-        let mean_density = self.density.per_data_space.iter().copied().sum::<f64>()
-            / self.density.per_data_space.len() as f64;
-        let traffic_scale =
-            (mean_density * (1.0 + self.density.metadata_overhead)).min(1.0);
-
-        let mut out = dense;
-        out.macs = (out.macs as f64 * compute_scale).ceil() as u64;
-        // latency: compute term scales with effective MACs, bandwidth
-        // terms with compressed traffic; both shrink, so the binding
-        // term scales by the larger of the two factors
-        out.cycles = (out.cycles * compute_scale.max(traffic_scale)).max(1.0);
-        out.energy_pj *= traffic_scale.max(compute_scale);
-        for l in &mut out.levels {
-            l.reads *= traffic_scale;
-            l.writes *= traffic_scale;
-            l.energy_pj *= traffic_scale;
-        }
-        out.interconnect_pj *= traffic_scale;
-        out
+    /// Scale a dense lower bound into a sparse one. Sound because both
+    /// scales are ≤ 1 and mapping-independent: the true sparse cycles
+    /// are `max(dense · max(cs, ts), floor) ≥ dense · max(cs, ts) ≥
+    /// bound · max(cs, ts)` (the floor only raises), and sparse energy
+    /// is exactly `dense · max(cs, ts)`.
+    fn scale_bound(&self, problem: &Problem, base: CostBound) -> CostBound {
+        let (compute_scale, traffic_scale) = self.scales(problem);
+        let f = compute_scale.max(traffic_scale);
+        CostBound { cycles: base.cycles * f, energy_pj: base.energy_pj * f, ..base }
     }
 }
 
@@ -158,19 +314,17 @@ mod tests {
         (p, a, m)
     }
 
-    use crate::arch::Arch;
+    fn analytical() -> AnalyticalModel {
+        AnalyticalModel::new(EnergyTable::default_8bit())
+    }
 
     #[test]
     fn dense_density_is_identity() {
         let (p, a, m) = setup();
-        let base = AnalyticalModel::new(EnergyTable::default_8bit());
-        let dense = base.evaluate(&p, &a, &m).unwrap();
+        let dense = analytical().evaluate(&p, &a, &m).unwrap();
         let mut density = Density::uniform(&p, 1.0);
         density.metadata_overhead = 0.0;
-        let sparse = SparseModel::new(
-            AnalyticalModel::new(EnergyTable::default_8bit()),
-            density,
-        );
+        let sparse = SparseModel::new(analytical(), density);
         let e = sparse.evaluate(&p, &a, &m).unwrap();
         assert_eq!(e.macs, dense.macs);
         assert!((e.energy_pj - dense.energy_pj).abs() / dense.energy_pj < 1e-9);
@@ -183,10 +337,7 @@ mod tests {
         let mut prev_energy = f64::INFINITY;
         let mut prev_macs = u64::MAX;
         for density in [1.0, 0.5, 0.25, 0.1] {
-            let model = SparseModel::new(
-                AnalyticalModel::new(EnergyTable::default_8bit()),
-                Density::uniform(&p, density),
-            );
+            let model = SparseModel::new(analytical(), Density::uniform(&p, density));
             let e = model.evaluate(&p, &a, &m).unwrap();
             assert!(e.energy_pj <= prev_energy, "density {density}");
             assert!(e.macs <= prev_macs);
@@ -198,10 +349,7 @@ mod tests {
     #[test]
     fn compute_scales_with_input_density_product() {
         let (p, a, m) = setup();
-        let model = SparseModel::new(
-            AnalyticalModel::new(EnergyTable::default_8bit()),
-            Density::uniform(&p, 0.5),
-        );
+        let model = SparseModel::new(analytical(), Density::uniform(&p, 0.5));
         let e = model.evaluate(&p, &a, &m).unwrap();
         // 0.5 * 0.5 = 0.25 of the dense MACs
         assert_eq!(e.macs, (32u64 * 32 * 32) / 4);
@@ -220,10 +368,67 @@ mod tests {
     fn mismatched_density_vector_rejected() {
         let (p, a, _) = setup();
         let model = SparseModel::new(
-            AnalyticalModel::new(EnergyTable::default_8bit()),
+            analytical(),
             Density { per_data_space: vec![0.5], metadata_overhead: 0.0 },
         );
         assert!(model.conformable(&p, &a).is_err());
+    }
+
+    #[test]
+    fn uniform_spec_matches_explicit_uniform_vector_bit_for_bit() {
+        // the problem-agnostic spec (what a parameterized CostKind
+        // carries) and the explicit vector it replaces must agree exactly
+        let (p, a, m) = setup();
+        for (d, meta) in [(1.0, 0.0), (0.5, 0.05), (0.1, 0.2), (0.0, 0.05)] {
+            let explicit = SparseModel::new(analytical(), Density::uniform_with(&p, d, meta));
+            let uniform = SparseModel::uniform(analytical(), d, meta);
+            let e = explicit.evaluate(&p, &a, &m).unwrap();
+            let u = uniform.evaluate(&p, &a, &m).unwrap();
+            assert_eq!(e.macs, u.macs, "d={d} meta={meta}");
+            assert_eq!(e.cycles.to_bits(), u.cycles.to_bits(), "d={d} meta={meta}");
+            assert_eq!(e.energy_pj.to_bits(), u.energy_pj.to_bits(), "d={d} meta={meta}");
+        }
+    }
+
+    #[test]
+    fn metadata_overhead_is_a_real_parameter() {
+        // differently-configured metadata overheads must price traffic
+        // differently (they also key distinct job signatures; see
+        // tests/service.rs)
+        let (p, a, m) = setup();
+        let cheap = SparseModel::uniform(analytical(), 0.3, 0.0);
+        let costly = SparseModel::uniform(analytical(), 0.3, 0.5);
+        let e0 = cheap.evaluate(&p, &a, &m).unwrap();
+        let e1 = costly.evaluate(&p, &a, &m).unwrap();
+        assert!(e1.energy_pj > e0.energy_pj, "metadata overhead should add traffic energy");
+    }
+
+    #[test]
+    fn lean_path_is_bit_identical_to_full_path() {
+        let (p, a, m) = setup();
+        let model = SparseModel::uniform(analytical(), 0.3, 0.05);
+        let full = model.evaluate_prechecked(&p, &a, &m).unwrap();
+        let mut scratch = TileScratch::new();
+        scratch.prepare(&p, &a);
+        let lean = model.evaluate_lean(&p, &a, &m, &mut scratch, None).unwrap();
+        assert_eq!(lean.macs, full.macs);
+        assert_eq!(lean.cycles.to_bits(), full.cycles.to_bits());
+        assert_eq!(lean.energy_pj.to_bits(), full.energy_pj.to_bits());
+        assert_eq!(lean.utilization.to_bits(), full.utilization.to_bits());
+        assert_eq!(lean.clock_ghz.to_bits(), full.clock_ghz.to_bits());
+    }
+
+    #[test]
+    fn lower_bounds_stay_below_the_estimate() {
+        let (p, a, m) = setup();
+        let model = SparseModel::uniform(analytical(), 0.3, 0.05);
+        let e = model.evaluate(&p, &a, &m).unwrap();
+        let b = model.lower_bound(&p, &a, &m).expect("sparse wrapper inherits base bound");
+        assert!(b.cycles <= e.cycles, "bound cycles {} > estimate {}", b.cycles, e.cycles);
+        assert!(b.energy_pj <= e.energy_pj);
+        let ab = model.arch_lower_bound(&p, &a).expect("arch bound");
+        assert!(ab.cycles <= e.cycles);
+        assert!(ab.energy_pj <= e.energy_pj);
     }
 
     #[test]
@@ -233,10 +438,7 @@ mod tests {
         let a = presets::edge();
         let cons = crate::mapspace::Constraints::default();
         let space = crate::mapspace::MapSpace::new(&p, &a, &cons);
-        let model = SparseModel::new(
-            AnalyticalModel::new(EnergyTable::default_8bit()),
-            Density::uniform(&p, 0.3),
-        );
+        let model = SparseModel::new(analytical(), Density::uniform(&p, 0.3));
         let r = crate::mappers::RandomMapper::new(300, 5)
             .search(&space, &model)
             .expect("sparse search");

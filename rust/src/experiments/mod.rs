@@ -19,7 +19,9 @@
 //! output, so a new entry here is automatically smoke-tested.
 
 use crate::arch::{presets, Arch};
-use crate::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use crate::cost::{
+    AnalyticalModel, CostKind, CostModel, DEFAULT_METADATA_OVERHEAD, EnergyTable, MaestroModel,
+};
 use crate::dse::{self, DseResult};
 use crate::engine::Session;
 use crate::frontend::{self, ttgt_gemm, Workload};
@@ -45,6 +47,7 @@ pub const CASE_STUDIES: &[(&str, &str, fn(Effort) -> String)] = &[
     ("table3", "TTGT GEMM dimension sizes", render_table3),
     ("table4", "network-level co-design sweep", render_table4),
     ("dse", "hardware design-space exploration with Pareto pruning", render_dse),
+    ("sparsity", "density sweep: sparse-analytical cost over the sparse suite", render_sparsity),
 ];
 
 /// Look up a case study and render its full artifact text (what `union
@@ -85,6 +88,17 @@ fn render_table4(effort: Effort) -> String {
         out.push_str(&r.summary());
         out.push('\n');
     }
+    out
+}
+
+fn render_sparsity(effort: Effort) -> String {
+    let (per_density, pruned) = sparsity_sweep(effort);
+    let mut out = String::new();
+    for (_, table) in &per_density {
+        out.push_str(&table.render());
+        out.push('\n');
+    }
+    out.push_str(&pruned.render());
     out
 }
 
@@ -601,6 +615,107 @@ pub fn dse_sweep(effort: Effort) -> (Table, DseResult) {
     (result.points_table(), result)
 }
 
+// ---------------------------------------------------------------------
+// Sparsity density sweep (beyond-paper artifact)
+// ---------------------------------------------------------------------
+
+/// The input densities the sparsity case study sweeps: the dense anchor
+/// plus moderate and aggressive pruning.
+pub const SPARSITY_DENSITIES: [f64; 3] = [1.0, 0.5, 0.1];
+
+/// The **density sweep**: search the sparse workload suite
+/// ([`frontend::sparse_suite`]: SpMM + SpGEMM) on the edge accelerator
+/// once per input density in [`SPARSITY_DENSITIES`], each run driving
+/// the packed search engine through a density-parameterized
+/// sparse-analytical cost kind — exactly what the CLI's
+/// `--cost sparse-analytical:d=D` and the service's `"cost"` field
+/// resolve to. Returns one incumbent table per density plus a
+/// pruned-ResNet section where each layer carries its own density
+/// ([`frontend::pruned_resnet_layers`]'s magnitude-pruning profile).
+pub fn sparsity_sweep(effort: Effort) -> (Vec<(f64, Table)>, Table) {
+    let arch = presets::edge();
+    let cons = Constraints::default();
+    let suite = frontend::sparse_suite();
+    let mut per_density = Vec::new();
+    for (di, &density) in SPARSITY_DENSITIES.iter().enumerate() {
+        let kind = CostKind::sparse_analytical(density, DEFAULT_METADATA_OVERHEAD)
+            .expect("swept densities are valid");
+        let model = kind.model();
+        let title = format!(
+            "Density sweep d={density} (cost={}): sparse suite on edge 16x16",
+            kind.render()
+        );
+        let mut table = Table::new(
+            &title,
+            &["workload", "eff MACs", "cycles", "energy (J)", "EDP (Js)", "util"],
+        );
+        for w in suite.iter() {
+            let problem = w.problem();
+            let space = MapSpace::new(&problem, &arch, &cons);
+            match portfolio_search(&space, model, effort, 51 + di as u64) {
+                Some(best) => {
+                    let c = &best.cost;
+                    table.row(vec![
+                        w.name.clone(),
+                        format!("{:.3e}", c.macs as f64),
+                        format!("{:.3e}", c.cycles),
+                        format!("{:.3e}", c.energy_j()),
+                        format!("{:.3e}", c.edp()),
+                        format!("{:.2}", c.utilization),
+                    ]);
+                }
+                None => {
+                    table.row(vec![
+                        w.name.clone(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "no legal mapping".into(),
+                    ]);
+                }
+            }
+        }
+        per_density.push((density, table));
+    }
+
+    // per-layer densities: one sparse kind per pruned layer
+    let mut pruned = Table::new(
+        "Pruned ResNet-50 layers, per-layer densities (edge 16x16)",
+        &["layer", "density", "eff MACs", "cycles", "energy (J)", "EDP (Js)"],
+    );
+    for (li, (w, density)) in frontend::pruned_resnet_layers().iter().enumerate() {
+        let kind = CostKind::sparse_analytical(*density, DEFAULT_METADATA_OVERHEAD)
+            .expect("zoo densities are valid");
+        let problem = w.problem();
+        let space = MapSpace::new(&problem, &arch, &cons);
+        match portfolio_search(&space, kind.model(), effort, 71 + li as u64) {
+            Some(best) => {
+                let c = &best.cost;
+                pruned.row(vec![
+                    w.name.clone(),
+                    format!("{density}"),
+                    format!("{:.3e}", c.macs as f64),
+                    format!("{:.3e}", c.cycles),
+                    format!("{:.3e}", c.energy_j()),
+                    format!("{:.3e}", c.edp()),
+                ]);
+            }
+            None => {
+                pruned.row(vec![
+                    w.name.clone(),
+                    format!("{density}"),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "no legal mapping".into(),
+                ]);
+            }
+        }
+    }
+    (per_density, pruned)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -643,7 +758,9 @@ mod tests {
         let ids: Vec<&str> = CASE_STUDIES.iter().map(|(id, _, _)| *id).collect();
         let unique: std::collections::BTreeSet<&str> = ids.iter().copied().collect();
         assert_eq!(ids.len(), unique.len(), "duplicate case-study id");
-        for want in ["fig3", "fig8", "fig9", "fig10", "fig11", "table3", "table4", "dse"] {
+        for want in
+            ["fig3", "fig8", "fig9", "fig10", "fig11", "table3", "table4", "dse", "sparsity"]
+        {
             assert!(ids.contains(&want), "registry lost '{want}'");
         }
         assert!(CASE_STUDIES.iter().all(|(_, d, _)| !d.is_empty()));
@@ -652,6 +769,26 @@ mod tests {
         assert!(run_case_study("nope", Effort::Fast).is_none());
         let t3 = run_case_study("table3", Effort::Fast).expect("table3 registered");
         assert!(t3.contains("Table III"));
+    }
+
+    #[test]
+    fn sparsity_sweep_covers_every_density_and_layer() {
+        // small budget: this checks structure, not search quality
+        let (per_density, pruned) = sparsity_sweep(Effort::Custom(40));
+        assert_eq!(per_density.len(), SPARSITY_DENSITIES.len());
+        let suite_len = crate::frontend::sparse_suite().len();
+        for (d, table) in &per_density {
+            assert!(SPARSITY_DENSITIES.contains(d));
+            assert_eq!(table.rows.len(), suite_len, "d={d}");
+            assert!(table.title.contains(&format!("sparse-analytical:d={d}")));
+        }
+        assert_eq!(pruned.rows.len(), crate::frontend::pruned_resnet_layers().len());
+        // every search found a mapping (the suite fits the edge preset)
+        for (_, table) in &per_density {
+            for row in &table.rows {
+                assert_ne!(row[1], "-", "{}: search came up empty", row[0]);
+            }
+        }
     }
 
     #[test]

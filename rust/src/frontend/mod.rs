@@ -14,8 +14,8 @@ mod zoo;
 
 pub use transforms::{im2col_gemm, ttgt_gemm, TtgtPlan};
 pub use zoo::{
-    bert_layers, dlrm_layers, dnn_workloads, resnet50_full, resnet50_layers, tc_workloads,
-    tccg_problem, TcSpec, TCCG,
+    bert_layers, dlrm_layers, dnn_workloads, pruned_resnet_layers, resnet50_full, resnet50_layers,
+    sparse_suite, spgemm_workloads, spmm_workloads, tc_workloads, tccg_problem, TcSpec, TCCG,
 };
 
 use crate::ir::core::{DType, Module, Type};

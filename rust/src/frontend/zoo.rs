@@ -120,6 +120,63 @@ pub fn resnet50_full(n: u64) -> WorkloadGraph {
     g
 }
 
+/// Sparse-scenario suite — SpMM: one sparse operand (a pruned weight
+/// matrix or a graph adjacency block) against a dense activation
+/// matrix. Structurally these are GEMMs (density is *not* a problem
+/// parameter — it rides on the cost kind, e.g.
+/// `--cost sparse-analytical:d=0.1`, so one suite serves every density
+/// in a sweep). Shapes: a square graph-style block, a tall-skinny
+/// embedding reduction, and a BERT-FFN-style projection.
+pub fn spmm_workloads() -> WorkloadGraph {
+    WorkloadGraph::from_workloads(
+        "SpMM",
+        vec![
+            Workload::gemm("SpMM-1", 1024, 1024, 1024),
+            Workload::gemm("SpMM-2", 512, 64, 2048),
+            Workload::gemm("SpMM-3", 256, 3072, 768),
+        ],
+    )
+}
+
+/// Sparse-scenario suite — SpGEMM: both operands sparse (graph
+/// analytics / sparse-transformer attention shapes). The sparse cost
+/// kind scales effective MACs by the *product* of input densities, so
+/// these shapes exercise the quadratic-compute-savings regime and the
+/// output-densification bound (`1 - (1 - d²)^K` saturates fast at the
+/// large K below).
+pub fn spgemm_workloads() -> WorkloadGraph {
+    WorkloadGraph::from_workloads(
+        "SpGEMM",
+        vec![
+            Workload::gemm("SpGEMM-1", 2048, 2048, 2048),
+            Workload::gemm("SpGEMM-2", 4096, 4096, 256),
+        ],
+    )
+}
+
+/// Magnitude-pruned ResNet-50 representative layers with per-layer
+/// input densities: early layers keep most weights, deep layers prune
+/// hardest (the usual magnitude-pruning profile). Consumed by the
+/// density-sweep case study's per-layer section, which builds one
+/// sparse cost kind per layer from the paired density.
+pub fn pruned_resnet_layers() -> Vec<(Workload, f64)> {
+    vec![
+        (Workload::conv2d("ResNet50-1", 32, 64, 64, 56, 56, 1, 1, 1), 0.9),
+        (Workload::conv2d("ResNet50-2", 32, 64, 64, 56, 56, 3, 3, 1), 0.5),
+        (Workload::conv2d("ResNet50-3", 32, 512, 1024, 14, 14, 1, 1, 1), 0.2),
+    ]
+}
+
+/// The whole sparse suite (SpMM + SpGEMM), in order — what the
+/// density-sweep case study iterates per density.
+pub fn sparse_suite() -> WorkloadGraph {
+    let mut g = WorkloadGraph::from_workloads("SparseSuite", spmm_workloads().workloads());
+    for w in spgemm_workloads().workloads() {
+        g.add(w);
+    }
+    g
+}
+
 /// One Table III TCCG problem family.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TcSpec {
@@ -269,6 +326,23 @@ mod tests {
             let plan = ttgt_gemm(&w).unwrap();
             assert_eq!((plan.m, plan.n, plan.k), (m, n, k), "{name} TDS={tds}");
         }
+    }
+
+    #[test]
+    fn sparse_suite_is_well_formed() {
+        let suite = sparse_suite();
+        assert_eq!(suite.len(), spmm_workloads().len() + spgemm_workloads().len());
+        for w in suite.iter() {
+            w.problem().validate().unwrap();
+        }
+        let pruned = pruned_resnet_layers();
+        assert_eq!(pruned.len(), 3);
+        for (w, d) in &pruned {
+            w.problem().validate().unwrap();
+            assert!((0.0..=1.0).contains(d), "{}: density {d} out of range", w.name);
+        }
+        // the pruning profile deepens: later layers are sparser
+        assert!(pruned.windows(2).all(|p| p[0].1 >= p[1].1));
     }
 
     #[test]

@@ -82,7 +82,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::arch::{presets, Arch, ClusterLevel};
     pub use crate::cost::{
-        AnalyticalModel, CostEstimate, CostModel, EnergyTable, MaestroModel,
+        AnalyticalModel, CostEstimate, CostModel, EnergyTable, MaestroModel, SparseModel,
     };
     pub use crate::dse::{ArchSpace, DseConfig, DseOrchestrator, DseResult, ParetoFrontier};
     pub use crate::engine::{

@@ -20,7 +20,7 @@
 //! ```
 
 use union::cli::{parse_arch, parse_arch_space, parse_network, parse_workload, Args};
-use union::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
+use union::cost::{CostModel, MaestroModel};
 use union::dse::{DseConfig, DseOrchestrator, PointStatus};
 use union::experiments::{self, Effort};
 use union::ir::{check_loop_level, check_operation_level, print_module};
@@ -74,14 +74,15 @@ union — unified HW-SW co-design ecosystem for spatial accelerators
 subcommands:
   lower     --workload <spec> [--ttgt] [--print-ir]
   search    --workload <spec> --arch <spec> [--mapper exhaustive|random|decoupled|heuristic|genetic]
-            [--cost analytical|maestro] [--objective edp|energy|latency]
+            [--cost analytical|maestro|sparse-analytical:d=D[,meta=M]]
+            [--objective edp|energy|latency]
             [--samples N] [--constraints file.ucon] [--render]
-  network   --model <net> [--arch <spec>] [--cost analytical|maestro]
+  network   --model <net> [--arch <spec>] [--cost C]
             [--objective edp|energy|latency] [--effort fast|thorough|N]
             [--batch N] [--seed N] [--threads N] [--constraints file.ucon]
             [--csv] [--mappings]
   dse       [--space edge-grid|aspect:edge|aspect:cloud|chiplet[:BW,...]]
-            [--model <net>] [--cost analytical|maestro]
+            [--model <net>] [--cost C]
             [--objective edp|energy|latency] [--effort fast|thorough|N]
             [--batch N] [--seed N] [--threads N] [--constraints file.ucon]
             [--no-prune] [--no-warm-start] [--csv]
@@ -101,7 +102,9 @@ workload specs: Table IV names (DLRM-2, ResNet50-1, BERT-3, ...),
   gemm:MxNxK, conv:N,K,C,X,Y,R,S,stride, tc:<name>:<tds>
 network specs: resnet50, resnet50-tableiv, dlrm, bert, dnn9,
   or workload specs joined with '+'
-arch specs: edge, edge:RxC, cloud, cloud:RxC, chiplet:FILLBW, fig5, file.uarch";
+arch specs: edge, edge:RxC, cloud, cloud:RxC, chiplet:FILLBW, fig5, file.uarch
+cost specs (C): analytical, maestro, sparse-analytical:d=D[,meta=M]
+  (D = uniform input density in [0,1], M = metadata words per kept word)";
 
 fn cmd_lower(args: &Args) -> Result<(), String> {
     let spec = args.flag("workload").ok_or("lower needs --workload")?;
@@ -166,7 +169,7 @@ fn cmd_search(args: &Args) -> Result<(), String> {
         space.tiling_space_size()
     );
     let best = mapper
-        .search_with(&space, model.as_ref(), objective)
+        .search_with(&space, model, objective)
         .ok_or("no legal mapping found")?;
     println!(
         "evaluated {} mappings; best {} = {:.4e}",
@@ -214,12 +217,10 @@ fn parse_objective_flag(args: &Args) -> Result<Objective, String> {
     service::proto::parse_objective(args.flag_or("objective", "edp"))
 }
 
-fn parse_cost_flag(args: &Args) -> Result<Box<dyn CostModel>, String> {
-    match args.flag_or("cost", "analytical") {
-        "analytical" => Ok(Box::new(AnalyticalModel::new(EnergyTable::default_8bit()))),
-        "maestro" => Ok(Box::new(MaestroModel::new(EnergyTable::default_8bit()))),
-        other => Err(format!("unknown cost model '{other}'")),
-    }
+fn parse_cost_flag(args: &Args) -> Result<&'static dyn CostModel, String> {
+    // one cost-spec grammar for the CLI, the wire protocol and the
+    // benches: `analytical` | `maestro` | `sparse-analytical:d=D[,meta=M]`
+    Ok(CostKind::parse(args.flag_or("cost", "analytical"))?.model())
 }
 
 /// `--effort fast|thorough|<samples>` with the legacy `--thorough`
@@ -264,8 +265,7 @@ fn cmd_network(args: &Args) -> Result<(), String> {
         objective.name(),
         config.samples,
     );
-    let orchestrator =
-        NetworkOrchestrator::with_config(&arch, model.as_ref(), &constraints, config);
+    let orchestrator = NetworkOrchestrator::with_config(&arch, model, &constraints, config);
     let result = orchestrator.run(&graph)?;
     let table = result.per_layer_table();
     if args.switch("csv") {
@@ -318,7 +318,7 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
         objective.name(),
         config.samples,
     );
-    let orchestrator = DseOrchestrator::with_config(model.as_ref(), &constraints, config);
+    let orchestrator = DseOrchestrator::with_config(model, &constraints, config);
     let result = orchestrator.run(&space, &graph)?;
     let table = result.points_table();
     if args.switch("csv") {
@@ -569,7 +569,7 @@ fn cmd_warm(args: &Args) -> Result<(), String> {
         graph.total_layers(),
         graph.len(),
         arch.name,
-        cost.name(),
+        cost.render(),
         objective.name(),
         samples,
     );

@@ -39,11 +39,10 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::arch::Arch;
-use crate::cost::{AnalyticalModel, CostModel, EnergyTable, MaestroModel};
 use crate::engine::{EngineConfig, EngineStats, Session};
 use crate::frontend::Workload;
 use crate::mappers::Objective;
@@ -52,46 +51,11 @@ use crate::network::{NetworkOrchestrator, OrchestratorConfig, WorkloadGraph};
 
 use super::cache::{CacheStats, CachedResult, ResultCache};
 
-/// Cost models the service can evaluate with. The variants resolve to
-/// process-wide model instances so worker shards can hold
-/// `Session<'static>`s keyed by `(cost, objective)`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum CostKind {
-    Analytical,
-    Maestro,
-}
-
-impl CostKind {
-    pub fn parse(s: &str) -> Result<CostKind, String> {
-        match s {
-            "analytical" => Ok(CostKind::Analytical),
-            "maestro" => Ok(CostKind::Maestro),
-            other => Err(format!("unknown cost model '{other}' (analytical, maestro)")),
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            CostKind::Analytical => "analytical",
-            CostKind::Maestro => "maestro",
-        }
-    }
-
-    /// The shared model instance (default 8-bit energy table, as
-    /// everywhere else in the repo).
-    pub fn model(&self) -> &'static dyn CostModel {
-        static ANALYTICAL: OnceLock<AnalyticalModel> = OnceLock::new();
-        static MAESTRO: OnceLock<MaestroModel> = OnceLock::new();
-        match self {
-            CostKind::Analytical => {
-                ANALYTICAL.get_or_init(|| AnalyticalModel::new(EnergyTable::default_8bit()))
-            }
-            CostKind::Maestro => {
-                MAESTRO.get_or_init(|| MaestroModel::new(EnergyTable::default_8bit()))
-            }
-        }
-    }
-}
+/// Cost-model selection lives in [`crate::cost::CostKind`] now — one
+/// parse/render round-trip shared by the CLI, this service, DSE and the
+/// benches. Re-exported here so `service::broker::CostKind` (and the
+/// `service::CostKind` / prelude paths built on it) keep resolving.
+pub use crate::cost::CostKind;
 
 /// A fully-resolved search job: parsed objects, not spec strings.
 /// (The protocol layer resolves a [`super::proto::JobSpec`] into one of
@@ -124,7 +88,7 @@ pub fn job_signature(req: &JobRequest) -> String {
         problem.signature(),
         req.arch.name,
         fnv64(req.arch.to_string().as_bytes()),
-        req.cost.name(),
+        req.cost.render(),
         constraints_to_str(&req.constraints),
         req.objective.name(),
         req.samples,

@@ -19,7 +19,8 @@
 //! ```
 //!
 //! `search` fields beyond `workload` are optional (defaults in
-//! brackets): `arch` [`edge`], `cost` [`analytical`], `objective`
+//! brackets): `arch` [`edge`], `cost` (`analytical`, `maestro`, or
+//! `sparse-analytical:d=D[,meta=M]`) [`analytical`], `objective`
 //! [`edp`], `effort` (`fast`, `thorough` or a sample count) [`fast`],
 //! `seed` [42], `constraints` (inline `.ucon` text) [none], `id` (any
 //! string, echoed back) [absent].
@@ -411,7 +412,9 @@ pub struct JobSpec {
     pub workload: String,
     /// Arch spec (`edge`, `cloud:32x64`, a `.uarch` path, ...).
     pub arch: String,
-    /// Cost model name (`analytical` | `maestro`).
+    /// Cost-model spec (`analytical` | `maestro` |
+    /// `sparse-analytical:d=D[,meta=M]`); one grammar with the CLI's
+    /// `--cost` flag, parsed by [`crate::cost::CostKind::parse`].
     pub cost: String,
     pub objective: Objective,
     /// Per-job candidate budget (already resolved from `effort`).

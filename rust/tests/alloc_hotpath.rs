@@ -123,4 +123,26 @@ fn steady_state_evaluate_loop_is_allocation_free() {
         after - before,
         batch.len()
     );
+
+    // ---- sparse wrapper steady state (both memo modes) ----
+    // the sparsity kind rides the same packed pipeline: per-problem
+    // density scales must be derived without touching the allocator
+    use union::cost::CostKind;
+    let sparse = CostKind::sparse_analytical(0.3, 0.05).unwrap().model();
+    for memoize in [true, false] {
+        let mut engine = Engine::with_config(&space, sparse, Objective::Edp, single(memoize));
+        engine.evaluate_packed(&batch); // warm
+        engine.evaluate_packed(&batch); // settle
+        let before = allocations();
+        let scored = engine.evaluate_packed(&batch);
+        let after = allocations();
+        assert!(scored > 0, "sparse batch must keep scoring (memoize={memoize})");
+        assert_eq!(
+            after - before,
+            0,
+            "sparse steady state (memoize={memoize}) allocated {} times for {} candidates",
+            after - before,
+            batch.len()
+        );
+    }
 }

@@ -142,6 +142,36 @@ fn network_orchestration_is_thread_count_invariant() {
 }
 
 #[test]
+fn sparse_model_is_thread_count_invariant_too() {
+    // sparse search runs through the same packed engine (lean path,
+    // pruning, memoization), so it inherits the determinism contract
+    use union::cost::CostKind;
+    let p = gemm(32, 32, 32);
+    let a = presets::edge();
+    let c = Constraints::default();
+    let space = MapSpace::new(&p, &a, &c);
+    let model = CostKind::sparse_analytical(0.3, 0.05).unwrap().model();
+    let mapper = RandomMapper::new(600, 23);
+    let r1 = search_configured(
+        &mapper,
+        &space,
+        model,
+        EngineConfig { threads: Some(1), ..EngineConfig::default() },
+    )
+    .unwrap();
+    let rn = search_configured(
+        &mapper,
+        &space,
+        model,
+        EngineConfig { threads: Some(6), ..EngineConfig::default() },
+    )
+    .unwrap();
+    assert_eq!(r1.mapping, rn.mapping);
+    assert_eq!(r1.score, rn.score);
+    assert_eq!(r1.evaluated, rn.evaluated, "sparse scored count depends on threads");
+}
+
+#[test]
 fn maestro_model_is_thread_count_invariant_too() {
     use union::cost::MaestroModel;
     let p = gemm(32, 32, 32);

@@ -4,7 +4,8 @@
 
 use union::arch::presets;
 use union::cost::{
-    AnalyticalModel, CostModel, EnergyTable, MaestroModel, ReuseModel, TileAnalysis, TileScratch,
+    AnalyticalModel, CostModel, EnergyTable, MaestroModel, ReuseModel, SparseModel, TileAnalysis,
+    TileScratch,
 };
 use union::mapspace::{constraints_from_str, constraints_to_str, Constraints, MapSpace};
 use union::problem::{conv2d, gemm};
@@ -121,6 +122,145 @@ fn prop_packed_path_scores_bit_identical_to_mapping_path() {
                     return Err(format!("{name}: EDP differs"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_at_density_one_is_bit_identical_to_base() {
+    // a SparseModel at density 1.0 with zero metadata overhead IS its
+    // base model: every scalar of every legal mapping must match
+    // bit-for-bit, on both the full and the lean path (the density-1.0
+    // anchor of the sparsity case study depends on this)
+    QuickCheck::new().cases(100).seed(0xDE15E).check("sparse-identity", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        let base = AnalyticalModel::new(EnergyTable::default_8bit());
+        let sparse =
+            SparseModel::uniform(AnalyticalModel::new(EnergyTable::default_8bit()), 1.0, 0.0);
+        let be = base.evaluate_prechecked(&p, &arch, &m).map_err(|e| e.to_string())?;
+        let se = sparse.evaluate_prechecked(&p, &arch, &m).map_err(|e| e.to_string())?;
+        if se.macs != be.macs {
+            return Err(format!("macs differ: sparse {} vs base {}", se.macs, be.macs));
+        }
+        if se.cycles.to_bits() != be.cycles.to_bits() {
+            return Err(format!("cycles differ: sparse {} vs base {}", se.cycles, be.cycles));
+        }
+        if se.energy_pj.to_bits() != be.energy_pj.to_bits() {
+            return Err(format!(
+                "energy differs: sparse {} vs base {}",
+                se.energy_pj, be.energy_pj
+            ));
+        }
+        for (sl, bl) in se.levels.iter().zip(&be.levels) {
+            if sl.reads.to_bits() != bl.reads.to_bits()
+                || sl.writes.to_bits() != bl.writes.to_bits()
+                || sl.energy_pj.to_bits() != bl.energy_pj.to_bits()
+            {
+                return Err(format!("{}: level stats differ at density 1.0", sl.level_name));
+            }
+        }
+        let mut scratch = TileScratch::new();
+        let lean = sparse
+            .evaluate_lean(&p, &arch, &m, &mut scratch, None)
+            .map_err(|e| e.to_string())?;
+        if lean.cycles.to_bits() != be.cycles.to_bits()
+            || lean.energy_pj.to_bits() != be.energy_pj.to_bits()
+            || lean.macs != be.macs
+        {
+            return Err("lean sparse path differs from the base at density 1.0".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_lean_path_bit_identical_to_full() {
+    // the sparse wrapper inherits the engine's lean/full bit-identity
+    // contract at ANY density, with and without the footprint memo —
+    // the engine debug-asserts exactly this when a sparse incumbent is
+    // materialized
+    QuickCheck::new().cases(100).seed(0x5BA25E).check("sparse-lean-bit-identical", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        let decoded = space.decode(space.encode(&m).as_ref());
+        let density = g.range(0, 100) as f64 / 100.0;
+        let meta = g.range(0, 50) as f64 / 100.0;
+        let model =
+            SparseModel::uniform(AnalyticalModel::new(EnergyTable::default_8bit()), density, meta);
+        let full = model
+            .evaluate_prechecked(&p, &arch, &m)
+            .map_err(|e| format!("full path failed: {e}"))?;
+        let mut scratch = TileScratch::new();
+        let mut memo = union::cost::FootprintMemo::new();
+        for lvl in &m.levels {
+            memo.get_or_compute(&p, &lvl.temporal_tile);
+        }
+        for fpm in [None, Some(&memo)] {
+            let lean = model
+                .evaluate_lean(&p, &arch, &decoded, &mut scratch, fpm)
+                .map_err(|e| format!("lean path failed: {e}"))?;
+            if lean.cycles.to_bits() != full.cycles.to_bits() {
+                return Err(format!(
+                    "d={density} meta={meta}: cycles differ: lean {} vs full {}",
+                    lean.cycles, full.cycles
+                ));
+            }
+            if lean.energy_pj.to_bits() != full.energy_pj.to_bits() {
+                return Err(format!(
+                    "d={density} meta={meta}: energy differs: lean {} vs full {}",
+                    lean.energy_pj, full.energy_pj
+                ));
+            }
+            if lean.macs != full.macs {
+                return Err(format!("d={density} meta={meta}: macs differ"));
+            }
+            if lean.edp().to_bits() != full.edp().to_bits() {
+                return Err(format!("d={density} meta={meta}: EDP differs"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_lower_bounds_never_exceed_the_estimate() {
+    // pruning soundness for the sparse kind: both bounds must stay
+    // under the true sparse cost for every legal mapping and density
+    QuickCheck::new().cases(100).seed(0xB0B5D).check("sparse-bounds", |g| {
+        let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(m) = space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        let density = g.range(0, 100) as f64 / 100.0;
+        let model =
+            SparseModel::uniform(AnalyticalModel::new(EnergyTable::default_8bit()), density, 0.05);
+        let e = model.evaluate_prechecked(&p, &arch, &m).map_err(|x| x.to_string())?;
+        let Some(b) = model.lower_bound(&p, &arch, &m) else {
+            return Err("sparse wrapper dropped the base lower bound".into());
+        };
+        if b.cycles > e.cycles + 1e-9 {
+            return Err(format!("d={density}: bound cycles {} > estimate {}", b.cycles, e.cycles));
+        }
+        if b.energy_pj > e.energy_pj + 1e-9 {
+            return Err(format!("d={density}: bound energy {} > {}", b.energy_pj, e.energy_pj));
+        }
+        let Some(ab) = model.arch_lower_bound(&p, &arch) else {
+            return Err("sparse wrapper dropped the arch lower bound".into());
+        };
+        if ab.cycles > e.cycles + 1e-9 || ab.energy_pj > e.energy_pj + 1e-9 {
+            return Err(format!("d={density}: arch bound exceeds the estimate"));
         }
         Ok(())
     });

@@ -249,6 +249,33 @@ fn job_signature_format_is_pinned() {
     for field in ["|arch=edge#", "|model=analytical|", "|obj=EDP|", "|samples=100|", "|seed=42"] {
         assert!(sig.contains(field), "missing {field} in {sig}");
     }
+    // the parameterized sparse kind carries its full configuration into
+    // the signature (densities and metadata overheads must never
+    // coalesce across configs), while the dense kinds keep the exact
+    // strings above — so caches written before CostKind learned
+    // parameters still hit
+    let mut sparse = gemm_job(32, 16, 8, 100, 42);
+    sparse.cost = CostKind::sparse_analytical(0.1, 0.05).unwrap();
+    let ssig = job_signature(&sparse);
+    assert!(ssig.contains("|model=sparse-analytical:d=0.1,meta=0.05|"), "{ssig}");
+}
+
+/// Differently-configured sparse jobs are distinct cache/coalescing
+/// identities: any change to density or metadata overhead must change
+/// the signature.
+#[test]
+fn sparse_job_signatures_key_density_and_metadata() {
+    let base = gemm_job(32, 32, 32, 100, 42);
+    let with = |d: f64, meta: f64| {
+        let mut req = base.clone();
+        req.cost = CostKind::sparse_analytical(d, meta).unwrap();
+        job_signature(&req)
+    };
+    let a = with(0.1, 0.05);
+    assert_ne!(a, job_signature(&base), "sparse must not collide with dense");
+    assert_ne!(a, with(0.5, 0.05), "density keys the signature");
+    assert_ne!(a, with(0.1, 0.10), "metadata overhead keys the signature");
+    assert_eq!(a, with(0.1, 0.05), "same config, same identity");
 }
 
 /// Identical jobs route to the same shard (signature-hash routing), so
