@@ -9,7 +9,7 @@
 //! `union client search --workload gemm:256x64x512 --arch edge`.
 
 use union::mappers::Objective;
-use union::service::{client_request, JobSpec, Request, ServeConfig, Server};
+use union::service::{client_request, client_request_with, JobSpec, Request, ServeConfig, Server};
 
 fn main() -> Result<(), String> {
     // an ephemeral in-memory server; a real deployment runs
@@ -29,10 +29,20 @@ fn main() -> Result<(), String> {
         constraints: String::new(),
     };
 
-    // first query: a fresh search on some shard
-    let first = client_request(
+    // first query: a fresh search on some shard, streaming anytime
+    // progress snapshots while it runs
+    let first = client_request_with(
         &addr,
-        &Request::Search { id: Some("q1".into()), spec: spec.clone() },
+        &Request::Search { id: Some("q1".into()), spec: spec.clone(), progress: true },
+        &mut |ev| {
+            println!(
+                "  progress: evaluated={} best={}",
+                ev.num("evaluated").unwrap_or(0.0),
+                ev.num("best_score")
+                    .map(|s| format!("{s:.4e}"))
+                    .unwrap_or_else(|| "-".into()),
+            )
+        },
     )?;
     println!(
         "first answer:  cached={} score={:.4e} ({} candidates evaluated)",
@@ -44,7 +54,7 @@ fn main() -> Result<(), String> {
     // same job again: served from the result cache, bit-identical
     let second = client_request(
         &addr,
-        &Request::Search { id: Some("q2".into()), spec },
+        &Request::Search { id: Some("q2".into()), spec, progress: false },
     )?;
     println!(
         "second answer: cached={} score={:.4e}",

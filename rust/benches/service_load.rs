@@ -1,0 +1,208 @@
+//! Concurrent-load generator for the mapping service: a zipfian
+//! request mix from `CLIENTS` client threads against a **live** TCP
+//! server (the bounded reactor), measuring sustained requests/sec and
+//! per-request p50/p95 latency over the wire. With `UNION_BENCH_DIR`
+//! set, the run is recorded as `BENCH_service_load.json` for the
+//! bench-regression gate.
+//!
+//! Where `service_throughput` drives the broker directly (no sockets),
+//! this bench pays the full serving cost: TCP connect, JSON-lines
+//! framing, the reactor's poll loop, and the tiered cache. The pool of
+//! distinct jobs is warmed first, so the timed phases measure the
+//! steady state a long-running daemon converges to: every request a
+//! warm-tier hit. Deterministic gates pin the properties that must not
+//! rot: the warm-tier hit rate is exactly 1.0, the reactor spawns zero
+//! per-connection threads, and the served mapping is bit-identical to
+//! a direct `NetworkOrchestrator` run of the same job.
+
+use std::time::Instant;
+
+use union::mappers::Objective;
+use union::service::{client_request, JobSpec, Json, Request, ServeConfig, Server};
+use union::util::bench::Bencher;
+use union::util::stats::Summary;
+use union::util::Rng;
+
+/// Distinct jobs in the pool (zipf ranks).
+const POOL: usize = 8;
+/// Concurrent client threads (the ISSUE floor is K >= 4).
+const CLIENTS: usize = 4;
+/// Requests each client issues per timed iteration.
+const REQS_PER_CLIENT: usize = 40;
+/// Search samples per job — tiny on purpose: the bench measures
+/// serving overheads, not search time.
+const SAMPLES: usize = 60;
+/// Zipf exponent: rank r is drawn with weight 1/r^s.
+const ZIPF_EXPONENT: f64 = 1.1;
+
+fn spec(i: usize) -> JobSpec {
+    let dims = [16, 24, 32, 40, 48, 64, 80, 96];
+    JobSpec {
+        workload: format!("gemm:{}x16x16", dims[i % dims.len()]),
+        arch: "edge".into(),
+        cost: "analytical".into(),
+        objective: Objective::Edp,
+        samples: SAMPLES,
+        seed: 42,
+        constraints: String::new(),
+    }
+}
+
+fn request(i: usize) -> Request {
+    Request::Search { id: None, spec: spec(i), progress: false }
+}
+
+/// Cumulative zipf distribution over the pool ranks.
+fn zipf_cumulative() -> [f64; POOL] {
+    let mut w = [0.0; POOL];
+    let mut total = 0.0;
+    for (r, slot) in w.iter_mut().enumerate() {
+        *slot = 1.0 / ((r + 1) as f64).powf(ZIPF_EXPONENT);
+        total += *slot;
+    }
+    let mut acc = 0.0;
+    for slot in w.iter_mut() {
+        acc += *slot / total;
+        *slot = acc;
+    }
+    w[POOL - 1] = 1.0;
+    w
+}
+
+fn pick(rng: &mut Rng, cum: &[f64; POOL]) -> usize {
+    let u = rng.f64();
+    cum.iter().position(|&c| u < c).unwrap_or(POOL - 1)
+}
+
+/// One load phase: `CLIENTS` threads, each issuing `REQS_PER_CLIENT`
+/// zipf-distributed requests over its own connections. Returns every
+/// per-request latency in seconds.
+fn run_phase(addr: &str, phase_seed: u64) -> Vec<f64> {
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let mut rng =
+                    Rng::new(phase_seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1));
+                let cum = zipf_cumulative();
+                let mut lat = Vec::with_capacity(REQS_PER_CLIENT);
+                for _ in 0..REQS_PER_CLIENT {
+                    let i = pick(&mut rng, &cum);
+                    let t0 = Instant::now();
+                    let resp = client_request(&addr, &request(i)).expect("request served");
+                    lat.push(t0.elapsed().as_secs_f64());
+                    assert_eq!(
+                        resp.str("type"),
+                        Some("result"),
+                        "unexpected response under load: {}",
+                        resp.to_line()
+                    );
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Vec::with_capacity(CLIENTS * REQS_PER_CLIENT);
+    for h in handles {
+        all.extend(h.join().expect("client thread"));
+    }
+    all
+}
+
+fn status(addr: &str) -> Json {
+    client_request(addr, &Request::Status { id: None }).expect("status served")
+}
+
+fn main() {
+    let server = Server::bind(ServeConfig { port: 0, ..ServeConfig::default() })
+        .expect("bind ephemeral port");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let stats = server.stats_handle();
+    let daemon = std::thread::spawn(move || server.run());
+
+    // warm the pool: one sequential search per distinct job, so the
+    // timed phases measure the daemon's steady state
+    for i in 0..POOL {
+        let r = client_request(&addr, &request(i)).expect("warmup served");
+        assert_eq!(r.str("type"), Some("result"), "{}", r.to_line());
+    }
+
+    // served answers must be byte-identical to a direct orchestrator
+    // run of the same job (checked before the timed window so the
+    // extra hit does not skew the hit-rate accounting)
+    let served = client_request(&addr, &request(0)).expect("identity probe served");
+    let mapping =
+        union::service::mapping_from_json(served.get("mapping").expect("mapping present"))
+            .expect("mapping decodes");
+    let job = union::service::resolve_spec(&spec(0)).expect("spec resolves");
+    let direct = {
+        use union::network::{NetworkOrchestrator, OrchestratorConfig, WorkloadGraph};
+        let graph = WorkloadGraph::from_workloads("direct", vec![job.workload.clone()]);
+        let orch = NetworkOrchestrator::with_config(
+            &job.arch,
+            job.cost.model(),
+            &job.constraints,
+            OrchestratorConfig {
+                objective: job.objective,
+                samples: job.samples,
+                seed: job.seed,
+                threads: Some(1),
+            },
+        );
+        orch.run(&graph).expect("direct run")
+    };
+    let direct_best = &direct.layers[0].result;
+    assert_eq!(mapping, direct_best.mapping, "served mapping differs from direct run");
+    assert_eq!(
+        served.num("score").expect("score").to_bits(),
+        direct_best.score.to_bits(),
+        "served score is not bit-identical to the direct run"
+    );
+
+    let before = status(&addr);
+    let warm_before = before.num("cache_warm_hits").unwrap_or(0.0);
+
+    let mut b = Bencher::with_iters(1, 3);
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut phase = 0u64;
+    let rps = b.bench_rate("service_load_requests", "req", || {
+        phase += 1;
+        latencies.extend(run_phase(&addr, 0xBEE5 + phase));
+        (CLIENTS * REQS_PER_CLIENT) as u64
+    });
+
+    let after = status(&addr);
+    let warm_after = after.num("cache_warm_hits").unwrap_or(0.0);
+    let timed_requests = latencies.len() as f64;
+    let warm_hit_rate = (warm_after - warm_before) / timed_requests;
+
+    let lat = Summary::of(&latencies);
+    println!(
+        "service load: {CLIENTS} clients x zipf(s={ZIPF_EXPONENT}) over {POOL} jobs: \
+         {rps:.3e} req/s, p50 {:.3} ms, p95 {:.3} ms, warm hit rate {warm_hit_rate:.3}",
+        lat.median * 1e3,
+        lat.p95 * 1e3,
+    );
+
+    // deterministic gates: steady state is all warm-tier hits, the
+    // reactor never spawns a per-connection thread, and the identity
+    // check above held
+    b.gated_metric("service_load_warm_hit_rate", warm_hit_rate);
+    b.gated_metric(
+        "service_load_reactor_singlethread",
+        if stats.conn_threads_spawned() == 0 { 1.0 } else { 0.0 },
+    );
+    b.gated_metric("service_load_mapping_bit_identical", 1.0);
+    // latency gate, in the harness's higher-is-better convention
+    b.gated_metric("service_load_inv_p95_latency", 1.0 / lat.p95.max(1e-9));
+    b.metric("service_load_p50_ms", lat.median * 1e3);
+    b.metric("service_load_p95_ms", lat.p95 * 1e3);
+    b.metric("service_load_clients", CLIENTS as f64);
+    b.metric("service_load_pool_jobs", POOL as f64);
+
+    let bye = client_request(&addr, &Request::Shutdown { id: None }).expect("shutdown served");
+    assert_eq!(bye.bool_field("ok"), Some(true));
+    daemon.join().expect("server thread").expect("server exits cleanly");
+
+    b.write_json_env("service_load");
+}

@@ -11,8 +11,12 @@
 //! union dse       [--space S] [--model <net>] [--cost C] [--objective O]
 //!                 [--effort E] [--seed N] [--no-prune] [--no-warm-start] [--csv]
 //! union serve     [--port N] [--cache file.jsonl] [--shards N] [--queue N]
-//!                 [--job-threads N] [--stdio] [--verbose]
-//! union client    search|status|shutdown [--port N] [--workload <spec>] ...
+//!                 [--job-threads N] [--max-conns N] [--cache-warm-entries N]
+//!                 [--cache-warm-mb N] [--cache-flush-every N]
+//!                 [--cache-flush-ms N] [--cache-compact-mb N]
+//!                 [--stdio] [--verbose]
+//! union client    search|status|shutdown [--port N] [--workload <spec>]
+//!                 [--progress] [--retries N] [--no-retry] ...
 //! union warm      --cache file.jsonl [--model <net>] [--arch <spec>] ...
 //! union casestudy <id> [--thorough] | --list
 //! union validate  [--artifacts DIR]
@@ -32,9 +36,12 @@ use union::mapping::render_loop_nest;
 use union::mapspace::{constraints_from_str, Constraints, MapSpace};
 use union::network::{NetworkOrchestrator, OrchestratorConfig};
 use union::service::{
-    self, mapping_from_json, Broker, BrokerConfig, CostKind, JobRequest, JobSpec, Request,
-    ResultCache, ServeConfig, Server, Submitted,
+    self, mapping_from_json, Broker, BrokerConfig, CacheConfig, CostKind, JobRequest, JobSpec,
+    Request, ResultCache, ServeConfig, Server, Submitted,
 };
+use union::util::Rng;
+
+use std::time::Duration;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -87,11 +94,14 @@ subcommands:
             [--batch N] [--seed N] [--threads N] [--constraints file.ucon]
             [--no-prune] [--no-warm-start] [--csv]
   serve     [--port N] [--host H] [--shards N] [--queue N] [--job-threads N]
-            [--cache file.jsonl] [--stdio] [--verbose]
+            [--cache file.jsonl] [--max-conns N] [--cache-warm-entries N]
+            [--cache-warm-mb N] [--cache-flush-every N] [--cache-flush-ms N]
+            [--cache-compact-mb N] [--stdio] [--verbose]
   client    search|status|shutdown [--port N] [--host H] [--json]
+            [--retries N] [--no-retry]
             search: --workload <spec> [--arch <spec>] [--cost C] [--objective O]
                     [--effort E] [--seed N] [--constraints file.ucon]
-                    [--mapping-only]
+                    [--mapping-only] [--progress]
   warm      --cache file.jsonl [--model <net>] [--arch <spec>] [--cost C]
             [--objective O] [--effort E] [--batch N] [--seed N] [--shards N]
   casestudy <id> [--thorough] [--effort E]   (ids: `union casestudy --list`)
@@ -381,12 +391,31 @@ fn parse_broker_flags(args: &Args) -> Result<BrokerConfig, String> {
     })
 }
 
+/// Result-cache tiering/flush knobs from `union serve` flags.
+fn parse_cache_flags(args: &Args) -> Result<CacheConfig, String> {
+    let d = CacheConfig::default();
+    Ok(CacheConfig {
+        warm_entries: args.usize_flag("cache-warm-entries", d.warm_entries)?.max(1),
+        warm_bytes: args.usize_flag("cache-warm-mb", d.warm_bytes >> 20)?.max(1) << 20,
+        flush_every: args.usize_flag("cache-flush-every", d.flush_every)?.max(1),
+        flush_after: Duration::from_millis(
+            args.usize_flag("cache-flush-ms", d.flush_after.as_millis() as usize)? as u64,
+        ),
+        compact_at_bytes: (args
+            .usize_flag("cache-compact-mb", (d.compact_at_bytes >> 20) as usize)?
+            .max(1) as u64)
+            << 20,
+    })
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let config = ServeConfig {
         host: args.flag_or("host", "127.0.0.1").to_string(),
         port: parse_port_flag(args, 7415)?,
         cache: args.flag("cache").map(std::path::PathBuf::from),
+        cache_config: parse_cache_flags(args)?,
         broker: parse_broker_flags(args)?,
+        max_conns: args.usize_flag("max-conns", ServeConfig::default().max_conns)?.max(1),
         verbose: args.switch("verbose"),
     };
     if args.switch("stdio") {
@@ -415,6 +444,23 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         stats.requests, stats.searched, stats.cache_hits, stats.coalesced
     );
     Ok(())
+}
+
+/// Jitter seed for client retry backoff: wall-clock nanos xor pid, so
+/// a stampede of simultaneously-refused clients desynchronizes.
+fn retry_jitter_seed() -> u64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+        .unwrap_or(0x5EED);
+    nanos ^ ((std::process::id() as u64) << 32)
+}
+
+/// Bounded exponential backoff with jitter: 100ms · 2^(attempt−1)
+/// capped at 2s, plus up to +50% random spread.
+fn client_backoff(attempt: usize, rng: &mut Rng) -> Duration {
+    let base = (100u64 << (attempt.saturating_sub(1)).min(5)).min(2000);
+    Duration::from_millis(base + rng.below(base as usize / 2 + 1) as u64)
 }
 
 fn cmd_client(args: &Args) -> Result<(), String> {
@@ -451,11 +497,49 @@ fn cmd_client(args: &Args) -> Result<(), String> {
                     seed: args.usize_flag("seed", 42)? as u64,
                     constraints,
                 },
+                progress: args.switch("progress"),
             }
         }
         other => return Err(format!("unknown client action '{other}'")),
     };
-    let response = service::client_request(&addr, &request)?;
+    // bounded, jittered retry on `overloaded` backpressure; --no-retry
+    // surfaces the first overload immediately (scripting, tests)
+    let retries = if args.switch("no-retry") { 0 } else { args.usize_flag("retries", 4)? };
+    let json_output = args.switch("json");
+    let mut rng = Rng::new(retry_jitter_seed());
+    let mut attempt = 0usize;
+    let response = loop {
+        let mut on_event = |j: &service::Json| {
+            if json_output {
+                // progress documents pass through as JSON lines; the
+                // final response is always the last line
+                println!("{}", j.to_line());
+            } else {
+                eprintln!(
+                    "progress: shard={} evaluated={} best={}",
+                    j.num("shard").unwrap_or(-1.0),
+                    j.num("evaluated").unwrap_or(0.0),
+                    j.num("best_score")
+                        .map(|s| format!("{s:.6e}"))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+        };
+        let response = service::client_request_with(&addr, &request, &mut on_event)?;
+        if response.str("type") == Some("overloaded") && attempt < retries {
+            attempt += 1;
+            let backoff = client_backoff(attempt, &mut rng);
+            eprintln!(
+                "server overloaded (shard {}, depth {}); retry {attempt}/{retries} in {}ms",
+                response.num("shard").unwrap_or(-1.0),
+                response.num("depth").unwrap_or(-1.0),
+                backoff.as_millis(),
+            );
+            std::thread::sleep(backoff);
+            continue;
+        }
+        break response;
+    };
     if args.switch("json") {
         println!("{}", response.to_line());
         return Ok(());
@@ -526,6 +610,14 @@ fn cmd_client(args: &Args) -> Result<(), String> {
                 response.num("cache_skipped").unwrap_or(0.0),
                 response.num("cache_appended").unwrap_or(0.0),
             );
+            println!(
+                "cache tiers: warm_hits={} cold_hits={} warm_evictions={} flushes={} compactions={}",
+                response.num("cache_warm_hits").unwrap_or(0.0),
+                response.num("cache_cold_hits").unwrap_or(0.0),
+                response.num("cache_warm_evictions").unwrap_or(0.0),
+                response.num("cache_flushes").unwrap_or(0.0),
+                response.num("cache_compactions").unwrap_or(0.0),
+            );
             Ok(())
         }
         Some("shutdown") => {
@@ -537,9 +629,11 @@ fn cmd_client(args: &Args) -> Result<(), String> {
             Ok(())
         }
         Some("overloaded") => Err(format!(
-            "server overloaded (shard {}, depth {}) — retry with backoff",
+            "server overloaded (shard {}, depth {}) — gave up after {} retr{}",
             response.num("shard").unwrap_or(-1.0),
             response.num("depth").unwrap_or(-1.0),
+            retries,
+            if retries == 1 { "y" } else { "ies" },
         )),
         _ => Err(response
             .str("message")

@@ -18,5 +18,5 @@ mod orchestrator;
 pub use graph::{NetworkNode, WorkloadGraph};
 pub use orchestrator::{
     LayerResult, NetworkOrchestrator, NetworkResult, NetworkStats, OrchestratorConfig,
-    WarmStartCache,
+    SearchProgress, WarmStartCache,
 };

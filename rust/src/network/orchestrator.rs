@@ -11,7 +11,9 @@
 //! preserves the engine's thread-count-invariant determinism guarantee:
 //! the whole network report is byte-identical at 1 and N threads.
 
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use crate::arch::Arch;
 use crate::cost::CostModel;
@@ -235,6 +237,60 @@ impl NetworkResult {
     }
 }
 
+/// A progress snapshot emitted (to an observer passed to
+/// [`NetworkOrchestrator::run_with_session_observed`]) just before each
+/// candidate batch is requested — the anytime-search hook the mapping
+/// service streams over the wire.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchProgress {
+    /// Distinct job index within the run (0-based).
+    pub job: usize,
+    /// Candidates scored so far across the job's sources. Approximate
+    /// by construction: the engine reports each batch's scores when the
+    /// *next* batch is requested, so the trailing batch of each source
+    /// is only reflected in the final result's exact `evaluated`.
+    pub evaluated: usize,
+    /// Incumbent objective score, if any candidate has scored yet.
+    pub best_score: Option<f64>,
+}
+
+/// Transparent [`CandidateSource`] wrapper: forwards every call
+/// verbatim (same batches, same `preadmitted`, same call sequence — so
+/// results stay byte-identical to an unobserved run) and reports the
+/// engine's [`Progress`] to the observer on the way through.
+struct ObservedSource {
+    inner: Box<dyn CandidateSource>,
+    job: usize,
+    /// Scored-so-far accumulator shared by all of one job's sources.
+    evaluated: Rc<Cell<usize>>,
+    observer: Rc<RefCell<Box<dyn FnMut(SearchProgress)>>>,
+}
+
+impl CandidateSource for ObservedSource {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn preadmitted(&self) -> bool {
+        self.inner.preadmitted()
+    }
+
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        progress: &Progress,
+        out: &mut crate::mapping::PackedBatch,
+    ) -> bool {
+        self.evaluated.set(self.evaluated.get() + progress.last_scored.len());
+        (self.observer.borrow_mut())(SearchProgress {
+            job: self.job,
+            evaluated: self.evaluated.get(),
+            best_score: progress.best.map(|(_, score)| score),
+        });
+        self.inner.next_batch(space, progress, out)
+    }
+}
+
 struct JobPlan {
     problem: Problem,
     first_node: usize,
@@ -280,8 +336,27 @@ impl<'a> NetworkOrchestrator<'a> {
         &self,
         graph: &WorkloadGraph,
         session: &mut Session,
-        mut warm: Option<&mut WarmStartCache>,
+        warm: Option<&mut WarmStartCache>,
     ) -> Result<NetworkResult, String> {
+        self.run_with_session_observed(graph, session, warm, None)
+    }
+
+    /// [`NetworkOrchestrator::run_with_session`] with an **anytime
+    /// observer**: `observer` is called just before every candidate
+    /// batch with the incumbent score and samples done so far, so a
+    /// caller (the mapping service's streamed-progress path) can report
+    /// partial results while a long search runs. Observation is
+    /// transparent — every source is wrapped, not replaced, so the
+    /// engine sees the identical call sequence and the result is
+    /// byte-identical to an unobserved run.
+    pub fn run_with_session_observed(
+        &self,
+        graph: &WorkloadGraph,
+        session: &mut Session,
+        mut warm: Option<&mut WarmStartCache>,
+        observer: Option<Box<dyn FnMut(SearchProgress)>>,
+    ) -> Result<NetworkResult, String> {
+        let observer = observer.map(|f| Rc::new(RefCell::new(f)));
         if graph.is_empty() {
             return Err(format!("network '{}' has no layers", graph.name));
         }
@@ -335,6 +410,20 @@ impl<'a> NetworkOrchestrator<'a> {
                 done: false,
             })];
             sources.extend(portfolio_sources(self.config.samples, self.job_seed(j)));
+            if let Some(obs) = &observer {
+                let evaluated = Rc::new(Cell::new(0usize));
+                sources = sources
+                    .into_iter()
+                    .map(|inner| {
+                        Box::new(ObservedSource {
+                            inner,
+                            job: j,
+                            evaluated: Rc::clone(&evaluated),
+                            observer: Rc::clone(obs),
+                        }) as Box<dyn CandidateSource>
+                    })
+                    .collect();
+            }
             // cross-run incumbent sharing: open with the best mapping
             // this problem earned on a neighbouring arch point, if any
             let warm_key = self.warm_signature(&job.problem);

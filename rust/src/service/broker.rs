@@ -47,7 +47,7 @@ use crate::engine::{EngineConfig, EngineStats, Session};
 use crate::frontend::Workload;
 use crate::mappers::Objective;
 use crate::mapspace::{constraints_to_str, Constraints};
-use crate::network::{NetworkOrchestrator, OrchestratorConfig, WorkloadGraph};
+use crate::network::{NetworkOrchestrator, OrchestratorConfig, SearchProgress, WorkloadGraph};
 
 use super::cache::{CacheStats, CachedResult, ResultCache};
 
@@ -119,12 +119,34 @@ pub struct JobDone {
     pub shard: usize,
 }
 
+/// A streamed progress snapshot of an in-flight search job — the
+/// incumbent so far plus samples done, emitted once per candidate batch
+/// to every waiter that opted in ([`Broker::submit_streaming`]).
+#[derive(Debug, Clone)]
+pub struct JobProgress {
+    pub sig: String,
+    /// Shard executing the search.
+    pub shard: usize,
+    /// Candidates scored so far (approximate; the final response
+    /// carries the exact count).
+    pub evaluated: usize,
+    /// Incumbent objective score, if any candidate has scored yet.
+    pub best_score: Option<f64>,
+}
+
 /// Outcome of [`Broker::submit`].
 pub enum Submitted {
     /// Answered without any engine work (persistent-cache hit).
     Cached(Box<CachedResult>),
     /// Job queued (fresh) or joined (coalesced); await the receiver.
-    Pending { rx: Receiver<JobDone>, coalesced: bool, shard: usize },
+    /// `progress` streams anytime snapshots while the search runs, for
+    /// waiters that opted in via [`Broker::submit_streaming`].
+    Pending {
+        rx: Receiver<JobDone>,
+        coalesced: bool,
+        shard: usize,
+        progress: Option<Receiver<JobProgress>>,
+    },
     /// The target shard's queue is full — explicit backpressure.
     Overloaded { shard: usize, depth: usize },
     /// The broker is draining and accepts no new work.
@@ -184,6 +206,16 @@ pub struct BrokerStats {
     pub errors: usize,
     /// `evaluate` requests served (protocol layer, no queue).
     pub evaluates: usize,
+    /// Progress snapshots streamed to opted-in waiters.
+    pub progress_events: usize,
+    /// Result-cache warm-tier (in-memory LRU) hits. Cache tier counters
+    /// are folded in from the cache when a snapshot is taken.
+    pub cache_warm_hits: u64,
+    /// Result-cache hits served from the pending batch or by a disk
+    /// read (then re-warmed).
+    pub cache_cold_hits: u64,
+    /// Entries pushed out of the warm tier by its capacity bounds.
+    pub cache_warm_evictions: u64,
     /// Aggregate engine statistics across every executed job.
     pub engine: EngineStats,
 }
@@ -193,10 +225,18 @@ struct Ticket {
     req: JobRequest,
 }
 
+/// Per-inflight-job waiter lists: everyone gets the final [`JobDone`];
+/// only opted-in waiters get streamed [`JobProgress`].
+#[derive(Default)]
+struct Waiters {
+    done: Vec<Sender<JobDone>>,
+    progress: Vec<Sender<JobProgress>>,
+}
+
 struct State {
     queues: Vec<VecDeque<Ticket>>,
     /// sig → waiters of the queued/running job with that signature.
-    inflight: HashMap<String, Vec<Sender<JobDone>>>,
+    inflight: HashMap<String, Waiters>,
     /// Jobs currently executing on some shard.
     active: usize,
     draining: bool,
@@ -206,8 +246,8 @@ struct State {
 
 struct Shared {
     state: Mutex<State>,
-    /// The result cache under its own lock, so its disk appends (one
-    /// write+flush per completed job) never block the submit
+    /// The result cache under its own lock, so its disk work (batched
+    /// flushes, cold reads, compaction) never blocks the submit
     /// bookkeeping, coalescing or status paths that hold `state`.
     /// Never locked while holding `state` (and vice versa).
     cache: Mutex<ResultCache>,
@@ -288,6 +328,18 @@ impl Broker {
     /// `job_signature(&req)`: a mismatched signature would poison the
     /// cache and the coalescing map.
     pub fn submit_with_signature(&self, req: JobRequest, sig: String) -> Submitted {
+        self.submit_opts(req, sig, false)
+    }
+
+    /// [`Broker::submit_with_signature`] with **anytime streaming**: a
+    /// pending submission additionally carries a progress receiver that
+    /// yields one [`JobProgress`] snapshot per candidate batch while the
+    /// search runs (a cache hit streams nothing — there is no search).
+    pub fn submit_streaming(&self, req: JobRequest, sig: String) -> Submitted {
+        self.submit_opts(req, sig, true)
+    }
+
+    fn submit_opts(&self, req: JobRequest, sig: String, want_progress: bool) -> Submitted {
         debug_assert_eq!(sig, job_signature(&req), "signature/request mismatch");
         let problem = req.workload.problem();
         if let Err(e) = problem.validate() {
@@ -305,7 +357,7 @@ impl Broker {
         }
         // cache fast path under the cache's own lock: a disk append on
         // a worker never stalls submit bookkeeping, and vice versa
-        let hit = self.shared.cache.lock().unwrap().get(&sig).cloned();
+        let hit = self.shared.cache.lock().unwrap().get(&sig);
         let mut st = self.shared.state.lock().unwrap();
         if let Some(hit) = hit {
             st.stats.cache_hits += 1;
@@ -317,21 +369,32 @@ impl Broker {
             return Submitted::Draining;
         }
         let shard = (fnv64(sig.as_bytes()) % self.shared.config.shards as u64) as usize;
+        let progress_channel = |waiters: &mut Waiters| {
+            if !want_progress {
+                return None;
+            }
+            let (ptx, prx) = channel();
+            waiters.progress.push(ptx);
+            Some(prx)
+        };
         if let Some(waiters) = st.inflight.get_mut(&sig) {
             st.stats.coalesced += 1;
             let (tx, rx) = channel();
-            waiters.push(tx);
-            return Submitted::Pending { rx, coalesced: true, shard };
+            waiters.done.push(tx);
+            let progress = progress_channel(waiters);
+            return Submitted::Pending { rx, coalesced: true, shard, progress };
         }
         if st.queues[shard].len() >= self.shared.config.queue_capacity {
             st.stats.overloaded += 1;
             return Submitted::Overloaded { shard, depth: st.queues[shard].len() };
         }
         let (tx, rx) = channel();
-        st.inflight.insert(sig.clone(), vec![tx]);
+        let mut waiters = Waiters { done: vec![tx], progress: Vec::new() };
+        let progress = progress_channel(&mut waiters);
+        st.inflight.insert(sig.clone(), waiters);
         st.queues[shard].push_back(Ticket { sig, req });
         self.shared.work.notify_all();
-        Submitted::Pending { rx, coalesced: false, shard }
+        Submitted::Pending { rx, coalesced: false, shard, progress }
     }
 
     /// Convenience: submit and block until the result is available
@@ -352,9 +415,28 @@ impl Broker {
         }
     }
 
-    /// Consistent snapshot of the counters.
+    /// Consistent snapshot of the counters, with the result cache's
+    /// tier counters folded in. (The two locks are taken in sequence,
+    /// never nested — see the [`Shared`] lock-ordering rule.)
     pub fn stats(&self) -> BrokerStats {
-        self.shared.state.lock().unwrap().stats.clone()
+        let mut s = self.shared.state.lock().unwrap().stats.clone();
+        let cs = self.shared.cache.lock().unwrap().stats();
+        s.cache_warm_hits = cs.warm_hits;
+        s.cache_cold_hits = cs.cold_hits;
+        s.cache_warm_evictions = cs.warm_evictions;
+        s
+    }
+
+    /// Force any batched cache records to disk now (shutdown, tests).
+    pub fn flush_cache(&self) {
+        self.shared.cache.lock().unwrap().flush();
+    }
+
+    /// Timer tick for the batched-flush policy — the server's reactor
+    /// calls this between connection polls so a quiet period still
+    /// bounds the cache durability window.
+    pub fn tick_cache(&self) {
+        self.shared.cache.lock().unwrap().flush_if_due();
     }
 
     /// Per-shard queue depths plus the number of running jobs.
@@ -398,6 +480,7 @@ impl Broker {
         for w in handles {
             let _ = w.join();
         }
+        self.flush_cache();
         self.stats()
     }
 }
@@ -429,11 +512,43 @@ fn worker_loop(shard: usize, shared: Arc<Shared>) {
                 st = shared.work.wait(st).unwrap();
             }
         };
+        // anytime streaming: one snapshot per candidate batch, fanned
+        // out to whichever progress waiters are registered at that
+        // moment (coalescers may join mid-run). Senders are cloned out
+        // of the lock before sending, upholding the lock-ordering rule
+        // and keeping channel pushes outside the state lock.
+        let observer: Box<dyn FnMut(SearchProgress)> = {
+            let shared = Arc::clone(&shared);
+            let sig = ticket.sig.clone();
+            Box::new(move |p: SearchProgress| {
+                let txs = {
+                    let mut guard = shared.state.lock().unwrap();
+                    let st = &mut *guard;
+                    match st.inflight.get(&sig) {
+                        Some(w) if !w.progress.is_empty() => {
+                            st.stats.progress_events += 1;
+                            w.progress.clone()
+                        }
+                        _ => return,
+                    }
+                };
+                let event = JobProgress {
+                    sig: sig.clone(),
+                    shard,
+                    evaluated: p.evaluated,
+                    best_score: p.best_score,
+                };
+                for tx in txs {
+                    // a waiter that hung up is not an error
+                    let _ = tx.send(event.clone());
+                }
+            })
+        };
         // a panicking search must not strand the shard (active count,
         // inflight waiters): degrade it to a job error and drop the
         // shard's sessions, whose interior state is now suspect
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_search(&ticket.req, &mut sessions, shared.config.job_threads)
+            run_search(&ticket.req, &mut sessions, shared.config.job_threads, observer)
         }))
         .unwrap_or_else(|_| {
             sessions.clear();
@@ -465,7 +580,7 @@ fn worker_loop(shard: usize, shared: Arc<Shared>) {
         st.active -= 1;
         shared.idle.notify_all();
         drop(st);
-        for tx in waiters {
+        for tx in waiters.done {
             // a waiter that hung up is not an error
             let _ = tx.send(JobDone {
                 sig: ticket.sig.clone(),
@@ -493,6 +608,7 @@ fn run_search(
     req: &JobRequest,
     sessions: &mut HashMap<(CostKind, u8), Session<'static>>,
     job_threads: Option<usize>,
+    observer: Box<dyn FnMut(SearchProgress)>,
 ) -> Result<(CachedResult, EngineStats), String> {
     let graph =
         WorkloadGraph::from_workloads(&req.workload.name, vec![req.workload.clone()]);
@@ -513,7 +629,8 @@ fn run_search(
                 EngineConfig { threads: job_threads, ..EngineConfig::default() },
             )
         });
-    let network = orchestrator.run_with_session(&graph, session, None)?;
+    let network =
+        orchestrator.run_with_session_observed(&graph, session, None, Some(observer))?;
     let layer = network
         .layers
         .first()
@@ -597,6 +714,45 @@ mod tests {
         assert_eq!(stats.overloaded, 1);
         assert_eq!(stats.coalesced, 1);
         assert_eq!(stats.searched, 1);
+    }
+
+    #[test]
+    fn streaming_progress_is_transparent_and_reports_batches() {
+        // plain run first: the reference answer
+        let plain = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        let reference = plain.submit_wait(req(32, 200)).unwrap();
+        plain.drain();
+
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        let job = req(32, 200);
+        let sig = job_signature(&job);
+        let (rx, progress) = match broker.submit_streaming(job, sig.clone()) {
+            Submitted::Pending { rx, progress, coalesced: false, .. } => {
+                (rx, progress.expect("streaming submit carries a progress receiver"))
+            }
+            _ => panic!("expected a fresh pending submission"),
+        };
+        let done = rx.recv().unwrap().result.unwrap();
+        let events: Vec<JobProgress> = progress.try_iter().collect();
+        assert!(!events.is_empty(), "at least one batch snapshot streamed");
+        assert!(events.iter().all(|e| e.sig == sig));
+        // evaluated counts are monotone and an incumbent appears
+        assert!(events.windows(2).all(|w| w[0].evaluated <= w[1].evaluated));
+        assert!(events.iter().any(|e| e.best_score.is_some()));
+        // observation must not perturb the search: bit-identical result
+        assert_eq!(done, reference);
+        assert_eq!(done.score.to_bits(), reference.score.to_bits());
+        let stats = broker.drain();
+        assert_eq!(stats.progress_events as usize, events.len());
+
+        // a non-streaming submit carries no progress receiver
+        let quiet = Broker::new(BrokerConfig { shards: 1, paused: true, ..BrokerConfig::default() });
+        match quiet.submit(req(48, 50)) {
+            Submitted::Pending { progress, .. } => assert!(progress.is_none()),
+            _ => panic!("expected pending"),
+        }
+        quiet.resume();
+        quiet.drain();
     }
 
     #[test]

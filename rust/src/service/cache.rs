@@ -1,30 +1,49 @@
-//! The **persistent result cache**: a versioned, corruption-tolerant
-//! on-disk store of finished search jobs, keyed by canonical job
-//! signature.
+//! The **tiered persistent result cache**: a bounded in-memory warm
+//! tier in front of a versioned, corruption-tolerant on-disk store of
+//! finished search jobs, keyed by canonical job signature.
 //!
-//! Format: a JSON-lines file whose first line is the version header
-//! `{"union_result_cache":1}` and whose remaining lines are one record
-//! per completed job. Records are *appended* as jobs finish (one
-//! `write` + `flush` per job — the file is never rewritten in steady
-//! state), so a crash can at worst truncate the final record.
-//! [`ResultCache::open`] therefore loads leniently: a line that fails
-//! to parse, fails validation, or is half-written is **skipped and
-//! counted**, never fatal. A version-mismatched or headerless file is
-//! preserved as `<path>.bad-vN` and a fresh store is started — old data
-//! is never silently destroyed, and never misinterpreted.
+//! On-disk format: a JSON-lines file whose first line is the version
+//! header `{"union_result_cache":1}` and whose remaining lines are one
+//! record per completed job. Records are *appended* as jobs finish, in
+//! **batches** (every [`CacheConfig::flush_every`] records or
+//! [`CacheConfig::flush_after`], whichever comes first — the service
+//! ticks the timer), so a crash can at worst lose the unflushed tail;
+//! it can never tear a previously flushed line. [`ResultCache::open`]
+//! loads leniently: a line that fails to parse, fails validation, or is
+//! half-written is **skipped and counted**, never fatal. A
+//! version-mismatched or headerless file is preserved as
+//! `<path>.bad-vN` and a fresh store is started — old data is never
+//! silently destroyed, and never misinterpreted.
 //!
-//! Scores and cost metrics are serialized with shortest-round-trip
-//! float formatting ([`Json`]), so a reloaded record reproduces the
-//! original `f64`s bit for bit — a cache hit is indistinguishable from
-//! re-running the search (`tests/service.rs` pins this).
+//! In memory the store is **tiered** rather than fully resident:
+//!
+//! 1. **warm** — a [`LruCache`] bounded by entry count *and*
+//!    approximate bytes ([`CacheConfig::warm_entries`] /
+//!    [`CacheConfig::warm_bytes`]), so a service over a multi-gigabyte
+//!    cache file has bounded resident memory;
+//! 2. **pending** — records accepted but not yet flushed to disk
+//!    (bounded by `flush_every`);
+//! 3. **cold** — everything else lives only in a signature → file
+//!    offset index; a cold hit seeks and re-parses the one line, which
+//!    reproduces the original `f64`s bit for bit (shortest-round-trip
+//!    float formatting in [`Json`]), then re-warms the entry.
+//!
+//! **Log compaction**: open rewrites the file (temp file + rename)
+//! whenever it holds reclaimable lines — duplicate signatures (the
+//! newest record per signature is kept), corrupt/torn lines, blanks —
+//! and [`ResultCache::flush`] triggers the same rewrite past a size
+//! threshold. Compaction copies surviving lines verbatim, so answers
+//! after compaction are byte-identical to before (pinned by tests).
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
-use std::io::Write;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use crate::mappers::SearchResult;
 use crate::mapping::Mapping;
+use crate::util::lru::LruCache;
 
 use super::proto::{mapping_from_json, mapping_to_json, Json};
 
@@ -111,69 +130,236 @@ impl CachedResult {
     }
 }
 
-/// Load/append statistics, surfaced by `union client status` and the
+/// Tiering and flush knobs. Defaults favor a small always-correct
+/// deployment: a few thousand warm results, sub-second durability.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Warm-tier entry bound.
+    pub warm_entries: usize,
+    /// Warm-tier approximate byte bound (serialized-record bytes).
+    pub warm_bytes: usize,
+    /// Flush the pending batch to disk every this many records…
+    pub flush_every: usize,
+    /// …or once this much time has passed with records pending
+    /// (checked on insert and on [`ResultCache::flush_if_due`] ticks).
+    pub flush_after: Duration,
+    /// Past this file size, flush triggers compaction when less than
+    /// half the file is live data (only possible when the file carried
+    /// stale lines from before this process: steady-state appends are
+    /// dedup'd).
+    pub compact_at_bytes: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> CacheConfig {
+        CacheConfig {
+            warm_entries: 4096,
+            warm_bytes: 32 << 20,
+            flush_every: 8,
+            flush_after: Duration::from_millis(200),
+            compact_at_bytes: 64 << 20,
+        }
+    }
+}
+
+/// Cache counters, surfaced by `union client status` and the tier and
 /// corruption-tolerance tests.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Records loaded at open.
+    /// Valid record lines seen at open (before dedup).
     pub loaded: usize,
     /// Lines skipped at open (corrupt, truncated, or invalid records).
     pub skipped: usize,
-    /// Records appended since open.
+    /// Records flushed to disk since open.
     pub appended: usize,
+    /// Lookups answered from the warm (in-memory LRU) tier.
+    pub warm_hits: u64,
+    /// Lookups answered from the pending batch or by a disk read.
+    pub cold_hits: u64,
+    /// Lookups that found no record in any tier.
+    pub misses: u64,
+    /// Entries pushed out of the warm tier by its capacity bounds.
+    pub warm_evictions: u64,
+    /// Batched disk flushes performed.
+    pub flushes: usize,
+    /// Log compactions performed (open-time or size-triggered).
+    pub compactions: usize,
+    /// Stale lines (duplicate signatures, corrupt records, blanks)
+    /// dropped by open-time compaction.
+    pub compacted_dropped: usize,
 }
 
-/// The persistent store. `None` path = purely in-memory (tests, or
-/// `union serve` without `--cache`).
+/// Where a known signature's record lives.
+#[derive(Debug, Clone, Copy)]
+enum Loc {
+    /// In the pending (accepted, unflushed) batch.
+    Pending,
+    /// On disk: one JSONL line at `offset`, `len` bytes, no newline.
+    Disk { offset: u64, len: u32 },
+}
+
+/// The tiered store. `None` path = purely in-memory (tests, or
+/// `union serve` without `--cache`) — still warm-tier-bounded.
 pub struct ResultCache {
     path: Option<PathBuf>,
-    file: Option<File>,
-    map: HashMap<String, CachedResult>,
+    append: Option<File>,
+    read: Option<File>,
+    warm: LruCache<CachedResult>,
+    /// Every signature the persistent store holds (pending or disk).
+    known: HashMap<String, Loc>,
+    /// Accepted-but-unflushed records, in arrival order:
+    /// `(sig, record, serialized line)`.
+    pending: Vec<(String, CachedResult, String)>,
+    file_len: u64,
+    /// Bytes of the file occupied by header + live (indexed) lines.
+    live_bytes: u64,
+    last_flush: Instant,
     stats: CacheStats,
+    config: CacheConfig,
+}
+
+fn header_json() -> Json {
+    Json::Obj(vec![("union_result_cache".into(), Json::Num(CACHE_VERSION as f64))])
+}
+
+fn open_handles(path: &Path) -> Result<(File, File), String> {
+    let append = OpenOptions::new()
+        .append(true)
+        .open(path)
+        .map_err(|e| format!("opening cache {} for append: {e}", path.display()))?;
+    let read = File::open(path)
+        .map_err(|e| format!("opening cache {} for read: {e}", path.display()))?;
+    Ok((append, read))
+}
+
+/// Rewrite the store as header + `kept` lines (copied verbatim from
+/// `text`, so surviving records stay byte-identical), via a temp file
+/// and an atomic rename. Returns the rebuilt index and new file length.
+fn rewrite_compacted(
+    path: &Path,
+    text: &str,
+    kept: &[(String, usize, usize)],
+) -> Result<(HashMap<String, Loc>, u64), String> {
+    let header = header_json().to_line();
+    let body: usize = kept.iter().map(|&(_, _, len)| len + 1).sum();
+    let mut out = String::with_capacity(header.len() + 1 + body);
+    out.push_str(&header);
+    out.push('\n');
+    let mut index = HashMap::with_capacity(kept.len());
+    let mut offset = header.len() as u64 + 1;
+    for (sig, start, len) in kept {
+        out.push_str(&text[*start..*start + *len]);
+        out.push('\n');
+        index.insert(sig.clone(), Loc::Disk { offset, len: *len as u32 });
+        offset += *len as u64 + 1;
+    }
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "cache".into());
+    let tmp = path.with_file_name(format!("{file_name}.compact-tmp"));
+    std::fs::write(&tmp, &out)
+        .map_err(|e| format!("writing compacted cache {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("replacing cache {}: {e}", path.display()))?;
+    Ok((index, offset))
 }
 
 impl ResultCache {
-    /// An in-memory cache: same dedup behavior, nothing persisted.
+    /// An in-memory cache: same dedup behavior and warm-tier bounds,
+    /// nothing persisted.
     pub fn in_memory() -> ResultCache {
-        ResultCache { path: None, file: None, map: HashMap::new(), stats: CacheStats::default() }
+        ResultCache::in_memory_with(CacheConfig::default())
     }
 
-    /// Open (or create) the store at `path`, loading every valid record.
-    /// Unreadable *records* are skipped (see module docs); an unreadable
-    /// *file* — wrong version, missing header — is set aside as
-    /// `<path>.bad-vN` and a fresh store is started. Only a real I/O
-    /// error (permissions, missing parent directory) is fatal.
+    /// [`ResultCache::in_memory`] with explicit tier bounds.
+    pub fn in_memory_with(config: CacheConfig) -> ResultCache {
+        ResultCache {
+            path: None,
+            append: None,
+            read: None,
+            warm: LruCache::new(config.warm_entries, config.warm_bytes),
+            known: HashMap::new(),
+            pending: Vec::new(),
+            file_len: 0,
+            live_bytes: 0,
+            last_flush: Instant::now(),
+            stats: CacheStats::default(),
+            config,
+        }
+    }
+
+    /// Open (or create) the store at `path` with default tiering.
     pub fn open(path: &Path) -> Result<ResultCache, String> {
-        let mut map = HashMap::new();
+        ResultCache::open_with(path, CacheConfig::default())
+    }
+
+    /// Open (or create) the store at `path`, indexing every valid
+    /// record (the warm tier fills lazily as records are hit).
+    /// Unreadable *records* are skipped and counted (see module docs);
+    /// an unreadable *file* — wrong version, missing header — is set
+    /// aside as `<path>.bad-vN` and a fresh store is started. A file
+    /// holding reclaimable lines (duplicates, corrupt records) is
+    /// compacted in place. Only a real I/O error (permissions, missing
+    /// parent directory) is fatal.
+    pub fn open_with(path: &Path, config: CacheConfig) -> Result<ResultCache, String> {
         let mut stats = CacheStats::default();
-        let mut needs_header = true;
-        let mut needs_newline_repair = false;
+        // newest record per signature, in first-appearance order:
+        // (sig, line start, line len) spans into `text`
+        let mut kept: Vec<(String, usize, usize)> = Vec::new();
+        let mut by_sig: HashMap<String, usize> = HashMap::new();
+        let mut stale = 0usize;
+        let mut tail_torn = false;
+        let mut have_file = false;
+        let mut text = String::new();
         match std::fs::read_to_string(path) {
-            Ok(text) => {
-                // a crash mid-append can leave a half-written final line
-                // with no newline; appending onto it would fuse (and
-                // destroy) the next record, so terminate it first
-                needs_newline_repair = !text.is_empty() && !text.ends_with('\n');
-                let mut lines = text.lines();
-                let header_ok = lines
-                    .next()
-                    .and_then(|l| Json::parse(l).ok())
+            Ok(t) => {
+                text = t;
+                // a crash mid-append can leave a half-written final
+                // line with no newline; appending onto it would fuse
+                // (and destroy) the next record
+                tail_torn = !text.is_empty() && !text.ends_with('\n');
+                let mut spans: Vec<(usize, usize)> = Vec::new();
+                let mut start = 0usize;
+                while start < text.len() {
+                    let end = text[start..].find('\n').map_or(text.len(), |i| start + i);
+                    spans.push((start, end - start));
+                    start = end + 1;
+                }
+                let header_ok = spans
+                    .first()
+                    .and_then(|&(s, l)| Json::parse(&text[s..s + l]).ok())
                     .and_then(|h| h.u64_field("union_result_cache"))
                     == Some(CACHE_VERSION);
                 if header_ok {
-                    needs_header = false;
-                    for line in lines {
+                    have_file = true;
+                    for &(s, l) in &spans[1..] {
+                        let line = &text[s..s + l];
                         if line.trim().is_empty() {
+                            stale += 1;
                             continue;
                         }
                         match Json::parse(line).and_then(|doc| CachedResult::from_json(&doc)) {
-                            Ok((sig, rec)) => {
-                                // identical jobs are deterministic, so
-                                // duplicate records agree; first wins
-                                map.entry(sig).or_insert(rec);
+                            Ok((sig, _)) => {
                                 stats.loaded += 1;
+                                match by_sig.get(&sig).copied() {
+                                    // identical jobs are deterministic, so
+                                    // duplicate records agree; keep the
+                                    // newest, reclaim the older line
+                                    Some(i) => {
+                                        stale += 1;
+                                        kept[i] = (sig, s, l);
+                                    }
+                                    None => {
+                                        by_sig.insert(sig.clone(), kept.len());
+                                        kept.push((sig, s, l));
+                                    }
+                                }
                             }
-                            Err(_) => stats.skipped += 1,
+                            Err(_) => {
+                                stats.skipped += 1;
+                                stale += 1;
+                            }
                         }
                     }
                 } else if !text.trim().is_empty() {
@@ -204,29 +390,50 @@ impl ResultCache {
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
             Err(e) => return Err(format!("reading cache {}: {e}", path.display())),
         }
-        // (re)create with a header if absent, empty or set aside
-        if needs_header {
+
+        let header = header_json().to_line();
+        let mut known: HashMap<String, Loc> = HashMap::new();
+        let file_len: u64;
+        if !have_file {
+            // fresh store: new file, empty file, or set-aside original
             let mut f = File::create(path)
                 .map_err(|e| format!("creating cache {}: {e}", path.display()))?;
-            let header = Json::Obj(vec![(
-                "union_result_cache".into(),
-                Json::Num(CACHE_VERSION as f64),
-            )]);
-            writeln!(f, "{}", header.to_line())
-                .map_err(|e| format!("writing cache header: {e}"))?;
+            writeln!(f, "{header}").map_err(|e| format!("writing cache header: {e}"))?;
+            file_len = header.len() as u64 + 1;
+        } else if stale > 0 {
+            // open-time log compaction: drop stale lines, keep the
+            // newest record per signature, byte-for-byte
+            let (index, len) = rewrite_compacted(path, &text, &kept)?;
+            known = index;
+            file_len = len;
+            stats.compactions += 1;
+            stats.compacted_dropped = stale;
+        } else {
+            for (sig, s, l) in kept {
+                known.insert(sig, Loc::Disk { offset: s as u64, len: l as u32 });
+            }
+            file_len = text.len() as u64 + u64::from(tail_torn);
         }
-        let mut file = OpenOptions::new()
-            .append(true)
-            .open(path)
-            .map_err(|e| format!("opening cache {} for append: {e}", path.display()))?;
-        if needs_newline_repair && !needs_header {
-            writeln!(file).map_err(|e| format!("repairing cache tail: {e}"))?;
+        let (mut append, read) = open_handles(path)?;
+        if have_file && stale == 0 && tail_torn {
+            // the torn tail was a *valid* record missing only its
+            // newline (an invalid torn tail counts as stale and was
+            // compacted away above): terminate it so the next append
+            // does not fuse onto it
+            writeln!(append).map_err(|e| format!("repairing cache tail: {e}"))?;
         }
         Ok(ResultCache {
             path: Some(path.to_path_buf()),
-            file: Some(file),
-            map,
+            append: Some(append),
+            read: Some(read),
+            warm: LruCache::new(config.warm_entries, config.warm_bytes),
+            known,
+            pending: Vec::new(),
+            file_len,
+            live_bytes: file_len,
+            last_flush: Instant::now(),
             stats,
+            config,
         })
     }
 
@@ -234,39 +441,222 @@ impl ResultCache {
         self.path.as_deref()
     }
 
+    /// Counter snapshot (warm-eviction count folded in from the LRU).
     pub fn stats(&self) -> CacheStats {
-        self.stats
+        let mut s = self.stats;
+        s.warm_evictions = self.warm.stats().evictions;
+        s
     }
 
-    /// Distinct signatures currently held.
+    /// Distinct signatures currently held (all tiers).
     pub fn len(&self) -> usize {
-        self.map.len()
+        if self.path.is_some() {
+            self.known.len()
+        } else {
+            self.warm.len()
+        }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len() == 0
     }
 
-    pub fn get(&self, sig: &str) -> Option<&CachedResult> {
-        self.map.get(sig)
+    /// Entries resident in the warm tier right now.
+    pub fn warm_len(&self) -> usize {
+        self.warm.len()
     }
 
-    /// Record a completed job: insert in memory and append one line to
-    /// the store (flushed immediately; an append failure is reported on
-    /// stderr but never loses the in-memory entry or fails the job).
-    pub fn insert(&mut self, sig: &str, result: CachedResult) {
-        if self.map.contains_key(sig) {
-            return; // deterministic duplicates; keep the first record
+    /// Approximate warm-tier resident bytes.
+    pub fn warm_bytes(&self) -> usize {
+        self.warm.bytes()
+    }
+
+    /// Records accepted but not yet flushed to disk.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Is `sig` held in any tier? (No recency/counter side effects.)
+    pub fn contains(&self, sig: &str) -> bool {
+        self.known.contains_key(sig) || self.warm.contains(sig)
+    }
+
+    /// Look up `sig` through the tiers: warm → pending → disk. A cold
+    /// hit re-parses the record's one line (bit-identical floats) and
+    /// re-warms it.
+    pub fn get(&mut self, sig: &str) -> Option<CachedResult> {
+        if let Some(v) = self.warm.get(sig) {
+            self.stats.warm_hits += 1;
+            return Some(v.clone());
         }
-        if let Some(f) = self.file.as_mut() {
-            let line = result.to_json(sig).to_line();
-            if let Err(e) = writeln!(f, "{line}").and_then(|()| f.flush()) {
-                eprintln!("result cache: append failed: {e}");
-            } else {
-                self.stats.appended += 1;
+        match self.known.get(sig).copied() {
+            Some(Loc::Pending) => {
+                let found = self
+                    .pending
+                    .iter()
+                    .find(|(s, _, _)| s == sig)
+                    .map(|(_, r, line)| (r.clone(), line.len() + 1));
+                match found {
+                    Some((r, weight)) => {
+                        self.stats.cold_hits += 1;
+                        self.warm.insert(sig, r.clone(), weight);
+                        Some(r)
+                    }
+                    None => {
+                        self.stats.misses += 1;
+                        None
+                    }
+                }
+            }
+            Some(Loc::Disk { offset, len }) => match self.read_record(offset, len) {
+                Some(r) => {
+                    self.stats.cold_hits += 1;
+                    self.warm.insert(sig, r.clone(), len as usize + 1);
+                    Some(r)
+                }
+                None => {
+                    // damaged on disk: forget it so a re-search can
+                    // repair the entry instead of being dedup'd away
+                    eprintln!("result cache: unreadable record on disk; will re-search");
+                    self.known.remove(sig);
+                    self.stats.misses += 1;
+                    None
+                }
+            },
+            None => {
+                self.stats.misses += 1;
+                None
             }
         }
-        self.map.insert(sig.to_string(), result);
+    }
+
+    fn read_record(&mut self, offset: u64, len: u32) -> Option<CachedResult> {
+        let f = self.read.as_mut()?;
+        f.seek(SeekFrom::Start(offset)).ok()?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf).ok()?;
+        let line = std::str::from_utf8(&buf).ok()?;
+        match Json::parse(line).and_then(|doc| CachedResult::from_json(&doc)) {
+            Ok((_, rec)) => Some(rec),
+            Err(_) => None,
+        }
+    }
+
+    /// Record a completed job: warm it, stage its line for the next
+    /// batched flush, and flush if the batch/timer policy says so.
+    /// Duplicate signatures are ignored (identical jobs are
+    /// deterministic — the record already held answers them).
+    pub fn insert(&mut self, sig: &str, result: CachedResult) {
+        if self.contains(sig) {
+            return;
+        }
+        let line = result.to_json(sig).to_line();
+        let weight = line.len() + 1;
+        if self.append.is_some() {
+            self.known.insert(sig.to_string(), Loc::Pending);
+            self.pending.push((sig.to_string(), result.clone(), line));
+        }
+        // warm-tier evictions are safe to drop: the record is either on
+        // disk already or still in the pending batch
+        self.warm.insert(sig, result, weight);
+        self.flush_if_due();
+    }
+
+    /// Flush when the batch is full or the timer has expired. The
+    /// service calls this on its idle ticks so a quiet period still
+    /// bounds the durability window to [`CacheConfig::flush_after`].
+    pub fn flush_if_due(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        if self.pending.len() >= self.config.flush_every.max(1)
+            || self.last_flush.elapsed() >= self.config.flush_after
+        {
+            self.flush();
+        }
+    }
+
+    /// Append every pending record to disk in one write (a flush
+    /// failure is reported on stderr and drops the records from the
+    /// persistent index — they stay warm — rather than failing jobs).
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        let Some(f) = self.append.as_mut() else {
+            self.pending.clear();
+            return;
+        };
+        let mut buf = String::new();
+        for (_, _, line) in &self.pending {
+            buf.push_str(line);
+            buf.push('\n');
+        }
+        if let Err(e) = f.write_all(buf.as_bytes()).and_then(|()| f.flush()) {
+            eprintln!("result cache: flush failed: {e}");
+            for (sig, _, _) in std::mem::take(&mut self.pending) {
+                self.known.remove(&sig);
+            }
+            return;
+        }
+        let n = self.pending.len();
+        for (sig, _, line) in self.pending.drain(..) {
+            self.known
+                .insert(sig, Loc::Disk { offset: self.file_len, len: line.len() as u32 });
+            self.file_len += line.len() as u64 + 1;
+            self.live_bytes += line.len() as u64 + 1;
+        }
+        self.stats.appended += n;
+        self.stats.flushes += 1;
+        self.last_flush = Instant::now();
+        if self.file_len > self.config.compact_at_bytes && self.file_len > 2 * self.live_bytes {
+            self.compact();
+        }
+    }
+
+    /// Size-triggered/explicit log compaction: flush, then rewrite the
+    /// file keeping only live (indexed) lines, verbatim.
+    pub fn compact(&mut self) {
+        self.flush();
+        let Some(path) = self.path.clone() else { return };
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("result cache: compaction read failed: {e}");
+                return;
+            }
+        };
+        let mut kept: Vec<(String, usize, usize)> = self
+            .known
+            .iter()
+            .filter_map(|(sig, loc)| match *loc {
+                Loc::Disk { offset, len } => {
+                    Some((sig.clone(), offset as usize, len as usize))
+                }
+                Loc::Pending => None, // drained by the flush above
+            })
+            .collect();
+        kept.sort_by_key(|&(_, start, _)| start);
+        match rewrite_compacted(&path, &text, &kept) {
+            Ok((index, len)) => match open_handles(&path) {
+                Ok((append, read)) => {
+                    self.append = Some(append);
+                    self.read = Some(read);
+                    self.known = index;
+                    self.file_len = len;
+                    self.live_bytes = len;
+                    self.stats.compactions += 1;
+                }
+                Err(e) => eprintln!("result cache: reopen after compaction failed: {e}"),
+            },
+            Err(e) => eprintln!("result cache: compaction failed: {e}"),
+        }
+    }
+}
+
+impl Drop for ResultCache {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -303,6 +693,16 @@ mod tests {
         ))
     }
 
+    fn bits(r: &CachedResult) -> [u64; 5] {
+        [
+            r.score.to_bits(),
+            r.cycles.to_bits(),
+            r.energy_pj.to_bits(),
+            r.utilization.to_bits(),
+            r.clock_ghz.to_bits(),
+        ]
+    }
+
     #[test]
     fn record_roundtrip_is_bit_identical() {
         let r = sample_result(7);
@@ -315,19 +715,142 @@ mod tests {
     }
 
     #[test]
-    fn persists_across_reopen() {
+    fn persists_across_reopen_via_cold_tier() {
         let path = tmp_path("reopen");
         {
             let mut c = ResultCache::open(&path).unwrap();
             c.insert("a", sample_result(1));
             c.insert("b", sample_result(2));
+            c.flush();
             assert_eq!(c.stats().appended, 2);
         }
-        let c = ResultCache::open(&path).unwrap();
+        let mut c = ResultCache::open(&path).unwrap();
         assert_eq!(c.len(), 2);
         assert_eq!(c.stats().loaded, 2);
         assert_eq!(c.stats().skipped, 0);
-        assert_eq!(c.get("a").unwrap(), &sample_result(1));
+        assert_eq!(c.stats().compactions, 0, "a clean file is not rewritten");
+        assert_eq!(c.warm_len(), 0, "warm tier fills lazily");
+        let a = c.get("a").expect("cold hit");
+        assert_eq!(a, sample_result(1));
+        assert_eq!(bits(&a), bits(&sample_result(1)), "cold read is bit-identical");
+        assert_eq!(c.stats().cold_hits, 1);
+        assert_eq!(c.get("a").unwrap(), a, "second lookup is warm");
+        assert_eq!(c.stats().warm_hits, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn flush_batches_by_count_and_explicitly() {
+        let path = tmp_path("batch");
+        let config = CacheConfig {
+            flush_every: 3,
+            flush_after: Duration::from_secs(3600),
+            ..CacheConfig::default()
+        };
+        let mut c = ResultCache::open_with(&path, config).unwrap();
+        c.insert("a", sample_result(1));
+        c.insert("b", sample_result(2));
+        assert_eq!(c.stats().appended, 0, "below the batch size: nothing flushed");
+        assert_eq!(c.pending_len(), 2);
+        assert_eq!(c.get("a").unwrap(), sample_result(1), "pending records still hit");
+        c.insert("c", sample_result(3));
+        assert_eq!(c.stats().appended, 3, "batch size reached: one flush");
+        assert_eq!(c.stats().flushes, 1);
+        assert_eq!(c.pending_len(), 0);
+        c.insert("d", sample_result(4));
+        c.flush();
+        assert_eq!(c.stats().appended, 4);
+        drop(c);
+        let c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.len(), 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crash_window_loses_at_most_the_unflushed_tail() {
+        let path = tmp_path("crash");
+        let config = CacheConfig {
+            flush_every: 100,
+            flush_after: Duration::from_secs(3600),
+            ..CacheConfig::default()
+        };
+        let mut c = ResultCache::open_with(&path, config).unwrap();
+        c.insert("a", sample_result(1));
+        c.insert("b", sample_result(2));
+        c.flush();
+        c.insert("c", sample_result(3));
+        c.insert("d", sample_result(4));
+        assert_eq!(c.len(), 4);
+        // simulate a crash: no Drop, so the pending batch never lands
+        std::mem::forget(c);
+        let mut back = ResultCache::open(&path).unwrap();
+        assert_eq!(back.len(), 2, "exactly the unflushed tail is lost");
+        assert_eq!(back.stats().skipped, 0, "no torn lines from the crash");
+        assert!(back.get("a").is_some() && back.get("b").is_some());
+        assert!(back.get("c").is_none() && back.get("d").is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compaction_keeps_answers_byte_identical() {
+        let path = tmp_path("compact");
+        let (pre_a, pre_b) = {
+            let mut c = ResultCache::open(&path).unwrap();
+            c.insert("a", sample_result(1));
+            c.insert("b", sample_result(2));
+            c.flush();
+            (c.get("a").unwrap(), c.get("b").unwrap())
+        };
+        // another process appends a duplicate record for "a" (identical
+        // jobs are deterministic, so duplicate lines agree)
+        let text = std::fs::read_to_string(&path).unwrap();
+        let a_line = text.lines().find(|l| l.contains("\"sig\":\"a\"")).unwrap().to_string();
+        std::fs::write(&path, format!("{text}{a_line}\n")).unwrap();
+
+        let mut c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.stats().loaded, 3, "all valid lines counted");
+        assert_eq!(c.stats().compactions, 1, "duplicate triggers open-time compaction");
+        assert_eq!(c.stats().compacted_dropped, 1);
+        assert_eq!(c.len(), 2);
+        let post_a = c.get("a").unwrap();
+        let post_b = c.get("b").unwrap();
+        assert_eq!(bits(&post_a), bits(&pre_a));
+        assert_eq!(bits(&post_b), bits(&pre_b));
+        assert_eq!((post_a, post_b), (pre_a, pre_b), "answers unchanged by compaction");
+        drop(c);
+        let compacted = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(compacted.matches("\"sig\":\"a\"").count(), 1, "one record per sig");
+        let c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.stats().compactions, 0, "compaction converges: no rewrite loop");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn compaction_of_corrupt_file_keeps_skip_and_count() {
+        let path = tmp_path("corrupt");
+        {
+            let mut c = ResultCache::open(&path).unwrap();
+            c.insert("a", sample_result(1));
+            c.insert("b", sample_result(2));
+        }
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("not json at all\n");
+        text.push_str("{\"sig\":\"orphan\",\"score\":1.5}\n");
+        text.push_str("{\"sig\":\"torn\",\"score\":2.5,\"mapping\":[[[0],[1");
+        std::fs::write(&path, &text).unwrap();
+
+        let mut c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.stats().skipped, 3, "all three bad lines skipped and counted");
+        assert_eq!(c.stats().compactions, 1, "bad lines are reclaimed");
+        assert_eq!(c.len(), 2, "both good records survive");
+        assert_eq!(c.get("a").unwrap(), sample_result(1));
+        // the store still accepts appends after the rewrite
+        c.insert("c", sample_result(3));
+        c.flush();
+        drop(c);
+        let c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats().skipped, 0, "compacted file is clean");
         std::fs::remove_file(&path).ok();
     }
 
@@ -353,11 +876,45 @@ mod tests {
     }
 
     #[test]
+    fn warm_tier_is_bounded_and_backed_by_disk() {
+        let path = tmp_path("tiered");
+        let config = CacheConfig { warm_entries: 2, flush_every: 1, ..CacheConfig::default() };
+        let mut c = ResultCache::open_with(&path, config).unwrap();
+        for (i, sig) in ["a", "b", "c", "d"].iter().enumerate() {
+            c.insert(sig, sample_result(i as u64));
+        }
+        assert_eq!(c.warm_len(), 2, "warm tier respects its entry bound");
+        assert_eq!(c.len(), 4, "every record is still held");
+        assert!(c.stats().warm_evictions >= 2);
+        // evicted entries come back from disk, bit-identical
+        let a = c.get("a").expect("disk-backed hit after eviction");
+        assert_eq!(bits(&a), bits(&sample_result(0)));
+        assert!(c.stats().cold_hits >= 1);
+        assert_eq!(c.warm_len(), 2, "re-warming keeps the bound");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn explicit_compact_reclaims_nothing_on_a_clean_store() {
+        let path = tmp_path("noop");
+        let mut c = ResultCache::open(&path).unwrap();
+        c.insert("a", sample_result(1));
+        let before_len = c.len();
+        c.compact();
+        assert_eq!(c.stats().compactions, 1);
+        assert_eq!(c.len(), before_len);
+        assert_eq!(c.get("a").unwrap(), sample_result(1), "records survive the rewrite");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn in_memory_cache_never_touches_disk() {
         let mut c = ResultCache::in_memory();
         c.insert("a", sample_result(1));
         assert_eq!(c.len(), 1);
         assert_eq!(c.stats().appended, 0);
         assert!(c.path().is_none());
+        assert_eq!(c.get("a").unwrap(), sample_result(1));
+        assert_eq!(c.stats().warm_hits, 1);
     }
 }

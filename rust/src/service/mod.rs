@@ -12,14 +12,17 @@
 //!   status / shutdown) served over TCP and stdin, with a from-scratch
 //!   JSON codec whose float formatting round-trips bit-exactly;
 //! * [`broker`] — the sharded broker: canonical job signatures,
-//!   persistent-cache fast path, in-flight request coalescing
-//!   (concurrent identical queries cost one search), signature-hash
-//!   routing to worker shards owning long-lived engine sessions,
-//!   bounded queues with explicit `overloaded` backpressure, and
-//!   graceful drain;
-//! * [`cache`] — the versioned, corruption-tolerant on-disk result
-//!   store that survives restarts and powers `union warm`;
-//! * [`server`] — the TCP accept loop, the `--stdio` scripting mode and
+//!   cache fast path, in-flight request coalescing (concurrent
+//!   identical queries cost one search), signature-hash routing to
+//!   worker shards owning long-lived engine sessions, bounded queues
+//!   with explicit `overloaded` backpressure, anytime progress fan-out,
+//!   and graceful drain;
+//! * [`cache`] — the tiered result store: a bounded in-memory LRU warm
+//!   tier over the versioned, corruption-tolerant JSONL log, with
+//!   batched flushes and log compaction; survives restarts and powers
+//!   `union warm`;
+//! * [`server`] — the bounded-reactor TCP server (one thread
+//!   multiplexing every connection), the `--stdio` scripting mode and
 //!   the blocking client helper.
 //!
 //! Determinism is the load-bearing property: a job's canonical
@@ -36,8 +39,12 @@ pub mod proto;
 pub mod server;
 
 pub use broker::{
-    job_signature, Broker, BrokerConfig, BrokerStats, CostKind, JobDone, JobRequest, Submitted,
+    job_signature, Broker, BrokerConfig, BrokerStats, CostKind, JobDone, JobProgress,
+    JobRequest, Submitted,
 };
-pub use cache::{CacheStats, CachedResult, ResultCache, CACHE_VERSION};
+pub use cache::{CacheConfig, CacheStats, CachedResult, ResultCache, CACHE_VERSION};
 pub use proto::{mapping_from_json, mapping_to_json, JobSpec, Json, Request};
-pub use server::{client_request, resolve_spec, serve_stdio, ServeConfig, Server};
+pub use server::{
+    client_request, client_request_with, handle_line, handle_line_with, resolve_spec,
+    serve_stdio, ServeConfig, Server, ServerStats,
+};

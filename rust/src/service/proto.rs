@@ -23,7 +23,8 @@
 //! `sparse-analytical:d=D[,meta=M]`) [`analytical`], `objective`
 //! [`edp`], `effort` (`fast`, `thorough` or a sample count) [`fast`],
 //! `seed` [42], `constraints` (inline `.ucon` text) [none], `id` (any
-//! string, echoed back) [absent].
+//! string, echoed back) [absent], `progress` (stream anytime
+//! `{"type":"progress",...}` events before the final result) [false].
 //!
 //! ## Responses
 //!
@@ -427,7 +428,16 @@ pub struct JobSpec {
 /// A parsed protocol request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Search { id: Option<String>, spec: JobSpec },
+    Search {
+        id: Option<String>,
+        spec: JobSpec,
+        /// Opt into anytime streaming: the server interleaves
+        /// `{"type":"progress",...}` events (current incumbent score +
+        /// candidates evaluated) before the final `result` line. Off by
+        /// default — a `progress`-blind client that skips unknown event
+        /// types keeps working either way.
+        progress: bool,
+    },
     Evaluate { id: Option<String>, spec: JobSpec, mapping: Json },
     Status { id: Option<String> },
     Shutdown { id: Option<String> },
@@ -452,7 +462,11 @@ impl Request {
         match typ {
             "status" => Ok(Request::Status { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
-            "search" => Ok(Request::Search { id, spec: job_spec(&doc)? }),
+            "search" => Ok(Request::Search {
+                id,
+                spec: job_spec(&doc)?,
+                progress: doc.bool_field("progress").unwrap_or(false),
+            }),
             "evaluate" => {
                 let mapping = doc
                     .get("mapping")
@@ -484,10 +498,13 @@ impl Request {
                 fields.push(("type".into(), Json::Str("shutdown".into())));
                 push_id(&mut fields, id);
             }
-            Request::Search { id, spec } => {
+            Request::Search { id, spec, progress } => {
                 fields.push(("type".into(), Json::Str("search".into())));
                 push_id(&mut fields, id);
                 push_spec(&mut fields, spec);
+                if *progress {
+                    fields.push(("progress".into(), Json::Bool(true)));
+                }
             }
             Request::Evaluate { id, spec, mapping } => {
                 fields.push(("type".into(), Json::Str("evaluate".into())));
@@ -623,7 +640,8 @@ mod tests {
         for req in [
             Request::Status { id: Some("s1".into()) },
             Request::Shutdown { id: None },
-            Request::Search { id: Some("r1".into()), spec: spec.clone() },
+            Request::Search { id: Some("r1".into()), spec: spec.clone(), progress: false },
+            Request::Search { id: Some("r2".into()), spec: spec.clone(), progress: true },
         ] {
             let line = req.to_line();
             assert_eq!(Request::parse(&line).unwrap(), req, "{line}");
@@ -634,8 +652,9 @@ mod tests {
     fn request_defaults_apply() {
         let r = Request::parse("{\"type\":\"search\",\"workload\":\"gemm:8x8x8\"}").unwrap();
         match r {
-            Request::Search { id, spec } => {
+            Request::Search { id, spec, progress } => {
                 assert_eq!(id, None);
+                assert!(!progress, "streaming is strictly opt-in");
                 assert_eq!(spec.arch, "edge");
                 assert_eq!(spec.cost, "analytical");
                 assert_eq!(spec.objective, Objective::Edp);

@@ -2,31 +2,56 @@
 //! loop for scripting, and the blocking client helper `union client`
 //! and the tests use.
 //!
-//! A connection is one thread reading requests line by line and
-//! answering in order (pipelining across *connections* is what the
-//! broker's shards parallelize; within a connection the protocol stays
-//! strictly request/response so clients never have to match ids).
-//! `search` goes through the broker (cache → coalesce → shard);
-//! `evaluate` is served inline — scoring one known mapping costs
-//! microseconds, queueing it would cost more than running it;
-//! `shutdown` drains the broker (every queued job finishes and is
-//! answered), replies, and stops the accept loop.
+//! The TCP server is a **bounded reactor**, not thread-per-connection:
+//! one accept/poll thread multiplexes every live connection over
+//! non-blocking sockets with per-connection read/write buffers. An idle
+//! client costs a table slot and two buffers — no thread, no stack —
+//! and a slow reader only fills its own write buffer (bounded; the
+//! connection is dropped past the cap) while the accept loop and every
+//! other connection keep moving. [`ServerStats::conn_threads_spawned`]
+//! pins the invariant: it stays 0, and the e2e tests assert it.
+//!
+//! Within a connection the protocol is strictly ordered: requests may
+//! be pipelined, responses come back in request order (each connection
+//! carries a queue of pending answers; only the queue head may
+//! complete). `search` goes through the broker (cache → coalesce →
+//! shard) and may opt into interleaved `progress` events; `evaluate` is
+//! served inline — scoring one known mapping costs microseconds,
+//! queueing it would cost more than running it; `shutdown` drains the
+//! broker (every queued job finishes and is answered), replies, flushes
+//! all connections, and stops the reactor.
 
-use std::io::{BufRead, BufReader, Write};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::cli::{parse_arch, parse_workload};
 use crate::mappers::Objective;
 use crate::mapspace::{constraints_from_str, Constraints};
 
-use super::broker::{job_signature, Broker, BrokerConfig, CostKind, JobRequest, Submitted};
-use super::cache::{CachedResult, ResultCache};
+use super::broker::{
+    job_signature, Broker, BrokerConfig, BrokerStats, CostKind, JobDone, JobProgress,
+    JobRequest, Submitted,
+};
+use super::cache::{CacheConfig, CachedResult, ResultCache};
 use super::proto::{
     mapping_from_json, mapping_to_json, objective_flag, JobSpec, Json, Request,
 };
+
+/// A request line longer than this can never complete: the connection
+/// is answered with an error and stops being read.
+const MAX_LINE_BYTES: usize = 1 << 20;
+/// A reader this far behind is dropped rather than buffered forever.
+const MAX_WRITE_BUFFER: usize = 16 << 20;
+/// Reactor sleep when a poll pass made no progress at all.
+const IDLE_SLEEP: Duration = Duration::from_micros(200);
+/// How long shutdown waits for drained answers to flush to slow readers.
+const SHUTDOWN_FLUSH_DEADLINE: Duration = Duration::from_secs(5);
 
 /// Server knobs (`union serve` flags map 1:1 onto these).
 #[derive(Debug, Clone)]
@@ -37,7 +62,12 @@ pub struct ServeConfig {
     pub port: u16,
     /// Persistent cache path; `None` = in-memory only.
     pub cache: Option<PathBuf>,
+    /// Result-cache tiering and flush policy (either cache mode).
+    pub cache_config: CacheConfig,
     pub broker: BrokerConfig,
+    /// Connection-table bound: connections past this are refused with
+    /// an error line and never enter the reactor.
+    pub max_conns: usize,
     /// Log one line per request to stderr.
     pub verbose: bool,
 }
@@ -48,9 +78,47 @@ impl Default for ServeConfig {
             host: "127.0.0.1".into(),
             port: 7415,
             cache: None,
+            cache_config: CacheConfig::default(),
             broker: BrokerConfig::default(),
+            max_conns: 1024,
             verbose: false,
         }
+    }
+}
+
+/// Reactor counters, independent of the broker's. Grab a handle with
+/// [`Server::stats_handle`] before [`Server::run`] consumes the server.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    accepted: AtomicU64,
+    refused: AtomicU64,
+    accept_errors: AtomicU64,
+    conn_threads_spawned: AtomicU64,
+}
+
+impl ServerStats {
+    /// Connections admitted into the reactor.
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    /// Connections refused because the table was full.
+    pub fn refused(&self) -> u64 {
+        self.refused.load(Ordering::Relaxed)
+    }
+
+    /// Accept failures (each run of consecutive failures backs the
+    /// accept loop off exponentially, bounded at a second).
+    pub fn accept_errors(&self) -> u64 {
+        self.accept_errors.load(Ordering::Relaxed)
+    }
+
+    /// Threads spawned to serve individual connections. The reactor
+    /// multiplexes every connection on one thread, so this stays 0 —
+    /// any future per-connection thread must increment it, and the e2e
+    /// tests assert the steady state spawns none.
+    pub fn conn_threads_spawned(&self) -> u64 {
+        self.conn_threads_spawned.load(Ordering::Relaxed)
     }
 }
 
@@ -126,6 +194,54 @@ fn result_response(
     Json::Obj(fields)
 }
 
+/// An anytime snapshot, interleaved before the final `result` line when
+/// the search opted into `"progress":true`.
+fn progress_response(id: &Option<String>, p: &JobProgress) -> Json {
+    let mut fields = vec![
+        ("type".into(), Json::Str("progress".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.extend([
+        ("shard".into(), Json::Num(p.shard as f64)),
+        ("evaluated".into(), Json::Num(p.evaluated as f64)),
+        (
+            "best_score".into(),
+            p.best_score.map(Json::Num).unwrap_or(Json::Null),
+        ),
+        ("signature".into(), Json::Str(p.sig.clone())),
+    ]);
+    Json::Obj(fields)
+}
+
+fn overloaded_response(id: &Option<String>, shard: usize, depth: usize) -> Json {
+    let mut fields = vec![
+        ("type".into(), Json::Str("overloaded".into())),
+        ("ok".into(), Json::Bool(false)),
+    ];
+    id_field(&mut fields, id);
+    fields.extend([
+        ("shard".into(), Json::Num(shard as f64)),
+        ("depth".into(), Json::Num(depth as f64)),
+        (
+            "message".into(),
+            Json::Str("queue full; retry with backoff".into()),
+        ),
+    ]);
+    Json::Obj(fields)
+}
+
+fn shutdown_response(id: &Option<String>, stats: &BrokerStats) -> Json {
+    let mut fields = vec![
+        ("type".into(), Json::Str("shutdown".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.push(("searched".into(), Json::Num(stats.searched as f64)));
+    fields.push(("requests".into(), Json::Num(stats.requests as f64)));
+    Json::Obj(fields)
+}
+
 fn engine_json(e: &crate::engine::EngineStats) -> Json {
     Json::Obj(vec![
         ("proposed".into(), Json::Num(e.proposed as f64)),
@@ -161,18 +277,152 @@ fn status_response(id: &Option<String>, broker: &Broker) -> Json {
         ("overloaded".into(), Json::Num(stats.overloaded as f64)),
         ("errors".into(), Json::Num(stats.errors as f64)),
         ("evaluates".into(), Json::Num(stats.evaluates as f64)),
+        ("progress_events".into(), Json::Num(stats.progress_events as f64)),
         ("cache_entries".into(), Json::Num(cache_entries as f64)),
         ("cache_loaded".into(), Json::Num(cache.loaded as f64)),
         ("cache_skipped".into(), Json::Num(cache.skipped as f64)),
         ("cache_appended".into(), Json::Num(cache.appended as f64)),
+        ("cache_warm_hits".into(), Json::Num(cache.warm_hits as f64)),
+        ("cache_cold_hits".into(), Json::Num(cache.cold_hits as f64)),
+        ("cache_warm_evictions".into(), Json::Num(cache.warm_evictions as f64)),
+        ("cache_flushes".into(), Json::Num(cache.flushes as f64)),
+        ("cache_compactions".into(), Json::Num(cache.compactions as f64)),
         ("engine".into(), engine_json(&stats.engine)),
     ]);
     Json::Obj(fields)
 }
 
+/// A `search` the broker accepted but has not answered yet. Held in a
+/// connection's response queue (reactor) or polled inline (blocking
+/// paths) until `rx` delivers the [`JobDone`].
+struct PendingSearch {
+    id: Option<String>,
+    objective: Objective,
+    coalesced: bool,
+    rx: Receiver<JobDone>,
+    progress: Option<Receiver<JobProgress>>,
+}
+
+/// Outcome of submitting one `search` line to the broker.
+enum SearchSubmit {
+    /// Answered immediately (cache hit, overload, drain, bad spec).
+    Done(Json),
+    /// Queued or coalesced; the answer arrives on the receiver.
+    Wait(PendingSearch),
+}
+
+fn submit_search(
+    broker: &Broker,
+    id: Option<String>,
+    spec: &JobSpec,
+    want_progress: bool,
+) -> SearchSubmit {
+    let job = match resolve_spec(spec) {
+        Ok(j) => j,
+        Err(e) => return SearchSubmit::Done(error_response(&id, &e)),
+    };
+    let sig = job_signature(&job);
+    let objective = job.objective;
+    let submitted = if want_progress {
+        broker.submit_streaming(job, sig.clone())
+    } else {
+        broker.submit_with_signature(job, sig.clone())
+    };
+    match submitted {
+        Submitted::Cached(hit) => SearchSubmit::Done(result_response(
+            &id, &sig, objective, &hit, true, false, None,
+        )),
+        Submitted::Pending { rx, coalesced, shard: _, progress } => {
+            SearchSubmit::Wait(PendingSearch { id, objective, coalesced, rx, progress })
+        }
+        Submitted::Overloaded { shard, depth } => {
+            SearchSubmit::Done(overloaded_response(&id, shard, depth))
+        }
+        Submitted::Draining => SearchSubmit::Done(error_response(&id, "server is draining")),
+        Submitted::Rejected(e) => SearchSubmit::Done(error_response(&id, &e)),
+    }
+}
+
+fn finish_search(p: &PendingSearch, done: JobDone) -> Json {
+    match done.result {
+        Ok(result) => result_response(
+            &p.id,
+            &done.sig,
+            p.objective,
+            &result,
+            false,
+            p.coalesced,
+            Some(done.shard),
+        ),
+        Err(e) => error_response(&p.id, &e),
+    }
+}
+
+/// Emit every progress snapshot currently buffered for `p`.
+fn drain_progress(p: &PendingSearch, emit: &mut dyn FnMut(&Json)) {
+    if let Some(rx) = &p.progress {
+        while let Ok(ev) = rx.try_recv() {
+            emit(&progress_response(&p.id, &ev));
+        }
+    }
+}
+
+fn evaluate_response(
+    broker: &Broker,
+    id: &Option<String>,
+    spec: &JobSpec,
+    mapping: &Json,
+) -> Json {
+    let reply = (|| -> Result<Json, String> {
+        let job = resolve_spec(spec)?;
+        let mapping = mapping_from_json(mapping)?;
+        let problem = job.workload.problem();
+        let model = job.cost.model();
+        model.conformable(&problem, &job.arch)?;
+        mapping.check(&problem, &job.arch).map_err(|e| e.to_string())?;
+        let est = model.evaluate(&problem, &job.arch, &mapping)?;
+        broker.note_evaluate();
+        let result = CachedResult {
+            score: job.objective.score(&est),
+            mapping,
+            cycles: est.cycles,
+            energy_pj: est.energy_pj,
+            utilization: est.utilization,
+            macs: est.macs,
+            clock_ghz: est.clock_ghz,
+            evaluated: 1,
+        };
+        Ok(result_response(
+            id,
+            &job_signature(&job),
+            job.objective,
+            &result,
+            false,
+            false,
+            None,
+        ))
+    })();
+    match reply {
+        Ok(r) => r,
+        Err(e) => error_response(id, &e),
+    }
+}
+
 /// Handle one request line against the broker, blocking until the
 /// answer is available. Returns the response plus "shut down now".
 pub fn handle_line(broker: &Broker, line: &str) -> (Json, bool) {
+    handle_line_with(broker, line, &mut |_| {})
+}
+
+/// [`handle_line`] with an event sink: interleaved `progress` documents
+/// (for a `"progress":true` search) are passed to `emit` before the
+/// final response is returned. The stdio loop writes them straight to
+/// stdout; [`handle_line`] drops them.
+pub fn handle_line_with(
+    broker: &Broker,
+    line: &str,
+    emit: &mut dyn FnMut(&Json),
+) -> (Json, bool) {
     let req = match Request::parse(line) {
         Ok(r) => r,
         Err(e) => return (error_response(&None, &e), false),
@@ -184,101 +434,286 @@ pub fn handle_line(broker: &Broker, line: &str) -> (Json, bool) {
             // drain every queued/running job (their waiters are all
             // answered first), then acknowledge
             let stats = broker.drain();
-            let mut fields = vec![
-                ("type".into(), Json::Str("shutdown".into())),
-                ("ok".into(), Json::Bool(true)),
-            ];
-            id_field(&mut fields, &id);
-            fields.push(("searched".into(), Json::Num(stats.searched as f64)));
-            fields.push(("requests".into(), Json::Num(stats.requests as f64)));
-            (Json::Obj(fields), true)
+            (shutdown_response(&id, &stats), true)
         }
-        Request::Search { spec, .. } => {
-            let job = match resolve_spec(&spec) {
-                Ok(j) => j,
-                Err(e) => return (error_response(&id, &e), false),
-            };
-            let sig = job_signature(&job);
-            let objective = job.objective;
-            match broker.submit_with_signature(job, sig.clone()) {
-                Submitted::Cached(hit) => (
-                    result_response(&id, &sig, objective, &hit, true, false, None),
-                    false,
-                ),
-                Submitted::Pending { rx, coalesced, shard: _ } => match rx.recv() {
-                    Ok(done) => match done.result {
-                        Ok(result) => (
-                            result_response(
-                                &id,
-                                &done.sig,
-                                objective,
-                                &result,
-                                false,
-                                coalesced,
-                                Some(done.shard),
-                            ),
-                            false,
-                        ),
-                        Err(e) => (error_response(&id, &e), false),
-                    },
-                    Err(_) => (error_response(&id, "broker dropped the job"), false),
-                },
-                Submitted::Overloaded { shard, depth } => {
-                    let mut fields = vec![
-                        ("type".into(), Json::Str("overloaded".into())),
-                        ("ok".into(), Json::Bool(false)),
-                    ];
-                    id_field(&mut fields, &id);
-                    fields.extend([
-                        ("shard".into(), Json::Num(shard as f64)),
-                        ("depth".into(), Json::Num(depth as f64)),
-                        (
-                            "message".into(),
-                            Json::Str("queue full; retry with backoff".into()),
-                        ),
-                    ]);
-                    (Json::Obj(fields), false)
+        Request::Search { spec, progress, .. } => {
+            match submit_search(broker, id, &spec, progress) {
+                SearchSubmit::Done(j) => (j, false),
+                SearchSubmit::Wait(p) => {
+                    if p.progress.is_none() {
+                        // plain blocking wait, as before streaming existed
+                        return match p.rx.recv() {
+                            Ok(done) => (finish_search(&p, done), false),
+                            Err(_) => {
+                                (error_response(&p.id, "broker dropped the job"), false)
+                            }
+                        };
+                    }
+                    loop {
+                        // snapshots must precede the final response
+                        drain_progress(&p, emit);
+                        match p.rx.recv_timeout(Duration::from_millis(20)) {
+                            Ok(done) => {
+                                drain_progress(&p, emit);
+                                return (finish_search(&p, done), false);
+                            }
+                            Err(RecvTimeoutError::Timeout) => continue,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                return (
+                                    error_response(&p.id, "broker dropped the job"),
+                                    false,
+                                );
+                            }
+                        }
+                    }
                 }
-                Submitted::Draining => (error_response(&id, "server is draining"), false),
-                Submitted::Rejected(e) => (error_response(&id, &e), false),
             }
         }
         Request::Evaluate { spec, mapping, .. } => {
-            let reply = (|| -> Result<Json, String> {
-                let job = resolve_spec(&spec)?;
-                let mapping = mapping_from_json(&mapping)?;
-                let problem = job.workload.problem();
-                let model = job.cost.model();
-                model.conformable(&problem, &job.arch)?;
-                mapping.check(&problem, &job.arch).map_err(|e| e.to_string())?;
-                let est = model.evaluate(&problem, &job.arch, &mapping)?;
-                broker.note_evaluate();
-                let result = CachedResult {
-                    score: job.objective.score(&est),
-                    mapping,
-                    cycles: est.cycles,
-                    energy_pj: est.energy_pj,
-                    utilization: est.utilization,
-                    macs: est.macs,
-                    clock_ghz: est.clock_ghz,
-                    evaluated: 1,
-                };
-                Ok(result_response(
-                    &id,
-                    &job_signature(&job),
-                    job.objective,
-                    &result,
-                    false,
-                    false,
-                    None,
-                ))
-            })();
-            match reply {
-                Ok(r) => (r, false),
-                Err(e) => (error_response(&id, &e), false),
+            (evaluate_response(broker, &id, &spec, &mapping), false)
+        }
+    }
+}
+
+/// One queued response slot of a connection. Responses leave in request
+/// order, so only the queue head may complete.
+enum Queued {
+    /// Already-computed response, waiting its turn on the wire.
+    Ready(Json),
+    /// A search the broker still owes an answer for.
+    Search(PendingSearch),
+}
+
+/// One multiplexed connection: a non-blocking socket plus its buffers
+/// and in-order response queue. No thread.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    queue: VecDeque<Queued>,
+    /// Client half-closed (EOF): no more requests, but queued answers
+    /// still flush before the connection is dropped.
+    eof: bool,
+    /// Unrecoverable I/O error or protocol abuse: drop immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nonblocking(true)?;
+        // responses are whole lines; don't let Nagle sit on them
+        let _ = stream.set_nodelay(true);
+        Ok(Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            queue: VecDeque::new(),
+            eof: false,
+            dead: false,
+        })
+    }
+
+    /// Connection can be removed from the table.
+    fn finished(&self) -> bool {
+        self.dead || (self.eof && self.queue.is_empty() && self.wbuf.is_empty())
+    }
+
+    /// All answers computed and on the wire (shutdown flush condition).
+    fn flushed(&self) -> bool {
+        self.queue.is_empty() && self.wbuf.is_empty()
+    }
+
+    /// One poll pass: read what's there, handle complete lines, move
+    /// completed answers to the write buffer, write what fits. Returns
+    /// true if anything moved (the reactor's idle-sleep signal).
+    fn pump(&mut self, broker: &Broker, verbose: bool, stop: &mut bool) -> bool {
+        let mut progressed = false;
+        progressed |= self.pump_read();
+        progressed |= self.pump_lines(broker, verbose, stop);
+        progressed |= self.pump_queue();
+        progressed |= self.pump_write();
+        progressed
+    }
+
+    fn pump_read(&mut self) -> bool {
+        if self.eof || self.dead {
+            return false;
+        }
+        let mut progressed = false;
+        let mut tmp = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    self.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&tmp[..n]);
+                    progressed = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        progressed
+    }
+
+    fn pump_lines(&mut self, broker: &Broker, verbose: bool, stop: &mut bool) -> bool {
+        let mut progressed = false;
+        while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = self.rbuf.drain(..=pos).collect();
+            let text = String::from_utf8_lossy(&raw[..pos]);
+            let line = text.trim();
+            if line.is_empty() {
+                continue;
+            }
+            progressed = true;
+            if verbose {
+                eprintln!("<- {line}");
+            }
+            self.on_line(broker, line, stop);
+        }
+        if self.rbuf.len() > MAX_LINE_BYTES {
+            // an unterminated line past the cap can never complete;
+            // answer once and stop reading (queued answers still flush)
+            self.queue
+                .push_back(Queued::Ready(error_response(&None, "request line too long")));
+            self.rbuf.clear();
+            self.eof = true;
+            progressed = true;
+        }
+        progressed
+    }
+
+    fn on_line(&mut self, broker: &Broker, line: &str, stop: &mut bool) {
+        let req = match Request::parse(line) {
+            Ok(r) => r,
+            Err(e) => {
+                self.queue.push_back(Queued::Ready(error_response(&None, &e)));
+                return;
+            }
+        };
+        let id = req.id().map(|s| s.to_string());
+        match req {
+            Request::Status { .. } => {
+                self.queue.push_back(Queued::Ready(status_response(&id, broker)));
+            }
+            Request::Shutdown { .. } => {
+                // blocking drain, deliberately: every in-flight search
+                // (on every connection) receives its JobDone before the
+                // acknowledgement goes out, and the reactor's final
+                // flush phase puts them all on the wire
+                let stats = broker.drain();
+                self.queue.push_back(Queued::Ready(shutdown_response(&id, &stats)));
+                *stop = true;
+            }
+            Request::Search { spec, progress, .. } => {
+                match submit_search(broker, id, &spec, progress) {
+                    SearchSubmit::Done(j) => self.queue.push_back(Queued::Ready(j)),
+                    SearchSubmit::Wait(p) => self.queue.push_back(Queued::Search(p)),
+                }
+            }
+            Request::Evaluate { spec, mapping, .. } => {
+                self.queue.push_back(Queued::Ready(evaluate_response(
+                    broker, &id, &spec, &mapping,
+                )));
             }
         }
     }
+
+    fn pump_queue(&mut self) -> bool {
+        let mut progressed = false;
+        while let Some(front) = self.queue.front_mut() {
+            match front {
+                Queued::Ready(json) => {
+                    push_line(&mut self.wbuf, json);
+                    self.queue.pop_front();
+                    progressed = true;
+                }
+                Queued::Search(p) => {
+                    if let Some(prx) = &p.progress {
+                        while let Ok(ev) = prx.try_recv() {
+                            push_line(&mut self.wbuf, &progress_response(&p.id, &ev));
+                            progressed = true;
+                        }
+                    }
+                    match p.rx.try_recv() {
+                        Ok(done) => {
+                            // snapshots sent just before completion may
+                            // have landed after the drain above
+                            if let Some(prx) = &p.progress {
+                                while let Ok(ev) = prx.try_recv() {
+                                    push_line(&mut self.wbuf, &progress_response(&p.id, &ev));
+                                }
+                            }
+                            push_line(&mut self.wbuf, &finish_search(p, done));
+                            self.queue.pop_front();
+                            progressed = true;
+                        }
+                        // head not ready: later answers wait their turn
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            push_line(
+                                &mut self.wbuf,
+                                &error_response(&p.id, "broker dropped the job"),
+                            );
+                            self.queue.pop_front();
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+        }
+        if self.wbuf.len() > MAX_WRITE_BUFFER {
+            // slow-reader protection: the client stopped consuming
+            // answers; buffering more trades one stuck client for the
+            // server's memory
+            self.dead = true;
+        }
+        progressed
+    }
+
+    fn pump_write(&mut self) -> bool {
+        if self.dead || self.wbuf.is_empty() {
+            return false;
+        }
+        let mut written = 0usize;
+        while written < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[written..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    break;
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+        if written > 0 {
+            self.wbuf.drain(..written);
+        }
+        written > 0
+    }
+}
+
+fn push_line(wbuf: &mut Vec<u8>, json: &Json) {
+    wbuf.extend_from_slice(json.to_line().as_bytes());
+    wbuf.push(b'\n');
+}
+
+/// Bounded exponential backoff for repeated transient accept failures
+/// (fd exhaustion and friends): 10ms doubling to a 1s cap.
+fn accept_backoff(consecutive_failures: u32) -> Duration {
+    let exp = consecutive_failures.saturating_sub(1).min(7);
+    Duration::from_millis((10u64 << exp).min(1000))
 }
 
 /// A running TCP server. Construct with [`Server::bind`], then drive
@@ -286,7 +721,8 @@ pub fn handle_line(broker: &Broker, line: &str) -> (Json, bool) {
 pub struct Server {
     listener: TcpListener,
     broker: Arc<Broker>,
-    shutdown: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    max_conns: usize,
     verbose: bool,
 }
 
@@ -295,8 +731,8 @@ impl Server {
     /// cache loaded, when configured).
     pub fn bind(config: ServeConfig) -> Result<Server, String> {
         let cache = match &config.cache {
-            Some(path) => ResultCache::open(path)?,
-            None => ResultCache::in_memory(),
+            Some(path) => ResultCache::open_with(path, config.cache_config.clone())?,
+            None => ResultCache::in_memory_with(config.cache_config.clone()),
         };
         let listener = TcpListener::bind((config.host.as_str(), config.port))
             .map_err(|e| format!("bind {}:{}: {e}", config.host, config.port))?;
@@ -304,7 +740,8 @@ impl Server {
         Ok(Server {
             listener,
             broker: Arc::new(broker),
-            shutdown: Arc::new(AtomicBool::new(false)),
+            stats: Arc::new(ServerStats::default()),
+            max_conns: config.max_conns.max(1),
             verbose: config.verbose,
         })
     }
@@ -314,116 +751,118 @@ impl Server {
         self.listener.local_addr().map_err(|e| e.to_string())
     }
 
-    /// Accept loop: one thread per connection, until a `shutdown`
-    /// request drains the broker. Returns the drained broker's final
-    /// stats.
-    pub fn run(self) -> Result<super::broker::BrokerStats, String> {
-        let addr = self.local_addr()?;
-        // each live connection: a write-half clone (so shutdown can
-        // unblock a reader parked in a blocking read — an idle client
-        // must not keep the daemon alive forever) plus its thread
-        let mut conns: Vec<(TcpStream, std::thread::JoinHandle<()>)> = Vec::new();
-        for stream in self.listener.incoming() {
-            if self.shutdown.load(Ordering::SeqCst) {
-                break;
-            }
-            let stream = match stream {
-                Ok(s) => s,
-                Err(e) => {
-                    eprintln!("accept: {e}");
-                    continue;
-                }
+    /// Reactor counters; grab before [`Server::run`] consumes `self`.
+    pub fn stats_handle(&self) -> Arc<ServerStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// The reactor: one thread multiplexing accept plus every live
+    /// connection, until a `shutdown` request drains the broker.
+    /// Returns the drained broker's final stats.
+    pub fn run(self) -> Result<BrokerStats, String> {
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listener set_nonblocking: {e}"))?;
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut stop = false;
+        let mut accept_failures = 0u32;
+        let mut accept_retry_at: Option<Instant> = None;
+        while !stop {
+            let mut progressed = false;
+            let accept_ready = match accept_retry_at {
+                Some(t) => Instant::now() >= t,
+                None => true,
             };
-            // a clone we keep is the only way to force-close the
-            // connection later; without one (fd exhaustion) refuse it
-            let clone = match stream.try_clone() {
-                Ok(c) => c,
-                Err(e) => {
-                    eprintln!("refusing connection (clone failed): {e}");
-                    continue;
-                }
-            };
-            // reap finished connections so the list tracks *live*
-            // connections, not total connections ever served
-            conns.retain(|(_, h)| !h.is_finished());
-            let broker = Arc::clone(&self.broker);
-            let shutdown = Arc::clone(&self.shutdown);
-            let verbose = self.verbose;
-            let handle = std::thread::spawn(move || {
-                if let Err(e) = serve_connection(stream, &broker, &shutdown, addr, verbose) {
-                    if verbose {
-                        eprintln!("connection: {e}");
+            if accept_ready {
+                accept_retry_at = None;
+                // bounded accepts per pass so a connect flood cannot
+                // starve the live connections below
+                for _ in 0..64 {
+                    match self.listener.accept() {
+                        Ok((stream, _peer)) => {
+                            accept_failures = 0;
+                            progressed = true;
+                            if conns.len() >= self.max_conns {
+                                self.stats.refused.fetch_add(1, Ordering::Relaxed);
+                                refuse(stream);
+                                continue;
+                            }
+                            match Conn::new(stream) {
+                                Ok(c) => {
+                                    self.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                                    conns.push(c);
+                                }
+                                Err(e) => {
+                                    self.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                                    eprintln!("accept: {e}");
+                                }
+                            }
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(e) => {
+                            // transient failure (fd exhaustion, aborted
+                            // handshake): back off instead of spinning
+                            // on the same error
+                            self.stats.accept_errors.fetch_add(1, Ordering::Relaxed);
+                            accept_failures += 1;
+                            let backoff = accept_backoff(accept_failures);
+                            eprintln!("accept: {e} (backing off {}ms)", backoff.as_millis());
+                            accept_retry_at = Some(Instant::now() + backoff);
+                            break;
+                        }
                     }
                 }
-            });
-            conns.push((clone, handle));
+            }
+            for conn in &mut conns {
+                progressed |= conn.pump(&self.broker, self.verbose, &mut stop);
+            }
+            conns.retain(|c| !c.finished());
+            // the batched-flush timer of the result cache ticks here,
+            // between polls — no flusher thread either
+            self.broker.tick_cache();
+            if !stop && !progressed {
+                std::thread::sleep(IDLE_SLEEP);
+            }
         }
-        // unblock any thread parked in a read, then join them all.
-        // Read-half only: a handler that just received its JobDone from
-        // the drain must still be able to WRITE its response — closing
-        // both halves here would race the drained answers off the wire.
-        for (s, _) in &conns {
-            let _ = s.shutdown(std::net::Shutdown::Read);
+        // shutdown: the broker is drained (the shutdown handler did it
+        // inline), so every pending search already holds its answer —
+        // flush them out, with a deadline so one wedged reader cannot
+        // hold the daemon hostage
+        let deadline = Instant::now() + SHUTDOWN_FLUSH_DEADLINE;
+        let mut ignore_stop = true;
+        while !conns.is_empty() && Instant::now() < deadline {
+            let mut progressed = false;
+            for conn in &mut conns {
+                progressed |= conn.pump(&self.broker, self.verbose, &mut ignore_stop);
+            }
+            conns.retain(|c| !(c.finished() || c.flushed()));
+            if !progressed {
+                std::thread::sleep(IDLE_SLEEP);
+            }
         }
-        for (_, c) in conns {
-            let _ = c.join();
-        }
-        // the shutdown handler already drained; this reports final stats
+        // reports final stats; the cache flushed during the drain
         Ok(self.broker.drain())
     }
 }
 
-fn serve_connection(
-    stream: TcpStream,
-    broker: &Arc<Broker>,
-    shutdown: &Arc<AtomicBool>,
-    addr: std::net::SocketAddr,
-    verbose: bool,
-) -> Result<(), String> {
-    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line.map_err(|e| e.to_string())?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        if verbose {
-            eprintln!("<- {line}");
-        }
-        let (response, stop) = handle_line(broker, &line);
-        if !matches!(response, Json::Null) {
-            writeln!(writer, "{}", response.to_line()).map_err(|e| e.to_string())?;
-            writer.flush().map_err(|e| e.to_string())?;
-        }
-        if stop {
-            shutdown.store(true, Ordering::SeqCst);
-            // unblock the accept loop. Connecting to an unspecified
-            // bind address (0.0.0.0 / ::) is platform-dependent, so
-            // wake via loopback on the same port in that case.
-            let mut wake = addr;
-            if wake.ip().is_unspecified() {
-                wake.set_ip(match wake.ip() {
-                    std::net::IpAddr::V4(_) => {
-                        std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST)
-                    }
-                    std::net::IpAddr::V6(_) => {
-                        std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST)
-                    }
-                });
-            }
-            let _ = TcpStream::connect(wake);
-            break;
-        }
-    }
-    Ok(())
+/// Best-effort refusal line for a connection over the table bound; the
+/// stream drops (closes) either way.
+fn refuse(stream: TcpStream) {
+    let mut stream = stream;
+    let _ = stream.set_nonblocking(true);
+    let line = error_response(&None, "connection table full; retry with backoff").to_line();
+    let _ = stream.write_all(line.as_bytes());
+    let _ = stream.write_all(b"\n");
 }
 
 /// Serve the protocol over stdin/stdout (the `--stdio` scripting mode):
 /// same semantics as TCP, one process, exits after `shutdown` or EOF.
-pub fn serve_stdio(config: ServeConfig) -> Result<super::broker::BrokerStats, String> {
+/// A `"progress":true` search streams its events to stdout too.
+pub fn serve_stdio(config: ServeConfig) -> Result<BrokerStats, String> {
     let cache = match &config.cache {
-        Some(path) => ResultCache::open(path)?,
-        None => ResultCache::in_memory(),
+        Some(path) => ResultCache::open_with(path, config.cache_config.clone())?,
+        None => ResultCache::in_memory_with(config.cache_config.clone()),
     };
     let broker = Broker::with_cache(config.broker.clone(), cache);
     let stdin = std::io::stdin();
@@ -433,12 +872,20 @@ pub fn serve_stdio(config: ServeConfig) -> Result<super::broker::BrokerStats, St
         if line.trim().is_empty() {
             continue;
         }
-        let (response, stop) = handle_line(&broker, &line);
+        let (response, stop) = {
+            let mut out = stdout.lock();
+            let mut emit = |j: &Json| {
+                let _ = writeln!(out, "{}", j.to_line());
+                let _ = out.flush();
+            };
+            handle_line_with(&broker, &line, &mut emit)
+        };
         if !matches!(response, Json::Null) {
             let mut out = stdout.lock();
             writeln!(out, "{}", response.to_line()).map_err(|e| e.to_string())?;
             out.flush().map_err(|e| e.to_string())?;
         }
+        broker.tick_cache();
         if stop {
             return Ok(broker.stats());
         }
@@ -447,8 +894,20 @@ pub fn serve_stdio(config: ServeConfig) -> Result<super::broker::BrokerStats, St
 }
 
 /// Blocking client: connect, send one request line, return the first
-/// response document. `union client` and the e2e tests sit on this.
+/// non-`progress` response document. `union client` and the e2e tests
+/// sit on this.
 pub fn client_request(addr: &str, request: &Request) -> Result<Json, String> {
+    client_request_with(addr, request, &mut |_| {})
+}
+
+/// [`client_request`] with an event sink: interleaved `progress`
+/// documents are passed to `on_event` as they arrive; the final
+/// response is returned.
+pub fn client_request_with(
+    addr: &str,
+    request: &Request,
+    on_event: &mut dyn FnMut(&Json),
+) -> Result<Json, String> {
     let stream =
         TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
     let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
@@ -462,9 +921,15 @@ pub fn client_request(addr: &str, request: &Request) -> Result<Json, String> {
         if n == 0 {
             return Err("server closed the connection without answering".into());
         }
-        if !line.trim().is_empty() {
-            return Json::parse(line.trim());
+        if line.trim().is_empty() {
+            continue;
         }
+        let doc = Json::parse(line.trim())?;
+        if doc.str("type") == Some("progress") {
+            on_event(&doc);
+            continue;
+        }
+        return Ok(doc);
     }
 }
 
@@ -531,5 +996,51 @@ mod tests {
             resp.num("score").unwrap().to_bits()
         );
         assert_eq!(broker.stats().evaluates, 1);
+    }
+
+    #[test]
+    fn handle_line_streams_progress_before_the_result() {
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        let mut events = Vec::new();
+        let (resp, stop) = handle_line_with(
+            &broker,
+            "{\"type\":\"search\",\"workload\":\"gemm:24x24x24\",\"samples\":400,\
+             \"seed\":3,\"progress\":true}",
+            &mut |j| events.push(j.clone()),
+        );
+        assert!(!stop);
+        assert_eq!(resp.str("type"), Some("result"), "{}", resp.to_line());
+        assert!(!events.is_empty(), "a 400-sample search spans several batches");
+        let mut last_evaluated = -1.0;
+        for ev in &events {
+            assert_eq!(ev.str("type"), Some("progress"));
+            assert_eq!(ev.str("signature"), resp.str("signature"));
+            let e = ev.num("evaluated").unwrap();
+            assert!(e >= last_evaluated, "evaluated counts are monotone");
+            last_evaluated = e;
+        }
+        assert!(
+            events.iter().any(|e| e.num("best_score").is_some()),
+            "snapshots carry the incumbent once one exists"
+        );
+        // a non-streaming repeat of the job is a cache hit: streaming
+        // left no trace in the result path
+        let (again, _) = handle_line(
+            &broker,
+            "{\"type\":\"search\",\"workload\":\"gemm:24x24x24\",\"samples\":400,\"seed\":3}",
+        );
+        assert_eq!(again.bool_field("cached"), Some(true));
+        assert_eq!(
+            again.num("score").map(f64::to_bits),
+            resp.num("score").map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn accept_backoff_is_bounded() {
+        assert_eq!(accept_backoff(1), Duration::from_millis(10));
+        assert_eq!(accept_backoff(2), Duration::from_millis(20));
+        assert_eq!(accept_backoff(4), Duration::from_millis(80));
+        assert_eq!(accept_backoff(40), Duration::from_millis(1000));
     }
 }

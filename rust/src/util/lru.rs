@@ -1,0 +1,322 @@
+//! A slab-backed **LRU cache** bounded by entry count *and* approximate
+//! bytes — the warm tier of the service result cache
+//! ([`crate::service::cache::ResultCache`]).
+//!
+//! std-only: recency is an intrusive doubly-linked list threaded through
+//! a slot vector (indices, not pointers), so `get`/`insert`/eviction are
+//! all O(1) with zero steady-state allocation once the slab has grown to
+//! capacity. Each entry carries an explicit byte weight supplied at
+//! insert time (for the result cache: the length of the serialized
+//! JSONL record, a faithful proxy for resident size); inserting past
+//! either bound evicts from the least-recently-used end until both
+//! bounds hold again.
+//!
+//! The slab never grows beyond `max_entries` live slots, so a
+//! deployment's worst-case memory is `max_entries × (key + value +
+//! list links)` regardless of traffic — a million distinct signatures
+//! cost evictions, not unbounded growth (the same shape as the
+//! connection reactor one layer up: load costs buffers, not threads).
+
+use std::collections::HashMap;
+
+const NIL: usize = usize::MAX;
+
+struct Slot<V> {
+    key: String,
+    /// `None` only for freed slots awaiting reuse.
+    value: Option<V>,
+    bytes: usize,
+    prev: usize,
+    next: usize,
+}
+
+/// Monotonic counters; eviction is the one the capacity tests pin.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LruStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// The bounded LRU map. See the module docs.
+pub struct LruCache<V> {
+    map: HashMap<String, usize>,
+    slots: Vec<Slot<V>>,
+    free: Vec<usize>,
+    /// Most-recently-used slot (NIL when empty).
+    head: usize,
+    /// Least-recently-used slot (NIL when empty).
+    tail: usize,
+    max_entries: usize,
+    max_bytes: usize,
+    bytes: usize,
+    stats: LruStats,
+}
+
+impl<V> LruCache<V> {
+    /// An LRU bounded by `max_entries` entries and `max_bytes`
+    /// approximate bytes (both clamped to at least one entry's worth so
+    /// a zero-capacity cache degrades to "hold exactly one", never
+    /// panics or divides by zero).
+    pub fn new(max_entries: usize, max_bytes: usize) -> LruCache<V> {
+        LruCache {
+            map: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            max_entries: max_entries.max(1),
+            max_bytes: max_bytes.max(1),
+            bytes: 0,
+            stats: LruStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Approximate resident bytes (Σ of the weights supplied at insert).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn stats(&self) -> LruStats {
+        self.stats
+    }
+
+    /// Does `key` currently reside in the cache? Does **not** touch
+    /// recency or the hit/miss counters.
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Look up `key`, promoting it to most-recently-used on a hit.
+    pub fn get(&mut self, key: &str) -> Option<&V> {
+        match self.map.get(key).copied() {
+            Some(slot) => {
+                self.stats.hits += 1;
+                self.promote(slot);
+                self.slots[slot].value.as_ref()
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key` with an explicit byte weight, evicting
+    /// from the LRU end until both capacity bounds hold. Returns the
+    /// evicted `(key, value)` pairs, oldest first — the caller may need
+    /// them (the result cache must not silently drop an entry whose
+    /// on-disk record has not been flushed yet).
+    pub fn insert(&mut self, key: &str, value: V, bytes: usize) -> Vec<(String, V)> {
+        if let Some(&slot) = self.map.get(key) {
+            // refresh in place: swap the value, re-weigh, promote
+            self.bytes = self.bytes - self.slots[slot].bytes + bytes;
+            self.slots[slot].value = Some(value);
+            self.slots[slot].bytes = bytes;
+            self.promote(slot);
+            return self.evict_to_bounds(slot);
+        }
+        let node = Slot {
+            key: key.to_string(),
+            value: Some(value),
+            bytes,
+            prev: NIL,
+            next: NIL,
+        };
+        let slot = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = node;
+                i
+            }
+            None => {
+                self.slots.push(node);
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(key.to_string(), slot);
+        self.bytes += bytes;
+        self.link_front(slot);
+        self.evict_to_bounds(slot)
+    }
+
+    /// Remove `key` outright (not counted as an eviction: the caller
+    /// asked for it).
+    pub fn remove(&mut self, key: &str) -> Option<V> {
+        let slot = self.map.remove(key)?;
+        self.unlink(slot);
+        self.bytes -= self.slots[slot].bytes;
+        self.free.push(slot);
+        self.slots[slot].key.clear();
+        self.slots[slot].value.take()
+    }
+
+    /// Keys from most- to least-recently used (test/introspection aid).
+    pub fn keys_mru_first(&self) -> Vec<String> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut at = self.head;
+        while at != NIL {
+            out.push(self.slots[at].key.clone());
+            at = self.slots[at].next;
+        }
+        out
+    }
+
+    /// Evict LRU entries until both bounds hold. `keep` (the slot just
+    /// inserted/refreshed) is never evicted while anything older
+    /// remains, and survives even alone — a single oversized record
+    /// stays resident rather than making the cache useless for it.
+    fn evict_to_bounds(&mut self, keep: usize) -> Vec<(String, V)> {
+        let mut evicted = Vec::new();
+        while self.map.len() > self.max_entries || self.bytes > self.max_bytes {
+            let mut victim = self.tail;
+            if victim == keep {
+                victim = self.slots[victim].prev;
+            }
+            if victim == NIL {
+                break; // only `keep` left; bounds yield to it
+            }
+            self.unlink(victim);
+            self.bytes -= self.slots[victim].bytes;
+            let key = std::mem::take(&mut self.slots[victim].key);
+            self.map.remove(&key);
+            self.free.push(victim);
+            let value = self.slots[victim].value.take().expect("live slot has a value");
+            self.stats.evictions += 1;
+            evicted.push((key, value));
+        }
+        evicted
+    }
+
+    fn promote(&mut self, slot: usize) {
+        if self.head == slot {
+            return;
+        }
+        self.unlink(slot);
+        self.link_front(slot);
+    }
+
+    fn link_front(&mut self, slot: usize) {
+        self.slots[slot].prev = NIL;
+        self.slots[slot].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next) = (self.slots[slot].prev, self.slots[slot].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+        self.slots[slot].prev = NIL;
+        self.slots[slot].next = NIL;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_is_in_lru_order() {
+        let mut c: LruCache<u32> = LruCache::new(3, usize::MAX);
+        assert!(c.insert("a", 1, 10).is_empty());
+        assert!(c.insert("b", 2, 10).is_empty());
+        assert!(c.insert("c", 3, 10).is_empty());
+        // touch "a": now b is least-recently used
+        assert_eq!(c.get("a"), Some(&1));
+        let ev = c.insert("d", 4, 10);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].0, "b", "LRU entry evicts first");
+        assert_eq!(c.keys_mru_first(), vec!["d", "a", "c"]);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn entry_bound_holds_under_churn() {
+        let mut c: LruCache<usize> = LruCache::new(4, usize::MAX);
+        for i in 0..100 {
+            c.insert(&format!("k{i}"), i, 1);
+            assert!(c.len() <= 4, "entry bound violated at {i}");
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.stats().evictions, 96);
+        // survivors are exactly the four most recent
+        assert_eq!(c.keys_mru_first(), vec!["k99", "k98", "k97", "k96"]);
+    }
+
+    #[test]
+    fn byte_bound_evicts_and_accounts() {
+        let mut c: LruCache<u8> = LruCache::new(100, 100);
+        c.insert("a", 0, 40);
+        c.insert("b", 0, 40);
+        assert_eq!(c.bytes(), 80);
+        let ev = c.insert("c", 0, 40); // 120 > 100: evict "a"
+        assert_eq!(ev[0].0, "a");
+        assert_eq!(c.bytes(), 80);
+        // an oversized single entry is kept (never evict `keep` last)
+        let ev = c.insert("big", 0, 500);
+        assert!(ev.iter().all(|(k, _)| k != "big"));
+        assert!(c.contains("big"));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn refresh_reweighs_and_promotes() {
+        let mut c: LruCache<u8> = LruCache::new(3, usize::MAX);
+        c.insert("a", 1, 10);
+        c.insert("b", 2, 10);
+        c.insert("a", 3, 25); // refresh: new value, new weight, MRU
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 35);
+        assert_eq!(c.get("a"), Some(&3));
+        assert_eq!(c.keys_mru_first()[0], "a");
+    }
+
+    #[test]
+    fn hit_miss_counters_track_lookups() {
+        let mut c: LruCache<u8> = LruCache::new(2, usize::MAX);
+        c.insert("a", 1, 1);
+        assert!(c.get("a").is_some());
+        assert!(c.get("nope").is_none());
+        assert!(c.get("nada").is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 0));
+        // contains() leaves the counters alone
+        assert!(c.contains("a"));
+        assert_eq!(c.stats(), s);
+    }
+
+    #[test]
+    fn remove_frees_slots_for_reuse() {
+        let mut c: LruCache<u8> = LruCache::new(10, usize::MAX);
+        c.insert("a", 1, 5);
+        c.insert("b", 2, 5);
+        assert_eq!(c.remove("a"), Some(1));
+        assert_eq!(c.remove("a"), None);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 5);
+        c.insert("c", 3, 5); // reuses the freed slot
+        assert_eq!(c.keys_mru_first(), vec!["c", "b"]);
+        assert_eq!(c.stats().evictions, 0, "remove() is not an eviction");
+    }
+}

@@ -2,11 +2,13 @@
 //! a deterministic PRNG, integer factorization helpers used by the
 //! map-space tiler, summary statistics, a micro-benchmark harness
 //! (criterion replacement), a miniature property-testing framework
-//! (proptest replacement), and a std-thread parallel map.
+//! (proptest replacement), a std-thread parallel map, and a bounded
+//! (entries + bytes) LRU cache.
 
 pub mod bench;
 pub mod divisors;
 pub mod hash;
+pub mod lru;
 pub mod par;
 pub mod quickcheck;
 pub mod rng;
@@ -14,6 +16,7 @@ pub mod stats;
 
 pub use bench::{BenchReport, Bencher};
 pub use divisors::{divisors, factorize, tilings};
+pub use lru::{LruCache, LruStats};
 pub use par::par_map;
 pub use quickcheck::{Gen, QuickCheck};
 pub use rng::Rng;

@@ -10,8 +10,8 @@ use union::frontend::Workload;
 use union::mappers::Objective;
 use union::mapspace::Constraints;
 use union::service::{
-    client_request, job_signature, Broker, BrokerConfig, CostKind, JobRequest, JobSpec, Json,
-    Request, ResultCache, ServeConfig, Server, Submitted,
+    client_request, client_request_with, job_signature, Broker, BrokerConfig, CostKind,
+    JobRequest, JobSpec, Json, Request, ResultCache, ServeConfig, Server, Submitted,
 };
 use union::util::quickcheck::QuickCheck;
 
@@ -168,6 +168,8 @@ fn corrupted_cache_file_skips_bad_records_without_panicking() {
         Submitted::Cached(_)
     ));
     broker.submit_wait(gemm_job(40, 8, 8, 60, 1)).unwrap();
+    // flushes are batched now; force one so the append is visible
+    broker.flush_cache();
     let (entries, stats) = broker.cache_stats();
     assert_eq!(entries, 3);
     assert_eq!(stats.appended, 1);
@@ -327,7 +329,11 @@ fn tcp_server_serves_search_status_and_drains_on_shutdown() {
     let daemon = std::thread::spawn(move || server.run());
 
     // search twice: fresh, then served from the (in-memory) cache
-    let req = Request::Search { id: Some("a".into()), spec: search_spec("gemm:32x32x32", 120, 3) };
+    let req = Request::Search {
+        id: Some("a".into()),
+        spec: search_spec("gemm:32x32x32", 120, 3),
+        progress: false,
+    };
     let first = client_request(&addr, &req).unwrap();
     assert_eq!(first.str("type"), Some("result"), "{}", first.to_line());
     assert_eq!(first.str("id"), Some("a"));
@@ -344,6 +350,7 @@ fn tcp_server_serves_search_status_and_drains_on_shutdown() {
     let bad = client_request(&addr, &Request::Search {
         id: Some("b".into()),
         spec: search_spec("warpdrive", 10, 1),
+        progress: false,
     })
     .unwrap();
     assert_eq!(bad.str("type"), Some("error"));
@@ -373,7 +380,11 @@ fn tcp_search_equals_direct_orchestrator_run() {
     let daemon = std::thread::spawn(move || server.run());
 
     let spec = search_spec("gemm:64x16x32", 150, 11);
-    let served = client_request(&addr, &Request::Search { id: None, spec: spec.clone() }).unwrap();
+    let served = client_request(
+        &addr,
+        &Request::Search { id: None, spec: spec.clone(), progress: false },
+    )
+    .unwrap();
     let mapping = union::service::mapping_from_json(served.get("mapping").unwrap()).unwrap();
 
     let job = union::service::resolve_spec(&spec).unwrap();
@@ -422,8 +433,12 @@ fn backpressure_overloaded_response_reaches_the_wire() {
     assert!(matches!(parked, Submitted::Pending { .. }));
     let (resp, stop) = union::service::server::handle_line(
         &broker,
-        &Request::Search { id: Some("x".into()), spec: search_spec("gemm:16x8x8", 40, 5) }
-            .to_line(),
+        &Request::Search {
+            id: Some("x".into()),
+            spec: search_spec("gemm:16x8x8", 40, 5),
+            progress: false,
+        }
+        .to_line(),
     );
     assert!(!stop);
     assert_eq!(resp.str("type"), Some("overloaded"), "{}", resp.to_line());
@@ -435,6 +450,192 @@ fn backpressure_overloaded_response_reaches_the_wire() {
     }
     let stats = broker.drain();
     assert_eq!(stats.overloaded, 1);
+}
+
+/// Acceptance criterion: the reactor multiplexes every connection on
+/// ONE thread. Idle and slow-reading clients cost buffers, not threads,
+/// and never wedge the accept loop — asserted via the server-side
+/// `conn_threads_spawned` counter, which must stay zero in steady
+/// state.
+#[test]
+fn reactor_serves_concurrent_clients_with_zero_connection_threads() {
+    let server = Server::bind(ServeConfig {
+        port: 0,
+        broker: BrokerConfig { shards: 2, ..BrokerConfig::default() },
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let stats = server.stats_handle();
+    let daemon = std::thread::spawn(move || server.run());
+
+    // an idle connection that never sends a byte: it must not block
+    // later accepts or responses
+    let idle = std::net::TcpStream::connect(&addr).unwrap();
+
+    const CLIENTS: usize = 6;
+    let workers: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                client_request(&addr, &Request::Search {
+                    id: Some(format!("c{i}")),
+                    spec: search_spec("gemm:24x24x24", 80, 2),
+                    progress: false,
+                })
+                .unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<Json> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    for r in &results {
+        assert_eq!(r.str("type"), Some("result"), "{}", r.to_line());
+        assert_eq!(
+            r.num("score").unwrap().to_bits(),
+            results[0].num("score").unwrap().to_bits(),
+            "identical concurrent jobs must answer identically"
+        );
+    }
+
+    // a slow reader: submits a request and never reads the response;
+    // the reactor must keep answering everyone else regardless
+    {
+        use std::io::Write;
+        let mut slow = std::net::TcpStream::connect(&addr).unwrap();
+        let line = Request::Search {
+            id: Some("slow".into()),
+            spec: search_spec("gemm:24x24x24", 80, 2),
+            progress: false,
+        }
+        .to_line();
+        writeln!(slow, "{line}").unwrap();
+        let status = client_request(&addr, &Request::Status { id: None }).unwrap();
+        assert_eq!(status.str("type"), Some("status"));
+    }
+
+    assert!(stats.accepted() >= (CLIENTS as u64) + 2, "accepted {}", stats.accepted());
+    assert_eq!(
+        stats.conn_threads_spawned(),
+        0,
+        "the reactor must never spawn a per-connection thread"
+    );
+    drop(idle);
+    client_request(&addr, &Request::Shutdown { id: None }).unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+/// Pipelined requests on ONE connection answer strictly in request
+/// order, even when a later request (status) could finish before an
+/// earlier search.
+#[test]
+fn pipelined_requests_on_one_connection_answer_in_order() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let server = Server::bind(ServeConfig { port: 0, ..ServeConfig::default() }).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    let mut batch = String::new();
+    batch.push_str(
+        &Request::Search {
+            id: Some("r1".into()),
+            spec: search_spec("gemm:16x16x32", 90, 4),
+            progress: false,
+        }
+        .to_line(),
+    );
+    batch.push('\n');
+    batch.push_str(&Request::Status { id: Some("r2".into()) }.to_line());
+    batch.push('\n');
+    // identical to r1: coalesces with it or hits the cache, but must
+    // still answer third
+    batch.push_str(
+        &Request::Search {
+            id: Some("r3".into()),
+            spec: search_spec("gemm:16x16x32", 90, 4),
+            progress: false,
+        }
+        .to_line(),
+    );
+    batch.push('\n');
+    stream.write_all(batch.as_bytes()).unwrap();
+
+    let mut reader = BufReader::new(stream);
+    let mut read_one = || {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+    let r1 = read_one();
+    let r2 = read_one();
+    let r3 = read_one();
+    assert_eq!(r1.str("id"), Some("r1"), "{}", r1.to_line());
+    assert_eq!(r1.str("type"), Some("result"));
+    assert_eq!(r2.str("id"), Some("r2"), "{}", r2.to_line());
+    assert_eq!(r2.str("type"), Some("status"));
+    assert_eq!(r3.str("id"), Some("r3"), "{}", r3.to_line());
+    assert_eq!(r3.str("type"), Some("result"));
+    assert_eq!(
+        r3.num("score").unwrap().to_bits(),
+        r1.num("score").unwrap().to_bits(),
+        "pipelined duplicate must answer bit-identically"
+    );
+
+    client_request(&addr, &Request::Shutdown { id: None }).unwrap();
+    daemon.join().unwrap().unwrap();
+}
+
+/// Anytime progress: a streaming search interleaves `progress` events
+/// before its final `result` on the same connection, and streaming
+/// never perturbs the answer — a plain replay is cached and
+/// bit-identical.
+#[test]
+fn streamed_progress_precedes_final_result_on_the_wire() {
+    let server = Server::bind(ServeConfig { port: 0, ..ServeConfig::default() }).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let spec = search_spec("gemm:48x16x16", 400, 13);
+    let mut events: Vec<Json> = Vec::new();
+    let streamed = client_request_with(
+        &addr,
+        &Request::Search { id: Some("p".into()), spec: spec.clone(), progress: true },
+        &mut |ev| events.push(ev.clone()),
+    )
+    .unwrap();
+    assert_eq!(streamed.str("type"), Some("result"), "{}", streamed.to_line());
+    assert_eq!(streamed.str("id"), Some("p"));
+    assert!(!events.is_empty(), "a 400-sample search must report progress");
+    let sig = streamed.str("signature").unwrap();
+    let mut last_eval = 0.0;
+    for ev in &events {
+        assert_eq!(ev.str("type"), Some("progress"), "{}", ev.to_line());
+        assert_eq!(ev.str("id"), Some("p"));
+        assert_eq!(ev.str("signature"), Some(sig), "event for the wrong job");
+        let eval = ev.num("evaluated").unwrap();
+        assert!(eval >= last_eval, "evaluated count went backwards");
+        last_eval = eval;
+    }
+    assert!(
+        events.iter().any(|ev| ev.num("best_score").is_some()),
+        "at least one snapshot carries a best-so-far score"
+    );
+
+    let replay = client_request(
+        &addr,
+        &Request::Search { id: None, spec, progress: false },
+    )
+    .unwrap();
+    assert_eq!(replay.bool_field("cached"), Some(true));
+    assert_eq!(
+        replay.num("score").unwrap().to_bits(),
+        streamed.num("score").unwrap().to_bits(),
+        "streaming must not perturb the result"
+    );
+
+    client_request(&addr, &Request::Shutdown { id: None }).unwrap();
+    daemon.join().unwrap().unwrap();
 }
 
 #[test]

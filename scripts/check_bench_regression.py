@@ -203,7 +203,8 @@ def main():
               "speedup legitimately moved a baseline, or a new bench/metric needs "
               "seeding, refresh with:\n"
               "  UNION_BENCH_DIR=$PWD/out/bench cargo bench --bench perf_hotpath "
-              "--bench network_sweep --bench dse_sweep --bench service_throughput\n"
+              "--bench network_sweep --bench dse_sweep --bench service_throughput "
+              "--bench service_load --bench sparse_sweep\n"
               "  python3 scripts/check_bench_regression.py --update\n"
               "and commit bench/baselines/ (see bench/README.md).", file=sys.stderr)
         sys.exit(1)

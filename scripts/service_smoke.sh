@@ -6,8 +6,10 @@
 #      answer for the same job (`union network --mappings`);
 #   2. a second client run of the same job is answered from the
 #      persistent cache (`"cached":true`) with the identical mapping;
-#   3. status reports exactly one search;
-#   4. shutdown drains gracefully and the server process exits 0.
+#   3. N concurrent clients are all answered by the single-threaded
+#      reactor, one of them streaming anytime progress events;
+#   4. status reports exactly one search per distinct job;
+#   5. shutdown drains gracefully and the server process exits 0.
 #
 # Used by CI's service-smoke job; runnable locally the same way:
 #   scripts/service_smoke.sh
@@ -80,9 +82,35 @@ assert a["mapping"] == b["mapping"], "cached mapping diverged"
 assert a["signature"] == b["signature"], "job signature moved between runs"
 EOF
 
+echo "== concurrent clients against the reactor =="
+# four clients at once: two fresh jobs, one repeat (cache hit), and one
+# fresh job streaming anytime progress events on the same connection as
+# its final answer — the bounded reactor multiplexes all of them on one
+# thread
+"$BIN" client search --workload gemm:48x16x16 --arch edge --cost analytical \
+    --objective edp --effort 150 --seed 5 --port "$PORT" --json > "$OUT/conc_a.json" &
+PID_A=$!
+"$BIN" client search --workload gemm:32x48x16 --arch edge --cost analytical \
+    --objective edp --effort 150 --seed 5 --port "$PORT" --json > "$OUT/conc_b.json" &
+PID_B=$!
+"$BIN" client search "${JOB[@]}" --port "$PORT" --json > "$OUT/conc_c.json" &
+PID_C=$!
+"$BIN" client search --workload gemm:48x24x24 --arch edge --cost analytical \
+    --objective edp --effort 400 --seed 9 --port "$PORT" --json --progress \
+    > "$OUT/conc_progress.json" &
+PID_D=$!
+wait "$PID_A" "$PID_B" "$PID_C" "$PID_D"
+grep -q '"type":"result"' "$OUT/conc_a.json"
+grep -q '"type":"result"' "$OUT/conc_b.json"
+grep -q '"cached":true' "$OUT/conc_c.json"
+# the streamed client interleaves progress events before its result
+grep -q '"type":"progress"' "$OUT/conc_progress.json"
+tail -n 1 "$OUT/conc_progress.json" | grep -q '"type":"result"'
+
 echo "== status + graceful shutdown =="
 "$BIN" client status --port "$PORT" | tee "$OUT/status.txt"
-grep -q 'searched=1 ' "$OUT/status.txt"
+# one search per distinct job: the original + 3 fresh concurrent ones
+grep -q 'searched=4 ' "$OUT/status.txt"
 grep -q 'cache_hits=[1-9]' "$OUT/status.txt"
 "$BIN" client shutdown --port "$PORT"
 wait "$SERVER_PID"
