@@ -1,0 +1,310 @@
+//! Cluster serving bench: zipfian clients against a live two-process
+//! (two-server) rendezvous-routed cluster, exercising the full
+//! multi-process story end to end — deterministic routing, failover
+//! when a member dies, and snapshot `sync` re-warming a restarted
+//! member. With `UNION_BENCH_DIR` set, the run is recorded as
+//! `BENCH_cluster_load.json` for the bench-regression gate.
+//!
+//! The narrative, in order:
+//!   1. two servers partition a zipfian job pool by signature; clients
+//!      route each request to its owner (timed: aggregate req/s);
+//!   2. member B shuts down; B-owned jobs fail over to A and are still
+//!      answered bit-identically to a direct orchestrator run;
+//!   3. B restarts on the same address with an empty cache, imports
+//!      A's snapshot via `sync`, and the cluster returns to all-warm
+//!      serving — the restarted member searches **nothing** (the gated
+//!      restart warm-hit rate).
+
+use std::time::Instant;
+
+use union::mappers::Objective;
+use union::service::{
+    client_request, job_signature, resolve_spec, sync_from_peer, Cluster, ClusterClient,
+    JobSpec, Json, Request, ResultCache, ServeConfig, Server,
+};
+use union::util::bench::Bencher;
+use union::util::stats::Summary;
+use union::util::Rng;
+
+/// Distinct jobs in the pool (zipf ranks).
+const POOL: usize = 8;
+/// Concurrent client threads.
+const CLIENTS: usize = 4;
+/// Requests each client issues per timed iteration.
+const REQS_PER_CLIENT: usize = 30;
+/// Search samples per job — tiny on purpose: the bench measures the
+/// serving and routing overheads, not search time.
+const SAMPLES: usize = 60;
+/// Zipf exponent: rank r is drawn with weight 1/r^s.
+const ZIPF_EXPONENT: f64 = 1.1;
+
+/// Pool rank `i` with an explicit seed: the seed is scanned at startup
+/// so each rank's signature lands on the desired member (the member
+/// addresses carry ephemeral ports, so ownership cannot be fixed at
+/// compile time without fixing the seeds at run time).
+fn spec_with(i: usize, seed: u64) -> JobSpec {
+    let dims = [16, 24, 32, 40, 48, 64, 80, 96];
+    JobSpec {
+        workload: format!("gemm:{}x16x16", dims[i % dims.len()]),
+        arch: "edge".into(),
+        cost: "analytical".into(),
+        objective: Objective::Edp,
+        samples: SAMPLES,
+        seed,
+        constraints: String::new(),
+    }
+}
+
+fn request_with(i: usize, seed: u64) -> Request {
+    Request::Search { id: None, spec: spec_with(i, seed), progress: false }
+}
+
+/// Cumulative zipf distribution over the pool ranks.
+fn zipf_cumulative() -> [f64; POOL] {
+    let mut w = [0.0; POOL];
+    let mut total = 0.0;
+    for (r, slot) in w.iter_mut().enumerate() {
+        *slot = 1.0 / ((r + 1) as f64).powf(ZIPF_EXPONENT);
+        total += *slot;
+    }
+    let mut acc = 0.0;
+    for slot in w.iter_mut() {
+        acc += *slot / total;
+        *slot = acc;
+    }
+    w[POOL - 1] = 1.0;
+    w
+}
+
+fn pick(rng: &mut Rng, cum: &[f64; POOL]) -> usize {
+    let u = rng.f64();
+    cum.iter().position(|&c| u < c).unwrap_or(POOL - 1)
+}
+
+fn bind_server(port: u16, cache: Option<std::path::PathBuf>) -> (Server, String) {
+    let server = Server::bind(ServeConfig { port, cache, ..ServeConfig::default() })
+        .expect("bind server");
+    let addr = server.local_addr().expect("local addr").to_string();
+    (server, addr)
+}
+
+fn status(addr: &str) -> Json {
+    client_request(addr, &Request::Status { id: None }).expect("status served")
+}
+
+fn shutdown(addr: &str) {
+    let bye = client_request(addr, &Request::Shutdown { id: None }).expect("shutdown served");
+    assert_eq!(bye.bool_field("ok"), Some(true));
+}
+
+/// One timed load phase: `CLIENTS` threads issuing zipf-distributed
+/// requests, each routed client-side to its owner (both members up, so
+/// plain owner routing needs no failover state). Returns latencies.
+fn run_phase(owners: &[String; POOL], seeds: [u64; POOL], phase_seed: u64) -> Vec<f64> {
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let owners = owners.clone();
+            std::thread::spawn(move || {
+                let mut rng =
+                    Rng::new(phase_seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(c as u64 + 1));
+                let cum = zipf_cumulative();
+                let mut lat = Vec::with_capacity(REQS_PER_CLIENT);
+                for _ in 0..REQS_PER_CLIENT {
+                    let i = pick(&mut rng, &cum);
+                    let t0 = Instant::now();
+                    let resp = client_request(&owners[i], &request_with(i, seeds[i]))
+                        .expect("request served");
+                    lat.push(t0.elapsed().as_secs_f64());
+                    assert_eq!(
+                        resp.str("type"),
+                        Some("result"),
+                        "unexpected response under load: {}",
+                        resp.to_line()
+                    );
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut all = Vec::with_capacity(CLIENTS * REQS_PER_CLIENT);
+    for h in handles {
+        all.extend(h.join().expect("client thread"));
+    }
+    all
+}
+
+fn main() {
+    let (server_a, a_addr) = bind_server(0, None);
+    let (server_b, b_addr) = bind_server(0, None);
+    let b_port: u16 = b_addr.rsplit(':').next().unwrap().parse().unwrap();
+    let a_daemon = std::thread::spawn(move || server_a.run());
+    let b_daemon = std::thread::spawn(move || server_b.run());
+
+    let members = vec![a_addr.clone(), b_addr.clone()];
+    let cluster = Cluster::new(members.clone()).expect("cluster");
+    let a_idx = members.iter().position(|m| m == &a_addr).unwrap();
+    let b_idx = 1 - a_idx;
+
+    // balance the pool by construction: scan each rank's seed until it
+    // hashes to the desired member, alternating A/B — so both members
+    // always own ranks regardless of which ephemeral ports they got
+    let mut seeds = [0u64; POOL];
+    for (i, slot) in seeds.iter_mut().enumerate() {
+        let want = if i % 2 == 0 { a_idx } else { b_idx };
+        *slot = (42..42 + 512u64)
+            .find(|&s| {
+                let sig = job_signature(&resolve_spec(&spec_with(i, s)).expect("spec"));
+                cluster.owner(&sig) == want
+            })
+            .expect("a seed in 42..554 lands on the desired owner");
+    }
+    // pre-resolve each pool job's signature and owner address, so the
+    // timed loop routes with a table lookup (what a warmed client does)
+    let sigs: Vec<String> = (0..POOL)
+        .map(|i| job_signature(&resolve_spec(&spec_with(i, seeds[i])).expect("spec resolves")))
+        .collect();
+    let owner_idx: Vec<usize> = sigs.iter().map(|s| cluster.owner(s)).collect();
+    let owners: [String; POOL] =
+        std::array::from_fn(|i| members[owner_idx[i]].clone());
+
+    // routing determinism: a client holding the member list in any
+    // order must pick the same owner for every signature
+    let shuffled = Cluster::new(vec![b_addr.clone(), a_addr.clone()]).expect("cluster");
+    let routing_deterministic = sigs
+        .iter()
+        .all(|s| shuffled.members()[shuffled.owner(s)] == members[cluster.owner(s)]);
+
+    // warm each owner with its own partition
+    for i in 0..POOL {
+        let r = client_request(&owners[i], &request_with(i, seeds[i])).expect("warmup served");
+        assert_eq!(r.str("type"), Some("result"), "{}", r.to_line());
+    }
+
+    // bit-identity probe (before the timed window): the routed answer
+    // equals a direct orchestrator run of the same job
+    let served =
+        client_request(&owners[0], &request_with(0, seeds[0])).expect("identity probe served");
+    let mapping =
+        union::service::mapping_from_json(served.get("mapping").expect("mapping present"))
+            .expect("mapping decodes");
+    let job = resolve_spec(&spec_with(0, seeds[0])).expect("spec resolves");
+    let direct = {
+        use union::network::{NetworkOrchestrator, OrchestratorConfig, WorkloadGraph};
+        let graph = WorkloadGraph::from_workloads("direct", vec![job.workload.clone()]);
+        let orch = NetworkOrchestrator::with_config(
+            &job.arch,
+            job.cost.model(),
+            &job.constraints,
+            OrchestratorConfig {
+                objective: job.objective,
+                samples: job.samples,
+                seed: job.seed,
+                threads: Some(1),
+            },
+        );
+        orch.run(&graph).expect("direct run")
+    };
+    let direct_best = &direct.layers[0].result;
+    assert_eq!(mapping, direct_best.mapping, "served mapping differs from direct run");
+    let mut bit_identical = served.num("score").expect("score").to_bits()
+        == direct_best.score.to_bits();
+
+    // phase 1 (timed): aggregate req/s with both members serving their
+    // partitions warm
+    let mut b = Bencher::with_iters(1, 3);
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut phase = 0u64;
+    let rps = b.bench_rate("cluster_load_requests", "req", || {
+        phase += 1;
+        latencies.extend(run_phase(&owners, seeds, 0xC1A5 + phase));
+        (CLIENTS * REQS_PER_CLIENT) as u64
+    });
+    let lat = Summary::of(&latencies);
+
+    // phase 2: kill B; every job fails over to A and is still answered
+    // (B-owned jobs cost A a fresh search — correctness over latency)
+    shutdown(&b_addr);
+    b_daemon.join().expect("server B thread").expect("server B exits cleanly");
+    let mut cc = ClusterClient::new(cluster.clone(), 0xFA11);
+    let mut failovers = 0usize;
+    for i in 0..POOL {
+        let (answered_by, doc) =
+            cc.request(&sigs[i], &request_with(i, seeds[i])).expect("failover served");
+        assert_eq!(doc.str("type"), Some("result"), "{}", doc.to_line());
+        assert_eq!(answered_by, a_idx, "only A is alive to answer");
+        if owner_idx[i] == b_idx {
+            failovers += 1;
+            // the re-routed answer must carry the same bits the owner
+            // served during the warm phase (same job, same seed)
+            bit_identical &= doc.num("score").expect("score").to_bits()
+                == client_request(&a_addr, &request_with(i, seeds[i]))
+                    .expect("repeat served")
+                    .num("score")
+                    .expect("score")
+                    .to_bits();
+        }
+    }
+    assert_eq!(failovers, POOL / 2, "the seed scan alternates owners");
+
+    // phase 3: B restarts on its old address with an empty cache and
+    // re-warms from A's snapshot instead of re-searching
+    let sync_cache = {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!("union-cluster-load-sync-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&dir);
+        dir
+    };
+    {
+        let mut cache = ResultCache::open(&sync_cache).expect("open sync cache");
+        let stats = sync_from_peer(&a_addr, &mut cache).expect("sync from A");
+        assert!(stats.imported >= POOL, "A holds every pool job after failover");
+    } // drop flushes the snapshot
+    let (server_b2, b2_addr) = bind_server(b_port, Some(sync_cache.clone()));
+    assert_eq!(b2_addr, b_addr, "B must restart on its old address");
+    let b2_daemon = std::thread::spawn(move || server_b2.run());
+
+    let restart_before = status(&b_addr);
+    latencies.clear();
+    latencies.extend(run_phase(&owners, seeds, 0xC1A5_0FF5));
+    let restart_after = status(&b_addr);
+    let restart_lat = Summary::of(&latencies);
+
+    // the restarted member must have answered its partition entirely
+    // from the shipped snapshot: zero searches after restart
+    let b2_searched = restart_after.num("searched").unwrap_or(f64::NAN)
+        - restart_before.num("searched").unwrap_or(f64::NAN);
+    let b2_requests = restart_after.num("requests").unwrap_or(f64::NAN)
+        - restart_before.num("requests").unwrap_or(f64::NAN);
+    assert!(b2_requests > 0.0, "the zipf mix always hits B-owned ranks");
+    let restart_warm_hit_rate = 1.0 - b2_searched / b2_requests.max(1.0);
+
+    println!(
+        "cluster load: {CLIENTS} clients x zipf(s={ZIPF_EXPONENT}) over {POOL} jobs on 2 peers: \
+         {rps:.3e} req/s, p50 {:.3} ms, p95 {:.3} ms; {failovers} failovers; \
+         restart warm hit rate {restart_warm_hit_rate:.3} (p95 after restart {:.3} ms)",
+        lat.median * 1e3,
+        lat.p95 * 1e3,
+        restart_lat.p95 * 1e3,
+    );
+
+    // deterministic gates
+    b.gated_metric("cluster_restart_warm_hit_rate", restart_warm_hit_rate);
+    b.gated_metric("cluster_mapping_bit_identical", if bit_identical { 1.0 } else { 0.0 });
+    b.gated_metric(
+        "cluster_routing_deterministic",
+        if routing_deterministic { 1.0 } else { 0.0 },
+    );
+    b.metric("cluster_load_p50_ms", lat.median * 1e3);
+    b.metric("cluster_load_p95_ms", lat.p95 * 1e3);
+    b.metric("cluster_load_peers", 2.0);
+    b.metric("cluster_load_pool_jobs", POOL as f64);
+    b.metric("cluster_load_failovers", failovers as f64);
+
+    shutdown(&b_addr);
+    b2_daemon.join().expect("server B2 thread").expect("server B2 exits cleanly");
+    shutdown(&a_addr);
+    a_daemon.join().expect("server A thread").expect("server A exits cleanly");
+    let _ = std::fs::remove_file(&sync_cache);
+
+    b.write_json_env("cluster_load");
+}

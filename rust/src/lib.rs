@@ -54,7 +54,14 @@
 //! Finally, the [`service`] module turns the stack multi-tenant:
 //! `union serve` runs a sharded evaluation daemon (JSON-lines over
 //! TCP/stdin) that coalesces concurrent identical searches and answers
-//! repeat traffic from a persistent, bit-exact result cache.
+//! repeat traffic from a persistent, bit-exact result cache; the
+//! [`service::cluster`] layer scales that across processes with
+//! coordinator-free rendezvous routing, snapshot `sync` between peer
+//! caches, and deterministic failover (`--peers` / `union router`).
+//!
+//! `docs/ARCHITECTURE.md` maps these layers end to end and names the
+//! invariant each one pins; `docs/PROTOCOL.md` is the normative wire
+//! reference for the serving protocol.
 //!
 //! (Clippy policy lives in the `[lints.clippy]` table of
 //! `rust/Cargo.toml`, applied to every target in the package.)

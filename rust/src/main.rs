@@ -15,9 +15,12 @@
 //!                 [--cache-warm-mb N] [--cache-flush-every N]
 //!                 [--cache-flush-ms N] [--cache-compact-mb N]
 //!                 [--stdio] [--verbose]
+//! union router    --peers host:port,... [--port N] [--host H] [--verbose]
 //! union client    search|status|shutdown [--port N] [--workload <spec>]
-//!                 [--progress] [--retries N] [--no-retry] ...
-//! union warm      --cache file.jsonl [--model <net>] [--arch <spec>] ...
+//!                 [--peers host:port,...] [--progress] [--retries N]
+//!                 [--no-retry] ...
+//! union warm      --cache file.jsonl [--model <net>] [--arch <spec>]
+//!                 [--peers host:port,...] [--sync-from host:port] ...
 //! union casestudy <id> [--thorough] | --list
 //! union validate  [--artifacts DIR]
 //! union info      --arch <spec>
@@ -36,8 +39,10 @@ use union::mapping::render_loop_nest;
 use union::mapspace::{constraints_from_str, Constraints, MapSpace};
 use union::network::{NetworkOrchestrator, OrchestratorConfig};
 use union::service::{
-    self, mapping_from_json, Broker, BrokerConfig, CacheConfig, CostKind, JobRequest, JobSpec,
-    Request, ResultCache, ServeConfig, Server, Submitted,
+    self, job_signature, mapping_from_json, parse_peers, resolve_spec, sync_from_peer,
+    workload_wire_spec, Broker, BrokerConfig, CacheConfig, Cluster, ClusterClient, CostKind,
+    JobRequest, JobSpec, Request, ResultCache, Router, RouterConfig, ServeConfig, Server,
+    Submitted,
 };
 use union::util::Rng;
 
@@ -62,6 +67,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("network") => cmd_network(&args),
         Some("dse") => cmd_dse(&args),
         Some("serve") => cmd_serve(&args),
+        Some("router") => cmd_router(&args),
         Some("client") => cmd_client(&args),
         Some("warm") => cmd_warm(&args),
         Some("casestudy") => cmd_casestudy(&args),
@@ -97,13 +103,21 @@ subcommands:
             [--cache file.jsonl] [--max-conns N] [--cache-warm-entries N]
             [--cache-warm-mb N] [--cache-flush-every N] [--cache-flush-ms N]
             [--cache-compact-mb N] [--stdio] [--verbose]
+  router    --peers host:port,... [--port N] [--host H] [--verbose]
+            (rendezvous-routes plain clients across `union serve` peers)
   client    search|status|shutdown [--port N] [--host H] [--json]
-            [--retries N] [--no-retry]
+            [--peers host:port,...] [--retries N] [--no-retry]
             search: --workload <spec> [--arch <spec>] [--cost C] [--objective O]
                     [--effort E] [--seed N] [--constraints file.ucon]
                     [--mapping-only] [--progress]
+            (--peers routes to the signature's owner with failover;
+             status/shutdown broadcast to every peer)
   warm      --cache file.jsonl [--model <net>] [--arch <spec>] [--cost C]
             [--objective O] [--effort E] [--batch N] [--seed N] [--shards N]
+            [--sync-from host:port]   (import a peer's cache snapshot first;
+                                       with no --model, sync only)
+            or: --peers host:port,... [--model <net>] ...   (route each layer's
+                search to its owning peer instead of searching locally)
   casestudy <id> [--thorough] [--effort E]   (ids: `union casestudy --list`)
   validate  [--artifacts DIR]
   info      --arch <spec>
@@ -446,6 +460,24 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_router(args: &Args) -> Result<(), String> {
+    let peers = args.flag("peers").ok_or("router needs --peers host:port,...")?;
+    let config = RouterConfig {
+        host: args.flag_or("host", "127.0.0.1").to_string(),
+        port: parse_port_flag(args, 7416)?,
+        peers: parse_peers(peers)?,
+        verbose: args.switch("verbose"),
+    };
+    let n_peers = config.peers.len();
+    let peer_list = config.peers.join(", ");
+    let router = Router::bind(config)?;
+    let addr = router.local_addr()?;
+    eprintln!("union router: listening on {addr}, routing over {n_peers} peers ({peer_list})");
+    router.run()?;
+    eprintln!("union router: stopped (peers keep running; shut them down individually)");
+    Ok(())
+}
+
 /// Jitter seed for client retry backoff: wall-clock nanos xor pid, so
 /// a stampede of simultaneously-refused clients desynchronizes.
 fn retry_jitter_seed() -> u64 {
@@ -506,6 +538,22 @@ fn cmd_client(args: &Args) -> Result<(), String> {
     // surfaces the first overload immediately (scripting, tests)
     let retries = if args.switch("no-retry") { 0 } else { args.usize_flag("retries", 4)? };
     let json_output = args.switch("json");
+    // --peers: rendezvous-route a search to its owning peer (with
+    // failover down the ranked chain); broadcast status/shutdown
+    let mut routed = match args.flag("peers") {
+        Some(spec) => {
+            let cluster = Cluster::from_spec(spec)?;
+            if matches!(request, Request::Status { .. } | Request::Shutdown { .. }) {
+                return broadcast_to_peers(&cluster, &request, json_output);
+            }
+            let sig = match &request {
+                Request::Search { spec, .. } => job_signature(&resolve_spec(spec)?),
+                _ => unreachable!("only search reaches the routing path"),
+            };
+            Some((ClusterClient::new(cluster, retry_jitter_seed()), sig))
+        }
+        None => None,
+    };
     let mut rng = Rng::new(retry_jitter_seed());
     let mut attempt = 0usize;
     let response = loop {
@@ -525,7 +573,15 @@ fn cmd_client(args: &Args) -> Result<(), String> {
                 );
             }
         };
-        let response = service::client_request_with(&addr, &request, &mut on_event)?;
+        let response = match &mut routed {
+            Some((cc, sig)) => {
+                let (idx, doc) = cc.request_with(sig, &request, &mut on_event)?;
+                // stderr, so --mapping-only stdout stays byte-comparable
+                eprintln!("routed to peer {}", cc.member(idx));
+                doc
+            }
+            None => service::client_request_with(&addr, &request, &mut on_event)?,
+        };
         if response.str("type") == Some("overloaded") && attempt < retries {
             attempt += 1;
             let backoff = client_backoff(attempt, &mut rng);
@@ -576,6 +632,21 @@ fn cmd_client(args: &Args) -> Result<(), String> {
             );
             println!("mapping:");
             print!("{mapping}");
+            Ok(())
+        }
+        Some("status") if response.bool_field("router") == Some(true) => {
+            println!(
+                "router: forwarded={} failovers={}",
+                response.num("forwarded").unwrap_or(0.0),
+                response.num("failovers").unwrap_or(0.0),
+            );
+            for peer in response.arr("peers").unwrap_or(&[]) {
+                println!(
+                    "  peer {}: {}",
+                    peer.str("addr").unwrap_or("?"),
+                    if peer.bool_field("up") == Some(true) { "up" } else { "down" },
+                );
+            }
             Ok(())
         }
         Some("status") => {
@@ -642,8 +713,67 @@ fn cmd_client(args: &Args) -> Result<(), String> {
     }
 }
 
+/// `client status|shutdown --peers ...`: every member gets the request
+/// (routing would only reach one). A down peer is reported, not fatal —
+/// a broadcast shutdown must reach the survivors.
+fn broadcast_to_peers(
+    cluster: &Cluster,
+    request: &Request,
+    json_output: bool,
+) -> Result<(), String> {
+    let mut failures = 0usize;
+    for member in cluster.members() {
+        match service::client_request(member, request) {
+            Ok(doc) => {
+                if json_output {
+                    println!("{}", doc.to_line());
+                } else if doc.str("type") == Some("shutdown") {
+                    println!(
+                        "peer {member}: drained and shut down ({} requests, {} searched)",
+                        doc.num("requests").unwrap_or(0.0),
+                        doc.num("searched").unwrap_or(0.0),
+                    );
+                } else {
+                    println!(
+                        "peer {member}: requests={} searched={} cache_hits={} \
+                         cache_entries={} active={}",
+                        doc.num("requests").unwrap_or(0.0),
+                        doc.num("searched").unwrap_or(0.0),
+                        doc.num("cache_hits").unwrap_or(0.0),
+                        doc.num("cache_entries").unwrap_or(0.0),
+                        doc.num("active").unwrap_or(0.0),
+                    );
+                }
+            }
+            Err(e) => {
+                failures += 1;
+                println!("peer {member}: error: {e}");
+            }
+        }
+    }
+    if failures == cluster.len() {
+        return Err("no cluster member answered".into());
+    }
+    Ok(())
+}
+
 fn cmd_warm(args: &Args) -> Result<(), String> {
+    if let Some(peers_spec) = args.flag("peers") {
+        return cmd_warm_peers(args, peers_spec);
+    }
     let cache_path = args.flag("cache").ok_or("warm needs --cache <file>")?;
+    let mut cache = ResultCache::open(std::path::Path::new(cache_path))?;
+    if let Some(peer) = args.flag("sync-from") {
+        let s = sync_from_peer(peer, &mut cache)?;
+        println!(
+            "synced from {peer}: {} records received, {} imported, {} already held, {} skipped",
+            s.received, s.imported, s.duplicates, s.skipped
+        );
+        if args.flag("model").is_none() {
+            // sync-only invocation: the snapshot is the warm-up
+            return Ok(());
+        }
+    }
     let batch = args.usize_flag("batch", 1)? as u64;
     let graph = parse_network(args.flag_or("model", "resnet50"), batch)?;
     let arch = parse_arch(args.flag_or("arch", "edge"))?;
@@ -655,7 +785,6 @@ fn cmd_warm(args: &Args) -> Result<(), String> {
     let mut broker_config = parse_broker_flags(args)?;
     // the whole graph is submitted up front: queues must hold it
     broker_config.queue_capacity = broker_config.queue_capacity.max(graph.len());
-    let cache = ResultCache::open(std::path::Path::new(cache_path))?;
     println!(
         "warming {} from {} ({} layers in {} nodes) on {} | cost={} objective={} samples/job={}",
         cache_path,
@@ -704,6 +833,103 @@ fn cmd_warm(args: &Args) -> Result<(), String> {
         stats.cache_hits,
         entries,
         cache_stats.appended,
+    );
+    Ok(())
+}
+
+/// `warm --peers`: route every distinct layer search to its rendezvous
+/// owner so each peer's cache fills with exactly the signatures it
+/// serves. The dedup mirrors the broker's (canonical signature), so a
+/// ResNet's repeated shapes cost one remote search each.
+fn cmd_warm_peers(args: &Args, peers_spec: &str) -> Result<(), String> {
+    use std::collections::HashSet;
+    let cluster = Cluster::from_spec(peers_spec)?;
+    let batch = args.usize_flag("batch", 1)? as u64;
+    let graph = parse_network(args.flag_or("model", "resnet50"), batch)?;
+    let arch_spec = args.flag_or("arch", "edge").to_string();
+    let cost_spec = args.flag_or("cost", "analytical").to_string();
+    let objective = parse_objective_flag(args)?;
+    let constraints = match args.flag("constraints") {
+        Some(path) => {
+            std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?
+        }
+        None => String::new(),
+    };
+    let samples = parse_effort_flag(args)?.samples();
+    let seed = args.usize_flag("seed", 42)? as u64;
+    println!(
+        "warming {} peers from {} ({} layers in {} nodes) | arch={} cost={} objective={} samples/job={}",
+        cluster.len(),
+        graph.name,
+        graph.total_layers(),
+        graph.len(),
+        arch_spec,
+        cost_spec,
+        objective.name(),
+        samples,
+    );
+    let mut cc = ClusterClient::new(cluster, retry_jitter_seed());
+    let mut rng = Rng::new(retry_jitter_seed());
+    let mut seen: HashSet<String> = HashSet::new();
+    let (mut searched, mut coalesced, mut cached) = (0usize, 0usize, 0usize);
+    for workload in graph.workloads() {
+        let wire = workload_wire_spec(&workload)
+            .map_err(|e| format!("warm --peers cannot route '{}': {e}", workload.name))?;
+        let spec = JobSpec {
+            workload: wire,
+            arch: arch_spec.clone(),
+            cost: cost_spec.clone(),
+            objective,
+            samples,
+            seed,
+            constraints: constraints.clone(),
+        };
+        let sig = job_signature(&resolve_spec(&spec)?);
+        if !seen.insert(sig.clone()) {
+            continue;
+        }
+        let request = Request::Search { id: None, spec, progress: false };
+        let mut attempt = 0usize;
+        let (idx, doc) = loop {
+            let (idx, doc) = cc.request(&sig, &request)?;
+            if doc.str("type") == Some("overloaded") && attempt < 6 {
+                attempt += 1;
+                std::thread::sleep(client_backoff(attempt, &mut rng));
+                continue;
+            }
+            break (idx, doc);
+        };
+        match doc.str("type") {
+            Some("result") => {
+                if doc.bool_field("cached") == Some(true) {
+                    cached += 1;
+                } else if doc.bool_field("coalesced") == Some(true) {
+                    coalesced += 1;
+                } else {
+                    searched += 1;
+                }
+                if args.switch("verbose") {
+                    eprintln!("  {} -> peer {}", workload.name, cc.member(idx));
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "warming '{}' on {} failed: {}",
+                    workload.name,
+                    cc.member(idx),
+                    doc.str("message").unwrap_or("unexpected response"),
+                ))
+            }
+        }
+    }
+    println!(
+        "warm --peers: {} distinct jobs -> {} searched, {} coalesced, {} already cached \
+         across {} peers",
+        seen.len(),
+        searched,
+        coalesced,
+        cached,
+        cc.cluster().len(),
     );
     Ok(())
 }

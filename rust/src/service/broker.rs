@@ -451,6 +451,14 @@ impl Broker {
         (cache.len(), cache.stats())
     }
 
+    /// Snapshot every cache record as its serialized JSONL line — the
+    /// transfer unit a `sync` response streams to a peer (see
+    /// [`ResultCache::export_lines`]). Takes only the cache lock, so an
+    /// export never blocks submit bookkeeping or coalescing.
+    pub fn export_cache(&self) -> Vec<String> {
+        self.shared.cache.lock().unwrap().export_lines()
+    }
+
     /// Bump the `evaluate` counter (the evaluate path runs in the
     /// protocol layer, not on a shard).
     pub fn note_evaluate(&self) {

@@ -614,6 +614,69 @@ impl ResultCache {
         }
     }
 
+    fn read_line_raw(&mut self, offset: u64, len: u32) -> Option<String> {
+        let f = self.read.as_mut()?;
+        f.seek(SeekFrom::Start(offset)).ok()?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf).ok()?;
+        String::from_utf8(buf).ok()
+    }
+
+    /// Snapshot every record as its serialized JSONL line — the
+    /// **cache-shipping** transfer unit (a peer answering a `sync`
+    /// request streams exactly these lines). Pending records are
+    /// flushed first so the snapshot equals the compaction unit:
+    /// newest-record-per-signature, one line each. File-backed lines
+    /// are copied **verbatim** from disk (byte-identical to what a
+    /// local reopen would parse); an in-memory store serializes its
+    /// warm tier without perturbing recency or the hit counters.
+    pub fn export_lines(&mut self) -> Vec<String> {
+        self.flush();
+        if self.read.is_some() {
+            let mut locs: Vec<(u64, u32)> = self
+                .known
+                .values()
+                .filter_map(|loc| match *loc {
+                    Loc::Disk { offset, len } => Some((offset, len)),
+                    Loc::Pending => None, // drained by the flush above
+                })
+                .collect();
+            locs.sort_unstable_by_key(|&(offset, _)| offset);
+            locs.into_iter()
+                .filter_map(|(offset, len)| self.read_line_raw(offset, len))
+                .collect()
+        } else {
+            self.warm
+                .keys_mru_first()
+                .into_iter()
+                .filter_map(|sig| {
+                    self.warm.peek(&sig).map(|r| r.to_json(&sig).to_line())
+                })
+                .collect()
+        }
+    }
+
+    /// Import one snapshot record received from a peer. Returns
+    /// `Ok(true)` when the record was new, `Ok(false)` when the
+    /// signature was already held (identical jobs are deterministic, so
+    /// the resident record already answers it), `Err` when the document
+    /// is not a valid cache record — the sync client *skips and counts*
+    /// such records, mirroring the corruption tolerance of
+    /// [`ResultCache::open`].
+    pub fn import_record(&mut self, doc: &Json) -> Result<bool, String> {
+        let (sig, record) = CachedResult::from_json(doc)?;
+        if self.contains(&sig) {
+            return Ok(false);
+        }
+        self.insert(&sig, record);
+        Ok(true)
+    }
+
+    /// [`ResultCache::import_record`] from a raw JSONL line.
+    pub fn import_line(&mut self, line: &str) -> Result<bool, String> {
+        self.import_record(&Json::parse(line.trim())?)
+    }
+
     /// Size-triggered/explicit log compaction: flush, then rewrite the
     /// file keeping only live (indexed) lines, verbatim.
     pub fn compact(&mut self) {
@@ -905,6 +968,67 @@ mod tests {
         assert_eq!(c.len(), before_len);
         assert_eq!(c.get("a").unwrap(), sample_result(1), "records survive the rewrite");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn export_import_roundtrip_is_bit_identical() {
+        let src_path = tmp_path("export-src");
+        let dst_path = tmp_path("export-dst");
+        let mut src = ResultCache::open(&src_path).unwrap();
+        src.insert("a", sample_result(1));
+        src.insert("b", sample_result(2));
+        let lines = src.export_lines();
+        assert_eq!(lines.len(), 2, "export flushes pending records first");
+        // exported lines are the verbatim on-disk lines
+        let text = std::fs::read_to_string(&src_path).unwrap();
+        for line in &lines {
+            assert!(text.contains(line.as_str()), "exported line not verbatim: {line}");
+        }
+
+        let mut dst = ResultCache::open(&dst_path).unwrap();
+        for line in &lines {
+            assert_eq!(dst.import_line(line), Ok(true), "fresh record imports");
+        }
+        for line in &lines {
+            assert_eq!(dst.import_line(line), Ok(false), "duplicate import is a no-op");
+        }
+        dst.flush();
+        assert_eq!(dst.len(), 2);
+        let a = dst.get("a").unwrap();
+        assert_eq!(bits(&a), bits(&sample_result(1)), "imported record is bit-identical");
+        // a re-export of the destination ships the identical lines
+        let mut re = dst.export_lines();
+        let mut orig = lines.clone();
+        re.sort();
+        orig.sort();
+        assert_eq!(re, orig, "import → export is byte-stable");
+        std::fs::remove_file(&src_path).ok();
+        std::fs::remove_file(&dst_path).ok();
+    }
+
+    #[test]
+    fn import_of_bad_records_errs_without_panicking() {
+        let mut c = ResultCache::in_memory();
+        assert!(c.import_line("not json at all").is_err());
+        assert!(c.import_line("{\"sig\":\"orphan\",\"score\":1.5}").is_err());
+        assert!(c.import_line("{\"score\":1.5}").is_err(), "record without sig");
+        assert_eq!(c.len(), 0, "failed imports leave the store untouched");
+        // a good record still imports after the failures
+        let line = sample_result(3).to_json("ok").to_line();
+        assert_eq!(c.import_line(&line), Ok(true));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn in_memory_export_does_not_perturb_warm_stats() {
+        let mut c = ResultCache::in_memory();
+        c.insert("a", sample_result(1));
+        c.insert("b", sample_result(2));
+        let before = c.stats();
+        let lines = c.export_lines();
+        assert_eq!(lines.len(), 2);
+        let after = c.stats();
+        assert_eq!((before.warm_hits, before.misses), (after.warm_hits, after.misses));
     }
 
     #[test]

@@ -1,0 +1,897 @@
+//! Multi-process serving: coordinator-free routing across N `union
+//! serve` peers, snapshot shipping between their caches, and failover.
+//!
+//! **Routing** is client-side rendezvous (highest-random-weight)
+//! hashing over the canonical `union-job-v1` signature: every client
+//! scores each member against the signature with an FNV-1a mix and
+//! picks the highest — no coordinator, no routing table, and every
+//! client that knows the same member list picks the same owner. The
+//! full descending score order doubles as the failover chain: when the
+//! owner is down, the request goes to the next-ranked member, which is
+//! again the same member for every client. Rendezvous hashing keys the
+//! *pair* (member, signature), so membership changes re-key minimally:
+//! removing a member reassigns only the signatures it owned, and a
+//! joining member steals an expected 1/N of the space. The property
+//! tests in this module pin all three facts.
+//!
+//! **Cache shipping** rides the `sync` request: a peer streams its
+//! result cache as raw JSONL record lines — the same lines its disk
+//! file holds, the same compaction unit
+//! [`ResultCache::compact`](super::cache::ResultCache::compact)
+//! rewrites — between a version-carrying header and a `sync_end`
+//! trailer. [`sync_from_peer`] imports such a stream skip-not-panic: a
+//! mangled record is counted and dropped, a version mismatch rejects
+//! the whole snapshot before any record is read, and everything
+//! imported lands byte-identical because the donor ships its stored
+//! bytes verbatim.
+//!
+//! **Health** is per-peer up/down state with jittered exponential
+//! retry ([`peer_backoff`]): a failed request marks the peer down and
+//! routes on down the chain; a down peer is retried after its backoff
+//! (and probed by [`Router`]s periodically), so a restarted member
+//! resumes ownership without any client being told.
+//!
+//! [`Router`] wraps the same routing in a process, for clients that
+//! speak only the plain JSON-lines protocol. It is deliberately a thin
+//! thread-per-connection proxy, *not* a reactor: it holds no search
+//! state, does no coalescing, and forwards the owner's response line
+//! unmodified — the bounded-reactor invariant
+//! ([`ServerStats::conn_threads_spawned`](super::server::ServerStats))
+//! applies to [`Server`](super::server::Server), not here.
+
+use std::io::{BufRead, BufReader, ErrorKind, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::frontend::{Workload, WorkloadKind};
+use crate::util::rng::Rng;
+
+use super::broker::{fnv64, job_signature};
+use super::cache::{ResultCache, CACHE_VERSION};
+use super::proto::{Json, Request};
+use super::server::{client_request_with, error_response, resolve_spec};
+
+/// How long a router-side health probe waits for a connection.
+const PROBE_CONNECT_TIMEOUT: Duration = Duration::from_millis(500);
+/// How long a probe waits for the `status` answer once connected.
+const PROBE_IO_TIMEOUT: Duration = Duration::from_secs(2);
+/// How often the router's accept loop probes down peers.
+const PROBE_INTERVAL: Duration = Duration::from_millis(500);
+
+/// Rendezvous score of `member` for `sig`: FNV-1a over the member
+/// bytes, a `0x00` separator (so `("ab","c")` and `("a","bc")` cannot
+/// collide structurally), and the signature bytes. Pure function of the
+/// pair — the heart of coordinator-free agreement.
+fn weight(member: &str, sig: &str) -> u64 {
+    let mut buf = Vec::with_capacity(member.len() + 1 + sig.len());
+    buf.extend_from_slice(member.as_bytes());
+    buf.push(0);
+    buf.extend_from_slice(sig.as_bytes());
+    fnv64(&buf)
+}
+
+/// Parse a `--peers host:port,host:port,...` flag: trims entries,
+/// rejects empties, duplicates, and anything that is not `host:port`
+/// with a valid decimal port.
+pub fn parse_peers(spec: &str) -> Result<Vec<String>, String> {
+    let mut peers = Vec::new();
+    for raw in spec.split(',') {
+        let peer = raw.trim();
+        if peer.is_empty() {
+            return Err(format!("empty peer entry in '{spec}'"));
+        }
+        let (host, port) = peer
+            .rsplit_once(':')
+            .ok_or_else(|| format!("peer '{peer}' is not host:port"))?;
+        if host.is_empty() {
+            return Err(format!("peer '{peer}' has an empty host"));
+        }
+        port.parse::<u16>()
+            .map_err(|_| format!("peer '{peer}' has a bad port '{port}'"))?;
+        if peers.iter().any(|p| p == peer) {
+            return Err(format!("duplicate peer '{peer}'"));
+        }
+        peers.push(peer.to_string());
+    }
+    Ok(peers)
+}
+
+/// An immutable member list plus the pure rendezvous routing over it.
+/// Members are opaque strings (the property tests exploit that); the
+/// CLI always feeds it `host:port` addresses via [`parse_peers`].
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    members: Vec<String>,
+}
+
+impl Cluster {
+    /// A cluster over `members` (at least one, no duplicates, no
+    /// empties). Order is irrelevant to routing — see
+    /// [`Cluster::ranked`].
+    pub fn new(members: Vec<String>) -> Result<Cluster, String> {
+        if members.is_empty() {
+            return Err("a cluster needs at least one member".into());
+        }
+        for (i, m) in members.iter().enumerate() {
+            if m.is_empty() {
+                return Err("empty cluster member".into());
+            }
+            if members[..i].iter().any(|p| p == m) {
+                return Err(format!("duplicate cluster member '{m}'"));
+            }
+        }
+        Ok(Cluster { members })
+    }
+
+    /// [`Cluster::new`] from a `--peers` flag value.
+    pub fn from_spec(spec: &str) -> Result<Cluster, String> {
+        Cluster::new(parse_peers(spec)?)
+    }
+
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Member indices in descending rendezvous-score order for `sig`:
+    /// `ranked(sig)[0]` is the owner, the rest is the failover chain.
+    /// Ties (astronomically unlikely with distinct members) break on
+    /// the member string, so the order is a pure function of the
+    /// *set* of members — reordering the input list permutes the
+    /// returned indices but never the member sequence they name.
+    pub fn ranked(&self, sig: &str) -> Vec<usize> {
+        let mut scored: Vec<(u64, usize)> = self
+            .members
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (weight(m, sig), i))
+            .collect();
+        scored.sort_by(|a, b| {
+            b.0.cmp(&a.0).then_with(|| self.members[a.1].cmp(&self.members[b.1]))
+        });
+        scored.into_iter().map(|(_, i)| i).collect()
+    }
+
+    /// Index of the member that owns `sig` (the rendezvous maximum).
+    pub fn owner(&self, sig: &str) -> usize {
+        self.ranked(sig)[0]
+    }
+}
+
+/// Jittered exponential backoff before a down peer is retried:
+/// 250ms doubling to a 5s cap, plus up to half again of jitter so a
+/// fleet of clients does not retry a recovering peer in lockstep.
+pub fn peer_backoff(failures: u32, rng: &mut Rng) -> Duration {
+    let base = (250u64 << failures.saturating_sub(1).min(5)).min(5_000);
+    Duration::from_millis(base + rng.below(base as usize / 2 + 1) as u64)
+}
+
+/// Mutable health state for one member.
+#[derive(Debug, Clone)]
+struct PeerState {
+    up: bool,
+    /// Consecutive failures (drives the backoff exponent; reset on
+    /// success).
+    failures: u32,
+    /// When a down peer becomes eligible for another attempt.
+    retry_at: Option<Instant>,
+}
+
+impl PeerState {
+    fn new() -> PeerState {
+        PeerState { up: true, failures: 0, retry_at: None }
+    }
+
+    /// Eligible for a request right now (up, or down with backoff
+    /// expired).
+    fn available(&self, now: Instant) -> bool {
+        self.up || self.retry_at.map(|t| now >= t).unwrap_or(true)
+    }
+}
+
+/// Routing plus health tracking over a [`Cluster`]: picks each
+/// request's candidate order, sends it with failover, and remembers
+/// which peers are down so the next request skips them until their
+/// jittered retry is due. Single-owner by design (the CLI holds one,
+/// the [`Router`] wraps one in a mutex).
+pub struct ClusterClient {
+    cluster: Cluster,
+    peers: Vec<PeerState>,
+    rng: Rng,
+}
+
+impl ClusterClient {
+    /// `jitter_seed` decorrelates the retry backoff across client
+    /// processes (the CLI feeds it the same pid/time mix as its own
+    /// retry loop).
+    pub fn new(cluster: Cluster, jitter_seed: u64) -> ClusterClient {
+        let peers = vec![PeerState::new(); cluster.len()];
+        ClusterClient { cluster, peers, rng: Rng::new(jitter_seed | 1) }
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn member(&self, idx: usize) -> &str {
+        &self.cluster.members()[idx]
+    }
+
+    /// Is the peer currently believed up?
+    pub fn peer_up(&self, idx: usize) -> bool {
+        self.peers[idx].up
+    }
+
+    /// Candidate order for `sig`: the rendezvous ranking, with peers
+    /// that are down *and* still inside their retry backoff moved to
+    /// the back (in rank order). No peer is ever dropped — when
+    /// everything is marked down, the request still tries the whole
+    /// chain rather than failing without a connection attempt.
+    pub fn candidates(&self, sig: &str) -> Vec<usize> {
+        let now = Instant::now();
+        let ranked = self.cluster.ranked(sig);
+        let (ready, parked): (Vec<usize>, Vec<usize>) = ranked
+            .into_iter()
+            .partition(|&i| self.peers[i].available(now));
+        ready.into_iter().chain(parked).collect()
+    }
+
+    /// Record a successful exchange with peer `idx`.
+    pub fn mark_up(&mut self, idx: usize) {
+        self.peers[idx] = PeerState::new();
+    }
+
+    /// Record a failed exchange: the peer goes down (or stays down
+    /// with one more failure) and its next attempt is pushed out by
+    /// [`peer_backoff`].
+    pub fn mark_down(&mut self, idx: usize) {
+        let p = &mut self.peers[idx];
+        p.up = false;
+        p.failures += 1;
+        p.retry_at = Some(Instant::now() + peer_backoff(p.failures, &mut self.rng));
+    }
+
+    /// Send `request` to the owner of `sig`, failing over down the
+    /// rendezvous chain. Interleaved `progress` documents go to
+    /// `on_event`; returns the answering member's index and the final
+    /// response document.
+    pub fn request_with(
+        &mut self,
+        sig: &str,
+        request: &Request,
+        on_event: &mut dyn FnMut(&Json),
+    ) -> Result<(usize, Json), String> {
+        let mut last_err = String::new();
+        for idx in self.candidates(sig) {
+            match client_request_with(self.member(idx), request, on_event) {
+                Ok(doc) => {
+                    self.mark_up(idx);
+                    return Ok((idx, doc));
+                }
+                Err(e) => {
+                    last_err = format!("{}: {e}", self.member(idx));
+                    self.mark_down(idx);
+                }
+            }
+        }
+        Err(format!("no cluster member answered (last: {last_err})"))
+    }
+
+    /// [`ClusterClient::request_with`] without an event sink.
+    pub fn request(&mut self, sig: &str, request: &Request) -> Result<(usize, Json), String> {
+        self.request_with(sig, request, &mut |_| {})
+    }
+
+    /// Probe every down peer whose retry backoff has expired with a
+    /// timed `status` request; returns how many came back up.
+    pub fn probe_down_peers(&mut self) -> usize {
+        let now = Instant::now();
+        let due: Vec<usize> = (0..self.peers.len())
+            .filter(|&i| !self.peers[i].up && self.peers[i].available(now))
+            .collect();
+        let mut recovered = 0;
+        for idx in due {
+            if probe_peer(self.member(idx)).is_ok() {
+                self.mark_up(idx);
+                recovered += 1;
+            } else {
+                self.mark_down(idx);
+            }
+        }
+        recovered
+    }
+}
+
+/// One timed `status` round-trip: resolves `addr`, connects with a
+/// bounded timeout, and requires a parseable answer within
+/// [`PROBE_IO_TIMEOUT`]. Any failure means "still down".
+pub fn probe_peer(addr: &str) -> Result<Json, String> {
+    let sockaddr = addr
+        .to_socket_addrs()
+        .map_err(|e| format!("resolve {addr}: {e}"))?
+        .next()
+        .ok_or_else(|| format!("resolve {addr}: no addresses"))?;
+    let stream = TcpStream::connect_timeout(&sockaddr, PROBE_CONNECT_TIMEOUT)
+        .map_err(|e| format!("connect {addr}: {e}"))?;
+    stream.set_read_timeout(Some(PROBE_IO_TIMEOUT)).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(PROBE_IO_TIMEOUT)).map_err(|e| e.to_string())?;
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    writeln!(writer, "{}", Request::Status { id: None }.to_line())
+        .map_err(|e| e.to_string())?;
+    writer.flush().map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    if n == 0 {
+        return Err(format!("{addr} closed without answering"));
+    }
+    Json::parse(line.trim())
+}
+
+/// Outcome of one [`sync_from_peer`] import.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncStats {
+    /// Record lines the peer streamed (parseable ones).
+    pub received: usize,
+    /// Records imported into the local cache.
+    pub imported: usize,
+    /// Records the local cache already held (left untouched: the
+    /// local copy wins, so a re-sync is idempotent).
+    pub duplicates: usize,
+    /// Lines dropped as unparseable or structurally broken — counted,
+    /// never fatal (a corrupt donor line must not lose the rest of
+    /// the snapshot).
+    pub skipped: usize,
+}
+
+/// Warm `cache` from a peer's snapshot: send `sync`, validate the
+/// header (an incompatible [`CACHE_VERSION`] rejects the snapshot
+/// before any record is read), then import records until the
+/// `sync_end` trailer. The stream is framed by the trailer, not the
+/// header count, so a peer's blank or mangled lines cannot
+/// desynchronize the import.
+pub fn sync_from_peer(addr: &str, cache: &mut ResultCache) -> Result<SyncStats, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let mut writer = stream.try_clone().map_err(|e| e.to_string())?;
+    writeln!(writer, "{}", Request::Sync { id: None }.to_line())
+        .map_err(|e| e.to_string())?;
+    writer.flush().map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    // header
+    let header = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err(format!("{addr} closed before the sync header"));
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        break Json::parse(line.trim())?;
+    };
+    match header.str("type") {
+        Some("sync") => {}
+        Some("error") => {
+            let msg = header.str("message").unwrap_or("unknown error");
+            return Err(format!("{addr} refused sync: {msg}"));
+        }
+        other => return Err(format!("unexpected sync header type {other:?}")),
+    }
+    let version = header
+        .u64_field("version")
+        .ok_or("sync header is missing the cache version")?;
+    if version != CACHE_VERSION {
+        return Err(format!(
+            "peer snapshot is cache version {version}, this build speaks {CACHE_VERSION}; \
+             refusing the whole snapshot"
+        ));
+    }
+
+    // records until the trailer
+    let mut stats = SyncStats::default();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        if n == 0 {
+            return Err(format!("{addr} closed before sync_end"));
+        }
+        let text = line.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let doc = match Json::parse(text) {
+            Ok(d) => d,
+            Err(_) => {
+                stats.skipped += 1;
+                continue;
+            }
+        };
+        if doc.str("type") == Some("sync_end") {
+            break;
+        }
+        stats.received += 1;
+        match cache.import_record(&doc) {
+            Ok(true) => stats.imported += 1,
+            Ok(false) => stats.duplicates += 1,
+            Err(_) => stats.skipped += 1,
+        }
+    }
+    cache.flush();
+    Ok(stats)
+}
+
+/// Render a workload back into the wire spec [`resolve_spec`] parses,
+/// so `warm --peers` can route zoo/network layers to their owners.
+/// The signature is keyed on the problem shape, not the name, so a
+/// layer named `conv3_1` routed as `conv:...` lands on the same cache
+/// entry either way. Tensor contractions have no dimensional wire
+/// spec and must be warmed on the owning peer directly.
+pub fn workload_wire_spec(w: &Workload) -> Result<String, String> {
+    match &w.kind {
+        WorkloadKind::Gemm { m, n, k } => Ok(format!("gemm:{m}x{n}x{k}")),
+        WorkloadKind::Conv2d { n, k, c, x, y, r, s, stride } => {
+            Ok(format!("conv:{n},{k},{c},{x},{y},{r},{s},{stride}"))
+        }
+        WorkloadKind::Tc { .. } => Err(format!(
+            "workload '{}' is a tensor contraction with no wire spec; warm it on the \
+             owning peer with a local --cache",
+            w.name
+        )),
+    }
+}
+
+/// `union router` knobs.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Bind host (loopback by default, like the server).
+    pub host: String,
+    /// Bind port; 0 = ephemeral.
+    pub port: u16,
+    /// The member list to route over (from `--peers`).
+    pub peers: Vec<String>,
+    /// Log one line per forwarded request to stderr.
+    pub verbose: bool,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            host: "127.0.0.1".into(),
+            port: 7416,
+            peers: Vec::new(),
+            verbose: false,
+        }
+    }
+}
+
+/// State shared between the router's accept loop and its connection
+/// threads. The client mutex is held only for routing decisions and
+/// health bookkeeping — never across the forwarded network I/O, so a
+/// slow peer stalls its requester, not the router.
+struct RouterShared {
+    client: Mutex<ClusterClient>,
+    stop: AtomicBool,
+    forwarded: AtomicU64,
+    failovers: AtomicU64,
+    verbose: bool,
+}
+
+impl RouterShared {
+    fn status_response(&self, id: &Option<String>) -> Json {
+        let client = self.client.lock().unwrap();
+        let peers: Vec<Json> = (0..client.cluster().len())
+            .map(|i| {
+                Json::Obj(vec![
+                    ("addr".into(), Json::Str(client.member(i).to_string())),
+                    ("up".into(), Json::Bool(client.peer_up(i))),
+                ])
+            })
+            .collect();
+        let mut fields = vec![
+            ("type".into(), Json::Str("status".into())),
+            ("ok".into(), Json::Bool(true)),
+        ];
+        if let Some(id) = id {
+            fields.push(("id".into(), Json::Str(id.clone())));
+        }
+        fields.extend([
+            ("router".into(), Json::Bool(true)),
+            ("peers".into(), Json::Arr(peers)),
+            (
+                "forwarded".into(),
+                Json::Num(self.forwarded.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "failovers".into(),
+                Json::Num(self.failovers.load(Ordering::Relaxed) as f64),
+            ),
+        ]);
+        Json::Obj(fields)
+    }
+
+    /// Forward a routable request (`search`/`evaluate`) to the owner
+    /// of `sig`, failing over down the chain. Progress documents are
+    /// relayed as they arrive; the owner's final response document is
+    /// emitted unmodified.
+    fn forward(
+        &self,
+        sig: &str,
+        request: &Request,
+        emit: &mut dyn FnMut(&Json),
+    ) {
+        // routing decision under the lock; network I/O outside it
+        let (candidates, members): (Vec<usize>, Vec<String>) = {
+            let client = self.client.lock().unwrap();
+            let c = client.candidates(sig);
+            let m = c.iter().map(|&i| client.member(i).to_string()).collect();
+            (c, m)
+        };
+        let mut last_err = String::new();
+        for (pos, (&idx, addr)) in candidates.iter().zip(&members).enumerate() {
+            match client_request_with(addr, request, emit) {
+                Ok(doc) => {
+                    self.client.lock().unwrap().mark_up(idx);
+                    self.forwarded.fetch_add(1, Ordering::Relaxed);
+                    if pos > 0 {
+                        self.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                    if self.verbose {
+                        eprintln!("-> {addr} (rank {pos}) {sig}");
+                    }
+                    emit(&doc);
+                    return;
+                }
+                Err(e) => {
+                    last_err = format!("{addr}: {e}");
+                    self.client.lock().unwrap().mark_down(idx);
+                }
+            }
+        }
+        emit(&error_response(
+            &request.id().map(|s| s.to_string()),
+            &format!("no cluster member answered (last: {last_err})"),
+        ));
+    }
+
+    /// Handle one request line; returns true when the router should
+    /// stop accepting (a `shutdown` aimed at the router itself — the
+    /// peers keep running, shut them down individually).
+    fn route_line(&self, line: &str, emit: &mut dyn FnMut(&Json)) -> bool {
+        let req = match Request::parse(line) {
+            Ok(r) => r,
+            Err(e) => {
+                emit(&error_response(&None, &e));
+                return false;
+            }
+        };
+        let id = req.id().map(|s| s.to_string());
+        match &req {
+            Request::Status { .. } => {
+                emit(&self.status_response(&id));
+                false
+            }
+            Request::Shutdown { .. } => {
+                emit(&Json::Obj(vec![
+                    ("type".into(), Json::Str("shutdown".into())),
+                    ("ok".into(), Json::Bool(true)),
+                    ("router".into(), Json::Bool(true)),
+                ]));
+                self.stop.store(true, Ordering::SeqCst);
+                true
+            }
+            Request::Sync { .. } => {
+                emit(&error_response(
+                    &id,
+                    "sync streams one peer's cache; connect to that peer directly",
+                ));
+                false
+            }
+            Request::Search { spec, .. } | Request::Evaluate { spec, .. } => {
+                match resolve_spec(spec) {
+                    Ok(job) => self.forward(&job_signature(&job), &req, emit),
+                    Err(e) => emit(&error_response(&id, &e)),
+                }
+                false
+            }
+        }
+    }
+}
+
+/// A running `union router`: accepts plain JSON-lines clients and
+/// forwards each request to the rendezvous owner among its peers. See
+/// the module docs for what it deliberately does not do.
+pub struct Router {
+    listener: TcpListener,
+    shared: Arc<RouterShared>,
+}
+
+impl Router {
+    pub fn bind(config: RouterConfig) -> Result<Router, String> {
+        let cluster = Cluster::new(config.peers.clone())?;
+        let listener = TcpListener::bind((config.host.as_str(), config.port))
+            .map_err(|e| format!("bind {}:{}: {e}", config.host, config.port))?;
+        let jitter = std::process::id() as u64 ^ 0xD15E_A5ED;
+        Ok(Router {
+            listener,
+            shared: Arc::new(RouterShared {
+                client: Mutex::new(ClusterClient::new(cluster, jitter)),
+                stop: AtomicBool::new(false),
+                forwarded: AtomicU64::new(0),
+                failovers: AtomicU64::new(0),
+                verbose: config.verbose,
+            }),
+        })
+    }
+
+    /// The locally bound address (resolves port 0).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| e.to_string())
+    }
+
+    /// Accept loop: spawns one thread per connection (this proxy holds
+    /// no per-connection state worth multiplexing) and probes down
+    /// peers every [`PROBE_INTERVAL`]. Blocks until a client sends
+    /// `shutdown`.
+    pub fn run(self) -> Result<(), String> {
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listener set_nonblocking: {e}"))?;
+        let mut last_probe = Instant::now();
+        while !self.shared.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let shared = Arc::clone(&self.shared);
+                    std::thread::spawn(move || serve_router_conn(&shared, stream));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    eprintln!("router accept: {e}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+            if last_probe.elapsed() >= PROBE_INTERVAL {
+                last_probe = Instant::now();
+                let mut client = self.shared.client.lock().unwrap();
+                client.probe_down_peers();
+            }
+        }
+        Ok(())
+    }
+}
+
+fn serve_router_conn(shared: &RouterShared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let reader = match stream.try_clone() {
+        Ok(s) => BufReader::new(s),
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let mut io_err = false;
+        let stop = {
+            let mut emit = |j: &Json| {
+                if writeln!(writer, "{}", j.to_line()).is_err() || writer.flush().is_err() {
+                    io_err = true;
+                }
+            };
+            shared.route_line(line.trim(), &mut emit)
+        };
+        if stop || io_err {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::QuickCheck;
+
+    /// Distinct opaque member names for property tests.
+    fn gen_members(g: &mut crate::util::quickcheck::Gen, n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("m{}-{}", i, g.rng().below(1000))).collect()
+    }
+
+    fn gen_sig(g: &mut crate::util::quickcheck::Gen) -> String {
+        format!("union-job-v1|sig-{}", g.rng().next_u64())
+    }
+
+    #[test]
+    fn parse_peers_validates() {
+        assert_eq!(
+            parse_peers("a:1,b:2").unwrap(),
+            vec!["a:1".to_string(), "b:2".to_string()]
+        );
+        assert_eq!(parse_peers(" a:1 , b:2 ").unwrap().len(), 2);
+        assert!(parse_peers("").is_err());
+        assert!(parse_peers("a:1,,b:2").is_err());
+        assert!(parse_peers("a:1,a:1").is_err());
+        assert!(parse_peers("nocolon").is_err());
+        assert!(parse_peers(":7415").is_err());
+        assert!(parse_peers("a:notaport").is_err());
+        assert!(parse_peers("a:70000").is_err());
+        // IPv6-ish: rsplit keeps the last colon as the port split
+        assert!(parse_peers("::1:7415").is_ok());
+    }
+
+    #[test]
+    fn cluster_rejects_degenerate_member_lists() {
+        assert!(Cluster::new(vec![]).is_err());
+        assert!(Cluster::new(vec!["a".into(), "a".into()]).is_err());
+        assert!(Cluster::new(vec!["a".into(), String::new()]).is_err());
+        assert_eq!(Cluster::from_spec("a:1,b:2").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn single_member_owns_everything() {
+        QuickCheck::new().cases(100).check("single-member-identity", |g| {
+            let c = Cluster::new(vec![format!("only-{}", g.rng().next_u64())]).unwrap();
+            let sig = gen_sig(g);
+            if c.owner(&sig) == 0 && c.ranked(&sig) == vec![0] {
+                Ok(())
+            } else {
+                Err(format!("sig {sig} not owned by the only member"))
+            }
+        });
+    }
+
+    #[test]
+    fn ranking_is_permutation_invariant() {
+        QuickCheck::new().cases(200).check("permutation-invariance", |g| {
+            let n = g.range(1, 8);
+            let members = gen_members(g, n);
+            let mut shuffled = members.clone();
+            g.rng().shuffle(&mut shuffled);
+            let a = Cluster::new(members).unwrap();
+            let b = Cluster::new(shuffled).unwrap();
+            let sig = gen_sig(g);
+            // compare member *names* along the ranking, not indices
+            let order_a: Vec<&String> =
+                a.ranked(&sig).into_iter().map(|i| &a.members()[i]).collect();
+            let order_b: Vec<&String> =
+                b.ranked(&sig).into_iter().map(|i| &b.members()[i]).collect();
+            if order_a == order_b {
+                Ok(())
+            } else {
+                Err(format!("{order_a:?} != {order_b:?} for {sig}"))
+            }
+        });
+    }
+
+    #[test]
+    fn removing_a_member_rekeys_only_its_signatures() {
+        QuickCheck::new().cases(100).check("minimal-rekey-on-leave", |g| {
+            let n = g.range(2, 8);
+            let members = gen_members(g, n);
+            let full = Cluster::new(members.clone()).unwrap();
+            let gone = g.range(0, n - 1);
+            let rest: Vec<String> = members
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != gone)
+                .map(|(_, m)| m.clone())
+                .collect();
+            let reduced = Cluster::new(rest).unwrap();
+            for _ in 0..32 {
+                let sig = gen_sig(g);
+                let before = &members[full.owner(&sig)];
+                let after = &reduced.members()[reduced.owner(&sig)];
+                if before == &members[gone] {
+                    // its signatures must land on the old rank-2 member
+                    let chain = full.ranked(&sig);
+                    let second = &members[chain[1]];
+                    if after != second {
+                        return Err(format!(
+                            "sig of removed member went to {after}, expected {second}"
+                        ));
+                    }
+                } else if before != after {
+                    // everyone else's signatures must not move at all
+                    return Err(format!(
+                        "sig owned by surviving {before} moved to {after}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn joining_member_steals_about_one_nth() {
+        // statistical: over many signatures, a joiner takes roughly
+        // 1/(N+1) of the space and never disturbs a signature it does
+        // not take
+        let members = vec!["a:1".to_string(), "b:1".to_string(), "c:1".to_string()];
+        let before = Cluster::new(members.clone()).unwrap();
+        let mut grown = members.clone();
+        grown.push("d:1".to_string());
+        let after = Cluster::new(grown).unwrap();
+        let total = 4000;
+        let mut stolen = 0;
+        for i in 0..total {
+            let sig = format!("union-job-v1|steal-{i}");
+            let old = &members[before.owner(&sig)];
+            let new = &after.members()[after.owner(&sig)];
+            if new == "d:1" {
+                stolen += 1;
+            } else {
+                assert_eq!(old, new, "non-stolen signature moved");
+            }
+        }
+        let expected = total / 4;
+        assert!(
+            stolen > expected / 2 && stolen < expected * 2,
+            "joiner took {stolen}/{total}, expected ~{expected}"
+        );
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_jittered() {
+        let mut rng = Rng::new(7);
+        for failures in 1..20 {
+            let d = peer_backoff(failures, &mut rng);
+            let base = (250u64 << (failures - 1).min(5)).min(5_000);
+            assert!(d >= Duration::from_millis(base), "below base at {failures}");
+            assert!(
+                d <= Duration::from_millis(base + base / 2),
+                "jitter exceeds half the base at {failures}"
+            );
+        }
+    }
+
+    #[test]
+    fn candidates_never_drop_a_peer() {
+        let cluster = Cluster::new(vec!["a:1".into(), "b:1".into(), "c:1".into()]).unwrap();
+        let mut cc = ClusterClient::new(cluster, 42);
+        let sig = "union-job-v1|x";
+        let all = cc.candidates(sig);
+        assert_eq!(all.len(), 3);
+        assert_eq!(all, cc.cluster().ranked(sig));
+        // mark the owner down: it moves off the front but stays listed
+        cc.mark_down(all[0]);
+        let rerouted = cc.candidates(sig);
+        assert_eq!(rerouted.len(), 3);
+        assert_ne!(rerouted[0], all[0], "down owner keeps first slot");
+        assert!(rerouted.contains(&all[0]), "down peer dropped from chain");
+        // deterministic fallback: the new head is the old rank-2
+        assert_eq!(rerouted[0], all[1]);
+        // recovery restores the original order
+        cc.mark_up(all[0]);
+        assert_eq!(cc.candidates(sig), all);
+    }
+
+    #[test]
+    fn workload_wire_specs_roundtrip_through_the_parser() {
+        use crate::cli::parse_workload;
+        let gemm = Workload::gemm("fc1", 64, 32, 16);
+        let spec = workload_wire_spec(&gemm).unwrap();
+        assert_eq!(spec, "gemm:64x32x16");
+        assert_eq!(parse_workload(&spec).unwrap().kind, gemm.kind);
+        let conv = Workload::conv2d("conv3_1", 1, 8, 4, 14, 14, 3, 3, 1);
+        let spec = workload_wire_spec(&conv).unwrap();
+        assert_eq!(parse_workload(&spec).unwrap().kind, conv.kind);
+        let tc = Workload::tc("t", "abc,cd->abd", &[('a', 2), ('b', 2), ('c', 2), ('d', 2)]);
+        assert!(workload_wire_spec(&tc).is_err());
+    }
+}

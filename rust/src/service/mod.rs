@@ -23,7 +23,12 @@
 //!   `union warm`;
 //! * [`server`] — the bounded-reactor TCP server (one thread
 //!   multiplexing every connection), the `--stdio` scripting mode and
-//!   the blocking client helper.
+//!   the blocking client helper;
+//! * [`cluster`] — the multi-process layer: coordinator-free rendezvous
+//!   routing of signatures across N peers (client-side via `--peers`,
+//!   server-side via `union router`), `sync` cache shipping so a new or
+//!   restarted member warms from a neighbor's snapshot, and per-peer
+//!   health with deterministic failover to the next-ranked member.
 //!
 //! Determinism is the load-bearing property: a job's canonical
 //! signature is a pure function of the request, searches are
@@ -35,6 +40,7 @@
 
 pub mod broker;
 pub mod cache;
+pub mod cluster;
 pub mod proto;
 pub mod server;
 
@@ -43,6 +49,10 @@ pub use broker::{
     JobRequest, Submitted,
 };
 pub use cache::{CacheConfig, CacheStats, CachedResult, ResultCache, CACHE_VERSION};
+pub use cluster::{
+    parse_peers, peer_backoff, probe_peer, sync_from_peer, workload_wire_spec, Cluster,
+    ClusterClient, Router, RouterConfig, SyncStats,
+};
 pub use proto::{mapping_from_json, mapping_to_json, JobSpec, Json, Request};
 pub use server::{
     client_request, client_request_with, handle_line, handle_line_with, resolve_spec,

@@ -16,6 +16,7 @@
 //! {"type":"evaluate","workload":"gemm:8x8x8","arch":"fig5","mapping":[...]}
 //! {"type":"status"}
 //! {"type":"shutdown"}
+//! {"type":"sync"}
 //! ```
 //!
 //! `search` fields beyond `workload` are optional (defaults in
@@ -32,7 +33,11 @@
 //! `result` (score + summary metrics + the mapping as a nested array,
 //! losslessly decodable via [`mapping_from_json`]), a `status` answer
 //! mirrors the broker counters, and errors/backpressure come back as
-//! `error` / `overloaded` lines tied to the request `id`.
+//! `error` / `overloaded` lines tied to the request `id`. A `sync`
+//! answer is the one multi-line response: a `sync` header, then raw
+//! cache-record lines (which carry `"sig"` rather than `"type"` —
+//! they are the on-disk snapshot verbatim), then a `sync_end` trailer
+//! (see `docs/PROTOCOL.md`).
 //!
 //! Floating-point numbers are printed with Rust's shortest round-trip
 //! formatting, so a score that travels through the wire (or the
@@ -441,6 +446,13 @@ pub enum Request {
     Evaluate { id: Option<String>, spec: JobSpec, mapping: Json },
     Status { id: Option<String> },
     Shutdown { id: Option<String> },
+    /// Stream the peer's cache snapshot (cache shipping): the server
+    /// answers with a `{"type":"sync",...}` header carrying the cache
+    /// version and record count, then one raw cache-record line per
+    /// held signature, then a `{"type":"sync_end",...}` trailer. A
+    /// new or recovered cluster member imports the stream to warm from
+    /// a neighbor instead of re-searching.
+    Sync { id: Option<String> },
 }
 
 impl Request {
@@ -450,7 +462,8 @@ impl Request {
             Request::Search { id, .. }
             | Request::Evaluate { id, .. }
             | Request::Status { id }
-            | Request::Shutdown { id } => id.as_deref(),
+            | Request::Shutdown { id }
+            | Request::Sync { id } => id.as_deref(),
         }
     }
 
@@ -462,6 +475,7 @@ impl Request {
         match typ {
             "status" => Ok(Request::Status { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
+            "sync" => Ok(Request::Sync { id }),
             "search" => Ok(Request::Search {
                 id,
                 spec: job_spec(&doc)?,
@@ -475,7 +489,7 @@ impl Request {
                 Ok(Request::Evaluate { id, spec: job_spec(&doc)?, mapping })
             }
             other => Err(format!(
-                "unknown request type '{other}' (search, evaluate, status, shutdown)"
+                "unknown request type '{other}' (search, evaluate, status, shutdown, sync)"
             )),
         }
     }
@@ -496,6 +510,10 @@ impl Request {
             }
             Request::Shutdown { id } => {
                 fields.push(("type".into(), Json::Str("shutdown".into())));
+                push_id(&mut fields, id);
+            }
+            Request::Sync { id } => {
+                fields.push(("type".into(), Json::Str("sync".into())));
                 push_id(&mut fields, id);
             }
             Request::Search { id, spec, progress } => {
@@ -640,6 +658,8 @@ mod tests {
         for req in [
             Request::Status { id: Some("s1".into()) },
             Request::Shutdown { id: None },
+            Request::Sync { id: Some("y1".into()) },
+            Request::Sync { id: None },
             Request::Search { id: Some("r1".into()), spec: spec.clone(), progress: false },
             Request::Search { id: Some("r2".into()), spec: spec.clone(), progress: true },
         ] {

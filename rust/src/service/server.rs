@@ -17,9 +17,11 @@
 //! complete). `search` goes through the broker (cache → coalesce →
 //! shard) and may opt into interleaved `progress` events; `evaluate` is
 //! served inline — scoring one known mapping costs microseconds,
-//! queueing it would cost more than running it; `shutdown` drains the
-//! broker (every queued job finishes and is answered), replies, flushes
-//! all connections, and stops the reactor.
+//! queueing it would cost more than running it; `sync` snapshots the
+//! result cache and streams it as raw record lines between a header and
+//! a `sync_end` trailer (the cache-shipping path peers warm from);
+//! `shutdown` drains the broker (every queued job finishes and is
+//! answered), replies, flushes all connections, and stops the reactor.
 
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
@@ -149,7 +151,7 @@ fn id_field(fields: &mut Vec<(String, Json)>, id: &Option<String>) {
     }
 }
 
-fn error_response(id: &Option<String>, message: &str) -> Json {
+pub(crate) fn error_response(id: &Option<String>, message: &str) -> Json {
     let mut fields = vec![
         ("type".into(), Json::Str("error".into())),
         ("ok".into(), Json::Bool(false)),
@@ -228,6 +230,34 @@ fn overloaded_response(id: &Option<String>, shard: usize, depth: usize) -> Json 
             Json::Str("queue full; retry with backoff".into()),
         ),
     ]);
+    Json::Obj(fields)
+}
+
+/// Header of the one multi-line response in the protocol: announces
+/// that `records` raw cache-record lines follow, then a `sync_end`
+/// trailer. Carries the cache file version so an importer can refuse a
+/// snapshot it does not understand before reading any records.
+fn sync_header_response(id: &Option<String>, records: usize) -> Json {
+    let mut fields = vec![
+        ("type".into(), Json::Str("sync".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.push(("version".into(), Json::Num(super::cache::CACHE_VERSION as f64)));
+    fields.push(("records".into(), Json::Num(records as f64)));
+    Json::Obj(fields)
+}
+
+/// Trailer closing a `sync` stream; importers read until they see it
+/// rather than trusting the header count (a peer's blank or mangled
+/// lines must not desynchronize the stream).
+fn sync_end_response(id: &Option<String>, records: usize) -> Json {
+    let mut fields = vec![
+        ("type".into(), Json::Str("sync_end".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.push(("records".into(), Json::Num(records as f64)));
     Json::Obj(fields)
 }
 
@@ -472,6 +502,20 @@ pub fn handle_line_with(
         Request::Evaluate { spec, mapping, .. } => {
             (evaluate_response(broker, &id, &spec, &mapping), false)
         }
+        Request::Sync { .. } => {
+            // the blocking path re-parses the exported lines so the
+            // header's `records` matches what actually gets emitted
+            let docs: Vec<Json> = broker
+                .export_cache()
+                .iter()
+                .filter_map(|l| Json::parse(l.trim()).ok())
+                .collect();
+            emit(&sync_header_response(&id, docs.len()));
+            for doc in &docs {
+                emit(doc);
+            }
+            (sync_end_response(&id, docs.len()), false)
+        }
     }
 }
 
@@ -482,6 +526,10 @@ enum Queued {
     Ready(Json),
     /// A search the broker still owes an answer for.
     Search(PendingSearch),
+    /// A pre-serialized line shipped verbatim (cache records inside a
+    /// `sync` stream — forwarding the stored bytes untouched is what
+    /// keeps a shipped snapshot bit-identical to the donor's disk file).
+    Raw(String),
 }
 
 /// One multiplexed connection: a non-blocking socket plus its buffers
@@ -622,6 +670,19 @@ impl Conn {
                     broker, &id, &spec, &mapping,
                 )));
             }
+            Request::Sync { .. } => {
+                // snapshot under the cache lock, stream at the
+                // connection's own pace: header, the stored record
+                // lines verbatim, then the trailer
+                let lines = broker.export_cache();
+                self.queue
+                    .push_back(Queued::Ready(sync_header_response(&id, lines.len())));
+                let n = lines.len();
+                for line in lines {
+                    self.queue.push_back(Queued::Raw(line));
+                }
+                self.queue.push_back(Queued::Ready(sync_end_response(&id, n)));
+            }
         }
     }
 
@@ -631,6 +692,12 @@ impl Conn {
             match front {
                 Queued::Ready(json) => {
                     push_line(&mut self.wbuf, json);
+                    self.queue.pop_front();
+                    progressed = true;
+                }
+                Queued::Raw(line) => {
+                    self.wbuf.extend_from_slice(line.as_bytes());
+                    self.wbuf.push(b'\n');
                     self.queue.pop_front();
                     progressed = true;
                 }

@@ -95,6 +95,14 @@ impl<V> LruCache<V> {
         self.map.contains_key(key)
     }
 
+    /// Look up `key` **without** touching recency or the hit/miss
+    /// counters — for introspection paths (cache export/snapshot) that
+    /// must not perturb the eviction order or the gated hit-rate stats.
+    pub fn peek(&self, key: &str) -> Option<&V> {
+        let slot = *self.map.get(key)?;
+        self.slots[slot].value.as_ref()
+    }
+
     /// Look up `key`, promoting it to most-recently-used on a hit.
     pub fn get(&mut self, key: &str) -> Option<&V> {
         match self.map.get(key).copied() {
@@ -304,6 +312,18 @@ mod tests {
         // contains() leaves the counters alone
         assert!(c.contains("a"));
         assert_eq!(c.stats(), s);
+    }
+
+    #[test]
+    fn peek_leaves_recency_and_counters_alone() {
+        let mut c: LruCache<u8> = LruCache::new(3, usize::MAX);
+        c.insert("a", 1, 1);
+        c.insert("b", 2, 1);
+        let before = c.stats();
+        assert_eq!(c.peek("a"), Some(&1));
+        assert_eq!(c.peek("nope"), None);
+        assert_eq!(c.stats(), before, "peek must not count as hit/miss");
+        assert_eq!(c.keys_mru_first(), vec!["b", "a"], "peek must not promote");
     }
 
     #[test]

@@ -1,0 +1,336 @@
+//! End-to-end tests for the multi-process serving layer: rendezvous
+//! routing with failover, `sync` cache shipping between live peers,
+//! corruption/version handling on import, and the `union router`
+//! proxy. The pure rendezvous-hash properties (permutation
+//! invariance, minimal re-keying, ~1/N steal) live as property tests
+//! inside `service/cluster.rs`; these tests exercise real sockets.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::thread;
+
+use union::mappers::Objective;
+use union::service::{
+    client_request, job_signature, mapping_from_json, resolve_spec, sync_from_peer,
+    BrokerConfig, BrokerStats, Cluster, ClusterClient, JobSpec, Request, ResultCache, Router,
+    RouterConfig, ServeConfig, Server, CACHE_VERSION,
+};
+
+fn tmp_path(tag: &str) -> PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!(
+        "union-cluster-{tag}-{}-{:?}",
+        std::process::id(),
+        thread::current().id()
+    ));
+    p
+}
+
+fn search_spec(workload: &str, samples: usize, seed: u64) -> JobSpec {
+    JobSpec {
+        workload: workload.into(),
+        arch: "edge".into(),
+        cost: "analytical".into(),
+        objective: Objective::Edp,
+        samples,
+        seed,
+        constraints: String::new(),
+    }
+}
+
+type Daemon = thread::JoinHandle<Result<BrokerStats, String>>;
+
+fn start_server(cache: Option<PathBuf>) -> (String, Daemon) {
+    let server = Server::bind(ServeConfig {
+        port: 0,
+        cache,
+        broker: BrokerConfig { shards: 2, ..BrokerConfig::default() },
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let daemon = thread::spawn(move || server.run());
+    (addr, daemon)
+}
+
+fn shutdown(addr: &str, daemon: Daemon) -> BrokerStats {
+    client_request(addr, &Request::Shutdown { id: None }).unwrap();
+    daemon.join().unwrap().unwrap()
+}
+
+/// An address that accepts nothing: bind an ephemeral listener, note
+/// its port, drop it. Connections to it fail fast with refused.
+fn dead_addr() -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    addr
+}
+
+#[test]
+fn sync_ships_cache_between_peers_bit_identically() {
+    let (addr, daemon) = start_server(None);
+    let specs = [search_spec("gemm:16x16x16", 60, 7), search_spec("gemm:24x16x8", 60, 9)];
+    let mut served = Vec::new();
+    for spec in &specs {
+        let doc = client_request(
+            &addr,
+            &Request::Search { id: None, spec: spec.clone(), progress: false },
+        )
+        .unwrap();
+        assert_eq!(doc.str("type"), Some("result"), "{}", doc.to_line());
+        served.push(doc);
+    }
+
+    // a fresh peer warms itself entirely from the snapshot
+    let mut local = ResultCache::in_memory();
+    let stats = sync_from_peer(&addr, &mut local).unwrap();
+    assert_eq!(stats.received, 2);
+    assert_eq!(stats.imported, 2);
+    assert_eq!((stats.duplicates, stats.skipped), (0, 0));
+    assert_eq!(local.len(), 2);
+    for (spec, doc) in specs.iter().zip(&served) {
+        let sig = job_signature(&resolve_spec(spec).unwrap());
+        let record = local.get(&sig).expect("synced record present");
+        assert_eq!(
+            record.score.to_bits(),
+            doc.num("score").unwrap().to_bits(),
+            "shipped record must be bit-identical to the served result"
+        );
+        let served_mapping = mapping_from_json(doc.get("mapping").unwrap()).unwrap();
+        assert_eq!(record.mapping, served_mapping);
+    }
+
+    // re-sync is idempotent: everything is a duplicate, nothing changes
+    let again = sync_from_peer(&addr, &mut local).unwrap();
+    assert_eq!(again.imported, 0);
+    assert_eq!(again.duplicates, 2);
+    assert_eq!(local.len(), 2);
+
+    shutdown(&addr, daemon);
+}
+
+/// A scripted peer that answers one `sync` with exactly the given
+/// header version and record lines (optionally dropping the
+/// connection without a trailer).
+fn fake_sync_peer(version: u64, lines: Vec<String>, send_end: bool) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap(); // the sync request
+        let mut w = stream;
+        writeln!(
+            w,
+            "{{\"type\":\"sync\",\"ok\":true,\"version\":{version},\"records\":{}}}",
+            lines.len()
+        )
+        .unwrap();
+        for l in &lines {
+            writeln!(w, "{l}").unwrap();
+        }
+        if send_end {
+            writeln!(w, "{{\"type\":\"sync_end\",\"ok\":true,\"records\":{}}}", lines.len())
+                .unwrap();
+        }
+    });
+    addr
+}
+
+#[test]
+fn sync_rejects_version_mismatch_before_any_import() {
+    let addr = fake_sync_peer(99, vec!["{\"sig\":\"x\"}".into()], true);
+    let mut cache = ResultCache::in_memory();
+    let err = sync_from_peer(&addr, &mut cache).unwrap_err();
+    assert!(err.contains("version 99"), "unexpected error: {err}");
+    assert_eq!(cache.len(), 0, "no record may land from a rejected snapshot");
+}
+
+#[test]
+fn sync_skips_corrupt_records_without_panicking() {
+    let addr = fake_sync_peer(
+        CACHE_VERSION,
+        vec![
+            "this is not json".into(),
+            "{\"sig\":\"x\"}".into(), // parseable but structurally broken
+            String::new(),            // blank line: ignored entirely
+        ],
+        true,
+    );
+    let mut cache = ResultCache::in_memory();
+    let stats = sync_from_peer(&addr, &mut cache).unwrap();
+    assert_eq!(stats.imported, 0);
+    assert_eq!(stats.skipped, 2, "both broken lines counted, neither fatal");
+    assert_eq!(cache.len(), 0);
+}
+
+#[test]
+fn sync_errors_when_the_peer_dies_mid_stream() {
+    let addr = fake_sync_peer(CACHE_VERSION, vec!["junk".into()], false);
+    let mut cache = ResultCache::in_memory();
+    let err = sync_from_peer(&addr, &mut cache).unwrap_err();
+    assert!(err.contains("sync_end"), "unexpected error: {err}");
+}
+
+#[test]
+fn failover_reroutes_to_next_ranked_member_bit_identically() {
+    let (live, daemon) = start_server(None);
+    let dead = dead_addr();
+    let cluster = Cluster::new(vec![live.clone(), dead.clone()]).unwrap();
+    let dead_idx = cluster.members().iter().position(|m| m == &dead).unwrap();
+    let live_idx = 1 - dead_idx;
+
+    // find a job the *dead* member owns, so the request must fail over
+    let spec = (1..=64u64)
+        .map(|seed| search_spec("gemm:16x16x16", 60, seed))
+        .find(|s| {
+            cluster.owner(&job_signature(&resolve_spec(s).unwrap())) == dead_idx
+        })
+        .expect("some seed in 1..=64 hashes to the dead member");
+    let sig = job_signature(&resolve_spec(&spec).unwrap());
+
+    let mut cc = ClusterClient::new(cluster, 0xFA11);
+    let request = Request::Search { id: None, spec: spec.clone(), progress: false };
+    let (answered_by, doc) = cc.request(&sig, &request).unwrap();
+    assert_eq!(answered_by, live_idx, "the live member must answer");
+    assert_eq!(doc.str("type"), Some("result"), "{}", doc.to_line());
+    assert!(!cc.peer_up(dead_idx), "the dead owner is marked down");
+    assert!(cc.peer_up(live_idx));
+
+    // the re-routed answer is still byte-identical to a direct run
+    let mapping = mapping_from_json(doc.get("mapping").unwrap()).unwrap();
+    let job = resolve_spec(&spec).unwrap();
+    let direct = {
+        use union::network::{NetworkOrchestrator, OrchestratorConfig, WorkloadGraph};
+        let graph = WorkloadGraph::from_workloads("direct", vec![job.workload.clone()]);
+        let orch = NetworkOrchestrator::with_config(
+            &job.arch,
+            job.cost.model(),
+            &job.constraints,
+            OrchestratorConfig {
+                objective: job.objective,
+                samples: job.samples,
+                seed: job.seed,
+                threads: Some(1),
+            },
+        );
+        orch.run(&graph).unwrap()
+    };
+    let direct_best = &direct.layers[0].result;
+    assert_eq!(mapping, direct_best.mapping, "failover changed the mapping");
+    assert_eq!(
+        doc.num("score").unwrap().to_bits(),
+        direct_best.score.to_bits(),
+        "failover changed the score bits"
+    );
+
+    shutdown(&live, daemon);
+}
+
+#[test]
+fn restarted_member_rewarms_from_a_neighbor_snapshot() {
+    // peer A accumulates results; a "restarted" peer B starts with an
+    // empty cache file, imports A's snapshot, and then serves the same
+    // jobs as warm hits without searching
+    let (a_addr, a_daemon) = start_server(None);
+    let specs = [search_spec("gemm:32x16x8", 60, 3), search_spec("gemm:8x8x8", 60, 5)];
+    let mut scores = Vec::new();
+    for spec in &specs {
+        let doc = client_request(
+            &a_addr,
+            &Request::Search { id: None, spec: spec.clone(), progress: false },
+        )
+        .unwrap();
+        scores.push(doc.num("score").unwrap().to_bits());
+    }
+
+    let b_cache = tmp_path("rewarm");
+    let _ = std::fs::remove_file(&b_cache);
+    {
+        let mut cache = ResultCache::open(&b_cache).unwrap();
+        let stats = sync_from_peer(&a_addr, &mut cache).unwrap();
+        assert_eq!(stats.imported, 2);
+    } // drop flushes the snapshot to disk
+
+    let (b_addr, b_daemon) = start_server(Some(b_cache.clone()));
+    for (spec, bits) in specs.iter().zip(&scores) {
+        let doc = client_request(
+            &b_addr,
+            &Request::Search { id: None, spec: spec.clone(), progress: false },
+        )
+        .unwrap();
+        assert_eq!(doc.bool_field("cached"), Some(true), "{}", doc.to_line());
+        assert_eq!(doc.num("score").unwrap().to_bits(), *bits);
+    }
+    let b_stats = shutdown(&b_addr, b_daemon);
+    assert_eq!(b_stats.searched, 0, "a synced member must not re-search");
+    assert_eq!(b_stats.cache_hits, 2);
+
+    shutdown(&a_addr, a_daemon);
+    let _ = std::fs::remove_file(&b_cache);
+}
+
+#[test]
+fn router_forwards_to_owners_and_reports_status() {
+    let (a_addr, a_daemon) = start_server(None);
+    let (b_addr, b_daemon) = start_server(None);
+    let peers = vec![a_addr.clone(), b_addr.clone()];
+    let cluster = Cluster::new(peers.clone()).unwrap();
+
+    let router = Router::bind(RouterConfig {
+        port: 0,
+        peers,
+        ..RouterConfig::default()
+    })
+    .unwrap();
+    let router_addr = router.local_addr().unwrap().to_string();
+    let router_thread = thread::spawn(move || router.run());
+
+    // a dumb client speaks plain search to the router; the owner answers
+    let spec = search_spec("gemm:16x24x16", 60, 2);
+    let doc = client_request(
+        &router_addr,
+        &Request::Search { id: None, spec: spec.clone(), progress: false },
+    )
+    .unwrap();
+    assert_eq!(doc.str("type"), Some("result"), "{}", doc.to_line());
+
+    // the owner now holds the result: asking it directly is a cache hit
+    // with the same bits (the router forwarded, not re-searched)
+    let sig = job_signature(&resolve_spec(&spec).unwrap());
+    let owner = &cluster.members()[cluster.owner(&sig)];
+    let again = client_request(
+        owner,
+        &Request::Search { id: None, spec: spec.clone(), progress: false },
+    )
+    .unwrap();
+    assert_eq!(again.bool_field("cached"), Some(true), "{}", again.to_line());
+    assert_eq!(
+        again.num("score").unwrap().to_bits(),
+        doc.num("score").unwrap().to_bits()
+    );
+
+    // router status is its own shape: per-peer health plus counters
+    let status = client_request(&router_addr, &Request::Status { id: None }).unwrap();
+    assert_eq!(status.bool_field("router"), Some(true));
+    assert_eq!(status.arr("peers").unwrap().len(), 2);
+    assert!(status.num("forwarded").unwrap() >= 1.0);
+    assert_eq!(status.num("failovers").unwrap(), 0.0);
+
+    // sync must not be proxied: snapshots come from a specific peer
+    let refused = client_request(&router_addr, &Request::Sync { id: None }).unwrap();
+    assert_eq!(refused.str("type"), Some("error"), "{}", refused.to_line());
+
+    // shutdown stops the router only; both peers keep serving
+    let ack = client_request(&router_addr, &Request::Shutdown { id: None }).unwrap();
+    assert_eq!(ack.bool_field("router"), Some(true));
+    router_thread.join().unwrap().unwrap();
+    assert!(client_request(&a_addr, &Request::Status { id: None }).is_ok());
+    assert!(client_request(&b_addr, &Request::Status { id: None }).is_ok());
+
+    shutdown(&a_addr, a_daemon);
+    shutdown(&b_addr, b_daemon);
+}

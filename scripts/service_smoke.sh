@@ -9,7 +9,11 @@
 #   3. N concurrent clients are all answered by the single-threaded
 #      reactor, one of them streaming anytime progress events;
 #   4. status reports exactly one search per distinct job;
-#   5. shutdown drains gracefully and the server process exits 0.
+#   5. shutdown drains gracefully and the server process exits 0;
+#   6. a 2-peer cluster answers rendezvous-routed (`--peers`) and
+#      router-proxied requests byte-identically to the direct answer,
+#      keeps answering after one peer is killed (failover), and ships
+#      its cache to a fresh file via `warm --sync-from`.
 #
 # Used by CI's service-smoke job; runnable locally the same way:
 #   scripts/service_smoke.sh
@@ -119,5 +123,76 @@ trap - EXIT
 # the cache file survives the daemon and holds the one record
 test -s "$CACHE"
 grep -q 'union_result_cache' "$CACHE"
+
+# ---- multi-process cluster: routing, router, failover, sync ----
+
+free_port() {
+    python3 -c 'import socket; s=socket.socket(); s.bind(("127.0.0.1",0)); print(s.getsockname()[1]); s.close()'
+}
+
+wait_ready() { # wait_ready <port> <pid>
+    local port=$1 pid=$2 i
+    for i in $(seq 1 50); do
+        if "$BIN" client status --port "$port" >/dev/null 2>&1; then
+            return 0
+        fi
+        if ! kill -0 "$pid" 2>/dev/null; then
+            echo "ERROR: process $pid exited before accepting connections" >&2
+            return 1
+        fi
+        sleep 0.2
+    done
+    echo "ERROR: port $port never became ready" >&2
+    return 1
+}
+
+echo "== cluster: starting two peers =="
+PORT_A=$(free_port)
+PORT_B=$(free_port)
+CACHE_A="$OUT/cache_a.jsonl"
+CACHE_B="$OUT/cache_b.jsonl"
+rm -f "$CACHE_A" "$CACHE_B"
+"$BIN" serve --port "$PORT_A" --cache "$CACHE_A" --shards 2 &
+PID_A=$!
+"$BIN" serve --port "$PORT_B" --cache "$CACHE_B" --shards 2 &
+PID_B=$!
+trap 'kill "$PID_A" "$PID_B" 2>/dev/null || true' EXIT
+wait_ready "$PORT_A" "$PID_A"
+wait_ready "$PORT_B" "$PID_B"
+PEERS="127.0.0.1:$PORT_A,127.0.0.1:$PORT_B"
+
+echo "== routed answer must equal the direct answer =="
+"$BIN" client search "${JOB[@]}" --peers "$PEERS" --mapping-only > "$OUT/routed_mapping.txt"
+cmp "$OUT/direct_mapping.txt" "$OUT/routed_mapping.txt"
+
+echo "== same answer through the router proxy =="
+ROUTER_PORT=$(free_port)
+"$BIN" router --peers "$PEERS" --port "$ROUTER_PORT" &
+PID_R=$!
+wait_ready "$ROUTER_PORT" "$PID_R"
+"$BIN" client search "${JOB[@]}" --port "$ROUTER_PORT" --mapping-only > "$OUT/router_mapping.txt"
+cmp "$OUT/direct_mapping.txt" "$OUT/router_mapping.txt"
+# router shutdown stops only the proxy; both peers keep serving
+"$BIN" client shutdown --port "$ROUTER_PORT"
+wait "$PID_R"
+
+echo "== failover: kill one peer, the survivor answers byte-identically =="
+kill "$PID_B" 2>/dev/null || true
+wait "$PID_B" 2>/dev/null || true
+"$BIN" client search "${JOB[@]}" --peers "$PEERS" --mapping-only > "$OUT/failover_mapping.txt"
+cmp "$OUT/direct_mapping.txt" "$OUT/failover_mapping.txt"
+
+echo "== snapshot sync: warm a fresh cache from the survivor =="
+SYNCED="$OUT/cache_synced.jsonl"
+rm -f "$SYNCED"
+"$BIN" warm --cache "$SYNCED" --sync-from "127.0.0.1:$PORT_A" | tee "$OUT/sync.txt"
+grep -q 'imported' "$OUT/sync.txt"
+test -s "$SYNCED"
+grep -q 'union_result_cache' "$SYNCED"
+
+echo "== broadcast shutdown reaches the survivor despite the dead peer =="
+"$BIN" client shutdown --peers "$PEERS" | tee "$OUT/cluster_shutdown.txt"
+wait "$PID_A"
+trap - EXIT
 
 echo "service smoke OK"
