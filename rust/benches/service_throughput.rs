@@ -72,6 +72,11 @@ fn config() -> BrokerConfig {
         queue_capacity: DISTINCT * REPEAT,
         job_threads: Some(1),
         paused: true,
+        // transfer-guided warm starts would let the distinct GEMM
+        // shapes seed each other, changing per-job search work between
+        // runs of this bench; keep it measuring pure service overheads
+        // (the transfer path has its own gated bench, transfer_warm)
+        transfer: false,
     }
 }
 

@@ -23,10 +23,13 @@
 //! at 1 and N threads; see `tests/engine_determinism.rs`) lifts to
 //! whole sessions unchanged.
 
+use std::rc::Rc;
+
 use crate::cost::{CostModel, FootprintMemo};
 use crate::mappers::{Objective, SearchResult};
 use crate::mapping::Mapping;
 use crate::mapspace::MapSpace;
+use crate::transfer::{RankedSource, SurrogateRanker};
 
 use super::memo::EvalMemo;
 use super::{CandidateSource, Engine, EngineConfig, EngineStats};
@@ -105,6 +108,35 @@ impl<'m> Session<'m> {
     /// remain thread-count-invariant — but note that seeding, like any
     /// extra batch, can legitimately change (only improve or tie) the
     /// winner relative to an unseeded run.
+    /// [`Session::run_job_seeded`] with **transfer guidance**: when a
+    /// `ranker` is present, every source is wrapped in a
+    /// [`RankedSource`] that reorders its batches by the surrogate's
+    /// predicted cost (nearest cheap prior winner first), so
+    /// lower-bound pruning fires against a strong incumbent from the
+    /// earliest batches. The ranker changes candidate *order* only,
+    /// never the candidate set or its legality checks; with `ranker =
+    /// None` and no seeds this is exactly [`Session::run_job`] — the
+    /// transfer layer is advisory by construction.
+    pub fn run_job_transferred(
+        &mut self,
+        space: &MapSpace,
+        seeds: &[Mapping],
+        ranker: Option<Rc<SurrogateRanker>>,
+        sources: Vec<Box<dyn CandidateSource>>,
+    ) -> (Option<SearchResult>, EngineStats) {
+        let mut sources = match ranker {
+            Some(ranker) => sources
+                .into_iter()
+                .map(|inner| {
+                    Box::new(RankedSource::new(inner, Rc::clone(&ranker)))
+                        as Box<dyn CandidateSource>
+                })
+                .collect(),
+            None => sources,
+        };
+        self.run_job_seeded(space, seeds, &mut sources)
+    }
+
     pub fn run_job_seeded(
         &mut self,
         space: &MapSpace,
@@ -222,6 +254,61 @@ mod tests {
         );
         assert!(stats.rejected >= 1, "the foreign seed must be rejected");
         assert!(stats.proposed >= 200, "search proceeds past a rejected seed");
+    }
+
+    #[test]
+    fn transferred_without_ranker_is_bit_identical_to_plain() {
+        let p = gemm(64, 32, 32);
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+
+        let mut plain = Session::new(&model, Objective::Edp);
+        let (a, sa) = plain.run_job(&space, &mut portfolio_sources(300, 17));
+        let mut transferred = Session::new(&model, Objective::Edp);
+        let (b, sb) =
+            transferred.run_job_transferred(&space, &[], None, portfolio_sources(300, 17));
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.mapping, b.mapping, "no ranker ⇒ identical call sequence");
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        assert_eq!(sa.proposed, sb.proposed);
+        assert_eq!(sa.scored, sb.scored);
+    }
+
+    #[test]
+    fn ranked_job_reaches_the_same_final_score() {
+        use crate::transfer::SurrogateRanker;
+        use std::rc::Rc;
+
+        let p = gemm(64, 32, 32);
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let space = MapSpace::new(&p, &arch, &cons);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+
+        let mut cold = Session::new(&model, Objective::Edp);
+        let (cold_r, _) =
+            cold.run_job(&space, &mut vec![RandomMapper::new(400, 23).source()]);
+        let cold_r = cold_r.unwrap();
+
+        // any legal neighbor works: ranking only permutes the batch
+        let mut rng = crate::util::rng::Rng::new(99);
+        let n = space.sample_legal(&mut rng, 10_000).unwrap();
+        let ranker =
+            Rc::new(SurrogateRanker::from_neighbors(&space, &[(n, 1.0, 0.2)]).unwrap());
+        let mut warm = Session::new(&model, Objective::Edp);
+        let (warm_r, stats) = warm.run_job_transferred(
+            &space,
+            &[],
+            Some(ranker),
+            vec![RandomMapper::new(400, 23).source()],
+        );
+        let warm_r = warm_r.unwrap();
+        // same candidate multiset ⇒ same minimum; only the order (and
+        // therefore pruning efficiency) may differ
+        assert_eq!(cold_r.score.to_bits(), warm_r.score.to_bits());
+        assert!(stats.proposed >= 400);
     }
 
     #[test]

@@ -58,6 +58,10 @@
 //! [`service::cluster`] layer scales that across processes with
 //! coordinator-free rendezvous routing, snapshot `sync` between peer
 //! caches, and deterministic failover (`--peers` / `union router`).
+//! The [`transfer`] module mines that cache one step further: a
+//! nearest-neighbor index over job signatures plus a surrogate ranker
+//! re-use prior winners as warm-start seeds, so *near*-duplicate
+//! traffic converges in a fraction of a cold search's samples.
 //!
 //! `docs/ARCHITECTURE.md` maps these layers end to end and names the
 //! invariant each one pins; `docs/PROTOCOL.md` is the normative wire
@@ -83,6 +87,7 @@ pub mod problem;
 pub mod report;
 pub mod runtime;
 pub mod service;
+pub mod transfer;
 pub mod util;
 
 /// Most-used types, for `use union::prelude::*`.
@@ -108,5 +113,8 @@ pub mod prelude {
     pub use crate::problem::{DataSpace, Operation, Problem};
     pub use crate::service::{
         Broker, BrokerConfig, CostKind, JobRequest, ResultCache, ServeConfig, Server,
+    };
+    pub use crate::transfer::{
+        ProblemFeatures, RankedSource, SurrogateRanker, TransferIndex, TransferNeighbor,
     };
 }

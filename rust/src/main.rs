@@ -89,11 +89,11 @@ subcommands:
   search    --workload <spec> --arch <spec> [--mapper exhaustive|random|decoupled|heuristic|genetic]
             [--cost analytical|maestro|sparse-analytical:d=D[,meta=M]]
             [--objective edp|energy|latency]
-            [--samples N] [--constraints file.ucon] [--render]
+            [--samples N] [--constraints file.ucon] [--render] [--no-transfer]
   network   --model <net> [--arch <spec>] [--cost C]
             [--objective edp|energy|latency] [--effort fast|thorough|N]
             [--batch N] [--seed N] [--threads N] [--constraints file.ucon]
-            [--csv] [--mappings]
+            [--csv] [--mappings] [--no-transfer]
   dse       [--space edge-grid|aspect:edge|aspect:cloud|chiplet[:BW,...]]
             [--model <net>] [--cost C]
             [--objective edp|energy|latency] [--effort fast|thorough|N]
@@ -102,7 +102,9 @@ subcommands:
   serve     [--port N] [--host H] [--shards N] [--queue N] [--job-threads N]
             [--cache file.jsonl] [--max-conns N] [--cache-warm-entries N]
             [--cache-warm-mb N] [--cache-flush-every N] [--cache-flush-ms N]
-            [--cache-compact-mb N] [--stdio] [--verbose]
+            [--cache-compact-mb N] [--no-transfer] [--stdio] [--verbose]
+            (--no-transfer disables cache-mined warm starts: pre-transfer
+             engine behavior, byte for byte)
   router    --peers host:port,... [--port N] [--host H] [--verbose]
             (rendezvous-routes plain clients across `union serve` peers)
   client    search|status|shutdown [--port N] [--host H] [--json]
@@ -181,6 +183,11 @@ fn cmd_search(args: &Args) -> Result<(), String> {
         "genetic" => Box::new(GeneticMapper::new(60, (samples / 60).max(1), seed)),
         other => return Err(format!("unknown mapper '{other}'")),
     };
+
+    // accepted for interface symmetry with `serve`/`warm`: a one-shot
+    // search has no result cache, so there is never a transfer index
+    // to disable — the flag is inert here
+    let _ = args.switch("no-transfer");
 
     let space = MapSpace::new(&problem, &arch, &constraints);
     println!(
@@ -289,6 +296,10 @@ fn cmd_network(args: &Args) -> Result<(), String> {
         objective.name(),
         config.samples,
     );
+    // inert, like `search`: `union network` runs cold (no cache, no
+    // transfer index); accepted so scripts can pass one flag set to
+    // both the CLI and the service
+    let _ = args.switch("no-transfer");
     let orchestrator = NetworkOrchestrator::with_config(&arch, model, &constraints, config);
     let result = orchestrator.run(&graph)?;
     let table = result.per_layer_table();
@@ -402,6 +413,9 @@ fn parse_broker_flags(args: &Args) -> Result<BrokerConfig, String> {
         queue_capacity: args.usize_flag("queue", defaults.queue_capacity)?.max(1),
         job_threads,
         paused: false,
+        // escape hatch: --no-transfer runs the pre-transfer engine
+        // byte-for-byte (no index mining, no warm-start seeding)
+        transfer: !args.switch("no-transfer"),
     })
 }
 
@@ -689,6 +703,14 @@ fn cmd_client(args: &Args) -> Result<(), String> {
                 response.num("cache_flushes").unwrap_or(0.0),
                 response.num("cache_compactions").unwrap_or(0.0),
             );
+            println!(
+                "transfer: index_entries={} lookups={} hits={} seeded={} wins={}",
+                response.num("transfer_index_entries").unwrap_or(0.0),
+                response.num("transfer_lookups").unwrap_or(0.0),
+                response.num("transfer_hits").unwrap_or(0.0),
+                response.num("transfer_seeded").unwrap_or(0.0),
+                response.num("transfer_wins").unwrap_or(0.0),
+            );
             Ok(())
         }
         Some("shutdown") => {
@@ -834,6 +856,13 @@ fn cmd_warm(args: &Args) -> Result<(), String> {
         entries,
         cache_stats.appended,
     );
+    if stats.transfer_index_entries > 0 {
+        println!(
+            "transfer index: {} signatures ({} jobs warm-started, {} seed wins) — \
+             a server restarted over this cache re-mines them at startup",
+            stats.transfer_index_entries, stats.transfer_seeded, stats.transfer_wins,
+        );
+    }
     Ok(())
 }
 
@@ -931,6 +960,20 @@ fn cmd_warm_peers(args: &Args, peers_spec: &str) -> Result<(), String> {
         cached,
         cc.cluster().len(),
     );
+    // each owner mined its finished jobs into its own transfer index;
+    // report the per-peer coverage (a down peer is reported, not fatal
+    // — the warming itself already succeeded)
+    for member in cc.cluster().members() {
+        match service::client_request(member, &Request::Status { id: None }) {
+            Ok(doc) => println!(
+                "  peer {member}: transfer index {} signatures ({} warm-started, {} seed wins)",
+                doc.num("transfer_index_entries").unwrap_or(0.0),
+                doc.num("transfer_seeded").unwrap_or(0.0),
+                doc.num("transfer_wins").unwrap_or(0.0),
+            ),
+            Err(e) => println!("  peer {member}: status error: {e}"),
+        }
+    }
     Ok(())
 }
 

@@ -102,11 +102,21 @@ impl<'a> MapSpace<'a> {
     }
 
     /// Can dimension `d` be parallelized under the constraint file?
-    fn may_parallelize(&self, d: usize) -> bool {
+    /// Public because re-legalization (`crate::transfer::project_mapping`)
+    /// replays the sampler's structural rules outside this module.
+    pub fn may_parallelize(&self, d: usize) -> bool {
         match &self.constraints.parallel_dims {
             Some(allowed) => allowed.iter().any(|n| *n == self.problem.dims[d].name),
             None => true,
         }
+    }
+
+    /// The post-pruning candidate tile sizes of dimension `d`, sorted
+    /// ascending — the alphabet every divisor chain of this space draws
+    /// from. The transfer layer snaps foreign tile sizes onto this list
+    /// when projecting a neighbor's mapping into this space.
+    pub fn dim_divisor_list(&self, d: usize) -> &[u64] {
+        &self.dim_divisors[d]
     }
 
     /// Chain positions: `2 * nlevels` values per dim

@@ -24,6 +24,7 @@ use crate::mapping::Mapping;
 use crate::mapspace::{Constraints, MapSpace};
 use crate::problem::Problem;
 use crate::report::Table;
+use crate::transfer::{project_mapping, SurrogateRanker, TransferNeighbor};
 use crate::util::rng::Rng;
 
 use super::WorkloadGraph;
@@ -96,6 +97,13 @@ pub struct NetworkStats {
     /// Jobs that started from a warm-start seed mapping (cross-run
     /// incumbent sharing; always 0 for a plain [`NetworkOrchestrator::run`]).
     pub warm_seeded_jobs: usize,
+    /// Jobs that received at least one projected transfer seed (always
+    /// 0 unless the caller passed neighbors to
+    /// [`NetworkOrchestrator::run_with_session_transferred`]).
+    pub transfer_seeded_jobs: usize,
+    /// Transfer-seeded jobs whose final winner *is* one of the
+    /// projected seeds — the search never beat the transferred opening.
+    pub transfer_wins: usize,
     /// Aggregate engine statistics across every job of THIS run (not the
     /// whole session, which may span several runs in a design-space sweep).
     pub engine: EngineStats,
@@ -202,11 +210,17 @@ impl NetworkResult {
     /// Human summary of the run (CLI, kick-tires, benches).
     pub fn summary(&self) -> String {
         let s = &self.stats;
-        let warm = if s.warm_seeded_jobs > 0 {
+        let mut warm = if s.warm_seeded_jobs > 0 {
             format!(", {} warm-started", s.warm_seeded_jobs)
         } else {
             String::new()
         };
+        if s.transfer_seeded_jobs > 0 {
+            warm.push_str(&format!(
+                ", {} transfer-seeded ({} seed wins)",
+                s.transfer_seeded_jobs, s.transfer_wins
+            ));
+        }
         format!(
             "network {}: {} layers in {} nodes -> {} distinct search jobs ({:.1}% layer reuse{warm})\n\
              end-to-end: cycles={:.3e}  latency={:.3e}s  energy={:.3e}J  EDP={:.3e}Js\n\
@@ -353,8 +367,34 @@ impl<'a> NetworkOrchestrator<'a> {
         &self,
         graph: &WorkloadGraph,
         session: &mut Session,
+        warm: Option<&mut WarmStartCache>,
+        observer: Option<Box<dyn FnMut(SearchProgress)>>,
+    ) -> Result<NetworkResult, String> {
+        self.run_with_session_transferred(graph, session, warm, observer, &[])
+    }
+
+    /// [`NetworkOrchestrator::run_with_session_observed`] with
+    /// **transfer guidance**: each of `transfer`'s prior winners (mined
+    /// from the service's result cache by a
+    /// [`crate::transfer::TransferIndex`]) is projected into every
+    /// job's map space — tile sizes snapped onto valid divisor chains,
+    /// loop orders kept — and the projections that pass `admits` become
+    /// seed candidates, while a [`SurrogateRanker`] over the same
+    /// projections reorders candidate batches so pruning fires early.
+    ///
+    /// Transfer is **advisory**: with an empty `transfer` slice this is
+    /// byte-identical to [`NetworkOrchestrator::run_with_session_observed`]
+    /// (the same engine call sequence), and projected seeds pass the
+    /// exact legality pipeline sampled candidates do. Stats report
+    /// seeded jobs and wins in
+    /// [`NetworkStats::transfer_seeded_jobs`] / [`NetworkStats::transfer_wins`].
+    pub fn run_with_session_transferred(
+        &self,
+        graph: &WorkloadGraph,
+        session: &mut Session,
         mut warm: Option<&mut WarmStartCache>,
         observer: Option<Box<dyn FnMut(SearchProgress)>>,
+        transfer: &[TransferNeighbor],
     ) -> Result<NetworkResult, String> {
         let observer = observer.map(|f| Rc::new(RefCell::new(f)));
         if graph.is_empty() {
@@ -398,6 +438,8 @@ impl<'a> NetworkOrchestrator<'a> {
         let mut job_results: Vec<SearchResult> = Vec::with_capacity(jobs.len());
         let mut run_stats = EngineStats::default();
         let mut warm_seeded = 0usize;
+        let mut transfer_seeded = 0usize;
+        let mut transfer_wins = 0usize;
         for (j, job) in jobs.iter().enumerate() {
             let space = MapSpace::new(&job.problem, self.arch, self.constraints);
             // a small admits-checked seed batch first, so every job has
@@ -427,7 +469,7 @@ impl<'a> NetworkOrchestrator<'a> {
             // cross-run incumbent sharing: open with the best mapping
             // this problem earned on a neighbouring arch point, if any
             let warm_key = self.warm_signature(&job.problem);
-            let seeds: Vec<Mapping> = match warm.as_mut() {
+            let mut seeds: Vec<Mapping> = match warm.as_mut() {
                 Some(cache) => match cache.entries.get(&warm_key) {
                     Some(m) => {
                         cache.hits += 1;
@@ -438,7 +480,22 @@ impl<'a> NetworkOrchestrator<'a> {
                 },
                 None => Vec::new(),
             };
-            let (result, stats) = session.run_job_seeded(&space, &seeds, &mut sources);
+            // transfer: re-legalize each neighbor's winner against this
+            // job's space; the survivors seed the search and back the
+            // surrogate that orders every candidate batch
+            let mut projected: Vec<(Mapping, f64, f64)> = Vec::new();
+            for n in transfer {
+                if let Some(m) = project_mapping(&space, &n.mapping) {
+                    projected.push((m, n.score, n.distance));
+                }
+            }
+            let ranker = SurrogateRanker::from_neighbors(&space, &projected).map(Rc::new);
+            if !projected.is_empty() {
+                transfer_seeded += 1;
+                seeds.extend(projected.iter().map(|(m, _, _)| m.clone()));
+            }
+            let (result, stats) =
+                session.run_job_transferred(&space, &seeds, ranker, sources);
             run_stats.absorb(&stats);
             let result = result.ok_or_else(|| {
                 format!(
@@ -447,6 +504,9 @@ impl<'a> NetworkOrchestrator<'a> {
                     self.arch.name
                 )
             })?;
+            if projected.iter().any(|(m, _, _)| *m == result.mapping) {
+                transfer_wins += 1;
+            }
             if let Some(cache) = warm.as_mut() {
                 cache.entries.insert(warm_key, result.mapping.clone());
             }
@@ -483,6 +543,8 @@ impl<'a> NetworkOrchestrator<'a> {
             dedup_hit_rate: (total_layers.saturating_sub(jobs.len() as u64)) as f64
                 / total_layers as f64,
             warm_seeded_jobs: warm_seeded,
+            transfer_seeded_jobs: transfer_seeded,
+            transfer_wins,
             engine: run_stats,
         };
         Ok(NetworkResult {

@@ -48,6 +48,7 @@ use crate::frontend::Workload;
 use crate::mappers::Objective;
 use crate::mapspace::{constraints_to_str, Constraints};
 use crate::network::{NetworkOrchestrator, OrchestratorConfig, SearchProgress, WorkloadGraph};
+use crate::transfer::{TransferIndex, TransferNeighbor, DEFAULT_TOP_K};
 
 use super::cache::{CacheStats, CachedResult, ResultCache};
 
@@ -172,6 +173,17 @@ pub struct BrokerConfig {
     /// execute until [`Broker::resume`]. Used by tests and benches to
     /// make coalescing deterministic.
     pub paused: bool,
+    /// Transfer-guided search: mine the result cache into a
+    /// [`TransferIndex`] at startup and warm-start cache-miss jobs from
+    /// their nearest prior winners (see [`crate::transfer`]). The index
+    /// is strictly advisory: disabling it (`--no-transfer`) runs the
+    /// pre-transfer engine byte-for-byte, and enabling it only *adds*
+    /// candidates (seeds pass the same legality gate as sampled ones).
+    /// On a progress-independent candidate stream the warm answer is
+    /// provably never worse; the portfolio's hill-climbing phase reacts
+    /// to the incumbent, so service answers are pinned to a quality
+    /// tolerance instead (CI smoke test + `transfer_warm` bench).
+    pub transfer: bool,
 }
 
 impl Default for BrokerConfig {
@@ -181,6 +193,7 @@ impl Default for BrokerConfig {
             queue_capacity: 64,
             job_threads: Some(1),
             paused: false,
+            transfer: true,
         }
     }
 }
@@ -216,6 +229,19 @@ pub struct BrokerStats {
     pub cache_cold_hits: u64,
     /// Entries pushed out of the warm tier by its capacity bounds.
     pub cache_warm_evictions: u64,
+    /// Transfer-index consultations (one per enqueued cache-miss job
+    /// while transfer is enabled).
+    pub transfer_lookups: usize,
+    /// Lookups that found at least one compatible prior winner.
+    pub transfer_hits: usize,
+    /// Executed jobs that ran with at least one projected warm-start
+    /// seed (a hit whose neighbors survived projection).
+    pub transfer_seeded: usize,
+    /// Seeded jobs whose final winning mapping *was* a projected seed.
+    pub transfer_wins: usize,
+    /// Signatures currently held by the transfer index (folded in from
+    /// the index when a snapshot is taken, like the cache tiers).
+    pub transfer_index_entries: usize,
     /// Aggregate engine statistics across every executed job.
     pub engine: EngineStats,
 }
@@ -223,6 +249,11 @@ pub struct BrokerStats {
 struct Ticket {
     sig: String,
     req: JobRequest,
+    /// Nearest prior winners for this job, resolved at submit time
+    /// (empty when transfer is disabled or the index has no compatible
+    /// neighbor). The worker projects these into the job's map space
+    /// and seeds/ranks the search with them.
+    neighbors: Vec<TransferNeighbor>,
 }
 
 /// Per-inflight-job waiter lists: everyone gets the final [`JobDone`];
@@ -251,6 +282,10 @@ struct Shared {
     /// bookkeeping, coalescing or status paths that hold `state`.
     /// Never locked while holding `state` (and vice versa).
     cache: Mutex<ResultCache>,
+    /// The transfer index under its own lock, same ordering rule as the
+    /// cache: never held together with `state` or `cache`. Lookups are
+    /// short linear scans; inserts happen once per executed job.
+    transfer: Mutex<TransferIndex>,
     /// Signaled on enqueue, resume and drain (workers wait on it).
     work: Condvar,
     /// Signaled when a job finishes (drain waits on it).
@@ -276,8 +311,17 @@ impl Broker {
     }
 
     /// Start a broker over an explicit (usually persistent) cache.
-    pub fn with_cache(config: BrokerConfig, cache: ResultCache) -> Broker {
+    /// When transfer is enabled, every resident cache record is mined
+    /// into the transfer index up front (restarting a server over a
+    /// warmed cache restores its warm-start coverage for free).
+    pub fn with_cache(config: BrokerConfig, mut cache: ResultCache) -> Broker {
         let config = BrokerConfig { shards: config.shards.max(1), ..config };
+        let mut index = TransferIndex::new();
+        if config.transfer {
+            cache.replay_results(|sig, rec| {
+                index.insert(sig, &rec.mapping, rec.score);
+            });
+        }
         let shared = Arc::new(Shared {
             state: Mutex::new(State {
                 queues: (0..config.shards).map(|_| VecDeque::new()).collect(),
@@ -288,6 +332,7 @@ impl Broker {
                 stats: BrokerStats::default(),
             }),
             cache: Mutex::new(cache),
+            transfer: Mutex::new(index),
             work: Condvar::new(),
             idle: Condvar::new(),
             config: config.clone(),
@@ -358,6 +403,14 @@ impl Broker {
         // cache fast path under the cache's own lock: a disk append on
         // a worker never stalls submit bookkeeping, and vice versa
         let hit = self.shared.cache.lock().unwrap().get(&sig);
+        // a miss consults the transfer index (its own lock, before the
+        // state lock per the ordering rule) for warm-start neighbors;
+        // coalesced/overloaded submissions waste one short linear scan
+        let neighbors = if hit.is_none() && self.shared.config.transfer {
+            self.shared.transfer.lock().unwrap().lookup(&sig, DEFAULT_TOP_K)
+        } else {
+            Vec::new()
+        };
         let mut st = self.shared.state.lock().unwrap();
         if let Some(hit) = hit {
             st.stats.cache_hits += 1;
@@ -391,8 +444,14 @@ impl Broker {
         let (tx, rx) = channel();
         let mut waiters = Waiters { done: vec![tx], progress: Vec::new() };
         let progress = progress_channel(&mut waiters);
+        if self.shared.config.transfer {
+            st.stats.transfer_lookups += 1;
+            if !neighbors.is_empty() {
+                st.stats.transfer_hits += 1;
+            }
+        }
         st.inflight.insert(sig.clone(), waiters);
-        st.queues[shard].push_back(Ticket { sig, req });
+        st.queues[shard].push_back(Ticket { sig, req, neighbors });
         self.shared.work.notify_all();
         Submitted::Pending { rx, coalesced: false, shard, progress }
     }
@@ -424,7 +483,14 @@ impl Broker {
         s.cache_warm_hits = cs.warm_hits;
         s.cache_cold_hits = cs.cold_hits;
         s.cache_warm_evictions = cs.warm_evictions;
+        s.transfer_index_entries = self.shared.transfer.lock().unwrap().len();
         s
+    }
+
+    /// Signatures currently held by the transfer index (0 when transfer
+    /// is disabled — nothing is mined or inserted).
+    pub fn transfer_index_len(&self) -> usize {
+        self.shared.transfer.lock().unwrap().len()
     }
 
     /// Force any batched cache records to disk now (shutdown, tests).
@@ -556,27 +622,42 @@ fn worker_loop(shard: usize, shared: Arc<Shared>) {
         // inflight waiters): degrade it to a job error and drop the
         // shard's sessions, whose interior state is now suspect
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_search(&ticket.req, &mut sessions, shared.config.job_threads, observer)
+            run_search(
+                &ticket.req,
+                &ticket.neighbors,
+                &mut sessions,
+                shared.config.job_threads,
+                observer,
+            )
         }))
         .unwrap_or_else(|_| {
             sessions.clear();
             Err("search panicked; see server log".into())
         });
         // persist first (cache lock only: the disk append must not
-        // block submits), then update counters and release waiters
-        // under the state lock
+        // block submits), feed the transfer index (its own lock), then
+        // update counters and release waiters under the state lock
         let result = match outcome {
-            Ok((result, engine)) => {
+            Ok((result, engine, transfer)) => {
                 shared.cache.lock().unwrap().insert(&ticket.sig, result.clone());
-                Ok((result, engine))
+                if shared.config.transfer {
+                    shared
+                        .transfer
+                        .lock()
+                        .unwrap()
+                        .insert(&ticket.sig, &result.mapping, result.score);
+                }
+                Ok((result, engine, transfer))
             }
             Err(e) => Err(e),
         };
         let mut st = shared.state.lock().unwrap();
         st.stats.searched += 1;
         let result = match result {
-            Ok((result, engine)) => {
+            Ok((result, engine, (seeded, wins))) => {
                 st.stats.engine.absorb(&engine);
+                st.stats.transfer_seeded += seeded;
+                st.stats.transfer_wins += wins;
                 Ok(result)
             }
             Err(e) => {
@@ -611,13 +692,18 @@ fn objective_key(o: Objective) -> u8 {
 
 /// Execute one job on this shard's long-lived session through the
 /// network orchestrator's single-job path — identical semantics (and
-/// identical bytes) to `union network` on a one-layer graph.
+/// identical bytes) to `union network` on a one-layer graph when
+/// `neighbors` is empty. With neighbors, the orchestrator projects them
+/// into the job's map space as warm-start seeds and ranks candidate
+/// batches with a surrogate over them. Returns the result, the engine
+/// stats, and `(transfer-seeded jobs, transfer seed wins)`.
 fn run_search(
     req: &JobRequest,
+    neighbors: &[TransferNeighbor],
     sessions: &mut HashMap<(CostKind, u8), Session<'static>>,
     job_threads: Option<usize>,
     observer: Box<dyn FnMut(SearchProgress)>,
-) -> Result<(CachedResult, EngineStats), String> {
+) -> Result<(CachedResult, EngineStats, (usize, usize)), String> {
     let graph =
         WorkloadGraph::from_workloads(&req.workload.name, vec![req.workload.clone()]);
     let config = OrchestratorConfig {
@@ -637,13 +723,22 @@ fn run_search(
                 EngineConfig { threads: job_threads, ..EngineConfig::default() },
             )
         });
-    let network =
-        orchestrator.run_with_session_observed(&graph, session, None, Some(observer))?;
+    let network = orchestrator.run_with_session_transferred(
+        &graph,
+        session,
+        None,
+        Some(observer),
+        neighbors,
+    )?;
     let layer = network
         .layers
         .first()
         .ok_or_else(|| "orchestrator returned no layers".to_string())?;
-    Ok((CachedResult::from_search(&layer.result), network.stats.engine))
+    Ok((
+        CachedResult::from_search(&layer.result),
+        network.stats.engine,
+        (network.stats.transfer_seeded_jobs, network.stats.transfer_wins),
+    ))
 }
 
 #[cfg(test)]
@@ -761,6 +856,72 @@ mod tests {
         }
         quiet.resume();
         quiet.drain();
+    }
+
+    #[test]
+    fn transfer_warm_start_is_advisory_and_counted() {
+        // cold reference: transfer disabled = the pre-transfer engine
+        let cold = Broker::new(BrokerConfig {
+            shards: 1,
+            transfer: false,
+            ..BrokerConfig::default()
+        });
+        let reference = cold.submit_wait(req(64, 150)).unwrap();
+        assert_eq!(cold.transfer_index_len(), 0, "disabled: nothing mined or inserted");
+        let cs = cold.drain();
+        assert_eq!(
+            (cs.transfer_lookups, cs.transfer_hits, cs.transfer_index_entries),
+            (0, 0, 0)
+        );
+
+        // warm path: a donor job first, then the near-duplicate query
+        let warm = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        warm.submit_wait(req(32, 150)).unwrap();
+        assert_eq!(warm.transfer_index_len(), 1, "finished jobs feed the index");
+        let transferred = warm.submit_wait(req(64, 150)).unwrap();
+        let ws = warm.drain();
+        assert_eq!(ws.transfer_lookups, 2, "each enqueued job consults the index");
+        assert_eq!(ws.transfer_hits, 1, "only the query had a prior neighbor");
+        assert_eq!(ws.transfer_index_entries, 2);
+        // the index is advisory: seeds only add candidates. The
+        // portfolio's hill-climb phase reacts to the incumbent, so the
+        // warm answer is pinned to the smoke-test quality tolerance
+        // rather than strict dominance (see BrokerConfig::transfer).
+        assert!(
+            transferred.score <= reference.score * 1.02,
+            "warm {} vs cold {}",
+            transferred.score,
+            reference.score
+        );
+        if ws.transfer_seeded == 0 {
+            // no neighbor survived projection: byte-identical fallback
+            assert_eq!(transferred, reference);
+        }
+        assert!(ws.transfer_wins <= ws.transfer_seeded);
+    }
+
+    #[test]
+    fn restart_over_a_warmed_cache_restores_the_index() {
+        let path = std::env::temp_dir().join(format!(
+            "union-broker-transfer-{}.jsonl",
+            std::process::id()
+        ));
+        std::fs::remove_file(&path).ok();
+        {
+            let broker = Broker::with_cache(
+                BrokerConfig { shards: 1, ..BrokerConfig::default() },
+                ResultCache::open(&path).unwrap(),
+            );
+            broker.submit_wait(req(32, 100)).unwrap();
+            broker.drain();
+        }
+        let broker = Broker::with_cache(
+            BrokerConfig { shards: 1, ..BrokerConfig::default() },
+            ResultCache::open(&path).unwrap(),
+        );
+        assert_eq!(broker.transfer_index_len(), 1, "startup mining restores coverage");
+        broker.drain();
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -656,6 +656,48 @@ impl ResultCache {
         }
     }
 
+    /// Visit every resident record as `(signature, record)` — the
+    /// **transfer-index mining** hook. Pending records are flushed
+    /// first so one pass over the disk index covers everything; an
+    /// in-memory store walks its warm tier instead. Visitation order
+    /// is sorted by signature, so index construction is deterministic
+    /// regardless of insertion or recency order. Unlike
+    /// [`ResultCache::get`], this never perturbs warm-tier recency or
+    /// the hit/miss counters (records are parsed without re-warming).
+    /// Returns the number of records visited; unreadable disk records
+    /// are skipped (a later `get` repairs them).
+    pub fn replay_results<F: FnMut(&str, &CachedResult)>(&mut self, mut f: F) -> usize {
+        let mut visited = 0usize;
+        if self.append.is_some() {
+            self.flush();
+            let mut locs: Vec<(String, u64, u32)> = self
+                .known
+                .iter()
+                .filter_map(|(sig, loc)| match *loc {
+                    Loc::Disk { offset, len } => Some((sig.clone(), offset, len)),
+                    Loc::Pending => None, // drained by the flush above
+                })
+                .collect();
+            locs.sort_unstable_by(|a, b| a.0.cmp(&b.0));
+            for (sig, offset, len) in locs {
+                if let Some(rec) = self.read_record(offset, len) {
+                    f(&sig, &rec);
+                    visited += 1;
+                }
+            }
+        } else {
+            let mut sigs = self.warm.keys_mru_first();
+            sigs.sort_unstable();
+            for sig in sigs {
+                if let Some(rec) = self.warm.peek(&sig) {
+                    f(&sig, rec);
+                    visited += 1;
+                }
+            }
+        }
+        visited
+    }
+
     /// Import one snapshot record received from a peer. Returns
     /// `Ok(true)` when the record was new, `Ok(false)` when the
     /// signature was already held (identical jobs are deterministic, so
@@ -1029,6 +1071,42 @@ mod tests {
         assert_eq!(lines.len(), 2);
         let after = c.stats();
         assert_eq!((before.warm_hits, before.misses), (after.warm_hits, after.misses));
+    }
+
+    #[test]
+    fn replay_visits_every_record_sorted_without_stat_churn() {
+        let path = tmp_path("replay");
+        let mut c = ResultCache::open(&path).unwrap();
+        c.insert("b", sample_result(2));
+        c.insert("a", sample_result(1));
+        c.insert("c", sample_result(3)); // left pending: replay flushes first
+        let before = c.stats();
+        let mut seen = Vec::new();
+        let n = c.replay_results(|sig, rec| seen.push((sig.to_string(), rec.clone())));
+        assert_eq!(n, 3);
+        assert_eq!(
+            seen.iter().map(|(s, _)| s.as_str()).collect::<Vec<_>>(),
+            ["a", "b", "c"],
+            "visitation is signature-sorted"
+        );
+        assert_eq!(seen[0].1, sample_result(1));
+        let after = c.stats();
+        assert_eq!(
+            (before.warm_hits, before.cold_hits, before.misses),
+            (after.warm_hits, after.cold_hits, after.misses),
+            "replay does not count as lookups"
+        );
+        assert_eq!(c.warm_len(), 3, "replay leaves the warm tier as-is");
+        drop(c);
+
+        // in-memory stores replay their warm tier, same order guarantee
+        let mut m = ResultCache::in_memory();
+        m.insert("z", sample_result(9));
+        m.insert("y", sample_result(8));
+        let mut order = Vec::new();
+        assert_eq!(m.replay_results(|sig, _| order.push(sig.to_string())), 2);
+        assert_eq!(order, ["y", "z"]);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

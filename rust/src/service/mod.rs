@@ -16,7 +16,10 @@
 //!   identical queries cost one search), signature-hash routing to
 //!   worker shards owning long-lived engine sessions, bounded queues
 //!   with explicit `overloaded` backpressure, anytime progress fan-out,
-//!   and graceful drain;
+//!   graceful drain, and transfer-guided warm starts: cache misses
+//!   consult a [`crate::transfer::TransferIndex`] mined from the result
+//!   cache, seeding near-duplicate jobs from prior winners
+//!   (`--no-transfer` restores the cold engine byte-for-byte);
 //! * [`cache`] — the tiered result store: a bounded in-memory LRU warm
 //!   tier over the versioned, corruption-tolerant JSONL log, with
 //!   batched flushes and log compaction; survives restarts and powers
@@ -35,8 +38,11 @@
 //! thread-count-invariant, and cache records round-trip bit-exactly —
 //! so cached, coalesced and fresh answers to one job are all
 //! **identical**, and a service answer equals `union network` run
-//! locally on the same job. `tests/service.rs` and CI's service smoke
-//! job pin every link of that chain.
+//! locally on the same job (with `--no-transfer`, or whenever the
+//! transfer index holds no compatible neighbor — warm-started answers
+//! are instead pinned to a quality tolerance by CI's smoke test).
+//! `tests/service.rs` and CI's service smoke job pin every link of
+//! that chain.
 
 pub mod broker;
 pub mod cache;

@@ -32,7 +32,9 @@
 //! Every response carries `"type"` and `"ok"`. A `search` answer is a
 //! `result` (score + summary metrics + the mapping as a nested array,
 //! losslessly decodable via [`mapping_from_json`]), a `status` answer
-//! mirrors the broker counters, and errors/backpressure come back as
+//! mirrors the broker counters — including the `transfer_*` family
+//! (index size, lookups, hits, seeded jobs, seed wins) that tracks the
+//! cache-mined warm-start path — and errors/backpressure come back as
 //! `error` / `overloaded` lines tied to the request `id`. A `sync`
 //! answer is the one multi-line response: a `sync` header, then raw
 //! cache-record lines (which carry `"sig"` rather than `"type"` —

@@ -317,6 +317,11 @@ fn status_response(id: &Option<String>, broker: &Broker) -> Json {
         ("cache_warm_evictions".into(), Json::Num(cache.warm_evictions as f64)),
         ("cache_flushes".into(), Json::Num(cache.flushes as f64)),
         ("cache_compactions".into(), Json::Num(cache.compactions as f64)),
+        ("transfer_index_entries".into(), Json::Num(stats.transfer_index_entries as f64)),
+        ("transfer_lookups".into(), Json::Num(stats.transfer_lookups as f64)),
+        ("transfer_hits".into(), Json::Num(stats.transfer_hits as f64)),
+        ("transfer_seeded".into(), Json::Num(stats.transfer_seeded as f64)),
+        ("transfer_wins".into(), Json::Num(stats.transfer_wins as f64)),
         ("engine".into(), engine_json(&stats.engine)),
     ]);
     Json::Obj(fields)

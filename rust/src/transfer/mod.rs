@@ -1,0 +1,812 @@
+//! **Transfer-guided search**: learning across near-duplicate jobs.
+//!
+//! The persistent result cache (`crate::service::cache`) is an
+//! exact-match memo — a job either hits byte-for-byte or searches cold.
+//! Repeat traffic at serving scale is *near*-duplicate instead: the
+//! same operator with scaled dims, neighboring batch sizes, a density
+//! sweep. This module mines those cached winners into three pieces the
+//! broker composes on a cache miss:
+//!
+//! * [`ProblemFeatures`] — a cheap embedding of a canonical job
+//!   signature (operator kind, log-scaled dims, density, arch content
+//!   hash) with a log-space Euclidean [`ProblemFeatures::distance`];
+//! * [`TransferIndex`] — an in-memory nearest-neighbor index over
+//!   cached results, returning the top-k prior winning mappings
+//!   ([`TransferNeighbor`]) for a query signature;
+//! * [`project_mapping`] + [`SurrogateRanker`] + [`RankedSource`] — the
+//!   engine-side consumers: a neighbor's winning mapping is
+//!   **re-legalized** against the query's [`MapSpace`] (tile sizes
+//!   snapped onto valid divisor chains, loop orders and spatial splits
+//!   kept) and injected as a seed candidate, and a distance-weighted
+//!   surrogate over the projected winners orders each candidate batch
+//!   so lower-bound pruning fires against a strong incumbent early.
+//!
+//! Invariants (pinned by `tests/properties.rs` and the `transfer_warm`
+//! bench):
+//!
+//! * **advisory only** — with transfer disabled (or an empty index) the
+//!   engine sees the identical call sequence and returns byte-identical
+//!   results;
+//! * **seeds never bypass legality** — [`project_mapping`] only returns
+//!   mappings that pass [`MapSpace::admits`], and seeds still run
+//!   through the engine's normal admissibility pass;
+//! * **deterministic** — index lookups are a total order over
+//!   (distance bits, signature), independent of insertion order and
+//!   thread count; the ranker is a pure function of the candidate code.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::engine::{CandidateSource, Progress};
+use crate::mapping::{LevelMapping, Mapping, PackedBatch, PackedMapping, PackedRef};
+use crate::mapspace::MapSpace;
+
+/// Neighbors returned per lookup unless the caller asks otherwise.
+pub const DEFAULT_TOP_K: usize = 4;
+
+/// Candidates re-emitted per engine batch by a [`RankedSource`]. Small
+/// enough that the engine's per-batch pruning snapshot refreshes often
+/// while the surrogate's best-ranked candidates are in flight.
+pub const RANKED_CHUNK: usize = 128;
+
+/// A cheap feature embedding of one canonical `union-job-v1` signature
+/// (the exact string `job_signature` in `service/broker.rs` renders —
+/// the same key the result cache and rendezvous routing use).
+///
+/// Categorical fields (operator, dim names, arch name + content hash,
+/// model family, constraints, objective) gate [`ProblemFeatures::compatible`]:
+/// transfer only ever crosses *sizes*, never operators or architectures,
+/// so a neighbor's mapping always has the level/dim shape projection
+/// expects. Continuous fields (log₂ dims, log₂ density) feed
+/// [`ProblemFeatures::distance`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProblemFeatures {
+    /// Operator kind (`GEMM`, `CONV2D`, …).
+    pub op: String,
+    /// Dimension names, in problem order.
+    pub dim_names: Vec<String>,
+    /// Dimension sizes, in problem order.
+    pub dims: Vec<u64>,
+    /// `log2` of each dimension size.
+    pub log_dims: Vec<f64>,
+    /// Data density from a `sparse-analytical:d=D` cost spec; `1.0`
+    /// for dense models.
+    pub density: f64,
+    /// `name#fnv64` — the arch name plus its content hash, verbatim
+    /// from the signature (two `.uarch` files sharing a name differ).
+    pub arch: String,
+    /// Cost-model family: `sparse-analytical:*` collapses to
+    /// `analytical` (density is a continuous feature, not a family).
+    pub model_family: String,
+    /// Rendered constraints text (opaque; must match exactly).
+    pub cons: String,
+    /// Objective name (`edp` / `energy` / `latency`).
+    pub objective: String,
+}
+
+impl ProblemFeatures {
+    /// Parse a canonical job signature into features. Returns `None`
+    /// for anything that is not a well-formed `union-job-v1` signature
+    /// — callers treat that as "not indexable", never as an error.
+    pub fn from_signature(sig: &str) -> Option<ProblemFeatures> {
+        let rest = sig.strip_prefix("union-job-v1|")?;
+        let (problem, rest) = split_at_marker(rest, "|arch=")?;
+        let (arch, rest) = split_at_marker(rest, "|model=")?;
+        let (model, rest) = split_at_marker(rest, "|cons=")?;
+        let (cons, rest) = split_at_marker(rest, "|obj=")?;
+        let (objective, _) = split_at_marker(rest, "|samples=")?;
+
+        // problem text is its Display rendering with '\n' folded to ';':
+        // `problem  [GEMM];  dims: M=64 N=64 K=64;  in  A[M][K];…`
+        let header = problem.split(';').next()?;
+        let lb = header.find('[')?;
+        let rb = header.find(']')?;
+        if rb <= lb + 1 {
+            return None;
+        }
+        let op = header[lb + 1..rb].to_string();
+        let dims_at = problem.find("dims:")?;
+        let dims_text = &problem[dims_at + "dims:".len()..];
+        let dims_text = dims_text.split(';').next()?;
+        let mut dim_names = Vec::new();
+        let mut dims = Vec::new();
+        for tok in dims_text.split_whitespace() {
+            let (name, size) = tok.split_once('=')?;
+            dim_names.push(name.to_string());
+            dims.push(size.parse::<u64>().ok()?);
+        }
+        if dims.is_empty() || dims.iter().any(|&d| d == 0) {
+            return None;
+        }
+        let log_dims = dims.iter().map(|&d| (d as f64).log2()).collect();
+
+        let (model_family, density) = match model.strip_prefix("sparse-analytical:") {
+            Some(params) => {
+                let d = params
+                    .split(',')
+                    .find_map(|p| p.strip_prefix("d="))
+                    .and_then(|v| v.parse::<f64>().ok())
+                    .filter(|d| *d > 0.0 && d.is_finite())?;
+                ("analytical".to_string(), d)
+            }
+            None => (model.to_string(), 1.0),
+        };
+
+        Some(ProblemFeatures {
+            op,
+            dim_names,
+            dims,
+            log_dims,
+            density,
+            arch: arch.to_string(),
+            model_family,
+            cons: cons.to_string(),
+            objective: objective.to_string(),
+        })
+    }
+
+    /// Can a mapping transfer between these two jobs at all? True when
+    /// every categorical field matches — same operator, same dim names
+    /// (hence the same dimensionality), same arch content, same model
+    /// family, same constraints and objective. Sizes and density are
+    /// deliberately *not* gated: they are what transfer crosses.
+    pub fn compatible(&self, other: &ProblemFeatures) -> bool {
+        self.op == other.op
+            && self.dim_names == other.dim_names
+            && self.arch == other.arch
+            && self.model_family == other.model_family
+            && self.cons == other.cons
+            && self.objective == other.objective
+    }
+
+    /// Log-space Euclidean distance: `√(Σ Δlog₂dimᵢ² + Δlog₂density²)`.
+    /// Symmetric, zero iff the continuous features coincide; returns
+    /// `+∞` for incompatible pairs so they never rank as neighbors.
+    pub fn distance(&self, other: &ProblemFeatures) -> f64 {
+        if !self.compatible(other) {
+            return f64::INFINITY;
+        }
+        let mut acc = 0.0f64;
+        for (a, b) in self.log_dims.iter().zip(&other.log_dims) {
+            acc += (a - b) * (a - b);
+        }
+        let dd = self.density.log2() - other.density.log2();
+        acc += dd * dd;
+        acc.sqrt()
+    }
+}
+
+/// Split `s` at the first occurrence of `marker`, returning the text
+/// before it and the text after it.
+fn split_at_marker<'a>(s: &'a str, marker: &str) -> Option<(&'a str, &'a str)> {
+    let at = s.find(marker)?;
+    Some((&s[..at], &s[at + marker.len()..]))
+}
+
+/// One prior winner returned by [`TransferIndex::lookup`].
+#[derive(Debug, Clone)]
+pub struct TransferNeighbor {
+    /// The donor job's canonical signature.
+    pub sig: String,
+    /// Feature distance to the query (finite, ≥ 0).
+    pub distance: f64,
+    /// The donor job's achieved objective score.
+    pub score: f64,
+    /// The donor job's winning mapping (in the donor's own space;
+    /// callers project it via [`project_mapping`] before use).
+    pub mapping: Mapping,
+}
+
+struct IndexEntry {
+    sig: String,
+    features: ProblemFeatures,
+    score: f64,
+    mapping: Mapping,
+}
+
+/// An in-memory nearest-neighbor index over cached search results,
+/// keyed by canonical job signature. Mined from the JSONL result cache
+/// at broker startup and kept current as searches complete.
+///
+/// Lookup is a deterministic linear scan — the index holds one entry
+/// per distinct cached signature (thousands, not millions), each visit
+/// is a handful of float ops, and the scan runs once per cache-missed
+/// job, off the candidate-evaluation hot path.
+#[derive(Default)]
+pub struct TransferIndex {
+    entries: Vec<IndexEntry>,
+    by_sig: HashMap<String, usize>,
+}
+
+impl TransferIndex {
+    pub fn new() -> TransferIndex {
+        TransferIndex::default()
+    }
+
+    /// Indexed entries (signatures whose features parsed).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Add (or replace, newest wins) one cached winner. Returns `false`
+    /// when `sig` is not an indexable signature — the caller loses
+    /// nothing, that job just never transfers.
+    pub fn insert(&mut self, sig: &str, mapping: &Mapping, score: f64) -> bool {
+        let features = match ProblemFeatures::from_signature(sig) {
+            Some(f) => f,
+            None => return false,
+        };
+        if !score.is_finite() {
+            return false;
+        }
+        match self.by_sig.get(sig) {
+            Some(&i) => {
+                self.entries[i].features = features;
+                self.entries[i].score = score;
+                self.entries[i].mapping = mapping.clone();
+            }
+            None => {
+                self.by_sig.insert(sig.to_string(), self.entries.len());
+                self.entries.push(IndexEntry {
+                    sig: sig.to_string(),
+                    features,
+                    score,
+                    mapping: mapping.clone(),
+                });
+            }
+        }
+        true
+    }
+
+    /// The `k` nearest compatible prior winners for `sig`, nearest
+    /// first. The query's own signature is excluded (an exact match is
+    /// the result cache's job, not transfer's). Ordering is a total
+    /// order over `(distance bits, signature)`, so the result is
+    /// independent of insertion order and thread count.
+    pub fn lookup(&self, sig: &str, k: usize) -> Vec<TransferNeighbor> {
+        let query = match ProblemFeatures::from_signature(sig) {
+            Some(f) => f,
+            None => return Vec::new(),
+        };
+        let mut ranked: Vec<(u64, &IndexEntry)> = Vec::new();
+        for e in &self.entries {
+            if e.sig == sig {
+                continue;
+            }
+            let d = query.distance(&e.features);
+            if d.is_finite() {
+                ranked.push((d.to_bits(), e));
+            }
+        }
+        ranked.sort_unstable_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.sig.cmp(&b.1.sig)));
+        ranked
+            .into_iter()
+            .take(k)
+            .map(|(bits, e)| TransferNeighbor {
+                sig: e.sig.clone(),
+                distance: f64::from_bits(bits),
+                score: e.score,
+                mapping: e.mapping.clone(),
+            })
+            .collect()
+    }
+}
+
+/// Re-legalize a neighbor's winning mapping against a query map space:
+/// walk each dimension's divisor chain `[TT⁰, ST⁰, TT¹, …]` snapping
+/// the donor's **absolute** tile value (tile sizes ≈ memory footprints,
+/// which is what must survive the move) onto the nearest valid divisor
+/// in log space, keep the donor's per-level loop orders verbatim, then
+/// repair any spatial fan-out the new shape cannot carry by demoting
+/// the smallest splits. Returns `None` unless the result passes
+/// [`MapSpace::admits`] — a projected seed is never less checked than
+/// a sampled candidate.
+pub fn project_mapping(space: &MapSpace, donor: &Mapping) -> Option<Mapping> {
+    let nl = space.arch.depth();
+    let nd = space.problem.dims.len();
+    if donor.levels.len() != nl {
+        return None;
+    }
+    if donor.levels.iter().any(|l| {
+        l.temporal_tile.len() != nd || l.spatial_tile.len() != nd || l.temporal_order.len() != nd
+    }) {
+        return None;
+    }
+
+    let mut levels: Vec<LevelMapping> = (0..nl)
+        .map(|l| LevelMapping {
+            temporal_order: donor.levels[l].temporal_order.clone(),
+            temporal_tile: vec![0; nd],
+            spatial_tile: vec![0; nd],
+        })
+        .collect();
+
+    for d in 0..nd {
+        // coverage pins the top temporal tile to the query's dim size
+        let mut prev = space.problem.dims[d].size;
+        levels[0].temporal_tile[d] = prev;
+        for pos in 1..2 * nl {
+            let level = pos / 2;
+            let is_spatial = pos % 2 == 1;
+            let target = if is_spatial {
+                donor.levels[level].spatial_tile[d]
+            } else {
+                donor.levels[level].temporal_tile[d]
+            }
+            .max(1);
+            let want = (target as f64).ln();
+            // nearest legal divisor in log space; the list is ascending
+            // and strict improvement keeps ties on the smaller value.
+            // `t == prev` is always legal (fan-out 1), so `best` lands.
+            let mut best = prev;
+            let mut best_err = f64::INFINITY;
+            for &t in space.dim_divisor_list(d) {
+                if t > prev || prev % t != 0 {
+                    continue;
+                }
+                if is_spatial {
+                    let fanout = prev / t;
+                    if fanout > 1 {
+                        if !space.may_parallelize(d)
+                            || fanout > space.arch.levels[level].sub_clusters
+                            || level == nl - 1
+                        {
+                            // the innermost level is the PEs themselves:
+                            // no fan-out below them
+                            continue;
+                        }
+                    }
+                }
+                let err = ((t as f64).ln() - want).abs();
+                if err < best_err {
+                    best = t;
+                    best_err = err;
+                }
+            }
+            if is_spatial {
+                levels[level].spatial_tile[d] = best;
+            } else {
+                levels[level].temporal_tile[d] = best;
+            }
+            prev = best;
+        }
+    }
+
+    // per-dim snapping bounds each dim's fan-out, but the per-level
+    // *product* can still exceed the sub-cluster count; demote the
+    // smallest splits (ST := TT is always chain-safe: TTᵢ is a multiple
+    // of the old STᵢ, hence of TTᵢ₊₁) until the level fits.
+    for l in 0..nl {
+        loop {
+            let fanout: u64 = (0..nd)
+                .map(|d| levels[l].temporal_tile[d] / levels[l].spatial_tile[d])
+                .product();
+            if fanout <= space.arch.levels[l].sub_clusters {
+                break;
+            }
+            let demote = (0..nd)
+                .filter(|&d| levels[l].temporal_tile[d] / levels[l].spatial_tile[d] > 1)
+                .min_by_key(|&d| {
+                    (levels[l].temporal_tile[d] / levels[l].spatial_tile[d], d)
+                })?;
+            levels[l].spatial_tile[demote] = levels[l].temporal_tile[demote];
+        }
+    }
+
+    let m = Mapping { levels };
+    if space.admits(&m) {
+        Some(m)
+    } else {
+        None
+    }
+}
+
+/// A distance-weighted surrogate cost over the projected neighbor
+/// winners: candidates whose packed code sits near a cheap prior winner
+/// in log-tile space score low and are evaluated first. Pure arithmetic
+/// over the candidate's packed slices — no allocation per call, per the
+/// hot path discipline.
+pub struct SurrogateRanker {
+    codes: Vec<PackedMapping>,
+    scores: Vec<f64>,
+    /// Per-neighbor feature-space weight `1/(1+distance)`.
+    weights: Vec<f64>,
+}
+
+impl SurrogateRanker {
+    /// Build from `(projected mapping, donor score, feature distance)`
+    /// triples. Mappings whose shape does not match the space are
+    /// skipped; returns `None` when nothing usable remains (callers
+    /// then run the un-ranked pipeline — transfer stays advisory).
+    pub fn from_neighbors(
+        space: &MapSpace,
+        neighbors: &[(Mapping, f64, f64)],
+    ) -> Option<SurrogateRanker> {
+        let (nl, nd) = space.packed_shape();
+        let mut codes = Vec::new();
+        let mut scores = Vec::new();
+        let mut weights = Vec::new();
+        for (m, score, dist) in neighbors {
+            if m.levels.len() != nl
+                || m.levels.iter().any(|l| l.temporal_tile.len() != nd)
+                || !score.is_finite()
+            {
+                continue;
+            }
+            codes.push(space.encode(m));
+            scores.push(*score);
+            weights.push(1.0 / (1.0 + dist.max(0.0)));
+        }
+        if codes.is_empty() {
+            None
+        } else {
+            Some(SurrogateRanker { codes, scores, weights })
+        }
+    }
+
+    /// Neighbors backing this ranker.
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// Surrogate score for one candidate code (lower = try sooner):
+    /// `Σ wₙ·costₙ/(1+dₙ) / Σ wₙ/(1+dₙ)` with `dₙ` the log-tile-space
+    /// distance between the candidate and neighbor `n`'s winner.
+    pub fn score(&self, r: PackedRef) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..self.codes.len() {
+            let d = code_distance(r, self.codes[i].as_ref());
+            let w = self.weights[i] / (1.0 + d);
+            num += w * self.scores[i];
+            den += w;
+        }
+        num / den
+    }
+}
+
+/// Log-space distance between two packed codes of the same shape:
+/// `√(Σ (ln ttₐ − ln tt_b)² + (ln stₐ − ln st_b)²)` over every
+/// (level, dim). Allocation-free.
+fn code_distance(a: PackedRef, b: PackedRef) -> f64 {
+    debug_assert_eq!(a.nlevels(), b.nlevels());
+    debug_assert_eq!(a.ndims(), b.ndims());
+    let mut acc = 0.0f64;
+    for l in 0..a.nlevels() {
+        let (ta, tb) = (a.tt(l), b.tt(l));
+        let (sa, sb) = (a.st(l), b.st(l));
+        for d in 0..a.ndims() {
+            let dt = (ta[d].max(1) as f64).ln() - (tb[d].max(1) as f64).ln();
+            let ds = (sa[d].max(1) as f64).ln() - (sb[d].max(1) as f64).ln();
+            acc += dt * dt + ds * ds;
+        }
+    }
+    acc.sqrt()
+}
+
+/// A transparent-ordering [`CandidateSource`] wrapper: buffers each
+/// inner batch, sorts it by [`SurrogateRanker::score`] (ascending, ties
+/// by batch position) and re-emits it in [`RANKED_CHUNK`]-sized
+/// sub-batches. Every candidate the engine would have evaluated is
+/// still evaluated — only the *order* changes, which is exactly what
+/// makes lower-bound pruning fire earlier. Steady-state allocation-free:
+/// the buffer batch and key vector are reused across pulls.
+pub struct RankedSource {
+    inner: Box<dyn CandidateSource>,
+    ranker: Rc<SurrogateRanker>,
+    buf: PackedBatch,
+    keys: Vec<(u64, u32)>,
+    pos: usize,
+    inner_done: bool,
+    name: String,
+}
+
+impl RankedSource {
+    pub fn new(inner: Box<dyn CandidateSource>, ranker: Rc<SurrogateRanker>) -> RankedSource {
+        let name = format!("ranked({})", inner.name());
+        RankedSource {
+            inner,
+            ranker,
+            buf: PackedBatch::new(),
+            keys: Vec::new(),
+            pos: 0,
+            inner_done: false,
+            name,
+        }
+    }
+}
+
+impl CandidateSource for RankedSource {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn preadmitted(&self) -> bool {
+        self.inner.preadmitted()
+    }
+
+    fn next_batch(
+        &mut self,
+        space: &MapSpace,
+        progress: &Progress,
+        out: &mut PackedBatch,
+    ) -> bool {
+        loop {
+            if self.pos < self.keys.len() {
+                let end = (self.pos + RANKED_CHUNK).min(self.keys.len());
+                for i in self.pos..end {
+                    out.push_ref(self.buf.get(self.keys[i].1 as usize));
+                }
+                self.pos = end;
+                return true;
+            }
+            if self.inner_done {
+                return false;
+            }
+            let (nl, nd) = space.packed_shape();
+            self.buf.reset(nl, nd);
+            let more = self.inner.next_batch(space, progress, &mut self.buf);
+            if !more {
+                // a final batch written alongside `false` is still
+                // evaluated by the engine — rank and emit it too, then
+                // report exhaustion on the next pull
+                self.inner_done = true;
+                if self.buf.is_empty() {
+                    return false;
+                }
+            } else if self.buf.is_empty() {
+                // the engine treats an empty `true` batch as
+                // termination; mirror that exactly
+                self.inner_done = true;
+                return false;
+            }
+            self.keys.clear();
+            for i in 0..self.buf.len() {
+                let s = self.ranker.score(self.buf.get(i));
+                let bits = if s.is_nan() { u64::MAX } else { s.to_bits() };
+                self.keys.push((bits, i as u32));
+            }
+            self.keys.sort_unstable();
+            self.pos = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mapspace::Constraints;
+    use crate::problem::{gemm, Problem};
+    use crate::util::rng::Rng;
+
+    /// Render the canonical signature the broker would for a dense
+    /// analytical GEMM job (mirrors `job_signature` in
+    /// `service/broker.rs`; the round-trip test against the real
+    /// renderer lives in the broker's own tests).
+    fn sig_for(p: &Problem, arch: &str, model: &str, samples: usize, seed: u64) -> String {
+        format!(
+            "union-job-v1|{}|arch={arch}#00deadbeef00cafe|model={model}|cons=|obj=edp|samples={samples}|seed={seed}",
+            p.signature(),
+        )
+        .replace('\n', ";")
+    }
+
+    #[test]
+    fn features_parse_and_distance_basics() {
+        let a = sig_for(&gemm(64, 64, 64), "edge", "analytical", 600, 42);
+        let b = sig_for(&gemm(128, 64, 64), "edge", "analytical", 600, 42);
+        let fa = ProblemFeatures::from_signature(&a).expect("parse a");
+        let fb = ProblemFeatures::from_signature(&b).expect("parse b");
+        assert_eq!(fa.op, "GEMM");
+        assert_eq!(fa.dims, vec![64, 64, 64]);
+        assert_eq!(fa.dim_names, vec!["M", "N", "K"]);
+        assert_eq!(fa.density, 1.0);
+        assert_eq!(fa.arch, "edge#00deadbeef00cafe");
+        assert!(fa.compatible(&fb));
+        assert_eq!(fa.distance(&fa), 0.0);
+        assert_eq!(fa.distance(&fb), fb.distance(&fa));
+        // one dim doubled = one log2 step
+        assert!((fa.distance(&fb) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_is_a_feature_and_families_gate() {
+        let p = gemm(64, 64, 64);
+        let dense = sig_for(&p, "edge", "analytical", 600, 42);
+        let d50 = sig_for(&p, "edge", "sparse-analytical:d=0.5", 600, 42);
+        let d25 = sig_for(&p, "edge", "sparse-analytical:d=0.25,meta=1.5", 600, 42);
+        let maestro = sig_for(&p, "edge", "maestro", 600, 42);
+        let fd = ProblemFeatures::from_signature(&dense).unwrap();
+        let f50 = ProblemFeatures::from_signature(&d50).unwrap();
+        let f25 = ProblemFeatures::from_signature(&d25).unwrap();
+        let fm = ProblemFeatures::from_signature(&maestro).unwrap();
+        assert_eq!(f25.density, 0.25);
+        // sparse-analytical is the analytical family at a density point
+        assert!(fd.compatible(&f50));
+        assert!(fd.distance(&f50) < fd.distance(&f25));
+        // maestro never transfers into the analytical family
+        assert!(!fd.compatible(&fm));
+        assert_eq!(fd.distance(&fm), f64::INFINITY);
+    }
+
+    #[test]
+    fn garbage_signatures_do_not_index() {
+        let mut idx = TransferIndex::new();
+        let m = Mapping { levels: Vec::new() };
+        assert!(!idx.insert("not-a-signature", &m, 1.0));
+        assert!(!idx.insert("union-job-v1|problem  [GEMM]|arch=e#0", &m, 1.0));
+        assert!(idx.is_empty());
+        assert!(idx.lookup("also-garbage", 4).is_empty());
+    }
+
+    #[test]
+    fn lookup_ranks_by_distance_and_excludes_self() {
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let mut idx = TransferIndex::new();
+        let mut rng = Rng::new(7);
+        for (m, n, k) in [(32, 32, 32), (64, 64, 64), (128, 128, 128)] {
+            let p = gemm(m, n, k);
+            let space = MapSpace::new(&p, &arch, &cons);
+            let map = space.sample_legal(&mut rng, 10_000).expect("legal donor");
+            let sig = sig_for(&p, "edge", "analytical", 600, 42);
+            assert!(idx.insert(&sig, &map, (m * n * k) as f64));
+        }
+        assert_eq!(idx.len(), 3);
+        // query at 48³ sits between 32³ and 64³, nearer both than 128³
+        let q = sig_for(&gemm(48, 48, 48), "edge", "analytical", 600, 42);
+        let near = idx.lookup(&q, 2);
+        assert_eq!(near.len(), 2);
+        assert!(near[0].distance <= near[1].distance);
+        assert!(near.iter().all(|n| !n.sig.contains("=128")));
+        // exact signature never returns itself
+        let self_sig = sig_for(&gemm(64, 64, 64), "edge", "analytical", 600, 42);
+        let others = idx.lookup(&self_sig, 8);
+        assert!(others.iter().all(|n| n.sig != self_sig));
+        assert_eq!(others.len(), 2);
+        // re-insert replaces, never duplicates
+        let p = gemm(64, 64, 64);
+        let space = MapSpace::new(&p, &arch, &cons);
+        let map = space.sample_legal(&mut rng, 10_000).unwrap();
+        assert!(idx.insert(&self_sig, &map, 3.0));
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn projection_produces_admitted_mappings() {
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let donor_p = gemm(64, 64, 64);
+        let query_p = gemm(96, 48, 80);
+        let donor_space = MapSpace::new(&donor_p, &arch, &cons);
+        let query_space = MapSpace::new(&query_p, &arch, &cons);
+        let mut rng = Rng::new(11);
+        let mut projected = 0;
+        for _ in 0..20 {
+            let donor = donor_space.sample_legal(&mut rng, 10_000).expect("donor");
+            if let Some(m) = project_mapping(&query_space, &donor) {
+                projected += 1;
+                assert!(query_space.admits(&m));
+                assert!(m.is_legal(&query_p, &arch));
+                // loop orders travel verbatim
+                for (l, lvl) in m.levels.iter().enumerate() {
+                    assert_eq!(lvl.temporal_order, donor.levels[l].temporal_order);
+                }
+            }
+        }
+        assert!(projected > 0, "projection must land for same-family shapes");
+        // wrong level structure is refused, not mangled
+        let other = presets::chiplet16(2.0);
+        let other_space = MapSpace::new(&donor_p, &other, &cons);
+        let donor = donor_space.sample_legal(&mut rng, 10_000).unwrap();
+        if other.depth() != arch.depth() {
+            assert!(project_mapping(&other_space, &donor).is_none());
+        }
+    }
+
+    #[test]
+    fn ranker_prefers_candidates_near_cheap_neighbors() {
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let p = gemm(64, 64, 64);
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(5);
+        let cheap = space.sample_legal(&mut rng, 10_000).unwrap();
+        let dear = space.sample_legal(&mut rng, 10_000).unwrap();
+        let ranker = SurrogateRanker::from_neighbors(
+            &space,
+            &[(cheap.clone(), 1.0, 0.5), (dear.clone(), 100.0, 0.5)],
+        )
+        .expect("two neighbors");
+        assert_eq!(ranker.len(), 2);
+        let pc = space.encode(&cheap);
+        let pd = space.encode(&dear);
+        // sitting exactly on a neighbor pulls the score toward its cost
+        assert!(ranker.score(pc.as_ref()) < ranker.score(pd.as_ref()));
+    }
+
+    #[test]
+    fn ranked_source_emits_the_same_multiset_sorted() {
+        use std::cell::RefCell;
+
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let p = gemm(32, 32, 32);
+        let space = MapSpace::new(&p, &arch, &cons);
+        let mut rng = Rng::new(3);
+        let n = space.sample_legal(&mut rng, 10_000).unwrap();
+        let ranker =
+            Rc::new(SurrogateRanker::from_neighbors(&space, &[(n, 2.0, 0.1)]).unwrap());
+
+        // a source emitting two fixed batches of known fingerprints
+        struct Fixed {
+            batches: RefCell<Vec<Vec<Mapping>>>,
+        }
+        impl CandidateSource for Fixed {
+            fn name(&self) -> &str {
+                "fixed"
+            }
+            fn next_batch(
+                &mut self,
+                _space: &MapSpace,
+                _progress: &Progress,
+                out: &mut PackedBatch,
+            ) -> bool {
+                let mut b = self.batches.borrow_mut();
+                if b.is_empty() {
+                    return false;
+                }
+                for m in b.remove(0) {
+                    out.push_mapping(&m);
+                }
+                true
+            }
+        }
+        let mut batches = Vec::new();
+        let mut all = Vec::new();
+        for _ in 0..2 {
+            let batch: Vec<Mapping> = (0..300)
+                .map(|_| space.sample(&mut rng))
+                .collect();
+            all.extend(batch.iter().map(|m| space.encode(m).as_ref().fingerprint()));
+            batches.push(batch);
+        }
+        let mut src = RankedSource::new(
+            Box::new(Fixed { batches: RefCell::new(batches) }),
+            Rc::clone(&ranker),
+        );
+        assert_eq!(src.name(), "ranked(fixed)");
+        let (nl, nd) = space.packed_shape();
+        let progress = Progress {
+            batch_index: 0,
+            best: None,
+            last_scored: crate::engine::ScoredView::empty(),
+        };
+        let mut out = PackedBatch::new();
+        let mut got = Vec::new();
+        let mut chunks = 0;
+        loop {
+            out.reset(nl, nd);
+            if !src.next_batch(&space, &progress, &mut out) {
+                break;
+            }
+            assert!(out.len() <= RANKED_CHUNK, "sub-batches are capped");
+            chunks += 1;
+            for i in 0..out.len() {
+                got.push(out.get(i).fingerprint());
+            }
+        }
+        assert!(chunks >= 2 * (300 / RANKED_CHUNK), "both batches re-emitted");
+        // nothing dropped, nothing invented
+        let mut want = all.clone();
+        want.sort_unstable();
+        let mut have = got.clone();
+        have.sort_unstable();
+        assert_eq!(want, have);
+    }
+}

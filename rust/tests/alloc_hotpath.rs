@@ -145,4 +145,32 @@ fn steady_state_evaluate_loop_is_allocation_free() {
             batch.len()
         );
     }
+
+    // ---- transfer surrogate scoring (the ranked path's add-on) ----
+    // a RankedSource adds exactly one SurrogateRanker::score call per
+    // candidate on top of the evaluate loop asserted above; that score
+    // is pure arithmetic over the ranker's packed neighbor codes and
+    // must never touch the allocator
+    use union::transfer::SurrogateRanker;
+    let mut rng = Rng::new(7);
+    let neighbor = space.sample_legal(&mut rng, 10_000).expect("a legal neighbor exists");
+    let ranker = SurrogateRanker::from_neighbors(&space, &[(neighbor, 1.0, 0.25)])
+        .expect("one neighbor builds a ranker");
+    let mut acc = 0.0f64;
+    for i in 0..batch.len() {
+        acc += ranker.score(batch.get(i)); // warm (and defeat dead-code elim)
+    }
+    let before = allocations();
+    for i in 0..batch.len() {
+        acc += ranker.score(batch.get(i));
+    }
+    let after = allocations();
+    assert!(acc.is_finite(), "surrogate scores must stay finite");
+    assert_eq!(
+        after - before,
+        0,
+        "surrogate scoring allocated {} times for {} candidates",
+        after - before,
+        batch.len()
+    );
 }

@@ -8,7 +8,8 @@ use union::cost::{
     TileScratch,
 };
 use union::mapspace::{constraints_from_str, constraints_to_str, Constraints, MapSpace};
-use union::problem::{conv2d, gemm};
+use union::problem::{conv2d, gemm, Problem};
+use union::transfer::{project_mapping, ProblemFeatures, TransferIndex};
 use union::util::divisors::{divisors, tilings};
 use union::util::quickcheck::{Gen, QuickCheck};
 use union::util::rng::Rng;
@@ -491,6 +492,136 @@ fn random_constraints(g: &mut Gen) -> Constraints {
         c.max_parallel_dims_per_level = Some(g.range(1, 4));
     }
     c
+}
+
+/// Render the canonical signature `job_signature` (service/broker.rs)
+/// produces for a dense analytical EDP job — the string form the
+/// transfer index consumes (the exact-shape round trip against the real
+/// broker is pinned by its unit tests).
+fn transfer_sig(p: &Problem, samples: usize, seed: u64) -> String {
+    format!(
+        "union-job-v1|{}|arch=edge#00deadbeef00cafe|model=analytical|cons=|obj=edp|samples={samples}|seed={seed}",
+        p.signature()
+    )
+    .replace('\n', ";")
+}
+
+#[test]
+fn prop_transfer_distance_is_a_symmetric_premetric() {
+    // d(a,a) == 0 and d(a,b) == d(b,a) bit-for-bit, for every pair of
+    // same-family signatures; incompatible pairs are +inf both ways
+    QuickCheck::new().cases(150).seed(0x7F_A57).check("transfer-distance", |g| {
+        let pa = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let pb = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let sa = transfer_sig(&pa, 400, 1);
+        let sb = transfer_sig(&pb, 500, 2);
+        let fa = ProblemFeatures::from_signature(&sa)
+            .ok_or_else(|| format!("unparseable signature: {sa}"))?;
+        let fb = ProblemFeatures::from_signature(&sb)
+            .ok_or_else(|| format!("unparseable signature: {sb}"))?;
+        if fa.distance(&fa) != 0.0 {
+            return Err(format!("d(a,a) = {} != 0", fa.distance(&fa)));
+        }
+        let (ab, ba) = (fa.distance(&fb), fb.distance(&fa));
+        if ab.to_bits() != ba.to_bits() {
+            return Err(format!("asymmetric: d(a,b)={ab} vs d(b,a)={ba}"));
+        }
+        if !ab.is_finite() {
+            return Err(format!("same-family pair must be compatible: {ab}"));
+        }
+        // a CONV2D job is a different operator family: infinite both ways
+        let pc = conv2d(1, 4, 4, 8, 8, 3, 3, 1);
+        let fc = ProblemFeatures::from_signature(&transfer_sig(&pc, 400, 1))
+            .ok_or("unparseable conv signature")?;
+        if fa.distance(&fc).is_finite() || fc.distance(&fa).is_finite() {
+            return Err("cross-operator distance must be +inf".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_projected_seeds_always_pass_legality() {
+    // whatever the donor/query size pair, a projected mapping is either
+    // rejected (None) or passes the full legality check of the QUERY
+    // space — seeds never bypass admits/check
+    QuickCheck::new().cases(120).seed(0x5EED_CA57).check("transfer-project-legal", |g| {
+        let donor_p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let query_p = gemm(nice_size(g), nice_size(g), nice_size(g));
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let donor_space = MapSpace::new(&donor_p, &arch, &cons);
+        let query_space = MapSpace::new(&query_p, &arch, &cons);
+        let mut rng = Rng::new(g.rng().next_u64());
+        let Some(donor_m) = donor_space.sample_legal(&mut rng, 500) else { return Ok(()) };
+        match project_mapping(&query_space, &donor_m) {
+            None => Ok(()), // rejection is always a legal answer
+            Some(m) => {
+                if !query_space.admits(&m) {
+                    return Err(format!(
+                        "projected mapping not admitted: donor {donor_p} query {query_p}"
+                    ));
+                }
+                m.check(&query_p, &arch)
+                    .map_err(|e| format!("projected mapping illegal: {e} for {query_p}"))
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_transfer_lookup_is_insertion_order_invariant() {
+    // the index's neighbor ranking is a total order over
+    // (distance bits, signature): inserting the same entries forward or
+    // reversed must return identical neighbor lists for any query
+    QuickCheck::new().cases(80).seed(0x0DE2).check("transfer-lookup-deterministic", |g| {
+        let arch = presets::edge();
+        let cons = Constraints::default();
+        let n = g.range(2, 8);
+        let mut entries = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..n {
+            let p = gemm(nice_size(g), nice_size(g), nice_size(g));
+            let sig = transfer_sig(&p, 400, i as u64);
+            if !seen.insert(sig.clone()) {
+                continue; // same shape drawn twice: one canonical entry
+            }
+            let space = MapSpace::new(&p, &arch, &cons);
+            let mut rng = Rng::new(g.rng().next_u64());
+            let Some(m) = space.sample_legal(&mut rng, 500) else { continue };
+            let score = 1.0 + g.range(0, 1000) as f64;
+            entries.push((sig, m, score));
+        }
+        let mut fwd = TransferIndex::new();
+        for (sig, m, s) in &entries {
+            fwd.insert(sig, m, *s);
+        }
+        let mut rev = TransferIndex::new();
+        for (sig, m, s) in entries.iter().rev() {
+            rev.insert(sig, m, *s);
+        }
+        let query = transfer_sig(&gemm(nice_size(g), nice_size(g), nice_size(g)), 400, 99);
+        for k in 1..=entries.len().max(1) {
+            let a = fwd.lookup(&query, k);
+            let b = rev.lookup(&query, k);
+            if a.len() != b.len() {
+                return Err(format!("k={k}: {} vs {} neighbors", a.len(), b.len()));
+            }
+            for (x, y) in a.iter().zip(&b) {
+                if x.sig != y.sig
+                    || x.distance.to_bits() != y.distance.to_bits()
+                    || x.score.to_bits() != y.score.to_bits()
+                    || x.mapping != y.mapping
+                {
+                    return Err(format!(
+                        "k={k}: neighbor lists diverge at {} vs {}",
+                        x.sig, y.sig
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

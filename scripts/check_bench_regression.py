@@ -23,7 +23,14 @@ bench/baselines/:
   non-numeric value) fails with a clear per-file message, never a
   traceback;
 * plain (non-gated) metrics and timing means are recorded for the
-  trajectory but never gate.
+  trajectory but never gate;
+* the three bench registries must agree: every ``--bench X`` in CI's
+  bench-regression job needs a committed ``BENCH_X.json`` baseline and
+  a ``rust/benches/X.rs`` source, and every committed baseline must be
+  in CI's bench list — a bench dropped from any one of the three fails
+  with a message naming it (the paper-figure benches — ``ablations``,
+  ``fig*``, ``table3_ttgt`` — are artifact generators, deliberately in
+  neither CI's gate nor the baselines).
 
 Refresh baselines after a legitimate speedup with ``--update`` (see
 bench/README.md). Only stdlib is used; no pip installs.
@@ -33,6 +40,7 @@ import argparse
 import json
 import os
 import pathlib
+import re
 import shutil
 import sys
 
@@ -99,6 +107,45 @@ def render_table(rows, markdown=False):
     return "\n".join(lines)
 
 
+def coverage_failures(baselines):
+    """Cross-check the three bench registries against each other.
+
+    Returns failure strings when CI's ``--bench X`` list, the committed
+    ``BENCH_X.json`` baselines and the ``rust/benches/X.rs`` sources
+    disagree — a gated bench silently dropped from any one of them is
+    exactly the hole this guards against. Paper-figure benches live in
+    ``rust/benches/`` without baselines or a CI gate entry by design,
+    so bench sources are only required to *exist*, never to be gated.
+    """
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    ci_path = repo / ".github" / "workflows" / "ci.yml"
+    benches_dir = repo / "rust" / "benches"
+    failures = []
+    if not ci_path.exists() or not benches_dir.is_dir():
+        # running against an exported tree (bench JSON only): nothing
+        # to cross-check, and inventing failures would block --update
+        return failures
+    ci_names = set(re.findall(r"--bench\s+([A-Za-z0-9_]+)", ci_path.read_text()))
+    baseline_names = {p.name[len("BENCH_"):-len(".json")]
+                      for p in baselines.glob("BENCH_*.json")}
+    for name in sorted(ci_names - baseline_names):
+        failures.append(
+            f"coverage: CI runs --bench {name} but {baselines}/BENCH_{name}.json "
+            f"is not committed — the gate would fail it as an unseeded bench; "
+            f"seed it with --update and commit the baseline")
+    for name in sorted(baseline_names - ci_names):
+        failures.append(
+            f"coverage: baseline BENCH_{name}.json is committed but ci.yml's "
+            f"bench-regression job never runs --bench {name} — the gate would "
+            f"fail on the missing current file; add it to the cargo bench line")
+    for name in sorted(ci_names | baseline_names):
+        if not (benches_dir / f"{name}.rs").exists():
+            failures.append(
+                f"coverage: bench '{name}' is registered (CI and/or baseline) "
+                f"but rust/benches/{name}.rs does not exist")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baselines", default="bench/baselines",
@@ -135,7 +182,7 @@ def main():
     if not baseline_files:
         sys.exit(f"no baselines in {baselines} — run with --update to create them")
 
-    failures = []
+    failures = coverage_failures(baselines)
     rows = []
     for base_path in baseline_files:
         cur_path = current / base_path.name
@@ -204,7 +251,8 @@ def main():
               "seeding, refresh with:\n"
               "  UNION_BENCH_DIR=$PWD/out/bench cargo bench --bench perf_hotpath "
               "--bench network_sweep --bench dse_sweep --bench service_throughput "
-              "--bench service_load --bench sparse_sweep\n"
+              "--bench service_load --bench sparse_sweep --bench cluster_load "
+              "--bench transfer_warm\n"
               "  python3 scripts/check_bench_regression.py --update\n"
               "and commit bench/baselines/ (see bench/README.md).", file=sys.stderr)
         sys.exit(1)

@@ -13,7 +13,11 @@
 #   6. a 2-peer cluster answers rendezvous-routed (`--peers`) and
 #      router-proxied requests byte-identically to the direct answer,
 #      keeps answering after one peer is killed (failover), and ships
-#      its cache to a fresh file via `warm --sync-from`.
+#      its cache to a fresh file via `warm --sync-from`;
+#   7. transfer-guided warm starts are advisory: a near-duplicate job
+#      served with the transfer index scores within 1.02x of the same
+#      job on a `--no-transfer` server, the warm server's status counts
+#      the lookup/hit, and the `--no-transfer` server's counters stay 0.
 #
 # Used by CI's service-smoke job; runnable locally the same way:
 #   scripts/service_smoke.sh
@@ -194,5 +198,63 @@ echo "== broadcast shutdown reaches the survivor despite the dead peer =="
 "$BIN" client shutdown --peers "$PEERS" | tee "$OUT/cluster_shutdown.txt"
 wait "$PID_A"
 trap - EXIT
+
+# ---- transfer-guided warm starts: advisory, counted, switchable ----
+
+# the donor job populates the cache + transfer index; the query is the
+# same operator family at a scaled size, so on the warm server it is a
+# cache MISS that warm-starts from the donor's winner
+DONOR=(--workload gemm:64x24x24 --arch edge --cost analytical --objective edp --effort 200 --seed 7)
+QUERY=(--workload gemm:128x24x24 --arch edge --cost analytical --objective edp --effort 200 --seed 7)
+
+echo "== transfer on: donor then near-duplicate query =="
+PORT_T=$(free_port)
+CACHE_T="$OUT/cache_transfer.jsonl"
+rm -f "$CACHE_T"
+"$BIN" serve --port "$PORT_T" --cache "$CACHE_T" --shards 2 &
+PID_T=$!
+trap 'kill "$PID_T" 2>/dev/null || true' EXIT
+wait_ready "$PORT_T" "$PID_T"
+"$BIN" client search "${DONOR[@]}" --port "$PORT_T" --json > "$OUT/transfer_donor.json"
+"$BIN" client search "${QUERY[@]}" --port "$PORT_T" --json | tee "$OUT/transfer_on.json"
+grep -q '"cached":false' "$OUT/transfer_on.json"
+"$BIN" client status --port "$PORT_T" | tee "$OUT/transfer_status_on.txt"
+# the query's enqueue consulted the index and found the donor
+grep -Eq 'transfer: index_entries=[1-9]' "$OUT/transfer_status_on.txt"
+grep -Eq 'lookups=[1-9]' "$OUT/transfer_status_on.txt"
+grep -Eq 'hits=[1-9]' "$OUT/transfer_status_on.txt"
+"$BIN" client shutdown --port "$PORT_T"
+wait "$PID_T"
+trap - EXIT
+
+echo "== transfer off: same jobs on a --no-transfer server, fresh cache =="
+PORT_N=$(free_port)
+CACHE_N="$OUT/cache_no_transfer.jsonl"
+rm -f "$CACHE_N"
+"$BIN" serve --port "$PORT_N" --cache "$CACHE_N" --shards 2 --no-transfer &
+PID_N=$!
+trap 'kill "$PID_N" 2>/dev/null || true' EXIT
+wait_ready "$PORT_N" "$PID_N"
+"$BIN" client search "${DONOR[@]}" --port "$PORT_N" --json > "$OUT/transfer_donor_off.json"
+"$BIN" client search "${QUERY[@]}" --port "$PORT_N" --json | tee "$OUT/transfer_off.json"
+"$BIN" client status --port "$PORT_N" | tee "$OUT/transfer_status_off.txt"
+grep -q 'transfer: index_entries=0 lookups=0 hits=0 seeded=0 wins=0' "$OUT/transfer_status_off.txt"
+"$BIN" client shutdown --port "$PORT_N"
+wait "$PID_N"
+trap - EXIT
+
+echo "== warm-started answer within the 1.02x quality tolerance =="
+# the portfolio's hill-climbing phase reacts to the incumbent, so warm
+# answers are pinned to a tolerance, not bit-equality (the strict
+# never-worse guarantee on progress-independent streams is the
+# transfer_warm bench's gate)
+python3 - "$OUT/transfer_on.json" "$OUT/transfer_off.json" <<'EOF'
+import json, sys
+on = json.load(open(sys.argv[1]))
+off = json.load(open(sys.argv[2]))
+assert on["signature"] == off["signature"], "the two servers saw different jobs"
+assert on["score"] <= off["score"] * 1.02, \
+    f"warm-started score {on['score']} worse than 1.02x cold {off['score']}"
+EOF
 
 echo "service smoke OK"
