@@ -1,0 +1,116 @@
+//! Telemetry end to end in one process: start `union serve`'s server on
+//! an ephemeral port, generate a little traffic, then scrape the
+//! metrics registry (counters + phase histograms + Prometheus text) and
+//! replay the flight recorder over the same wire protocol.
+//!
+//!     cargo run --release --example telemetry_scrape
+//!
+//! Against a long-running daemon the scraping half of this is just
+//! `union metrics` / `union trace --follow`.
+
+use union::mappers::Objective;
+use union::service::{client_request, JobSpec, Json, Request, ServeConfig, Server};
+use union::telemetry::HistogramSnapshot;
+
+fn spec(m: u64) -> JobSpec {
+    JobSpec {
+        workload: format!("gemm:{m}x32x64"),
+        arch: "edge".into(),
+        cost: "analytical".into(),
+        objective: Objective::Edp,
+        samples: 200,
+        seed: 42,
+        constraints: String::new(),
+    }
+}
+
+fn main() -> Result<(), String> {
+    let server = Server::bind(ServeConfig { port: 0, ..ServeConfig::default() })?;
+    let addr = server.local_addr()?.to_string();
+    println!("serving on {addr}");
+    let daemon = std::thread::spawn(move || server.run());
+
+    // traffic: two fresh searches and one cache hit
+    for m in [64, 96, 64] {
+        let r = client_request(
+            &addr,
+            &Request::Search { id: None, spec: spec(m), progress: false },
+        )?;
+        println!(
+            "search gemm:{m}x32x64 -> cached={} score={:.4e}",
+            r.bool_field("cached").unwrap_or(false),
+            r.num("score").unwrap_or(f64::NAN),
+        );
+    }
+
+    // one metrics scrape returns the whole registry: counters from
+    // every MetricSource, histograms, and ready-to-serve Prometheus text
+    let metrics = client_request(&addr, &Request::Metrics { id: Some("m1".into()) })?;
+    let counters = metrics.get("counters").ok_or("metrics without counters")?;
+    println!("\ncounters of note:");
+    for name in ["broker_requests", "broker_searched", "broker_cache_hits", "engine_scored"] {
+        println!("  {name} = {}", counters.num(name).unwrap_or(0.0));
+    }
+
+    println!("\nsearch-phase spans (log2-bucketed, microseconds):");
+    if let Some(Json::Obj(hists)) = metrics.get("histograms") {
+        for (name, h) in hists {
+            if !name.starts_with("engine_phase_") {
+                continue;
+            }
+            let snap = HistogramSnapshot {
+                count: h.u64_field("count").unwrap_or(0),
+                sum: h.u64_field("sum").unwrap_or(0),
+                buckets: h
+                    .arr("buckets")
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|pair| match pair {
+                        Json::Arr(v) => match (v.first(), v.get(1)) {
+                            (Some(Json::Num(i)), Some(Json::Num(n))) => {
+                                Some((*i as usize, *n as u64))
+                            }
+                            _ => None,
+                        },
+                        _ => None,
+                    })
+                    .collect(),
+            };
+            println!(
+                "  {name}: n={} mean={:.1}us p95<={}us",
+                snap.count,
+                snap.mean(),
+                snap.quantile_bound(0.95),
+            );
+        }
+    }
+
+    let prom = metrics.str("prom").unwrap_or("");
+    println!(
+        "\nPrometheus text: {} lines (first: {})",
+        prom.lines().count(),
+        prom.lines().next().unwrap_or("-"),
+    );
+
+    // the flight recorder holds the recent structured events — here the
+    // cache misses/hit and job admissions from the traffic above
+    let trace = client_request(
+        &addr,
+        &Request::Trace { id: Some("t1".into()), since: None, limit: Some(16) },
+    )?;
+    println!("\nflight recorder (next_since={}):", trace.num("next_since").unwrap_or(0.0));
+    for ev in trace.arr("events").unwrap_or(&[]) {
+        println!(
+            "  #{} +{}us {} {}",
+            ev.num("seq").unwrap_or(0.0),
+            ev.num("t_us").unwrap_or(0.0),
+            ev.str("event").unwrap_or("?"),
+            ev.str("detail").unwrap_or(""),
+        );
+    }
+
+    let bye = client_request(&addr, &Request::Shutdown { id: None })?;
+    assert_eq!(bye.bool_field("ok"), Some(true));
+    daemon.join().map_err(|_| "server thread panicked")??;
+    Ok(())
+}

@@ -199,6 +199,10 @@ fn main() {
     b.metric("service_load_p95_ms", lat.p95 * 1e3);
     b.metric("service_load_clients", CLIENTS as f64);
     b.metric("service_load_pool_jobs", POOL as f64);
+    // full latency distribution (µs, log₂ buckets) — recorded for the
+    // trajectory; the regression checker validates shape, never gates
+    let lat_us: Vec<u64> = latencies.iter().map(|&s| (s * 1e6) as u64).collect();
+    b.histogram("service_latency", &lat_us);
 
     let bye = client_request(&addr, &Request::Shutdown { id: None }).expect("shutdown served");
     assert_eq!(bye.bool_field("ok"), Some(true));

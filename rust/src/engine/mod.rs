@@ -61,6 +61,8 @@ use crate::mapping::{Mapping, PackedBatch, PackedMapping, PackedRef};
 use crate::mapspace::MapSpace;
 use crate::util::par::{default_threads, par_map_with_state};
 
+use std::time::Instant;
+
 use memo::{EvalMemo, MemoEntry};
 
 /// Tuning knobs for an [`Engine`]. The defaults are what every mapper's
@@ -134,18 +136,21 @@ pub struct EngineStats {
 
 impl EngineStats {
     /// Fold another stats block into this one (a [`Session`] aggregates
-    /// per-job engine stats into run totals this way).
+    /// per-job engine stats into run totals this way). Saturating: a
+    /// long-lived serving process folding millions of jobs must pin at
+    /// `usize::MAX` rather than wrap (the merge-arithmetic test in
+    /// `tests/telemetry.rs` covers both the plain and saturated cases).
     pub fn absorb(&mut self, other: &EngineStats) {
-        self.batches += other.batches;
-        self.proposed += other.proposed;
-        self.scored += other.scored;
-        self.cost_evals += other.cost_evals;
-        self.memo_hits += other.memo_hits;
-        self.memo_misses += other.memo_misses;
-        self.footprint_hits += other.footprint_hits;
-        self.footprint_misses += other.footprint_misses;
-        self.pruned += other.pruned;
-        self.rejected += other.rejected;
+        self.batches = self.batches.saturating_add(other.batches);
+        self.proposed = self.proposed.saturating_add(other.proposed);
+        self.scored = self.scored.saturating_add(other.scored);
+        self.cost_evals = self.cost_evals.saturating_add(other.cost_evals);
+        self.memo_hits = self.memo_hits.saturating_add(other.memo_hits);
+        self.memo_misses = self.memo_misses.saturating_add(other.memo_misses);
+        self.footprint_hits = self.footprint_hits.saturating_add(other.footprint_hits);
+        self.footprint_misses = self.footprint_misses.saturating_add(other.footprint_misses);
+        self.pruned = self.pruned.saturating_add(other.pruned);
+        self.rejected = self.rejected.saturating_add(other.rejected);
     }
 
     /// Evaluation-memo hit rate over all lookups (0 when memoization
@@ -167,6 +172,66 @@ impl EngineStats {
         } else {
             self.footprint_hits as f64 / lookups as f64
         }
+    }
+}
+
+impl crate::telemetry::MetricSource for EngineStats {
+    fn metric_prefix(&self) -> &'static str {
+        "engine"
+    }
+
+    fn emit_metrics(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("batches", self.batches as f64);
+        out("proposed", self.proposed as f64);
+        out("scored", self.scored as f64);
+        out("cost_evals", self.cost_evals as f64);
+        out("memo_hits", self.memo_hits as f64);
+        out("memo_misses", self.memo_misses as f64);
+        out("footprint_hits", self.footprint_hits as f64);
+        out("footprint_misses", self.footprint_misses as f64);
+        out("pruned", self.pruned as f64);
+        out("rejected", self.rejected as f64);
+    }
+}
+
+/// Wall-time the engine spent in each search phase, in nanoseconds —
+/// the **search-phase spans**. Plain (non-atomic) accumulators advanced
+/// **per batch** with one `Instant` pair around each pipeline pass, so
+/// the per-candidate hot path stays telemetry-free; a [`Session`] folds
+/// them into the global `engine_phase_*_us` histograms once per job.
+/// Timing reads never feed back into search decisions, so results stay
+/// bit-identical and thread-count-invariant with spans active.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseNanos {
+    /// Candidate generation: time inside `CandidateSource::next_batch`.
+    pub sample: u64,
+    /// Main-thread memo pass: evaluation-memo lookups plus the
+    /// footprint-memo capacity pre-filter.
+    pub memo: u64,
+    /// Parallel evaluation pass over memo misses (decode, legality,
+    /// lower bound, lean cost).
+    pub evaluate: u64,
+    /// Main-thread merge pass: memo write-back and the incumbent fold
+    /// that feeds the next batch's pruning bound.
+    pub prune: u64,
+}
+
+impl PhaseNanos {
+    /// Sum of all phase spans.
+    pub fn total(&self) -> u64 {
+        self.sample
+            .saturating_add(self.memo)
+            .saturating_add(self.evaluate)
+            .saturating_add(self.prune)
+    }
+
+    /// Fold another span block into this one (saturating, like
+    /// [`EngineStats::absorb`]).
+    pub fn absorb(&mut self, other: &PhaseNanos) {
+        self.sample = self.sample.saturating_add(other.sample);
+        self.memo = self.memo.saturating_add(other.memo);
+        self.evaluate = self.evaluate.saturating_add(other.evaluate);
+        self.prune = self.prune.saturating_add(other.prune);
     }
 }
 
@@ -292,6 +357,7 @@ pub struct Engine<'a> {
     memo: EvalMemo,
     tiles: FootprintMemo,
     stats: EngineStats,
+    phase: PhaseNanos,
     incumbent: Option<Incumbent>,
     // ---- reusable hot-path buffers (see module docs) ----
     /// The previous processed batch (backs `Progress::last_scored`).
@@ -360,6 +426,7 @@ impl<'a> Engine<'a> {
             memo,
             tiles,
             stats: EngineStats::default(),
+            phase: PhaseNanos::default(),
             incumbent: None,
             prev_batch,
             spare_batch,
@@ -384,6 +451,11 @@ impl<'a> Engine<'a> {
 
     pub fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    /// Wall-time spent per search phase so far (see [`PhaseNanos`]).
+    pub fn phase_nanos(&self) -> PhaseNanos {
+        self.phase
     }
 
     /// Current incumbent score, if any.
@@ -428,7 +500,11 @@ impl<'a> Engine<'a> {
                         scored: &self.prev_scored,
                     },
                 };
-                source.next_batch(self.space, &progress, &mut out)
+                let t = Instant::now();
+                let keep = source.next_batch(self.space, &progress, &mut out);
+                self.phase.sample =
+                    self.phase.sample.saturating_add(t.elapsed().as_nanos() as u64);
+                keep
             };
             if out.is_empty() {
                 self.spare_batch = out;
@@ -523,6 +599,7 @@ impl<'a> Engine<'a> {
 
         // main-thread memo pass: resolve repeats and capacity violators
         // (and pre-populate footprint chains for the workers to reuse)
+        let t_memo = Instant::now();
         self.plan.clear();
         self.miss_idx.clear();
         'candidates: for i in 0..batch.len() {
@@ -565,6 +642,7 @@ impl<'a> Engine<'a> {
             self.plan.push(Plan::Miss);
             self.miss_idx.push(i as u32);
         }
+        self.phase.memo = self.phase.memo.saturating_add(t_memo.elapsed().as_nanos() as u64);
 
         // parallel pass over the misses; small batches (heuristic climb
         // rounds, decoupled grafts) stay sequential — thread spawn would
@@ -582,6 +660,7 @@ impl<'a> Engine<'a> {
         let objective = self.objective;
         let prune = self.config.prune;
         let footprints: Option<&FootprintMemo> = if memoize { Some(&self.tiles) } else { None };
+        let t_eval = Instant::now();
         par_map_with_state(
             &self.miss_idx,
             threads,
@@ -618,8 +697,13 @@ impl<'a> Engine<'a> {
                 }
             },
         );
+        self.phase.evaluate =
+            self.phase.evaluate.saturating_add(t_eval.elapsed().as_nanos() as u64);
 
         // main-thread merge in batch order: memo writes + incumbent fold
+        // (timed as the `prune` span: this pass maintains the incumbent
+        // that becomes the next batch's pruning bound)
+        let t_prune = Instant::now();
         let mut oi = 0usize;
         for (i, p) in self.plan.iter().enumerate() {
             match p {
@@ -713,6 +797,8 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        self.phase.prune =
+            self.phase.prune.saturating_add(t_prune.elapsed().as_nanos() as u64);
     }
 }
 
@@ -828,6 +914,26 @@ mod tests {
             via_mappings.result().unwrap().mapping,
             via_packed.result().unwrap().mapping
         );
+    }
+
+    #[test]
+    fn phase_spans_advance_with_work() {
+        let (p, a, c) = setup();
+        let space = MapSpace::new(&p, &a, &c);
+        let model = AnalyticalModel::new(EnergyTable::default_8bit());
+        let mut engine = Engine::new(&space, &model, Objective::Edp);
+        assert_eq!(engine.phase_nanos(), PhaseNanos::default());
+        engine.evaluate(sample_batch(&space, 7, 200));
+        let ph = engine.phase_nanos();
+        // the explicit-batch entry point skips sampling, but the three
+        // pipeline passes all ran (spans are monotone, possibly 0 on a
+        // coarse clock — total strictly positive is the robust check)
+        assert_eq!(ph.sample, 0, "no source, no sample span");
+        assert!(ph.total() > 0, "pipeline passes must accumulate time");
+        let mut folded = PhaseNanos::default();
+        folded.absorb(&ph);
+        folded.absorb(&ph);
+        assert_eq!(folded.evaluate, ph.evaluate.saturating_mul(2));
     }
 
     #[test]

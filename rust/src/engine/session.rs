@@ -162,11 +162,20 @@ impl<'m> Session<'m> {
             engine.run(source.as_mut());
         }
         let result = engine.result();
+        let phase = engine.phase_nanos();
         let (memo, tiles, stats) = engine.into_parts();
         self.memo = memo;
         self.tiles = tiles;
         self.totals.absorb(&stats);
         self.jobs += 1;
+        // search-phase spans: one histogram observation per job per
+        // phase (engine-side accumulation is per batch; nothing here
+        // runs per candidate, and nothing reads telemetry back)
+        crate::telemetry::histogram("engine_phase_sample_us").record(phase.sample / 1_000);
+        crate::telemetry::histogram("engine_phase_memo_us").record(phase.memo / 1_000);
+        crate::telemetry::histogram("engine_phase_evaluate_us").record(phase.evaluate / 1_000);
+        crate::telemetry::histogram("engine_phase_prune_us").record(phase.prune / 1_000);
+        crate::telemetry::counter("engine_jobs_total").incr();
         (result, stats)
     }
 }

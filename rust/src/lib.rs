@@ -63,6 +63,13 @@
 //! re-use prior winners as warm-start seeds, so *near*-duplicate
 //! traffic converges in a fraction of a cold search's samples.
 //!
+//! Cross-cutting all of it, the [`telemetry`] module is the
+//! observability layer: a process-wide metrics registry (counters,
+//! gauges, log₂ histograms on relaxed atomics), per-job search-phase
+//! spans, and a bounded flight recorder of recent service events —
+//! exposed over the wire (`{"type":"metrics"}` / `{"type":"trace"}`)
+//! and through `union metrics` / `union trace`.
+//!
 //! `docs/ARCHITECTURE.md` maps these layers end to end and names the
 //! invariant each one pins; `docs/PROTOCOL.md` is the normative wire
 //! reference for the serving protocol.
@@ -87,6 +94,7 @@ pub mod problem;
 pub mod report;
 pub mod runtime;
 pub mod service;
+pub mod telemetry;
 pub mod transfer;
 pub mod util;
 

@@ -19,6 +19,9 @@
 //! union client    search|status|shutdown [--port N] [--workload <spec>]
 //!                 [--peers host:port,...] [--progress] [--retries N]
 //!                 [--no-retry] ...
+//! union metrics   [--port N] [--host H] [--peers host:port,...]
+//!                 [--json] [--prom] [--watch] [--interval-ms N]
+//! union trace     [--port N] [--host H] [--limit N] [--follow] [--json]
 //! union warm      --cache file.jsonl [--model <net>] [--arch <spec>]
 //!                 [--peers host:port,...] [--sync-from host:port] ...
 //! union casestudy <id> [--thorough] | --list
@@ -69,6 +72,8 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         Some("serve") => cmd_serve(&args),
         Some("router") => cmd_router(&args),
         Some("client") => cmd_client(&args),
+        Some("metrics") => cmd_metrics(&args),
+        Some("trace") => cmd_trace(&args),
         Some("warm") => cmd_warm(&args),
         Some("casestudy") => cmd_casestudy(&args),
         Some("validate") => cmd_validate(&args),
@@ -114,6 +119,15 @@ subcommands:
                     [--mapping-only] [--progress]
             (--peers routes to the signature's owner with failover;
              status/shutdown broadcast to every peer)
+  metrics   [--port N] [--host H] [--peers host:port,...] [--json] [--prom]
+            [--watch] [--interval-ms N]
+            (scrape one server's telemetry registry — counters, phase
+             histograms — or aggregate across peers; --prom emits
+             Prometheus text, --watch re-scrapes on an interval)
+  trace     [--port N] [--host H] [--limit N] [--follow] [--json]
+            [--interval-ms N]
+            (dump the server's flight recorder — recent structured
+             events; --follow polls for new events by sequence number)
   warm      --cache file.jsonl [--model <net>] [--arch <spec>] [--cost C]
             [--objective O] [--effort E] [--batch N] [--seed N] [--shards N]
             [--sync-from host:port]   (import a peer's cache snapshot first;
@@ -777,6 +791,188 @@ fn broadcast_to_peers(
         return Err("no cluster member answered".into());
     }
     Ok(())
+}
+
+/// Decode one `"histograms"` entry of a metrics response back into a
+/// mergeable snapshot (the inverse of the server's exposition — used
+/// for `--peers` cross-peer aggregation).
+fn histogram_from_json(doc: &service::Json) -> Option<union::telemetry::HistogramSnapshot> {
+    let count = doc.u64_field("count")?;
+    let sum = doc.u64_field("sum")?;
+    let mut buckets = Vec::new();
+    for pair in doc.arr("buckets")? {
+        if let service::Json::Arr(v) = pair {
+            if let (Some(service::Json::Num(i)), Some(service::Json::Num(n))) =
+                (v.first(), v.get(1))
+            {
+                buckets.push((*i as usize, *n as u64));
+            }
+        }
+    }
+    Some(union::telemetry::HistogramSnapshot { count, sum, buckets })
+}
+
+/// Fold one metrics response into the aggregate maps: counters sum by
+/// name, histograms merge bucket-wise.
+fn merge_metrics_doc(
+    doc: &service::Json,
+    counters: &mut std::collections::BTreeMap<String, f64>,
+    hists: &mut std::collections::BTreeMap<String, union::telemetry::HistogramSnapshot>,
+) {
+    if let Some(service::Json::Obj(fields)) = doc.get("counters") {
+        for (name, v) in fields {
+            if let service::Json::Num(n) = v {
+                *counters.entry(name.clone()).or_insert(0.0) += n;
+            }
+        }
+    }
+    if let Some(service::Json::Obj(fields)) = doc.get("histograms") {
+        for (name, v) in fields {
+            if let Some(snap) = histogram_from_json(v) {
+                hists.entry(name.clone()).or_default().merge(&snap);
+            }
+        }
+    }
+}
+
+fn print_metrics(
+    counters: &std::collections::BTreeMap<String, f64>,
+    hists: &std::collections::BTreeMap<String, union::telemetry::HistogramSnapshot>,
+) {
+    for (name, v) in counters {
+        println!("{name} = {v}");
+    }
+    for (name, h) in hists {
+        println!(
+            "{name}: n={} mean={:.1} p50<={} p95<={} p99<={}",
+            h.count,
+            h.mean(),
+            h.quantile_bound(0.50),
+            h.quantile_bound(0.95),
+            h.quantile_bound(0.99),
+        );
+    }
+}
+
+fn cmd_metrics(args: &Args) -> Result<(), String> {
+    let json_output = args.switch("json");
+    let prom = args.switch("prom");
+    let watch = args.switch("watch");
+    let interval = Duration::from_millis(args.usize_flag("interval-ms", 2000)? as u64);
+    if prom && args.flag("peers").is_some() {
+        return Err(
+            "--prom renders one peer's registry verbatim; drop --peers (or scrape each \
+             peer's port separately)"
+                .into(),
+        );
+    }
+    let request = Request::Metrics { id: None };
+    loop {
+        match args.flag("peers") {
+            Some(spec) => {
+                let cluster = Cluster::from_spec(spec)?;
+                let mut counters = std::collections::BTreeMap::new();
+                let mut hists = std::collections::BTreeMap::new();
+                let mut answered = 0usize;
+                for member in cluster.members() {
+                    match service::client_request(member, &request) {
+                        Ok(doc) if doc.str("type") == Some("metrics") => {
+                            answered += 1;
+                            if json_output {
+                                println!("{}", doc.to_line());
+                            }
+                            merge_metrics_doc(&doc, &mut counters, &mut hists);
+                        }
+                        Ok(doc) => println!(
+                            "peer {member}: unexpected response: {}",
+                            doc.str("message").unwrap_or("(no message)")
+                        ),
+                        Err(e) => println!("peer {member}: error: {e}"),
+                    }
+                }
+                if answered == 0 {
+                    return Err("no cluster member answered".into());
+                }
+                if !json_output {
+                    println!("aggregate over {answered}/{} peers:", cluster.len());
+                    print_metrics(&counters, &hists);
+                }
+            }
+            None => {
+                let addr = format!(
+                    "{}:{}",
+                    args.flag_or("host", "127.0.0.1"),
+                    parse_port_flag(args, 7415)?
+                );
+                let doc = service::client_request(&addr, &request)?;
+                if doc.str("type") != Some("metrics") {
+                    return Err(doc
+                        .str("message")
+                        .unwrap_or("unexpected response to metrics request")
+                        .to_string());
+                }
+                if json_output {
+                    println!("{}", doc.to_line());
+                } else if prom {
+                    print!("{}", doc.str("prom").unwrap_or(""));
+                } else {
+                    let mut counters = std::collections::BTreeMap::new();
+                    let mut hists = std::collections::BTreeMap::new();
+                    merge_metrics_doc(&doc, &mut counters, &mut hists);
+                    print_metrics(&counters, &hists);
+                }
+            }
+        }
+        if !watch {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+        println!();
+    }
+}
+
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    let addr = format!(
+        "{}:{}",
+        args.flag_or("host", "127.0.0.1"),
+        parse_port_flag(args, 7415)?
+    );
+    let limit = match args.flag("limit") {
+        Some(_) => Some(args.usize_flag("limit", 256)?),
+        None => None,
+    };
+    let follow = args.switch("follow");
+    let json_output = args.switch("json");
+    let interval = Duration::from_millis(args.usize_flag("interval-ms", 1000)? as u64);
+    let mut since: Option<u64> = None;
+    loop {
+        let doc =
+            service::client_request(&addr, &Request::Trace { id: None, since, limit })?;
+        if doc.str("type") != Some("trace") {
+            return Err(doc
+                .str("message")
+                .unwrap_or("unexpected response to trace request")
+                .to_string());
+        }
+        for ev in doc.arr("events").unwrap_or(&[]) {
+            if json_output {
+                println!("{}", ev.to_line());
+            } else {
+                println!(
+                    "#{} +{}us {} {}",
+                    ev.num("seq").unwrap_or(0.0),
+                    ev.num("t_us").unwrap_or(0.0),
+                    ev.str("event").unwrap_or("?"),
+                    ev.str("detail").unwrap_or(""),
+                );
+            }
+        }
+        if !follow {
+            return Ok(());
+        }
+        since = doc.u64_field("next_since").or(since);
+        std::thread::sleep(interval);
+    }
 }
 
 fn cmd_warm(args: &Args) -> Result<(), String> {

@@ -109,6 +109,22 @@ pub struct NetworkStats {
     pub engine: EngineStats,
 }
 
+impl crate::telemetry::MetricSource for NetworkStats {
+    fn metric_prefix(&self) -> &'static str {
+        "network"
+    }
+
+    fn emit_metrics(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("nodes", self.nodes as f64);
+        out("layers", self.layers as f64);
+        out("distinct_jobs", self.distinct_jobs as f64);
+        out("dedup_hit_rate", self.dedup_hit_rate);
+        out("warm_seeded_jobs", self.warm_seeded_jobs as f64);
+        out("transfer_seeded_jobs", self.transfer_seeded_jobs as f64);
+        out("transfer_wins", self.transfer_wins as f64);
+    }
+}
+
 /// Cross-run warm-start cache: the best mapping seen per *arch-free* job
 /// signature. A design-space sweep maps the same workload graph onto
 /// many architecture points; layer shapes recur across points even

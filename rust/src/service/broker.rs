@@ -246,6 +246,37 @@ pub struct BrokerStats {
     pub engine: EngineStats,
 }
 
+impl crate::telemetry::MetricSource for BrokerStats {
+    fn metric_prefix(&self) -> &'static str {
+        "broker"
+    }
+
+    fn emit_metrics(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("requests", self.requests as f64);
+        out("cache_hits", self.cache_hits as f64);
+        out("coalesced", self.coalesced as f64);
+        out("searched", self.searched as f64);
+        out("overloaded", self.overloaded as f64);
+        out("errors", self.errors as f64);
+        out("evaluates", self.evaluates as f64);
+        out("progress_events", self.progress_events as f64);
+        out("cache_warm_hits", self.cache_warm_hits as f64);
+        out("cache_cold_hits", self.cache_cold_hits as f64);
+        out("cache_warm_evictions", self.cache_warm_evictions as f64);
+        out("transfer_lookups", self.transfer_lookups as f64);
+        out("transfer_hits", self.transfer_hits as f64);
+        out("transfer_seeded", self.transfer_seeded as f64);
+        out("transfer_wins", self.transfer_wins as f64);
+        out("transfer_index_entries", self.transfer_index_entries as f64);
+    }
+}
+
+/// Signature prefix for flight-recorder details: long enough to
+/// identify the job, short enough to keep events one-line.
+fn sig_short(sig: &str) -> &str {
+    &sig[..sig.len().min(56)]
+}
+
 struct Ticket {
     sig: String,
     req: JobRequest,
@@ -254,6 +285,9 @@ struct Ticket {
     /// neighbor). The worker projects these into the job's map space
     /// and seeds/ranks the search with them.
     neighbors: Vec<TransferNeighbor>,
+    /// Enqueue instant — start of the `service_request_wait_us` span a
+    /// worker records when it dequeues the ticket.
+    enqueued_at: std::time::Instant,
 }
 
 /// Per-inflight-job waiter lists: everyone gets the final [`JobDone`];
@@ -411,6 +445,11 @@ impl Broker {
         } else {
             Vec::new()
         };
+        if hit.is_some() {
+            crate::telemetry::event("cache_hit", sig_short(&sig));
+        } else {
+            crate::telemetry::event("cache_miss", sig_short(&sig));
+        }
         let mut st = self.shared.state.lock().unwrap();
         if let Some(hit) = hit {
             st.stats.cache_hits += 1;
@@ -439,7 +478,12 @@ impl Broker {
         }
         if st.queues[shard].len() >= self.shared.config.queue_capacity {
             st.stats.overloaded += 1;
-            return Submitted::Overloaded { shard, depth: st.queues[shard].len() };
+            let depth = st.queues[shard].len();
+            crate::telemetry::event(
+                "overload_refusal",
+                &format!("shard={shard} depth={depth} {}", sig_short(&sig)),
+            );
+            return Submitted::Overloaded { shard, depth };
         }
         let (tx, rx) = channel();
         let mut waiters = Waiters { done: vec![tx], progress: Vec::new() };
@@ -450,8 +494,23 @@ impl Broker {
                 st.stats.transfer_hits += 1;
             }
         }
+        crate::telemetry::event(
+            "job_admitted",
+            &format!("shard={shard} {}", sig_short(&sig)),
+        );
+        if !neighbors.is_empty() {
+            crate::telemetry::event(
+                "transfer_seed",
+                &format!("neighbors={} {}", neighbors.len(), sig_short(&sig)),
+            );
+        }
         st.inflight.insert(sig.clone(), waiters);
-        st.queues[shard].push_back(Ticket { sig, req, neighbors });
+        st.queues[shard].push_back(Ticket {
+            sig,
+            req,
+            neighbors,
+            enqueued_at: std::time::Instant::now(),
+        });
         self.shared.work.notify_all();
         Submitted::Pending { rx, coalesced: false, shard, progress }
     }
@@ -586,6 +645,9 @@ fn worker_loop(shard: usize, shared: Arc<Shared>) {
                 st = shared.work.wait(st).unwrap();
             }
         };
+        // queue-wait span: submit-time enqueue to worker dequeue
+        crate::telemetry::histogram("service_request_wait_us")
+            .record(ticket.enqueued_at.elapsed().as_micros() as u64);
         // anytime streaming: one snapshot per candidate batch, fanned
         // out to whichever progress waiters are registered at that
         // moment (coalescers may join mid-run). Senders are cloned out
@@ -922,6 +984,20 @@ mod tests {
         assert_eq!(broker.transfer_index_len(), 1, "startup mining restores coverage");
         broker.drain();
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn drain_is_idempotent_and_never_double_counts() {
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        broker.submit_wait(req(16, 40)).unwrap();
+        broker.submit_wait(req(16, 40)).unwrap(); // pure cache hit
+        let s1 = broker.drain();
+        let s2 = broker.drain();
+        assert_eq!(s1.requests, s2.requests, "repeat drain must not re-count");
+        assert_eq!(s1.searched, s2.searched);
+        assert_eq!(s1.cache_hits, s2.cache_hits);
+        assert_eq!(s1.engine, s2.engine, "absorbed engine stats are stable");
+        assert_eq!((s1.requests, s1.searched, s1.cache_hits), (2, 1, 1));
     }
 
     #[test]

@@ -189,6 +189,25 @@ pub struct CacheStats {
     pub compacted_dropped: usize,
 }
 
+impl crate::telemetry::MetricSource for CacheStats {
+    fn metric_prefix(&self) -> &'static str {
+        "cache"
+    }
+
+    fn emit_metrics(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("loaded", self.loaded as f64);
+        out("skipped", self.skipped as f64);
+        out("appended", self.appended as f64);
+        out("warm_hits", self.warm_hits as f64);
+        out("cold_hits", self.cold_hits as f64);
+        out("misses", self.misses as f64);
+        out("warm_evictions", self.warm_evictions as f64);
+        out("flushes", self.flushes as f64);
+        out("compactions", self.compactions as f64);
+        out("compacted_dropped", self.compacted_dropped as f64);
+    }
+}
+
 /// Where a known signature's record lives.
 #[derive(Debug, Clone, Copy)]
 enum Loc {
@@ -408,6 +427,7 @@ impl ResultCache {
             file_len = len;
             stats.compactions += 1;
             stats.compacted_dropped = stale;
+            crate::telemetry::event("compaction", &format!("at=open dropped={stale}"));
         } else {
             for (sig, s, l) in kept {
                 known.insert(sig, Loc::Disk { offset: s as u64, len: l as u32 });
@@ -558,7 +578,12 @@ impl ResultCache {
         }
         // warm-tier evictions are safe to drop: the record is either on
         // disk already or still in the pending batch
+        let evicted_before = self.warm.stats().evictions;
         self.warm.insert(sig, result, weight);
+        let evicted = self.warm.stats().evictions - evicted_before;
+        if evicted > 0 {
+            crate::telemetry::event("eviction", &format!("warm_evicted={evicted}"));
+        }
         self.flush_if_due();
     }
 
@@ -745,12 +770,17 @@ impl ResultCache {
         match rewrite_compacted(&path, &text, &kept) {
             Ok((index, len)) => match open_handles(&path) {
                 Ok((append, read)) => {
+                    let reclaimed = self.file_len.saturating_sub(len);
                     self.append = Some(append);
                     self.read = Some(read);
                     self.known = index;
                     self.file_len = len;
                     self.live_bytes = len;
                     self.stats.compactions += 1;
+                    crate::telemetry::event(
+                        "compaction",
+                        &format!("at=flush reclaimed_bytes={reclaimed}"),
+                    );
                 }
                 Err(e) => eprintln!("result cache: reopen after compaction failed: {e}"),
             },

@@ -272,12 +272,25 @@ impl ClusterClient {
     ) -> Result<(usize, Json), String> {
         let mut last_err = String::new();
         for idx in self.candidates(sig) {
+            // per-peer attempt span: connect through final response (or
+            // the failure that triggers failover to the next candidate)
+            let attempt = Instant::now();
+            crate::telemetry::counter("cluster_attempts_total").incr();
             match client_request_with(self.member(idx), request, on_event) {
                 Ok(doc) => {
+                    crate::telemetry::histogram("cluster_attempt_us")
+                        .record(attempt.elapsed().as_micros() as u64);
                     self.mark_up(idx);
                     return Ok((idx, doc));
                 }
                 Err(e) => {
+                    crate::telemetry::histogram("cluster_attempt_us")
+                        .record(attempt.elapsed().as_micros() as u64);
+                    crate::telemetry::counter("cluster_failovers_total").incr();
+                    crate::telemetry::event(
+                        "failover",
+                        &format!("peer={} err={e}", self.member(idx)),
+                    );
                     last_err = format!("{}: {e}", self.member(idx));
                     self.mark_down(idx);
                 }
@@ -594,6 +607,14 @@ impl RouterShared {
                 emit(&error_response(
                     &id,
                     "sync streams one peer's cache; connect to that peer directly",
+                ));
+                false
+            }
+            Request::Metrics { .. } | Request::Trace { .. } => {
+                emit(&error_response(
+                    &id,
+                    "metrics and trace describe one peer; connect to that peer \
+                     directly, or aggregate with `union metrics --peers`",
                 ));
                 false
             }

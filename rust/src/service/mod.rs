@@ -9,8 +9,10 @@
 //! share a search. This module is the missing layer, built std-only:
 //!
 //! * [`proto`] — a JSON-lines request protocol (search / evaluate /
-//!   status / shutdown) served over TCP and stdin, with a from-scratch
-//!   JSON codec whose float formatting round-trips bit-exactly;
+//!   status / metrics / trace / shutdown) served over TCP and stdin,
+//!   with a from-scratch JSON codec whose float formatting round-trips
+//!   bit-exactly; `metrics` and `trace` expose the
+//!   [`crate::telemetry`] registry and flight recorder in-band;
 //! * [`broker`] — the sharded broker: canonical job signatures,
 //!   cache fast path, in-flight request coalescing (concurrent
 //!   identical queries cost one search), signature-hash routing to

@@ -15,6 +15,8 @@
 //!  "cost":"analytical","objective":"edp","effort":"fast","seed":42}
 //! {"type":"evaluate","workload":"gemm:8x8x8","arch":"fig5","mapping":[...]}
 //! {"type":"status"}
+//! {"type":"metrics"}
+//! {"type":"trace","since":120,"limit":64}
 //! {"type":"shutdown"}
 //! {"type":"sync"}
 //! ```
@@ -455,6 +457,16 @@ pub enum Request {
     /// new or recovered cluster member imports the stream to warm from
     /// a neighbor instead of re-searching.
     Sync { id: Option<String> },
+    /// Scrape the process telemetry: the full metrics registry
+    /// (counters, gauges, histograms) plus every service
+    /// `MetricSource`, as one JSON document that also embeds a
+    /// Prometheus-style text rendering (see `docs/PROTOCOL.md`).
+    Metrics { id: Option<String> },
+    /// Dump the flight recorder: the newest `limit` [default 256]
+    /// events with sequence number `> since` [default 0], oldest
+    /// first. `union trace --follow` polls this with its last-seen
+    /// sequence number.
+    Trace { id: Option<String>, since: Option<u64>, limit: Option<usize> },
 }
 
 impl Request {
@@ -465,7 +477,9 @@ impl Request {
             | Request::Evaluate { id, .. }
             | Request::Status { id }
             | Request::Shutdown { id }
-            | Request::Sync { id } => id.as_deref(),
+            | Request::Sync { id }
+            | Request::Metrics { id }
+            | Request::Trace { id, .. } => id.as_deref(),
         }
     }
 
@@ -478,6 +492,12 @@ impl Request {
             "status" => Ok(Request::Status { id }),
             "shutdown" => Ok(Request::Shutdown { id }),
             "sync" => Ok(Request::Sync { id }),
+            "metrics" => Ok(Request::Metrics { id }),
+            "trace" => Ok(Request::Trace {
+                id,
+                since: doc.u64_field("since"),
+                limit: doc.u64_field("limit").map(|n| n as usize),
+            }),
             "search" => Ok(Request::Search {
                 id,
                 spec: job_spec(&doc)?,
@@ -491,7 +511,8 @@ impl Request {
                 Ok(Request::Evaluate { id, spec: job_spec(&doc)?, mapping })
             }
             other => Err(format!(
-                "unknown request type '{other}' (search, evaluate, status, shutdown, sync)"
+                "unknown request type '{other}' \
+                 (search, evaluate, status, metrics, trace, shutdown, sync)"
             )),
         }
     }
@@ -517,6 +538,20 @@ impl Request {
             Request::Sync { id } => {
                 fields.push(("type".into(), Json::Str("sync".into())));
                 push_id(&mut fields, id);
+            }
+            Request::Metrics { id } => {
+                fields.push(("type".into(), Json::Str("metrics".into())));
+                push_id(&mut fields, id);
+            }
+            Request::Trace { id, since, limit } => {
+                fields.push(("type".into(), Json::Str("trace".into())));
+                push_id(&mut fields, id);
+                if let Some(s) = since {
+                    fields.push(("since".into(), Json::Num(*s as f64)));
+                }
+                if let Some(l) = limit {
+                    fields.push(("limit".into(), Json::Num(*l as f64)));
+                }
             }
             Request::Search { id, spec, progress } => {
                 fields.push(("type".into(), Json::Str("search".into())));
@@ -662,6 +697,10 @@ mod tests {
             Request::Shutdown { id: None },
             Request::Sync { id: Some("y1".into()) },
             Request::Sync { id: None },
+            Request::Metrics { id: Some("m1".into()) },
+            Request::Metrics { id: None },
+            Request::Trace { id: Some("t1".into()), since: Some(120), limit: Some(64) },
+            Request::Trace { id: None, since: None, limit: None },
             Request::Search { id: Some("r1".into()), spec: spec.clone(), progress: false },
             Request::Search { id: Some("r2".into()), spec: spec.clone(), progress: true },
         ] {

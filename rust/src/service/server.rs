@@ -124,6 +124,19 @@ impl ServerStats {
     }
 }
 
+impl crate::telemetry::MetricSource for ServerStats {
+    fn metric_prefix(&self) -> &'static str {
+        "server"
+    }
+
+    fn emit_metrics(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("accepted", self.accepted() as f64);
+        out("refused", self.refused() as f64);
+        out("accept_errors", self.accept_errors() as f64);
+        out("conn_threads_spawned", self.conn_threads_spawned() as f64);
+    }
+}
+
 /// Resolve a wire-level [`JobSpec`] with the same parsers the CLI uses.
 pub fn resolve_spec(spec: &JobSpec) -> Result<JobRequest, String> {
     let workload = parse_workload(&spec.workload)?;
@@ -327,6 +340,161 @@ fn status_response(id: &Option<String>, broker: &Broker) -> Json {
     Json::Obj(fields)
 }
 
+/// Gather every scalar metric visible through this broker: the global
+/// registry's counters and gauges first, then each service
+/// [`MetricSource`], name-sorted. Scrape-time only — nothing on the
+/// request path ever walks this.
+fn collect_scalars(broker: &Broker, server: Option<&ServerStats>) -> Vec<(String, f64)> {
+    use crate::telemetry::MetricSource;
+    let mut out: Vec<(String, f64)> = crate::telemetry::registry()
+        .scalars()
+        .into_iter()
+        .map(|(n, v)| (n, v as f64))
+        .collect();
+    let stats = broker.stats();
+    out.extend(stats.metrics_vec());
+    out.extend(stats.engine.metrics_vec());
+    let (cache_entries, cache) = broker.cache_stats();
+    out.extend(cache.metrics_vec());
+    out.push(("cache_entries".into(), cache_entries as f64));
+    if let Some(s) = server {
+        out.extend(s.metrics_vec());
+    }
+    let rec = crate::telemetry::recorder();
+    out.push(("trace_events_resident".into(), rec.len() as f64));
+    out.push(("trace_events_dropped_total".into(), rec.dropped() as f64));
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+/// Prometheus text-format rendering: one `# TYPE` line plus samples per
+/// metric, `union_` prefixed. Histogram buckets are emitted cumulative
+/// with their inclusive log₂ upper bound as `le`, closed by the
+/// mandatory `+Inf` bucket, `_sum` and `_count`.
+fn prometheus_text(
+    scalars: &[(String, f64)],
+    hists: &[(String, crate::telemetry::HistogramSnapshot)],
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for (name, v) in scalars {
+        let _ = writeln!(out, "# TYPE union_{name} gauge");
+        let _ = writeln!(out, "union_{name} {v}");
+    }
+    for (name, s) in hists {
+        let _ = writeln!(out, "# TYPE union_{name} histogram");
+        let mut cumulative = 0u64;
+        for &(i, n) in &s.buckets {
+            cumulative += n;
+            let bound = crate::telemetry::Histogram::bucket_bound(i);
+            if bound == u64::MAX {
+                // the last bucket has no finite bound; +Inf covers it
+                continue;
+            }
+            let _ = writeln!(out, "union_{name}_bucket{{le=\"{bound}\"}} {cumulative}");
+        }
+        let _ = writeln!(out, "union_{name}_bucket{{le=\"+Inf\"}} {}", s.count);
+        let _ = writeln!(out, "union_{name}_sum {}", s.sum);
+        let _ = writeln!(out, "union_{name}_count {}", s.count);
+    }
+    out
+}
+
+/// The `{"type":"metrics"}` answer: the full registry and every service
+/// `MetricSource` as one JSON document, plus the Prometheus text
+/// rendering embedded as the `prom` string (see `docs/PROTOCOL.md` for
+/// the exact field order).
+pub(crate) fn metrics_response(
+    id: &Option<String>,
+    broker: &Broker,
+    server: Option<&ServerStats>,
+) -> Json {
+    let scalars = collect_scalars(broker, server);
+    let hists = crate::telemetry::registry().histogram_snapshots();
+    let rec = crate::telemetry::recorder();
+    let mut fields = vec![
+        ("type".into(), Json::Str("metrics".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.push((
+        "counters".into(),
+        Json::Obj(scalars.iter().map(|(n, v)| (n.clone(), Json::Num(*v))).collect()),
+    ));
+    fields.push((
+        "histograms".into(),
+        Json::Obj(
+            hists
+                .iter()
+                .map(|(n, s)| {
+                    (
+                        n.clone(),
+                        Json::Obj(vec![
+                            ("count".into(), Json::Num(s.count as f64)),
+                            ("sum".into(), Json::Num(s.sum as f64)),
+                            (
+                                "buckets".into(),
+                                Json::Arr(
+                                    s.buckets
+                                        .iter()
+                                        .map(|&(i, c)| {
+                                            Json::Arr(vec![
+                                                Json::Num(i as f64),
+                                                Json::Num(c as f64),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ]),
+                    )
+                })
+                .collect(),
+        ),
+    ));
+    fields.push(("events".into(), Json::Num(rec.len() as f64)));
+    fields.push(("seq".into(), Json::Num(rec.latest_seq() as f64)));
+    fields.push(("prom".into(), Json::Str(prometheus_text(&scalars, &hists))));
+    Json::Obj(fields)
+}
+
+/// The `{"type":"trace"}` answer: the newest `limit` flight-recorder
+/// events with `seq > since`, oldest first, plus the `next_since`
+/// cursor a follower passes back to continue from here.
+pub(crate) fn trace_response(
+    id: &Option<String>,
+    since: Option<u64>,
+    limit: Option<usize>,
+) -> Json {
+    let since = since.unwrap_or(0);
+    let limit = limit.unwrap_or(256).clamp(1, 4096);
+    let events = crate::telemetry::recorder().since(since, limit);
+    let next_since = events.last().map(|e| e.seq).unwrap_or(since);
+    let mut fields = vec![
+        ("type".into(), Json::Str("trace".into())),
+        ("ok".into(), Json::Bool(true)),
+    ];
+    id_field(&mut fields, id);
+    fields.push(("next_since".into(), Json::Num(next_since as f64)));
+    fields.push((
+        "events".into(),
+        Json::Arr(
+            events
+                .iter()
+                .map(|e| {
+                    Json::Obj(vec![
+                        ("seq".into(), Json::Num(e.seq as f64)),
+                        ("t_us".into(), Json::Num(e.t_us as f64)),
+                        ("event".into(), Json::Str(e.kind.to_string())),
+                        ("detail".into(), Json::Str(e.detail.clone())),
+                    ])
+                })
+                .collect(),
+        ),
+    ));
+    Json::Obj(fields)
+}
+
 /// A `search` the broker accepted but has not answered yet. Held in a
 /// connection's response queue (reactor) or polled inline (blocking
 /// paths) until `rx` delivers the [`JobDone`].
@@ -336,6 +504,9 @@ struct PendingSearch {
     coalesced: bool,
     rx: Receiver<JobDone>,
     progress: Option<Receiver<JobProgress>>,
+    /// When the request line was parsed — start of the
+    /// `service_request_service_us` span recorded at completion.
+    submitted: Instant,
 }
 
 /// Outcome of submitting one `search` line to the broker.
@@ -368,7 +539,14 @@ fn submit_search(
             &id, &sig, objective, &hit, true, false, None,
         )),
         Submitted::Pending { rx, coalesced, shard: _, progress } => {
-            SearchSubmit::Wait(PendingSearch { id, objective, coalesced, rx, progress })
+            SearchSubmit::Wait(PendingSearch {
+                id,
+                objective,
+                coalesced,
+                rx,
+                progress,
+                submitted: Instant::now(),
+            })
         }
         Submitted::Overloaded { shard, depth } => {
             SearchSubmit::Done(overloaded_response(&id, shard, depth))
@@ -379,6 +557,8 @@ fn submit_search(
 }
 
 fn finish_search(p: &PendingSearch, done: JobDone) -> Json {
+    crate::telemetry::histogram("service_request_service_us")
+        .record(p.submitted.elapsed().as_micros() as u64);
     match done.result {
         Ok(result) => result_response(
             &p.id,
@@ -507,6 +687,8 @@ pub fn handle_line_with(
         Request::Evaluate { spec, mapping, .. } => {
             (evaluate_response(broker, &id, &spec, &mapping), false)
         }
+        Request::Metrics { .. } => (metrics_response(&id, broker, None), false),
+        Request::Trace { since, limit, .. } => (trace_response(&id, since, limit), false),
         Request::Sync { .. } => {
             // the blocking path re-parses the exported lines so the
             // header's `records` matches what actually gets emitted
@@ -579,10 +761,16 @@ impl Conn {
     /// One poll pass: read what's there, handle complete lines, move
     /// completed answers to the write buffer, write what fits. Returns
     /// true if anything moved (the reactor's idle-sleep signal).
-    fn pump(&mut self, broker: &Broker, verbose: bool, stop: &mut bool) -> bool {
+    fn pump(
+        &mut self,
+        broker: &Broker,
+        stats: &ServerStats,
+        verbose: bool,
+        stop: &mut bool,
+    ) -> bool {
         let mut progressed = false;
         progressed |= self.pump_read();
-        progressed |= self.pump_lines(broker, verbose, stop);
+        progressed |= self.pump_lines(broker, stats, verbose, stop);
         progressed |= self.pump_queue();
         progressed |= self.pump_write();
         progressed
@@ -615,7 +803,13 @@ impl Conn {
         progressed
     }
 
-    fn pump_lines(&mut self, broker: &Broker, verbose: bool, stop: &mut bool) -> bool {
+    fn pump_lines(
+        &mut self,
+        broker: &Broker,
+        stats: &ServerStats,
+        verbose: bool,
+        stop: &mut bool,
+    ) -> bool {
         let mut progressed = false;
         while let Some(pos) = self.rbuf.iter().position(|&b| b == b'\n') {
             let raw: Vec<u8> = self.rbuf.drain(..=pos).collect();
@@ -628,7 +822,7 @@ impl Conn {
             if verbose {
                 eprintln!("<- {line}");
             }
-            self.on_line(broker, line, stop);
+            self.on_line(broker, stats, line, stop);
         }
         if self.rbuf.len() > MAX_LINE_BYTES {
             // an unterminated line past the cap can never complete;
@@ -642,7 +836,8 @@ impl Conn {
         progressed
     }
 
-    fn on_line(&mut self, broker: &Broker, line: &str, stop: &mut bool) {
+    fn on_line(&mut self, broker: &Broker, stats: &ServerStats, line: &str, stop: &mut bool) {
+        let t0 = Instant::now();
         let req = match Request::parse(line) {
             Ok(r) => r,
             Err(e) => {
@@ -675,6 +870,13 @@ impl Conn {
                     broker, &id, &spec, &mapping,
                 )));
             }
+            Request::Metrics { .. } => {
+                self.queue
+                    .push_back(Queued::Ready(metrics_response(&id, broker, Some(stats))));
+            }
+            Request::Trace { since, limit, .. } => {
+                self.queue.push_back(Queued::Ready(trace_response(&id, since, limit)));
+            }
             Request::Sync { .. } => {
                 // snapshot under the cache lock, stream at the
                 // connection's own pace: header, the stored record
@@ -688,6 +890,12 @@ impl Conn {
                 }
                 self.queue.push_back(Queued::Ready(sync_end_response(&id, n)));
             }
+        }
+        // service time for inline-answered requests; a pending search
+        // records its (much longer) span in `finish_search` instead
+        if !matches!(self.queue.back(), Some(Queued::Search(_))) {
+            crate::telemetry::histogram("service_request_service_us")
+                .record(t0.elapsed().as_micros() as u64);
         }
     }
 
@@ -887,7 +1095,7 @@ impl Server {
                 }
             }
             for conn in &mut conns {
-                progressed |= conn.pump(&self.broker, self.verbose, &mut stop);
+                progressed |= conn.pump(&self.broker, &self.stats, self.verbose, &mut stop);
             }
             conns.retain(|c| !c.finished());
             // the batched-flush timer of the result cache ticks here,
@@ -906,7 +1114,8 @@ impl Server {
         while !conns.is_empty() && Instant::now() < deadline {
             let mut progressed = false;
             for conn in &mut conns {
-                progressed |= conn.pump(&self.broker, self.verbose, &mut ignore_stop);
+                progressed |=
+                    conn.pump(&self.broker, &self.stats, self.verbose, &mut ignore_stop);
             }
             conns.retain(|c| !(c.finished() || c.flushed()));
             if !progressed {
@@ -1106,6 +1315,43 @@ mod tests {
             again.num("score").map(f64::to_bits),
             resp.num("score").map(f64::to_bits)
         );
+    }
+
+    #[test]
+    fn metrics_and_trace_answer_in_band() {
+        let broker = Broker::new(BrokerConfig { shards: 1, ..BrokerConfig::default() });
+        let (r, _) = handle_line(
+            &broker,
+            "{\"type\":\"search\",\"workload\":\"gemm:12x12x12\",\"samples\":60,\"seed\":5}",
+        );
+        assert_eq!(r.str("type"), Some("result"), "{}", r.to_line());
+
+        let (m, stop) = handle_line(&broker, "{\"type\":\"metrics\",\"id\":\"m1\"}");
+        assert!(!stop);
+        assert_eq!(m.str("type"), Some("metrics"));
+        assert_eq!(m.bool_field("ok"), Some(true));
+        assert_eq!(m.str("id"), Some("m1"));
+        let counters = m.get("counters").unwrap();
+        assert_eq!(counters.num("broker_requests"), Some(1.0));
+        assert!(counters.num("engine_scored").unwrap() > 0.0);
+        let prom = m.str("prom").unwrap();
+        assert!(prom.contains("# TYPE union_broker_requests gauge"));
+        assert!(prom.contains("union_broker_requests 1"));
+        // the search-phase spans recorded at least this job
+        let hists = m.get("histograms").unwrap();
+        let eval = hists.get("engine_phase_evaluate_us").expect("phase histogram");
+        assert!(eval.num("count").unwrap() >= 1.0);
+
+        let (t, _) = handle_line(&broker, "{\"type\":\"trace\",\"limit\":512}");
+        assert_eq!(t.str("type"), Some("trace"));
+        assert_eq!(t.bool_field("ok"), Some(true));
+        let events = t.arr("events").unwrap();
+        assert!(
+            events.iter().any(|e| e.str("event") == Some("job_admitted")),
+            "the fresh search must appear in the flight recorder"
+        );
+        let next = t.num("next_since").unwrap();
+        assert!(next >= 1.0, "cursor advances past recorded events");
     }
 
     #[test]

@@ -1,0 +1,99 @@
+//! Process-wide **telemetry**: a metrics registry, search-phase spans,
+//! and a bounded flight recorder — std-only, zero-dep, like everything
+//! else in this crate.
+//!
+//! The serving stack (engine → broker → reactor → cluster) already
+//! keeps ad-hoc counters in per-layer `*Stats` structs. This module
+//! unifies them behind three primitives and one trait:
+//!
+//! * [`Counter`] / [`Gauge`] — named relaxed `AtomicU64`s, registered
+//!   once (allocation happens at *registration*, never on record) and
+//!   handed out as `&'static` so recording from the hot path is a
+//!   single atomic add with no lock and no allocation. The
+//!   counting-allocator test (`tests/alloc_hotpath.rs`) pins that.
+//! * [`Histogram`] — a fixed 64-bucket log₂ histogram on relaxed
+//!   atomics. One observation is: one `leading_zeros`, three atomic
+//!   adds. Used for the search-phase spans (sample / memo / evaluate /
+//!   prune, recorded **per job** from accumulators the engine advances
+//!   **per batch** — never per candidate), the reactor's queue-wait and
+//!   service-time distributions, and the cluster client's per-attempt
+//!   timing.
+//! * [`FlightRecorder`] — a bounded ring of recent structured
+//!   [`TraceEvent`]s (job admitted, cache hit/miss, transfer seed,
+//!   failover, eviction, compaction, overload refusal) with sequence
+//!   numbers and monotonic timestamps, dumped over the wire by the
+//!   `{"type":"trace"}` request and mirrored to a JSONL file when
+//!   `UNION_TRACE=path` is set.
+//! * [`MetricSource`] — the unification trait: every `*Stats` struct
+//!   (`EngineStats`, `BrokerStats`, `ServerStats`, `NetworkStats`,
+//!   `CacheStats`, `LruStats`) emits its counters as stable
+//!   `prefix_name → value` pairs, consulted at **scrape time** only.
+//!   The hot path never walks a `MetricSource`.
+//!
+//! ## Invariants (each pinned by a test)
+//!
+//! * **Telemetry never changes search results.** Recording is pure
+//!   observation: timing reads and atomic adds on the side, no
+//!   branching on telemetry state anywhere in the search pipeline.
+//!   `tests/telemetry.rs` pins bit-identical scores with recording
+//!   active and the recorder full.
+//! * **Hot-path recording is batch-amortized.** The engine advances
+//!   plain (non-atomic) nanosecond accumulators at batch granularity
+//!   and the `Session` folds them into histograms once per job; nothing
+//!   telemetric happens per candidate.
+//! * **Zero allocation on record.** `Counter::add`,
+//!   `Histogram::record` and `Gauge::set` never allocate; registration
+//!   (`counter(name)` etc.) allocates once per distinct name and leaks
+//!   the cell intentionally (`Box::leak`) so the handle is `&'static`.
+//! * **The flight recorder is bounded.** The ring holds
+//!   [`FLIGHT_RECORDER_CAPACITY`] events; older events are dropped (and
+//!   counted) rather than growing without bound.
+//!
+//! ## Exposition
+//!
+//! `{"type":"metrics"}` on the wire returns the whole registry (plus
+//! every service `MetricSource`) as one JSON document *and* a
+//! Prometheus-style text rendering; `union metrics` / `union trace` are
+//! the CLI front ends (`--peers` aggregates across a cluster,
+//! `--watch`/`--follow` poll). `docs/PROTOCOL.md` specifies the exact
+//! field order.
+
+mod recorder;
+mod registry;
+
+pub use recorder::{
+    recorder, FlightRecorder, TraceEvent, FLIGHT_RECORDER_CAPACITY,
+};
+pub use registry::{
+    counter, gauge, histogram, registry, Counter, Gauge, Histogram, HistogramSnapshot,
+    MetricSource, Registry, HISTOGRAM_BUCKETS,
+};
+
+/// Record a flight-recorder event on the process-global recorder.
+/// Convenience wrapper: `telemetry::event("cache_hit", &sig)`.
+pub fn event(kind: &'static str, detail: &str) {
+    recorder().record(kind, detail);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_hands_out_stable_handles() {
+        let a = counter("test_mod_counter");
+        let b = counter("test_mod_counter");
+        assert!(std::ptr::eq(a, b), "same name must be the same cell");
+        a.add(2);
+        b.incr();
+        assert_eq!(a.get(), 3);
+    }
+
+    #[test]
+    fn event_reaches_the_global_recorder() {
+        let seq_before = recorder().latest_seq();
+        event("test_event", "detail");
+        let events = recorder().since(seq_before, 16);
+        assert!(events.iter().any(|e| e.kind == "test_event" && e.detail == "detail"));
+    }
+}

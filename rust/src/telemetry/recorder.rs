@@ -1,0 +1,230 @@
+//! The bounded **flight recorder**: a ring buffer of recent structured
+//! events with sequence numbers and monotonic timestamps, plus an
+//! optional `UNION_TRACE=path` JSONL file sink.
+//!
+//! Events are service-layer occurrences (a job admitted, a cache hit, a
+//! failover) — a handful per request, never per candidate — so the
+//! `String` detail and the ring mutex are off the search hot path by
+//! construction.
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// How many events the process-global ring retains. Old events are
+/// dropped (and counted in `trace_events_dropped_total`), never grown
+/// past this bound.
+pub const FLIGHT_RECORDER_CAPACITY: usize = 1024;
+
+/// One recorded occurrence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Monotone per-recorder sequence number, starting at 1.
+    pub seq: u64,
+    /// Microseconds since the recorder was created (process start for
+    /// the global recorder) — monotonic, never wall-clock.
+    pub t_us: u64,
+    /// Stable event kind: `job_admitted`, `cache_hit`, `cache_miss`,
+    /// `transfer_seed`, `failover`, `eviction`, `compaction`,
+    /// `overload_refusal`, ...
+    pub kind: &'static str,
+    /// Free-form context (signature prefix, shard, peer address, ...).
+    pub detail: String,
+}
+
+/// Minimal JSON string escape for the trace sink (the recorder must not
+/// depend on the service codec: `service` depends on `telemetry`).
+fn esc_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl TraceEvent {
+    /// The JSONL rendering the `UNION_TRACE` sink writes and
+    /// `docs/PROTOCOL.md` specifies: `seq`, `t_us`, `event`, `detail`.
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"seq\":{},\"t_us\":{},\"event\":\"{}\",\"detail\":\"{}\"}}",
+            self.seq,
+            self.t_us,
+            esc_json(self.kind),
+            esc_json(&self.detail)
+        )
+    }
+}
+
+/// The bounded event ring. One process-global instance lives behind
+/// [`recorder`]; tests construct their own with a small capacity.
+pub struct FlightRecorder {
+    start: Instant,
+    seq: AtomicU64,
+    dropped: AtomicU64,
+    capacity: usize,
+    ring: Mutex<VecDeque<TraceEvent>>,
+    /// `Some(file)` when `UNION_TRACE` named a writable path at first
+    /// use; failures to open or write disable the sink, never the
+    /// recorder.
+    sink: Option<Mutex<File>>,
+}
+
+impl FlightRecorder {
+    /// A recorder with an explicit capacity and no file sink (tests).
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            start: Instant::now(),
+            seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            capacity: capacity.max(1),
+            ring: Mutex::new(VecDeque::with_capacity(capacity.max(1).min(1024))),
+            sink: None,
+        }
+    }
+
+    fn global() -> FlightRecorder {
+        let mut r = FlightRecorder::with_capacity(FLIGHT_RECORDER_CAPACITY);
+        if let Ok(path) = std::env::var("UNION_TRACE") {
+            if !path.is_empty() {
+                match OpenOptions::new().create(true).append(true).open(&path) {
+                    Ok(f) => r.sink = Some(Mutex::new(f)),
+                    Err(e) => eprintln!("UNION_TRACE: cannot open {path}: {e} (sink disabled)"),
+                }
+            }
+        }
+        r
+    }
+
+    /// Append an event: assign the next sequence number, stamp the
+    /// monotonic clock, evict the oldest event past capacity, and
+    /// mirror to the JSONL sink when one is configured.
+    pub fn record(&self, kind: &'static str, detail: &str) {
+        let event = TraceEvent {
+            seq: self.seq.fetch_add(1, Ordering::Relaxed) + 1,
+            t_us: self.start.elapsed().as_micros() as u64,
+            kind,
+            detail: detail.to_string(),
+        };
+        if let Some(sink) = &self.sink {
+            let line = event.to_jsonl();
+            let mut f = sink.lock().unwrap();
+            // a full disk must not take the recorder down with it
+            let _ = writeln!(f, "{line}");
+        }
+        let mut ring = self.ring.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(event);
+    }
+
+    /// Highest sequence number assigned so far (0 before any event).
+    pub fn latest_seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Events dropped off the front of the ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Events currently resident in the ring.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// The newest `limit` events with `seq > since`, oldest first —
+    /// the `{"type":"trace"}` request's contract, and what
+    /// `union trace --follow` polls with its last-seen seq.
+    pub fn since(&self, since: u64, limit: usize) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().unwrap();
+        let matching: Vec<&TraceEvent> = ring.iter().filter(|e| e.seq > since).collect();
+        let skip = matching.len().saturating_sub(limit);
+        matching.into_iter().skip(skip).cloned().collect()
+    }
+
+    /// The newest `limit` events, oldest first.
+    pub fn tail(&self, limit: usize) -> Vec<TraceEvent> {
+        self.since(0, limit)
+    }
+}
+
+static RECORDER: OnceLock<FlightRecorder> = OnceLock::new();
+
+/// The process-global flight recorder (reads `UNION_TRACE` once, at
+/// first use).
+pub fn recorder() -> &'static FlightRecorder {
+    RECORDER.get_or_init(FlightRecorder::global)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_sequenced() {
+        let r = FlightRecorder::with_capacity(4);
+        for i in 0..10 {
+            r.record("tick", &format!("i={i}"));
+        }
+        assert_eq!(r.len(), 4, "capacity bound holds");
+        assert_eq!(r.dropped(), 6);
+        assert_eq!(r.latest_seq(), 10);
+        let tail = r.tail(100);
+        let seqs: Vec<u64> = tail.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![7, 8, 9, 10], "oldest-first, newest retained");
+    }
+
+    #[test]
+    fn since_filters_and_limits() {
+        let r = FlightRecorder::with_capacity(16);
+        for i in 0..8 {
+            r.record("tick", &format!("i={i}"));
+        }
+        let after5 = r.since(5, 100);
+        assert_eq!(after5.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![6, 7, 8]);
+        // limit keeps the NEWEST events (a follower catches up forward)
+        let limited = r.since(0, 2);
+        assert_eq!(limited.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![7, 8]);
+        assert!(r.since(8, 100).is_empty());
+    }
+
+    #[test]
+    fn timestamps_are_monotone() {
+        let r = FlightRecorder::with_capacity(8);
+        r.record("a", "");
+        r.record("b", "");
+        let events = r.tail(8);
+        assert!(events[0].t_us <= events[1].t_us);
+    }
+
+    #[test]
+    fn jsonl_escapes_details() {
+        let e = TraceEvent {
+            seq: 3,
+            t_us: 99,
+            kind: "cache_hit",
+            detail: "sig=\"a\\b\"\nrest".into(),
+        };
+        let line = e.to_jsonl();
+        assert_eq!(
+            line,
+            "{\"seq\":3,\"t_us\":99,\"event\":\"cache_hit\",\
+             \"detail\":\"sig=\\\"a\\\\b\\\"\\nrest\"}"
+        );
+        assert!(!line.contains('\n'), "one event is one line");
+    }
+}

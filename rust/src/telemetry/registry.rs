@@ -1,0 +1,402 @@
+//! The metrics registry: named counters, gauges and log₂ histograms on
+//! relaxed atomics, plus the [`MetricSource`] unification trait.
+//!
+//! Registration is lazy and allocates (name interning + `Box::leak`);
+//! recording never does. See the module docs in `telemetry/mod.rs` for
+//! the invariants.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Number of histogram buckets. Bucket `i` holds observations whose
+/// value `v` satisfies `64 - v.leading_zeros() == i` (clamped to the
+/// last bucket), i.e. bucket 0 is exactly `v == 0` and bucket `i ≥ 1`
+/// covers `[2^(i-1), 2^i)`.
+pub const HISTOGRAM_BUCKETS: usize = 64;
+
+/// A monotone counter. `add`/`incr` are single relaxed atomic adds.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins value (queue depths, resident entries, ...).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket log₂ histogram. One observation costs one
+/// `leading_zeros` and three relaxed atomic adds — cheap enough for
+/// per-request recording, and allocation-free by construction.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Bucket index for `v`: 0 for 0, else `64 - leading_zeros`,
+    /// clamped into the last bucket.
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        ((64 - v.leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` (`u64::MAX` for the last).
+    pub fn bucket_bound(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= HISTOGRAM_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A consistent-enough snapshot for exposition (relaxed reads; the
+    /// histogram is monotone so a racing `record` skews one count by
+    /// one, never corrupts).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = Vec::new();
+        for (i, b) in self.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 {
+                buckets.push((i, n));
+            }
+        }
+        HistogramSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// A point-in-time histogram reading: total count, total sum, and the
+/// non-empty `(bucket_index, count)` pairs in index order.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub buckets: Vec<(usize, u64)>,
+}
+
+impl HistogramSnapshot {
+    /// Merge another snapshot into this one (bucket-wise sum) — the
+    /// cross-peer aggregation `union metrics --peers` performs.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for &(i, n) in &other.buckets {
+            match self.buckets.binary_search_by_key(&i, |&(bi, _)| bi) {
+                Ok(pos) => self.buckets[pos].1 += n,
+                Err(pos) => self.buckets.insert(pos, (i, n)),
+            }
+        }
+    }
+
+    /// Upper bound of the bucket containing quantile `q` in [0,1] —
+    /// a conservative (never under-reported) percentile estimate.
+    pub fn quantile_bound(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for &(i, n) in &self.buckets {
+            seen += n;
+            if seen >= rank {
+                return Histogram::bucket_bound(i);
+            }
+        }
+        Histogram::bucket_bound(HISTOGRAM_BUCKETS - 1)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Anything that can report its counters as stable `name → value`
+/// pairs. Implemented by every service-layer `*Stats` struct; consulted
+/// only at scrape time (the hot path records into [`Counter`]s and
+/// [`Histogram`]s directly, or into the plain struct fields these
+/// sources re-emit).
+pub trait MetricSource {
+    /// Stable snake_case prefix, e.g. `"engine"`, `"broker"`.
+    fn metric_prefix(&self) -> &'static str;
+
+    /// Emit every `(suffix, value)` pair in a fixed order. Suffixes are
+    /// snake_case; the full metric name is `{prefix}_{suffix}`.
+    fn emit_metrics(&self, out: &mut dyn FnMut(&str, f64));
+
+    /// Collect emissions as `(full_name, value)` pairs.
+    fn metrics_vec(&self) -> Vec<(String, f64)> {
+        let prefix = self.metric_prefix();
+        let mut v = Vec::new();
+        self.emit_metrics(&mut |suffix, value| {
+            v.push((format!("{prefix}_{suffix}"), value));
+        });
+        v
+    }
+}
+
+/// The process-wide registry. Metric cells are interned by name and
+/// leaked so handles are `&'static` — registration allocates, record
+/// never does.
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, &'static Counter>>,
+    gauges: Mutex<BTreeMap<String, &'static Gauge>>,
+    histograms: Mutex<BTreeMap<String, &'static Histogram>>,
+}
+
+/// Valid metric name: `[a-z_][a-z0-9_]*` — what the Prometheus text
+/// rendering (and every sane scraper) accepts.
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.starts_with(|c: char| c.is_ascii_lowercase() || c == '_')
+        && name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+impl Registry {
+    fn new() -> Registry {
+        Registry {
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// The counter named `name`, registering it on first use. Panics on
+    /// an invalid name — metric names are compile-time string literals,
+    /// so this is a programming error, not an input error.
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        assert!(valid_name(name), "invalid metric name '{name}'");
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Box::leak(Box::new(Counter::new())))
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        assert!(valid_name(name), "invalid metric name '{name}'");
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Box::leak(Box::new(Gauge::new())))
+    }
+
+    pub fn histogram(&self, name: &str) -> &'static Histogram {
+        assert!(valid_name(name), "invalid metric name '{name}'");
+        let mut map = self.histograms.lock().unwrap();
+        map.entry(name.to_string()).or_insert_with(|| Box::leak(Box::new(Histogram::new())))
+    }
+
+    /// Every counter and gauge as `(name, value)`, name-sorted
+    /// (gauges after counters with no name collision policing — the
+    /// naming convention keeps them disjoint).
+    pub fn scalars(&self) -> Vec<(String, u64)> {
+        let mut out: Vec<(String, u64)> = Vec::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push((name.clone(), c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push((name.clone(), g.get()));
+        }
+        out.sort();
+        out
+    }
+
+    /// Every histogram as `(name, snapshot)`, name-sorted.
+    pub fn histogram_snapshots(&self) -> Vec<(String, HistogramSnapshot)> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, h)| (name.clone(), h.snapshot()))
+            .collect()
+    }
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// Shorthand: `registry().counter(name)`.
+pub fn counter(name: &str) -> &'static Counter {
+    registry().counter(name)
+}
+
+/// Shorthand: `registry().gauge(name)`.
+pub fn gauge(name: &str) -> &'static Gauge {
+    registry().gauge(name)
+}
+
+/// Shorthand: `registry().histogram(name)`.
+pub fn histogram(name: &str) -> &'static Histogram {
+    registry().histogram(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let c = counter("test_reg_counter");
+        let start = c.get();
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), start + 5);
+        let g = gauge("test_reg_gauge");
+        g.set(17);
+        assert_eq!(g.get(), 17);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn bucket_index_is_log2() {
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 1);
+        assert_eq!(Histogram::bucket_index(2), 2);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 3);
+        assert_eq!(Histogram::bucket_index(1023), 10);
+        assert_eq!(Histogram::bucket_index(1024), 11);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HISTOGRAM_BUCKETS - 1);
+        // bounds are consistent with the index: v <= bound(index(v))
+        for v in [0u64, 1, 2, 3, 7, 8, 1000, 1 << 40] {
+            assert!(v <= Histogram::bucket_bound(Histogram::bucket_index(v)));
+        }
+    }
+
+    #[test]
+    fn histogram_records_and_snapshots() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 100, 100, 5000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 5206);
+        let total: u64 = s.buckets.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 7, "every observation lands in exactly one bucket");
+        // value 0 in bucket 0, the two 100s share bucket 7 ([64,128))
+        assert!(s.buckets.contains(&(0, 1)));
+        assert!(s.buckets.contains(&(7, 2)));
+    }
+
+    #[test]
+    fn quantiles_are_conservative_bounds() {
+        let h = Histogram::new();
+        for _ in 0..99 {
+            h.record(10); // bucket 4, bound 15
+        }
+        h.record(100_000); // bucket 17
+        let s = h.snapshot();
+        assert_eq!(s.quantile_bound(0.5), 15);
+        assert_eq!(s.quantile_bound(0.95), 15);
+        assert!(s.quantile_bound(1.0) >= 100_000);
+        assert_eq!(HistogramSnapshot::default().quantile_bound(0.99), 0);
+    }
+
+    #[test]
+    fn snapshot_merge_sums_bucketwise() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(1);
+        a.record(100);
+        b.record(100);
+        b.record(10_000);
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 4);
+        assert_eq!(m.sum, 10_201);
+        assert!(m.buckets.contains(&(7, 2)), "shared bucket sums");
+        let idx: Vec<usize> = m.buckets.iter().map(|&(i, _)| i).collect();
+        let mut sorted = idx.clone();
+        sorted.sort();
+        assert_eq!(idx, sorted, "merge keeps buckets index-ordered");
+    }
+
+    #[test]
+    fn name_validation_rejects_garbage() {
+        assert!(valid_name("engine_phase_sample_us"));
+        assert!(valid_name("_private"));
+        assert!(!valid_name(""));
+        assert!(!valid_name("9starts_with_digit"));
+        assert!(!valid_name("has-dash"));
+        assert!(!valid_name("Has_Upper"));
+    }
+
+    #[test]
+    fn scalars_listing_is_sorted_and_complete() {
+        counter("test_reg_list_a").add(1);
+        gauge("test_reg_list_b").set(2);
+        let all = registry().scalars();
+        let names: Vec<&str> = all.iter().map(|(n, _)| n.as_str()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+        assert!(names.contains(&"test_reg_list_a"));
+        assert!(names.contains(&"test_reg_list_b"));
+    }
+}

@@ -20,6 +20,7 @@
 use std::time::Instant;
 
 use super::stats::Summary;
+use crate::telemetry::{Histogram, HistogramSnapshot};
 
 /// One benchmark's timing result.
 #[derive(Debug, Clone)]
@@ -79,6 +80,7 @@ pub struct Bencher {
     sample_iters: usize,
     reports: Vec<BenchReport>,
     metrics: Vec<Metric>,
+    histograms: Vec<(String, HistogramSnapshot)>,
 }
 
 impl Default for Bencher {
@@ -94,6 +96,7 @@ impl Bencher {
             sample_iters: 10,
             reports: Vec::new(),
             metrics: Vec::new(),
+            histograms: Vec::new(),
         }
     }
 
@@ -103,6 +106,7 @@ impl Bencher {
             sample_iters: samples,
             reports: Vec::new(),
             metrics: Vec::new(),
+            histograms: Vec::new(),
         }
     }
 
@@ -206,6 +210,32 @@ impl Bencher {
         &self.metrics
     }
 
+    /// Fold raw observations (integer units chosen by the bench, e.g.
+    /// per-request latencies in µs) into a log₂ [`HistogramSnapshot`]
+    /// recorded under `name`. Histograms ride along in the bench JSON
+    /// for distribution trajectory; the regression checker validates
+    /// their shape but never gates on them (buckets shift with load,
+    /// and lower-is-better latency does not fit the higher-is-better
+    /// gate).
+    pub fn histogram(&mut self, name: &str, observations: &[u64]) {
+        let h = Histogram::new();
+        for &v in observations {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        println!(
+            "histogram {name}: n={} mean={:.1} p95<={}",
+            snap.count,
+            snap.mean(),
+            snap.quantile_bound(0.95)
+        );
+        self.histograms.push((name.to_string(), snap));
+    }
+
+    pub fn histograms(&self) -> &[(String, HistogramSnapshot)] {
+        &self.histograms
+    }
+
     /// Serialize every report and metric as the `BENCH_<name>.json`
     /// document the regression checker consumes.
     pub fn to_json(&self, bench: &str) -> String {
@@ -252,7 +282,29 @@ impl Bencher {
                 if i + 1 < self.metrics.len() { "," } else { "" }
             ));
         }
-        out.push_str("  ]\n}\n");
+        if self.histograms.is_empty() {
+            out.push_str("  ]\n}\n");
+        } else {
+            out.push_str("  ],\n");
+            out.push_str("  \"histograms\": [\n");
+            for (i, (name, h)) in self.histograms.iter().enumerate() {
+                let buckets = h
+                    .buckets
+                    .iter()
+                    .map(|&(bi, n)| format!("[{bi}, {n}]"))
+                    .collect::<Vec<_>>()
+                    .join(", ");
+                out.push_str(&format!(
+                    "    {{\"name\": \"{}\", \"count\": {}, \"sum\": {}, \"buckets\": [{}]}}{}\n",
+                    esc(name),
+                    h.count,
+                    h.sum,
+                    buckets,
+                    if i + 1 < self.histograms.len() { "," } else { "" }
+                ));
+            }
+            out.push_str("  ]\n}\n");
+        }
         out
     }
 
@@ -329,6 +381,25 @@ mod tests {
         // no trailing commas before the closing brackets
         assert!(!json.contains(",\n  ]"));
         assert_eq!(b.metrics().len(), 2);
+    }
+
+    #[test]
+    fn json_histograms_are_optional_and_well_formed() {
+        let mut b = Bencher::with_iters(1, 2);
+        b.bench("noop", || 1);
+        assert!(
+            !b.to_json("demo").contains("\"histograms\""),
+            "no histograms recorded → no histograms key"
+        );
+        b.histogram("service_latency", &[0, 1, 3, 3, 900]);
+        let json = b.to_json("demo");
+        assert!(json.contains("\"histograms\": ["));
+        assert!(json.contains("\"name\": \"service_latency\", \"count\": 5, \"sum\": 907"));
+        // 0 → bucket 0; 1 → bucket 1; 3,3 → bucket 2; 900 → bucket 10
+        assert!(json.contains("\"buckets\": [[0, 1], [1, 1], [2, 2], [10, 1]]"));
+        assert!(!json.contains(",\n  ]"), "no trailing commas");
+        assert_eq!(b.histograms().len(), 1);
+        assert_eq!(b.histograms()[0].1.quantile_bound(0.95), 1023);
     }
 
     #[test]

@@ -38,6 +38,18 @@ pub struct LruStats {
     pub evictions: u64,
 }
 
+impl crate::telemetry::MetricSource for LruStats {
+    fn metric_prefix(&self) -> &'static str {
+        "lru"
+    }
+
+    fn emit_metrics(&self, out: &mut dyn FnMut(&str, f64)) {
+        out("hits", self.hits as f64);
+        out("misses", self.misses as f64);
+        out("evictions", self.evictions as f64);
+    }
+}
+
 /// The bounded LRU map. See the module docs.
 pub struct LruCache<V> {
     map: HashMap<String, usize>,
@@ -324,6 +336,30 @@ mod tests {
         assert_eq!(c.peek("nope"), None);
         assert_eq!(c.stats(), before, "peek must not count as hit/miss");
         assert_eq!(c.keys_mru_first(), vec!["b", "a"], "peek must not promote");
+    }
+
+    #[test]
+    fn counters_survive_churn_and_emit_as_metrics() {
+        use crate::telemetry::MetricSource;
+        let mut c: LruCache<usize> = LruCache::new(2, usize::MAX);
+        for i in 0..5 {
+            c.insert(&format!("k{i}"), i, 1); // 3 evictions
+        }
+        assert!(c.get("k4").is_some()); // hit
+        assert!(c.get("k0").is_none()); // evicted: miss
+        assert!(c.get("gone").is_none()); // never present: miss
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 2, 3));
+        let metrics = s.metrics_vec();
+        assert_eq!(
+            metrics,
+            vec![
+                ("lru_hits".to_string(), 1.0),
+                ("lru_misses".to_string(), 2.0),
+                ("lru_evictions".to_string(), 3.0),
+            ],
+            "MetricSource emits every counter under the lru_ prefix"
+        );
     }
 
     #[test]

@@ -146,6 +146,32 @@ fn steady_state_evaluate_loop_is_allocation_free() {
         );
     }
 
+    // ---- telemetry recording (the observability add-on) ----
+    // registration allocates (name interning, leaked cells) and is done
+    // once, up front; recording into the returned handles is the part
+    // that rides the hot path and must be allocation-free — this is the
+    // "zero allocation on record" invariant in `telemetry/mod.rs`
+    let counter = union::telemetry::counter("alloc_test_counter");
+    let gauge = union::telemetry::gauge("alloc_test_gauge");
+    let hist = union::telemetry::histogram("alloc_test_hist");
+    counter.incr(); // warm (nothing to warm, but symmetric with above)
+    hist.record(17);
+    let before = allocations();
+    for i in 0..batch.len() as u64 {
+        counter.add(i);
+        gauge.set(i);
+        hist.record(i * 37);
+    }
+    let after = allocations();
+    assert!(counter.get() > 0 && hist.snapshot().count > 0);
+    assert_eq!(
+        after - before,
+        0,
+        "telemetry recording allocated {} times for {} observations",
+        after - before,
+        batch.len()
+    );
+
     // ---- transfer surrogate scoring (the ranked path's add-on) ----
     // a RankedSource adds exactly one SurrogateRanker::score call per
     // candidate on top of the evaluate loop asserted above; that score

@@ -1,0 +1,236 @@
+//! Integration tests for the telemetry subsystem: registry exposition,
+//! `MetricSource` unification, flight-recorder semantics, stats-merge
+//! arithmetic — and the load-bearing invariant that telemetry **never
+//! changes search results** (recording on is bit-identical to the
+//! pre-telemetry engine).
+//!
+//! The registry and recorder are process-global; tests here only ever
+//! *add* observations and assert on deltas or on names they alone use,
+//! so they stay order- and concurrency-independent.
+
+use union::engine::{EngineStats, Session};
+use union::mappers::{Mapper, Objective, RandomMapper};
+use union::telemetry::{self, FlightRecorder, HistogramSnapshot, MetricSource};
+
+#[test]
+fn registry_round_trips_through_scalars_and_snapshots() {
+    telemetry::counter("it_requests_total").add(3);
+    telemetry::gauge("it_depth").set(7);
+    telemetry::histogram("it_latency_us").record(100);
+    telemetry::histogram("it_latency_us").record(100_000);
+
+    let scalars = telemetry::registry().scalars();
+    let get = |name: &str| scalars.iter().find(|(n, _)| n == name).map(|&(_, v)| v);
+    assert!(get("it_requests_total") >= Some(3), "counter visible in scalars");
+    assert_eq!(get("it_depth"), Some(7), "gauge visible in scalars");
+    // scalars are sorted by name — the wire exposition relies on it
+    let names: Vec<&str> = scalars.iter().map(|(n, _)| n.as_str()).collect();
+    let mut sorted = names.clone();
+    sorted.sort_unstable();
+    assert_eq!(names, sorted, "scalars() must be name-sorted");
+
+    let hists = telemetry::registry().histogram_snapshots();
+    let (_, snap) = hists
+        .iter()
+        .find(|(n, _)| n == "it_latency_us")
+        .expect("histogram visible in snapshots");
+    assert!(snap.count >= 2);
+    assert!(snap.sum >= 100_100);
+    assert!(snap.quantile_bound(1.0) >= 100_000, "p100 bound covers the max");
+}
+
+#[test]
+fn histogram_snapshot_merge_models_peer_aggregation() {
+    // what `union metrics --peers` does: merge per-peer snapshots
+    let mut a = HistogramSnapshot { count: 2, sum: 5, buckets: vec![(1, 1), (3, 1)] };
+    let b = HistogramSnapshot { count: 3, sum: 40, buckets: vec![(3, 2), (6, 1)] };
+    a.merge(&b);
+    assert_eq!(a.count, 5);
+    assert_eq!(a.sum, 45);
+    assert_eq!(a.buckets, vec![(1, 1), (3, 3), (6, 1)], "bucket-wise sum, index order");
+    let empty = HistogramSnapshot::default();
+    a.merge(&empty);
+    assert_eq!(a.count, 5, "merging an idle peer is a no-op");
+}
+
+#[test]
+fn engine_stats_absorb_adds_and_saturates() {
+    let mut a = EngineStats {
+        batches: 1,
+        proposed: 10,
+        scored: 8,
+        cost_evals: 6,
+        memo_hits: 2,
+        memo_misses: 6,
+        footprint_hits: 3,
+        footprint_misses: 5,
+        pruned: 1,
+        rejected: 1,
+    };
+    let b = a.clone();
+    a.absorb(&b);
+    assert_eq!(
+        a,
+        EngineStats {
+            batches: 2,
+            proposed: 20,
+            scored: 16,
+            cost_evals: 12,
+            memo_hits: 4,
+            memo_misses: 12,
+            footprint_hits: 6,
+            footprint_misses: 10,
+            pruned: 2,
+            rejected: 2,
+        },
+        "plain absorb is field-wise addition"
+    );
+
+    // a session that has absorbed astronomically many jobs must pin at
+    // the ceiling, never wrap to a small (and silently wrong) total
+    let mut near_max = EngineStats { scored: usize::MAX - 3, ..EngineStats::default() };
+    near_max.absorb(&EngineStats { scored: 10, ..EngineStats::default() });
+    assert_eq!(near_max.scored, usize::MAX, "absorb saturates instead of wrapping");
+    assert_eq!(near_max.batches, 0, "untouched fields stay exact");
+    near_max.absorb(&EngineStats { scored: 1, ..EngineStats::default() });
+    assert_eq!(near_max.scored, usize::MAX, "saturated fields stay pinned");
+}
+
+#[test]
+fn metric_sources_emit_prefixed_stable_names() {
+    let stats = EngineStats { scored: 11, pruned: 4, ..EngineStats::default() };
+    let v = stats.metrics_vec();
+    assert!(v.iter().all(|(n, _)| n.starts_with("engine_")), "prefix applied: {v:?}");
+    let get = |name: &str| v.iter().find(|(n, _)| n == name).map(|&(_, x)| x);
+    assert_eq!(get("engine_scored"), Some(11.0));
+    assert_eq!(get("engine_pruned"), Some(4.0));
+    assert_eq!(
+        v.len(),
+        10,
+        "every EngineStats field is emitted — update the impl when fields change"
+    );
+
+    let cache = union::service::CacheStats::default();
+    assert!(cache.metrics_vec().iter().all(|(n, _)| n.starts_with("cache_")));
+    assert_eq!(cache.metrics_vec().len(), 10);
+
+    let lru = union::util::lru::LruCache::<u8>::new(2, 64).stats();
+    assert!(lru.metrics_vec().iter().all(|(n, _)| n.starts_with("lru_")));
+}
+
+#[test]
+fn flight_recorder_is_bounded_with_ordered_replay() {
+    let rec = FlightRecorder::with_capacity(4);
+    assert_eq!(rec.len(), 0);
+    for i in 0..10 {
+        rec.record("test_event", &format!("i={i}"));
+    }
+    assert_eq!(rec.len(), 4, "ring stays at capacity");
+    assert_eq!(rec.dropped(), 6, "displaced events are counted");
+    assert_eq!(rec.latest_seq(), 10);
+
+    // since() replays oldest-first, strictly after the cursor
+    let all = rec.since(0, 100);
+    assert_eq!(all.len(), 4);
+    let seqs: Vec<u64> = all.iter().map(|e| e.seq).collect();
+    assert_eq!(seqs, vec![7, 8, 9, 10], "resident window, oldest first");
+    assert!(all.windows(2).all(|w| w[0].t_us <= w[1].t_us), "timestamps are monotone");
+    let after = rec.since(8, 100);
+    assert_eq!(
+        after.iter().map(|e| e.seq).collect::<Vec<_>>(),
+        vec![9, 10],
+        "cursor is exclusive"
+    );
+    let limited = rec.since(0, 2);
+    assert_eq!(
+        limited.iter().map(|e| e.seq).collect::<Vec<_>>(),
+        vec![9, 10],
+        "limit keeps the newest, still oldest-first"
+    );
+    assert_eq!(all[0].detail, "i=6");
+    let line = all[0].to_jsonl();
+    assert!(line.starts_with("{\"seq\":7,"), "JSONL leads with seq: {line}");
+    assert!(line.contains("\"event\":\"test_event\""));
+}
+
+/// The tentpole acceptance pin: a search with telemetry recording
+/// active (and the registry/recorder churning between runs) returns
+/// **bit-identical** results to an identical search — telemetry is
+/// observation only, it never perturbs sampling, pruning, or scoring.
+#[test]
+fn search_results_are_bit_identical_with_recording_active() {
+    use union::arch::presets;
+    use union::cost::{AnalyticalModel, EnergyTable};
+    use union::mapspace::{Constraints, MapSpace};
+    use union::problem::gemm;
+
+    let arch = presets::edge();
+    let cons = Constraints::default();
+    let model = AnalyticalModel::new(EnergyTable::default_8bit());
+    let problem = gemm(24, 32, 16);
+    let space = MapSpace::new(&problem, &arch, &cons);
+
+    let run = || {
+        let mut session = Session::new(&model, Objective::Edp);
+        let mut sources = vec![RandomMapper::new(300, 17).source()];
+        let (r, stats) = session.run_job(&space, &mut sources);
+        (r.expect("job finds a mapping"), stats)
+    };
+
+    let (first, first_stats) = run();
+    // telemetry noise between runs: counters, histograms, flight events
+    telemetry::counter("it_noise_total").add(1_000_000);
+    for i in 0..2_000u64 {
+        telemetry::histogram("it_noise_us").record(i * i);
+    }
+    for i in 0..64 {
+        telemetry::event("test_event", &format!("noise {i}"));
+    }
+    let (second, second_stats) = run();
+
+    assert_eq!(
+        first.score.to_bits(),
+        second.score.to_bits(),
+        "score must be bit-identical under telemetry load"
+    );
+    assert_eq!(first.mapping, second.mapping, "winning mapping unchanged");
+    assert_eq!(first.evaluated, second.evaluated);
+    assert_eq!(first_stats, second_stats, "every engine counter repeats exactly");
+
+    // and the spans actually recorded: two jobs ran above, so the
+    // per-phase histograms hold at least two observations each
+    let hists = telemetry::registry().histogram_snapshots();
+    for phase in ["sample", "memo", "evaluate", "prune"] {
+        let name = format!("engine_phase_{phase}_us");
+        let (_, snap) = hists
+            .iter()
+            .find(|(n, _)| *n == name)
+            .unwrap_or_else(|| panic!("{name} missing from registry"));
+        assert!(snap.count >= 2, "{name} recorded {} < 2 observations", snap.count);
+    }
+}
+
+#[test]
+fn broker_stats_merge_arithmetic_is_exact() {
+    use union::service::BrokerStats;
+    let mut total = BrokerStats::default();
+    let mut shard = BrokerStats::default();
+    shard.requests = 5;
+    shard.cache_hits = 2;
+    shard.searched = 3;
+    shard.engine.scored = 120;
+    total.requests += shard.requests;
+    total.cache_hits += shard.cache_hits;
+    total.searched += shard.searched;
+    total.engine.absorb(&shard.engine);
+    // a second fold of the same shard must not be hidden by the merge —
+    // the broker's drain() idempotence test pins that stats() itself
+    // never double-folds; here we pin the arithmetic building block
+    total.engine.absorb(&shard.engine);
+    assert_eq!(total.engine.scored, 240);
+    let v = total.metrics_vec();
+    let get = |name: &str| v.iter().find(|(n, _)| n == name).map(|&(_, x)| x);
+    assert_eq!(get("broker_requests"), Some(5.0));
+    assert_eq!(get("broker_cache_hits"), Some(2.0));
+    assert_eq!(get("broker_searched"), Some(3.0));
+}

@@ -20,10 +20,16 @@ bench/baselines/:
   pointing at ``--update`` — new coverage must be seeded, not silently
   ungated;
 * malformed bench JSON (unparsable file, entry without a name,
-  non-numeric value) fails with a clear per-file message, never a
-  traceback;
+  non-numeric value, ill-formed histogram) fails with a clear per-file
+  message, never a traceback;
 * plain (non-gated) metrics and timing means are recorded for the
   trajectory but never gate;
+* latency *histograms* (``"histograms"``, emitted by e.g.
+  ``service_load``'s ``service_latency``) are validated for shape —
+  name, integer count/sum, ``[bucket_index, count]`` pairs in strictly
+  ascending index order — and reported, but never gate: a log2 latency
+  distribution is lower-is-better and multi-dimensional, so it does not
+  fit the higher-is-better floor rule;
 * the three bench registries must agree: every ``--bench X`` in CI's
   bench-regression job needs a committed ``BENCH_X.json`` baseline and
   a ``rust/benches/X.rs`` source, and every committed baseline must be
@@ -76,15 +82,69 @@ def gated_entries(doc, fname):
     return out
 
 
+def validate_histograms(doc, fname):
+    """Shape-check the optional ``"histograms"`` array; return {name: count}.
+
+    Histograms are recorded for the trajectory (and summarised in the
+    run output) but never gate — still, a malformed one is a bench bug
+    and must fail loudly like any other malformed entry.
+    """
+    out = {}
+    hists = doc.get("histograms", [])
+    if not isinstance(hists, list):
+        raise BenchFileError(f"{fname}: 'histograms' is not a list: {hists!r}")
+    for h in hists:
+        if not isinstance(h, dict):
+            raise BenchFileError(f"{fname}: histogram entry is not an object: {h!r}")
+        name = h.get("name")
+        if not name or not isinstance(name, str):
+            raise BenchFileError(f"{fname}: histogram entry without a 'name': {h!r}")
+        for field in ("count", "sum"):
+            v = h.get(field)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                raise BenchFileError(
+                    f"{fname}: histogram '{name}' field '{field}' is not a "
+                    f"non-negative integer: {v!r}")
+        buckets = h.get("buckets")
+        if not isinstance(buckets, list):
+            raise BenchFileError(
+                f"{fname}: histogram '{name}' has no 'buckets' list: {buckets!r}")
+        prev_idx = -1
+        total = 0
+        for pair in buckets:
+            ok_pair = (isinstance(pair, list) and len(pair) == 2
+                       and all(isinstance(x, int) and not isinstance(x, bool)
+                               and x >= 0 for x in pair))
+            if not ok_pair:
+                raise BenchFileError(
+                    f"{fname}: histogram '{name}' bucket is not a "
+                    f"[index, count] pair of non-negative ints: {pair!r}")
+            idx, n = pair
+            if idx <= prev_idx:
+                raise BenchFileError(
+                    f"{fname}: histogram '{name}' bucket indices must be "
+                    f"strictly ascending (index {idx} after {prev_idx})")
+            prev_idx = idx
+            total += n
+        if total != h["count"]:
+            raise BenchFileError(
+                f"{fname}: histogram '{name}' bucket counts sum to {total} "
+                f"but 'count' is {h['count']}")
+        out[name] = h["count"]
+    return out
+
+
 class BenchFileError(Exception):
     """A bench JSON file that cannot be compared (clear message, no traceback)."""
 
 
 def load_bench_file(path):
     try:
-        return json.loads(path.read_text())
+        doc = json.loads(path.read_text())
     except (OSError, json.JSONDecodeError) as e:
         raise BenchFileError(f"{path}: unreadable bench JSON ({e})")
+    validate_histograms(doc, path.name)
+    return doc
 
 
 def render_table(rows, markdown=False):
@@ -184,6 +244,7 @@ def main():
 
     failures = coverage_failures(baselines)
     rows = []
+    hist_report = []  # (file, histogram name, count) — informational only
     for base_path in baseline_files:
         cur_path = current / base_path.name
         if not cur_path.exists():
@@ -191,10 +252,13 @@ def main():
             continue
         try:
             base = gated_entries(load_bench_file(base_path), base_path.name)
-            cur = gated_entries(load_bench_file(cur_path), cur_path.name)
+            cur_doc = load_bench_file(cur_path)
+            cur = gated_entries(cur_doc, cur_path.name)
+            cur_hists = validate_histograms(cur_doc, cur_path.name)
         except BenchFileError as e:
             failures.append(str(e))
             continue
+        hist_report += [(cur_path.name, name, n) for name, n in sorted(cur_hists.items())]
         for key, base_val in sorted(base.items()):
             if key not in cur:
                 failures.append(f"{base_path.name}: '{key}' missing from current run")
@@ -227,6 +291,8 @@ def main():
 
     print(render_table(rows))
     print(f"\ncompared {len(rows)} gated entries across {len(baseline_files)} bench files")
+    for fname, name, n in hist_report:
+        print(f"histogram (recorded, not gated): {fname}: '{name}' with {n} observations")
 
     # when running in GitHub Actions, publish the delta table to the
     # job summary so a reviewer sees per-metric movement, not only the

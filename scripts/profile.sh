@@ -5,11 +5,14 @@
 #   scripts/profile.sh search [args...]    # profile `union search ...`
 #   scripts/profile.sh bench <name>        # profile one bench binary
 #   scripts/profile.sh stat <any of the above>
+#   scripts/profile.sh telemetry [args...] # live-watch a running server's
+#                                          # metrics (no perf involved)
 #
 # Examples:
-#   scripts/profile.sh search --workload gemm --m 512 --n 512 --k 512
+#   scripts/profile.sh search --workload gemm:512x512x512 --arch edge
 #   scripts/profile.sh bench perf_hotpath
 #   scripts/profile.sh stat bench perf_hotpath
+#   scripts/profile.sh telemetry --port 7415 --interval-ms 1000
 #
 # Output goes to out/profile/: a perf.data plus, when a flamegraph tool
 # is available (inferno-flamegraph or flamegraph.pl on PATH), an SVG.
@@ -29,13 +32,20 @@ if [[ "${1:-}" == "stat" ]]; then
 fi
 
 if [[ $# -lt 1 ]]; then
-    echo "usage: $0 [stat] search [args...] | [stat] bench <name>" >&2
+    echo "usage: $0 [stat] search [args...] | [stat] bench <name> | telemetry [args...]" >&2
     exit 2
 fi
 
 KIND=$1
 shift
 case "$KIND" in
+telemetry)
+    # not a perf run: attach to a live `union serve` and re-scrape its
+    # telemetry registry (phase histograms, broker/cache counters) on an
+    # interval — the sampling-profiler view from the server's own spans
+    cargo build --release
+    exec target/release/union metrics --watch "$@"
+    ;;
 search)
     cargo build --release
     CMD=(target/release/union search "$@")

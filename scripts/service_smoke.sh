@@ -17,7 +17,12 @@
 #   7. transfer-guided warm starts are advisory: a near-duplicate job
 #      served with the transfer index scores within 1.02x of the same
 #      job on a `--no-transfer` server, the warm server's status counts
-#      the lookup/hit, and the `--no-transfer` server's counters stay 0.
+#      the lookup/hit, and the `--no-transfer` server's counters stay 0;
+#   8. telemetry is live and consistent: `union metrics` re-emits the
+#      broker counters status reports, the search-phase and
+#      request-timing histograms hold observations, the Prometheus text
+#      parses with complete histogram series, and `union trace` replays
+#      the run's flight-recorder events in sequence order.
 #
 # Used by CI's service-smoke job; runnable locally the same way:
 #   scripts/service_smoke.sh
@@ -120,6 +125,63 @@ echo "== status + graceful shutdown =="
 # one search per distinct job: the original + 3 fresh concurrent ones
 grep -q 'searched=4 ' "$OUT/status.txt"
 grep -q 'cache_hits=[1-9]' "$OUT/status.txt"
+
+echo "== telemetry: metrics scrape agrees with status =="
+"$BIN" metrics --port "$PORT" | tee "$OUT/metrics.txt"
+# the unified registry re-emits the broker counters status prints
+grep -q 'broker_searched = 4' "$OUT/metrics.txt"
+grep -Eq 'broker_cache_hits = [1-9]' "$OUT/metrics.txt"
+grep -Eq 'engine_scored = [1-9]' "$OUT/metrics.txt"
+# search-phase spans: one observation per executed job, per phase
+grep -Eq 'engine_phase_evaluate_us: n=[1-9]' "$OUT/metrics.txt"
+grep -Eq 'engine_phase_sample_us: n=[1-9]' "$OUT/metrics.txt"
+# reactor request-timing histograms recorded under load
+grep -Eq 'service_request_service_us: n=[1-9]' "$OUT/metrics.txt"
+grep -Eq 'service_request_wait_us: n=[1-9]' "$OUT/metrics.txt"
+
+echo "== telemetry: Prometheus text parses and is self-consistent =="
+"$BIN" metrics --port "$PORT" --prom > "$OUT/metrics.prom"
+python3 - "$OUT/metrics.prom" <<'EOF'
+import re, sys
+text = open(sys.argv[1]).read()
+assert text, "empty Prometheus exposition"
+typed = set()
+samples = {}
+for line in text.splitlines():
+    if line.startswith("# TYPE "):
+        _, _, name, kind = line.split()
+        assert kind in ("gauge", "histogram"), line
+        typed.add(name)
+        continue
+    assert not line.startswith("#"), f"unexpected comment: {line}"
+    m = re.match(r'^([a-z0-9_]+)(\{le="[^"]+"\})? (\S+)$', line)
+    assert m, f"unparseable sample line: {line}"
+    samples[m.group(1) + (m.group(2) or "")] = m.group(3)
+assert any(n.startswith("union_broker_") for n in typed), typed
+# histogram series are complete: +Inf bucket == _count
+for name in [n for n in typed if n + "_count" in samples]:
+    inf = samples.get(name + '_bucket{le="+Inf"}')
+    assert inf == samples[name + "_count"], (name, inf, samples[name + "_count"])
+print(f"prometheus text OK: {len(typed)} metric families, {len(samples)} samples")
+EOF
+
+echo "== telemetry: flight recorder holds the run's events =="
+"$BIN" trace --port "$PORT" | tee "$OUT/trace.txt"
+test -s "$OUT/trace.txt"
+grep -q 'job_admitted' "$OUT/trace.txt"
+grep -q 'cache_hit' "$OUT/trace.txt"
+# --json emits one JSONL document per event, newest last
+"$BIN" trace --port "$PORT" --json --limit 8 > "$OUT/trace.jsonl"
+python3 - "$OUT/trace.jsonl" <<'EOF'
+import json, sys
+events = [json.loads(l) for l in open(sys.argv[1]) if l.strip()]
+assert events, "flight recorder empty after a full smoke run"
+seqs = [e["seq"] for e in events]
+assert seqs == sorted(seqs), f"events out of order: {seqs}"
+assert all(set(e) == {"seq", "t_us", "event", "detail"} for e in events), events[0]
+print(f"trace OK: {len(events)} events, latest seq {seqs[-1]}")
+EOF
+
 "$BIN" client shutdown --port "$PORT"
 wait "$SERVER_PID"
 trap - EXIT
